@@ -1,0 +1,45 @@
+//! Migration demo: watch Algorithm 1 rebalance a deliberately mis-split
+//! cluster. We start BanaServe with 3 prefill / 1 decode devices under a
+//! decode-heavy short-context workload — the orchestrator must shift layer
+//! share toward decode, and throughput must beat the same mis-split
+//! without migration.
+//!
+//!     cargo run --release --example migration_demo
+
+use banaserve::config::{EngineKind, ExperimentConfig};
+use banaserve::engines::run_experiment;
+use banaserve::workload::{LengthProfile, WorkloadConfig};
+
+fn main() {
+    banaserve::util::logging::init(log::Level::Warn);
+    println!("== Dynamic module migration (paper Alg 1) ==\n");
+    println!("cluster: 4 devices mis-split as 3 prefill / 1 decode");
+    println!("workload: Alpaca-like short prompts, 14 RPS (decode-bound)\n");
+
+    let mk = |migrate: bool| {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 14.0, 5);
+        c.n_devices = 4;
+        c.n_prefill = 3; // deliberately wrong for a decode-heavy load
+        c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 14.0, 60.0, 5);
+        c.warmup = 5.0;
+        c.bana.layer_migration = migrate;
+        c.bana.attention_migration = migrate;
+        c
+    };
+
+    let frozen = run_experiment(&mk(false));
+    let adaptive = run_experiment(&mk(true));
+
+    println!("static mis-split (no migration):");
+    println!("  {}", frozen.report.one_line());
+    println!("with dynamic migration:");
+    println!("  {}", adaptive.report.one_line());
+    println!(
+        "  layer migrations: {}   attention migrations: {}",
+        adaptive.extras.layer_migrations, adaptive.extras.attention_migrations
+    );
+    let speedup = adaptive.report.throughput_tok_s / frozen.report.throughput_tok_s;
+    println!("\nthroughput gain from migration: {speedup:.2}x");
+    println!("(the orchestrator converts idle prefill capacity into decode capacity,");
+    println!(" exactly the §4.1 'dynamic resource allocation' claim)");
+}

@@ -1,0 +1,31 @@
+//! Full paper sweep in miniature: regenerates the Fig 8 (LLaMA-13B short
+//! context) comparison at reduced duration/seeds so it finishes quickly.
+//! For the full-fidelity runs use `cargo bench --bench fig8_llama_short`.
+//!
+//!     cargo run --release --example paper_sweep
+
+use banaserve::bench_support::{print_figure, run_cell};
+use banaserve::config::{EngineKind, ExperimentConfig};
+use banaserve::workload::{LengthProfile, WorkloadConfig};
+
+fn main() {
+    banaserve::util::logging::init(log::Level::Warn);
+    let engines = [EngineKind::Vllm, EngineKind::DistServe, EngineKind::BanaServe];
+    let mut cells = Vec::new();
+    for rps in [2.0, 8.0, 14.0, 20.0] {
+        for e in engines {
+            cells.push(run_cell(e, rps, &[11, 23], |e, rps, seed| {
+                let mut c = ExperimentConfig::default_for(e, "llama-13b", rps, seed);
+                c.workload =
+                    WorkloadConfig::poisson(LengthProfile::AlpacaShort, rps, 45.0, seed);
+                c.warmup = 5.0;
+                c
+            }));
+        }
+    }
+    print_figure(
+        "Fig 8 (reduced): LLaMA-13B short-context, 2 seeds x 45s",
+        &engines,
+        &cells,
+    );
+}

@@ -1,0 +1,181 @@
+"""AOT compile path: lower the L2 model entry points to HLO *text* and write
+them, plus a manifest and golden outputs, into ``artifacts/``.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids fail the
+``proto.id() <= INT_MAX`` check); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); the rust binary is self-contained
+afterwards.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts [--variants tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Entry points to AOT per model variant: (kind, batch, seq-or-None)
+DEFAULT_ENTRIES = [
+    ("prefill", 1, 32),
+    ("prefill", 4, 32),
+    ("decode", 1, None),
+    ("decode", 4, None),
+]
+
+VARIANTS = {"tiny": M.TINY, "small": M.SMALL}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer elides
+    big literals as ``constant({...})``, which the xla_extension 0.5.1 text
+    parser silently reads as zeros — every baked weight would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def entry_name(variant: str, kind: str, batch: int, seq) -> str:
+    if kind == "prefill":
+        return f"{variant}.prefill.b{batch}s{seq}"
+    return f"{variant}.decode.b{batch}"
+
+
+def lower_entry(cfg: M.ModelConfig, kind: str, batch: int, seq):
+    if kind == "prefill":
+        fn, specs = M.make_prefill_fn(cfg, batch, seq)
+    else:
+        fn, specs = M.make_decode_fn(cfg, batch)
+    return jax.jit(fn).lower(*specs), specs
+
+
+def spec_json(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def golden_outputs(cfg: M.ModelConfig) -> dict:
+    """Golden numbers for the rust integration tests.
+
+    A fixed 16-token prompt through prefill + 4 greedy decode steps; store
+    prompt, argmax tokens, and logit fingerprints (first 4 values + sum).
+    """
+    w = M.init_weights(cfg)
+    prompt = [(7 * i + 3) % cfg.vocab for i in range(16)]
+    toks = jnp.asarray(prompt, jnp.int32)
+    logits, kc, vc = M.prefill(w, toks, cfg)
+
+    maxs = cfg.max_seq
+    kpad = jnp.zeros((cfg.n_layers, cfg.n_kv_heads, maxs, cfg.d_head), jnp.float32)
+    vpad = jnp.zeros_like(kpad)
+    kpad = kpad.at[:, :, : len(prompt), :].set(kc)
+    vpad = vpad.at[:, :, : len(prompt), :].set(vc)
+
+    last = logits[-1]
+    fingerprints = [
+        {
+            "first4": [float(x) for x in np.asarray(last[:4])],
+            "sum": float(np.asarray(last).sum()),
+        }
+    ]
+    gen = []
+    cur = int(np.asarray(last).argmax())
+    cur_len = len(prompt)
+    for _ in range(4):
+        gen.append(cur)
+        lg, kpad, vpad = M.decode_step(
+            w,
+            jnp.asarray(cur, jnp.int32),
+            kpad,
+            vpad,
+            jnp.asarray(cur_len, jnp.int32),
+            cfg,
+        )
+        fingerprints.append(
+            {
+                "first4": [float(x) for x in np.asarray(lg[:4])],
+                "sum": float(np.asarray(lg).sum()),
+            }
+        )
+        cur = int(np.asarray(lg).argmax())
+        cur_len += 1
+
+    return {
+        "prompt": prompt,
+        "generated": gen,
+        "prefill_logits_first4": [float(x) for x in np.asarray(logits[-1][:4])],
+        "fingerprints": fingerprints,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants", default="tiny", help="comma list from: " + ",".join(VARIANTS)
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "variants": {}}
+    for vname in args.variants.split(","):
+        cfg = VARIANTS[vname]
+        ventry = {
+            "config": {
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "n_kv_heads": cfg.n_kv_heads,
+                "d_head": cfg.d_head,
+                "d_ff": cfg.d_ff,
+                "max_seq": cfg.max_seq,
+                "param_count": cfg.param_count(),
+                "seed": cfg.seed,
+            },
+            "entries": {},
+        }
+        for kind, batch, seq in DEFAULT_ENTRIES:
+            name = entry_name(vname, kind, batch, seq)
+            lowered, specs = lower_entry(cfg, kind, batch, seq)
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out_dir, name + ".hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            ventry["entries"][name] = {
+                "kind": kind,
+                "batch": batch,
+                "seq": seq,
+                "file": name + ".hlo.txt",
+                "inputs": [spec_json(s) for s in specs],
+            }
+            print(f"wrote {path} ({len(text)} chars)")
+        manifest["variants"][vname] = ventry
+
+        golden = golden_outputs(cfg)
+        gpath = os.path.join(args.out_dir, f"{vname}.golden.json")
+        with open(gpath, "w") as f:
+            json.dump(golden, f, indent=1)
+        print(f"wrote {gpath}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,452 @@
+"""Pallas attention kernels — the L1 compute hot-spot of the BanaServe stack.
+
+Three kernels, all written flash-attention style (single pass, online
+softmax, fp32 accumulators) and all validated against ``ref.py``:
+
+* :func:`flash_attention` — blocked causal MHA/GQA for the prefill path.
+* :func:`attention_partial` / :func:`merge_partials` — the paper's
+  attention-level migration math (Eqs 6-10): attention over ONE disjoint KV
+  partition returns the un-normalized triple ``(o, m, l)``; partitions
+  computed on different devices are merged with the numerically-stable
+  online-softmax combine. Only ``(m, l)`` (per-row scalars) and the partial
+  output cross the device boundary, exactly as Fig 4 describes.
+* :func:`decode_attention` — single-query attention over a padded KV cache
+  with a dynamic valid length, used by the decode step.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper expresses
+the partition across *GPUs*; on TPU the same math tiles across the Pallas
+grid — one grid step per (head, q-block), KV streamed through VMEM in
+``block_k`` chunks. All ``pallas_call``s use ``interpret=True`` because the
+CPU PJRT plugin cannot execute Mosaic custom-calls; on a real TPU the same
+BlockSpecs lower natively.
+
+VMEM budgeting (for the DESIGN.md §Perf estimate): per grid step the kernel
+holds q-tile ``Bq*D``, k/v tiles ``2*Bk*D``, and accumulators ``Bq*(D+2)``
+in fp32 — with the default Bq=Bk=128, D=128 that is ~260 KB, comfortably
+inside the ~16 MB VMEM of a TPU core, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, b: int) -> int:
+    return _cdiv(a, b) * b
+
+
+def _pad_axis(x, axis: int, target: int):
+    if x.shape[axis] == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: blocked causal attention for prefill
+# ---------------------------------------------------------------------------
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    scale: float,
+    causal: bool,
+    q_offset: int,
+    kv_len: int,
+    block_k: int,
+):
+    """One (head, q-block) grid step: stream KV in block_k chunks."""
+    block_q = q_ref.shape[1]
+    d = q_ref.shape[2]
+    sk_padded = k_ref.shape[1]
+    iq = pl.program_id(1)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [Bq, D]
+    qpos = iq * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    def body(ik, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0], (ik * block_k, 0), (block_k, d)
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0], (ik * block_k, 0), (block_k, d)
+        ).astype(jnp.float32)
+        s = q @ k.T  # [Bq, Bk]
+        kpos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kpos[None, :] >= kv_len  # padding beyond true length
+        if causal:
+            mask = mask | (kpos[None, :] > qpos[:, None])
+        s = jnp.where(mask, NEG_INF, s)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # exp(NEG_INF - NEG_INF) would be exp(0)=1 for fully-masked rows;
+        # guard by re-masking the probability block.
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, 0.0, p)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    nk = sk_padded // block_k
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zero output
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "block_q", "block_k", "scale", "interpret"),
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """Blocked attention. q [H,Sq,D]; k,v [Hkv,Sk,D] -> [H,Sq,D]."""
+    h, sq, d = q.shape
+    hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, _round_up(sq, 8))
+    block_k = min(block_k, _round_up(sk, 8))
+    sq_p = _round_up(sq, block_q)
+    sk_p = _round_up(sk, block_k)
+    qp = _pad_axis(q, 1, sq_p)
+    kp = _pad_axis(k, 1, sk_p)
+    vp = _pad_axis(v, 1, sk_p)
+
+    grid = (h, sq_p // block_q)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            q_offset=q_offset,
+            kv_len=sk,
+            block_k=block_k,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, sk_p, d), lambda ih, iq: (ih // rep, 0, 0)),
+            pl.BlockSpec((1, sk_p, d), lambda ih, iq: (ih // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq_p, d), q.dtype),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]
+
+
+# ---------------------------------------------------------------------------
+# attention_partial + merge_partials: the migration math (Eqs 6-10)
+# ---------------------------------------------------------------------------
+
+
+def _partial_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    q_offset: int,
+    kpos_offset: int,
+    kv_len: int,
+    block_k: int,
+):
+    block_q = q_ref.shape[1]
+    d = q_ref.shape[2]
+    sk_padded = k_ref.shape[1]
+    iq = pl.program_id(1)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    qpos = iq * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    def body(ik, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0], (ik * block_k, 0), (block_k, d)
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0], (ik * block_k, 0), (block_k, d)
+        ).astype(jnp.float32)
+        s = q @ k.T
+        kpos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kpos[None, :] >= kv_len
+        if causal:
+            abs_kpos = kpos + kpos_offset
+            mask = mask | (abs_kpos[None, :] > qpos[:, None])
+        s = jnp.where(mask, NEG_INF, s)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, 0.0, p)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    nk = sk_padded // block_k
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    o_ref[0] = acc
+    m_ref[0] = m
+    l_ref[0] = l
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "q_offset",
+        "kpos_offset",
+        "block_q",
+        "block_k",
+        "scale",
+        "interpret",
+    ),
+)
+def attention_partial(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kpos_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """Partial attention over one KV partition (paper Eqs 6-9).
+
+    Returns ``(o, m, l)`` in fp32: the un-normalized partial output, the row
+    max, and the partial softmax denominator. ``kpos_offset`` is the absolute
+    position of this partition's first key — causality is evaluated in
+    absolute coordinates so disjoint partitions compose.
+    """
+    h, sq, d = q.shape
+    hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, _round_up(sq, 8))
+    block_k = min(block_k, _round_up(sk, 8))
+    sq_p = _round_up(sq, block_q)
+    sk_p = _round_up(sk, block_k)
+    qp = _pad_axis(q, 1, sq_p)
+    kp = _pad_axis(k, 1, sk_p)
+    vp = _pad_axis(v, 1, sk_p)
+
+    grid = (h, sq_p // block_q)
+    o, m, l = pl.pallas_call(
+        functools.partial(
+            _partial_kernel,
+            scale=scale,
+            causal=causal,
+            q_offset=q_offset,
+            kpos_offset=kpos_offset,
+            kv_len=sk,
+            block_k=block_k,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, sk_p, d), lambda ih, iq: (ih // rep, 0, 0)),
+            pl.BlockSpec((1, sk_p, d), lambda ih, iq: (ih // rep, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda ih, iq: (ih, iq)),
+            pl.BlockSpec((1, block_q), lambda ih, iq: (ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, sq_p, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, sq_p), jnp.float32),
+            jax.ShapeDtypeStruct((h, sq_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return o[:, :sq, :], m[:, :sq], l[:, :sq]
+
+
+def _merge_kernel(o1_ref, m1_ref, l1_ref, o2_ref, m2_ref, l2_ref, out_ref):
+    """Eq 10: combine two partial triples into the normalized output."""
+    m1 = m1_ref[0]
+    m2 = m2_ref[0]
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    l = l1_ref[0] * c1 + l2_ref[0] * c2
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = o1_ref[0] * c1[:, None] + o2_ref[0] * c2[:, None]
+    out_ref[0] = (o / l[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def merge_partials(p1, p2, *, out_dtype=jnp.float32, interpret: bool = True):
+    """Merge two disjoint-partition triples (Eq 10) -> [H,Sq,D].
+
+    This is the only cross-device exchange of attention-level migration:
+    ``m``/``l`` are [H,Sq] scalars-per-row and ``o`` one partial output.
+    """
+    o1, m1, l1 = p1
+    o2, m2, l2 = p2
+    h, sq, d = o1.shape
+    spec_o = pl.BlockSpec((1, sq, d), lambda ih: (ih, 0, 0))
+    spec_s = pl.BlockSpec((1, sq), lambda ih: (ih, 0))
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=(h,),
+        in_specs=[spec_o, spec_s, spec_s, spec_o, spec_s, spec_s],
+        out_specs=spec_o,
+        out_shape=jax.ShapeDtypeStruct((h, sq, d), out_dtype),
+        interpret=interpret,
+    )(o1, m1, l1, o2, m2, l2)
+
+
+def split_attention(q, k, v, split: int, *, causal: bool = True, interpret=True):
+    """End-to-end attention-level migration: hot partition [0,split), cold
+    partition [split,Sk), merged per Eq 10. Must equal flash_attention."""
+    p1 = attention_partial(q, k[:, :split], v[:, :split], causal=causal, interpret=interpret)
+    p2 = attention_partial(
+        q,
+        k[:, split:],
+        v[:, split:],
+        kpos_offset=split,
+        causal=causal,
+        interpret=interpret,
+    )
+    return merge_partials(p1, p2, out_dtype=q.dtype, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: single new token vs padded cache
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale: float, block_k: int):
+    d = q_ref.shape[1]
+    sk_padded = k_ref.shape[1]
+    kv_len = len_ref[0]
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [1, D] row
+
+    m0 = jnp.full((1,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((1,), dtype=jnp.float32)
+    acc0 = jnp.zeros((1, d), dtype=jnp.float32)
+
+    def body(ik, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0], (ik * block_k, 0), (block_k, d)
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0], (ik * block_k, 0), (block_k, d)
+        ).astype(jnp.float32)
+        s = q @ k.T  # [1, Bk]
+        kpos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kpos[None, :] >= kv_len
+        s = jnp.where(mask, NEG_INF, s)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, 0.0, p)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    nk = sk_padded // block_k
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret")
+)
+def decode_attention(
+    q,
+    k,
+    v,
+    kv_len,
+    *,
+    scale: float | None = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """Single-query attention over a padded cache.
+
+    q [H,D]; k,v [Hkv,Smax,D]; kv_len scalar int32 (valid prefix length).
+    Returns [H,D]. Positions >= kv_len are masked — this is the kernel the
+    decode step uses against its (possibly migrated) KV cache.
+    """
+    h, d = q.shape
+    hkv, smax, _ = k.shape
+    assert h % hkv == 0
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    block_k = min(block_k, _round_up(smax, 8))
+    smax_p = _round_up(smax, block_k)
+    kp = _pad_axis(k, 1, smax_p)
+    vp = _pad_axis(v, 1, smax_p)
+    kv_len = jnp.asarray(kv_len, dtype=jnp.int32).reshape((1,))
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda ih: (ih, 0)),
+            pl.BlockSpec((1, smax_p, d), lambda ih: (ih // rep, 0, 0)),
+            pl.BlockSpec((1, smax_p, d), lambda ih: (ih // rep, 0, 0)),
+            pl.BlockSpec((1,), lambda ih: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda ih: (ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), q.dtype),
+        interpret=interpret,
+    )(q, kp, vp, kv_len)

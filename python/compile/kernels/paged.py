@@ -1,0 +1,112 @@
+"""Paged (block-table) decode attention — the PagedAttention-style kernel.
+
+The L3 coordinator manages KV memory as fixed-size pages (see
+``rust/src/kvcache/block_allocator.rs``); this kernel is the compute-side
+counterpart: a decode query attends to a sequence whose KV lives in
+non-contiguous pages of a global pool, addressed through a block table.
+
+Grid: one step per query head. Pages are streamed one at a time through the
+online-softmax accumulator, with positions at and beyond ``context_len``
+masked. Validated against ``ref.paged_attention_ref``.
+
+interpret=True throughout — see attention.py for the rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    bt_ref,      # [N] int32 block table (scalar-prefetch style input)
+    len_ref,     # [1] int32 context length
+    q_ref,       # [1, D]
+    kp_ref,      # [P, 1, B, D]  pool, this head
+    vp_ref,      # [P, 1, B, D]
+    o_ref,       # [1, D]
+    *,
+    scale: float,
+):
+    d = q_ref.shape[1]
+    bsz = kp_ref.shape[2]
+    n = bt_ref.shape[0]
+    ctx = len_ref[0]
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [D]
+
+    m0 = jnp.full((), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((), dtype=jnp.float32)
+    acc0 = jnp.zeros((d,), dtype=jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        page = bt_ref[i]
+        k = kp_ref[pl.ds(page, 1)][0, 0]  # [B, D]
+        v = vp_ref[pl.ds(page, 1)][0, 0]
+        s = k.astype(jnp.float32) @ q  # [B]
+        kpos = i * bsz + jax.lax.iota(jnp.int32, bsz)
+        mask = kpos >= ctx
+        s = jnp.where(mask, NEG_INF, s)
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, 0.0, p)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum()
+        acc_new = acc * corr + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(
+    q,
+    k_pages,
+    v_pages,
+    block_table,
+    context_len,
+    *,
+    scale: float | None = None,
+    interpret: bool = True,
+):
+    """Paged decode attention.
+
+    q            [H, D]          decode query
+    k/v_pages    [P, Hkv, B, D]  page pool
+    block_table  [N] int32       ordered page ids for this sequence
+    context_len  scalar int32    valid token count (<= N*B)
+    returns      [H, D]
+    """
+    h, d = q.shape
+    p_, hkv, bsz, _ = k_pages.shape
+    assert h % hkv == 0
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    block_table = jnp.asarray(block_table, dtype=jnp.int32)
+    context_len = jnp.asarray(context_len, dtype=jnp.int32).reshape((1,))
+    n = block_table.shape[0]
+
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda ih: (0,)),
+            pl.BlockSpec((1,), lambda ih: (0,)),
+            pl.BlockSpec((1, d), lambda ih: (ih, 0)),
+            pl.BlockSpec((p_, 1, bsz, d), lambda ih: (0, ih // rep, 0, 0)),
+            pl.BlockSpec((p_, 1, bsz, d), lambda ih: (0, ih // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda ih: (ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), q.dtype),
+        interpret=interpret,
+    )(block_table, context_len, q, k_pages, v_pages)

@@ -1,0 +1,206 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is deliberately naive: direct softmax(QK^T)V with explicit
+masks, no online-softmax tricks, no blocking. The Pallas kernels in
+``attention.py`` / ``paged.py`` must match these to numerical tolerance —
+pytest + hypothesis sweep shapes/dtypes against these functions.
+
+Shapes follow the convention used across the repo:
+  q        [H, Sq, D]      query heads
+  k, v     [Hkv, Sk, D]    key/value heads (GQA: H % Hkv == 0)
+  output   [H, Sq, D]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """Expand KV heads for grouped-query attention: [Hkv,S,D] -> [Hkv*n_rep,S,D]."""
+    if n_rep == 1:
+        return x
+    hkv, s, d = x.shape
+    return jnp.broadcast_to(x[:, None, :, :], (hkv, n_rep, s, d)).reshape(
+        hkv * n_rep, s, d
+    )
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference multi-head attention.
+
+    ``q_offset`` is the absolute position of q[0] within the key sequence —
+    used for the decode step, where a single new query attends to a long
+    cache. ``kv_len`` masks out cache positions >= kv_len (padded caches).
+    """
+    h, sq, d = q.shape
+    hkv = k.shape[0]
+    assert h % hkv == 0, f"GQA mismatch: {h} query heads vs {hkv} kv heads"
+    k = repeat_kv(k, h // hkv)
+    v = repeat_kv(v, h // hkv)
+    sk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+
+    mask = jnp.zeros((sq, sk), dtype=bool)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = mask | (kpos > qpos)
+    if kv_len is not None:
+        mask = mask | (jnp.arange(sk)[None, :] >= kv_len)
+    scores = jnp.where(mask[None, :, :], NEG_INF, scores)
+
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_partial_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    kpos_offset: int = 0,
+    q_offset: int = 0,
+    causal: bool = True,
+    scale: float | None = None,
+):
+    """Partial attention over one KV partition (paper Eqs 6-9).
+
+    Returns the *unmerged* triple ``(o, m, l)`` where
+      m [H,Sq]   running row max of the scaled scores,
+      l [H,Sq]   sum of exp(score - m),
+      o [H,Sq,D] sum of exp(score - m) * V  (un-normalized output).
+
+    Two disjoint partitions merged with :func:`merge_partials_ref` must equal
+    :func:`attention_ref` over the concatenated KV — this is the correctness
+    contract of BanaServe's attention-level migration (Eq 10).
+    """
+    h, sq, d = q.shape
+    hkv = k.shape[0]
+    k = repeat_kv(k, h // hkv)
+    v = repeat_kv(v, h // hkv)
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    sk = k.shape[1]
+
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :] + kpos_offset
+        scores = jnp.where((kpos > qpos)[None, :, :], NEG_INF, scores)
+
+    m = scores.max(axis=-1)
+    e = jnp.exp(scores - m[:, :, None])
+    l = e.sum(axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", e, v.astype(jnp.float32))
+    return o, m, l
+
+
+def merge_partials_ref(parts):
+    """Merge partial-softmax triples from disjoint KV partitions (Eq 10).
+
+    Numerically-stable online-softmax combine:
+      m* = max_j m_j;  l* = sum_j l_j * exp(m_j - m*);
+      O  = sum_j o_j * exp(m_j - m*) / l*.
+    """
+    o0, m0, l0 = parts[0]
+    for o1, m1, l1 in parts[1:]:
+        m = jnp.maximum(m0, m1)
+        c0 = jnp.exp(m0 - m)
+        c1 = jnp.exp(m1 - m)
+        l0 = l0 * c0 + l1 * c1
+        o0 = o0 * c0[:, :, None] + o1 * c1[:, :, None]
+        m0 = m
+    return o0 / l0[:, :, None]
+
+
+def split_attention_ref(q, k, v, split: int, *, causal: bool = True):
+    """Attention computed as two KV-sequence partitions then merged.
+
+    Models BanaServe attention-level migration: partition [0,split) stays on
+    the hot device, [split,Sk) is offloaded; only (m,l,o) are exchanged.
+    """
+    p1 = attention_partial_ref(q, k[:, :split], v[:, :split], causal=causal)
+    p2 = attention_partial_ref(
+        q, k[:, split:], v[:, split:], kpos_offset=split, causal=causal
+    )
+    return merge_partials_ref([p1, p2]).astype(q.dtype)
+
+
+def head_split_attention_ref(q, k, v, head_split: int, *, causal: bool = True):
+    """Attention with disjoint *head* partitions (paper Fig 4 narrative).
+
+    Head partitions are embarrassingly parallel — outputs concatenate, no
+    denominator exchange. Included as the second migration axis.
+    ``head_split`` counts query heads and must align to the GQA group size.
+    """
+    h = q.shape[0]
+    hkv = k.shape[0]
+    rep = h // hkv
+    assert head_split % rep == 0
+    kv_split = head_split // rep
+    o1 = attention_ref(q[:head_split], k[:kv_split], v[:kv_split], causal=causal)
+    o2 = attention_ref(q[head_split:], k[kv_split:], v[kv_split:], causal=causal)
+    return jnp.concatenate([o1, o2], axis=0)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, context_len, *, scale=None):
+    """Reference for paged decode attention.
+
+    q            [H, D]            single decode query
+    k/v_pages    [P, Hkv, B, D]    global page pool (B = page/block size)
+    block_table  [N]               int32 page ids of this sequence, in order
+    context_len  scalar            number of valid tokens (<= N*B)
+    """
+    h, d = q.shape
+    hkv = k_pages.shape[1]
+    bsz = k_pages.shape[2]
+    n = block_table.shape[0]
+    # Gather pages -> contiguous [Hkv, N*B, D]
+    k = k_pages[block_table]  # [N, Hkv, B, D]
+    v = v_pages[block_table]
+    k = jnp.transpose(k, (1, 0, 2, 3)).reshape(hkv, n * bsz, d)
+    v = jnp.transpose(v, (1, 0, 2, 3)).reshape(hkv, n * bsz, d)
+    out = attention_ref(
+        q[:, None, :],
+        k,
+        v,
+        causal=False,
+        kv_len=context_len,
+        scale=scale,
+    )
+    return out[:, 0, :]
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """Reference SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    act = g * (1.0 / (1.0 + jnp.exp(-g)))
+    return ((act * u) @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """Reference RMSNorm."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * (1.0 / jnp.sqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)

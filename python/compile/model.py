@@ -1,0 +1,274 @@
+"""L2: decoder-only transformer (JAX) whose attention runs through the L1
+Pallas kernels. Build-time only — ``aot.py`` lowers `prefill` / `decode_step`
+to HLO text; the rust runtime executes the artifacts. Python is never on the
+request path.
+
+Architecture (LLaMA-flavoured, matching the paper's models in miniature):
+RMSNorm -> GQA attention with RoPE -> RMSNorm -> SwiGLU MLP, residual
+connections, tied or untied LM head. Weights are generated from a fixed seed
+at trace time and baked into the HLO as constants, so the rust binary is
+fully self-contained after `make artifacts`.
+
+Entry points (all functional, B=1 per call; batching is vmap'd in aot.py):
+  prefill(tokens[S])                        -> logits[S,V], k[L,Hkv,S,D], v[L,Hkv,S,D]
+  decode_step(token[1], k, v, cur_len)      -> logits[V], k', v'   (padded caches [L,Hkv,MAX,D])
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention, flash_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description of an AOT model variant."""
+
+    name: str = "tiny"
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 128
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+    seed: int = 42
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.d_head
+        per_layer = (
+            d * (self.n_heads * dh)          # wq
+            + 2 * d * (self.n_kv_heads * dh)  # wk, wv
+            + (self.n_heads * dh) * d         # wo
+            + 3 * d * self.d_ff               # gate, up, down
+            + 2 * d                           # norms
+        )
+        return self.vocab * d * 2 + d + self.n_layers * per_layer
+
+
+TINY = ModelConfig()
+SMALL = ModelConfig(
+    name="small", d_model=128, n_layers=4, n_heads=8, n_kv_heads=4, d_ff=256
+)
+
+
+def init_weights(cfg: ModelConfig):
+    """Deterministic weights from cfg.seed (numpy, so trace-time constants)."""
+    rng = np.random.default_rng(cfg.seed)
+    d, dh = cfg.d_model, cfg.d_head
+
+    def mat(shape, fan_in):
+        return jnp.asarray(
+            rng.standard_normal(shape) * (1.0 / np.sqrt(fan_in)), jnp.float32
+        )
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                "attn_norm": jnp.ones((d,), jnp.float32),
+                "wq": mat((d, cfg.n_heads * dh), d),
+                "wk": mat((d, cfg.n_kv_heads * dh), d),
+                "wv": mat((d, cfg.n_kv_heads * dh), d),
+                "wo": mat((cfg.n_heads * dh, d), cfg.n_heads * dh),
+                "mlp_norm": jnp.ones((d,), jnp.float32),
+                "w_gate": mat((d, cfg.d_ff), d),
+                "w_up": mat((d, cfg.d_ff), d),
+                "w_down": mat((cfg.d_ff, d), cfg.d_ff),
+            }
+        )
+    return {
+        "embed": mat((cfg.vocab, d), d),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": mat((d, cfg.vocab), d),
+        "layers": layers,
+    }
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_freqs(cfg: ModelConfig):
+    dh = cfg.d_head
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    return inv  # [dh/2]
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x [H,S,D] (D even), positions [S] int32 -> rotated x."""
+    inv = rope_freqs(cfg)  # [D/2]
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]  # [S, D/2]
+    cos = jnp.cos(ang)[None, :, :]
+    sin = jnp.sin(ang)[None, :, :]
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out
+
+
+def _project_qkv(layer, x, cfg: ModelConfig):
+    """x [S,d] -> q [H,S,Dh], k,v [Hkv,S,Dh]."""
+    s = x.shape[0]
+    dh = cfg.d_head
+    q = (x @ layer["wq"]).reshape(s, cfg.n_heads, dh).transpose(1, 0, 2)
+    k = (x @ layer["wk"]).reshape(s, cfg.n_kv_heads, dh).transpose(1, 0, 2)
+    v = (x @ layer["wv"]).reshape(s, cfg.n_kv_heads, dh).transpose(1, 0, 2)
+    return q, k, v
+
+
+def _mlp(layer, x):
+    g = x @ layer["w_gate"]
+    u = x @ layer["w_up"]
+    return (g * jax.nn.sigmoid(g) * u) @ layer["w_down"]
+
+
+def prefill(weights, tokens, cfg: ModelConfig):
+    """Process a full prompt. tokens [S] int32.
+
+    Returns (logits [S,V], k_cache [L,Hkv,S,Dh], v_cache [L,Hkv,S,Dh]).
+    Attention goes through the Pallas flash kernel.
+    """
+    s = tokens.shape[0]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x = weights["embed"][tokens]  # [S, d]
+
+    ks, vs = [], []
+    for layer in weights["layers"]:
+        h = rmsnorm(x, layer["attn_norm"])
+        q, k, v = _project_qkv(layer, h, cfg)
+        q = apply_rope(q, pos, cfg)
+        k = apply_rope(k, pos, cfg)
+        o = flash_attention(q, k, v, causal=True)  # [H,S,Dh]
+        o = o.transpose(1, 0, 2).reshape(s, cfg.n_heads * cfg.d_head)
+        x = x + o @ layer["wo"]
+        h = rmsnorm(x, layer["mlp_norm"])
+        x = x + _mlp(layer, h)
+        ks.append(k)
+        vs.append(v)
+
+    x = rmsnorm(x, weights["final_norm"])
+    logits = x @ weights["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(weights, token, k_cache, v_cache, cur_len, cfg: ModelConfig):
+    """One auto-regressive step against padded caches.
+
+    token    [] int32          the token produced at position cur_len-? — the
+                               *input* token whose successor we predict
+    k_cache  [L,Hkv,MAX,Dh]    padded; positions >= cur_len are garbage
+    v_cache  [L,Hkv,MAX,Dh]
+    cur_len  [] int32          valid cache length BEFORE this step
+
+    Returns (logits [V], k_cache', v_cache') with the new KV written at
+    position cur_len. Attention uses the Pallas decode kernel with the
+    dynamic length mask (cur_len + 1 after the write).
+    """
+    pos = cur_len
+    x = weights["embed"][token]  # [d]
+
+    new_k = k_cache
+    new_v = v_cache
+    for li, layer in enumerate(weights["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        dh = cfg.d_head
+        q = (h @ layer["wq"]).reshape(cfg.n_heads, 1, dh)
+        k = (h @ layer["wk"]).reshape(cfg.n_kv_heads, 1, dh)
+        v = (h @ layer["wv"]).reshape(cfg.n_kv_heads, 1, dh)
+        posv = pos.reshape((1,))
+        q = apply_rope(q, posv, cfg)
+        k = apply_rope(k, posv, cfg)
+
+        # write k/v at position cur_len
+        kc = jax.lax.dynamic_update_slice(
+            new_k[li], k.transpose(0, 1, 2), (0, pos, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(new_v[li], v, (0, pos, 0))
+        new_k = new_k.at[li].set(kc)
+        new_v = new_v.at[li].set(vc)
+
+        o = decode_attention(q[:, 0, :], kc, vc, pos + 1)  # [H,Dh]
+        o = o.reshape(cfg.n_heads * dh)
+        x = x + o @ layer["wo"]
+        h = rmsnorm(x, layer["mlp_norm"])
+        x = x + _mlp(layer, h)
+
+    x = rmsnorm(x, weights["final_norm"])
+    logits = x @ weights["lm_head"]
+    return logits, new_k, new_v
+
+
+def prefill_ref(weights, tokens, cfg: ModelConfig):
+    """Reference prefill using naive attention (no Pallas) — L2 oracle."""
+    from .kernels.ref import attention_ref
+
+    s = tokens.shape[0]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x = weights["embed"][tokens]
+    for layer in weights["layers"]:
+        h = rmsnorm(x, layer["attn_norm"])
+        q, k, v = _project_qkv(layer, h, cfg)
+        q = apply_rope(q, pos, cfg)
+        k = apply_rope(k, pos, cfg)
+        o = attention_ref(q, k, v, causal=True)
+        o = o.transpose(1, 0, 2).reshape(s, cfg.n_heads * cfg.d_head)
+        x = x + o @ layer["wo"]
+        h = rmsnorm(x, layer["mlp_norm"])
+        x = x + _mlp(layer, h)
+    x = rmsnorm(x, weights["final_norm"])
+    return x @ weights["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Batched entry points for AOT (fixed shapes; rust pads to these)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_fn(cfg: ModelConfig, batch: int, seq: int):
+    """Returns a jit-able fn tokens[B,S] -> (logits[B,S,V], k[B,L,Hkv,S,D], v[...])."""
+    weights = init_weights(cfg)
+
+    def fn(tokens):
+        return jax.vmap(lambda t: prefill(weights, t, cfg))(tokens)
+
+    spec = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return fn, (spec,)
+
+
+def make_decode_fn(cfg: ModelConfig, batch: int):
+    """Returns fn (token[B], k[B,L,Hkv,MAX,D], v, cur_len[B]) -> (logits[B,V], k', v')."""
+    weights = init_weights(cfg)
+    maxs = cfg.max_seq
+
+    def fn(token, k_cache, v_cache, cur_len):
+        return jax.vmap(
+            lambda t, kc, vc, cl: decode_step(weights, t, kc, vc, cl, cfg)
+        )(token, k_cache, v_cache, cur_len)
+
+    dh = cfg.d_head
+    specs = (
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct(
+            (batch, cfg.n_layers, cfg.n_kv_heads, maxs, dh), jnp.float32
+        ),
+        jax.ShapeDtypeStruct(
+            (batch, cfg.n_layers, cfg.n_kv_heads, maxs, dh), jnp.float32
+        ),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    return fn, specs

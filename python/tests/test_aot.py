@@ -1,0 +1,87 @@
+"""AOT pipeline: HLO text is produced, looks like HLO, and the manifest /
+golden files agree with a fresh in-process computation."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_prefill_produces_hlo_text():
+    lowered, specs = aot.lower_entry(M.TINY, "prefill", 1, 8)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # weights are baked: no parameter beyond the token input
+    assert len(specs) == 1
+
+
+def test_lower_decode_produces_hlo_text():
+    lowered, specs = aot.lower_entry(M.TINY, "decode", 1, None)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert len(specs) == 4
+
+
+def test_entry_names():
+    assert aot.entry_name("tiny", "prefill", 4, 32) == "tiny.prefill.b4s32"
+    assert aot.entry_name("tiny", "decode", 1, None) == "tiny.decode.b1"
+
+
+def test_manifest_and_artifacts_exist():
+    """make artifacts must have run (it is a prerequisite of `make test`)."""
+    man_path = os.path.join(ARTIFACTS, "manifest.json")
+    assert os.path.exists(man_path), "run `make artifacts` first"
+    with open(man_path) as f:
+        man = json.load(f)
+    assert man["format"] == "hlo-text"
+    tiny = man["variants"]["tiny"]
+    assert tiny["config"]["vocab"] == M.TINY.vocab
+    for name, entry in tiny["entries"].items():
+        p = os.path.join(ARTIFACTS, entry["file"])
+        assert os.path.exists(p), p
+        with open(p) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule")
+
+
+def test_golden_matches_fresh_computation():
+    gpath = os.path.join(ARTIFACTS, "tiny.golden.json")
+    assert os.path.exists(gpath), "run `make artifacts` first"
+    with open(gpath) as f:
+        golden = json.load(f)
+    fresh = aot.golden_outputs(M.TINY)
+    assert golden["prompt"] == fresh["prompt"]
+    assert golden["generated"] == fresh["generated"]
+    np.testing.assert_allclose(
+        golden["prefill_logits_first4"],
+        fresh["prefill_logits_first4"],
+        rtol=1e-5,
+    )
+
+
+def test_golden_decode_fingerprints_are_finite():
+    fresh = aot.golden_outputs(M.TINY)
+    for fp in fresh["fingerprints"]:
+        assert np.isfinite(fp["sum"])
+        assert all(np.isfinite(x) for x in fp["first4"])
+
+
+def test_hlo_text_has_no_elided_constants():
+    """Guard against the elided-constant trap: the default HLO printer
+    writes big literals as ``constant({...})`` and the runtime's XLA text
+    parser silently reads them as ZEROS. aot.py must always print full
+    constants (this bug zeroed every baked weight once)."""
+    lowered, _ = aot.lower_entry(M.TINY, "prefill", 1, 8)
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text, "elided constants in HLO text"
+    # built artifacts must be clean too
+    for name in os.listdir(ARTIFACTS):
+        if name.endswith(".hlo.txt"):
+            with open(os.path.join(ARTIFACTS, name)) as f:
+                assert "{...}" not in f.read(), f"elided constants in {name}"

@@ -1,0 +1,305 @@
+"""L1 correctness: Pallas attention kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / GQA ratios / splits / dtypes; every property here
+is a contract the rust coordinator relies on (the migration math must be
+exact, or attention-level migration would corrupt outputs).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import (
+    attention_partial,
+    decode_attention,
+    flash_attention,
+    merge_partials,
+    split_attention,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def assert_close(a, b, dtype=jnp.float32):
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), atol=tol, rtol=tol
+    )
+
+
+@st.composite
+def attn_shapes(draw):
+    d = draw(st.sampled_from([8, 16, 32]))
+    hkv = draw(st.sampled_from([1, 2, 4]))
+    rep = draw(st.sampled_from([1, 2, 4]))
+    sq = draw(st.integers(1, 48))
+    sk = draw(st.integers(1, 64))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return d, hkv, rep, sq, sk, seed
+
+
+class TestFlashAttention:
+    @given(attn_shapes())
+    @settings(**SETTINGS)
+    def test_matches_ref_causal_square(self, shp):
+        d, hkv, rep, sq, _, seed = shp
+        rng = np.random.default_rng(seed)
+        h = hkv * rep
+        q = rand(rng, (h, sq, d))
+        k = rand(rng, (hkv, sq, d))
+        v = rand(rng, (hkv, sq, d))
+        out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+        assert_close(out, ref.attention_ref(q, k, v, causal=True))
+
+    @given(attn_shapes())
+    @settings(**SETTINGS)
+    def test_matches_ref_noncausal_rect(self, shp):
+        d, hkv, rep, sq, sk, seed = shp
+        rng = np.random.default_rng(seed)
+        h = hkv * rep
+        q = rand(rng, (h, sq, d))
+        k = rand(rng, (hkv, sk, d))
+        v = rand(rng, (hkv, sk, d))
+        out = flash_attention(q, k, v, causal=False, block_q=16, block_k=16)
+        assert_close(out, ref.attention_ref(q, k, v, causal=False))
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 30))
+    @settings(**SETTINGS)
+    def test_q_offset_chunked_prefill(self, seed, off):
+        """Chunked prefill: later q chunk with q_offset equals the suffix of
+        full causal attention — the contract incremental prefill relies on."""
+        rng = np.random.default_rng(seed)
+        h, hkv, d = 4, 2, 16
+        sk = off + 9
+        q_full = rand(rng, (h, sk, d))
+        k = rand(rng, (hkv, sk, d))
+        v = rand(rng, (hkv, sk, d))
+        full = ref.attention_ref(q_full, k, v, causal=True)
+        tail = flash_attention(
+            q_full[:, off:, :], k, v, causal=True, q_offset=off, block_q=8, block_k=8
+        )
+        assert_close(tail, full[:, off:, :])
+
+    def test_bf16_io(self):
+        rng = np.random.default_rng(0)
+        h, hkv, s, d = 4, 2, 24, 16
+        q = rand(rng, (h, s, d), jnp.bfloat16)
+        k = rand(rng, (hkv, s, d), jnp.bfloat16)
+        v = rand(rng, (hkv, s, d), jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+        assert out.dtype == jnp.bfloat16
+        assert_close(out, ref.attention_ref(q, k, v, causal=True), jnp.bfloat16)
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(1)
+        h, hkv, s, d = 4, 4, 40, 16
+        q = rand(rng, (h, s, d))
+        k = rand(rng, (hkv, s, d))
+        v = rand(rng, (hkv, s, d))
+        outs = [
+            flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+            for bq, bk in [(8, 8), (16, 32), (64, 16), (128, 128)]
+        ]
+        for o in outs[1:]:
+            assert_close(o, outs[0])
+
+    def test_single_token(self):
+        rng = np.random.default_rng(2)
+        q = rand(rng, (2, 1, 8))
+        k = rand(rng, (2, 1, 8))
+        v = rand(rng, (2, 1, 8))
+        out = flash_attention(q, k, v, causal=True)
+        # single key -> output == v
+        assert_close(out, ref.repeat_kv(v, 1))
+
+
+class TestSplitMigrationMath:
+    """The paper's Eqs 6-10: disjoint partitions + merge == full attention."""
+
+    @given(attn_shapes(), st.floats(0.05, 0.95))
+    @settings(**SETTINGS)
+    def test_split_equals_full(self, shp, frac):
+        d, hkv, rep, sq, sk, seed = shp
+        if sk < 2:
+            sk = 2
+        rng = np.random.default_rng(seed)
+        h = hkv * rep
+        split = min(max(int(sk * frac), 1), sk - 1)
+        q = rand(rng, (h, sq, d))
+        k = rand(rng, (hkv, sk, d))
+        v = rand(rng, (hkv, sk, d))
+        got = split_attention(q, k, v, split, causal=False)
+        assert_close(got, ref.attention_ref(q, k, v, causal=False))
+
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 40))
+    @settings(**SETTINGS)
+    def test_split_equals_full_causal(self, seed, sk):
+        rng = np.random.default_rng(seed)
+        h, hkv, d = 4, 2, 16
+        split = sk // 2
+        q = rand(rng, (h, sk, d))
+        k = rand(rng, (hkv, sk, d))
+        v = rand(rng, (hkv, sk, d))
+        got = split_attention(q, k, v, split, causal=True)
+        assert_close(got, ref.attention_ref(q, k, v, causal=True))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_partial_matches_ref_partial(self, seed):
+        rng = np.random.default_rng(seed)
+        h, hkv, sq, sk, d = 4, 2, 12, 20, 16
+        q = rand(rng, (h, sq, d))
+        k = rand(rng, (hkv, sk, d))
+        v = rand(rng, (hkv, sk, d))
+        o, m, l = attention_partial(q, k, v, causal=False, block_q=8, block_k=8)
+        o_r, m_r, l_r = ref.attention_partial_ref(q, k, v, causal=False)
+        # partials are defined up to the shared max; compare normalized forms
+        got = np.asarray(o) * np.exp(np.asarray(m))[:, :, None]
+        want = np.asarray(o_r) * np.exp(np.asarray(m_r))[:, :, None]
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(l) * np.exp(np.asarray(m)),
+            np.asarray(l_r) * np.exp(np.asarray(m_r)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_merge_is_associative_three_way(self):
+        """Merging ((P1,P2),P3) == merging ((P1,P3),P2) — ordering freedom
+        the coordinator uses when cold-device results arrive out of order."""
+        rng = np.random.default_rng(7)
+        h, hkv, sq, sk, d = 2, 2, 6, 30, 8
+        q = rand(rng, (h, sq, d))
+        k = rand(rng, (hkv, sk, d))
+        v = rand(rng, (hkv, sk, d))
+        parts = [
+            ref.attention_partial_ref(
+                q, k[:, a:b], v[:, a:b], kpos_offset=a, causal=False
+            )
+            for a, b in [(0, 10), (10, 20), (20, 30)]
+        ]
+        m012 = ref.merge_partials_ref([parts[0], parts[1], parts[2]])
+        m021 = ref.merge_partials_ref([parts[0], parts[2], parts[1]])
+        m210 = ref.merge_partials_ref([parts[2], parts[1], parts[0]])
+        assert_close(m012, m021)
+        assert_close(m012, m210)
+        assert_close(m012, ref.attention_ref(q, k, v, causal=False))
+
+    def test_merge_kernel_matches_ref_merge(self):
+        rng = np.random.default_rng(8)
+        h, hkv, sq, sk, d = 4, 2, 8, 24, 16
+        q = rand(rng, (h, sq, d))
+        k = rand(rng, (hkv, sk, d))
+        v = rand(rng, (hkv, sk, d))
+        p1 = attention_partial(q, k[:, :12], v[:, :12], causal=False)
+        p2 = attention_partial(
+            q, k[:, 12:], v[:, 12:], kpos_offset=12, causal=False
+        )
+        got = merge_partials(p1, p2)
+        want = ref.merge_partials_ref(
+            [
+                ref.attention_partial_ref(q, k[:, :12], v[:, :12], causal=False),
+                ref.attention_partial_ref(
+                    q, k[:, 12:], v[:, 12:], kpos_offset=12, causal=False
+                ),
+            ]
+        )
+        assert_close(got, want)
+
+    def test_extreme_magnitudes_stable(self):
+        """Online-softmax merge must survive large score disparities."""
+        h, hkv, sq, d = 2, 2, 4, 8
+        rng = np.random.default_rng(9)
+        q = rand(rng, (h, sq, d)) * 10.0
+        k = jnp.concatenate([rand(rng, (hkv, 8, d)) * 10.0, rand(rng, (hkv, 8, d)) * 0.01], axis=1)
+        v = rand(rng, (hkv, 16, d))
+        got = split_attention(q, k, v, 8, causal=False)
+        want = ref.attention_ref(q, k, v, causal=False)
+        assert_close(got, want)
+        assert np.isfinite(np.asarray(got)).all()
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_head_split_equals_full(self, seed):
+        rng = np.random.default_rng(seed)
+        h, hkv, s, d = 8, 4, 10, 16
+        q = rand(rng, (h, s, d))
+        k = rand(rng, (hkv, s, d))
+        v = rand(rng, (hkv, s, d))
+        got = ref.head_split_attention_ref(q, k, v, head_split=4, causal=True)
+        assert_close(got, ref.attention_ref(q, k, v, causal=True))
+
+
+class TestDecodeAttention:
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.integers(1, 60),
+        st.sampled_from([(4, 2), (8, 8), (2, 1)]),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, seed, kvlen, heads):
+        h, hkv = heads
+        d, smax = 16, 64
+        rng = np.random.default_rng(seed)
+        q = rand(rng, (h, d))
+        k = rand(rng, (hkv, smax, d))
+        v = rand(rng, (hkv, smax, d))
+        got = decode_attention(q, k, v, kvlen, block_k=16)
+        want = ref.attention_ref(q[:, None, :], k, v, causal=False, kv_len=kvlen)[:, 0]
+        assert_close(got, want)
+
+    def test_padding_is_ignored(self):
+        """Garbage beyond kv_len must not change the result."""
+        rng = np.random.default_rng(3)
+        h, hkv, smax, d = 4, 2, 32, 16
+        q = rand(rng, (h, d))
+        k = rand(rng, (hkv, smax, d))
+        v = rand(rng, (hkv, smax, d))
+        kvlen = 11
+        out1 = decode_attention(q, k, v, kvlen)
+        k2 = k.at[:, kvlen:, :].set(1e6)
+        v2 = v.at[:, kvlen:, :].set(-1e6)
+        out2 = decode_attention(q, k2, v2, kvlen)
+        assert_close(out1, out2)
+
+    def test_kvlen_one(self):
+        rng = np.random.default_rng(4)
+        h, hkv, smax, d = 2, 2, 16, 8
+        q = rand(rng, (h, d))
+        k = rand(rng, (hkv, smax, d))
+        v = rand(rng, (hkv, smax, d))
+        out = decode_attention(q, k, v, 1)
+        assert_close(out, v[:, 0, :])
+
+
+class TestScaleAndMask:
+    def test_custom_scale(self):
+        rng = np.random.default_rng(5)
+        h, hkv, s, d = 2, 2, 8, 16
+        q = rand(rng, (h, s, d))
+        k = rand(rng, (hkv, s, d))
+        v = rand(rng, (hkv, s, d))
+        out = flash_attention(q, k, v, causal=False, scale=0.5)
+        want = ref.attention_ref(q, k, v, causal=False, scale=0.5)
+        assert_close(out, want)
+
+    def test_first_row_causal_is_v0(self):
+        rng = np.random.default_rng(6)
+        h, hkv, s, d = 2, 1, 12, 8
+        q = rand(rng, (h, s, d))
+        k = rand(rng, (hkv, s, d))
+        v = rand(rng, (hkv, s, d))
+        out = flash_attention(q, k, v, causal=True)
+        for hh in range(h):
+            np.testing.assert_allclose(
+                np.asarray(out[hh, 0]), np.asarray(v[0, 0]), rtol=1e-5, atol=1e-5
+            )

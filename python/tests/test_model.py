@@ -1,0 +1,203 @@
+"""L2 model correctness: Pallas-backed model vs naive-attention oracle, and
+the prefill/decode consistency contract the serving system depends on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+@pytest.fixture(scope="module")
+def tiny_weights():
+    return M.init_weights(M.TINY)
+
+
+class TestPrefill:
+    def test_matches_naive_oracle(self, tiny_weights):
+        toks = jnp.asarray(np.arange(1, 25) % M.TINY.vocab, jnp.int32)
+        got, _, _ = M.prefill(tiny_weights, toks, M.TINY)
+        want = M.prefill_ref(tiny_weights, toks, M.TINY)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 32))
+    @settings(**SETTINGS)
+    def test_matches_oracle_random_prompts(self, seed, slen):
+        rng = np.random.default_rng(seed)
+        w = M.init_weights(M.TINY)
+        toks = jnp.asarray(rng.integers(0, M.TINY.vocab, slen), jnp.int32)
+        got, kc, vc = M.prefill(w, toks, M.TINY)
+        want = M.prefill_ref(w, toks, M.TINY)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+        assert kc.shape == (M.TINY.n_layers, M.TINY.n_kv_heads, slen, M.TINY.d_head)
+
+    def test_prefix_property(self, tiny_weights):
+        """prefill(prompt)[0:n] == prefill(prompt[:n]) — causality: later
+        tokens never influence earlier logits. Incremental prefill and the
+        Global KV Cache Store both rest on this."""
+        toks = jnp.asarray(np.arange(3, 23) % M.TINY.vocab, jnp.int32)
+        full, kc_full, vc_full = M.prefill(tiny_weights, toks, M.TINY)
+        half, kc_half, vc_half = M.prefill(tiny_weights, toks[:10], M.TINY)
+        np.testing.assert_allclose(
+            np.asarray(full[:10]), np.asarray(half), rtol=1e-4, atol=1e-4
+        )
+        # the KV prefix is identical too -> cached prefixes are reusable
+        np.testing.assert_allclose(
+            np.asarray(kc_full[:, :, :10]), np.asarray(kc_half), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(vc_full[:, :, :10]), np.asarray(vc_half), rtol=1e-4, atol=1e-4
+        )
+
+    def test_deterministic(self, tiny_weights):
+        toks = jnp.asarray([5, 9, 1], jnp.int32)
+        a, _, _ = M.prefill(tiny_weights, toks, M.TINY)
+        b, _, _ = M.prefill(tiny_weights, toks, M.TINY)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestDecodeStep:
+    def _padded_caches(self, cfg, kc, vc):
+        maxs = cfg.max_seq
+        s = kc.shape[2]
+        kp = jnp.zeros((cfg.n_layers, cfg.n_kv_heads, maxs, cfg.d_head), jnp.float32)
+        vp = jnp.zeros_like(kp)
+        return kp.at[:, :, :s].set(kc), vp.at[:, :, :s].set(vc)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_decode_equals_prefill_extension(self, seed):
+        """prefill(p + [t]) last logits == decode_step(t | prefill(p)) —
+        THE autoregressive consistency contract."""
+        cfg = M.TINY
+        rng = np.random.default_rng(seed)
+        w = M.init_weights(cfg)
+        n = int(rng.integers(1, 30))
+        toks = rng.integers(0, cfg.vocab, n + 1)
+        full = M.prefill_ref(w, jnp.asarray(toks, jnp.int32), cfg)
+        _, kc, vc = M.prefill(w, jnp.asarray(toks[:-1], jnp.int32), cfg)
+        kp, vp = self._padded_caches(cfg, kc, vc)
+        lg, _, _ = M.decode_step(
+            w,
+            jnp.asarray(toks[-1], jnp.int32),
+            kp,
+            vp,
+            jnp.asarray(n, jnp.int32),
+            cfg,
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full[-1]), rtol=2e-4, atol=2e-4
+        )
+
+    def test_multistep_greedy_matches_full_prefill(self, tiny_weights):
+        """Greedy-decode 6 tokens stepwise; re-prefilling the whole sequence
+        must predict the same continuation at each position."""
+        cfg = M.TINY
+        w = tiny_weights
+        prompt = list(np.arange(2, 12))
+        _, kc, vc = M.prefill(w, jnp.asarray(prompt, jnp.int32), cfg)
+        kp, vp = self._padded_caches(cfg, kc, vc)
+        seq = list(prompt)
+        logits, _, _ = M.prefill(w, jnp.asarray(seq, jnp.int32), cfg)
+        cur = int(np.asarray(logits[-1]).argmax())
+        for step in range(6):
+            lg, kp, vp = M.decode_step(
+                w,
+                jnp.asarray(cur, jnp.int32),
+                kp,
+                vp,
+                jnp.asarray(len(seq), jnp.int32),
+                cfg,
+            )
+            seq.append(cur)
+            ref_logits = M.prefill_ref(w, jnp.asarray(seq, jnp.int32), cfg)
+            np.testing.assert_allclose(
+                np.asarray(lg), np.asarray(ref_logits[-1]), rtol=5e-4, atol=5e-4
+            )
+            cur = int(np.asarray(lg).argmax())
+
+    def test_cache_garbage_beyond_len_ignored(self, tiny_weights):
+        cfg = M.TINY
+        prompt = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+        _, kc, vc = M.prefill(tiny_weights, prompt, cfg)
+        kp, vp = self._padded_caches(cfg, kc, vc)
+        kp2 = kp.at[:, :, 10:].set(123.0)
+        vp2 = vp.at[:, :, 10:].set(-321.0)
+        l1, _, _ = M.decode_step(
+            tiny_weights, jnp.asarray(7, jnp.int32), kp, vp,
+            jnp.asarray(5, jnp.int32), cfg,
+        )
+        l2, _, _ = M.decode_step(
+            tiny_weights, jnp.asarray(7, jnp.int32), kp2, vp2,
+            jnp.asarray(5, jnp.int32), cfg,
+        )
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2))
+
+
+class TestBatchedEntryPoints:
+    def test_batched_prefill_rows_independent(self):
+        cfg = M.TINY
+        fn, _ = M.make_prefill_fn(cfg, batch=4, seq=8)
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 8)), jnp.int32)
+        logits, kc, vc = fn(toks)
+        assert logits.shape == (4, 8, cfg.vocab)
+        # each row equals the unbatched run
+        w = M.init_weights(cfg)
+        for b in range(4):
+            want, _, _ = M.prefill(w, toks[b], cfg)
+            np.testing.assert_allclose(
+                np.asarray(logits[b]), np.asarray(want), rtol=1e-4, atol=1e-4
+            )
+
+    def test_batched_decode_rows_independent(self):
+        cfg = M.TINY
+        dfn, _ = M.make_decode_fn(cfg, batch=2)
+        w = M.init_weights(cfg)
+        rng = np.random.default_rng(4)
+        maxs = cfg.max_seq
+        prompts = [rng.integers(0, cfg.vocab, 6), rng.integers(0, cfg.vocab, 11)]
+        kps, vps, lens = [], [], []
+        for p in prompts:
+            _, kc, vc = M.prefill(w, jnp.asarray(p, jnp.int32), cfg)
+            kp = jnp.zeros((cfg.n_layers, cfg.n_kv_heads, maxs, cfg.d_head))
+            vp = jnp.zeros_like(kp)
+            kps.append(kp.at[:, :, : len(p)].set(kc))
+            vps.append(vp.at[:, :, : len(p)].set(vc))
+            lens.append(len(p))
+        toks = jnp.asarray([9, 13], jnp.int32)
+        lg, _, _ = dfn(
+            toks,
+            jnp.stack(kps),
+            jnp.stack(vps),
+            jnp.asarray(lens, jnp.int32),
+        )
+        for b in range(2):
+            want, _, _ = M.decode_step(
+                w, toks[b], kps[b], vps[b], jnp.asarray(lens[b], jnp.int32), cfg
+            )
+            np.testing.assert_allclose(
+                np.asarray(lg[b]), np.asarray(want), rtol=1e-4, atol=1e-4
+            )
+
+
+class TestConfig:
+    def test_param_count_tiny(self):
+        cfg = M.TINY
+        w = M.init_weights(cfg)
+        total = w["embed"].size + w["final_norm"].size + w["lm_head"].size
+        for layer in w["layers"]:
+            total += sum(np.asarray(p).size for p in layer.values())
+        assert total == cfg.param_count()
+
+    def test_d_head_divides(self):
+        for cfg in (M.TINY, M.SMALL):
+            assert cfg.d_model == cfg.n_heads * cfg.d_head
+            assert cfg.n_heads % cfg.n_kv_heads == 0

@@ -1,0 +1,66 @@
+//! Fig 1: GPU utilization, HFT vs vLLM, single LLaMA-13B instance across
+//! request rates (paper: A100, 5 repeats). Utilization = device busy
+//! fraction (the nvidia-smi-style metric the paper plots).
+
+use banaserve::bench_support::SEEDS;
+use banaserve::config::{EngineKind, ExperimentConfig};
+use banaserve::engines::hft::HftEngine;
+use banaserve::engines::vllm_sim::VllmEngine;
+use banaserve::sim;
+use banaserve::util::stats::Summary;
+use banaserve::workload::{LengthProfile, WorkloadConfig};
+
+fn busy_fraction(kind: EngineKind, rps: f64, seed: u64) -> f64 {
+    let mut c = ExperimentConfig::default_for(kind, "llama-13b", rps, seed);
+    c.n_devices = 1;
+    c.n_prefill = 1;
+    c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, rps, 60.0, seed);
+    c.warmup = 0.0;
+    // Fig 1 is the paper's single-instance *interactive* workload: short
+    // chat replies (the sweep figures use the full output distribution)
+    let mut reqs = c.workload.generate();
+    for r in reqs.iter_mut() {
+        r.output_len = (r.output_len / 3).max(1);
+    }
+    match kind {
+        EngineKind::HfStatic => {
+            let mut e = HftEngine::new(&c);
+            let res = sim::run(&mut e, reqs, 1e6);
+            e.insts[0].busy_wall / res.end_time
+        }
+        _ => {
+            let mut e = VllmEngine::new(&c);
+            let res = sim::run(&mut e, reqs, 1e6);
+            e.insts[0].busy_wall / res.end_time
+        }
+    }
+}
+
+fn main() {
+    println!("\nFig 1: GPU utilization (busy %), single LLaMA-13B instance");
+    println!("{:-<68}", "");
+    println!("{:>5} {:>18} {:>18} {:>20}", "rps", "HFT", "vLLM", "unused (vLLM)");
+    println!("{:-<68}", "");
+    for rps in [1.0, 2.0, 5.0, 10.0, 15.0, 20.0] {
+        let mut cells = Vec::new();
+        for kind in [EngineKind::HfStatic, EngineKind::Vllm] {
+            let mut s = Summary::new();
+            for &seed in &SEEDS {
+                s.add(busy_fraction(kind, rps, seed) * 100.0);
+            }
+            cells.push(s);
+        }
+        println!(
+            "{:>5} {:>13.1}±{:<4.1} {:>13.1}±{:<4.1} {:>19.1}%",
+            rps,
+            cells[0].mean(),
+            cells[0].ci95_half_width(),
+            cells[1].mean(),
+            cells[1].ci95_half_width(),
+            100.0 - cells[1].mean(),
+        );
+    }
+    println!("{:-<68}", "");
+    println!("paper's observation: substantial idle capacity at RPS <= 10 for both stacks");
+    println!("(20-40% unused); HFT saturates on padding waste, vLLM scales further.");
+}

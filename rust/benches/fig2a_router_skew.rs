@@ -1,0 +1,53 @@
+//! Fig 2a: load imbalance caused by a prefix-cache-aware router across 3
+//! serving instances under Zipf-popular shared prefixes — routed share,
+//! busy fraction, redundant cache storage, recomputed prefix tokens.
+
+use banaserve::config::{EngineKind, ExperimentConfig};
+use banaserve::engines::vllm_sim::{RouterPolicy, VllmEngine};
+use banaserve::sim;
+use banaserve::workload::{LengthProfile, WorkloadConfig};
+
+fn run(policy: RouterPolicy) -> (Vec<u64>, Vec<f64>, u64, u64) {
+    let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 12.0, 3);
+    c.n_devices = 3;
+    c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 12.0, 60.0, 3);
+    c.workload.prefix.share_prob = 0.95;
+    c.workload.prefix.n_templates = 3;
+    c.workload.prefix.zipf_s = 1.5;
+    c.workload.prefix.shared_frac = (0.8, 0.95);
+    c.warmup = 0.0;
+    let mut e = VllmEngine::with_policy(&c, policy, true);
+    let res = sim::run(&mut e, c.workload.generate(), 1e6);
+    sim::check_conservation(&res, &mut e).unwrap();
+    let busy: Vec<f64> = e
+        .insts
+        .iter()
+        .map(|i| i.busy_wall / res.end_time)
+        .collect();
+    (e.routed_counts.clone(), busy, e.redundant_cache_tokens(), e.recomputed_tokens)
+}
+
+fn main() {
+    println!("\nFig 2a: prefix-cache-aware routing skew (3 instances, Zipf prefixes)");
+    for (name, policy) in [
+        ("cache-aware router (vLLM/SGLang-style)", RouterPolicy::CacheAware { w_cache: 1.0, w_load: 0.5 }),
+        ("load-aware router (BanaServe Alg 2 analog)", RouterPolicy::LeastLoaded),
+    ] {
+        let (routed, busy, redundant, recomputed) = run(policy);
+        let total: u64 = routed.iter().sum();
+        println!("\n  {name}");
+        for i in 0..3 {
+            println!(
+                "    instance {}: {:>5.1}% of requests   compute load {:>5.1}%",
+                i + 1,
+                100.0 * routed[i] as f64 / total as f64,
+                100.0 * busy[i],
+            );
+        }
+        println!(
+            "    redundant cached prefix tokens: {redundant}   recomputed prefix tokens: {recomputed}"
+        );
+    }
+    println!("\npaper's Fig 2a pattern: the cache-aware policy concentrates load on the");
+    println!("high-hit-rate instance (positive feedback) while others idle and duplicate cache.");
+}

@@ -1,0 +1,61 @@
+//! Fig 6: validation of the three-stage layer-wise KV pipeline — the
+//! paper's worked example (LLaMA-3.1-8B, L=1000, r=0.5, B=200 Gbps,
+//! T_F=270ms) plus the timeline and a bandwidth sensitivity sweep.
+
+use banaserve::cluster::NET_200GBPS;
+use banaserve::kvcache::{PipelinePlan, StageKind};
+use banaserve::model::LLAMA31_8B;
+use banaserve::perfmodel;
+
+fn main() {
+    let m = &LLAMA31_8B;
+    let t_f_layer = perfmodel::per_layer_forward_time(0.270, 0.5, m.n_layers);
+    let t_kv = perfmodel::per_layer_kv_transfer_time(
+        m.kv_bytes_per_token_layer(),
+        1000,
+        0.5,
+        NET_200GBPS.bandwidth,
+    );
+    println!("\nFig 6: three-stage layer-wise KV pipeline validation");
+    println!("{:-<66}", "");
+    println!("model {}   S_kv/layer/token = {} B (paper Eq 15: 4096 B)", m.name, m.kv_bytes_per_token_layer());
+    println!("T_F,layer = {:.2} ms   (paper Eq 17: 4.22 ms)", t_f_layer * 1e3);
+    println!("T_KV      = {:.3} ms  (paper Eq 17: 0.082 ms)", t_kv * 1e3);
+    println!("transfer hidden: {}", perfmodel::pipeline_hides_transfer(t_f_layer, t_kv));
+
+    let plan = PipelinePlan::schedule(3, t_f_layer, t_kv, t_kv);
+    println!("\ntimeline, first 3 layers (ms):");
+    for kind in [StageKind::FetchKv, StageKind::Forward, StageKind::StoreKv] {
+        let row: Vec<String> = plan
+            .stages
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| format!("L{} [{:>6.2}..{:>6.2}]", s.layer + 1, s.start * 1e3, s.end * 1e3))
+            .collect();
+        let label = match kind {
+            StageKind::FetchKv => "HtoD fetch",
+            StageKind::Forward => "GPU forward",
+            StageKind::StoreKv => "DtoH store",
+        };
+        println!("  {label:<12} {}", row.join("  "));
+    }
+
+    let full = PipelinePlan::schedule(m.n_layers, t_f_layer, t_kv, t_kv);
+    println!("\nfull {}-layer prefill:", m.n_layers);
+    println!("  overlapped: {:.2} ms   serial: {:.2} ms   stall: {:.4} ms", full.forward_finish()*1e3, full.serial_time()*1e3, full.stall()*1e3);
+
+    println!("\nbandwidth sensitivity (where the overlap breaks):");
+    println!("  {:>12} {:>12} {:>10} {:>12}", "bandwidth", "T_KV (ms)", "hidden", "stall (ms)");
+    for gbps in [200.0, 50.0, 10.0, 2.0, 0.5] {
+        let bw = gbps * 1e9 / 8.0;
+        let tkv = perfmodel::per_layer_kv_transfer_time(m.kv_bytes_per_token_layer(), 1000, 0.5, bw);
+        let p = PipelinePlan::schedule(m.n_layers, t_f_layer, tkv, tkv);
+        println!(
+            "  {:>9} Gbps {:>12.3} {:>10} {:>12.3}",
+            gbps,
+            tkv * 1e3,
+            perfmodel::pipeline_hides_transfer(t_f_layer, tkv),
+            p.stall() * 1e3
+        );
+    }
+}

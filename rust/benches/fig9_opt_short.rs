@@ -1,0 +1,27 @@
+//! Fig 9: OPT-13B short-context (Alpaca) across request rates
+//!
+//! Grid: RPS x {vLLM, DistServe, BanaServe} x 5 seeds, printed as the
+//! figure's three panels (throughput / total time / average latency) with
+//! 95% CIs and BanaServe's relative factors. Results also dumped to
+//! bench_results/fig9_opt_short.json.
+
+use banaserve::bench_support::{dump_json, print_figure, run_cell, RPS_GRID, SEEDS};
+use banaserve::config::{EngineKind, ExperimentConfig};
+use banaserve::workload::{LengthProfile, WorkloadConfig};
+
+fn main() {
+    let engines = [EngineKind::Vllm, EngineKind::DistServe, EngineKind::BanaServe];
+    let mut cells = Vec::new();
+    for &rps in RPS_GRID.iter() {
+        for e in engines {
+            cells.push(run_cell(e, rps, &SEEDS, |e, rps, seed| {
+                let mut c = ExperimentConfig::default_for(e, "opt-13b", rps, seed);
+                c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, rps, 60.0, seed);
+                c.warmup = 5.0;
+                c
+            }));
+        }
+    }
+    print_figure("Fig 9: OPT-13B short-context (Alpaca) across request rates", &engines, &cells);
+    dump_json("fig9_opt_short", &cells);
+}

@@ -1,0 +1,30 @@
+//! Table 1: model configurations used in the experimental evaluation.
+
+use banaserve::model;
+use banaserve::util::fmt_bytes;
+
+fn main() {
+    println!("\nTable 1: Model configurations (paper §5.1.1)");
+    println!("{:-<100}", "");
+    println!(
+        "{:<14} {:>12} {:>8} {:>8} {:>9} {:>8} {:>12} {:>14}",
+        "Model", "Parameters", "Layers", "Heads", "KV heads", "d_model", "Weights", "KV B/token"
+    );
+    println!("{:-<100}", "");
+    for m in model::presets() {
+        println!(
+            "{:<14} {:>11.1}B {:>8} {:>8} {:>9} {:>8} {:>12} {:>14}",
+            m.name,
+            m.param_count() as f64 / 1e9,
+            m.n_layers,
+            m.n_heads,
+            m.n_kv_heads,
+            m.d_model,
+            fmt_bytes(m.weight_bytes()),
+            fmt_bytes(m.kv_bytes_per_token()),
+        );
+    }
+    println!("{:-<100}", "");
+    println!("LLaMA-13B: intra-family evaluation target; OPT-13B: cross-architecture validation");
+    println!("llama-3.1-8b is the paper's §4.2 worked example (Eq 14-17); tiny is the PJRT-served model");
+}

@@ -1,0 +1,187 @@
+//! Shared harness for the figure/table benches (criterion is not in the
+//! offline registry): RPS sweeps with repeated seeds, table/series
+//! printing in the layout of the paper's figures, simple timing helpers
+//! for the perf benches, and JSON result dumps under `bench_results/`.
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::engines;
+use crate::metrics::SeedAggregate;
+use crate::util::json::{self, Value};
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// The RPS grid of the paper's evaluation (§5.1.3: 1..20).
+pub const RPS_GRID: [f64; 5] = [1.0, 5.0, 10.0, 15.0, 20.0];
+
+/// Seeds for the 5-repeat methodology.
+pub const SEEDS: [u64; 5] = [11, 23, 37, 51, 73];
+
+/// One cell of a figure: mean ± CI over seeds for each metric.
+#[derive(Debug)]
+pub struct Cell {
+    pub engine: EngineKind,
+    pub rps: f64,
+    pub agg: SeedAggregate,
+    pub extras_hit_rate: Summary,
+    pub migrations: Summary,
+}
+
+/// Run `engine` at `rps` across the seed set, with a config template.
+pub fn run_cell<F>(engine: EngineKind, rps: f64, seeds: &[u64], mk: F) -> Cell
+where
+    F: Fn(EngineKind, f64, u64) -> ExperimentConfig,
+{
+    let mut agg = SeedAggregate::new();
+    let mut hit = Summary::new();
+    let mut mig = Summary::new();
+    for &seed in seeds {
+        let cfg = mk(engine, rps, seed);
+        let out = engines::run_experiment(&cfg);
+        agg.add(&out.report);
+        hit.add(out.extras.store_hit_rate);
+        mig.add((out.extras.layer_migrations + out.extras.attention_migrations) as f64);
+    }
+    Cell {
+        engine,
+        rps,
+        agg,
+        extras_hit_rate: hit,
+        migrations: mig,
+    }
+}
+
+/// Print a figure as three metric tables (throughput / total time / avg
+/// latency), one row per RPS, one column per engine — the three panels the
+/// paper's Figs 8-11 plot.
+pub fn print_figure(title: &str, engines_list: &[EngineKind], cells: &[Cell]) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+    for (metric, pick) in [
+        ("throughput (tok/s)", 0usize),
+        ("total time (s)", 1),
+        ("avg latency (s)", 2),
+    ] {
+        println!("\n  {metric}");
+        print!("  {:>5}", "rps");
+        for e in engines_list {
+            print!(" {:>20}", e.name());
+        }
+        println!();
+        let mut rps_values: Vec<f64> = cells.iter().map(|c| c.rps).collect();
+        rps_values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rps_values.dedup();
+        for rps in rps_values {
+            print!("  {rps:>5}");
+            for e in engines_list {
+                let cell = cells
+                    .iter()
+                    .find(|c| c.engine == *e && c.rps == rps)
+                    .expect("cell");
+                let s = match pick {
+                    0 => &cell.agg.throughput,
+                    1 => &cell.agg.total_time,
+                    _ => &cell.agg.avg_latency,
+                };
+                print!(" {:>20}", SeedAggregate::cell(s));
+            }
+            println!();
+        }
+    }
+    // relative factors (the paper's headline ratios)
+    if engines_list.contains(&EngineKind::BanaServe) {
+        println!("\n  banaserve speedups (throughput ratio at each rps)");
+        let mut rps_values: Vec<f64> = cells.iter().map(|c| c.rps).collect();
+        rps_values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rps_values.dedup();
+        for rps in rps_values {
+            let bana = cells
+                .iter()
+                .find(|c| c.engine == EngineKind::BanaServe && c.rps == rps)
+                .map(|c| c.agg.throughput.mean())
+                .unwrap_or(0.0);
+            print!("  rps={rps:>4}:");
+            for e in engines_list.iter().filter(|&&e| e != EngineKind::BanaServe) {
+                let base = cells
+                    .iter()
+                    .find(|c| c.engine == *e && c.rps == rps)
+                    .map(|c| c.agg.throughput.mean())
+                    .unwrap_or(f64::NAN);
+                print!("  vs {} = {:.2}x", e.name(), bana / base);
+            }
+            println!();
+        }
+    }
+}
+
+/// Dump cells as JSON for downstream plotting.
+pub fn dump_json(name: &str, cells: &[Cell]) {
+    let arr: Vec<Value> = cells
+        .iter()
+        .map(|c| {
+            json::obj(vec![
+                ("engine", json::s(c.engine.name())),
+                ("rps", json::num(c.rps)),
+                ("throughput_mean", json::num(c.agg.throughput.mean())),
+                ("throughput_ci95", json::num(c.agg.throughput.ci95_half_width())),
+                ("total_time_mean", json::num(c.agg.total_time.mean())),
+                ("avg_latency_mean", json::num(c.agg.avg_latency.mean())),
+                ("ttft_mean", json::num(c.agg.ttft_mean.mean())),
+                ("tpot_mean", json::num(c.agg.tpot_mean.mean())),
+                ("store_hit_rate", json::num(c.extras_hit_rate.mean())),
+                ("migrations", json::num(c.migrations.mean())),
+            ])
+        })
+        .collect();
+    let _ = std::fs::create_dir_all("bench_results");
+    let path = format!("bench_results/{name}.json");
+    if std::fs::write(&path, json::write(&json::arr(arr))).is_ok() {
+        println!("\n  [results written to {path}]");
+    }
+}
+
+/// Time a closure (for the perf_hotpaths bench): returns (result, secs).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat-and-summarize micro-benchmark helper.
+pub fn bench_n(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
+    // warmup
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {name:<44} {:>12.3} µs/iter", per * 1e6);
+    per
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value_and_positive_time() {
+        let (v, t) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn run_cell_aggregates_seeds() {
+        let cell = run_cell(EngineKind::DistServe, 2.0, &[1, 2], |e, rps, seed| {
+            let mut c = ExperimentConfig::default_for(e, "llama-13b", rps, seed);
+            c.workload.duration = 5.0;
+            c.warmup = 0.0;
+            c
+        });
+        assert_eq!(cell.agg.throughput.count(), 2);
+        assert!(cell.agg.throughput.mean() > 0.0);
+    }
+}

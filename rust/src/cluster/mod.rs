@@ -1,0 +1,278 @@
+//! Simulated cluster substrate: GPU device specs, interconnect links, and
+//! per-device runtime state (memory accounting + utilization tracking).
+//!
+//! The paper's testbed is A100 GPUs over NVLink/PCIe/IB; we model a device
+//! as a (peak-FLOPs, HBM-capacity, HBM-bandwidth) triple and links as
+//! (bandwidth, base-latency) pairs — exactly the quantities the paper's own
+//! analytical models consume (Eqs 4, 11, 13, 27, 32).
+
+use crate::util::stats::TimeWeighted;
+
+/// Hardware description of one accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak dense fp16/bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: u64,
+    /// HBM bandwidth in bytes/s.
+    pub hbm_bw: f64,
+}
+
+/// NVIDIA A100-40GB (the paper's device; Fig 1 caption).
+pub const A100_40G: GpuSpec = GpuSpec {
+    name: "a100-40g",
+    peak_flops: 312e12,
+    hbm_bytes: 40_000_000_000,
+    hbm_bw: 1.555e12,
+};
+
+/// NVIDIA A100-80GB.
+pub const A100_80G: GpuSpec = GpuSpec {
+    name: "a100-80g",
+    peak_flops: 312e12,
+    hbm_bytes: 80_000_000_000,
+    hbm_bw: 2.039e12,
+};
+
+/// Interconnect between devices / to the host-side KV store.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Effective bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Base (synchronization / setup) latency in seconds — the T_sync of Eq 4.
+    pub latency: f64,
+}
+
+impl Link {
+    /// Time to move `bytes` over this link (Eqs 4, 11, 13).
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// NVLink 3 (intra-node GPU<->GPU): ~300 GB/s effective, ~5 µs setup.
+pub const NVLINK: Link = Link {
+    bandwidth: 300e9,
+    latency: 5e-6,
+};
+
+/// 200 Gbps fabric (the B = 200 Gbps of the paper's Eq 17): 25 GB/s.
+pub const NET_200GBPS: Link = Link {
+    bandwidth: 25e9,
+    latency: 20e-6,
+};
+
+/// PCIe 4.0 x16 host link (CPU-tier KV store): ~25 GB/s practical.
+pub const PCIE_GEN4: Link = Link {
+    bandwidth: 25e9,
+    latency: 10e-6,
+};
+
+/// What a device is currently serving (PD disaggregation role).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// Monolithic: both phases co-located (vLLM / HFT baselines).
+    Unified,
+    Prefill,
+    Decode,
+}
+
+/// Runtime state of one simulated device.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub spec: GpuSpec,
+    pub role: Role,
+    /// Bytes of model weights resident (layer migration changes this).
+    pub weight_bytes: u64,
+    /// Bytes of KV cache currently allocated.
+    pub kv_bytes: u64,
+    /// Busy-fraction tracker (compute utilization over time).
+    pub compute_util: TimeWeighted,
+    /// Memory-utilization tracker (fraction of HBM in use over time).
+    pub memory_util: TimeWeighted,
+    /// Busy until this sim time (one outstanding step at a time).
+    pub busy_until: f64,
+}
+
+impl Device {
+    pub fn new(id: usize, spec: GpuSpec, role: Role) -> Self {
+        Device {
+            id,
+            spec,
+            role,
+            weight_bytes: 0,
+            kv_bytes: 0,
+            compute_util: TimeWeighted::new(),
+            memory_util: TimeWeighted::new(),
+            busy_until: 0.0,
+        }
+    }
+
+    pub fn mem_used(&self) -> u64 {
+        self.weight_bytes + self.kv_bytes
+    }
+
+    pub fn mem_free(&self) -> u64 {
+        self.spec.hbm_bytes.saturating_sub(self.mem_used())
+    }
+
+    /// Fraction of HBM in use — the M_d / M_d^max of Eq 32.
+    pub fn mem_frac(&self) -> f64 {
+        self.mem_used() as f64 / self.spec.hbm_bytes as f64
+    }
+
+    /// Record a memory change at sim time `now`.
+    pub fn touch_mem(&mut self, now: f64) {
+        let frac = self.mem_frac();
+        self.memory_util.set(now, frac);
+    }
+
+    /// Record that the device is busy (1.0) or idle (0.0) from `now`.
+    pub fn set_busy(&mut self, now: f64, busy: bool) {
+        self.compute_util.set(now, if busy { 1.0 } else { 0.0 });
+    }
+
+    /// Can `bytes` of KV be allocated?
+    pub fn can_fit_kv(&self, bytes: u64) -> bool {
+        self.mem_free() >= bytes
+    }
+
+    /// Allocate KV bytes (caller must have checked `can_fit_kv`).
+    pub fn alloc_kv(&mut self, now: f64, bytes: u64) {
+        debug_assert!(self.can_fit_kv(bytes), "KV over-allocation");
+        self.kv_bytes += bytes;
+        self.touch_mem(now);
+    }
+
+    pub fn free_kv(&mut self, now: f64, bytes: u64) {
+        debug_assert!(self.kv_bytes >= bytes, "KV double free");
+        self.kv_bytes -= bytes;
+        self.touch_mem(now);
+    }
+}
+
+/// A cluster: devices plus the interconnect model.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<Device>,
+    /// GPU<->GPU link (weight / KV migration).
+    pub gpu_link: Link,
+    /// GPU<->host link (Global KV Cache Store tier).
+    pub host_link: Link,
+}
+
+impl Cluster {
+    /// Homogeneous cluster of `n` devices, all `role`.
+    pub fn homogeneous(n: usize, spec: GpuSpec, role: Role) -> Self {
+        Cluster {
+            devices: (0..n).map(|i| Device::new(i, spec.clone(), role)).collect(),
+            gpu_link: NVLINK,
+            host_link: NET_200GBPS,
+        }
+    }
+
+    /// PD-disaggregated cluster: `np` prefill + `nd` decode devices.
+    pub fn pd_split(np: usize, nd: usize, spec: GpuSpec) -> Self {
+        let mut devices = Vec::with_capacity(np + nd);
+        for i in 0..np {
+            devices.push(Device::new(i, spec.clone(), Role::Prefill));
+        }
+        for i in 0..nd {
+            devices.push(Device::new(np + i, spec.clone(), Role::Decode));
+        }
+        Cluster {
+            devices,
+            gpu_link: NVLINK,
+            host_link: NET_200GBPS,
+        }
+    }
+
+    pub fn by_role(&self, role: Role) -> impl Iterator<Item = &Device> {
+        self.devices.iter().filter(move |d| d.role == role)
+    }
+
+    pub fn ids_by_role(&self, role: Role) -> Vec<usize> {
+        self.by_role(role).map(|d| d.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_transfer_time_eq4() {
+        // Eq 4 shape: payload / bandwidth + latency
+        let l = Link {
+            bandwidth: 100.0,
+            latency: 0.5,
+        };
+        assert!((l.transfer_time(1000) - 10.5).abs() < 1e-12);
+        assert_eq!(l.transfer_time(0), 0.5);
+    }
+
+    #[test]
+    fn net_200gbps_matches_paper_eq17() {
+        // Eq 17: 4 KB * 1000 * 0.5 over 200 Gbps ≈ 0.082 ms (paper's number,
+        // which uses the decimal-GB convention 200e9/8 = 25e9 B/s).
+        let bytes = (4096.0_f64 * 1000.0 * 0.5) as u64;
+        let t = bytes as f64 / NET_200GBPS.bandwidth;
+        assert!((t - 0.082e-3).abs() < 0.003e-3, "t = {t:.6}");
+    }
+
+    #[test]
+    fn device_memory_accounting() {
+        let mut d = Device::new(0, A100_40G, Role::Decode);
+        d.weight_bytes = 10_000_000_000;
+        assert_eq!(d.mem_free(), 30_000_000_000);
+        assert!(d.can_fit_kv(30_000_000_000));
+        assert!(!d.can_fit_kv(30_000_000_001));
+        d.alloc_kv(1.0, 5_000_000_000);
+        assert_eq!(d.kv_bytes, 5_000_000_000);
+        d.free_kv(2.0, 5_000_000_000);
+        assert_eq!(d.kv_bytes, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn kv_double_free_panics_in_debug() {
+        let mut d = Device::new(0, A100_40G, Role::Decode);
+        d.free_kv(0.0, 1);
+    }
+
+    #[test]
+    fn utilization_tracking_time_weighted() {
+        let mut d = Device::new(0, A100_40G, Role::Prefill);
+        d.set_busy(0.0, true);
+        d.set_busy(3.0, false);
+        d.set_busy(4.0, false);
+        // busy 3s of 4s
+        assert!((d.compute_util.average(4.0) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pd_split_roles() {
+        let c = Cluster::pd_split(2, 3, A100_40G);
+        assert_eq!(c.devices.len(), 5);
+        assert_eq!(c.ids_by_role(Role::Prefill), vec![0, 1]);
+        assert_eq!(c.ids_by_role(Role::Decode), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn homogeneous_cluster_unified() {
+        let c = Cluster::homogeneous(3, A100_80G, Role::Unified);
+        assert_eq!(c.by_role(Role::Unified).count(), 3);
+        assert_eq!(c.by_role(Role::Prefill).count(), 0);
+    }
+
+    #[test]
+    fn mem_frac_in_unit_range() {
+        let mut d = Device::new(0, A100_40G, Role::Decode);
+        d.weight_bytes = 20_000_000_000;
+        assert!((d.mem_frac() - 0.5).abs() < 1e-9);
+    }
+}

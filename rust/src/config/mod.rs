@@ -1,0 +1,275 @@
+//! Typed experiment configuration: cluster shape, engine selection,
+//! workload parameters, sweep definitions. Loadable from JSON files and
+//! overridable from CLI flags — the config system behind `banaserve
+//! simulate/sweep/figure`.
+
+use crate::cluster::GpuSpec;
+use crate::model::{self, ModelSpec};
+use crate::perfmodel::Efficiency;
+use crate::util::args::Args;
+use crate::util::json::{self, Value};
+use crate::workload::{ArrivalProcess, LengthProfile, PrefixConfig, WorkloadConfig};
+
+/// Which serving system to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// HuggingFace-Transformers-like static batching (Fig 1 baseline).
+    HfStatic,
+    /// vLLM-like monolithic continuous batching + prefix-cache-aware router.
+    Vllm,
+    /// DistServe-like static PD disaggregation.
+    DistServe,
+    /// BanaServe: PD disaggregation + global KV store + dynamic migration.
+    BanaServe,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hft" | "hf" | "static" => Some(EngineKind::HfStatic),
+            "vllm" => Some(EngineKind::Vllm),
+            "distserve" | "dist" => Some(EngineKind::DistServe),
+            "banaserve" | "bana" => Some(EngineKind::BanaServe),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::HfStatic => "hft",
+            EngineKind::Vllm => "vllm",
+            EngineKind::DistServe => "distserve",
+            EngineKind::BanaServe => "banaserve",
+        }
+    }
+}
+
+/// BanaServe-specific knobs (Alg 1 / Alg 2 parameters).
+#[derive(Debug, Clone)]
+pub struct BanaConfig {
+    /// Load-imbalance threshold δ (on `U_d ∈ [0,2]`).
+    pub delta: f64,
+    /// Hysteresis: δ↑ triggers migration, δ↓ must be reached to re-trigger.
+    pub delta_down: f64,
+    /// Benefit/Cost gate ρ.
+    pub rho: f64,
+    /// Control cycle period (seconds).
+    pub control_period: f64,
+    /// Router load threshold δ_L (Alg 2).
+    pub delta_l: f64,
+    /// Enable layer-level migration.
+    pub layer_migration: bool,
+    /// Enable attention-level (KV head) migration.
+    pub attention_migration: bool,
+    /// Enable the Global KV Cache Store.
+    pub global_store: bool,
+}
+
+impl Default for BanaConfig {
+    fn default() -> Self {
+        BanaConfig {
+            delta: 0.35,
+            delta_down: 0.15,
+            rho: 1.0,
+            control_period: 2.0,
+            delta_l: 1.6,
+            layer_migration: true,
+            attention_migration: true,
+            global_store: true,
+        }
+    }
+}
+
+/// Complete description of one simulation run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub engine: EngineKind,
+    pub model: &'static ModelSpec,
+    pub gpu: GpuSpec,
+    /// Total devices (engines split them into pools as needed).
+    pub n_devices: usize,
+    /// Prefill pool size for PD-disaggregated engines.
+    pub n_prefill: usize,
+    pub eff: Efficiency,
+    pub workload: WorkloadConfig,
+    /// Warm-up seconds excluded from metrics (paper: 60 s).
+    pub warmup: f64,
+    /// Max tokens a monolithic/prefill instance computes per step.
+    pub max_batch_tokens: u64,
+    /// Max sequences in one decode batch.
+    pub max_batch_seqs: u64,
+    pub bana: BanaConfig,
+}
+
+impl ExperimentConfig {
+    /// The default 4-device testbed used across the figure benches.
+    pub fn default_for(engine: EngineKind, model_name: &str, rps: f64, seed: u64) -> Self {
+        let model = model::by_name(model_name).expect("unknown model");
+        ExperimentConfig {
+            engine,
+            model,
+            gpu: crate::cluster::A100_40G,
+            n_devices: 4,
+            n_prefill: 2,
+            eff: Efficiency::default(),
+            workload: WorkloadConfig::poisson(
+                LengthProfile::AlpacaShort,
+                rps,
+                120.0,
+                seed,
+            ),
+            warmup: 10.0,
+            max_batch_tokens: 8192,
+            max_batch_seqs: 16,
+            bana: BanaConfig::default(),
+        }
+    }
+
+    /// Apply CLI overrides (`--rps`, `--duration`, `--devices`, ...).
+    pub fn apply_args(&mut self, a: &Args) {
+        if let Some(e) = a.get("engine").and_then(EngineKind::parse) {
+            self.engine = e;
+        }
+        if let Some(m) = a.get("model").and_then(model::by_name) {
+            self.model = m;
+        }
+        if let Some(rps) = a.get("rps").and_then(|v| v.parse::<f64>().ok()) {
+            self.workload.arrivals = ArrivalProcess::Poisson { rps };
+        }
+        if let Some(d) = a.get("duration").and_then(|v| v.parse::<f64>().ok()) {
+            self.workload.duration = d;
+        }
+        if let Some(s) = a.get("seed").and_then(|v| v.parse::<u64>().ok()) {
+            self.workload.seed = s;
+        }
+        if let Some(n) = a.get("devices").and_then(|v| v.parse::<usize>().ok()) {
+            self.n_devices = n;
+        }
+        if let Some(n) = a.get("prefill").and_then(|v| v.parse::<usize>().ok()) {
+            self.n_prefill = n;
+        }
+        if a.str_or("profile", "") == "long" {
+            self.workload.profile = LengthProfile::LongBench;
+        }
+        if a.str_or("profile", "") == "short" {
+            self.workload.profile = LengthProfile::AlpacaShort;
+        }
+        if let Some(p) = a.get("share-prob").and_then(|v| v.parse::<f64>().ok()) {
+            self.workload.prefix.share_prob = p;
+        }
+        self.bana.layer_migration = a.bool_or("layer-migration", self.bana.layer_migration);
+        self.bana.attention_migration =
+            a.bool_or("attention-migration", self.bana.attention_migration);
+        self.bana.global_store = a.bool_or("global-store", self.bana.global_store);
+        if let Some(d) = a.get("delta").and_then(|v| v.parse::<f64>().ok()) {
+            self.bana.delta = d;
+        }
+        if let Some(r) = a.get("rho").and_then(|v| v.parse::<f64>().ok()) {
+            self.bana.rho = r;
+        }
+    }
+
+    /// Load overrides from a JSON config file.
+    pub fn apply_json(&mut self, text: &str) -> Result<(), String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        let obj = v.as_obj().ok_or("config must be a JSON object")?;
+        for (k, val) in obj.iter() {
+            match (k, val) {
+                ("engine", Value::Str(s)) => {
+                    self.engine = EngineKind::parse(s).ok_or(format!("bad engine {s}"))?;
+                }
+                ("model", Value::Str(s)) => {
+                    self.model = model::by_name(s).ok_or(format!("bad model {s}"))?;
+                }
+                ("rps", Value::Num(n)) => {
+                    self.workload.arrivals = ArrivalProcess::Poisson { rps: *n };
+                }
+                ("duration", Value::Num(n)) => self.workload.duration = *n,
+                ("seed", Value::Num(n)) => self.workload.seed = *n as u64,
+                ("devices", Value::Num(n)) => self.n_devices = *n as usize,
+                ("prefill", Value::Num(n)) => self.n_prefill = *n as usize,
+                ("warmup", Value::Num(n)) => self.warmup = *n,
+                ("share_prob", Value::Num(n)) => self.workload.prefix.share_prob = *n,
+                ("profile", Value::Str(s)) if s == "long" => {
+                    self.workload.profile = LengthProfile::LongBench;
+                }
+                ("profile", Value::Str(s)) if s == "short" => {
+                    self.workload.profile = LengthProfile::AlpacaShort;
+                }
+                ("delta", Value::Num(n)) => self.bana.delta = *n,
+                ("rho", Value::Num(n)) => self.bana.rho = *n,
+                ("global_store", Value::Bool(b)) => self.bana.global_store = *b,
+                ("layer_migration", Value::Bool(b)) => self.bana.layer_migration = *b,
+                ("attention_migration", Value::Bool(b)) => {
+                    self.bana.attention_migration = *b;
+                }
+                _ => return Err(format!("unknown config key '{k}'")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Disable prefix sharing (ablation).
+    pub fn without_sharing(mut self) -> Self {
+        self.workload.prefix = PrefixConfig::none();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parsing() {
+        assert_eq!(EngineKind::parse("vLLM"), Some(EngineKind::Vllm));
+        assert_eq!(EngineKind::parse("banaserve"), Some(EngineKind::BanaServe));
+        assert_eq!(EngineKind::parse("dist"), Some(EngineKind::DistServe));
+        assert_eq!(EngineKind::parse("hft"), Some(EngineKind::HfStatic));
+        assert_eq!(EngineKind::parse("orca"), None);
+    }
+
+    #[test]
+    fn default_config_is_consistent() {
+        let c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        assert!(c.n_prefill < c.n_devices);
+        assert_eq!(c.model.name, "llama-13b");
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        let a = Args::parse(
+            "--engine banaserve --model opt-13b --rps 12 --devices 8 --profile long --delta 0.5"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert_eq!(c.engine, EngineKind::BanaServe);
+        assert_eq!(c.model.name, "opt-13b");
+        assert_eq!(c.n_devices, 8);
+        assert_eq!(c.workload.profile, LengthProfile::LongBench);
+        assert_eq!(c.bana.delta, 0.5);
+        match c.workload.arrivals {
+            ArrivalProcess::Poisson { rps } => assert_eq!(rps, 12.0),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn json_overrides_and_unknown_key_rejected() {
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        c.apply_json(r#"{"engine":"distserve","rps":7,"global_store":false}"#)
+            .unwrap();
+        assert_eq!(c.engine, EngineKind::DistServe);
+        assert!(!c.bana.global_store);
+        assert!(c.apply_json(r#"{"bogus":1}"#).is_err());
+    }
+
+    #[test]
+    fn without_sharing_zeroes_share_prob() {
+        let c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1)
+            .without_sharing();
+        assert_eq!(c.workload.prefix.share_prob, 0.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! The real (non-simulated) serving path: a threaded coordinator that
+//! drives the PJRT runtime with continuous batching — the L3 of the
+//! three-layer stack actually executing the AOT-compiled JAX/Pallas model.
+//!
+//! Shape: one shared FCFS request queue; `n_workers` worker threads, each
+//! owning a PJRT runtime instance (clients are created in-thread — the xla
+//! wrapper types are not Send) and a fixed-slot decode batch. A worker
+//! continuously: admits requests into free slots (prefill via the b1 entry,
+//! KV written into the slot), then steps the whole batch with the decode
+//! entry, retiring finished slots and immediately refilling them. Pulling
+//! from the shared queue makes the dispatch work-conserving — the practical
+//! equivalent of Alg 2's least-loaded routing for in-process workers.
+//!
+//! `tokio` is absent from the offline registry; std threads + channels are
+//! used instead (DESIGN.md §4 dependency note).
+
+use crate::runtime::{argmax, EntryKind, KvCache, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::AtomicU64;
+use std::sync::{mpsc, Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+/// A request to the real serving path.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    /// Prompt token ids (must fit the prefill entry's fixed length).
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    /// Generated token ids (greedy).
+    pub tokens: Vec<i32>,
+    pub ttft: Duration,
+    pub e2e: Duration,
+    pub worker: usize,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: String,
+    pub variant: String,
+    pub n_workers: usize,
+    /// Decode batch size — must match an AOT decode entry (b4 by default).
+    pub batch: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".to_string(),
+            variant: "tiny".to_string(),
+            n_workers: 2,
+            batch: 4,
+        }
+    }
+}
+
+/// Aggregate serving stats.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub completed: usize,
+    pub total_generated: u64,
+    pub wall: Duration,
+    pub mean_ttft: Duration,
+    pub mean_e2e: Duration,
+    pub throughput_tok_s: f64,
+}
+
+/// One decode slot inside a worker.
+struct Slot {
+    req: Option<ServeRequest>,
+    cur_len: i32,
+    generated: Vec<i32>,
+    next_token: i32,
+    started: Instant,
+    first_token_at: Option<Instant>,
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Slot {
+            req: None,
+            cur_len: 0,
+            generated: Vec::new(),
+            next_token: 0,
+            started: Instant::now(),
+            first_token_at: None,
+        }
+    }
+}
+
+/// Serve a set of requests to completion across `cfg.n_workers` threads.
+/// Returns per-request responses plus aggregate stats.
+pub fn serve(cfg: &ServeConfig, requests: Vec<ServeRequest>) -> Result<(Vec<ServeResponse>, ServeStats)> {
+    let n_requests = requests.len();
+    let queue = Arc::new(Mutex::new(VecDeque::from(requests)));
+    let (tx, rx) = mpsc::channel::<Result<ServeResponse>>();
+    let inflight = Arc::new(AtomicU64::new(0));
+    // workers rendezvous here after compiling their executables so the
+    // reported wall time measures SERVING, not PJRT compilation
+    let ready = Arc::new(Barrier::new(cfg.n_workers + 1));
+
+    let mut handles = Vec::new();
+    for w in 0..cfg.n_workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        let cfg = cfg.clone();
+        let inflight = Arc::clone(&inflight);
+        let ready = Arc::clone(&ready);
+        handles.push(std::thread::spawn(move || {
+            if let Err(e) = worker_loop(w, &cfg, queue, tx.clone(), inflight, &ready) {
+                let _ = tx.send(Err(e));
+            }
+        }));
+    }
+    drop(tx);
+    ready.wait();
+    let t0 = Instant::now();
+
+    let mut responses = Vec::with_capacity(n_requests);
+    for r in rx {
+        responses.push(r?);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("worker panicked"))?;
+    }
+    let wall = t0.elapsed();
+
+    let completed = responses.len();
+    let total_generated: u64 = responses.iter().map(|r| r.tokens.len() as u64).sum();
+    let mean = |f: &dyn Fn(&ServeResponse) -> Duration| -> Duration {
+        if responses.is_empty() {
+            return Duration::ZERO;
+        }
+        responses.iter().map(f).sum::<Duration>() / completed as u32
+    };
+    let stats = ServeStats {
+        completed,
+        total_generated,
+        wall,
+        mean_ttft: mean(&|r| r.ttft),
+        mean_e2e: mean(&|r| r.e2e),
+        throughput_tok_s: total_generated as f64 / wall.as_secs_f64().max(1e-9),
+    };
+    Ok((responses, stats))
+}
+
+fn worker_loop(
+    worker: usize,
+    cfg: &ServeConfig,
+    queue: Arc<Mutex<VecDeque<ServeRequest>>>,
+    tx: mpsc::Sender<Result<ServeResponse>>,
+    _inflight: Arc<AtomicU64>,
+    ready: &Barrier,
+) -> Result<()> {
+    // PJRT client + executables are created in-thread (not Send).
+    let rt = Runtime::load(&cfg.artifacts_dir, &cfg.variant)
+        .context("loading runtime (run `make artifacts` first)")?;
+    let (vcfg, _) = rt.manifest.variant(&cfg.variant)?;
+    let vcfg = vcfg.clone();
+    let prefill1 = rt
+        .find_entry(EntryKind::Prefill, 1)
+        .ok_or_else(|| anyhow!("no b1 prefill entry"))?;
+    let decode = rt
+        .find_entry(EntryKind::Decode, cfg.batch)
+        .ok_or_else(|| anyhow!("no b{} decode entry", cfg.batch))?;
+    let prefill_seq = prefill1.meta.seq;
+
+    ready.wait(); // compiled — serving clock starts
+    let mut cache = KvCache::zeros(&vcfg, cfg.batch);
+    // device-resident cache literals: decode steps never round-trip the KV
+    // through host Vec<f32>s (EXPERIMENTS.md §Perf); the host mirror is
+    // refreshed only when a new request is admitted into a slot.
+    let mut kv_dev = rt.upload_cache(&cache)?;
+    let mut slots: Vec<Slot> = (0..cfg.batch).map(|_| Slot::empty()).collect();
+
+    loop {
+        // 1) admit requests into free slots (continuous batching)
+        let mut admitted = false;
+        for (si, slot) in slots.iter_mut().enumerate() {
+            if slot.req.is_some() {
+                continue;
+            }
+            let Some(req) = queue.lock().unwrap().pop_front() else {
+                continue;
+            };
+            anyhow::ensure!(
+                req.prompt.len() <= prefill_seq,
+                "prompt longer than the AOT prefill length {prefill_seq}"
+            );
+            anyhow::ensure!(
+                req.prompt.len() + req.max_new_tokens < vcfg.max_seq,
+                "prompt+output exceeds max_seq {}",
+                vcfg.max_seq
+            );
+            let started = Instant::now();
+            // pad the prompt to the entry's fixed length
+            let mut toks = req.prompt.clone();
+            toks.resize(prefill_seq, 0);
+            let (logits, kc, vc) = rt.prefill(prefill1, &toks)?;
+            let plen = req.prompt.len();
+            // logits row at the last REAL position
+            let row = &logits[(plen - 1) * vcfg.vocab..plen * vcfg.vocab];
+            let first = argmax(row) as i32;
+            if !admitted {
+                // refresh the host mirror once per admission round
+                rt.download_cache(&kv_dev, &mut cache)?;
+                admitted = true;
+            }
+            // prefill produced KV for the padded length; keep only plen
+            // (write_prefix expects [L,Hkv,S,D] with S = prefill_seq)
+            cache.write_prefix(si, &kc, &vc, prefill_seq);
+            *slot = Slot {
+                cur_len: plen as i32,
+                generated: vec![first],
+                next_token: first,
+                started,
+                first_token_at: Some(Instant::now()),
+                req: Some(req),
+            };
+        }
+        if admitted {
+            kv_dev = rt.upload_cache(&cache)?;
+        }
+
+        let active = slots.iter().filter(|s| s.req.is_some()).count();
+        if active == 0 {
+            if queue.lock().unwrap().is_empty() {
+                return Ok(()); // drained
+            }
+            continue;
+        }
+
+        // 2) one decode iteration over the whole batch (inactive slots run
+        // with cur_len snapshot; their output is ignored)
+        let tokens: Vec<i32> = slots.iter().map(|s| s.next_token).collect();
+        let lens: Vec<i32> = slots.iter().map(|s| s.cur_len).collect();
+        let logits = rt.decode_step_device(decode, &tokens, &lens, &mut kv_dev)?;
+
+        // 3) retire / advance slots
+        for (si, slot) in slots.iter_mut().enumerate() {
+            let Some(req) = slot.req.as_ref() else { continue };
+            slot.cur_len += 1;
+            let done = slot.generated.len() >= req.max_new_tokens
+                || (slot.cur_len as usize) + 1 >= vcfg.max_seq;
+            if done {
+                let req = slot.req.take().unwrap();
+                let resp = ServeResponse {
+                    id: req.id,
+                    tokens: std::mem::take(&mut slot.generated),
+                    ttft: slot.first_token_at.unwrap() - slot.started,
+                    e2e: slot.started.elapsed(),
+                    worker,
+                };
+                tx.send(Ok(resp)).map_err(|_| anyhow!("result channel closed"))?;
+                *slot = Slot::empty();
+            } else {
+                let row = &logits[si * vcfg.vocab..(si + 1) * vcfg.vocab];
+                let next = argmax(row) as i32;
+                slot.generated.push(next);
+                slot.next_token = next;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_lifecycle_defaults() {
+        let s = Slot::empty();
+        assert!(s.req.is_none());
+        assert_eq!(s.cur_len, 0);
+        assert!(s.generated.is_empty());
+    }
+
+    #[test]
+    fn config_defaults_are_consistent() {
+        let c = ServeConfig::default();
+        assert!(c.n_workers >= 1);
+        assert!(c.batch >= 1);
+        assert_eq!(c.variant, "tiny");
+    }
+    // End-to-end serving tests (require artifacts + PJRT) live in
+    // rust/tests/integration_coordinator.rs.
+}

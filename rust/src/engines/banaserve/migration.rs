@@ -1,0 +1,350 @@
+//! Adaptive Module Migration (paper Algorithm 1).
+//!
+//! Pure decision logic: the engine snapshots per-device loads each control
+//! cycle; this module classifies overloaded / underloaded devices (Eq 33),
+//! pairs them, chooses the migration granularity, applies the
+//! Benefit/Cost ≥ ρ gate (Eq 35), and emits actions for the engine to
+//! execute. Hysteresis is handled by the caller via distinct trigger /
+//! re-arm thresholds (δ↑, δ↓) plus a post-migration cooldown.
+
+/// Per-device load snapshot at a control cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceLoad {
+    pub idx: usize,
+    /// Normalized utilization U_d = C/Cmax + M/Mmax ∈ [0, 2] (Eq 32).
+    pub u: f64,
+    /// The memory component of `u` (to pick the granularity).
+    pub mem_frac: f64,
+    /// Fraction of the device's layers currently serving prefill.
+    pub share_prefill: f64,
+    /// Free HBM bytes (layer replicas must fit).
+    pub free_bytes: u64,
+    /// Busy fraction of the prefill role over the control window.
+    pub busy_prefill: f64,
+    /// Busy fraction of the decode role over the control window.
+    pub busy_decode: f64,
+}
+
+impl DeviceLoad {
+    /// The compute component of U_d.
+    pub fn compute_frac(&self) -> f64 {
+        (self.u - self.mem_frac).max(0.0)
+    }
+}
+
+/// A migration the engine should execute.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// Layer-level (Eqs 3-5): shift `delta_share` of device `to`'s layers
+    /// into the `to_prefill` role, instantiating the layer weights there.
+    /// Driven by a *compute* imbalance on `from`.
+    Layer {
+        from: usize,
+        to: usize,
+        delta_share: f64,
+        to_prefill: bool,
+    },
+    /// Attention-level (Eqs 6-11): move `kv_frac` of the KV on `from`'s
+    /// decode pool to `to` (head-partitioned offload; only KV moves).
+    /// Driven by a *memory* imbalance on `from`.
+    Attention {
+        from: usize,
+        to: usize,
+        kv_frac: f64,
+    },
+}
+
+/// Tunables (mirrors `config::BanaConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct Policy {
+    /// Trigger threshold δ on U gaps.
+    pub delta: f64,
+    /// Benefit/Cost gate ρ (Eq 35), with cost normalized by the control
+    /// period so both sides are dimensionless.
+    pub rho: f64,
+    /// Control period (seconds) for the cost normalization.
+    pub period: f64,
+    /// Share step of one layer-migration action (k layers / L).
+    pub layer_step: f64,
+    pub enable_layer: bool,
+    pub enable_attention: bool,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy {
+            delta: 0.35,
+            rho: 1.0,
+            period: 2.0,
+            layer_step: 0.25,
+            enable_layer: true,
+            enable_attention: true,
+        }
+    }
+}
+
+/// Eq 33: overload/underload classification.
+pub fn classify(loads: &[DeviceLoad], delta: f64) -> (Vec<usize>, Vec<usize>) {
+    if loads.is_empty() {
+        return (Vec::new(), Vec::new());
+    }
+    let min = loads.iter().map(|l| l.u).fold(f64::INFINITY, f64::min);
+    let max = loads.iter().map(|l| l.u).fold(f64::NEG_INFINITY, f64::max);
+    let over = loads
+        .iter()
+        .filter(|l| l.u - min > delta)
+        .map(|l| l.idx)
+        .collect();
+    let under = loads
+        .iter()
+        .filter(|l| max - l.u > delta)
+        .map(|l| l.idx)
+        .collect();
+    (over, under)
+}
+
+/// Estimated benefit of an action: the reduction in the pairwise U gap,
+/// assuming the moved share/KV carries its proportional load (Eq 35's
+/// Δ_before − Δ_after with a first-order projection).
+pub fn benefit(from: &DeviceLoad, to: &DeviceLoad, moved_u: f64) -> f64 {
+    let before = from.u - to.u;
+    let after = (from.u - moved_u) - (to.u + moved_u);
+    before - after // = 2 * moved_u
+}
+
+/// One control cycle (Alg 1 lines 9-19): greedily pair the most overloaded
+/// device with the most underloaded and emit gated actions. `cost_layer` /
+/// `cost_attention` give the wall-clock cost (seconds) of one action of
+/// each kind on this cluster (from perfmodel).
+pub fn plan(
+    loads: &[DeviceLoad],
+    pol: &Policy,
+    cost_layer: f64,
+    cost_attention: f64,
+) -> Vec<Action> {
+    let mut loads: Vec<DeviceLoad> = loads.to_vec();
+    let mut actions = Vec::new();
+    // bounded iterations: at most one action per device pair per cycle
+    for _ in 0..loads.len() {
+        let (over, under) = classify(&loads, pol.delta);
+        if over.is_empty() || under.is_empty() {
+            break;
+        }
+        // most overloaded / most underloaded
+        let o_idx = *over
+            .iter()
+            .max_by(|&&a, &&b| {
+                find(&loads, a).u.partial_cmp(&find(&loads, b).u).unwrap()
+            })
+            .unwrap();
+        let u_idx = *under
+            .iter()
+            .min_by(|&&a, &&b| {
+                find(&loads, a).u.partial_cmp(&find(&loads, b).u).unwrap()
+            })
+            .unwrap();
+        let from = find(&loads, o_idx);
+        let to = find(&loads, u_idx);
+        let gap = from.u - to.u;
+        if gap < pol.delta {
+            break;
+        }
+
+        // Granularity choice: memory-driven overload -> attention-level
+        // (move KV only); compute-driven -> layer-level (move capacity).
+        let mem_driven = from.mem_frac > from.compute_frac();
+        let mut chosen: Option<(Action, f64, f64)> = None; // (action, moved_u, cost)
+
+        if mem_driven && pol.enable_attention {
+            // move enough KV to close half the gap (all of it memory)
+            let kv_frac = (gap / 2.0 / from.mem_frac.max(1e-9)).min(0.5);
+            let moved_u = from.mem_frac * kv_frac;
+            chosen = Some((
+                Action::Attention {
+                    from: o_idx,
+                    to: u_idx,
+                    kv_frac,
+                },
+                moved_u,
+                cost_attention,
+            ));
+        } else if pol.enable_layer {
+            // shift capacity toward whichever ROLE is actually hot on the
+            // overloaded device (its busy split, not its share)
+            let to_prefill = from.busy_prefill >= from.busy_decode;
+            let delta_share = pol.layer_step.min((gap / 2.0).max(0.05));
+            let moved_u = from.compute_frac() * delta_share;
+            chosen = Some((
+                Action::Layer {
+                    from: o_idx,
+                    to: u_idx,
+                    delta_share,
+                    to_prefill,
+                },
+                moved_u,
+                cost_layer,
+            ));
+        } else if pol.enable_attention {
+            // layer disabled: fall back to attention-level if any memory load
+            let kv_frac = (gap / 2.0 / from.mem_frac.max(1e-9)).min(0.5);
+            let moved_u = from.mem_frac * kv_frac;
+            if moved_u > 0.0 {
+                chosen = Some((
+                    Action::Attention {
+                        from: o_idx,
+                        to: u_idx,
+                        kv_frac,
+                    },
+                    moved_u,
+                    cost_attention,
+                ));
+            }
+        }
+
+        let Some((action, moved_u, cost)) = chosen else { break };
+        // Eq 35 gate: Benefit / (Cost / period) >= rho
+        let b = benefit(&from, &to, moved_u);
+        let normalized_cost = (cost / pol.period).max(1e-9);
+        if b / normalized_cost < pol.rho {
+            break;
+        }
+        actions.push(action);
+        // project the move so the loop can emit further pairs this cycle
+        set_u(&mut loads, o_idx, from.u - moved_u);
+        set_u(&mut loads, u_idx, to.u + moved_u);
+    }
+    actions
+}
+
+fn find(loads: &[DeviceLoad], idx: usize) -> DeviceLoad {
+    *loads.iter().find(|l| l.idx == idx).unwrap()
+}
+
+fn set_u(loads: &mut [DeviceLoad], idx: usize, u: f64) {
+    for l in loads.iter_mut() {
+        if l.idx == idx {
+            l.u = u.max(0.0);
+            l.mem_frac = l.mem_frac.min(l.u);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dl(idx: usize, u: f64, mem: f64, share: f64) -> DeviceLoad {
+        // busy split follows the share by default (pure-role devices)
+        let busy = (u - mem).max(0.0);
+        DeviceLoad {
+            idx,
+            u,
+            mem_frac: mem,
+            share_prefill: share,
+            free_bytes: 10_000_000_000,
+            busy_prefill: busy * share,
+            busy_decode: busy * (1.0 - share),
+        }
+    }
+
+    #[test]
+    fn classify_eq33() {
+        let loads = vec![dl(0, 1.8, 0.5, 1.0), dl(1, 0.4, 0.2, 0.0), dl(2, 1.0, 0.4, 0.0)];
+        let (over, under) = classify(&loads, 0.5);
+        assert_eq!(over, vec![0, 2]); // u - 0.4 > 0.5
+        assert_eq!(under, vec![1, 2]); // 1.8 - u > 0.5
+    }
+
+    #[test]
+    fn balanced_cluster_emits_nothing() {
+        let loads = vec![dl(0, 1.0, 0.5, 1.0), dl(1, 0.95, 0.5, 0.0)];
+        let acts = plan(&loads, &Policy::default(), 0.1, 0.001);
+        assert!(acts.is_empty());
+    }
+
+    #[test]
+    fn compute_hot_prefill_triggers_layer_migration() {
+        // device 0: compute-saturated prefill; device 1: idle decode
+        let loads = vec![dl(0, 1.4, 0.35, 1.0), dl(1, 0.3, 0.25, 0.0)];
+        let acts = plan(&loads, &Policy::default(), 0.2, 0.001);
+        assert!(!acts.is_empty());
+        match acts[0] {
+            Action::Layer {
+                from,
+                to,
+                to_prefill,
+                delta_share,
+            } => {
+                assert_eq!(from, 0);
+                assert_eq!(to, 1);
+                assert!(to_prefill, "hot prefill -> grant target prefill share");
+                assert!(delta_share > 0.0 && delta_share <= 0.6);
+            }
+            other => panic!("expected layer migration, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn memory_hot_decode_triggers_attention_migration() {
+        // device 0: memory-saturated decode; device 1: free
+        let loads = vec![dl(0, 1.5, 1.0, 0.0), dl(1, 0.4, 0.2, 0.0)];
+        let acts = plan(&loads, &Policy::default(), 0.2, 0.001);
+        assert!(!acts.is_empty());
+        match acts[0] {
+            Action::Attention { from, to, kv_frac } => {
+                assert_eq!(from, 0);
+                assert_eq!(to, 1);
+                assert!(kv_frac > 0.0 && kv_frac <= 0.5);
+            }
+            other => panic!("expected attention migration, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rho_gate_blocks_costly_migrations() {
+        let loads = vec![dl(0, 1.4, 0.3, 1.0), dl(1, 0.3, 0.2, 0.0)];
+        let mut pol = Policy::default();
+        pol.rho = 1.0;
+        // layer cost = 100x the control period -> normalized cost huge
+        let acts = plan(&loads, &pol, 200.0, 0.001);
+        assert!(acts.is_empty(), "gate must reject: {acts:?}");
+    }
+
+    #[test]
+    fn disabled_granularities_respected() {
+        let loads = vec![dl(0, 1.5, 1.0, 0.0), dl(1, 0.3, 0.2, 0.0)];
+        let mut pol = Policy::default();
+        pol.enable_attention = false;
+        let acts = plan(&loads, &pol, 0.1, 0.001);
+        // memory-driven but attention disabled -> layer fallback allowed
+        assert!(acts.iter().all(|a| matches!(a, Action::Layer { .. })));
+
+        let mut pol2 = Policy::default();
+        pol2.enable_layer = false;
+        pol2.enable_attention = false;
+        let acts2 = plan(&loads, &pol2, 0.1, 0.001);
+        assert!(acts2.is_empty());
+    }
+
+    #[test]
+    fn plan_terminates_and_converges() {
+        // strongly imbalanced 4-device cluster: plan must emit a bounded
+        // number of actions and projected loads must tighten.
+        let loads = vec![
+            dl(0, 1.9, 0.9, 0.0),
+            dl(1, 1.7, 0.4, 1.0),
+            dl(2, 0.2, 0.1, 0.0),
+            dl(3, 0.1, 0.1, 0.0),
+        ];
+        let acts = plan(&loads, &Policy::default(), 0.05, 0.001);
+        assert!(!acts.is_empty());
+        assert!(acts.len() <= loads.len(), "bounded per cycle: {acts:?}");
+    }
+
+    #[test]
+    fn benefit_is_twice_moved_u() {
+        let a = dl(0, 1.5, 0.5, 1.0);
+        let b = dl(1, 0.5, 0.2, 0.0);
+        assert!((benefit(&a, &b, 0.2) - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,1171 @@
+//! BanaServe (paper §4): PD disaggregation with a Global KV Cache Store,
+//! load-aware request scheduling (Alg 2), and dynamic module migration
+//! (Alg 1) at layer and attention granularity.
+//!
+//! Topology model: every device owns *two* logical instances — a prefill
+//! worker and a decode worker — with capacity shares `s` and `1-s`
+//! (`s = share_prefill`). The static starting point is a DistServe split
+//! (`s = 1` on prefill devices, `s = 0` on decode devices); layer-level
+//! migration moves share between roles at `k/L` granularity, which is the
+//! simulator-level effect of relocating k transformer layers' weights
+//! (DESIGN.md §2). Attention-level migration relocates KV bytes between
+//! decode workers and charges the Eq 10 partial-softmax exchange as a
+//! per-step overhead on both ends while remote heads are live.
+
+pub mod migration;
+pub mod scheduler;
+
+use super::common::{self, tags, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use crate::cluster::{Cluster, Device, Link};
+use crate::config::{BanaConfig, ExperimentConfig};
+use crate::kvcache::{GlobalKvStore, StoreConfig};
+use crate::metrics::Collector;
+use crate::perfmodel::{self, Efficiency};
+use crate::model::ModelSpec;
+use crate::sim::{Engine, EventQueue, Timer};
+use crate::workload::Request;
+use std::collections::VecDeque;
+
+/// Orchestrator counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BanaStats {
+    pub layer_migrations: u64,
+    pub attention_migrations: u64,
+    pub control_cycles: u64,
+    pub migration_seconds: f64,
+}
+
+/// Per-device migration bookkeeping.
+#[derive(Debug, Clone, Copy, Default)]
+struct MigState {
+    /// Pending share delta applied at MIG_DONE (layer migration in flight).
+    pending_share: f64,
+    pending_to_prefill: bool,
+    in_flight: bool,
+}
+
+/// The BanaServe engine.
+pub struct BanaEngine {
+    spec: &'static ModelSpec,
+    eff: Efficiency,
+    limits: BatchLimits,
+    link: Link,
+    bana: BanaConfig,
+    pub devices: Vec<Device>,
+    /// Prefill-role logical instance per device.
+    pub pinsts: Vec<InstanceSim>,
+    /// Decode-role logical instance per device.
+    pub dinsts: Vec<InstanceSim>,
+    /// share_prefill per device (`pinsts[i].share` mirrors this).
+    pub share_prefill: Vec<f64>,
+    mig: Vec<MigState>,
+    store: GlobalKvStore,
+    use_store: bool,
+    /// Sequences whose prefill finished, KV staged off-GPU (Global Store /
+    /// host), awaiting decode admission. Global — any decode-capable device
+    /// can pick them up, which is exactly what breaks the cyclic-hold
+    /// deadlock of per-device push queues (Fig 5's store-mediated handoff).
+    pending_decode: VecDeque<u64>,
+    seqs: Vec<Option<Seq>>,
+    col: Collector,
+    inflight: u64,
+    pub kv_transfer_bytes: u64,
+    pub preemptions: u64,
+    pub stats: BanaStats,
+    pub routed_counts: Vec<u64>,
+    /// busy_wall snapshots at the last control cycle (prefill, decode).
+    last_busy: Vec<(f64, f64)>,
+    last_cycle_at: f64,
+    cooldown_until: f64,
+    /// Set when a migration ran; re-armed once the gap falls below δ↓.
+    hysteresis_latched: bool,
+    /// Rotates tie-breaks among equally-loaded prefill candidates.
+    route_rr: usize,
+}
+
+impl BanaEngine {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        assert!(cfg.n_prefill > 0 && cfg.n_prefill < cfg.n_devices);
+        let n = cfg.n_devices;
+        let cluster = Cluster::pd_split(cfg.n_prefill, n - cfg.n_prefill, cfg.gpu.clone());
+        let mut devices = cluster.devices;
+        for d in devices.iter_mut() {
+            d.weight_bytes = cfg.model.weight_bytes();
+        }
+        let share_prefill: Vec<f64> = (0..n)
+            .map(|i| if i < cfg.n_prefill { 1.0 } else { 0.0 })
+            .collect();
+        let pinsts = (0..n).map(|i| InstanceSim::new(i, share_prefill[i])).collect();
+        let dinsts = (0..n)
+            .map(|i| InstanceSim::new(i, 1.0 - share_prefill[i]))
+            .collect();
+        let mut col = Collector::new();
+        col.window_start = cfg.warmup;
+        BanaEngine {
+            spec: cfg.model,
+            eff: cfg.eff,
+            limits: BatchLimits {
+                max_batch_tokens: cfg.max_batch_tokens,
+                max_batch_seqs: cfg.max_batch_seqs,
+            },
+            link: cluster.gpu_link,
+            bana: cfg.bana.clone(),
+            devices,
+            pinsts,
+            dinsts,
+            share_prefill,
+            mig: vec![MigState::default(); n],
+            store: GlobalKvStore::new(StoreConfig::default()),
+            use_store: cfg.bana.global_store,
+            pending_decode: VecDeque::new(),
+            seqs: Vec::new(),
+            col,
+            inflight: 0,
+            kv_transfer_bytes: 0,
+            preemptions: 0,
+            stats: BanaStats::default(),
+            routed_counts: vec![0; n],
+            last_busy: vec![(0.0, 0.0); n],
+            last_cycle_at: 0.0,
+            cooldown_until: 0.0,
+            hysteresis_latched: false,
+            route_rr: 0,
+        }
+    }
+
+    pub fn store_hit_rate(&self) -> f64 {
+        self.store.hit_rate()
+    }
+
+    /// Diagnostics: sequences staged and awaiting decode admission.
+    pub fn pending_decode_len(&self) -> usize {
+        self.pending_decode.len()
+    }
+
+    /// Instantaneous U_d (Eq 32): running-step compute fraction scaled by
+    /// the role shares, plus the memory fraction.
+    fn u_now(&self, dev: usize) -> f64 {
+        let c = |inst: &InstanceSim| {
+            inst.step
+                .as_ref()
+                .map(|s| s.st.compute_frac() * inst.share)
+                .unwrap_or(0.0)
+        };
+        (c(&self.pinsts[dev]) + c(&self.dinsts[dev])).min(1.0)
+            + self.devices[dev].mem_frac()
+    }
+
+    /// Windowed U_d used by the control cycle: busy fraction over the last
+    /// control period plus the current memory fraction.
+    fn u_windowed(&self, dev: usize, now: f64) -> f64 {
+        let period = (now - self.last_cycle_at).max(1e-9);
+        let (bp0, bd0) = self.last_busy[dev];
+        let bp = self.pinsts[dev].busy_wall - bp0;
+        let bd = self.dinsts[dev].busy_wall - bd0;
+        ((bp + bd) / period).min(1.0) + self.devices[dev].mem_frac()
+    }
+
+    // --- Alg 2: load-aware request scheduling -----------------------------
+
+    fn route_prefill(&self, now: f64) -> Option<usize> {
+        let loads: Vec<scheduler::InstanceLoad> = (0..self.devices.len())
+            .filter(|&i| {
+                self.share_prefill[i] > 0.0 && now >= self.pinsts[i].frozen_until
+            })
+            .map(|i| scheduler::InstanceLoad {
+                idx: i,
+                u: self.u_now(i),
+                queue_len: self.pinsts[i].queue_len(),
+                pending: 0.0,
+            })
+            .collect();
+        scheduler::pick_rotating(&loads, self.bana.delta_l, self.route_rr)
+            .map(|pos| loads[pos].idx)
+    }
+
+    fn route_prefill_mut(&mut self, now: f64) -> Option<usize> {
+        let t = self.route_prefill(now);
+        self.route_rr = self.route_rr.wrapping_add(1);
+        t
+    }
+
+    // --- step machinery (mirrors distserve with shares + store) -----------
+
+    fn maybe_start_prefill(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        if self.share_prefill[i] <= 0.0
+            || self.pinsts[i].is_busy()
+            || now < self.pinsts[i].frozen_until
+        {
+            return;
+        }
+        let (ids, items) = common::plan_prefill(
+            &mut self.pinsts[i],
+            &self.seqs,
+            &self.devices[i],
+            self.spec,
+            &self.limits,
+        );
+        if ids.is_empty() {
+            return;
+        }
+        let mut stall: f64 = 0.0;
+        for &sid in &ids {
+            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            seq.phase = SeqPhase::Prefilling;
+            if seq.prefill_start < 0.0 {
+                seq.prefill_start = now;
+            }
+            stall = stall.max(seq.store_stall);
+            let kv = common::kv_bytes(self.spec, seq.req.prompt_len + 1);
+            seq.kv_on_device = kv;
+            self.devices[i].alloc_kv(now, kv);
+        }
+        let st = perfmodel::prefill_step(
+            self.spec,
+            &self.devices[i].spec,
+            &self.eff,
+            &items,
+            self.pinsts[i].share,
+        );
+        common::mark_step_start(&mut self.devices[i], &mut self.pinsts[i], now, &st);
+        self.pinsts[i].step = Some(StepInfo {
+            kind: StepKind::Prefill,
+            seqs: ids,
+            st,
+            overhead: stall,
+        });
+        q.push_after(st.time + stall, Timer::with(tags::STEP_DONE, (i * 2) as u64, 0));
+    }
+
+    fn maybe_start_decode(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        if self.dinsts[i].is_busy() || now < self.dinsts[i].frozen_until {
+            return;
+        }
+        if self.dinsts[i].running.is_empty() {
+            return;
+        }
+        // a device converted fully to prefill still DRAINS its running
+        // decode sequences at a reduced share (no new admissions, see
+        // route_decode) — conversion must never strand work
+        self.dinsts[i].share = (1.0 - self.share_prefill[i]).max(0.25);
+        loop {
+            let mut need = 0u64;
+            for &sid in &self.dinsts[i].running {
+                let s = self.seqs[sid as usize].as_ref().unwrap();
+                need += common::kv_bytes(self.spec, s.ctx + 1) - s.kv_on_device;
+            }
+            if need <= self.devices[i].mem_free() {
+                break;
+            }
+            // paper §4.1: under memory pressure, attention-level KV
+            // offloading to a cold device comes BEFORE preempt-recompute
+            let victim = *self.dinsts[i].running.last().unwrap();
+            if self.bana.attention_migration && self.offload_seq(i, victim, q) {
+                if self.dinsts[i].running.is_empty() {
+                    return;
+                }
+                continue;
+            }
+            self.preempt_to_prefill(i, victim, q);
+            if self.dinsts[i].running.is_empty() {
+                return;
+            }
+        }
+        let (ids, st) = common::plan_decode(
+            &self.dinsts[i],
+            &self.seqs,
+            self.spec,
+            &self.devices[i].spec,
+            &self.eff,
+            &self.limits,
+        );
+        common::mark_step_start(&mut self.devices[i], &mut self.dinsts[i], now, &st);
+        let overhead = self.dinsts[i].decode_overhead;
+        self.dinsts[i].step = Some(StepInfo {
+            kind: StepKind::Decode,
+            seqs: ids,
+            st,
+            overhead,
+        });
+        q.push_after(
+            st.time + overhead,
+            Timer::with(tags::STEP_DONE, (i * 2 + 1) as u64, 0),
+        );
+    }
+
+    /// Admit staged sequences to decode-capable devices (FCFS). The fetch
+    /// from the Global Store is layer-wise overlapped with decode compute
+    /// (Fig 6), so admission charges no extra latency here; the staging
+    /// cost was paid before the sequence became eligible.
+    fn try_admit_global(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        let mut woke: Vec<usize> = Vec::new();
+        // mostly-FCFS with bounded skip-ahead: a huge-KV head must not
+        // starve admissions that fit behind it (cf. vLLM which has no
+        // cross-device queue at all)
+        const SKIP_AHEAD: usize = 8;
+        let mut idx = 0usize;
+        while idx < self.pending_decode.len().min(SKIP_AHEAD) {
+            let sid = self.pending_decode[idx];
+            let Some(seq_ref) = self.seqs[sid as usize].as_ref() else {
+                self.pending_decode.remove(idx);
+                continue;
+            };
+            if !seq_ref.staged {
+                idx += 1;
+                continue;
+            }
+            let kv = common::kv_bytes(self.spec, seq_ref.ctx);
+            let Some(di) = (0..self.devices.len())
+                .filter(|&i| {
+                    self.share_prefill[i] < 1.0 && self.devices[i].can_fit_kv(kv)
+                })
+                .min_by(|&a, &b| {
+                    // load per unit of decode capacity, with a mild
+                    // consolidation bonus: joining an existing batch on a
+                    // dedicated device amortizes the per-step weight read
+                    let score = |i: usize| {
+                        let cap = (1.0 - self.share_prefill[i]).max(1e-9);
+                        (self.dinsts[i].running.len() as f64 + 1.0) / cap
+                    };
+                    score(a).partial_cmp(&score(b)).unwrap()
+                })
+            else {
+                idx += 1; // this one doesn't fit anywhere yet; try the next
+                continue;
+            };
+            self.pending_decode.remove(idx);
+            self.devices[di].alloc_kv(now, kv);
+            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            seq.kv_on_device = kv;
+            seq.instance = di;
+            seq.phase = SeqPhase::Decoding;
+            self.dinsts[di].running.push(sid);
+            if !woke.contains(&di) {
+                woke.push(di);
+            }
+        }
+        for di in woke {
+            self.maybe_start_decode(di, q);
+        }
+    }
+
+    fn preempt_to_prefill(&mut self, i: usize, sid: u64, q: &mut EventQueue) {
+        let pos = self.dinsts[i].running.iter().position(|&x| x == sid).unwrap();
+        self.dinsts[i].running.remove(pos);
+        {
+            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            self.devices[i].free_kv(q.now(), seq.kv_on_device);
+            seq.kv_on_device = 0;
+            seq.ctx = 0;
+            seq.generated = 0;
+            seq.phase = SeqPhase::Waiting;
+            seq.preemptions += 1;
+            // the store may still hold the prompt's prefix
+            seq.cached = if self.use_store {
+                self.store
+                    .peek(&seq.req.cache_tokens)
+                    .min(seq.req.prompt_len.saturating_sub(1))
+            } else {
+                0
+            };
+        }
+        self.preemptions += 1;
+        let now = q.now();
+        if let Some(pi) = self.route_prefill(now) {
+            self.seqs[sid as usize].as_mut().unwrap().instance = pi;
+            self.pinsts[pi].waiting.push_front(sid);
+            self.maybe_start_prefill(pi, q);
+        } else {
+            // no prefill-capable device this instant: park at device 0
+            self.seqs[sid as usize].as_mut().unwrap().instance = 0;
+            self.pinsts[0].waiting.push_front(sid);
+        }
+    }
+
+    /// Attention-level KV offload of one sequence from device `i` to the
+    /// decode-capable device with the most free memory. Returns false when
+    /// no target can take it. The Eq 10 exchange cost is charged as decode
+    /// overhead on the receiver; the transfer itself (Eq 11) briefly
+    /// freezes both ends.
+    fn offload_seq(&mut self, i: usize, sid: u64, q: &mut EventQueue) -> bool {
+        let now = q.now();
+        let kv = self.seqs[sid as usize].as_ref().unwrap().kv_on_device;
+        let Some(to) = (0..self.devices.len())
+            .filter(|&t| {
+                t != i && self.share_prefill[t] < 1.0 && self.devices[t].can_fit_kv(kv)
+            })
+            .max_by_key(|&t| self.devices[t].mem_free())
+        else {
+            return false;
+        };
+        let pos = self.dinsts[i].running.iter().position(|&x| x == sid).unwrap();
+        self.dinsts[i].running.remove(pos);
+        self.devices[i].free_kv(now, kv);
+        self.devices[to].alloc_kv(now, kv);
+        {
+            let s = self.seqs[sid as usize].as_mut().unwrap();
+            s.instance = to;
+        }
+        self.dinsts[to].running.push(sid);
+        let t_mig = perfmodel::attention_migration_time(kv, &self.link);
+        self.kv_transfer_bytes += kv;
+        self.dinsts[to].frozen_until = self.dinsts[to].frozen_until.max(now + t_mig);
+        self.dinsts[to].decode_overhead = 2.0 * self.link.latency;
+        self.stats.attention_migrations += 1;
+        self.stats.migration_seconds += t_mig;
+        q.push_after(t_mig, Timer::with(tags::MIG_DONE, to as u64, 1));
+        true
+    }
+
+    fn finish(&mut self, sid: u64, dev: usize, now: f64) {
+        let seq = self.seqs[sid as usize].as_mut().unwrap();
+        seq.phase = SeqPhase::Finished;
+        let rec = seq.record(now);
+        let kv = seq.kv_on_device;
+        seq.kv_on_device = 0;
+        self.devices[dev].free_kv(now, kv);
+        self.col.finish(rec);
+        self.inflight -= 1;
+        self.seqs[sid as usize] = None;
+    }
+
+    fn prefill_done(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        let step = self.pinsts[i].step.take().expect("prefill step");
+        common::mark_step_end(
+            &mut self.devices[i],
+            &mut self.pinsts[i],
+            now,
+            step.st.time + step.overhead,
+            &step.st,
+        );
+        for sid in step.seqs {
+            let (cache_tokens, done) = {
+                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                seq.ctx = seq.req.prompt_len + 1;
+                seq.generated = 1;
+                seq.first_token = now;
+                seq.instance = i;
+                (seq.req.cache_tokens.clone(), seq.is_done())
+            };
+            if self.use_store {
+                // write the fresh prefix KV back (layer-wise overlapped;
+                // write path is off the critical path — Fig 5/6)
+                self.store.insert(&cache_tokens);
+            }
+            if done {
+                self.finish(sid, i, now);
+                continue;
+            }
+            // stage the KV off-GPU: write to the Global Store (layer-wise
+            // overlapped -> latency only) or direct host push when the
+            // store is disabled (full transfer time). The prefill device's
+            // memory frees IMMEDIATELY — decode fetches when it has room.
+            let kv = {
+                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                seq.phase = SeqPhase::Transferring;
+                let kv = seq.kv_on_device;
+                seq.kv_on_device = 0;
+                kv
+            };
+            self.devices[i].free_kv(now, kv);
+            self.kv_transfer_bytes += kv;
+            let t_stage = if self.use_store {
+                self.link.latency
+            } else {
+                crate::cluster::NET_200GBPS.transfer_time(kv)
+            };
+            self.pending_decode.push_back(sid);
+            q.push_after(t_stage, Timer::with(tags::KV_ARRIVE, 0, sid));
+        }
+        self.maybe_start_prefill(i, q);
+    }
+
+    fn decode_done(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        let step = self.dinsts[i].step.take().expect("decode step");
+        common::mark_step_end(
+            &mut self.devices[i],
+            &mut self.dinsts[i],
+            now,
+            step.st.time + step.overhead,
+            &step.st,
+        );
+        let mut finished = Vec::new();
+        for &sid in &step.seqs {
+            let Some(seq) = self.seqs[sid as usize].as_mut() else { continue };
+            if seq.phase != SeqPhase::Decoding || seq.instance != i {
+                continue; // migrated away mid-step
+            }
+            seq.generated += 1;
+            seq.ctx += 1;
+            let new_kv = common::kv_bytes(self.spec, seq.ctx);
+            if new_kv > seq.kv_on_device {
+                let delta = new_kv - seq.kv_on_device;
+                seq.kv_on_device = new_kv;
+                self.devices[i].alloc_kv(now, delta);
+            }
+            if seq.is_done() {
+                finished.push(sid);
+            }
+        }
+        for sid in finished {
+            if let Some(p) = self.dinsts[i].running.iter().position(|&x| x == sid) {
+                self.dinsts[i].running.remove(p);
+            }
+            self.finish(sid, i, now);
+        }
+        self.try_admit_global(q);
+        self.maybe_start_decode(i, q);
+    }
+
+    /// Pool-level role rebalance: aim the cluster's prefill/decode share
+    /// split at the *demand ratio* — outstanding prefill work vs outstanding
+    /// decode work, each weighted by its per-token cost — and move one layer
+    /// step toward the target per cycle. Demand-proportional targeting is
+    /// stable (no reactive flip-flopping) and is the §4.1 "dynamic resource
+    /// allocation" objective under saturation; it only engages when some
+    /// role is actually saturated.
+    fn pool_rebalance(&self, loads: &[migration::DeviceLoad]) -> Option<migration::Action> {
+        if !self.bana.layer_migration {
+            return None;
+        }
+        let n = self.devices.len() as f64;
+        let cap_p: f64 = self.share_prefill.iter().sum();
+        let cap_d: f64 = n - cap_p;
+        if cap_p <= 0.0 || cap_d <= 0.0 {
+            return None;
+        }
+        let busy_p: f64 = loads.iter().map(|l| l.busy_prefill).sum();
+        let busy_d: f64 = loads.iter().map(|l| l.busy_decode).sum();
+        let u_p = busy_p / cap_p;
+        let u_d = busy_d / cap_d;
+        if u_p.max(u_d) < 0.9 {
+            return None; // nothing saturated; leave the split alone
+        }
+
+        // outstanding work per role, in device-seconds, priced at the
+        // *observed* operating point (a long-context decode batch is memory
+        // limited to a couple of sequences — pricing it at the batch cap
+        // would starve decode of capacity by ~8x)
+        let mut run_count: u64 = 0;
+        let mut run_ctx: u64 = 0;
+        for inst in &self.dinsts {
+            for &sid in &inst.running {
+                if let Some(s) = self.seqs[sid as usize].as_ref() {
+                    run_count += 1;
+                    run_ctx += s.ctx;
+                }
+            }
+        }
+        let mut wait_count: u64 = 0;
+        let mut wait_prompt: u64 = 0;
+        for inst in &self.pinsts {
+            for &sid in &inst.waiting {
+                if let Some(s) = self.seqs[sid as usize].as_ref() {
+                    wait_count += 1;
+                    wait_prompt += s.req.prompt_len;
+                }
+            }
+        }
+        let avg_prompt = if wait_count > 0 { wait_prompt / wait_count } else { 1000 };
+        let t_prefill_tok = {
+            let st = perfmodel::prefill_step(
+                self.spec,
+                &self.devices[0].spec,
+                &self.eff,
+                &[perfmodel::PrefillItem { prompt: avg_prompt.max(1), cached: 0 }],
+                1.0,
+            );
+            st.time / avg_prompt.max(1) as f64
+        };
+        let avg_ctx = if run_count > 0 { run_ctx / run_count } else { 1000 };
+        let avg_batch = ((run_count as f64 / cap_d).ceil() as u64)
+            .clamp(1, self.limits.max_batch_seqs);
+        let t_decode_tok = {
+            let st = perfmodel::decode_step(
+                self.spec,
+                &self.devices[0].spec,
+                &self.eff,
+                avg_batch,
+                avg_batch * avg_ctx,
+                1.0,
+            );
+            st.time / avg_batch as f64
+        };
+        let mut w_p = 0.0;
+        for inst in &self.pinsts {
+            for &sid in &inst.waiting {
+                if let Some(s) = self.seqs[sid as usize].as_ref() {
+                    w_p += (s.req.prompt_len.saturating_sub(s.cached)) as f64
+                        * t_prefill_tok;
+                }
+            }
+        }
+        let mut w_d = 0.0;
+        let count_d = |sid: u64, w_d: &mut f64| {
+            if let Some(s) = self.seqs[sid as usize].as_ref() {
+                *w_d += (s.req.output_len.saturating_sub(s.generated)) as f64
+                    * t_decode_tok;
+            }
+        };
+        for inst in &self.dinsts {
+            for &sid in &inst.running {
+                count_d(sid, &mut w_d);
+            }
+        }
+        for &sid in &self.pending_decode {
+            count_d(sid, &mut w_d);
+        }
+
+        let total = w_p + w_d;
+        if total <= 0.0 {
+            return None;
+        }
+        let target_p = (n * w_p / total).clamp(0.5, n - 0.5);
+        let step = 0.25;
+        // deadband of two steps: demand estimates are noisy and a share
+        // sliver costs real efficiency (weight-read amortization), so only
+        // chase the target when clearly off
+        if (target_p - cap_p).abs() < 2.0 * step {
+            return None;
+        }
+        let to_prefill = target_p > cap_p;
+        let to = if to_prefill {
+            (0..self.devices.len())
+                .filter(|&i| self.share_prefill[i] < 1.0 && !self.mig[i].in_flight)
+                .min_by(|&a, &b| {
+                    loads[a].busy_decode.partial_cmp(&loads[b].busy_decode).unwrap()
+                })?
+        } else {
+            (0..self.devices.len())
+                .filter(|&i| self.share_prefill[i] > 0.0 && !self.mig[i].in_flight)
+                .min_by(|&a, &b| {
+                    loads[a].busy_prefill.partial_cmp(&loads[b].busy_prefill).unwrap()
+                })?
+        };
+        Some(migration::Action::Layer {
+            from: to,
+            to,
+            delta_share: step,
+            to_prefill,
+        })
+    }
+
+    // --- Alg 1: the control cycle ------------------------------------------
+
+    fn control_cycle(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        self.stats.control_cycles += 1;
+        let n = self.devices.len();
+        let period = (now - self.last_cycle_at).max(1e-9);
+        let loads: Vec<migration::DeviceLoad> = (0..n)
+            .map(|i| {
+                let (bp0, bd0) = self.last_busy[i];
+                migration::DeviceLoad {
+                    idx: i,
+                    u: self.u_windowed(i, now),
+                    mem_frac: self.devices[i].mem_frac(),
+                    share_prefill: self.share_prefill[i],
+                    free_bytes: self.devices[i].mem_free(),
+                    busy_prefill: ((self.pinsts[i].busy_wall - bp0) / period).min(1.0),
+                    busy_decode: ((self.dinsts[i].busy_wall - bd0) / period).min(1.0),
+                }
+            })
+            .collect();
+        // hysteresis: once latched by a migration, wait for the gap to fall
+        // below δ↓ (or the cooldown to expire) before re-arming
+        let max_u = loads.iter().map(|l| l.u).fold(0.0, f64::max);
+        let min_u = loads.iter().map(|l| l.u).fold(f64::INFINITY, f64::min);
+        let gap = max_u - min_u;
+        if self.hysteresis_latched && gap < self.bana.delta_down {
+            self.hysteresis_latched = false;
+        }
+        let armed = !self.hysteresis_latched || now >= self.cooldown_until;
+
+        if armed && now >= self.cooldown_until {
+            // layer-level decisions are made pool-level (stable demand
+            // targeting below); the per-device Alg 1 plan handles the
+            // memory-driven attention-level migrations
+            let pol = migration::Policy {
+                delta: self.bana.delta,
+                rho: self.bana.rho,
+                period: self.bana.control_period,
+                layer_step: 0.25,
+                enable_layer: false,
+                enable_attention: self.bana.attention_migration,
+            };
+            // action costs on this cluster (Eqs 4, 11)
+            let cost_layer = perfmodel::layer_migration_time(
+                self.spec,
+                (self.spec.n_layers as f64 * pol.layer_step).ceil() as u32,
+                0,
+                &self.link,
+            );
+            let avg_kv: u64 = self.devices.iter().map(|d| d.kv_bytes).sum::<u64>()
+                / (n as u64).max(1);
+            let cost_attn =
+                perfmodel::attention_migration_time(avg_kv / 4, &self.link);
+            // execute at most one action per cycle — conservative pacing
+            // plus the cooldown below is the oscillation guard (δ↑/δ↓).
+            // Rejected per-device actions fall through to the pool-level
+            // rebalance so an infeasible attention target can't starve it.
+            let actions = migration::plan(&loads, &pol, cost_layer, cost_attn);
+            let mut acted = false;
+            for a in actions {
+                if self.execute(a, q) {
+                    acted = true;
+                    break;
+                }
+            }
+            if !acted {
+                if let Some(a) = self.pool_rebalance(&loads) {
+                    self.execute(a, q);
+                }
+            }
+        }
+        // snapshot busy counters for the next window
+        for i in 0..n {
+            self.last_busy[i] = (self.pinsts[i].busy_wall, self.dinsts[i].busy_wall);
+        }
+        self.last_cycle_at = now;
+        // safety net: re-dispatch work stranded on share-0 devices and make
+        // sure no idle instance is sitting on runnable work
+        for i in 0..n {
+            if self.share_prefill[i] <= 0.0 && !self.pinsts[i].waiting.is_empty() {
+                let stranded: Vec<u64> = self.pinsts[i].waiting.drain(..).collect();
+                for sid in stranded {
+                    let target = self.route_prefill(now).unwrap_or(i);
+                    self.seqs[sid as usize].as_mut().unwrap().instance = target;
+                    self.pinsts[target].waiting.push_back(sid);
+                }
+            }
+        }
+        self.try_admit_global(q);
+        // work stealing: an idle prefill-capable device takes half the
+        // longest waiting queue — corrects any routing maldistribution
+        // regardless of how it arose (router staleness, share changes)
+        for i in 0..n {
+            if self.share_prefill[i] <= 0.0
+                || self.pinsts[i].is_busy()
+                || now < self.pinsts[i].frozen_until
+                || !self.pinsts[i].waiting.is_empty()
+            {
+                continue;
+            }
+            if let Some(donor) = (0..n)
+                .filter(|&j| j != i && self.pinsts[j].waiting.len() > 1)
+                .max_by_key(|&j| self.pinsts[j].waiting.len())
+            {
+                let take = self.pinsts[donor].waiting.len() / 2;
+                for _ in 0..take {
+                    if let Some(sid) = self.pinsts[donor].waiting.pop_back() {
+                        self.seqs[sid as usize].as_mut().unwrap().instance = i;
+                        self.pinsts[i].waiting.push_back(sid);
+                    }
+                }
+            }
+        }
+        for i in 0..n {
+            self.maybe_start_prefill(i, q);
+            self.maybe_start_decode(i, q);
+        }
+        // keep cycling while any work remains
+        if self.inflight > 0 {
+            q.push_after(self.bana.control_period, Timer::new(tags::CONTROL));
+        }
+    }
+
+    fn execute(&mut self, action: migration::Action, q: &mut EventQueue) -> bool {
+        let now = q.now();
+        match action {
+            migration::Action::Layer {
+                from,
+                to,
+                delta_share,
+                to_prefill,
+            } => {
+                if self.mig[to].in_flight {
+                    return false;
+                }
+                // capacity floor: a migration must never leave the cluster
+                // without at least half a device of either role
+                let total_p: f64 = self.share_prefill.iter().sum();
+                let total_d: f64 = self.share_prefill.len() as f64 - total_p;
+                if to_prefill {
+                    let d_after = total_d - delta_share.min(1.0 - self.share_prefill[to]);
+                    if d_after < 0.5 {
+                        return false;
+                    }
+                } else {
+                    let p_after = total_p - delta_share.min(self.share_prefill[to]);
+                    if p_after < 0.5 {
+                        return false;
+                    }
+                }
+                // Every device hosts a full model replica (DistServe-style
+                // deployment), so a role change needs no extra weight memory;
+                // what layer migration costs is the TRANSFER TIME of the k
+                // layers' weights + KV (Eq 4) while the target re-instantiates
+                // them, during which the target is frozen.
+                let k = (self.spec.n_layers as f64 * delta_share).ceil() as u32;
+                let t_mig = perfmodel::layer_migration_time(self.spec, k, 0, &self.link);
+                let _ = from;
+                // the target is frozen while weights land (Fig 3: other
+                // devices keep serving in parallel)
+                self.pinsts[to].frozen_until = now + t_mig;
+                self.dinsts[to].frozen_until = now + t_mig;
+                self.mig[to] = MigState {
+                    pending_share: delta_share,
+                    pending_to_prefill: to_prefill,
+                    in_flight: true,
+                };
+                self.stats.layer_migrations += 1;
+                self.stats.migration_seconds += t_mig;
+                q.push_after(t_mig, Timer::with(tags::MIG_DONE, to as u64, 0));
+                self.cooldown_until = now + 3.0 * self.bana.control_period;
+                self.hysteresis_latched = true;
+                true
+            }
+            migration::Action::Attention { from, to, kv_frac } => {
+                if from == to || self.share_prefill[to] >= 1.0 {
+                    return false;
+                }
+                // move ~kv_frac of `from`'s decode KV: relocate whole
+                // sequences until the budget is met (head-group granularity)
+                let budget =
+                    (self.devices[from].kv_bytes as f64 * kv_frac) as u64;
+                let mut moved = 0u64;
+                let ids: Vec<u64> = self.dinsts[from].running.clone();
+                for sid in ids {
+                    if moved >= budget {
+                        break;
+                    }
+                    let kv = {
+                        let s = self.seqs[sid as usize].as_ref().unwrap();
+                        s.kv_on_device
+                    };
+                    if !self.devices[to].can_fit_kv(kv) {
+                        continue;
+                    }
+                    // relocate accounting + ownership
+                    let pos = self.dinsts[from]
+                        .running
+                        .iter()
+                        .position(|&x| x == sid)
+                        .unwrap();
+                    self.dinsts[from].running.remove(pos);
+                    self.devices[from].free_kv(now, kv);
+                    self.devices[to].alloc_kv(now, kv);
+                    {
+                        let s = self.seqs[sid as usize].as_mut().unwrap();
+                        s.instance = to;
+                    }
+                    self.dinsts[to].running.push(sid);
+                    moved += kv;
+                }
+                if moved == 0 {
+                    return false;
+                }
+                let t_mig = perfmodel::attention_migration_time(moved, &self.link);
+                self.kv_transfer_bytes += moved;
+                // both ends pause briefly for the transfer; the Eq 10
+                // exchange then costs a link round trip per decode step
+                self.dinsts[from].frozen_until =
+                    self.dinsts[from].frozen_until.max(now + t_mig);
+                self.dinsts[to].frozen_until =
+                    self.dinsts[to].frozen_until.max(now + t_mig);
+                self.dinsts[to].decode_overhead = 2.0 * self.link.latency;
+                self.stats.attention_migrations += 1;
+                self.stats.migration_seconds += t_mig;
+                q.push_after(t_mig, Timer::with(tags::MIG_DONE, to as u64, 1));
+                self.cooldown_until = now + 3.0 * self.bana.control_period;
+                self.hysteresis_latched = true;
+                true
+            }
+        }
+    }
+
+    fn migration_done(&mut self, dev: usize, kind: u64, q: &mut EventQueue) {
+        if kind == 0 {
+            // layer migration: apply the share change
+            let st = self.mig[dev];
+            if st.in_flight {
+                let delta = st.pending_share;
+                let s = &mut self.share_prefill[dev];
+                if st.pending_to_prefill {
+                    *s = (*s + delta).min(1.0);
+                } else {
+                    *s = (*s - delta).max(0.0);
+                }
+                self.pinsts[dev].share = *s;
+                self.dinsts[dev].share = 1.0 - *s;
+                self.mig[dev] = MigState::default();
+            }
+        }
+        // a device whose prefill share hit zero must not strand its queue
+        if self.share_prefill[dev] <= 0.0 && !self.pinsts[dev].waiting.is_empty() {
+            let stranded: Vec<u64> = self.pinsts[dev].waiting.drain(..).collect();
+            let now = q.now();
+            for sid in stranded {
+                let target = self.route_prefill(now).unwrap_or(dev);
+                self.seqs[sid as usize].as_mut().unwrap().instance = target;
+                self.pinsts[target].waiting.push_back(sid);
+            }
+        }
+        // wake every role on every device (shares just changed)
+        for i in 0..self.devices.len() {
+            self.maybe_start_prefill(i, q);
+            self.maybe_start_decode(i, q);
+        }
+    }
+
+    pub fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
+        self.devices
+            .iter()
+            .map(|d| (d.compute_util.average(end), d.memory_util.average(end)))
+            .collect()
+    }
+}
+
+impl Engine for BanaEngine {
+    fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+        if !common::request_fits(self.spec, &self.devices[0].spec, &req) {
+            log::debug!("dropping request {} (ctx {} + out {} exceeds device KV)",
+                req.id, req.prompt_len, req.output_len);
+            self.col.dropped += 1;
+            let _ = q;
+            return;
+        }
+        let now = q.now();
+        let sid = self.seqs.len() as u64;
+        let mut seq = Seq::new(req);
+        if self.use_store {
+            // estimate the per-layer forward time for the pipeline check
+            let st_est = perfmodel::prefill_step(
+                self.spec,
+                &self.devices[0].spec,
+                &self.eff,
+                &[perfmodel::PrefillItem {
+                    prompt: seq.req.prompt_len,
+                    cached: 0,
+                }],
+                1.0,
+            );
+            let t_fwd_layer = st_est.time / self.spec.n_layers as f64;
+            let plan = self
+                .store
+                .lookup(&seq.req.cache_tokens, self.spec, t_fwd_layer);
+            seq.cached = plan.hit_tokens.min(seq.req.prompt_len.saturating_sub(1));
+            seq.store_stall = plan.stall;
+        }
+        // Alg 2 dispatch
+        let target = self.route_prefill_mut(now).unwrap_or(0);
+        seq.instance = target;
+        self.routed_counts[target] += 1;
+        self.seqs.push(Some(seq));
+        self.inflight += 1;
+        self.pinsts[target].waiting.push_back(sid);
+        // bootstrap the control loop on first arrival
+        if self.stats.control_cycles == 0 && self.last_cycle_at == 0.0 {
+            self.last_cycle_at = now;
+            q.push_after(self.bana.control_period, Timer::new(tags::CONTROL));
+            self.stats.control_cycles = 0;
+        }
+        self.maybe_start_prefill(target, q);
+    }
+
+    fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
+        match t.tag {
+            tags::STEP_DONE => {
+                let dev = (t.a / 2) as usize;
+                if t.a % 2 == 0 {
+                    self.prefill_done(dev, q);
+                } else {
+                    self.decode_done(dev, q);
+                }
+            }
+            tags::KV_ARRIVE => {
+                if let Some(seq) = self.seqs[t.b as usize].as_mut() {
+                    seq.staged = true;
+                }
+                self.try_admit_global(q);
+            }
+            tags::CONTROL => self.control_cycle(q),
+            tags::MIG_DONE => self.migration_done(t.a as usize, t.b, q),
+            _ => unreachable!("banaserve got unknown timer {t:?}"),
+        }
+    }
+
+    fn collector(&mut self) -> &mut Collector {
+        &mut self.col
+    }
+
+    fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    fn on_drain(&mut self, now: f64) {
+        for d in self.devices.iter_mut() {
+            d.compute_util.set(now, 0.0);
+            d.touch_mem(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ExperimentConfig};
+    use crate::sim;
+    use crate::workload::{LengthProfile, WorkloadConfig};
+
+    fn cfg(rps: f64, seed: u64) -> ExperimentConfig {
+        let mut c =
+            ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", rps, seed);
+        c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, rps, 20.0, seed);
+        c.warmup = 0.0;
+        c
+    }
+
+    #[test]
+    fn completes_all_and_conserves() {
+        let c = cfg(5.0, 1);
+        let reqs = c.workload.generate();
+        let n = reqs.len();
+        let mut e = BanaEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        assert_eq!(e.collector().completed() as usize, n);
+        sim::check_conservation(&res, &mut e).unwrap();
+    }
+
+    #[test]
+    fn global_store_produces_hits_on_shared_prefixes() {
+        let mut c = cfg(10.0, 2);
+        c.workload.prefix.share_prob = 0.9;
+        c.workload.prefix.n_templates = 2;
+        let reqs = c.workload.generate();
+        let mut e = BanaEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        assert!(
+            e.store_hit_rate() > 0.3,
+            "store hit rate = {}",
+            e.store_hit_rate()
+        );
+        let cached: u64 = e.col.records.iter().map(|r| r.cached_tokens).sum();
+        assert!(cached > 0);
+    }
+
+    #[test]
+    fn load_aware_routing_balances_despite_shared_prefixes() {
+        // the headline fix of Fig 2a: same skewed workload, balanced routing
+        let mut c = cfg(12.0, 3);
+        c.workload.prefix.share_prob = 0.95;
+        c.workload.prefix.n_templates = 3;
+        c.workload.prefix.zipf_s = 1.5;
+        // isolate Alg 2: no migration (freezes would distort routing counts)
+        c.bana.layer_migration = false;
+        c.bana.attention_migration = false;
+        let reqs = c.workload.generate();
+        let mut e = BanaEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        // only prefill-capable devices receive arrivals (0..n_prefill)
+        let counts: Vec<u64> = e.routed_counts[..2].to_vec();
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(
+            max < 1.6 * min.max(1.0),
+            "load-aware router must balance: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn control_cycles_run() {
+        let c = cfg(8.0, 4);
+        let reqs = c.workload.generate();
+        let mut e = BanaEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        assert!(e.stats.control_cycles > 3);
+    }
+
+    #[test]
+    fn sustained_prefill_pressure_triggers_layer_migration() {
+        // long prompts, tiny outputs: prefill pool saturates while decode
+        // idles -> Alg 1 should grant decode devices prefill share.
+        let mut c = cfg(0.0, 5);
+        c.workload = WorkloadConfig::poisson(LengthProfile::LongBench, 4.0, 30.0, 5);
+        c.warmup = 0.0;
+        c.bana.control_period = 1.0;
+        let mut reqs = c.workload.generate();
+        for r in reqs.iter_mut() {
+            r.output_len = 2;
+        }
+        let mut e = BanaEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        assert!(
+            e.stats.layer_migrations > 0,
+            "migrations: {:?}, shares: {:?}",
+            e.stats,
+            e.share_prefill
+        );
+        // some decode device gained prefill share
+        assert!(e.share_prefill[2..].iter().any(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn kv_accounting_clean_at_drain() {
+        let c = cfg(6.0, 6);
+        let reqs = c.workload.generate();
+        let mut e = BanaEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        for d in &e.devices {
+            assert_eq!(d.kv_bytes, 0, "device {} leaked {} KV bytes", d.id, d.kv_bytes);
+        }
+    }
+
+    #[test]
+    fn store_disabled_means_no_cached_tokens() {
+        let mut c = cfg(8.0, 7);
+        c.bana.global_store = false;
+        c.workload.prefix.share_prob = 0.9;
+        let reqs = c.workload.generate();
+        let mut e = BanaEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        let cached: u64 = e.col.records.iter().map(|r| r.cached_tokens).sum();
+        assert_eq!(cached, 0);
+    }
+
+    #[test]
+    fn beats_distserve_on_skewed_short_context() {
+        // the paper's core claim in miniature (Fig 8/9 direction)
+        let mut c = cfg(14.0, 8);
+        c.workload.prefix.share_prob = 0.6;
+        let reqs = c.workload.generate();
+
+        let mut bana = BanaEngine::new(&c);
+        let rb = sim::run(&mut bana, reqs.clone(), 1e6);
+        let rep_b = bana.collector().report(rb.end_time);
+
+        let mut cd = c.clone();
+        cd.engine = EngineKind::DistServe;
+        let mut dist = super::super::distserve_sim::DistServeEngine::new(&cd);
+        let rd = sim::run(&mut dist, reqs, 1e6);
+        let rep_d = dist.collector().report(rd.end_time);
+
+        assert!(
+            rep_b.throughput_tok_s >= rep_d.throughput_tok_s * 0.95,
+            "bana {:.1} tok/s should not lose to distserve {:.1} tok/s",
+            rep_b.throughput_tok_s,
+            rep_d.throughput_tok_s
+        );
+        assert!(
+            rep_b.avg_latency() <= rep_d.avg_latency() * 1.05,
+            "bana latency {:.3}s vs distserve {:.3}s",
+            rep_b.avg_latency(),
+            rep_d.avg_latency()
+        );
+    }
+}

@@ -1,0 +1,204 @@
+//! Load-aware Request Scheduling (paper Algorithm 2).
+//!
+//! With the Global KV Cache Store making every cached prefix reachable from
+//! every prefill instance, the router drops cache placement from its
+//! criteria entirely: dispatch goes to the least-loaded instance by
+//! normalized utilization `U = C/Cmax + M/Mmax` (Eq 37), falling back to
+//! the shortest queue when every candidate exceeds the load threshold δ_L.
+//!
+//! Pure functions — the engine feeds snapshots in, assertions and property
+//! tests (`rust/tests/prop_engines.rs`) exercise the policy in isolation.
+
+/// Snapshot of one prefill-capable instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceLoad {
+    /// Engine-level instance/device index.
+    pub idx: usize,
+    /// Normalized utilization U ∈ [0, 2] (Eq 37).
+    pub u: f64,
+    /// Waiting-queue length.
+    pub queue_len: usize,
+    /// Estimated load contribution of queued work (EstimateLoad’s
+    /// accumulator, line 15 of Alg 2) — lets one dispatch round spread a
+    /// burst instead of dogpiling the same instance.
+    pub pending: f64,
+}
+
+impl InstanceLoad {
+    fn effective(&self) -> f64 {
+        self.u + self.pending
+    }
+}
+
+/// Algorithm 2, step 2: sort candidates ascending by (load, queue length).
+pub fn sort_candidates(loads: &mut [InstanceLoad]) {
+    loads.sort_by(|a, b| {
+        a.effective()
+            .partial_cmp(&b.effective())
+            .unwrap()
+            .then(a.queue_len.cmp(&b.queue_len))
+            .then(a.idx.cmp(&b.idx))
+    });
+}
+
+/// Algorithm 2, step 3 (one request): pick the least-loaded candidate; if
+/// it is above δ_L, fall back to the smallest queue. Returns the position
+/// *within `loads`* of the chosen instance.
+pub fn pick(loads: &[InstanceLoad], delta_l: f64) -> Option<usize> {
+    if loads.is_empty() {
+        return None;
+    }
+    let least = loads
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            a.effective()
+                .partial_cmp(&b.effective())
+                .unwrap()
+                .then(a.queue_len.cmp(&b.queue_len))
+                .then(a.idx.cmp(&b.idx))
+        })
+        .map(|(i, _)| i)
+        .unwrap();
+    if loads[least].effective() < delta_l {
+        return Some(least);
+    }
+    // overloaded everywhere: lowest queue wins (line 17)
+    loads
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            a.queue_len
+                .cmp(&b.queue_len)
+                .then(a.effective().partial_cmp(&b.effective()).unwrap())
+                .then(a.idx.cmp(&b.idx))
+        })
+        .map(|(i, _)| i)
+}
+
+/// Like [`pick`] but rotates among candidates whose effective load is
+/// within `TIE_EPS` of the minimum — prevents deterministic tie-breaking
+/// from dogpiling one instance when the cluster is mostly idle.
+pub fn pick_rotating(loads: &[InstanceLoad], delta_l: f64, rr: usize) -> Option<usize> {
+    const TIE_EPS: f64 = 0.05;
+    let least = pick(loads, delta_l)?;
+    if loads[least].effective() >= delta_l {
+        return Some(least); // overload fallback path: keep Alg 2 line 17
+    }
+    let min_u = loads[least].effective();
+    let tied: Vec<usize> = loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.effective() - min_u < TIE_EPS && l.queue_len == loads[least].queue_len)
+        .map(|(i, _)| i)
+        .collect();
+    Some(tied[rr % tied.len()])
+}
+
+/// Dispatch a whole burst of `n` requests (Alg 2's main loop), updating the
+/// `pending` estimate after each assignment. Returns instance indices.
+pub fn dispatch_burst(
+    loads: &mut Vec<InstanceLoad>,
+    n: usize,
+    delta_l: f64,
+    est_load: f64,
+) -> Vec<usize> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let Some(pos) = pick(loads, delta_l) else { break };
+        out.push(loads[pos].idx);
+        loads[pos].pending += est_load; // line 15: load += EstimateLoad(req)
+        loads[pos].queue_len += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn il(idx: usize, u: f64, q: usize) -> InstanceLoad {
+        InstanceLoad {
+            idx,
+            u,
+            queue_len: q,
+            pending: 0.0,
+        }
+    }
+
+    #[test]
+    fn picks_least_loaded() {
+        let loads = vec![il(0, 1.2, 0), il(1, 0.3, 5), il(2, 0.8, 0)];
+        let p = pick(&loads, 1.6).unwrap();
+        assert_eq!(loads[p].idx, 1, "lowest U wins even with longer queue");
+    }
+
+    #[test]
+    fn queue_breaks_ties() {
+        let loads = vec![il(0, 0.5, 4), il(1, 0.5, 1)];
+        let p = pick(&loads, 1.6).unwrap();
+        assert_eq!(loads[p].idx, 1);
+    }
+
+    #[test]
+    fn falls_back_to_lowest_queue_when_all_above_threshold() {
+        let loads = vec![il(0, 1.9, 9), il(1, 1.8, 2), il(2, 1.7, 5)];
+        let p = pick(&loads, 1.6).unwrap();
+        assert_eq!(loads[p].idx, 1, "all over δ_L -> shortest queue");
+    }
+
+    #[test]
+    fn empty_candidates_yield_none() {
+        assert_eq!(pick(&[], 1.0), None);
+    }
+
+    #[test]
+    fn sort_is_by_load_then_queue() {
+        let mut loads = vec![il(0, 0.9, 1), il(1, 0.2, 7), il(2, 0.2, 3)];
+        sort_candidates(&mut loads);
+        let order: Vec<usize> = loads.iter().map(|l| l.idx).collect();
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn burst_dispatch_spreads_load() {
+        // 8 requests onto 4 equal instances must not dogpile one target
+        let mut loads = (0..4).map(|i| il(i, 0.5, 0)).collect::<Vec<_>>();
+        let picks = dispatch_burst(&mut loads, 8, 1.8, 0.2);
+        assert_eq!(picks.len(), 8);
+        let mut counts = [0usize; 4];
+        for p in picks {
+            counts[p] += 1;
+        }
+        assert_eq!(counts, [2, 2, 2, 2], "{counts:?}");
+    }
+
+    #[test]
+    fn burst_respects_initial_imbalance() {
+        // instance 0 already hot: first assignments go elsewhere
+        let mut loads = vec![il(0, 1.5, 0), il(1, 0.1, 0), il(2, 0.1, 0)];
+        let picks = dispatch_burst(&mut loads, 4, 1.8, 0.3);
+        assert!(!picks[..2].contains(&0), "hot instance must be avoided first");
+    }
+
+    #[test]
+    fn rotating_pick_spreads_ties() {
+        let loads = vec![il(0, 0.3, 0), il(1, 0.3, 0), il(2, 0.3, 0)];
+        let picks: Vec<usize> = (0..6)
+            .map(|rr| loads[pick_rotating(&loads, 1.6, rr).unwrap()].idx)
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // non-tied instance never chosen early
+        let loads2 = vec![il(0, 1.2, 0), il(1, 0.3, 0)];
+        for rr in 0..4 {
+            assert_eq!(loads2[pick_rotating(&loads2, 1.6, rr).unwrap()].idx, 1);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_equal_inputs() {
+        let loads = vec![il(0, 0.5, 2), il(1, 0.5, 2)];
+        // idx breaks the final tie -> stable choice
+        assert_eq!(loads[pick(&loads, 1.6).unwrap()].idx, 0);
+    }
+}

@@ -1,0 +1,433 @@
+//! Machinery shared by all simulated engines: the sequence table, the
+//! per-instance continuous-batching state machine, step formation, KV
+//! accounting, and timer-tag conventions.
+//!
+//! An [`InstanceSim`] is one *logical* worker bound to a device. Monolithic
+//! engines bind one `Unified` instance per device; PD-disaggregated engines
+//! bind a `Prefill` or `Decode` instance; BanaServe may bind *both* to one
+//! device with fractional capacity shares (the effect of layer-level
+//! migration — a device dedicating k/L of its layers to the other phase).
+
+use crate::cluster::Device;
+use crate::metrics::RequestRecord;
+use crate::perfmodel::{self, Efficiency, PrefillItem, StepTime};
+use crate::model::ModelSpec;
+use crate::workload::Request;
+use std::collections::VecDeque;
+
+/// Timer tags (Timer.tag values) used by all engines.
+pub mod tags {
+    /// A compute step finished on instance `a`.
+    pub const STEP_DONE: u64 = 1;
+    /// KV of sequence `b` arrived at decode instance `a`.
+    pub const KV_ARRIVE: u64 = 2;
+    /// Orchestrator control cycle (BanaServe).
+    pub const CONTROL: u64 = 3;
+    /// Module migration to instance `a` completed.
+    pub const MIG_DONE: u64 = 4;
+}
+
+/// KV page size in tokens used by all simulated paged engines.
+pub const BLOCK_TOKENS: u64 = 16;
+
+/// Round `tokens` up to whole KV blocks (paged allocation granularity).
+pub fn kv_block_tokens(tokens: u64) -> u64 {
+    tokens.div_ceil(BLOCK_TOKENS) * BLOCK_TOKENS
+}
+
+/// KV bytes a sequence of context `ctx` holds, block-rounded.
+pub fn kv_bytes(spec: &ModelSpec, ctx: u64) -> u64 {
+    kv_block_tokens(ctx) * spec.kv_bytes_per_token()
+}
+
+/// Admission control: can a request (prompt + full output) EVER fit in one
+/// device's post-weight HBM? Serving systems enforce this as max-model-len;
+/// without it an oversized head-of-line request deadlocks the queue.
+pub fn request_fits(spec: &ModelSpec, gpu: &crate::cluster::GpuSpec, req: &Request) -> bool {
+    let usable = gpu.hbm_bytes.saturating_sub(spec.weight_bytes());
+    kv_bytes(spec, req.prompt_len + req.output_len + 1) <= usable
+}
+
+/// Lifecycle of a request inside an engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Queued at a prefill (or unified) instance.
+    Waiting,
+    /// Inside a running prefill step.
+    Prefilling,
+    /// KV in flight to a decode instance (PD engines).
+    Transferring,
+    /// In a decode instance's running set.
+    Decoding,
+    Finished,
+}
+
+/// A request in service.
+#[derive(Debug, Clone)]
+pub struct Seq {
+    pub req: Request,
+    pub phase: SeqPhase,
+    /// Tokens of prompt served from prefix cache.
+    pub cached: u64,
+    /// Current context length (prompt + generated so far).
+    pub ctx: u64,
+    pub generated: u64,
+    /// Instance currently responsible for the seq.
+    pub instance: usize,
+    pub prefill_start: f64,
+    pub first_token: f64,
+    /// KV bytes charged to `instance`'s device.
+    pub kv_on_device: u64,
+    /// Times this sequence was preempted (recompute).
+    pub preemptions: u32,
+    /// Residual Global-KV-Store fetch stall to fold into this seq's
+    /// prefill step (0 when the layer-wise pipeline fully hides it).
+    pub store_stall: f64,
+    /// PD handoff: KV staging (store write / direct push) has completed and
+    /// the sequence is eligible for decode admission.
+    pub staged: bool,
+}
+
+impl Seq {
+    pub fn new(req: Request) -> Self {
+        Seq {
+            req,
+            phase: SeqPhase::Waiting,
+            cached: 0,
+            ctx: 0,
+            generated: 0,
+            instance: usize::MAX,
+            prefill_start: -1.0,
+            first_token: -1.0,
+            kv_on_device: 0,
+            preemptions: 0,
+            store_stall: 0.0,
+            staged: false,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated >= self.req.output_len
+    }
+
+    pub fn record(&self, completion: f64) -> RequestRecord {
+        RequestRecord {
+            id: self.req.id,
+            arrival: self.req.arrival,
+            prefill_start: if self.prefill_start >= 0.0 {
+                self.prefill_start
+            } else {
+                self.req.arrival
+            },
+            first_token: self.first_token,
+            completion,
+            prompt_len: self.req.prompt_len,
+            output_len: self.req.output_len,
+            cached_tokens: self.cached,
+        }
+    }
+}
+
+/// What a running step is doing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepKind {
+    Prefill,
+    Decode,
+    /// HFT static batching: lock-step decode of a fixed batch (padded).
+    StaticDecode,
+}
+
+/// An in-flight compute step on an instance.
+#[derive(Debug, Clone)]
+pub struct StepInfo {
+    pub kind: StepKind,
+    pub seqs: Vec<u64>,
+    pub st: StepTime,
+    /// Extra latency folded into this step (KV-store stall, merge exchange).
+    pub overhead: f64,
+}
+
+/// One logical worker bound to a device.
+#[derive(Debug)]
+pub struct InstanceSim {
+    /// Index into the engine's device table.
+    pub device: usize,
+    /// Capacity share of the device this logical instance owns (0..1].
+    pub share: f64,
+    /// Waiting prefill queue (seq ids).
+    pub waiting: VecDeque<u64>,
+    /// Running decode set (seq ids).
+    pub running: Vec<u64>,
+    /// Current step, if the instance is busy.
+    pub step: Option<StepInfo>,
+    /// Unavailable until this time (module migration in progress).
+    pub frozen_until: f64,
+    /// Per-decode-step overhead (attention-level migration exchange, Eq 10
+    /// round trip) charged while remote KV heads are active.
+    pub decode_overhead: f64,
+    /// Cumulative busy seconds weighted by compute fraction.
+    pub busy_compute: f64,
+    /// Cumulative busy wall seconds.
+    pub busy_wall: f64,
+}
+
+impl InstanceSim {
+    pub fn new(device: usize, share: f64) -> Self {
+        InstanceSim {
+            device,
+            share,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            step: None,
+            frozen_until: 0.0,
+            decode_overhead: 0.0,
+            busy_compute: 0.0,
+            busy_wall: 0.0,
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.step.is_some()
+    }
+
+    /// Queue depth metric used by the routers (Alg 2's q_len).
+    pub fn queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Total load proxy: waiting + running.
+    pub fn load_seqs(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+}
+
+/// Admission/step limits.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchLimits {
+    pub max_batch_tokens: u64,
+    pub max_batch_seqs: u64,
+}
+
+/// Form a prefill step from an instance's waiting queue.
+///
+/// Greedily admits sequences while the *computed* (non-cached) token budget
+/// holds and the device can fit their full prompt KV. Returns the selected
+/// seq ids and their prefill items; does NOT mutate KV accounting (caller
+/// charges the device when the step starts).
+pub fn plan_prefill(
+    inst: &mut InstanceSim,
+    seqs: &[Option<Seq>],
+    device: &Device,
+    spec: &ModelSpec,
+    limits: &BatchLimits,
+) -> (Vec<u64>, Vec<PrefillItem>) {
+    let mut chosen = Vec::new();
+    let mut items = Vec::new();
+    let mut tokens: u64 = 0;
+    let mut mem_budget = device.mem_free();
+    while let Some(&sid) = inst.waiting.front() {
+        let seq = seqs[sid as usize].as_ref().expect("live seq");
+        let compute = seq.req.prompt_len - seq.cached.min(seq.req.prompt_len);
+        // +1 in kv for the first generated token's slot
+        let need_kv = kv_bytes(spec, seq.req.prompt_len + 1);
+        if !chosen.is_empty()
+            && (tokens + compute > limits.max_batch_tokens
+                || chosen.len() as u64 >= limits.max_batch_seqs)
+        {
+            break;
+        }
+        if need_kv > mem_budget {
+            // head-of-line blocks on memory: stop (FCFS, no reordering)
+            break;
+        }
+        inst.waiting.pop_front();
+        tokens += compute;
+        mem_budget -= need_kv;
+        items.push(PrefillItem {
+            prompt: seq.req.prompt_len,
+            cached: seq.cached,
+        });
+        chosen.push(sid);
+    }
+    (chosen, items)
+}
+
+/// Compute a decode step over the instance's running set (up to the batch
+/// cap), returning (ids, StepTime). The caller handles KV growth.
+pub fn plan_decode(
+    inst: &InstanceSim,
+    seqs: &[Option<Seq>],
+    spec: &ModelSpec,
+    gpu: &crate::cluster::GpuSpec,
+    eff: &Efficiency,
+    limits: &BatchLimits,
+) -> (Vec<u64>, StepTime) {
+    let ids: Vec<u64> = inst
+        .running
+        .iter()
+        .copied()
+        .take(limits.max_batch_seqs as usize)
+        .collect();
+    let total_ctx: u64 = ids
+        .iter()
+        .map(|&sid| seqs[sid as usize].as_ref().unwrap().ctx)
+        .sum();
+    let st = perfmodel::decode_step(spec, gpu, eff, ids.len() as u64, total_ctx, inst.share);
+    (ids, st)
+}
+
+/// Record step utilization on the device trackers when a step starts/ends.
+pub fn mark_step_start(dev: &mut Device, inst: &mut InstanceSim, now: f64, st: &StepTime) {
+    dev.compute_util.set(now, st.compute_frac() * inst.share.min(1.0));
+}
+
+pub fn mark_step_end(
+    dev: &mut Device,
+    inst: &mut InstanceSim,
+    now: f64,
+    duration: f64,
+    st: &StepTime,
+) {
+    inst.busy_wall += duration;
+    inst.busy_compute += duration * st.compute_frac();
+    dev.compute_util.set(now, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{A100_80G, Role};
+    use crate::model::LLAMA_13B;
+
+    fn mkreq(id: u64, prompt: u64, out: u64) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_len: prompt,
+            output_len: out,
+            cache_tokens: (0..prompt.min(64) as u32).collect(),
+        }
+    }
+
+    fn seq_table(reqs: Vec<Request>) -> Vec<Option<Seq>> {
+        reqs.into_iter().map(|r| Some(Seq::new(r))).collect()
+    }
+
+    #[test]
+    fn kv_block_rounding() {
+        assert_eq!(kv_block_tokens(0), 0);
+        assert_eq!(kv_block_tokens(1), 16);
+        assert_eq!(kv_block_tokens(16), 16);
+        assert_eq!(kv_block_tokens(17), 32);
+    }
+
+    #[test]
+    fn plan_prefill_respects_token_budget() {
+        let mut inst = InstanceSim::new(0, 1.0);
+        let seqs = seq_table((0..10).map(|i| mkreq(i, 1000, 10)).collect());
+        for i in 0..10 {
+            inst.waiting.push_back(i);
+        }
+        let mut dev = Device::new(0, A100_80G, Role::Prefill);
+        dev.weight_bytes = LLAMA_13B.weight_bytes();
+        let limits = BatchLimits {
+            max_batch_tokens: 2500,
+            max_batch_seqs: 64,
+        };
+        let (ids, items) = plan_prefill(&mut inst, &seqs, &dev, &LLAMA_13B, &limits);
+        // 1000 + 1000 fits, third would exceed 2500 -> 2 or 3 (first always admitted)
+        assert_eq!(ids.len(), 2);
+        assert_eq!(items.len(), 2);
+        assert_eq!(inst.waiting.len(), 8);
+    }
+
+    #[test]
+    fn plan_prefill_first_seq_always_admitted_even_if_over_budget() {
+        // over the TOKEN budget (memory is a hard constraint and stays one)
+        let mut inst = InstanceSim::new(0, 1.0);
+        let seqs = seq_table(vec![mkreq(0, 20_000, 1)]);
+        inst.waiting.push_back(0);
+        let mut dev = Device::new(0, A100_80G, Role::Prefill);
+        dev.weight_bytes = LLAMA_13B.weight_bytes();
+        let limits = BatchLimits {
+            max_batch_tokens: 1024,
+            max_batch_seqs: 8,
+        };
+        let (ids, _) = plan_prefill(&mut inst, &seqs, &dev, &LLAMA_13B, &limits);
+        assert_eq!(ids.len(), 1, "oversized head must still run alone");
+    }
+
+    #[test]
+    fn plan_prefill_blocks_on_memory() {
+        let mut inst = InstanceSim::new(0, 1.0);
+        let seqs = seq_table(vec![mkreq(0, 8000, 1), mkreq(1, 8000, 1)]);
+        inst.waiting.push_back(0);
+        inst.waiting.push_back(1);
+        let mut dev = Device::new(0, A100_80G, Role::Prefill);
+        // leave room for ~1 seq of KV only: 8000 tok * 400KB/tok ≈ 3.2GB
+        dev.weight_bytes = A100_80G.hbm_bytes - 2 * kv_bytes(&LLAMA_13B, 8001) + 1000;
+        let limits = BatchLimits {
+            max_batch_tokens: 1 << 40,
+            max_batch_seqs: 64,
+        };
+        let (ids, _) = plan_prefill(&mut inst, &seqs, &dev, &LLAMA_13B, &limits);
+        assert_eq!(ids.len(), 1, "second must block on KV memory");
+        assert_eq!(inst.waiting.len(), 1);
+    }
+
+    #[test]
+    fn plan_prefill_cached_tokens_reduce_budget_use() {
+        let mut inst = InstanceSim::new(0, 1.0);
+        let mut seqs = seq_table((0..4).map(|i| mkreq(i, 1000, 1)).collect());
+        for s in seqs.iter_mut().flatten() {
+            s.cached = 900; // 90% prefix hit
+        }
+        for i in 0..4 {
+            inst.waiting.push_back(i);
+        }
+        let mut dev = Device::new(0, A100_80G, Role::Prefill);
+        dev.weight_bytes = LLAMA_13B.weight_bytes();
+        let limits = BatchLimits {
+            max_batch_tokens: 350,
+            max_batch_seqs: 64,
+        };
+        let (ids, items) = plan_prefill(&mut inst, &seqs, &dev, &LLAMA_13B, &limits);
+        assert_eq!(ids.len(), 3, "only 100 computed tokens each");
+        assert!(items.iter().all(|i| i.cached == 900));
+    }
+
+    #[test]
+    fn plan_decode_sums_context() {
+        let mut inst = InstanceSim::new(0, 1.0);
+        let mut seqs = seq_table(vec![mkreq(0, 10, 5), mkreq(1, 20, 5)]);
+        seqs[0].as_mut().unwrap().ctx = 11;
+        seqs[1].as_mut().unwrap().ctx = 22;
+        inst.running = vec![0, 1];
+        let limits = BatchLimits {
+            max_batch_tokens: 8192,
+            max_batch_seqs: 64,
+        };
+        let (ids, st) = plan_decode(
+            &inst,
+            &seqs,
+            &LLAMA_13B,
+            &A100_80G,
+            &Efficiency::default(),
+            &limits,
+        );
+        assert_eq!(ids, vec![0, 1]);
+        assert!(st.time > 0.0);
+    }
+
+    #[test]
+    fn seq_record_roundtrip() {
+        let mut s = Seq::new(mkreq(7, 10, 3));
+        s.prefill_start = 1.0;
+        s.first_token = 2.0;
+        s.generated = 3;
+        let rec = s.record(5.0);
+        assert_eq!(rec.id, 7);
+        assert!((rec.ttft() - 2.0).abs() < 1e-12);
+        assert!((rec.e2e() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,502 @@
+//! DistServe-like baseline: *static* PD disaggregation. A fixed pool of
+//! prefill devices runs prompt processing; completed prompts push their KV
+//! over the GPU interconnect to a fixed pool of decode devices, which run
+//! continuous-batch decoding. No prefix caching, no migration, no shared
+//! store — exactly the architecture whose utilization asymmetry Fig 2b
+//! measures and whose rigidity BanaServe attacks.
+
+use super::common::{self, tags, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use crate::cluster::{Cluster, Device, Link};
+use crate::config::ExperimentConfig;
+use crate::metrics::Collector;
+use crate::perfmodel::{self, Efficiency};
+use crate::model::ModelSpec;
+use crate::sim::{Engine, EventQueue, Timer};
+use crate::workload::Request;
+use std::collections::VecDeque;
+
+/// Static PD-disaggregated engine.
+pub struct DistServeEngine {
+    spec: &'static ModelSpec,
+    eff: Efficiency,
+    limits: BatchLimits,
+    link: Link,
+    pub devices: Vec<Device>,
+    /// Prefill instances (device indices 0..n_prefill).
+    pub prefill: Vec<InstanceSim>,
+    /// Decode instances.
+    pub decode: Vec<InstanceSim>,
+    /// KV blobs that arrived at a decode instance that could not admit them
+    /// yet (memory pressure) — the inter-phase "migration stall".
+    admit_queue: Vec<VecDeque<u64>>,
+    seqs: Vec<Option<Seq>>,
+    col: Collector,
+    inflight: u64,
+    pub kv_transfer_bytes: u64,
+    pub preemptions: u64,
+    rr_prefill: usize,
+}
+
+impl DistServeEngine {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        assert!(cfg.n_prefill > 0 && cfg.n_prefill < cfg.n_devices);
+        let nd = cfg.n_devices - cfg.n_prefill;
+        let cluster = Cluster::pd_split(cfg.n_prefill, nd, cfg.gpu.clone());
+        let mut devices = cluster.devices;
+        for d in devices.iter_mut() {
+            d.weight_bytes = cfg.model.weight_bytes();
+        }
+        let prefill = (0..cfg.n_prefill).map(|i| InstanceSim::new(i, 1.0)).collect();
+        let decode = (0..nd)
+            .map(|i| InstanceSim::new(cfg.n_prefill + i, 1.0))
+            .collect();
+        let mut col = Collector::new();
+        col.window_start = cfg.warmup;
+        DistServeEngine {
+            spec: cfg.model,
+            eff: cfg.eff,
+            limits: BatchLimits {
+                max_batch_tokens: cfg.max_batch_tokens,
+                max_batch_seqs: cfg.max_batch_seqs,
+            },
+            link: cluster.gpu_link,
+            devices,
+            prefill,
+            decode,
+            admit_queue: (0..nd).map(|_| VecDeque::new()).collect(),
+            seqs: Vec::new(),
+            col,
+            inflight: 0,
+            kv_transfer_bytes: 0,
+            preemptions: 0,
+            rr_prefill: 0,
+        }
+    }
+
+    /// Prefill router: least (queue, load) — DistServe's simple dispatch.
+    fn route_prefill(&mut self) -> usize {
+        (0..self.prefill.len())
+            .min_by_key(|&i| (self.prefill[i].queue_len(), self.prefill[i].load_seqs(), i))
+            .unwrap_or_else(|| {
+                let i = self.rr_prefill % self.prefill.len();
+                self.rr_prefill += 1;
+                i
+            })
+    }
+
+    /// Decode placement: most free KV memory.
+    fn route_decode(&self) -> usize {
+        (0..self.decode.len())
+            .max_by_key(|&i| {
+                let d = &self.devices[self.decode[i].device];
+                (d.mem_free(), std::cmp::Reverse(self.decode[i].running.len()))
+            })
+            .unwrap()
+    }
+
+    fn maybe_start_prefill(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        if self.prefill[i].is_busy() || now < self.prefill[i].frozen_until {
+            return;
+        }
+        let dev_idx = self.prefill[i].device;
+        let (ids, items) = common::plan_prefill(
+            &mut self.prefill[i],
+            &self.seqs,
+            &self.devices[dev_idx],
+            self.spec,
+            &self.limits,
+        );
+        if ids.is_empty() {
+            return;
+        }
+        for &sid in &ids {
+            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            seq.phase = SeqPhase::Prefilling;
+            if seq.prefill_start < 0.0 {
+                seq.prefill_start = now;
+            }
+            let kv = common::kv_bytes(self.spec, seq.req.prompt_len + 1);
+            seq.kv_on_device = kv;
+            self.devices[dev_idx].alloc_kv(now, kv);
+        }
+        let st = perfmodel::prefill_step(
+            self.spec,
+            &self.devices[dev_idx].spec,
+            &self.eff,
+            &items,
+            self.prefill[i].share,
+        );
+        common::mark_step_start(&mut self.devices[dev_idx], &mut self.prefill[i], now, &st);
+        self.prefill[i].step = Some(StepInfo {
+            kind: StepKind::Prefill,
+            seqs: ids,
+            st,
+            overhead: 0.0,
+        });
+        q.push_after(st.time, Timer::with(tags::STEP_DONE, i as u64, 0));
+    }
+
+    fn maybe_start_decode(&mut self, di: usize, q: &mut EventQueue) {
+        let now = q.now();
+        if self.decode[di].is_busy() || now < self.decode[di].frozen_until {
+            return;
+        }
+        self.try_admit(di, q);
+        if self.decode[di].running.is_empty() {
+            return;
+        }
+        // memory headroom for one token per seq; preempt-to-prefill if not
+        loop {
+            let dev = &self.devices[self.decode[di].device];
+            let mut need = 0u64;
+            for &sid in &self.decode[di].running {
+                let s = self.seqs[sid as usize].as_ref().unwrap();
+                need += common::kv_bytes(self.spec, s.ctx + 1) - s.kv_on_device;
+            }
+            if need <= dev.mem_free() {
+                break;
+            }
+            let victim = *self.decode[di].running.last().unwrap();
+            self.preempt_to_prefill(di, victim, q);
+            if self.decode[di].running.is_empty() {
+                return;
+            }
+        }
+        let (ids, st) = common::plan_decode(
+            &self.decode[di],
+            &self.seqs,
+            self.spec,
+            &self.devices[self.decode[di].device].spec,
+            &self.eff,
+            &self.limits,
+        );
+        let dev_idx = self.decode[di].device;
+        common::mark_step_start(&mut self.devices[dev_idx], &mut self.decode[di], now, &st);
+        let overhead = self.decode[di].decode_overhead;
+        self.decode[di].step = Some(StepInfo {
+            kind: StepKind::Decode,
+            seqs: ids,
+            st,
+            overhead,
+        });
+        q.push_after(
+            st.time + overhead,
+            Timer::with(tags::STEP_DONE, (self.prefill.len() + di) as u64, 0),
+        );
+    }
+
+    /// Admit transferred KV blobs waiting at decode instance `di`.
+    fn try_admit(&mut self, di: usize, q: &mut EventQueue) {
+        let now = q.now();
+        while let Some(&sid) = self.admit_queue[di].front() {
+            let dev_idx = self.decode[di].device;
+            let (kv, src_dev) = {
+                let s = self.seqs[sid as usize].as_ref().unwrap();
+                (common::kv_bytes(self.spec, s.ctx), s.instance)
+            };
+            if !self.devices[dev_idx].can_fit_kv(kv) {
+                break;
+            }
+            self.admit_queue[di].pop_front();
+            // KV leaves the prefill device only on successful admission —
+            // until then it blocks prefill memory (the paper's stall).
+            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            let old_kv = seq.kv_on_device;
+            self.devices[src_dev].free_kv(now, old_kv);
+            self.devices[dev_idx].alloc_kv(now, kv);
+            seq.kv_on_device = kv;
+            seq.instance = dev_idx;
+            seq.phase = SeqPhase::Decoding;
+            self.decode[di].running.push(sid);
+            // the freed prefill memory may unblock that queue
+            if src_dev < self.prefill.len() {
+                self.maybe_start_prefill(src_dev, q);
+            }
+        }
+    }
+
+    fn preempt_to_prefill(&mut self, di: usize, sid: u64, q: &mut EventQueue) {
+        let pos = self.decode[di].running.iter().position(|&x| x == sid).unwrap();
+        self.decode[di].running.remove(pos);
+        let dev_idx = self.decode[di].device;
+        {
+            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            self.devices[dev_idx].free_kv(q.now(), seq.kv_on_device);
+            seq.kv_on_device = 0;
+            seq.ctx = 0;
+            seq.generated = 0;
+            seq.cached = 0;
+            seq.phase = SeqPhase::Waiting;
+            seq.preemptions += 1;
+        }
+        self.preemptions += 1;
+        let pi = self.route_prefill();
+        self.seqs[sid as usize].as_mut().unwrap().instance = self.prefill[pi].device;
+        self.prefill[pi].waiting.push_front(sid);
+        self.maybe_start_prefill(pi, q);
+    }
+
+    fn finish(&mut self, sid: u64, pool_dev: usize, now: f64) {
+        let seq = self.seqs[sid as usize].as_mut().unwrap();
+        seq.phase = SeqPhase::Finished;
+        let rec = seq.record(now);
+        let kv = seq.kv_on_device;
+        seq.kv_on_device = 0;
+        self.devices[pool_dev].free_kv(now, kv);
+        self.col.finish(rec);
+        self.inflight -= 1;
+        self.seqs[sid as usize] = None;
+    }
+
+    fn prefill_done(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        let step = self.prefill[i].step.take().expect("prefill step");
+        let dev_idx = self.prefill[i].device;
+        common::mark_step_end(
+            &mut self.devices[dev_idx],
+            &mut self.prefill[i],
+            now,
+            step.st.time,
+            &step.st,
+        );
+        for sid in step.seqs {
+            let done = {
+                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                seq.ctx = seq.req.prompt_len + 1;
+                seq.generated = 1;
+                seq.first_token = now;
+                seq.instance = dev_idx;
+                seq.is_done()
+            };
+            if done {
+                self.finish(sid, dev_idx, now);
+                continue;
+            }
+            // push KV to a decode instance
+            let di = self.route_decode();
+            let kv = {
+                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                seq.phase = SeqPhase::Transferring;
+                common::kv_bytes(self.spec, seq.ctx)
+            };
+            self.kv_transfer_bytes += kv;
+            let t = self.link.transfer_time(kv);
+            q.push_after(t, Timer::with(tags::KV_ARRIVE, di as u64, sid));
+        }
+        self.maybe_start_prefill(i, q);
+    }
+
+    fn decode_done(&mut self, di: usize, q: &mut EventQueue) {
+        let now = q.now();
+        let step = self.decode[di].step.take().expect("decode step");
+        let dev_idx = self.decode[di].device;
+        common::mark_step_end(
+            &mut self.devices[dev_idx],
+            &mut self.decode[di],
+            now,
+            step.st.time + step.overhead,
+            &step.st,
+        );
+        let mut finished = Vec::new();
+        for &sid in &step.seqs {
+            let Some(seq) = self.seqs[sid as usize].as_mut() else {
+                continue;
+            };
+            if seq.phase != SeqPhase::Decoding {
+                continue;
+            }
+            seq.generated += 1;
+            seq.ctx += 1;
+            let new_kv = common::kv_bytes(self.spec, seq.ctx);
+            if new_kv > seq.kv_on_device {
+                let delta = new_kv - seq.kv_on_device;
+                seq.kv_on_device = new_kv;
+                self.devices[dev_idx].alloc_kv(now, delta);
+            }
+            if seq.is_done() {
+                finished.push(sid);
+            }
+        }
+        for sid in finished {
+            if let Some(p) = self.decode[di].running.iter().position(|&x| x == sid) {
+                self.decode[di].running.remove(p);
+            }
+            self.finish(sid, dev_idx, now);
+        }
+        self.maybe_start_decode(di, q);
+    }
+
+    pub fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
+        self.devices
+            .iter()
+            .map(|d| (d.compute_util.average(end), d.memory_util.average(end)))
+            .collect()
+    }
+
+    /// (prefill pool, decode pool) average compute/memory utilization —
+    /// the Fig 2b quadrants.
+    pub fn pool_utilization(&self, end: f64) -> ((f64, f64), (f64, f64)) {
+        let np = self.prefill.len();
+        let avg = |devs: &[Device]| {
+            let n = devs.len().max(1) as f64;
+            (
+                devs.iter().map(|d| d.compute_util.average(end)).sum::<f64>() / n,
+                devs.iter().map(|d| d.memory_util.average(end)).sum::<f64>() / n,
+            )
+        };
+        (avg(&self.devices[..np]), avg(&self.devices[np..]))
+    }
+}
+
+impl Engine for DistServeEngine {
+    fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+        if !common::request_fits(self.spec, &self.devices[0].spec, &req) {
+            log::debug!("dropping request {} (ctx {} + out {} exceeds device KV)",
+                req.id, req.prompt_len, req.output_len);
+            self.col.dropped += 1;
+            let _ = q;
+            return;
+        }
+        let pi = self.route_prefill();
+        let sid = self.seqs.len() as u64;
+        let mut seq = Seq::new(req);
+        seq.instance = self.prefill[pi].device;
+        self.seqs.push(Some(seq));
+        self.inflight += 1;
+        self.prefill[pi].waiting.push_back(sid);
+        self.maybe_start_prefill(pi, q);
+    }
+
+    fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
+        match t.tag {
+            tags::STEP_DONE => {
+                let idx = t.a as usize;
+                if idx < self.prefill.len() {
+                    self.prefill_done(idx, q);
+                } else {
+                    self.decode_done(idx - self.prefill.len(), q);
+                }
+            }
+            tags::KV_ARRIVE => {
+                let di = t.a as usize;
+                self.admit_queue[di].push_back(t.b);
+                self.try_admit(di, q);
+                self.maybe_start_decode(di, q);
+            }
+            _ => unreachable!("distserve got unknown timer {t:?}"),
+        }
+    }
+
+    fn collector(&mut self) -> &mut Collector {
+        &mut self.col
+    }
+
+    fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    fn on_drain(&mut self, now: f64) {
+        for d in self.devices.iter_mut() {
+            d.compute_util.set(now, 0.0);
+            d.touch_mem(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ExperimentConfig};
+    use crate::sim;
+    use crate::workload::{LengthProfile, WorkloadConfig};
+
+    fn cfg(rps: f64, seed: u64) -> ExperimentConfig {
+        let mut c =
+            ExperimentConfig::default_for(EngineKind::DistServe, "llama-13b", rps, seed);
+        c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, rps, 20.0, seed);
+        c.warmup = 0.0;
+        c
+    }
+
+    #[test]
+    fn completes_all_and_conserves() {
+        let c = cfg(5.0, 1);
+        let reqs = c.workload.generate();
+        let n = reqs.len();
+        let mut e = DistServeEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        assert_eq!(e.collector().completed() as usize, n);
+        sim::check_conservation(&res, &mut e).unwrap();
+    }
+
+    #[test]
+    fn kv_is_transferred_prefill_to_decode() {
+        let c = cfg(5.0, 2);
+        let reqs = c.workload.generate();
+        let mut e = DistServeEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        assert!(e.kv_transfer_bytes > 0, "PD must push KV");
+    }
+
+    #[test]
+    fn fig2b_asymmetry_prefill_compute_decode_memory() {
+        // Long prompts, plenty of decoding: prefill devices should show much
+        // higher compute utilization; decode devices much higher mem growth.
+        let mut c = cfg(1.5, 3);
+        c.workload = WorkloadConfig::poisson(LengthProfile::LongBench, 1.5, 40.0, 3);
+        c.warmup = 0.0;
+        let reqs = c.workload.generate();
+        let mut e = DistServeEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        let ((p_c, _p_m), (d_c, _d_m)) = e.pool_utilization(res.end_time);
+        assert!(
+            p_c > d_c * 1.5,
+            "prefill compute {p_c:.3} must exceed decode compute {d_c:.3}"
+        );
+    }
+
+    #[test]
+    fn all_kv_freed_at_drain() {
+        let c = cfg(4.0, 4);
+        let reqs = c.workload.generate();
+        let mut e = DistServeEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        for d in &e.devices {
+            assert_eq!(d.kv_bytes, 0, "device {} leaked KV", d.id);
+        }
+    }
+
+    #[test]
+    fn ttft_includes_queueing_under_load() {
+        let c_lo = cfg(1.0, 5);
+        let c_hi = cfg(20.0, 5);
+        let mut e_lo = DistServeEngine::new(&c_lo);
+        let mut e_hi = DistServeEngine::new(&c_hi);
+        sim::run(&mut e_lo, c_lo.workload.generate(), 1e6);
+        sim::run(&mut e_hi, c_hi.workload.generate(), 1e6);
+        let r_lo = e_lo.col.report(1.0);
+        let r_hi = e_hi.col.report(1.0);
+        assert!(
+            r_hi.ttft.mean() > r_lo.ttft.mean(),
+            "higher load must raise TTFT: {} vs {}",
+            r_hi.ttft.mean(),
+            r_lo.ttft.mean()
+        );
+    }
+
+    #[test]
+    fn single_token_outputs_never_reach_decode_pool() {
+        let mut c = cfg(2.0, 6);
+        c.workload.duration = 10.0;
+        let mut reqs = c.workload.generate();
+        for r in reqs.iter_mut() {
+            r.output_len = 1;
+        }
+        let n = reqs.len();
+        let mut e = DistServeEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        assert_eq!(e.collector().completed() as usize, n);
+        assert_eq!(e.kv_transfer_bytes, 0, "L_out=1 finishes at prefill");
+    }
+}

@@ -1,0 +1,364 @@
+//! HuggingFace-Transformers-like static batching baseline (Fig 1).
+//!
+//! The defining inefficiencies modeled:
+//! * **static batches**: a batch is formed FCFS when the instance goes
+//!   idle; nothing joins a running batch (no continuous batching);
+//! * **padding**: every sequence in the batch is computed at the padded
+//!   prompt length, and every decode step computes the full batch until the
+//!   *longest* output finishes (finished rows keep burning compute);
+//! * **no paging**: KV is reserved up front at padded prompt + max output
+//!   for every slot.
+
+use super::common::{self, tags, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use crate::cluster::{Cluster, Device, Role};
+use crate::config::ExperimentConfig;
+use crate::metrics::Collector;
+use crate::perfmodel::{self, Efficiency, PrefillItem};
+use crate::model::ModelSpec;
+use crate::sim::{Engine, EventQueue, Timer};
+use crate::workload::Request;
+
+/// A running static batch on one instance.
+#[derive(Debug, Clone)]
+struct StaticBatch {
+    seqs: Vec<u64>,
+    padded_prompt: u64,
+    max_output: u64,
+    steps_done: u64,
+    /// Reserved KV bytes per slot (padded, freed only at batch end).
+    slot_kv: u64,
+}
+
+/// Static-batching engine over N unified devices, round-robin routed.
+pub struct HftEngine {
+    spec: &'static ModelSpec,
+    eff: Efficiency,
+    max_batch: u64,
+    pub devices: Vec<Device>,
+    pub insts: Vec<InstanceSim>,
+    batches: Vec<Option<StaticBatch>>,
+    seqs: Vec<Option<Seq>>,
+    col: Collector,
+    inflight: u64,
+    rr: usize,
+}
+
+impl HftEngine {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        let cluster = Cluster::homogeneous(cfg.n_devices, cfg.gpu.clone(), Role::Unified);
+        let mut devices = cluster.devices;
+        for d in devices.iter_mut() {
+            d.weight_bytes = cfg.model.weight_bytes();
+        }
+        let insts = (0..cfg.n_devices).map(|i| InstanceSim::new(i, 1.0)).collect();
+        let mut col = Collector::new();
+        col.window_start = cfg.warmup;
+        HftEngine {
+            spec: cfg.model,
+            eff: cfg.eff,
+            max_batch: cfg.max_batch_seqs.min(16), // HFT typical small batches
+            devices,
+            insts,
+            batches: (0..cfg.n_devices).map(|_| None).collect(),
+            seqs: Vec::new(),
+            col,
+            inflight: 0,
+            rr: 0,
+        }
+    }
+
+    fn maybe_start(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        if self.insts[i].is_busy() || self.batches[i].is_some() {
+            return;
+        }
+        if self.insts[i].waiting.is_empty() {
+            return;
+        }
+        // form a static batch FCFS under the memory reservation constraint
+        let dev_idx = self.insts[i].device;
+        let mut chosen: Vec<u64> = Vec::new();
+        let mut padded_prompt = 0u64;
+        let mut max_output = 0u64;
+        loop {
+            let Some(&sid) = self.insts[i].waiting.front() else { break };
+            if chosen.len() as u64 >= self.max_batch {
+                break;
+            }
+            let s = self.seqs[sid as usize].as_ref().unwrap();
+            let new_pad = padded_prompt.max(s.req.prompt_len);
+            let new_out = max_output.max(s.req.output_len);
+            let slot_kv = common::kv_bytes(self.spec, new_pad + new_out);
+            let need = slot_kv * (chosen.len() as u64 + 1);
+            if need > self.devices[dev_idx].mem_free() && !chosen.is_empty() {
+                break;
+            }
+            self.insts[i].waiting.pop_front();
+            chosen.push(sid);
+            padded_prompt = new_pad;
+            max_output = new_out;
+        }
+        if chosen.is_empty() {
+            return;
+        }
+        let slot_kv = common::kv_bytes(self.spec, padded_prompt + max_output);
+        let reserve = slot_kv * chosen.len() as u64;
+        let reserve = reserve.min(self.devices[dev_idx].mem_free()); // clamp (head-of-line oversize)
+        self.devices[dev_idx].alloc_kv(now, reserve);
+        // padded prefill: every row computed at padded_prompt
+        let items: Vec<PrefillItem> = chosen
+            .iter()
+            .map(|_| PrefillItem {
+                prompt: padded_prompt,
+                cached: 0,
+            })
+            .collect();
+        for &sid in &chosen {
+            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            seq.phase = SeqPhase::Prefilling;
+            seq.prefill_start = now;
+        }
+        let st = perfmodel::prefill_step(
+            self.spec,
+            &self.devices[dev_idx].spec,
+            &self.eff,
+            &items,
+            1.0,
+        );
+        common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
+        self.batches[i] = Some(StaticBatch {
+            seqs: chosen.clone(),
+            padded_prompt,
+            max_output,
+            steps_done: 0,
+            slot_kv: reserve / chosen.len().max(1) as u64,
+        });
+        self.insts[i].step = Some(StepInfo {
+            kind: StepKind::Prefill,
+            seqs: chosen,
+            st,
+            overhead: 0.0,
+        });
+        q.push_after(st.time, Timer::with(tags::STEP_DONE, i as u64, 0));
+    }
+
+    fn step_done(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        let step = self.insts[i].step.take().expect("step");
+        let dev_idx = self.insts[i].device;
+        common::mark_step_end(
+            &mut self.devices[dev_idx],
+            &mut self.insts[i],
+            now,
+            step.st.time,
+            &step.st,
+        );
+        let mut batch = self.batches[i].take().expect("batch");
+        match step.kind {
+            StepKind::Prefill => {
+                for &sid in &batch.seqs {
+                    let seq = self.seqs[sid as usize].as_mut().unwrap();
+                    seq.ctx = batch.padded_prompt + 1;
+                    seq.generated = 1;
+                    seq.first_token = now;
+                    seq.phase = SeqPhase::Decoding;
+                    if seq.is_done() {
+                        seq.phase = SeqPhase::Finished;
+                        let rec = seq.record(now);
+                        self.col.finish(rec);
+                        self.inflight -= 1;
+                    }
+                }
+                batch.steps_done = 1;
+            }
+            StepKind::StaticDecode | StepKind::Decode => {
+                batch.steps_done += 1;
+                for &sid in &batch.seqs {
+                    let Some(seq) = self.seqs[sid as usize].as_mut() else {
+                        continue;
+                    };
+                    if seq.phase != SeqPhase::Decoding {
+                        continue;
+                    }
+                    seq.generated += 1;
+                    seq.ctx += 1;
+                    if seq.is_done() {
+                        seq.phase = SeqPhase::Finished;
+                        let rec = seq.record(now);
+                        self.col.finish(rec);
+                        self.inflight -= 1;
+                    }
+                }
+            }
+        }
+        if batch.steps_done < batch.max_output {
+            // lock-step decode over the FULL batch (padding waste): context
+            // grows at the padded length for every slot.
+            let bsz = batch.seqs.len() as u64;
+            let total_ctx = bsz * (batch.padded_prompt + batch.steps_done);
+            let st = perfmodel::decode_step(
+                self.spec,
+                &self.devices[dev_idx].spec,
+                &self.eff,
+                bsz,
+                total_ctx,
+                1.0,
+            );
+            common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
+            self.insts[i].step = Some(StepInfo {
+                kind: StepKind::StaticDecode,
+                seqs: batch.seqs.clone(),
+                st,
+                overhead: 0.0,
+            });
+            self.batches[i] = Some(batch);
+            q.push_after(
+                self.insts[i].step.as_ref().unwrap().st.time,
+                Timer::with(tags::STEP_DONE, i as u64, 0),
+            );
+        } else {
+            // batch complete: release the reservation, drop seq payloads
+            let reserve = batch.slot_kv * batch.seqs.len() as u64;
+            self.devices[dev_idx].free_kv(now, reserve);
+            for &sid in &batch.seqs {
+                self.seqs[sid as usize] = None;
+            }
+            self.maybe_start(i, q);
+        }
+    }
+
+    pub fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
+        self.devices
+            .iter()
+            .map(|d| (d.compute_util.average(end), d.memory_util.average(end)))
+            .collect()
+    }
+}
+
+impl Engine for HftEngine {
+    fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+        if !common::request_fits(self.spec, &self.devices[0].spec, &req) {
+            log::debug!("dropping request {} (ctx {} + out {} exceeds device KV)",
+                req.id, req.prompt_len, req.output_len);
+            self.col.dropped += 1;
+            let _ = q;
+            return;
+        }
+        let i = self.rr % self.insts.len();
+        self.rr += 1;
+        let sid = self.seqs.len() as u64;
+        let mut seq = Seq::new(req);
+        seq.instance = self.insts[i].device;
+        self.seqs.push(Some(seq));
+        self.inflight += 1;
+        self.insts[i].waiting.push_back(sid);
+        self.maybe_start(i, q);
+    }
+
+    fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
+        match t.tag {
+            tags::STEP_DONE => self.step_done(t.a as usize, q),
+            _ => unreachable!("hft got unknown timer {t:?}"),
+        }
+    }
+
+    fn collector(&mut self) -> &mut Collector {
+        &mut self.col
+    }
+
+    fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    fn on_drain(&mut self, now: f64) {
+        for d in self.devices.iter_mut() {
+            d.compute_util.set(now, 0.0);
+            d.touch_mem(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ExperimentConfig};
+    use crate::sim;
+    use crate::workload::{LengthProfile, WorkloadConfig};
+
+    fn cfg(rps: f64, seed: u64) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default_for(EngineKind::HfStatic, "llama-13b", rps, seed);
+        c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, rps, 20.0, seed);
+        c.warmup = 0.0;
+        c
+    }
+
+    #[test]
+    fn completes_all_and_conserves() {
+        let c = cfg(4.0, 1);
+        let reqs = c.workload.generate();
+        let n = reqs.len();
+        let mut e = HftEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        assert_eq!(e.collector().completed() as usize, n);
+        sim::check_conservation(&res, &mut e).unwrap();
+    }
+
+    #[test]
+    fn kv_reservations_fully_released() {
+        let c = cfg(6.0, 2);
+        let reqs = c.workload.generate();
+        let mut e = HftEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        for d in &e.devices {
+            assert_eq!(d.kv_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn hft_slower_than_vllm_under_load() {
+        // the Fig 1 comparison: same workload, HFT static batching must
+        // deliver lower throughput than continuous batching.
+        let c = cfg(10.0, 3);
+        let reqs = c.workload.generate();
+        let mut h = HftEngine::new(&c);
+        let rh = sim::run(&mut h, reqs.clone(), 1e6);
+        let hf = h.collector().report(rh.end_time);
+
+        let mut cv = c.clone();
+        cv.engine = EngineKind::Vllm;
+        let mut v = super::super::vllm_sim::VllmEngine::new(&cv);
+        let rv = sim::run(&mut v, reqs, 1e6);
+        let vl = v.collector().report(rv.end_time);
+        assert!(
+            vl.throughput_tok_s > hf.throughput_tok_s,
+            "vllm {:.1} must beat hft {:.1}",
+            vl.throughput_tok_s,
+            hf.throughput_tok_s
+        );
+    }
+
+    #[test]
+    fn later_arrivals_wait_for_batch_completion() {
+        // one long batch, a later short request: with static batching its
+        // TTFT must include the running batch's completion.
+        let mut c = cfg(0.0, 4);
+        c.n_devices = 1;
+        let mk = |id, at, out| Request {
+            id,
+            arrival: at,
+            prompt_len: 50,
+            output_len: out,
+            cache_tokens: vec![id as u32],
+        };
+        let reqs = vec![mk(0, 0.0, 400), mk(1, 0.1, 4)];
+        let mut e = HftEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        let recs = &e.col.records;
+        let r1 = recs.iter().find(|r| r.id == 1).unwrap();
+        let r0 = recs.iter().find(|r| r.id == 0).unwrap();
+        assert!(
+            r1.first_token >= r0.completion,
+            "request 1 must wait for the whole batch 0 run"
+        );
+    }
+}

@@ -1,0 +1,108 @@
+//! The three serving systems the paper evaluates, plus the HFT static-
+//! batching baseline of Fig 1 — all as discrete-event simulations over the
+//! [`crate::sim`] driver and the [`crate::perfmodel`] roofline:
+//!
+//! * [`hft`] — HuggingFace-Transformers-like static batching (Fig 1).
+//! * [`vllm_sim`] — monolithic continuous batching + paged KV + prefix
+//!   caches with a cache-aware router (vLLM/SGLang-like baseline).
+//! * [`distserve_sim`] — static PD disaggregation with prefill→decode KV
+//!   push (DistServe-like baseline).
+//! * [`banaserve`] — the paper's system: PD disaggregation + Global KV
+//!   Cache Store + dynamic layer/attention migration + load-aware routing.
+
+pub mod banaserve;
+pub mod common;
+pub mod distserve_sim;
+pub mod hft;
+pub mod vllm_sim;
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::metrics::Report;
+use crate::sim::{self, Engine};
+
+/// Hard ceiling on simulated time (safety net against runaway runs).
+pub const MAX_SIM_TIME: f64 = 24.0 * 3600.0;
+
+/// Engine-specific side channels the figures need.
+#[derive(Debug, Clone, Default)]
+pub struct EngineExtras {
+    pub preemptions: u64,
+    pub recomputed_tokens: u64,
+    pub kv_transfer_bytes: u64,
+    pub layer_migrations: u64,
+    pub attention_migrations: u64,
+    pub store_hit_rate: f64,
+    pub routed_counts: Vec<u64>,
+}
+
+/// Everything a figure bench consumes from one run.
+#[derive(Debug)]
+pub struct ExperimentOutcome {
+    pub submitted: u64,
+    pub report: Report,
+    /// Per-device (compute, memory) time-averaged utilization.
+    pub device_util: Vec<(f64, f64)>,
+    pub extras: EngineExtras,
+}
+
+/// Build the configured engine, run the workload, and return the report
+/// plus per-device utilization — the single entry point used by the CLI,
+/// the examples, and every figure bench.
+pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
+    let reqs = cfg.workload.generate();
+    let submitted = reqs.len() as u64;
+    let (report, util, extras) = match cfg.engine {
+        EngineKind::HfStatic => {
+            let mut e = hft::HftEngine::new(cfg);
+            let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
+            sim::check_conservation(&res, &mut e).expect("hft conservation");
+            let rep = e.collector().report(res.end_time);
+            (rep, e.device_utilization(res.end_time), EngineExtras::default())
+        }
+        EngineKind::Vllm => {
+            let mut e = vllm_sim::VllmEngine::new(cfg);
+            let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
+            sim::check_conservation(&res, &mut e).expect("vllm conservation");
+            let rep = e.collector().report(res.end_time);
+            let extras = EngineExtras {
+                preemptions: e.preemptions,
+                recomputed_tokens: e.recomputed_tokens,
+                routed_counts: e.routed_counts.clone(),
+                ..Default::default()
+            };
+            (rep, e.device_utilization(res.end_time), extras)
+        }
+        EngineKind::DistServe => {
+            let mut e = distserve_sim::DistServeEngine::new(cfg);
+            let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
+            sim::check_conservation(&res, &mut e).expect("distserve conservation");
+            let rep = e.collector().report(res.end_time);
+            let extras = EngineExtras {
+                kv_transfer_bytes: e.kv_transfer_bytes,
+                ..Default::default()
+            };
+            (rep, e.device_utilization(res.end_time), extras)
+        }
+        EngineKind::BanaServe => {
+            let mut e = banaserve::BanaEngine::new(cfg);
+            let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
+            sim::check_conservation(&res, &mut e).expect("banaserve conservation");
+            let rep = e.collector().report(res.end_time);
+            let extras = EngineExtras {
+                kv_transfer_bytes: e.kv_transfer_bytes,
+                layer_migrations: e.stats.layer_migrations,
+                attention_migrations: e.stats.attention_migrations,
+                store_hit_rate: e.store_hit_rate(),
+                routed_counts: e.routed_counts.clone(),
+                ..Default::default()
+            };
+            (rep, e.device_utilization(res.end_time), extras)
+        }
+    };
+    ExperimentOutcome {
+        submitted,
+        report,
+        device_util: util,
+        extras,
+    }
+}

@@ -1,0 +1,544 @@
+//! vLLM-like baseline: monolithic (unified) instances with continuous
+//! batching, paged KV accounting, per-instance prefix caches, and a
+//! prefix-cache-aware multi-instance router (the SGLang-style policy whose
+//! load skew Fig 2a demonstrates).
+//!
+//! Modeling notes (DESIGN.md §2): the prefix-cache index is budgeted
+//! separately from running-sequence KV (hits reduce *compute*; the
+//! residency bookkeeping of cached blocks is folded into the budget), and
+//! preemption uses vLLM's recompute strategy.
+
+use super::common::{self, tags, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use crate::cluster::{Cluster, Device, Role};
+use crate::config::ExperimentConfig;
+use crate::kvcache::RadixTree;
+use crate::metrics::Collector;
+use crate::perfmodel::{self, Efficiency};
+use crate::model::ModelSpec;
+use crate::sim::{Engine, EventQueue, Timer};
+use crate::workload::Request;
+
+/// Multi-instance routing policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouterPolicy {
+    /// Prefer the instance with the longest cached prefix, tempered by
+    /// load — the policy that *creates* the Fig 2a positive-feedback skew.
+    CacheAware { w_cache: f64, w_load: f64 },
+    /// Ignore caches entirely; pick min (load, queue).
+    LeastLoaded,
+    RoundRobin,
+}
+
+/// Monolithic continuous-batching engine over N unified instances.
+pub struct VllmEngine {
+    spec: &'static ModelSpec,
+    eff: Efficiency,
+    limits: BatchLimits,
+    pub devices: Vec<Device>,
+    pub insts: Vec<InstanceSim>,
+    /// Per-instance prefix cache (None = prefix caching disabled).
+    pub caches: Vec<RadixTree>,
+    pub prefix_caching: bool,
+    /// Token budget of each instance's prefix cache.
+    cache_budget: u64,
+    pub policy: RouterPolicy,
+    rr_next: usize,
+    seqs: Vec<Option<Seq>>,
+    col: Collector,
+    inflight: u64,
+    /// Recomputed prefix tokens (had to be computed because the cache of
+    /// the routed instance lacked them) — the Fig 2a "repeated computation".
+    pub recomputed_tokens: u64,
+    pub preemptions: u64,
+    /// Requests routed to each instance (Fig 2a skew metric).
+    pub routed_counts: Vec<u64>,
+}
+
+impl VllmEngine {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        Self::with_policy(
+            cfg,
+            RouterPolicy::CacheAware {
+                w_cache: 1.0,
+                w_load: 0.5,
+            },
+            true,
+        )
+    }
+
+    pub fn with_policy(
+        cfg: &ExperimentConfig,
+        policy: RouterPolicy,
+        prefix_caching: bool,
+    ) -> Self {
+        let cluster = Cluster::homogeneous(cfg.n_devices, cfg.gpu.clone(), Role::Unified);
+        let mut devices = cluster.devices;
+        for d in devices.iter_mut() {
+            d.weight_bytes = cfg.model.weight_bytes();
+        }
+        let insts = (0..cfg.n_devices).map(|i| InstanceSim::new(i, 1.0)).collect();
+        let caches = (0..cfg.n_devices).map(|_| RadixTree::new()).collect();
+        // prefix cache budget: tokens worth ~20% of post-weight HBM
+        let free = devices[0].mem_free();
+        let cache_budget = free / 5 / cfg.model.kv_bytes_per_token().max(1);
+        let mut col = Collector::new();
+        col.window_start = cfg.warmup;
+        VllmEngine {
+            spec: cfg.model,
+            eff: cfg.eff,
+            limits: BatchLimits {
+                max_batch_tokens: cfg.max_batch_tokens,
+                max_batch_seqs: cfg.max_batch_seqs,
+            },
+            devices,
+            insts,
+            caches,
+            prefix_caching,
+            cache_budget,
+            policy,
+            rr_next: 0,
+            seqs: Vec::new(),
+            col,
+            inflight: 0,
+            recomputed_tokens: 0,
+            preemptions: 0,
+            routed_counts: vec![0; cfg.n_devices],
+        }
+    }
+
+    /// Router: pick the target instance for a request.
+    fn route(&mut self, req: &Request) -> usize {
+        let n = self.insts.len();
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let i = self.rr_next % n;
+                self.rr_next += 1;
+                i
+            }
+            RouterPolicy::LeastLoaded => (0..n)
+                .min_by_key(|&i| (self.insts[i].load_seqs(), self.insts[i].queue_len(), i))
+                .unwrap(),
+            RouterPolicy::CacheAware { w_cache, w_load } => {
+                let max_load = self
+                    .insts
+                    .iter()
+                    .map(|x| x.load_seqs())
+                    .max()
+                    .unwrap_or(0)
+                    .max(1) as f64;
+                let plen = req.cache_tokens.len().max(1) as f64;
+                (0..n)
+                    .max_by(|&a, &b| {
+                        let score = |i: usize| {
+                            let hit = if self.prefix_caching {
+                                self.caches[i].peek_prefix(&req.cache_tokens) as f64 / plen
+                            } else {
+                                0.0
+                            };
+                            let load = self.insts[i].load_seqs() as f64 / max_load;
+                            w_cache * hit - w_load * load
+                        };
+                        score(a).partial_cmp(&score(b)).unwrap()
+                    })
+                    .unwrap()
+            }
+        }
+    }
+
+    /// Try to start a step on instance `i`.
+    fn maybe_start(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        if self.insts[i].is_busy() || now < self.insts[i].frozen_until {
+            return;
+        }
+        // 1) prefill priority (vLLM default scheduling)
+        let dev_i = self.insts[i].device;
+        let (inst_slice, dev_slice) = (&mut self.insts, &self.devices);
+        let (ids, items) = common::plan_prefill(
+            &mut inst_slice[i],
+            &self.seqs,
+            &dev_slice[dev_i],
+            self.spec,
+            &self.limits,
+        );
+        if !ids.is_empty() {
+            let dev_idx = self.insts[i].device;
+            for &sid in &ids {
+                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                seq.phase = SeqPhase::Prefilling;
+                if seq.prefill_start < 0.0 {
+                    seq.prefill_start = now;
+                }
+                let kv = common::kv_bytes(self.spec, seq.req.prompt_len + 1);
+                seq.kv_on_device = kv;
+                self.devices[dev_idx].alloc_kv(now, kv);
+            }
+            let st = perfmodel::prefill_step(
+                self.spec,
+                &self.devices[dev_idx].spec,
+                &self.eff,
+                &items,
+                self.insts[i].share,
+            );
+            common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
+            self.insts[i].step = Some(StepInfo {
+                kind: StepKind::Prefill,
+                seqs: ids,
+                st,
+                overhead: 0.0,
+            });
+            q.push_after(st.time, Timer::with(tags::STEP_DONE, i as u64, 0));
+            return;
+        }
+        // 2) decode
+        if self.insts[i].running.is_empty() {
+            return;
+        }
+        // ensure memory for one more token per running seq; preempt if needed
+        loop {
+            let dev = &self.devices[self.insts[i].device];
+            let mut need: u64 = 0;
+            for &sid in &self.insts[i].running {
+                let s = self.seqs[sid as usize].as_ref().unwrap();
+                need += common::kv_bytes(self.spec, s.ctx + 1) - s.kv_on_device;
+            }
+            if need <= dev.mem_free() {
+                break;
+            }
+            // vLLM recompute preemption: evict the most recent sequence
+            let victim = *self.insts[i].running.last().unwrap();
+            self.preempt(i, victim, now);
+            if self.insts[i].running.is_empty() {
+                return; // everything preempted; prefill will retry them
+            }
+        }
+        let (ids, st) = common::plan_decode(
+            &self.insts[i],
+            &self.seqs,
+            self.spec,
+            &self.devices[self.insts[i].device].spec,
+            &self.eff,
+            &self.limits,
+        );
+        let dev_idx = self.insts[i].device;
+        common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
+        let overhead = self.insts[i].decode_overhead;
+        self.insts[i].step = Some(StepInfo {
+            kind: StepKind::Decode,
+            seqs: ids,
+            st,
+            overhead,
+        });
+        q.push_after(st.time + overhead, Timer::with(tags::STEP_DONE, i as u64, 0));
+    }
+
+    fn preempt(&mut self, i: usize, sid: u64, now: f64) {
+        let pos = self.insts[i].running.iter().position(|&x| x == sid).unwrap();
+        self.insts[i].running.remove(pos);
+        let dev_idx = self.insts[i].device;
+        let seq = self.seqs[sid as usize].as_mut().unwrap();
+        self.devices[dev_idx].free_kv(now, seq.kv_on_device);
+        seq.kv_on_device = 0;
+        // recompute: generated tokens are lost; prompt re-prefills (the
+        // prefix cache may still cover the prompt portion)
+        seq.ctx = 0;
+        seq.generated = 0;
+        seq.phase = SeqPhase::Waiting;
+        seq.preemptions += 1;
+        self.preemptions += 1;
+        self.insts[i].waiting.push_front(sid);
+    }
+
+    fn finish(&mut self, sid: u64, now: f64) {
+        let seq = self.seqs[sid as usize].as_mut().unwrap();
+        seq.phase = SeqPhase::Finished;
+        let rec = seq.record(now);
+        let kv = seq.kv_on_device;
+        let inst = seq.instance;
+        seq.kv_on_device = 0;
+        let dev_idx = self.insts[inst].device;
+        self.devices[dev_idx].free_kv(now, kv);
+        self.col.finish(rec);
+        self.inflight -= 1;
+        self.seqs[sid as usize] = None; // drop payload
+    }
+
+    fn step_done(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        let step = self.insts[i].step.take().expect("step in flight");
+        let dev_idx = self.insts[i].device;
+        common::mark_step_end(
+            &mut self.devices[dev_idx],
+            &mut self.insts[i],
+            now,
+            step.st.time + step.overhead,
+            &step.st,
+        );
+        match step.kind {
+            StepKind::Prefill => {
+                for sid in step.seqs {
+                    let (cache_tokens, done) = {
+                        let seq = self.seqs[sid as usize].as_mut().unwrap();
+                        seq.ctx = seq.req.prompt_len + 1;
+                        seq.generated = 1;
+                        seq.first_token = now;
+                        seq.phase = SeqPhase::Decoding;
+                        (seq.req.cache_tokens.clone(), seq.is_done())
+                    };
+                    if self.prefix_caching {
+                        self.caches[i].insert(&cache_tokens);
+                        let evict_budget = self.cache_budget;
+                        self.caches[i].evict_to(evict_budget);
+                    }
+                    if done {
+                        self.finish(sid, now);
+                    } else {
+                        self.insts[i].running.push(sid);
+                    }
+                }
+            }
+            StepKind::Decode | StepKind::StaticDecode => {
+                let mut finished = Vec::new();
+                for &sid in &step.seqs {
+                    let seq = self.seqs[sid as usize].as_mut().unwrap();
+                    if seq.phase != SeqPhase::Decoding {
+                        continue; // preempted mid-flight (defensive)
+                    }
+                    seq.generated += 1;
+                    seq.ctx += 1;
+                    let new_kv = common::kv_bytes(self.spec, seq.ctx);
+                    if new_kv > seq.kv_on_device {
+                        let delta = new_kv - seq.kv_on_device;
+                        seq.kv_on_device = new_kv;
+                        self.devices[dev_idx].alloc_kv(now, delta);
+                    }
+                    if seq.is_done() {
+                        finished.push(sid);
+                    }
+                }
+                for sid in finished {
+                    let pos = self.insts[i].running.iter().position(|&x| x == sid);
+                    if let Some(p) = pos {
+                        self.insts[i].running.remove(p);
+                    }
+                    self.finish(sid, now);
+                }
+            }
+        }
+        self.maybe_start(i, q);
+    }
+
+    /// Final per-device (compute, memory) utilization averages.
+    pub fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
+        self.devices
+            .iter()
+            .map(|d| (d.compute_util.average(end), d.memory_util.average(end)))
+            .collect()
+    }
+
+    /// Per-instance received request counts (for the Fig 2a skew metric).
+    pub fn per_instance_load(&self) -> Vec<usize> {
+        self.insts.iter().map(|x| x.load_seqs()).collect()
+    }
+
+    /// Duplicate prefix tokens stored across instance caches: total stored
+    /// minus the largest single cache — a lower bound on the Fig 2a
+    /// "redundant storage" (exact dedup would need the merged tree).
+    pub fn redundant_cache_tokens(&self) -> u64 {
+        let total: u64 = self.caches.iter().map(|c| c.token_count()).sum();
+        let max = self.caches.iter().map(|c| c.token_count()).max().unwrap_or(0);
+        total.saturating_sub(max)
+    }
+}
+
+impl Engine for VllmEngine {
+    fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+        if !common::request_fits(self.spec, &self.devices[0].spec, &req) {
+            log::debug!("dropping request {} (ctx {} + out {} exceeds device KV)",
+                req.id, req.prompt_len, req.output_len);
+            self.col.dropped += 1;
+            let _ = q;
+            return;
+        }
+        let i = self.route(&req);
+        self.routed_counts[i] += 1;
+        let sid = self.seqs.len() as u64;
+        let mut seq = Seq::new(req);
+        seq.instance = i;
+        // prefix hit at the routed instance (LRU refresh + stats)
+        if self.prefix_caching {
+            let hit = self.caches[i].match_prefix(&seq.req.cache_tokens);
+            // a prompt must re-compute at least its final token
+            seq.cached = hit.min(seq.req.prompt_len.saturating_sub(1));
+            // tokens another instance had cached but this one must recompute
+            let best: u64 = self
+                .caches
+                .iter()
+                .map(|c| c.peek_prefix(&seq.req.cache_tokens))
+                .max()
+                .unwrap_or(0);
+            self.recomputed_tokens += best.saturating_sub(hit);
+        }
+        self.seqs.push(Some(seq));
+        self.inflight += 1;
+        self.insts[i].waiting.push_back(sid);
+        self.maybe_start(i, q);
+    }
+
+    fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
+        match t.tag {
+            tags::STEP_DONE => self.step_done(t.a as usize, q),
+            _ => unreachable!("vllm engine got unknown timer {t:?}"),
+        }
+    }
+
+    fn collector(&mut self) -> &mut Collector {
+        &mut self.col
+    }
+
+    fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    fn on_drain(&mut self, now: f64) {
+        for d in self.devices.iter_mut() {
+            d.compute_util.set(now, 0.0);
+            d.touch_mem(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ExperimentConfig};
+    use crate::sim;
+    use crate::workload::{LengthProfile, WorkloadConfig};
+
+    fn cfg(rps: f64, seed: u64) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", rps, seed);
+        c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, rps, 20.0, seed);
+        c.warmup = 0.0;
+        c
+    }
+
+    #[test]
+    fn completes_all_requests_and_conserves() {
+        let c = cfg(4.0, 1);
+        let reqs = c.workload.generate();
+        let n = reqs.len();
+        let mut e = VllmEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        assert_eq!(e.collector().completed() as usize, n);
+        sim::check_conservation(&res, &mut e).unwrap();
+    }
+
+    #[test]
+    fn latencies_are_ordered_sanely() {
+        let c = cfg(6.0, 2);
+        let reqs = c.workload.generate();
+        let mut e = VllmEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        for r in &e.col.records {
+            assert!(r.ttft() > 0.0);
+            assert!(r.e2e() >= r.ttft());
+            assert!(r.queue_delay() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn cache_aware_router_skews_load_with_popular_prefixes() {
+        let mut c = cfg(12.0, 3);
+        c.workload.prefix.share_prob = 0.95;
+        c.workload.prefix.n_templates = 3;
+        c.workload.prefix.zipf_s = 1.5;
+        c.workload.prefix.shared_frac = (0.8, 0.95);
+        let reqs = c.workload.generate();
+        let mut e = VllmEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        let routed = e.routed_counts.clone();
+        let max = *routed.iter().max().unwrap() as f64;
+        let min = *routed.iter().min().unwrap() as f64;
+        assert!(
+            max > 2.0 * min.max(1.0),
+            "cache-aware routing should skew: {routed:?}"
+        );
+    }
+
+    #[test]
+    fn least_loaded_router_balances() {
+        let mut c = cfg(12.0, 3);
+        c.workload.prefix.share_prob = 0.95;
+        c.workload.prefix.n_templates = 3;
+        c.workload.prefix.zipf_s = 1.5;
+        let reqs = c.workload.generate();
+        let mut e = VllmEngine::with_policy(&c, RouterPolicy::LeastLoaded, true);
+        sim::run(&mut e, reqs, 1e6);
+        let routed = e.routed_counts.clone();
+        let max = *routed.iter().max().unwrap() as f64;
+        let min = *routed.iter().min().unwrap() as f64;
+        assert!(
+            max < 1.7 * min.max(1.0),
+            "least-loaded must balance: {routed:?}"
+        );
+    }
+
+    #[test]
+    fn prefix_hits_reduce_recompute_latency() {
+        // same template repeated: later requests hit the instance cache
+        let mut c = cfg(4.0, 4);
+        c.n_devices = 1;
+        c.workload.prefix.share_prob = 1.0;
+        c.workload.prefix.n_templates = 1;
+        c.workload.prefix.shared_frac = (0.9, 0.95);
+        c.workload.duration = 20.0;
+        let reqs = c.workload.generate();
+        assert!(reqs.len() > 5);
+        let mut e = VllmEngine::new(&c);
+        sim::run(&mut e, reqs, 1e6);
+        let cached_total: u64 = e.col.records.iter().map(|r| r.cached_tokens).sum();
+        assert!(cached_total > 0, "later requests must hit the prefix cache");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let c = cfg(1.0, 5);
+        let mut e = VllmEngine::with_policy(&c, RouterPolicy::RoundRobin, false);
+        let r = Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_len: 8,
+            output_len: 2,
+            cache_tokens: vec![1],
+        };
+        let picks: Vec<usize> = (0..8).map(|_| e.route(&r)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn memory_pressure_triggers_preemption_not_deadlock() {
+        let mut c = cfg(0.0, 6);
+        c.n_devices = 1;
+        // shrink the device so decode growth hits the wall
+        c.gpu = crate::cluster::GpuSpec {
+            name: "toy",
+            peak_flops: 312e12,
+            hbm_bytes: c.model.weight_bytes() + 3 * common::kv_bytes(c.model, 600),
+            hbm_bw: 1.5e12,
+        };
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                arrival: 0.0,
+                prompt_len: 400,
+                output_len: 200,
+                cache_tokens: vec![i as u32; 8],
+            })
+            .collect();
+        let mut e = VllmEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        assert_eq!(e.collector().completed(), 4, "all must finish eventually");
+        sim::check_conservation(&res, &mut e).unwrap();
+        assert!(e.preemptions > 0, "tight memory must force preemption");
+    }
+}

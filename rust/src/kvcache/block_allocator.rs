@@ -1,0 +1,273 @@
+//! Paged KV block allocator — the memory manager underneath PagedAttention
+//! (vLLM) and BanaServe's instance-local KV pools.
+//!
+//! KV memory is carved into fixed-size blocks of `block_size` tokens.
+//! Blocks are reference-counted so prefix-sharing (several sequences whose
+//! prompts share a cached prefix point at the same physical blocks) and
+//! copy-on-write forks are safe. Invariants enforced (and property-tested
+//! in `rust/tests/prop_kvcache.rs`):
+//!
+//! * a block is on the free list iff its refcount is zero;
+//! * `free + used == total` at all times;
+//! * double-free / use-after-free are detected and panic.
+
+/// Physical block handle.
+pub type BlockId = u32;
+
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    block_size: u32,
+    refcounts: Vec<u32>,
+    free: Vec<BlockId>,
+}
+
+impl BlockAllocator {
+    pub fn new(num_blocks: u32, block_size: u32) -> Self {
+        assert!(block_size > 0);
+        BlockAllocator {
+            block_size,
+            refcounts: vec![0; num_blocks as usize],
+            free: (0..num_blocks).rev().collect(),
+        }
+    }
+
+    pub fn block_size(&self) -> u32 {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> u32 {
+        self.refcounts.len() as u32
+    }
+
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn used_blocks(&self) -> u32 {
+        self.total_blocks() - self.free_blocks()
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u64) -> u32 {
+        tokens.div_ceil(self.block_size as u64) as u32
+    }
+
+    /// Allocate one block with refcount 1.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refcounts[b as usize], 0);
+        self.refcounts[b as usize] = 1;
+        Some(b)
+    }
+
+    /// Allocate `n` blocks atomically (all or nothing).
+    pub fn alloc_n(&mut self, n: u32) -> Option<Vec<BlockId>> {
+        if self.free_blocks() < n {
+            return None;
+        }
+        Some((0..n).map(|_| self.alloc().unwrap()).collect())
+    }
+
+    /// Increase the refcount (prefix sharing).
+    pub fn incref(&mut self, b: BlockId) {
+        let rc = &mut self.refcounts[b as usize];
+        assert!(*rc > 0, "incref on free block {b}");
+        *rc += 1;
+    }
+
+    /// Decrease the refcount; the block returns to the free list at zero.
+    pub fn decref(&mut self, b: BlockId) {
+        let rc = &mut self.refcounts[b as usize];
+        assert!(*rc > 0, "double free of block {b}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b);
+        }
+    }
+
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refcounts[b as usize]
+    }
+}
+
+/// The block table of one sequence: ordered physical blocks plus the token
+/// count, mirroring what the paged-attention kernel consumes
+/// (python/compile/kernels/paged.py takes exactly this table).
+#[derive(Debug, Clone, Default)]
+pub struct SeqBlocks {
+    pub blocks: Vec<BlockId>,
+    pub tokens: u64,
+}
+
+impl SeqBlocks {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a sequence sharing `shared` leading blocks (prefix hit):
+    /// increfs them. `shared_tokens` must land on a block boundary except
+    /// possibly in the final shared block.
+    pub fn with_shared_prefix(
+        alloc: &mut BlockAllocator,
+        shared: &[BlockId],
+        shared_tokens: u64,
+    ) -> Self {
+        for &b in shared {
+            alloc.incref(b);
+        }
+        SeqBlocks {
+            blocks: shared.to_vec(),
+            tokens: shared_tokens,
+        }
+    }
+
+    /// Capacity in tokens of the currently held blocks.
+    pub fn capacity(&self, alloc: &BlockAllocator) -> u64 {
+        self.blocks.len() as u64 * alloc.block_size() as u64
+    }
+
+    /// Append `n` tokens, allocating blocks as needed. Returns false (and
+    /// changes nothing) if the pool cannot satisfy the allocation.
+    pub fn append(&mut self, alloc: &mut BlockAllocator, n: u64) -> bool {
+        let need_total = self.tokens + n;
+        let need_blocks = alloc.blocks_for(need_total);
+        let have = self.blocks.len() as u32;
+        if need_blocks > have {
+            match alloc.alloc_n(need_blocks - have) {
+                Some(mut bs) => self.blocks.append(&mut bs),
+                None => return false,
+            }
+        }
+        self.tokens = need_total;
+        true
+    }
+
+    /// Release every block (decref).
+    pub fn release(&mut self, alloc: &mut BlockAllocator) {
+        for &b in &self.blocks {
+            alloc.decref(b);
+        }
+        self.blocks.clear();
+        self.tokens = 0;
+    }
+
+    /// Bytes of KV held, given per-token bytes (counts whole blocks — the
+    /// fragmentation PagedAttention bounds to < one block per seq).
+    pub fn bytes(&self, alloc: &BlockAllocator, bytes_per_token: u64) -> u64 {
+        self.blocks.len() as u64 * alloc.block_size() as u64 * bytes_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(4, 16);
+        assert_eq!(a.free_blocks(), 4);
+        let b = a.alloc().unwrap();
+        assert_eq!(a.free_blocks(), 3);
+        assert_eq!(a.refcount(b), 1);
+        a.decref(b);
+        assert_eq!(a.free_blocks(), 4);
+        assert_eq!(a.refcount(b), 0);
+    }
+
+    #[test]
+    fn alloc_n_is_atomic() {
+        let mut a = BlockAllocator::new(3, 16);
+        assert!(a.alloc_n(4).is_none());
+        assert_eq!(a.free_blocks(), 3, "failed alloc_n must not leak");
+        let bs = a.alloc_n(3).unwrap();
+        assert_eq!(bs.len(), 3);
+        assert_eq!(a.free_blocks(), 0);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = BlockAllocator::new(1, 16);
+        let _b = a.alloc().unwrap();
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b = a.alloc().unwrap();
+        a.decref(b);
+        a.decref(b);
+    }
+
+    #[test]
+    fn refcounted_sharing_delays_free() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b = a.alloc().unwrap();
+        a.incref(b); // now 2
+        a.decref(b);
+        assert_eq!(a.free_blocks(), 1, "still shared");
+        a.decref(b);
+        assert_eq!(a.free_blocks(), 2);
+    }
+
+    #[test]
+    fn seq_append_allocates_on_boundaries() {
+        let mut a = BlockAllocator::new(10, 16);
+        let mut s = SeqBlocks::new();
+        assert!(s.append(&mut a, 16));
+        assert_eq!(s.blocks.len(), 1);
+        assert!(s.append(&mut a, 1)); // crosses into block 2
+        assert_eq!(s.blocks.len(), 2);
+        assert!(s.append(&mut a, 15)); // fills block 2 exactly
+        assert_eq!(s.blocks.len(), 2);
+        assert_eq!(s.tokens, 32);
+    }
+
+    #[test]
+    fn seq_append_fails_cleanly_when_pool_exhausted() {
+        let mut a = BlockAllocator::new(2, 16);
+        let mut s = SeqBlocks::new();
+        assert!(s.append(&mut a, 32));
+        let before_tokens = s.tokens;
+        assert!(!s.append(&mut a, 1));
+        assert_eq!(s.tokens, before_tokens, "failed append must not mutate");
+        assert_eq!(s.blocks.len(), 2);
+    }
+
+    #[test]
+    fn shared_prefix_increfs() {
+        let mut a = BlockAllocator::new(8, 16);
+        let mut parent = SeqBlocks::new();
+        parent.append(&mut a, 32);
+        let child =
+            SeqBlocks::with_shared_prefix(&mut a, &parent.blocks, parent.tokens);
+        for &b in &parent.blocks {
+            assert_eq!(a.refcount(b), 2);
+        }
+        let mut child = child;
+        child.release(&mut a);
+        for &b in &parent.blocks {
+            assert_eq!(a.refcount(b), 1, "parent still owns");
+        }
+        parent.release(&mut a);
+        assert_eq!(a.free_blocks(), 8);
+    }
+
+    #[test]
+    fn bytes_counts_whole_blocks() {
+        let mut a = BlockAllocator::new(4, 16);
+        let mut s = SeqBlocks::new();
+        s.append(&mut a, 17); // 2 blocks
+        assert_eq!(s.bytes(&a, 100), 2 * 16 * 100);
+    }
+
+    #[test]
+    fn blocks_for_rounding() {
+        let a = BlockAllocator::new(1, 16);
+        assert_eq!(a.blocks_for(0), 0);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(16), 1);
+        assert_eq!(a.blocks_for(17), 2);
+    }
+}

@@ -1,0 +1,291 @@
+//! Global KV Cache Store (paper §4.2, Fig 5): a CPU/SSD-backed prefix-KV
+//! store shared by *all* prefill and decode instances.
+//!
+//! Because every prefill node can reach every cached prefix, the router no
+//! longer needs cache-placement awareness — the property Alg 2 exploits.
+//! Reads and writes go through the three-stage layer-wise pipeline
+//! ([`super::pipeline`]), so with adequate bandwidth the store is latency-
+//! transparent (Fig 6); when bandwidth is starved the residual stall is
+//! charged to TTFT (the T_load/T_fetch of Eq 21).
+
+use super::pipeline::PipelinePlan;
+use super::radix::RadixTree;
+use crate::cluster::Link;
+use crate::model::ModelSpec;
+
+/// Storage tier of a cached prefix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Cpu,
+    Ssd,
+}
+
+/// Capacity / bandwidth description of the store.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Token capacity of the CPU (DRAM) tier.
+    pub cpu_capacity_tokens: u64,
+    /// Token capacity of the SSD tier (overflow).
+    pub ssd_capacity_tokens: u64,
+    /// GPU <-> store link for the CPU tier (PCIe / fabric).
+    pub cpu_link: Link,
+    /// Effective SSD streaming bandwidth, bytes/s.
+    pub ssd_bw: f64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            cpu_capacity_tokens: 2_000_000,
+            ssd_capacity_tokens: 20_000_000,
+            cpu_link: crate::cluster::NET_200GBPS,
+            ssd_bw: 6e9, // NVMe-class
+        }
+    }
+}
+
+/// Running statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub tokens_served: u64,
+    pub tokens_written: u64,
+    pub tokens_evicted: u64,
+}
+
+/// The shared store: one radix index spanning the cluster.
+#[derive(Debug)]
+pub struct GlobalKvStore {
+    index: RadixTree,
+    config: StoreConfig,
+    stats: StoreStats,
+}
+
+/// Result of a prefix lookup with transfer accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FetchPlan {
+    /// Cached tokens found (leading prefix).
+    pub hit_tokens: u64,
+    /// Which tier the fetch is (mostly) served from.
+    pub tier: Tier,
+    /// Per-layer fetch time (Eq 13).
+    pub t_fetch_layer: f64,
+    /// Residual TTFT stall after pipeline overlap (0 when hidden).
+    pub stall: f64,
+    /// Raw un-overlapped transfer time (for reporting).
+    pub raw_transfer: f64,
+}
+
+impl GlobalKvStore {
+    pub fn new(config: StoreConfig) -> Self {
+        GlobalKvStore {
+            index: RadixTree::new(),
+            config,
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    pub fn token_count(&self) -> u64 {
+        self.index.token_count()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.stats.lookups == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / self.stats.lookups as f64
+        }
+    }
+
+    /// Token-weighted hit rate (the r of Eq 12).
+    pub fn token_hit_rate(&self) -> f64 {
+        self.index.token_hit_rate()
+    }
+
+    fn current_tier(&self) -> Tier {
+        if self.index.token_count() <= self.config.cpu_capacity_tokens {
+            Tier::Cpu
+        } else {
+            Tier::Ssd
+        }
+    }
+
+    /// Effective store bandwidth given tier occupancy: the fraction beyond
+    /// CPU capacity streams at SSD speed.
+    pub fn effective_bandwidth(&self) -> f64 {
+        let total = self.index.token_count();
+        if total == 0 || total <= self.config.cpu_capacity_tokens {
+            return self.config.cpu_link.bandwidth;
+        }
+        let cpu_frac = self.config.cpu_capacity_tokens as f64 / total as f64;
+        // time-weighted (harmonic) combination of the two tiers
+        1.0 / (cpu_frac / self.config.cpu_link.bandwidth
+            + (1.0 - cpu_frac) / self.config.ssd_bw)
+    }
+
+    /// Look up the cached prefix of `tokens` and produce a fetch plan given
+    /// the per-layer forward time of the prefill that will consume it.
+    pub fn lookup(
+        &mut self,
+        tokens: &[u32],
+        spec: &ModelSpec,
+        t_fwd_layer: f64,
+    ) -> FetchPlan {
+        let hit = self.index.match_prefix(tokens);
+        self.stats.lookups += 1;
+        if hit > 0 {
+            self.stats.hits += 1;
+            self.stats.tokens_served += hit;
+        }
+        let bw = self.effective_bandwidth();
+        let per_layer_bytes = hit * spec.kv_bytes_per_token_layer();
+        let t_fetch_layer = per_layer_bytes as f64 / bw + self.config.cpu_link.latency;
+        let plan = PipelinePlan::schedule(
+            spec.n_layers,
+            t_fwd_layer,
+            if hit > 0 { t_fetch_layer } else { 0.0 },
+            t_fetch_layer, // write-back of new KV, same channel cost model
+        );
+        FetchPlan {
+            hit_tokens: hit,
+            tier: self.current_tier(),
+            t_fetch_layer,
+            stall: if hit > 0 { plan.stall() } else { 0.0 },
+            raw_transfer: spec.n_layers as f64 * t_fetch_layer,
+        }
+    }
+
+    /// Record a freshly prefilled prompt's KV into the store, evicting LRU
+    /// prefixes beyond total capacity.
+    pub fn insert(&mut self, tokens: &[u32]) -> u64 {
+        let added = self.index.insert(tokens);
+        self.stats.tokens_written += added;
+        let cap = self.config.cpu_capacity_tokens + self.config.ssd_capacity_tokens;
+        if self.index.token_count() > cap {
+            self.stats.tokens_evicted += self.index.evict_to(cap);
+        }
+        added
+    }
+
+    /// Peek the hit length without stat effects (router diagnostics).
+    pub fn peek(&self, tokens: &[u32]) -> u64 {
+        self.index.peek_prefix(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NET_200GBPS;
+    use crate::model::LLAMA31_8B;
+
+    fn store() -> GlobalKvStore {
+        GlobalKvStore::new(StoreConfig {
+            cpu_capacity_tokens: 1000,
+            ssd_capacity_tokens: 4000,
+            cpu_link: NET_200GBPS,
+            ssd_bw: 6e9,
+        })
+    }
+
+    #[test]
+    fn miss_then_hit_after_insert() {
+        let mut s = store();
+        let toks: Vec<u32> = (0..100).collect();
+        let t_fwd = 4.22e-3;
+        let p = s.lookup(&toks, &LLAMA31_8B, t_fwd);
+        assert_eq!(p.hit_tokens, 0);
+        assert_eq!(p.stall, 0.0);
+        s.insert(&toks);
+        let p2 = s.lookup(&toks, &LLAMA31_8B, t_fwd);
+        assert_eq!(p2.hit_tokens, 100);
+        assert!(s.hit_rate() > 0.4);
+    }
+
+    #[test]
+    fn fig6_regime_fetch_is_hidden() {
+        // 500 cached tokens of LLaMA-3.1-8B over 200Gbps: per-layer fetch
+        // ~= 0.082ms << 4.22ms forward -> no observable stall.
+        let mut s = store();
+        let toks: Vec<u32> = (0..500).collect();
+        s.insert(&toks);
+        let p = s.lookup(&toks, &LLAMA31_8B, 4.22e-3);
+        assert_eq!(p.hit_tokens, 500);
+        assert!(
+            (p.t_fetch_layer - 0.082e-3 - NET_200GBPS.latency).abs() < 0.01e-3,
+            "t_fetch_layer = {}",
+            p.t_fetch_layer
+        );
+        assert!(p.stall < 1.5 * p.t_fetch_layer, "stall = {}", p.stall);
+        assert!(p.raw_transfer > 10.0 * p.stall, "overlap must hide majority");
+    }
+
+    #[test]
+    fn bandwidth_starved_regime_stalls() {
+        let mut s = GlobalKvStore::new(StoreConfig {
+            cpu_capacity_tokens: 100_000,
+            ssd_capacity_tokens: 0,
+            cpu_link: Link {
+                bandwidth: 50e6, // pathologically slow
+                latency: 1e-5,
+            },
+            ssd_bw: 6e9,
+        });
+        let toks: Vec<u32> = (0..5000).collect();
+        s.insert(&toks);
+        let p = s.lookup(&toks, &LLAMA31_8B, 1e-4);
+        assert!(p.stall > 0.0, "slow link must leak into TTFT");
+    }
+
+    #[test]
+    fn tier_degrades_past_cpu_capacity() {
+        let mut s = store(); // cpu cap 1000
+        let a: Vec<u32> = (0..900).collect();
+        s.insert(&a);
+        assert_eq!(s.current_tier(), Tier::Cpu);
+        let bw_cpu = s.effective_bandwidth();
+        let b: Vec<u32> = (10_000..13_000).collect();
+        s.insert(&b);
+        assert_eq!(s.current_tier(), Tier::Ssd);
+        assert!(s.effective_bandwidth() < bw_cpu);
+    }
+
+    #[test]
+    fn capacity_eviction_keeps_total_bounded() {
+        let mut s = store(); // total cap 5000
+        for i in 0..30u32 {
+            let toks: Vec<u32> = (i * 1000..i * 1000 + 400).collect();
+            s.insert(&toks);
+        }
+        assert!(s.token_count() <= 5000);
+        assert!(s.stats().tokens_evicted > 0);
+    }
+
+    #[test]
+    fn shared_prefix_across_instances_single_copy() {
+        // Two "instances" inserting the same system prompt: stored once —
+        // the redundant-storage problem of Fig 2a disappears by construction.
+        let mut s = store();
+        let sys: Vec<u32> = (500..600).collect();
+        let w1 = s.insert(&sys);
+        let w2 = s.insert(&sys);
+        assert_eq!(w1, 100);
+        assert_eq!(w2, 0);
+        assert_eq!(s.token_count(), 100);
+    }
+
+    #[test]
+    fn peek_is_side_effect_free() {
+        let mut s = store();
+        s.insert(&[1, 2, 3]);
+        let before = s.stats();
+        assert_eq!(s.peek(&[1, 2, 3]), 3);
+        let after = s.stats();
+        assert_eq!(before.lookups, after.lookups);
+    }
+}

@@ -1,0 +1,14 @@
+//! KV-cache substrate: the paged block allocator (PagedAttention-style),
+//! the prefix radix tree, the three-stage layer-wise transfer pipeline
+//! (paper §4.2, Fig 6), and the Global KV Cache Store that unifies prefix
+//! reuse across all prefill instances (paper Fig 5).
+
+pub mod block_allocator;
+pub mod global_store;
+pub mod pipeline;
+pub mod radix;
+
+pub use block_allocator::{BlockAllocator, BlockId, SeqBlocks};
+pub use global_store::{GlobalKvStore, StoreConfig, StoreStats, Tier};
+pub use pipeline::{PipelinePlan, PipelineStage, StageKind};
+pub use radix::RadixTree;

@@ -1,0 +1,205 @@
+//! Three-stage layer-wise KV pipeline (paper §4.2, Fig 6).
+//!
+//! While the GPU computes the forward pass of layer *i*, the host-to-device
+//! channel prefetches the cached KV of layer *i+1* and the device-to-host
+//! channel writes back the freshly produced KV of layer *i-1*. The plan
+//! below schedules the three channels explicitly so the Fig 6 timeline can
+//! be regenerated (bench `fig6_pipeline`) and the effective prefill latency
+//! with/without overlap can be compared.
+
+use crate::perfmodel;
+
+/// Which channel a stage occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Host-to-device fetch of cached prefix KV for a layer.
+    FetchKv,
+    /// GPU forward computation of a layer.
+    Forward,
+    /// Device-to-host store of the newly produced KV for a layer.
+    StoreKv,
+}
+
+/// One scheduled stage in the timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineStage {
+    pub kind: StageKind,
+    pub layer: u32,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// The complete schedule for an n-layer prefill with cache fetch/store.
+#[derive(Debug, Clone)]
+pub struct PipelinePlan {
+    pub stages: Vec<PipelineStage>,
+    pub n_layers: u32,
+    pub t_fwd_layer: f64,
+    pub t_fetch_layer: f64,
+    pub t_store_layer: f64,
+}
+
+impl PipelinePlan {
+    /// Build the overlapped schedule.
+    ///
+    /// Constraints: forward of layer i needs its fetch done; channels are
+    /// serial within themselves (one HtoD stream, one GPU stream, one DtoH
+    /// stream); stores follow their layer's forward.
+    pub fn schedule(
+        n_layers: u32,
+        t_fwd_layer: f64,
+        t_fetch_layer: f64,
+        t_store_layer: f64,
+    ) -> Self {
+        let n = n_layers as usize;
+        let mut stages = Vec::with_capacity(3 * n);
+        let mut fetch_free = 0.0f64; // HtoD channel availability
+        let mut gpu_free = 0.0f64;
+        let mut store_free = 0.0f64;
+        let mut fetch_done = vec![0.0f64; n];
+
+        // Fetches issue eagerly in layer order (prefetch depth limited only
+        // by channel serialization — matches Fig 6's back-to-back fetch row).
+        for l in 0..n {
+            let start = fetch_free;
+            let end = start + t_fetch_layer;
+            stages.push(PipelineStage {
+                kind: StageKind::FetchKv,
+                layer: l as u32,
+                start,
+                end,
+            });
+            fetch_free = end;
+            fetch_done[l] = end;
+        }
+        for l in 0..n {
+            let start = gpu_free.max(fetch_done[l]);
+            let end = start + t_fwd_layer;
+            stages.push(PipelineStage {
+                kind: StageKind::Forward,
+                layer: l as u32,
+                start,
+                end,
+            });
+            gpu_free = end;
+            let s_start = store_free.max(end);
+            let s_end = s_start + t_store_layer;
+            stages.push(PipelineStage {
+                kind: StageKind::StoreKv,
+                layer: l as u32,
+                start: s_start,
+                end: s_end,
+            });
+            store_free = s_end;
+        }
+        PipelinePlan {
+            stages,
+            n_layers,
+            t_fwd_layer,
+            t_fetch_layer,
+            t_store_layer,
+        }
+    }
+
+    /// When the last forward finishes — the prefill-visible latency
+    /// (stores continue in the background and don't block the next stage).
+    pub fn forward_finish(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.kind == StageKind::Forward)
+            .map(|s| s.end)
+            .fold(0.0, f64::max)
+    }
+
+    /// When everything (including final store) finishes.
+    pub fn makespan(&self) -> f64 {
+        self.stages.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Latency of the same work executed serially (no overlap) — the
+    /// baseline the paper's pipeline is compared against.
+    pub fn serial_time(&self) -> f64 {
+        self.n_layers as f64 * (self.t_fwd_layer + self.t_fetch_layer + self.t_store_layer)
+    }
+
+    /// Extra prefill latency over pure compute caused by transfers.
+    pub fn stall(&self) -> f64 {
+        self.forward_finish() - self.n_layers as f64 * self.t_fwd_layer
+    }
+
+    /// Closed-form check (Eq 12-13 regime): transfers are fully hidden
+    /// when t_fetch <= t_fwd, leaving only the first fetch exposed.
+    pub fn fully_overlapped(&self) -> bool {
+        perfmodel::pipeline_hides_transfer(self.t_fwd_layer, self.t_fetch_layer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fetch_precedes_forward_per_layer() {
+        let p = PipelinePlan::schedule(4, 1.0, 0.3, 0.2);
+        for l in 0..4u32 {
+            let fetch = p
+                .stages
+                .iter()
+                .find(|s| s.kind == StageKind::FetchKv && s.layer == l)
+                .unwrap();
+            let fwd = p
+                .stages
+                .iter()
+                .find(|s| s.kind == StageKind::Forward && s.layer == l)
+                .unwrap();
+            assert!(fetch.end <= fwd.start + 1e-12);
+        }
+    }
+
+    #[test]
+    fn channels_never_self_overlap() {
+        let p = PipelinePlan::schedule(6, 0.5, 0.4, 0.4);
+        for kind in [StageKind::FetchKv, StageKind::Forward, StageKind::StoreKv] {
+            let mut xs: Vec<_> = p.stages.iter().filter(|s| s.kind == kind).collect();
+            xs.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            for w in xs.windows(2) {
+                assert!(w[0].end <= w[1].start + 1e-12, "{kind:?} overlaps");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_transfers_fully_hidden() {
+        // Fig 6 regime: t_fetch (0.082ms) << t_fwd (4.22ms)
+        let p = PipelinePlan::schedule(32, 4.22e-3, 0.082e-3, 0.082e-3);
+        assert!(p.fully_overlapped());
+        // only the first fetch is exposed
+        let expect = 32.0 * 4.22e-3 + 0.082e-3;
+        assert!((p.forward_finish() - expect).abs() < 1e-9);
+        // far better than serial
+        assert!(p.forward_finish() < p.serial_time() * 0.98);
+        assert!(p.stall() < 1e-4);
+    }
+
+    #[test]
+    fn slow_transfers_bound_by_fetch_channel() {
+        // fetch slower than compute: pipeline rate-limited by HtoD
+        let p = PipelinePlan::schedule(8, 1.0, 2.0, 0.1);
+        assert!(!p.fully_overlapped());
+        // forward l starts after fetch l done: last fetch ends at 16.0
+        assert!((p.forward_finish() - 17.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn makespan_includes_trailing_store() {
+        let p = PipelinePlan::schedule(2, 1.0, 0.1, 0.5);
+        assert!(p.makespan() >= p.forward_finish() + 0.5 - 1e-12);
+    }
+
+    #[test]
+    fn zero_transfer_times_degenerate_to_pure_compute() {
+        let p = PipelinePlan::schedule(10, 0.7, 0.0, 0.0);
+        assert!((p.forward_finish() - 7.0).abs() < 1e-12);
+        assert!(p.stall().abs() < 1e-12);
+    }
+}

@@ -1,0 +1,379 @@
+//! Compressed radix (prefix) tree over token sequences — the index behind
+//! prefix caching (SGLang-style) and the Global KV Cache Store.
+//!
+//! Each edge carries a token segment; nodes carry the number of cached
+//! tokens on the path and an LRU timestamp. `match_prefix` returns how many
+//! leading tokens of a query are cached; `insert` adds a sequence, sharing
+//! existing prefixes; `evict_lru` trims leaf segments until a token budget
+//! is met (never evicting segments that still have cached descendants,
+//! mirroring vLLM's leaf-only eviction).
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct Node {
+    /// Children keyed by the first token of their edge segment.
+    children: HashMap<u32, usize>,
+    /// Edge segment from parent to this node.
+    segment: Vec<u32>,
+    /// Last access time (LRU), updated on match/insert.
+    last_access: u64,
+    parent: usize,
+}
+
+/// Compressed prefix tree with LRU leaf eviction.
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<Node>,
+    /// Total tokens stored across all edges.
+    tokens: u64,
+    clock: u64,
+    hits: u64,
+    lookups: u64,
+    hit_tokens: u64,
+    lookup_tokens: u64,
+}
+
+const ROOT: usize = 0;
+
+impl Default for RadixTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixTree {
+    pub fn new() -> Self {
+        RadixTree {
+            nodes: vec![Node {
+                children: HashMap::new(),
+                segment: Vec::new(),
+                last_access: 0,
+                parent: ROOT,
+            }],
+            tokens: 0,
+            clock: 0,
+            hits: 0,
+            lookups: 0,
+            hit_tokens: 0,
+            lookup_tokens: 0,
+        }
+    }
+
+    /// Number of cached tokens resident.
+    pub fn token_count(&self) -> u64 {
+        self.tokens
+    }
+
+    /// Fraction of lookups with any hit.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Fraction of queried tokens that were cached (the r of Eq 12).
+    pub fn token_hit_rate(&self) -> f64 {
+        if self.lookup_tokens == 0 {
+            0.0
+        } else {
+            self.hit_tokens as f64 / self.lookup_tokens as f64
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest cached prefix of `tokens` (in tokens). Records hit stats and
+    /// refreshes LRU stamps along the matched path.
+    pub fn match_prefix(&mut self, tokens: &[u32]) -> u64 {
+        let now = self.tick();
+        let mut node = ROOT;
+        let mut matched: u64 = 0;
+        let mut i = 0usize;
+        while i < tokens.len() {
+            let Some(&child) = self.nodes[node].children.get(&tokens[i]) else {
+                break;
+            };
+            let seg_len = self.nodes[child].segment.len();
+            let avail = &tokens[i..];
+            let common = self.nodes[child]
+                .segment
+                .iter()
+                .zip(avail.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common as u64;
+            self.nodes[child].last_access = now;
+            if common < seg_len {
+                break; // partial edge match: stop (cache granularity = edge)
+            }
+            i += common;
+            node = child;
+        }
+        self.lookups += 1;
+        self.lookup_tokens += tokens.len() as u64;
+        if matched > 0 {
+            self.hits += 1;
+            self.hit_tokens += matched;
+        }
+        matched
+    }
+
+    /// Peek the match length without touching stats or LRU.
+    pub fn peek_prefix(&self, tokens: &[u32]) -> u64 {
+        let mut node = ROOT;
+        let mut matched = 0u64;
+        let mut i = 0usize;
+        while i < tokens.len() {
+            let Some(&child) = self.nodes[node].children.get(&tokens[i]) else {
+                break;
+            };
+            let seg = &self.nodes[child].segment;
+            let avail = &tokens[i..];
+            let common = seg
+                .iter()
+                .zip(avail.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common as u64;
+            if common < seg.len() {
+                break;
+            }
+            i += common;
+            node = child;
+        }
+        matched
+    }
+
+    /// Insert a token sequence, sharing existing prefixes; returns the
+    /// number of NEW tokens added to the tree.
+    pub fn insert(&mut self, tokens: &[u32]) -> u64 {
+        let now = self.tick();
+        let mut node = ROOT;
+        let mut i = 0usize;
+        while i < tokens.len() {
+            let first = tokens[i];
+            match self.nodes[node].children.get(&first).copied() {
+                None => {
+                    // new leaf with the remaining suffix
+                    let seg: Vec<u32> = tokens[i..].to_vec();
+                    let added = seg.len() as u64;
+                    let idx = self.nodes.len();
+                    self.nodes.push(Node {
+                        children: HashMap::new(),
+                        segment: seg,
+                        last_access: now,
+                        parent: node,
+                    });
+                    self.nodes[node].children.insert(first, idx);
+                    self.tokens += added;
+                    return added;
+                }
+                Some(child) => {
+                    let seg_len = self.nodes[child].segment.len();
+                    let avail = &tokens[i..];
+                    let common = self.nodes[child]
+                        .segment
+                        .iter()
+                        .zip(avail.iter())
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    self.nodes[child].last_access = now;
+                    if common == seg_len {
+                        // full edge consumed, descend
+                        i += common;
+                        node = child;
+                        continue;
+                    }
+                    // split the edge at `common`
+                    let tail: Vec<u32> = self.nodes[child].segment.split_off(common);
+                    let tail_first = tail[0];
+                    let mid = child; // child keeps the head segment
+                    let idx = self.nodes.len();
+                    let moved_children =
+                        std::mem::take(&mut self.nodes[mid].children);
+                    self.nodes.push(Node {
+                        children: moved_children,
+                        segment: tail,
+                        last_access: self.nodes[mid].last_access,
+                        parent: mid,
+                    });
+                    // fix moved children's parent pointers
+                    let moved: Vec<usize> =
+                        self.nodes[idx].children.values().copied().collect();
+                    for c in moved {
+                        self.nodes[c].parent = idx;
+                    }
+                    self.nodes[mid].children.insert(tail_first, idx);
+                    i += common;
+                    node = mid;
+                    // loop continues: remaining tokens[i..] get a new leaf
+                }
+            }
+        }
+        0 // fully contained already
+    }
+
+    /// Evict least-recently-used leaf segments until at most `budget`
+    /// tokens remain. Returns tokens evicted.
+    pub fn evict_to(&mut self, budget: u64) -> u64 {
+        let mut evicted = 0u64;
+        while self.tokens > budget {
+            // find the LRU leaf (O(n) scan — tree sizes are modest; see
+            // bench_support notes before optimizing)
+            let mut lru: Option<(usize, u64)> = None;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if i == ROOT || !n.children.is_empty() || n.segment.is_empty() {
+                    continue;
+                }
+                match lru {
+                    None => lru = Some((i, n.last_access)),
+                    Some((_, t)) if n.last_access < t => {
+                        lru = Some((i, n.last_access))
+                    }
+                    _ => {}
+                }
+            }
+            let Some((leaf, _)) = lru else { break };
+            let seg_len = self.nodes[leaf].segment.len() as u64;
+            let first = self.nodes[leaf].segment[0];
+            let parent = self.nodes[leaf].parent;
+            self.nodes[parent].children.remove(&first);
+            self.nodes[leaf].segment.clear();
+            self.tokens -= seg_len;
+            evicted += seg_len;
+        }
+        evicted
+    }
+
+    /// Number of live (non-empty or root) nodes, for diagnostics.
+    pub fn node_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| *i == ROOT || !n.segment.is_empty())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_tree_matches_nothing() {
+        let mut t = RadixTree::new();
+        assert_eq!(t.match_prefix(&[1, 2, 3]), 0);
+        assert_eq!(t.token_count(), 0);
+    }
+
+    #[test]
+    fn insert_then_full_match() {
+        let mut t = RadixTree::new();
+        assert_eq!(t.insert(&[1, 2, 3, 4]), 4);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), 4);
+        assert_eq!(t.token_count(), 4);
+    }
+
+    #[test]
+    fn partial_prefix_match() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4]);
+        assert_eq!(t.match_prefix(&[1, 2, 9, 9]), 2);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4, 5, 6]), 4);
+        assert_eq!(t.match_prefix(&[7]), 0);
+    }
+
+    #[test]
+    fn shared_prefixes_not_double_counted() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4]);
+        let added = t.insert(&[1, 2, 3, 9]); // shares 3, adds 1
+        assert_eq!(added, 1);
+        assert_eq!(t.token_count(), 5);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 9]), 4);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), 4);
+    }
+
+    #[test]
+    fn edge_split_preserves_descendants() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4, 5]);
+        t.insert(&[1, 2, 3, 4, 5, 6, 7]);
+        t.insert(&[1, 2, 8]); // splits [1,2,3,4,5] edge at 2
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4, 5, 6, 7]), 7);
+        assert_eq!(t.match_prefix(&[1, 2, 8]), 3);
+        assert_eq!(t.token_count(), 8); // 1,2 | 3,4,5 | 6,7 | 8
+    }
+
+    #[test]
+    fn reinsert_is_noop() {
+        let mut t = RadixTree::new();
+        t.insert(&[5, 6, 7]);
+        assert_eq!(t.insert(&[5, 6, 7]), 0);
+        assert_eq!(t.insert(&[5, 6]), 0);
+        assert_eq!(t.token_count(), 3);
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4]);
+        t.match_prefix(&[1, 2, 3, 4]); // full hit (4/4)
+        t.match_prefix(&[9, 9]); // miss (0/2)
+        assert!((t.hit_rate() - 0.5).abs() < 1e-12);
+        assert!((t.token_hit_rate() - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_respects_budget_and_lru() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 1, 1, 1]);
+        t.insert(&[2, 2, 2, 2]);
+        // touch the first so the second is LRU
+        t.match_prefix(&[1, 1, 1, 1]);
+        let evicted = t.evict_to(4);
+        assert_eq!(evicted, 4);
+        assert_eq!(t.token_count(), 4);
+        assert_eq!(t.peek_prefix(&[1, 1, 1, 1]), 4, "recently used survives");
+        assert_eq!(t.peek_prefix(&[2, 2, 2, 2]), 0, "LRU evicted");
+    }
+
+    #[test]
+    fn eviction_is_leaf_only() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2]);
+        t.insert(&[1, 2, 3]);
+        t.insert(&[1, 2, 4]);
+        // evicting to 3 tokens must drop leaves (3 or 4), never the shared [1,2]
+        t.evict_to(3);
+        assert!(t.peek_prefix(&[1, 2]) == 2, "shared prefix must survive");
+        assert_eq!(t.token_count(), 3);
+    }
+
+    #[test]
+    fn evict_to_zero_empties_tree() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3]);
+        t.insert(&[4, 5]);
+        t.evict_to(0);
+        assert_eq!(t.token_count(), 0);
+        assert_eq!(t.peek_prefix(&[1, 2, 3]), 0);
+        // tree still usable afterwards
+        t.insert(&[7, 8]);
+        assert_eq!(t.peek_prefix(&[7, 8]), 2);
+    }
+
+    #[test]
+    fn peek_does_not_affect_stats() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2]);
+        let _ = t.peek_prefix(&[1, 2]);
+        assert_eq!(t.hit_rate(), 0.0);
+    }
+}

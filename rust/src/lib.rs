@@ -1,0 +1,43 @@
+//! # BanaServe — unified KV cache and dynamic module migration for
+//! balancing disaggregated LLM serving (reproduction)
+//!
+//! This crate is the L3 coordinator of the three-layer stack described in
+//! `DESIGN.md`:
+//!
+//! * [`runtime`] loads the AOT-compiled JAX/Pallas artifacts (HLO text) and
+//!   executes them on the PJRT CPU client — the *real* model path used by
+//!   `examples/quickstart.rs`.
+//! * [`coordinator`] is the real (threaded, non-simulated) serving path:
+//!   request queue, continuous batcher, worker per simulated device.
+//! * [`engines`] hosts the three *cluster-scale* systems the paper
+//!   evaluates — a vLLM-like monolithic engine, a DistServe-like static
+//!   PD-disaggregated engine, and BanaServe itself — all running on the
+//!   discrete-event simulator in [`sim`] with the roofline cost model in
+//!   [`perfmodel`], because the paper's A100 testbed is hardware we do not
+//!   have (repro band 0/5; see DESIGN.md §2 for the substitution table).
+//! * [`kvcache`] implements the paged KV allocator, the radix prefix tree,
+//!   the Global KV Cache Store and the three-stage layer-wise transfer
+//!   pipeline of paper §4.2.
+//! * [`workload`] generates Alpaca-like / LongBench-like request streams
+//!   with Poisson or bursty arrivals (paper §5.1).
+//!
+//! Everything in [`util`] exists because the offline crate registry carries
+//! no tokio/clap/serde/criterion/proptest — those substrates are built here.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod engines;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub mod bench_support;
+
+/// Crate version, from Cargo.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

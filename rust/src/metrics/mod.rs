@@ -1,0 +1,275 @@
+//! Metrics collection: per-request latency records (TTFT / TPOT / E2E),
+//! aggregate report assembly (throughput, total time), device utilization
+//! summaries, and multi-seed aggregation with 95% CIs — the exact metric
+//! suite of paper §5.1.2.
+
+use crate::util::stats::Summary;
+
+/// Lifecycle timestamps of one request, filled in by the engines.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: f64,
+    /// When prefill started executing (after queueing).
+    pub prefill_start: f64,
+    /// First output token time (end of prefill + any KV handoff).
+    pub first_token: f64,
+    /// Completion of the last output token.
+    pub completion: f64,
+    pub prompt_len: u64,
+    pub output_len: u64,
+    /// Tokens served from prefix cache.
+    pub cached_tokens: u64,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    pub fn e2e(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    /// Time per output token over the decode phase.
+    pub fn tpot(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        (self.completion - self.first_token) / (self.output_len - 1) as f64
+    }
+
+    pub fn queue_delay(&self) -> f64 {
+        self.prefill_start - self.arrival
+    }
+}
+
+/// Collects finished requests during a run.
+#[derive(Debug, Default)]
+pub struct Collector {
+    pub records: Vec<RequestRecord>,
+    /// Requests rejected / dropped (admission control) — counted so the
+    /// conservation property (submitted = done + dropped + inflight) holds.
+    pub dropped: u64,
+    /// Measurement window start (after warm-up).
+    pub window_start: f64,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn finish(&mut self, rec: RequestRecord) {
+        debug_assert!(rec.first_token >= rec.arrival, "TTFT must be >= 0");
+        debug_assert!(rec.completion >= rec.first_token);
+        debug_assert!(rec.prefill_start >= rec.arrival);
+        self.records.push(rec);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.records.len() as u64
+    }
+
+    /// Records inside the measurement window.
+    fn windowed(&self) -> impl Iterator<Item = &RequestRecord> {
+        let w = self.window_start;
+        self.records.iter().filter(move |r| r.arrival >= w)
+    }
+
+    /// Build the aggregate report. `makespan` is the wall-clock length of
+    /// the run (last completion).
+    pub fn report(&self, makespan: f64) -> Report {
+        let mut ttft = Summary::new();
+        let mut tpot = Summary::new();
+        let mut e2e = Summary::new();
+        let mut queue = Summary::new();
+        let mut out_tokens: u64 = 0;
+        let mut in_tokens: u64 = 0;
+        let mut cached: u64 = 0;
+        let mut n = 0u64;
+        let mut last_completion: f64 = 0.0;
+        let mut first_arrival = f64::INFINITY;
+        for r in self.windowed() {
+            ttft.add(r.ttft());
+            e2e.add(r.e2e());
+            queue.add(r.queue_delay());
+            if r.output_len > 1 {
+                tpot.add(r.tpot());
+            }
+            out_tokens += r.output_len;
+            in_tokens += r.prompt_len;
+            cached += r.cached_tokens;
+            n += 1;
+            last_completion = last_completion.max(r.completion);
+            first_arrival = first_arrival.min(r.arrival);
+        }
+        let span = if n == 0 {
+            makespan
+        } else {
+            (last_completion - first_arrival).max(1e-9)
+        };
+        Report {
+            n_requests: n,
+            dropped: self.dropped,
+            output_tokens: out_tokens,
+            input_tokens: in_tokens,
+            cached_tokens: cached,
+            makespan,
+            throughput_tok_s: out_tokens as f64 / span,
+            ttft,
+            tpot,
+            e2e,
+            queue,
+        }
+    }
+}
+
+/// Aggregated metrics for one run.
+#[derive(Debug)]
+pub struct Report {
+    pub n_requests: u64,
+    pub dropped: u64,
+    pub output_tokens: u64,
+    pub input_tokens: u64,
+    pub cached_tokens: u64,
+    /// Total processing time: last completion (the paper's "total time").
+    pub makespan: f64,
+    /// Output tokens per second over the active span.
+    pub throughput_tok_s: f64,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub e2e: Summary,
+    pub queue: Summary,
+}
+
+impl Report {
+    /// Average request latency (the paper's "average latency" series:
+    /// mean end-to-end).
+    pub fn avg_latency(&self) -> f64 {
+        self.e2e.mean()
+    }
+
+    pub fn one_line(&self) -> String {
+        format!(
+            "n={} tput={:.1} tok/s total={:.2}s ttft(mean)={:.3}s tpot(mean)={:.4}s e2e(mean)={:.3}s drop={}",
+            self.n_requests,
+            self.throughput_tok_s,
+            self.makespan,
+            self.ttft.mean(),
+            self.tpot.mean(),
+            self.e2e.mean(),
+            self.dropped,
+        )
+    }
+}
+
+/// Aggregates one metric across repeated seeds (paper: 5 repeats, 95% CI).
+#[derive(Debug, Default)]
+pub struct SeedAggregate {
+    pub throughput: Summary,
+    pub total_time: Summary,
+    pub avg_latency: Summary,
+    pub ttft_mean: Summary,
+    pub tpot_mean: Summary,
+}
+
+impl SeedAggregate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, r: &Report) {
+        self.throughput.add(r.throughput_tok_s);
+        self.total_time.add(r.makespan);
+        self.avg_latency.add(r.avg_latency());
+        self.ttft_mean.add(r.ttft.mean());
+        self.tpot_mean.add(r.tpot.mean());
+    }
+
+    /// "mean ± ci95" formatting for a figure row.
+    pub fn cell(s: &Summary) -> String {
+        format!("{:.2}±{:.2}", s.mean(), s.ci95_half_width())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, ft: f64, done: f64, out: u64) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            arrival,
+            prefill_start: arrival,
+            first_token: ft,
+            completion: done,
+            prompt_len: 10,
+            output_len: out,
+            cached_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn derived_latencies() {
+        let r = rec(1.0, 1.5, 2.5, 11);
+        assert!((r.ttft() - 0.5).abs() < 1e-12);
+        assert!((r.e2e() - 1.5).abs() < 1e-12);
+        assert!((r.tpot() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_zero_for_single_token() {
+        assert_eq!(rec(0.0, 1.0, 1.0, 1).tpot(), 0.0);
+    }
+
+    #[test]
+    fn report_throughput_counts_output_tokens() {
+        let mut c = Collector::new();
+        c.finish(rec(0.0, 1.0, 2.0, 50));
+        c.finish(rec(0.5, 1.5, 4.0, 50));
+        let rep = c.report(4.0);
+        assert_eq!(rep.n_requests, 2);
+        assert_eq!(rep.output_tokens, 100);
+        assert!((rep.throughput_tok_s - 100.0 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_window_excludes_early_requests() {
+        let mut c = Collector::new();
+        c.finish(rec(1.0, 2.0, 3.0, 10));
+        c.finish(rec(100.0, 101.0, 102.0, 10));
+        c.window_start = 50.0;
+        let rep = c.report(102.0);
+        assert_eq!(rep.n_requests, 1);
+    }
+
+    #[test]
+    fn empty_report_is_sane() {
+        let c = Collector::new();
+        let rep = c.report(10.0);
+        assert_eq!(rep.n_requests, 0);
+        assert_eq!(rep.throughput_tok_s, 0.0);
+        assert_eq!(rep.avg_latency(), 0.0);
+    }
+
+    #[test]
+    fn seed_aggregate_ci() {
+        let mut agg = SeedAggregate::new();
+        for seed in 0..5 {
+            let mut c = Collector::new();
+            c.finish(rec(0.0, 1.0 + seed as f64 * 0.01, 2.0, 10));
+            agg.add(&c.report(2.0));
+        }
+        assert_eq!(agg.throughput.count(), 5);
+        assert!(agg.ttft_mean.ci95_half_width() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn negative_ttft_rejected_in_debug() {
+        let mut c = Collector::new();
+        c.finish(rec(5.0, 4.0, 6.0, 2)); // first token before arrival
+    }
+}

@@ -1,0 +1,248 @@
+//! Analytical model descriptors — the "models" the cluster-scale simulator
+//! serves (paper Table 1 plus the Fig 6 worked example and the tiny real
+//! model the PJRT runtime executes).
+//!
+//! Everything downstream (roofline step times, KV footprints, migration
+//! payloads) derives from these numbers, so they are checked against the
+//! paper's own arithmetic in the tests (e.g. Eq 15: LLaMA-3.1-8B per-layer
+//! per-token KV = 4 KB; Eq 16: 128 KB/token across 32 layers).
+
+/// Static description of a served model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub d_ff: u32,
+    pub vocab: u32,
+    /// Bytes per parameter / activation element (2 = fp16/bf16).
+    pub dtype_bytes: u32,
+    /// FFN weight matrices: 3 for gated SwiGLU (LLaMA), 2 for plain ReLU
+    /// MLPs (OPT).
+    pub ffn_matrices: u32,
+}
+
+impl ModelSpec {
+    pub const fn d_head(&self) -> u32 {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (decoder-only transformer accounting).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let dh = self.d_head() as u64;
+        let h = self.n_heads as u64;
+        let hkv = self.n_kv_heads as u64;
+        let dff = self.d_ff as u64;
+        let per_layer = d * (h * dh)            // wq
+            + 2 * d * (hkv * dh)                // wk wv
+            + (h * dh) * d                      // wo
+            + self.ffn_matrices as u64 * d * dff // gate/up/down or fc1/fc2
+            + 2 * d; // norms
+        2 * (self.vocab as u64) * d + d + self.n_layers as u64 * per_layer
+    }
+
+    /// Total weight bytes.
+    pub fn weight_bytes(&self) -> u64 {
+        self.param_count() * self.dtype_bytes as u64
+    }
+
+    /// Weight bytes of one transformer layer — the S_l^w of Eq 3.
+    pub fn layer_weight_bytes(&self) -> u64 {
+        let d = self.d_model as u64;
+        let dh = self.d_head() as u64;
+        let h = self.n_heads as u64;
+        let hkv = self.n_kv_heads as u64;
+        let dff = self.d_ff as u64;
+        (d * (h * dh)
+            + 2 * d * (hkv * dh)
+            + (h * dh) * d
+            + self.ffn_matrices as u64 * d * dff
+            + 2 * d)
+            * self.dtype_bytes as u64
+    }
+
+    /// Per-layer, per-token KV bytes (Eq 15): Hkv * Dh * 2 (K and V) * dtype.
+    pub fn kv_bytes_per_token_layer(&self) -> u64 {
+        self.n_kv_heads as u64 * self.d_head() as u64 * 2 * self.dtype_bytes as u64
+    }
+
+    /// Whole-model per-token KV bytes (Eq 16).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.kv_bytes_per_token_layer() * self.n_layers as u64
+    }
+
+    /// Forward FLOPs for one token at context length `ctx`:
+    /// 2·params (GEMMs) + 4·L·d_model·ctx (QKᵀ and AV attention terms).
+    pub fn flops_per_token(&self, ctx: u64) -> f64 {
+        2.0 * self.param_count() as f64
+            + 4.0 * self.n_layers as f64 * self.d_model as f64 * ctx as f64
+    }
+
+    /// FLOPs for a full prefill of `len` prompt tokens (sum over positions).
+    pub fn prefill_flops(&self, len: u64) -> f64 {
+        // sum_{i<len} flops_per_token(i) = 2·P·len + 4·L·d·len(len-1)/2
+        2.0 * self.param_count() as f64 * len as f64
+            + 2.0 * self.n_layers as f64
+                * self.d_model as f64
+                * (len as f64 * (len as f64 - 1.0))
+    }
+}
+
+/// LLaMA-13B (paper Table 1, primary target). MHA, SwiGLU.
+pub const LLAMA_13B: ModelSpec = ModelSpec {
+    name: "llama-13b",
+    n_layers: 40,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 40,
+    d_ff: 13824,
+    vocab: 32000,
+    dtype_bytes: 2,
+    ffn_matrices: 3,
+};
+
+/// OPT-13B (paper Table 1, cross-architecture validation). MHA, plain
+/// 2-matrix 4·d ReLU FFN, learned positions, much larger vocab than LLaMA —
+/// the architectural differences the paper's cross-validation leans on.
+pub const OPT_13B: ModelSpec = ModelSpec {
+    name: "opt-13b",
+    n_layers: 40,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 40,
+    d_ff: 20480,
+    vocab: 50272,
+    dtype_bytes: 2,
+    ffn_matrices: 2,
+};
+
+/// LLaMA-3.1-8B — the paper's §4.2 worked example (Eqs 14-17): GQA with 8
+/// KV heads, 32 layers, d=4096.
+pub const LLAMA31_8B: ModelSpec = ModelSpec {
+    name: "llama-3.1-8b",
+    n_layers: 32,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 8,
+    d_ff: 14336,
+    vocab: 128256,
+    dtype_bytes: 2,
+    ffn_matrices: 3,
+};
+
+/// The tiny model actually executed by the PJRT runtime (matches
+/// python/compile/model.py TINY, fp32 artifacts).
+pub const TINY: ModelSpec = ModelSpec {
+    name: "tiny",
+    n_layers: 2,
+    d_model: 64,
+    n_heads: 4,
+    n_kv_heads: 2,
+    d_ff: 128,
+    vocab: 256,
+    dtype_bytes: 4,
+    ffn_matrices: 3,
+};
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> Option<&'static ModelSpec> {
+    match name {
+        "llama-13b" | "llama13b" => Some(&LLAMA_13B),
+        "opt-13b" | "opt13b" => Some(&OPT_13B),
+        "llama-3.1-8b" | "llama31-8b" => Some(&LLAMA31_8B),
+        "tiny" => Some(&TINY),
+        _ => None,
+    }
+}
+
+/// All presets, for table generation.
+pub fn presets() -> [&'static ModelSpec; 4] {
+    [&LLAMA_13B, &OPT_13B, &LLAMA31_8B, &TINY]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama31_8b_kv_matches_paper_eq15_eq16() {
+        // Eq 15: S_kv = 8 * 128 * 2 * 2 bytes = 4096 B per layer per token
+        assert_eq!(LLAMA31_8B.d_head(), 128);
+        assert_eq!(LLAMA31_8B.kv_bytes_per_token_layer(), 4096);
+        // Eq 16: 32 layers * 4 KB = 128 KB per token
+        assert_eq!(LLAMA31_8B.kv_bytes_per_token(), 128 * 1024);
+    }
+
+    #[test]
+    fn llama13b_param_count_near_13e9() {
+        let p = LLAMA_13B.param_count() as f64;
+        assert!((12.0e9..14.5e9).contains(&p), "params = {p:.3e}");
+    }
+
+    #[test]
+    fn opt13b_param_count_in_range() {
+        let p = OPT_13B.param_count() as f64;
+        assert!((12.0e9..13.8e9).contains(&p), "params = {p:.3e}");
+    }
+
+    #[test]
+    fn weight_bytes_consistent_with_layers() {
+        for m in presets() {
+            let embed_and_head =
+                2 * (m.vocab as u64) * (m.d_model as u64) * m.dtype_bytes as u64;
+            let norm = m.d_model as u64 * m.dtype_bytes as u64;
+            assert_eq!(
+                m.weight_bytes(),
+                embed_and_head + norm + m.n_layers as u64 * m.layer_weight_bytes(),
+                "{}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn mha_models_have_full_kv() {
+        // LLaMA-13B is MHA: kv bytes per token-layer = 2 * d_model * dtype
+        assert_eq!(
+            LLAMA_13B.kv_bytes_per_token_layer(),
+            2 * LLAMA_13B.d_model as u64 * 2
+        );
+    }
+
+    #[test]
+    fn prefill_flops_equals_summed_token_flops() {
+        let m = &LLAMA31_8B;
+        let len = 37u64;
+        let direct: f64 = (0..len).map(|i| m.flops_per_token(i)).sum();
+        let closed = m.prefill_flops(len);
+        assert!(
+            ((direct - closed) / direct).abs() < 1e-9,
+            "direct {direct:.3e} vs closed {closed:.3e}"
+        );
+    }
+
+    #[test]
+    fn flops_grow_with_context() {
+        let m = &LLAMA_13B;
+        assert!(m.flops_per_token(4096) > m.flops_per_token(1));
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(by_name("llama-13b").unwrap().name, "llama-13b");
+        assert_eq!(by_name("opt13b").unwrap().name, "opt-13b");
+        assert!(by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn tiny_matches_python_model_config() {
+        // python/compile/model.py TINY: vocab=256 d=64 L=2 H=4 Hkv=2 dff=128
+        assert_eq!(TINY.vocab, 256);
+        assert_eq!(TINY.d_model, 64);
+        assert_eq!(TINY.n_layers, 2);
+        assert_eq!(TINY.d_head(), 16);
+    }
+}

@@ -1,0 +1,417 @@
+//! §4.3 analytical performance models: roofline step times for prefill and
+//! decode, TTFT/TPOT decomposition (Eqs 20-22), migration cost (Eqs 3-4,
+//! 11, 28), throughput (Eq 30), the joint objective (Eq 18), and the
+//! layer-wise pipeline feasibility check (Eqs 12-13, Fig 6).
+//!
+//! The roofline step model is the substitution for the paper's physical
+//! A100s (DESIGN.md §2): a step's duration is max(compute time at an
+//! empirical MFU, memory-traffic time at effective HBM bandwidth). This
+//! reproduces the defining asymmetry of Fig 2b — prefill saturates compute
+//! while decode saturates bandwidth — which is the signal every scheduling
+//! and migration decision in the paper feeds on.
+
+use crate::cluster::{GpuSpec, Link};
+use crate::model::ModelSpec;
+
+/// Empirical efficiency factors for the roofline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Efficiency {
+    /// Model FLOPs utilization achievable by big prefill GEMMs.
+    pub mfu_prefill: f64,
+    /// MFU achievable by batched decode GEMV-ish kernels.
+    pub mfu_decode: f64,
+    /// Fraction of peak HBM bandwidth realized.
+    pub bw_eff: f64,
+}
+
+impl Default for Efficiency {
+    fn default() -> Self {
+        // A100 fp16 serving numbers in line with published MFU measurements.
+        Efficiency {
+            mfu_prefill: 0.55,
+            mfu_decode: 0.35,
+            bw_eff: 0.75,
+        }
+    }
+}
+
+/// Outcome of one roofline evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepTime {
+    /// Wall time of the step, seconds.
+    pub time: f64,
+    /// Time the compute units were the constraint.
+    pub compute_time: f64,
+    /// Time the memory system was the constraint.
+    pub memory_time: f64,
+}
+
+impl StepTime {
+    /// Fraction of the step the compute units were busy — feeds the C_d
+    /// term of Eq 32 (≈95% for prefill, ≈35% for decode in Fig 2b).
+    pub fn compute_frac(&self) -> f64 {
+        if self.time <= 0.0 {
+            0.0
+        } else {
+            (self.compute_time / self.time).min(1.0)
+        }
+    }
+
+    pub fn memory_frac(&self) -> f64 {
+        if self.time <= 0.0 {
+            0.0
+        } else {
+            (self.memory_time / self.time).min(1.0)
+        }
+    }
+}
+
+/// One prefill work item: a prompt of `prompt` tokens of which `cached`
+/// leading tokens hit the prefix cache (only `prompt - cached` are computed,
+/// but all positions' KV must be resident).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillItem {
+    pub prompt: u64,
+    pub cached: u64,
+}
+
+/// Roofline time for one prefill step over a batch of items.
+///
+/// `capacity_share` scales the device's peak (layer migration can dedicate
+/// a fraction of a device to a role). Weights are streamed once per step;
+/// new KV is written back.
+pub fn prefill_step(
+    model: &ModelSpec,
+    gpu: &GpuSpec,
+    eff: &Efficiency,
+    items: &[PrefillItem],
+    capacity_share: f64,
+) -> StepTime {
+    let mut flops = 0.0;
+    let mut new_tokens: u64 = 0;
+    for it in items {
+        let cached = it.cached.min(it.prompt);
+        flops += model.prefill_flops(it.prompt) - model.prefill_flops(cached);
+        new_tokens += it.prompt - cached;
+    }
+    let share = capacity_share.max(1e-9);
+    let peak = gpu.peak_flops * eff.mfu_prefill * share;
+    let compute_time = flops / peak;
+    // a role owning `share` of the device also owns `share` of its memory
+    // system (time-sharing interpretation of layer migration)
+    let bw = gpu.hbm_bw * eff.bw_eff * share;
+    let weight_read = model.weight_bytes() as f64 / bw;
+    let kv_write = (new_tokens * model.kv_bytes_per_token()) as f64 / bw;
+    let memory_time = weight_read + kv_write;
+    StepTime {
+        time: compute_time.max(memory_time),
+        compute_time,
+        memory_time,
+    }
+}
+
+/// Roofline time for one decode iteration: each of `batch` sequences emits
+/// one token; `total_ctx` is the summed context length across the batch
+/// (drives KV reads).
+pub fn decode_step(
+    model: &ModelSpec,
+    gpu: &GpuSpec,
+    eff: &Efficiency,
+    batch: u64,
+    total_ctx: u64,
+    capacity_share: f64,
+) -> StepTime {
+    if batch == 0 {
+        return StepTime {
+            time: 0.0,
+            compute_time: 0.0,
+            memory_time: 0.0,
+        };
+    }
+    let avg_ctx = total_ctx as f64 / batch as f64;
+    let flops = batch as f64 * model.flops_per_token(avg_ctx as u64);
+    let share = capacity_share.max(1e-9);
+    let peak = gpu.peak_flops * eff.mfu_decode * share;
+    let compute_time = flops / peak;
+    let bw = gpu.hbm_bw * eff.bw_eff * share;
+    // one pass over the weights (shared by the batch) + all live KV.
+    let weight_read = model.weight_bytes() as f64 / bw;
+    let kv_read = (total_ctx * model.kv_bytes_per_token()) as f64 / bw;
+    let kv_write = (batch * model.kv_bytes_per_token()) as f64 / bw;
+    let memory_time = weight_read + kv_read + kv_write;
+    StepTime {
+        time: compute_time.max(memory_time),
+        compute_time,
+        memory_time,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Migration latency models (§4.1)
+// ---------------------------------------------------------------------------
+
+/// Eq 3-4: layer-level migration payload and latency. Moves `layers`
+/// contiguous layers' weights plus their share of `kv_tokens` tokens of KV.
+pub fn layer_migration_time(
+    model: &ModelSpec,
+    layers: u32,
+    kv_tokens: u64,
+    link: &Link,
+) -> f64 {
+    let s_w = layers as u64 * model.layer_weight_bytes();
+    let s_kv = layers as u64 * kv_tokens * model.kv_bytes_per_token_layer();
+    link.transfer_time(s_w + s_kv)
+}
+
+/// Eq 11: attention-level migration latency — only KV moves, no weights.
+pub fn attention_migration_time(kv_bytes: u64, link: &Link) -> f64 {
+    link.transfer_time(kv_bytes)
+}
+
+/// Eq 28: total overhead of migrating `k` modules.
+pub fn migration_cost(k: u32, t_transfer: f64, t_sync: f64, t_realloc: f64) -> f64 {
+    k as f64 * (t_transfer + t_sync + t_realloc)
+}
+
+// ---------------------------------------------------------------------------
+// Latency / throughput assembly (Eqs 20-22, 30)
+// ---------------------------------------------------------------------------
+
+/// Eq 20: TTFT = prefill compute + KV transfer + queueing.
+pub fn ttft(t_prefill: f64, t_kv_transfer: f64, t_queue: f64) -> f64 {
+    t_prefill + t_kv_transfer + t_queue
+}
+
+/// Eq 22: TPOT = decode compute + cache access + bandwidth stalls.
+pub fn tpot(t_decode: f64, t_cache: f64, t_mem_stall: f64) -> f64 {
+    t_decode + t_cache + t_mem_stall
+}
+
+/// Eq 30: throughput of N concurrent requests with L_out output tokens.
+pub fn throughput(n: u64, l_out: u64, ttft: f64, tpot: f64) -> f64 {
+    (n * l_out) as f64 / (ttft + l_out as f64 * tpot)
+}
+
+/// Eq 18 / 31: the joint objective the orchestrator maximizes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objective {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        // utilization and throughput up, latency down; magnitudes chosen so
+        // the three terms are comparable at typical operating points.
+        Objective {
+            alpha: 1.0,
+            beta: 0.1,
+            gamma: 0.001,
+        }
+    }
+}
+
+impl Objective {
+    pub fn score(&self, u_avg: f64, t_avg_latency: f64, theta: f64) -> f64 {
+        self.alpha * u_avg - self.beta * t_avg_latency + self.gamma * theta
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer-wise pipeline feasibility (Eqs 12-13, Fig 6)
+// ---------------------------------------------------------------------------
+
+/// Eq 12: per-layer forward compute time available to hide a transfer.
+pub fn per_layer_forward_time(t_f: f64, hit_rate: f64, n_layers: u32) -> f64 {
+    t_f * hit_rate / n_layers as f64
+}
+
+/// Eq 13: per-layer KV fetch time for `l` tokens at hit rate `r`.
+pub fn per_layer_kv_transfer_time(
+    kv_bytes_token_layer: u64,
+    l_tokens: u64,
+    hit_rate: f64,
+    bw: f64,
+) -> f64 {
+    (kv_bytes_token_layer * l_tokens) as f64 * hit_rate / bw
+}
+
+/// Whether the three-stage pipeline fully hides transfers (T_KV <= T_F,layer).
+pub fn pipeline_hides_transfer(t_f_layer: f64, t_kv: f64) -> bool {
+    t_kv <= t_f_layer
+}
+
+/// Effective stall per layer when it does not fully hide.
+pub fn pipeline_stall_per_layer(t_f_layer: f64, t_kv: f64) -> f64 {
+    (t_kv - t_f_layer).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{A100_40G, NET_200GBPS, NVLINK};
+    use crate::model::{LLAMA31_8B, LLAMA_13B};
+
+    #[test]
+    fn prefill_is_compute_bound_decode_is_memory_bound() {
+        // The Fig 2b asymmetry must fall out of the roofline.
+        let eff = Efficiency::default();
+        let items = [PrefillItem {
+            prompt: 1024,
+            cached: 0,
+        }; 4];
+        let p = prefill_step(&LLAMA_13B, &A100_40G, &eff, &items, 1.0);
+        assert!(
+            p.compute_frac() > 0.9,
+            "prefill compute frac = {}",
+            p.compute_frac()
+        );
+
+        let d = decode_step(&LLAMA_13B, &A100_40G, &eff, 16, 16 * 512, 1.0);
+        assert!(
+            d.compute_frac() < 0.5,
+            "decode compute frac = {}",
+            d.compute_frac()
+        );
+        assert!(d.memory_frac() > 0.9);
+    }
+
+    #[test]
+    fn prefix_cache_hits_reduce_prefill_time() {
+        let eff = Efficiency::default();
+        let cold = [PrefillItem {
+            prompt: 2048,
+            cached: 0,
+        }];
+        let warm = [PrefillItem {
+            prompt: 2048,
+            cached: 1024,
+        }];
+        let t_cold = prefill_step(&LLAMA_13B, &A100_40G, &eff, &cold, 1.0).time;
+        let t_warm = prefill_step(&LLAMA_13B, &A100_40G, &eff, &warm, 1.0).time;
+        assert!(t_warm < t_cold * 0.6, "warm {t_warm} vs cold {t_cold}");
+    }
+
+    #[test]
+    fn decode_batching_amortizes_weights() {
+        // 16 sequences in one step must be far cheaper than 16 steps of 1.
+        let eff = Efficiency::default();
+        let one = decode_step(&LLAMA_13B, &A100_40G, &eff, 1, 512, 1.0).time;
+        let batch = decode_step(&LLAMA_13B, &A100_40G, &eff, 16, 16 * 512, 1.0).time;
+        assert!(batch < 16.0 * one * 0.25, "batch {batch} vs 16x one {one}");
+    }
+
+    #[test]
+    fn capacity_share_scales_compute() {
+        let eff = Efficiency::default();
+        let items = [PrefillItem {
+            prompt: 4096,
+            cached: 0,
+        }];
+        let full = prefill_step(&LLAMA_13B, &A100_40G, &eff, &items, 1.0);
+        let half = prefill_step(&LLAMA_13B, &A100_40G, &eff, &items, 0.5);
+        assert!((half.compute_time / full.compute_time - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_decode_step_is_zero() {
+        let eff = Efficiency::default();
+        let d = decode_step(&LLAMA_13B, &A100_40G, &eff, 0, 0, 1.0);
+        assert_eq!(d.time, 0.0);
+    }
+
+    #[test]
+    fn layer_migration_dominated_by_weights() {
+        // Paper: S_w >> S_kv for typical context lengths.
+        let t_w_only = layer_migration_time(&LLAMA_13B, 4, 0, &NVLINK);
+        let t_with_kv = layer_migration_time(&LLAMA_13B, 4, 2048, &NVLINK);
+        assert!(t_with_kv > t_w_only);
+        assert!(t_with_kv < t_w_only * 1.2, "weights should dominate");
+    }
+
+    #[test]
+    fn attention_migration_much_cheaper_than_layer() {
+        // Eq 11 consequence: T_attn << T_layer.
+        let kv_bytes = 512 * LLAMA_13B.kv_bytes_per_token(); // one seq's KV
+        let t_attn = attention_migration_time(kv_bytes / 2, &NVLINK);
+        let t_layer = layer_migration_time(&LLAMA_13B, 4, 512, &NVLINK);
+        assert!(t_attn < t_layer / 10.0, "attn {t_attn} vs layer {t_layer}");
+    }
+
+    #[test]
+    fn migration_cost_eq28_linear_in_k() {
+        let c1 = migration_cost(1, 0.1, 0.02, 0.01);
+        let c3 = migration_cost(3, 0.1, 0.02, 0.01);
+        assert!((c3 - 3.0 * c1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig6_worked_example_numbers() {
+        // Paper Eq 17: T_F,layer = 270ms*0.5/32 ≈ 4.22 ms;
+        // T_KV = 4KB*1000*0.5/200Gbps ≈ 0.082 ms; transfer fully hidden.
+        let t_f_layer = per_layer_forward_time(0.270, 0.5, 32);
+        assert!((t_f_layer - 4.22e-3).abs() < 0.02e-3, "{t_f_layer}");
+        let t_kv = per_layer_kv_transfer_time(
+            LLAMA31_8B.kv_bytes_per_token_layer(),
+            1000,
+            0.5,
+            NET_200GBPS.bandwidth,
+        );
+        assert!((t_kv - 0.082e-3).abs() < 0.004e-3, "{t_kv}");
+        assert!(pipeline_hides_transfer(t_f_layer, t_kv));
+        assert_eq!(pipeline_stall_per_layer(t_f_layer, t_kv), 0.0);
+    }
+
+    #[test]
+    fn pipeline_stall_when_bandwidth_starved() {
+        let t_f = 1e-3;
+        let t_kv = 3e-3;
+        assert!(!pipeline_hides_transfer(t_f, t_kv));
+        assert!((pipeline_stall_per_layer(t_f, t_kv) - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_eq30() {
+        // N=10 requests, 100 tokens out, TTFT 1s, TPOT 10ms
+        let th = throughput(10, 100, 1.0, 0.01);
+        assert!((th - 1000.0 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ttft_tpot_decompositions() {
+        assert_eq!(ttft(0.2, 0.05, 0.1), 0.35);
+        assert_eq!(tpot(0.02, 0.005, 0.003), 0.028);
+    }
+
+    #[test]
+    fn objective_direction() {
+        let obj = Objective::default();
+        let base = obj.score(0.5, 1.0, 100.0);
+        assert!(obj.score(0.9, 1.0, 100.0) > base); // higher util better
+        assert!(obj.score(0.5, 2.0, 100.0) < base); // higher latency worse
+        assert!(obj.score(0.5, 1.0, 500.0) > base); // higher tput better
+    }
+
+    #[test]
+    fn ttft_scales_superlinearly_with_prompt() {
+        let eff = Efficiency::default();
+        let t1 = prefill_step(
+            &LLAMA_13B,
+            &A100_40G,
+            &eff,
+            &[PrefillItem { prompt: 1000, cached: 0 }],
+            1.0,
+        )
+        .time;
+        let t8 = prefill_step(
+            &LLAMA_13B,
+            &A100_40G,
+            &eff,
+            &[PrefillItem { prompt: 8000, cached: 0 }],
+            1.0,
+        )
+        .time;
+        assert!(t8 > 8.0 * t1, "attention quadratic term missing: {t1} {t8}");
+    }
+}

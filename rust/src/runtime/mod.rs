@@ -1,0 +1,530 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from the JAX/Pallas layers) and executes them on
+//! the PJRT CPU client via the `xla` crate. This is the REAL model path —
+//! python is never involved at serving time.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 emits protos with 64-bit
+//! instruction ids that this XLA build (xla_extension 0.5.1) rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Layout contract with `python/compile/aot.py`:
+//! * `manifest.json` lists each entry point with input shapes/dtypes;
+//! * prefill `tiny.prefill.b{B}s{S}`: tokens `i32[B,S]` →
+//!   `(logits f32[B,S,V], k f32[B,L,Hkv,S,D], v f32[B,L,Hkv,S,D])`;
+//! * decode `tiny.decode.b{B}`: `(token i32[B], k f32[B,L,Hkv,MAX,D],
+//!   v ..., cur_len i32[B])` → `(logits f32[B,V], k', v')`;
+//! * weights are baked into the HLO as constants (self-contained binary).
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Model architecture constants parsed from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub param_count: u64,
+}
+
+/// One AOT entry point (an executable-to-be).
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub kind: EntryKind,
+    pub batch: usize,
+    /// Prefill: fixed prompt length the HLO was lowered for.
+    pub seq: usize,
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryKind {
+    Prefill,
+    Decode,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: HashMap<String, (VariantConfig, Vec<EntryMeta>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!(
+                "reading {}/manifest.json (run `make artifacts`)",
+                dir.display()
+            )
+        })?;
+        let v = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if v.get("format").and_then(Value::as_str) != Some("hlo-text") {
+            bail!("manifest format must be hlo-text");
+        }
+        let mut variants = HashMap::new();
+        let vs = v
+            .get("variants")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing variants"))?;
+        for (vname, vent) in vs.iter() {
+            let cfg = vent
+                .get("config")
+                .ok_or_else(|| anyhow!("variant {vname} missing config"))?;
+            let get = |k: &str| -> Result<usize> {
+                cfg.get(k)
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow!("config missing {k}"))
+            };
+            let config = VariantConfig {
+                vocab: get("vocab")?,
+                d_model: get("d_model")?,
+                n_layers: get("n_layers")?,
+                n_heads: get("n_heads")?,
+                n_kv_heads: get("n_kv_heads")?,
+                d_head: get("d_head")?,
+                max_seq: get("max_seq")?,
+                param_count: cfg.get("param_count").and_then(Value::as_u64).unwrap_or(0),
+            };
+            let mut entries = Vec::new();
+            let ents = vent
+                .get("entries")
+                .and_then(Value::as_obj)
+                .ok_or_else(|| anyhow!("variant {vname} missing entries"))?;
+            for (ename, e) in ents.iter() {
+                let kind = match e.get("kind").and_then(Value::as_str) {
+                    Some("prefill") => EntryKind::Prefill,
+                    Some("decode") => EntryKind::Decode,
+                    other => bail!("bad entry kind {other:?}"),
+                };
+                entries.push(EntryMeta {
+                    name: ename.to_string(),
+                    kind,
+                    batch: e
+                        .get("batch")
+                        .and_then(Value::as_usize)
+                        .ok_or_else(|| anyhow!("entry missing batch"))?,
+                    seq: e.get("seq").and_then(Value::as_usize).unwrap_or(0),
+                    file: dir.join(
+                        e.get("file")
+                            .and_then(Value::as_str)
+                            .ok_or_else(|| anyhow!("entry missing file"))?,
+                    ),
+                });
+            }
+            entries.sort_by(|a, b| a.name.cmp(&b.name));
+            variants.insert(vname.to_string(), (config, entries));
+        }
+        Ok(Manifest { dir, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<(&VariantConfig, &[EntryMeta])> {
+        self.variants
+            .get(name)
+            .map(|(c, e)| (c, e.as_slice()))
+            .ok_or_else(|| anyhow!("variant {name} not in manifest"))
+    }
+}
+
+/// Golden outputs written by aot.py for cross-layer verification.
+#[derive(Debug)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub prefill_logits_first4: Vec<f32>,
+}
+
+impl Golden {
+    pub fn load(dir: impl AsRef<Path>, variant: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(dir.as_ref().join(format!("{variant}.golden.json")))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("golden parse: {e}"))?;
+        let ints = |k: &str| -> Result<Vec<i32>> {
+            v.get(k)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("golden missing {k}"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as i32)
+                        .ok_or_else(|| anyhow!("bad int"))
+                })
+                .collect()
+        };
+        let floats = v
+            .get("prefill_logits_first4")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("golden missing logits"))?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
+            .collect();
+        Ok(Golden {
+            prompt: ints("prompt")?,
+            generated: ints("generated")?,
+            prefill_logits_first4: floats,
+        })
+    }
+}
+
+/// A compiled entry point ready to execute.
+pub struct Executable {
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Dense KV cache buffers (padded layout matching the decode entry:
+/// `[B, L, Hkv, MAX, D]` flattened row-major). Owned by rust — the
+/// coordinator moves these around exactly like the paper moves KV.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub batch: usize,
+    pub dims: (usize, usize, usize, usize), // (L, Hkv, MAX, D)
+}
+
+impl KvCache {
+    pub fn zeros(cfg: &VariantConfig, batch: usize) -> Self {
+        let dims = (cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.d_head);
+        let n = batch * dims.0 * dims.1 * dims.2 * dims.3;
+        KvCache {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            batch,
+            dims,
+        }
+    }
+
+    /// Per-sequence stride in elements.
+    pub fn seq_stride(&self) -> usize {
+        self.dims.0 * self.dims.1 * self.dims.2 * self.dims.3
+    }
+
+    /// Copy a prefill-produced cache (`[L,Hkv,S,D]`, S = prompt length) into
+    /// batch slot `slot` of this padded cache.
+    pub fn write_prefix(&mut self, slot: usize, kc: &[f32], vc: &[f32], s: usize) {
+        let (l, hkv, maxs, d) = self.dims;
+        assert_eq!(kc.len(), l * hkv * s * d, "prefix cache shape mismatch");
+        assert!(s <= maxs && slot < self.batch);
+        let base = slot * self.seq_stride();
+        for li in 0..l {
+            for h in 0..hkv {
+                for t in 0..s {
+                    let src = ((li * hkv + h) * s + t) * d;
+                    let dst = base + ((li * hkv + h) * maxs + t) * d;
+                    self.k[dst..dst + d].copy_from_slice(&kc[src..src + d]);
+                    self.v[dst..dst + d].copy_from_slice(&vc[src..src + d]);
+                }
+            }
+        }
+    }
+
+    /// Extract one sequence's slot (for migrating a sequence between
+    /// coordinator workers, the runtime-level analog of KV migration).
+    pub fn extract_slot(&self, slot: usize) -> (Vec<f32>, Vec<f32>) {
+        let stride = self.seq_stride();
+        let base = slot * stride;
+        (
+            self.k[base..base + stride].to_vec(),
+            self.v[base..base + stride].to_vec(),
+        )
+    }
+
+    /// Install a previously extracted slot.
+    pub fn install_slot(&mut self, slot: usize, k: &[f32], v: &[f32]) {
+        let stride = self.seq_stride();
+        assert_eq!(k.len(), stride);
+        let base = slot * stride;
+        self.k[base..base + stride].copy_from_slice(k);
+        self.v[base..base + stride].copy_from_slice(v);
+    }
+}
+
+/// The runtime: one PJRT CPU client plus compiled entry points.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create the CPU client and compile every entry of `variant`.
+    pub fn load(artifacts_dir: impl AsRef<Path>, variant: &str) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        log::info!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut executables = HashMap::new();
+        {
+            let (_cfg, entries) = manifest.variant(variant)?;
+            for meta in entries {
+                let t0 = std::time::Instant::now();
+                let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                    .map_err(|e| anyhow!("parse {}: {e:?}", meta.file.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
+                log::info!("compiled {} in {:?}", meta.name, t0.elapsed());
+                executables.insert(
+                    meta.name.clone(),
+                    Executable {
+                        meta: meta.clone(),
+                        exe,
+                    },
+                );
+            }
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("entry {name} not loaded"))
+    }
+
+    /// Find an entry by (kind, batch).
+    pub fn find_entry(&self, kind: EntryKind, batch: usize) -> Option<&Executable> {
+        self.executables
+            .values()
+            .find(|e| e.meta.kind == kind && e.meta.batch == batch)
+    }
+
+    /// Largest available batch for a kind (the coordinator packs to this).
+    pub fn max_batch(&self, kind: EntryKind) -> usize {
+        self.executables
+            .values()
+            .filter(|e| e.meta.kind == kind)
+            .map(|e| e.meta.batch)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Run a prefill entry. `tokens` is `[B, S]` row-major, padded by the
+    /// caller to the entry's fixed S (pad id 0 is fine — the caller slices
+    /// logits at true lengths). Returns (logits `[B,S,V]`, k, v as flat
+    /// `[B,L,Hkv,S,D]`).
+    pub fn prefill(
+        &self,
+        entry: &Executable,
+        tokens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let b = entry.meta.batch as i64;
+        let s = entry.meta.seq as i64;
+        anyhow::ensure!(
+            tokens.len() as i64 == b * s,
+            "prefill tokens must be B*S = {}",
+            b * s
+        );
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[b, s])
+            .map_err(|e| anyhow!("reshape tokens: {e:?}"))?;
+        let result = entry
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute prefill: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (logits, k, v) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("prefill output tuple: {e:?}"))?;
+        Ok((
+            logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            k.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            v.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Run a decode entry for one step. Token / cur_len are length-B; the
+    /// caches are the padded `[B,L,Hkv,MAX,D]` layout. Returns logits
+    /// `[B,V]` and writes the updated caches back into `cache`.
+    pub fn decode_step(
+        &self,
+        entry: &Executable,
+        tokens: &[i32],
+        cur_len: &[i32],
+        cache: &mut KvCache,
+    ) -> Result<Vec<f32>> {
+        let b = entry.meta.batch;
+        anyhow::ensure!(tokens.len() == b && cur_len.len() == b);
+        anyhow::ensure!(cache.batch == b, "cache batch mismatch");
+        let (l, hkv, maxs, d) = cache.dims;
+        let dims = [b as i64, l as i64, hkv as i64, maxs as i64, d as i64];
+        let tok_lit = xla::Literal::vec1(tokens);
+        let len_lit = xla::Literal::vec1(cur_len);
+        let k_lit = xla::Literal::vec1(cache.k.as_slice())
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape k: {e:?}"))?;
+        let v_lit = xla::Literal::vec1(cache.v.as_slice())
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape v: {e:?}"))?;
+        let result = entry
+            .exe
+            .execute::<xla::Literal>(&[tok_lit, k_lit, v_lit, len_lit])
+            .map_err(|e| anyhow!("execute decode: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (logits, k, v) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("decode output tuple: {e:?}"))?;
+        cache.k = k.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        cache.v = v.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// Device-resident KV cache: the k/v tensors kept as XLA literals between
+/// decode steps, avoiding the Literal -> `Vec<f32>` -> Literal round trip per
+/// step (EXPERIMENTS.md §Perf: the real serving path's hot-loop
+/// optimization — per-step host copies drop from 4 large buffers to 0).
+pub struct KvLiterals {
+    k: xla::Literal,
+    v: xla::Literal,
+    dims: [i64; 5],
+}
+
+impl Runtime {
+    /// Upload a host cache into device-feedable literals.
+    pub fn upload_cache(&self, cache: &KvCache) -> Result<KvLiterals> {
+        let (l, hkv, maxs, d) = cache.dims;
+        let dims = [cache.batch as i64, l as i64, hkv as i64, maxs as i64, d as i64];
+        Ok(KvLiterals {
+            k: xla::Literal::vec1(cache.k.as_slice())
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape k: {e:?}"))?,
+            v: xla::Literal::vec1(cache.v.as_slice())
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape v: {e:?}"))?,
+            dims,
+        })
+    }
+
+    /// Download the literals back into a host cache (admission-time only).
+    pub fn download_cache(&self, lit: &KvLiterals, cache: &mut KvCache) -> Result<()> {
+        cache.k = lit.k.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        cache.v = lit.v.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(())
+    }
+
+    /// One decode iteration with the KV kept as literals between steps.
+    pub fn decode_step_device(
+        &self,
+        entry: &Executable,
+        tokens: &[i32],
+        cur_len: &[i32],
+        kv: &mut KvLiterals,
+    ) -> Result<Vec<f32>> {
+        let b = entry.meta.batch;
+        anyhow::ensure!(tokens.len() == b && cur_len.len() == b);
+        anyhow::ensure!(kv.dims[0] as usize == b, "cache batch mismatch");
+        let tok_lit = xla::Literal::vec1(tokens);
+        let len_lit = xla::Literal::vec1(cur_len);
+        let result = entry
+            .exe
+            .execute::<xla::Literal>(&[tok_lit, kv.k.clone(), kv.v.clone(), len_lit])
+            .map_err(|e| anyhow!("execute decode: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (logits, k, v) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("decode output tuple: {e:?}"))?;
+        kv.k = k;
+        kv.v = v;
+        logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// Argmax over a logits row (greedy sampling).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Heavier runtime tests (needing built artifacts + PJRT) live in
+    // rust/tests/integration_runtime.rs; here only the pure helpers.
+
+    #[test]
+    fn argmax_picks_first_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn kv_cache_layout_roundtrip() {
+        let cfg = VariantConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            d_head: 4,
+            max_seq: 8,
+            param_count: 0,
+        };
+        let mut c = KvCache::zeros(&cfg, 2);
+        assert_eq!(c.k.len(), 2 * 2 * 8 * 4);
+        let s = 3;
+        let kc: Vec<f32> = (0..(2 * s * 4)).map(|x| x as f32).collect();
+        let vc: Vec<f32> = kc.iter().map(|x| -x).collect();
+        c.write_prefix(1, &kc, &vc, s);
+        // slot 0 untouched
+        assert!(c.k[..c.seq_stride()].iter().all(|&x| x == 0.0));
+        let base = c.seq_stride();
+        // layer 0, token 1 lives d elements in
+        assert_eq!(c.k[base + 4], 4.0);
+        assert_eq!(c.v[base + 4], -4.0);
+        // layer 1, token 0: source index (1*3+0)*4 = 12; dest (1*8)*4 = 32
+        assert_eq!(c.k[base + 32], 12.0);
+    }
+
+    #[test]
+    fn slot_extract_install_roundtrip() {
+        let cfg = VariantConfig {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            n_kv_heads: 1,
+            d_head: 4,
+            max_seq: 4,
+            param_count: 0,
+        };
+        let mut a = KvCache::zeros(&cfg, 2);
+        for (i, x) in a.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let (k1, v1) = a.extract_slot(1);
+        let mut b = KvCache::zeros(&cfg, 2);
+        b.install_slot(0, &k1, &v1);
+        assert_eq!(&b.k[..b.seq_stride()], &a.k[a.seq_stride()..]);
+    }
+}

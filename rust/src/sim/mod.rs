@@ -1,0 +1,357 @@
+//! Discrete-event simulation engine: a time-ordered event heap, a driver
+//! loop, and the `Engine` trait the three serving systems implement.
+//!
+//! Events are engine-agnostic: request arrivals (from the workload
+//! generator) and timers (engines schedule their own step-completion /
+//! control-cycle / transfer-completion callbacks carrying an opaque tag).
+
+use crate::metrics::Collector;
+use crate::workload::Request;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Opaque engine-defined timer payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Timer {
+    /// Engine-defined discriminator (e.g. which instance's step completed).
+    pub tag: u64,
+    /// Secondary payload (e.g. request or batch id).
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Timer {
+    pub fn new(tag: u64) -> Self {
+        Timer { tag, a: 0, b: 0 }
+    }
+
+    pub fn with(tag: u64, a: u64, b: u64) -> Self {
+        Timer { tag, a, b }
+    }
+}
+
+#[derive(Debug)]
+pub enum EventKind {
+    Arrival(Request),
+    Timer(Timer),
+}
+
+#[derive(Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, seq): BinaryHeap is a max-heap, so reverse.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event queue handed to engines for scheduling future work.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    now: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn push_arrival(&mut self, req: Request) {
+        let time = req.arrival;
+        self.push(time, EventKind::Arrival(req));
+    }
+
+    /// Schedule a timer at absolute time `at`.
+    pub fn push_timer(&mut self, at: f64, timer: Timer) {
+        debug_assert!(
+            at >= self.now - 1e-9,
+            "scheduling into the past: {at} < {}",
+            self.now
+        );
+        self.push(at.max(self.now), EventKind::Timer(timer));
+    }
+
+    /// Schedule a timer `delay` seconds from now.
+    pub fn push_after(&mut self, delay: f64, timer: Timer) {
+        self.push_timer(self.now + delay.max(0.0), timer);
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Event {
+            time,
+            seq: self.seq,
+            kind,
+        });
+    }
+
+    fn pop(&mut self) -> Option<(f64, EventKind)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now - 1e-9, "time went backwards");
+        self.now = ev.time.max(self.now);
+        Some((self.now, ev.kind))
+    }
+}
+
+/// A simulated serving system.
+pub trait Engine {
+    /// A new request arrived at the router.
+    fn on_arrival(&mut self, req: Request, q: &mut EventQueue);
+
+    /// An engine-scheduled timer fired.
+    fn on_timer(&mut self, t: Timer, q: &mut EventQueue);
+
+    /// Access the metrics collector (finished-request records).
+    fn collector(&mut self) -> &mut Collector;
+
+    /// Requests admitted but not yet completed (for the conservation check
+    /// and the drain loop).
+    fn inflight(&self) -> u64;
+
+    /// Called once when the driver finishes, with the final sim time.
+    fn on_drain(&mut self, _now: f64) {}
+}
+
+/// Outcome of a simulation run.
+#[derive(Debug)]
+pub struct RunResult {
+    /// Final simulation time (all work drained).
+    pub end_time: f64,
+    pub events_processed: u64,
+    pub submitted: u64,
+}
+
+/// Drive `engine` over `requests` until all events drain or `max_time`.
+pub fn run(
+    engine: &mut dyn Engine,
+    requests: Vec<Request>,
+    max_time: f64,
+) -> RunResult {
+    let mut q = EventQueue::new();
+    let submitted = requests.len() as u64;
+    for r in requests {
+        q.push_arrival(r);
+    }
+    let mut events = 0u64;
+    while let Some((now, kind)) = q.pop() {
+        if now > max_time {
+            log::warn!("simulation hit max_time {max_time}; draining stopped");
+            break;
+        }
+        events += 1;
+        match kind {
+            EventKind::Arrival(req) => engine.on_arrival(req, &mut q),
+            EventKind::Timer(t) => engine.on_timer(t, &mut q),
+        }
+    }
+    let end = q.now();
+    engine.on_drain(end);
+    RunResult {
+        end_time: end,
+        events_processed: events,
+        submitted,
+    }
+}
+
+/// Verify request conservation after a run: submitted = completed + dropped
+/// + inflight. Engines must keep this identity or the run is invalid.
+pub fn check_conservation(res: &RunResult, engine: &mut dyn Engine) -> Result<(), String> {
+    let done = engine.collector().completed();
+    let dropped = engine.collector().dropped;
+    let inflight = engine.inflight();
+    if done + dropped + inflight == res.submitted {
+        Ok(())
+    } else {
+        Err(format!(
+            "conservation violated: submitted={} done={done} dropped={dropped} inflight={inflight}",
+            res.submitted
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RequestRecord;
+
+    /// Trivial engine: serves each request after a fixed delay, one event.
+    struct FixedDelay {
+        delay: f64,
+        col: Collector,
+        pending: Vec<Request>,
+        inflight: u64,
+    }
+
+    impl Engine for FixedDelay {
+        fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+            let idx = self.pending.len() as u64;
+            self.pending.push(req);
+            self.inflight += 1;
+            q.push_after(self.delay, Timer::with(1, idx, 0));
+        }
+
+        fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
+            let req = &self.pending[t.a as usize];
+            let now = q.now();
+            self.col.finish(RequestRecord {
+                id: req.id,
+                arrival: req.arrival,
+                prefill_start: req.arrival,
+                first_token: now,
+                completion: now,
+                prompt_len: req.prompt_len,
+                output_len: req.output_len,
+                cached_tokens: 0,
+            });
+            self.inflight -= 1;
+        }
+
+        fn collector(&mut self) -> &mut Collector {
+            &mut self.col
+        }
+
+        fn inflight(&self) -> u64 {
+            self.inflight
+        }
+    }
+
+    fn req(id: u64, at: f64) -> Request {
+        Request {
+            id,
+            arrival: at,
+            prompt_len: 8,
+            output_len: 4,
+            cache_tokens: vec![1, 2, 3],
+        }
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_timer(3.0, Timer::new(3));
+        q.push_timer(1.0, Timer::new(1));
+        q.push_timer(2.0, Timer::new(2));
+        let mut order = Vec::new();
+        while let Some((_, k)) = q.pop() {
+            if let EventKind::Timer(t) = k {
+                order.push(t.tag);
+            }
+        }
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_fire_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..5 {
+            q.push_timer(1.0, Timer::new(i));
+        }
+        let mut order = Vec::new();
+        while let Some((_, k)) = q.pop() {
+            if let EventKind::Timer(t) = k {
+                order.push(t.tag);
+            }
+        }
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let mut q = EventQueue::new();
+        q.push_timer(5.0, Timer::new(0));
+        q.push_timer(1.0, Timer::new(1));
+        let (t1, _) = q.pop().unwrap();
+        let (t2, _) = q.pop().unwrap();
+        assert!(t2 >= t1);
+        assert_eq!(q.now(), 5.0);
+    }
+
+    #[test]
+    fn run_completes_all_requests() {
+        let mut e = FixedDelay {
+            delay: 0.5,
+            col: Collector::new(),
+            pending: Vec::new(),
+            inflight: 0,
+        };
+        let reqs: Vec<Request> = (0..10).map(|i| req(i, i as f64 * 0.1)).collect();
+        let res = run(&mut e, reqs, 1e9);
+        assert_eq!(res.submitted, 10);
+        assert_eq!(e.collector().completed(), 10);
+        check_conservation(&res, &mut e).unwrap();
+        // last arrival 0.9 + delay 0.5
+        assert!((res.end_time - 1.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn push_after_is_relative_to_now() {
+        let mut q = EventQueue::new();
+        q.push_timer(2.0, Timer::new(0));
+        let _ = q.pop();
+        q.push_after(1.5, Timer::new(1));
+        let (t, _) = q.pop().unwrap();
+        assert!((t - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conservation_detects_leaks() {
+        struct Leaky {
+            col: Collector,
+        }
+        impl Engine for Leaky {
+            fn on_arrival(&mut self, _r: Request, _q: &mut EventQueue) {
+                // drops the request on the floor without recording it
+            }
+            fn on_timer(&mut self, _t: Timer, _q: &mut EventQueue) {}
+            fn collector(&mut self) -> &mut Collector {
+                &mut self.col
+            }
+            fn inflight(&self) -> u64 {
+                0
+            }
+        }
+        let mut e = Leaky {
+            col: Collector::new(),
+        };
+        let res = run(&mut e, vec![req(0, 0.0)], 1e9);
+        assert!(check_conservation(&res, &mut e).is_err());
+    }
+}

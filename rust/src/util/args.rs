@@ -1,0 +1,166 @@
+//! Tiny CLI argument parser (clap is not in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommand extraction. Typed getters with defaults keep call sites short.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+/// Marker value for boolean flags given without a value.
+const FLAG_SET: &str = "\u{1}";
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut a = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    match iter.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            a.flags.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            a.flags.insert(body.to_string(), FLAG_SET.to_string());
+                        }
+                    }
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// First positional argument = subcommand; remaining args form a new Args.
+    pub fn subcommand(&self) -> (Option<&str>, Args) {
+        let mut rest = self.clone();
+        if rest.positional.is_empty() {
+            return (None, rest);
+        }
+        let cmd = rest.positional.remove(0);
+        (
+            Some(Box::leak(cmd.into_boxed_str()) as &str),
+            rest,
+        )
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|v| v.as_str()).filter(|v| *v != FLAG_SET)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => default,
+            Some(FLAG_SET) => true,
+            Some(v) => matches!(v, "1" | "true" | "yes" | "on"),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("--rps 5 --model=llama13b");
+        assert_eq!(a.get("rps"), Some("5"));
+        assert_eq!(a.get("model"), Some("llama13b"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse("--verbose --out x.json");
+        assert!(a.bool_or("verbose", false));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None); // no value attached
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn flag_before_another_flag_is_boolean() {
+        let a = parse("--dry-run --rps 3");
+        assert!(a.bool_or("dry-run", false));
+        assert_eq!(a.u64_or("rps", 0), 3);
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse("--x 2.5 --n 7 --flag=true");
+        assert_eq!(a.f64_or("x", 0.0), 2.5);
+        assert_eq!(a.usize_or("n", 0), 7);
+        assert!(a.bool_or("flag", false));
+        assert_eq!(a.f64_or("missing", 1.5), 1.5);
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = parse("simulate --rps 4 trailing");
+        assert_eq!(a.positional, vec!["simulate", "trailing"]);
+        let (cmd, rest) = a.subcommand();
+        assert_eq!(cmd, Some("simulate"));
+        assert_eq!(rest.positional, vec!["trailing"]);
+        assert_eq!(rest.u64_or("rps", 0), 4);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("--engines vllm,distserve , banaserve".replace(" , ", ",").as_str());
+        let l = a.list("engines");
+        assert_eq!(l, vec!["vllm", "distserve", "banaserve"]);
+        assert!(parse("").list("engines").is_empty());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // a negative number must not be eaten as a flag
+        let a = parse("--delta -0.5");
+        assert_eq!(a.f64_or("delta", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,167 @@
+//! Property-testing harness (proptest is not in the offline registry).
+//!
+//! `check(name, cases, |rng| ...)` runs a property against `cases` random
+//! inputs drawn through the given RNG; on failure it reports the case seed
+//! so the exact failing input can be replayed with `replay(seed, f)`.
+//! Generators live on `Gen`, a thin wrapper over [`crate::util::prng::Rng`]
+//! with sized-collection helpers.
+
+use super::prng::Rng;
+
+/// Generator context handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint — properties should scale their structures with this.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_u64(&mut self, len: usize, lo: u64, hi: u64) -> Vec<u64> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Token sequence (for prefix-tree / workload properties).
+    pub fn tokens(&mut self, max_len: usize, vocab: u64) -> Vec<u32> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| self.rng.below(vocab) as u32).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Outcome of a property over one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `f` against `cases` random inputs. Panics with the failing seed on
+/// the first violated case.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base = env_seed().unwrap_or(0xBA7A5E12);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: (8 + case * 4).min(256) as usize,
+        };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay one failing case by seed.
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        size: 64,
+    };
+    if let Err(msg) = f(&mut g) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("BANASERVE_PROP_SEED")
+        .ok()
+        .and_then(|s| {
+            let s = s.trim_start_matches("0x");
+            u64::from_str_radix(s, 16).ok().or_else(|| s.parse().ok())
+        })
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("trivial", 25, |g| {
+            ran += 1;
+            let v = g.vec_u64(g.size.min(10), 0, 100);
+            if v.len() <= 10 {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+        assert_eq!(ran, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            let x = g.usize_in(0, 100);
+            if x < 1000 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 50, |g| {
+            let a = g.usize_in(3, 9);
+            prop_assert!((3..=9).contains(&a), "usize_in out of range: {a}");
+            let f = g.f64_in(-1.0, 1.0);
+            prop_assert!((-1.0..=1.0).contains(&f), "f64_in out of range: {f}");
+            let t = g.tokens(16, 100);
+            prop_assert!(t.len() <= 16, "tokens too long");
+            prop_assert!(t.iter().all(|&x| x < 100), "token out of vocab");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_generator_stream() {
+        let mut first: Option<Vec<u64>> = None;
+        replay(0x1234, |g| {
+            first = Some(g.vec_u64(5, 0, 1000));
+            Ok(())
+        });
+        let mut second: Option<Vec<u64>> = None;
+        replay(0x1234, |g| {
+            second = Some(g.vec_u64(5, 0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,73 @@
+//! Leveled stderr logger implementing the `log` crate facade.
+//!
+//! `init(Level)` installs it once; `BANASERVE_LOG=debug|info|warn|error`
+//! overrides the level at startup.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Returns whether this call installed it.
+pub fn init(default: Level) -> bool {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return false;
+    }
+    let level = match std::env::var("BANASERVE_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("info") => LevelFilter::Info,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        _ => default.to_level_filter(),
+    };
+    let logger = Box::leak(Box::new(StderrLogger {
+        start: Instant::now(),
+    }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(level);
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        let first = init(Level::Warn);
+        let second = init(Level::Warn);
+        // At most one call reports installation (another test may have won).
+        assert!(!(first && second));
+        log::warn!("logger smoke test");
+    }
+}

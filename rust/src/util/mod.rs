@@ -1,0 +1,87 @@
+//! Substrate utilities that would normally come from crates.io.
+//!
+//! The offline registry snapshot in this image only carries the `xla`
+//! crate's transitive closure — no rand/serde/clap/criterion/proptest —
+//! so the pieces the rest of the crate needs are implemented here, each
+//! with its own test suite.
+
+pub mod args;
+pub mod checker;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;
+
+/// Ceiling division for byte/block arithmetic.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Clamp a float into `[lo, hi]`.
+#[inline]
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Format a byte count human-readably (KiB/MiB/GiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= KIB * KIB * KIB {
+        format!("{:.2} GiB", bf / (KIB * KIB * KIB))
+    } else if bf >= KIB * KIB {
+        format!("{:.2} MiB", bf / (KIB * KIB))
+    } else if bf >= KIB {
+        format!("{:.2} KiB", bf / KIB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format seconds with an adaptive unit (s/ms/µs).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn clampf_bounds() {
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+        assert_eq!(clampf(-1.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(9.0, 0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MiB"));
+        assert!(fmt_bytes(5 * 1024 * 1024 * 1024).contains("GiB"));
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(0.002).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,330 @@
+//! Statistics helpers: streaming summaries, percentiles, histograms, and
+//! the 95% confidence intervals the paper's methodology reports (§5.1.3:
+//! "all experiments were repeated five times ... mean values along with 95%
+//! confidence intervals").
+
+/// Collects samples; computes mean/std/percentiles on demand.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        for x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.xs.len() as f64
+    }
+
+    /// Sample standard deviation (n-1).
+    pub fn std(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.xs.iter().map(|x| (x - m) * (x - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Half-width of the 95% CI on the mean (t-distribution, df = n-1).
+    pub fn ci95_half_width(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        t_crit_95(n - 1) * self.std() / (n as f64).sqrt()
+    }
+}
+
+/// Two-sided 95% critical value of Student's t for small df (table), ~1.96
+/// beyond df 120. Covers the paper's 5-repeat methodology (df=4 -> 2.776).
+pub fn t_crit_95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        return f64::NAN;
+    }
+    if df <= 30 {
+        TABLE[df - 1]
+    } else if df <= 60 {
+        2.000
+    } else if df <= 120 {
+        1.980
+    } else {
+        1.960
+    }
+}
+
+/// Fixed-bucket histogram for latency distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n > 0);
+        Histogram {
+            lo,
+            hi,
+            buckets: vec![0; n],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.buckets.len();
+            let i = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.buckets[i.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Bucket lower edge.
+    pub fn edge(&self, i: usize) -> f64 {
+        self.lo + (self.hi - self.lo) * i as f64 / self.buckets.len() as f64
+    }
+
+    /// ASCII sparkline of the histogram, for bench output.
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.buckets.iter().copied().max().unwrap_or(0).max(1);
+        self.buckets
+            .iter()
+            .map(|&b| GLYPHS[(b * 7 / max) as usize])
+            .collect()
+    }
+}
+
+/// Time-weighted average tracker — drives the utilization metrics of
+/// Figs 1 / 2b (the average of a stepwise-constant signal over sim time).
+#[derive(Debug, Clone)]
+pub struct TimeWeighted {
+    last_t: f64,
+    last_v: f64,
+    integral: f64,
+    start: Option<f64>,
+}
+
+impl Default for TimeWeighted {
+    fn default() -> Self {
+        TimeWeighted {
+            last_t: 0.0,
+            last_v: 0.0,
+            integral: 0.0,
+            start: None,
+        }
+    }
+}
+
+impl TimeWeighted {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that the signal changed to `v` at time `t`.
+    pub fn set(&mut self, t: f64, v: f64) {
+        match self.start {
+            None => {
+                self.start = Some(t);
+            }
+            Some(_) => {
+                debug_assert!(t >= self.last_t, "time must be monotonic");
+                self.integral += self.last_v * (t - self.last_t);
+            }
+        }
+        self.last_t = t;
+        self.last_v = v;
+    }
+
+    /// Average over [start, t_end].
+    pub fn average(&self, t_end: f64) -> f64 {
+        match self.start {
+            None => 0.0,
+            Some(s) => {
+                let total = t_end - s;
+                if total <= 0.0 {
+                    return self.last_v;
+                }
+                (self.integral + self.last_v * (t_end - self.last_t)) / total
+            }
+        }
+    }
+
+    pub fn current(&self) -> f64 {
+        self.last_v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        s.extend([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - 1.29099).abs() < 1e-4);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Summary::new();
+        s.extend([10.0, 20.0, 30.0, 40.0, 50.0]);
+        assert_eq!(s.p50(), 30.0);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(100.0), 50.0);
+        assert!((s.percentile(25.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Summary::new();
+        s.add(7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn ci95_five_repeats_uses_t4() {
+        // the paper's 5-seed methodology: df=4, t=2.776
+        let mut s = Summary::new();
+        s.extend([10.0, 11.0, 9.0, 10.5, 9.5]);
+        let hw = s.ci95_half_width();
+        let expect = 2.776 * s.std() / 5f64.sqrt();
+        assert!((hw - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts_and_bounds() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.0, 0.5, 5.0, 9.99, -1.0, 10.0, 20.0] {
+            h.add(x);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.buckets()[0], 2);
+        assert_eq!(h.buckets()[5], 1);
+        assert_eq!(h.buckets()[9], 1);
+        assert_eq!(h.sparkline().chars().count(), 10);
+    }
+
+    #[test]
+    fn time_weighted_average() {
+        let mut tw = TimeWeighted::new();
+        tw.set(0.0, 1.0); // 1.0 during [0, 2)
+        tw.set(2.0, 0.0); // 0.0 during [2, 4)
+        assert!((tw.average(4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(tw.current(), 0.0);
+    }
+
+    #[test]
+    fn time_weighted_empty_is_zero() {
+        let tw = TimeWeighted::new();
+        assert_eq!(tw.average(10.0), 0.0);
+    }
+
+    #[test]
+    fn t_table_monotone_toward_196() {
+        assert!(t_crit_95(1) > t_crit_95(4));
+        assert!(t_crit_95(4) > t_crit_95(30));
+        assert_eq!(t_crit_95(1000), 1.960);
+    }
+}

@@ -1,0 +1,447 @@
+//! Workload generation (paper §5.1.2-§5.1.3): Alpaca-like short-context and
+//! LongBench-like long-context request streams, Poisson or bursty arrivals,
+//! controllable prefix sharing, and trace record/replay.
+//!
+//! The evaluation consumes only the request *marginals* — input length,
+//! output length, arrival time, and prefix shareability — so the generators
+//! reproduce those (Fig 7a: 4-50 token inputs; Fig 7b: ~2k-85k; output
+//! capped at 512 in all experiments).
+
+use crate::util::json::{self, Value};
+use crate::util::prng::{Rng, Zipf};
+
+/// Cacheable-prefix length cap: only the first `CACHE_TOKEN_CAP` tokens of a
+/// prompt participate in prefix matching (bounds radix-tree memory for 85k-
+/// token LongBench prompts without changing behaviour — sharing beyond this
+/// depth is negligible in all workloads).
+pub const CACHE_TOKEN_CAP: usize = 4096;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (seconds from experiment start).
+    pub arrival: f64,
+    /// Full prompt length in tokens.
+    pub prompt_len: u64,
+    /// Number of output tokens this request will generate.
+    pub output_len: u64,
+    /// The cacheable token prefix (capped) used for prefix matching.
+    pub cache_tokens: Vec<u32>,
+}
+
+impl Request {
+    /// Tokens of the prompt that are *sharable* (present in cache_tokens).
+    pub fn cacheable_len(&self) -> u64 {
+        self.cache_tokens.len() as u64
+    }
+}
+
+/// Which benchmark's length distribution to draw from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LengthProfile {
+    /// Alpaca: short instruction-following prompts, 4-50 tokens (Fig 7a).
+    AlpacaShort,
+    /// LongBench: long-context, ~2k-85k tokens (Fig 7b).
+    LongBench,
+}
+
+impl LengthProfile {
+    /// Sample an input length.
+    pub fn sample_input(&self, rng: &mut Rng) -> u64 {
+        match self {
+            LengthProfile::AlpacaShort => {
+                // log-normal centered near ~18 tokens, clipped to [4, 50]
+                let x = rng.lognormal(2.9, 0.55);
+                (x.round() as u64).clamp(4, 50)
+            }
+            LengthProfile::LongBench => {
+                // log-normal spanning 2k..85k, median ~8k
+                let x = rng.lognormal(9.0, 0.85);
+                (x.round() as u64).clamp(2_000, 85_000)
+            }
+        }
+    }
+
+    /// Sample an output length (capped at 512 per the paper's methodology).
+    pub fn sample_output(&self, rng: &mut Rng) -> u64 {
+        let x = match self {
+            LengthProfile::AlpacaShort => rng.lognormal(5.0, 0.6),
+            LengthProfile::LongBench => rng.lognormal(4.6, 0.6),
+        };
+        (x.round() as u64).clamp(1, 512)
+    }
+}
+
+/// Arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Stationary Poisson at `rps` requests/second.
+    Poisson { rps: f64 },
+    /// On/off modulated Poisson: `burst_factor`×rps during bursts of
+    /// `burst_secs`, base rate otherwise, cycling every `period_secs`.
+    Bursty {
+        rps: f64,
+        burst_factor: f64,
+        burst_secs: f64,
+        period_secs: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous rate at time t.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rps } => rps,
+            ArrivalProcess::Bursty {
+                rps,
+                burst_factor,
+                burst_secs,
+                period_secs,
+            } => {
+                let phase = t % period_secs;
+                if phase < burst_secs {
+                    rps * burst_factor
+                } else {
+                    rps
+                }
+            }
+        }
+    }
+
+    /// Generate arrival times in [0, duration) by thinning.
+    pub fn arrivals(&self, duration: f64, rng: &mut Rng) -> Vec<f64> {
+        let max_rate = match *self {
+            ArrivalProcess::Poisson { rps } => rps,
+            ArrivalProcess::Bursty {
+                rps, burst_factor, ..
+            } => rps * burst_factor,
+        };
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(max_rate);
+            if t >= duration {
+                break;
+            }
+            // thin to the instantaneous rate
+            if rng.f64() < self.rate_at(t) / max_rate {
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+/// Prefix-sharing model: a Zipf-popular pool of prompt templates whose
+/// leading tokens are shared between requests (system prompts, few-shot
+/// preambles). This is the mechanism that makes cache-aware routing skew
+/// load (Fig 2a) and that the Global KV Cache Store neutralizes.
+#[derive(Debug, Clone)]
+pub struct PrefixConfig {
+    /// Probability a request uses a shared template at all.
+    pub share_prob: f64,
+    /// Number of distinct templates.
+    pub n_templates: usize,
+    /// Zipf skew of template popularity.
+    pub zipf_s: f64,
+    /// Shared fraction of the prompt drawn uniformly from this range.
+    pub shared_frac: (f64, f64),
+}
+
+impl Default for PrefixConfig {
+    fn default() -> Self {
+        PrefixConfig {
+            share_prob: 0.5,
+            n_templates: 32,
+            zipf_s: 1.1,
+            shared_frac: (0.3, 0.9),
+        }
+    }
+}
+
+impl PrefixConfig {
+    pub fn none() -> Self {
+        PrefixConfig {
+            share_prob: 0.0,
+            n_templates: 1,
+            zipf_s: 1.0,
+            shared_frac: (0.0, 0.0),
+        }
+    }
+}
+
+/// Full workload description.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub profile: LengthProfile,
+    pub arrivals: ArrivalProcess,
+    pub duration: f64,
+    pub seed: u64,
+    pub prefix: PrefixConfig,
+}
+
+impl WorkloadConfig {
+    pub fn poisson(profile: LengthProfile, rps: f64, duration: f64, seed: u64) -> Self {
+        WorkloadConfig {
+            profile,
+            arrivals: ArrivalProcess::Poisson { rps },
+            duration,
+            seed,
+            prefix: PrefixConfig::default(),
+        }
+    }
+
+    /// Generate the request stream.
+    pub fn generate(&self) -> Vec<Request> {
+        let root = Rng::new(self.seed);
+        let mut r_arr = root.substream("arrivals");
+        let mut r_len = root.substream("lengths");
+        let mut r_pfx = root.substream("prefixes");
+        let zipf = Zipf::new(self.prefix.n_templates.max(1), self.prefix.zipf_s);
+
+        let times = self.arrivals.arrivals(self.duration, &mut r_arr);
+        let mut out = Vec::with_capacity(times.len());
+        let mut unique_counter: u32 = 1 << 24; // unique-token namespace
+
+        for (i, t) in times.into_iter().enumerate() {
+            let prompt_len = self.profile.sample_input(&mut r_len);
+            let output_len = self.profile.sample_output(&mut r_len);
+            let cacheable = prompt_len.min(CACHE_TOKEN_CAP as u64) as usize;
+
+            let mut cache_tokens = Vec::with_capacity(cacheable);
+            if self.prefix.share_prob > 0.0 && r_pfx.chance(self.prefix.share_prob) {
+                let template = zipf.sample(&mut r_pfx) as u32;
+                let (lo, hi) = self.prefix.shared_frac;
+                let frac = lo + r_pfx.f64() * (hi - lo);
+                let shared = ((cacheable as f64 * frac) as usize).min(cacheable);
+                // template tokens are a deterministic function of (template, pos)
+                for p in 0..shared {
+                    cache_tokens.push(template.wrapping_mul(31) ^ (p as u32) | 0x8000_0000);
+                }
+                for _ in shared..cacheable {
+                    cache_tokens.push(unique_counter);
+                    unique_counter += 1;
+                }
+            } else {
+                for _ in 0..cacheable {
+                    cache_tokens.push(unique_counter);
+                    unique_counter += 1;
+                }
+            }
+
+            out.push(Request {
+                id: i as u64,
+                arrival: t,
+                prompt_len,
+                output_len,
+                cache_tokens,
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace record / replay
+// ---------------------------------------------------------------------------
+
+/// Serialize a request stream to JSON (compact: cache tokens included).
+pub fn trace_to_json(reqs: &[Request]) -> String {
+    let arr: Vec<Value> = reqs
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("id", json::num(r.id as f64)),
+                ("arrival", json::num(r.arrival)),
+                ("prompt_len", json::num(r.prompt_len as f64)),
+                ("output_len", json::num(r.output_len as f64)),
+                (
+                    "cache_tokens",
+                    json::arr(
+                        r.cache_tokens.iter().map(|&t| json::num(t as f64)).collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    json::write(&json::arr(arr))
+}
+
+/// Parse a trace back.
+pub fn trace_from_json(text: &str) -> Result<Vec<Request>, String> {
+    let v = json::parse(text).map_err(|e| e.to_string())?;
+    let arr = v.as_arr().ok_or("trace must be an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let get = |k: &str| -> Result<f64, String> {
+            item.get(k)
+                .and_then(|x| x.as_f64())
+                .ok_or(format!("missing field {k}"))
+        };
+        let toks = item
+            .get("cache_tokens")
+            .and_then(|x| x.as_arr())
+            .ok_or("missing cache_tokens")?
+            .iter()
+            .map(|t| t.as_f64().map(|f| f as u32).ok_or("bad token"))
+            .collect::<Result<Vec<u32>, _>>()?;
+        out.push(Request {
+            id: get("id")? as u64,
+            arrival: get("arrival")?,
+            prompt_len: get("prompt_len")? as u64,
+            output_len: get("output_len")? as u64,
+            cache_tokens: toks,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(rps: f64, seed: u64) -> WorkloadConfig {
+        WorkloadConfig::poisson(LengthProfile::AlpacaShort, rps, 60.0, seed)
+    }
+
+    #[test]
+    fn alpaca_lengths_in_fig7a_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let l = LengthProfile::AlpacaShort.sample_input(&mut rng);
+            assert!((4..=50).contains(&l), "alpaca len {l}");
+        }
+    }
+
+    #[test]
+    fn longbench_lengths_in_fig7b_range() {
+        let mut rng = Rng::new(2);
+        let mut max = 0;
+        let mut min = u64::MAX;
+        for _ in 0..5000 {
+            let l = LengthProfile::LongBench.sample_input(&mut rng);
+            assert!((2_000..=85_000).contains(&l));
+            max = max.max(l);
+            min = min.min(l);
+        }
+        assert!(min < 3_000, "distribution must reach short end: {min}");
+        assert!(max > 40_000, "distribution must reach long tail: {max}");
+    }
+
+    #[test]
+    fn outputs_capped_at_512() {
+        let mut rng = Rng::new(3);
+        for profile in [LengthProfile::AlpacaShort, LengthProfile::LongBench] {
+            for _ in 0..2000 {
+                let l = profile.sample_output(&mut rng);
+                assert!((1..=512).contains(&l));
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximately_met() {
+        let w = cfg(10.0, 4);
+        let reqs = w.generate();
+        let rate = reqs.len() as f64 / 60.0;
+        assert!((8.0..12.0).contains(&rate), "rate = {rate}");
+        // arrivals sorted
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn bursty_rate_is_higher_in_burst_windows() {
+        let proc = ArrivalProcess::Bursty {
+            rps: 5.0,
+            burst_factor: 5.0,
+            burst_secs: 10.0,
+            period_secs: 60.0,
+        };
+        let mut rng = Rng::new(5);
+        let times = proc.arrivals(600.0, &mut rng);
+        let in_burst = times
+            .iter()
+            .filter(|t| (*t % 60.0) < 10.0)
+            .count() as f64;
+        let out_burst = times.len() as f64 - in_burst;
+        // burst windows are 1/6 of time but 5x rate -> expect ~equal counts
+        let ratio = in_burst / out_burst.max(1.0);
+        assert!((0.6..1.7).contains(&ratio), "ratio = {ratio}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = cfg(5.0, 42).generate();
+        let b = cfg(5.0, 42).generate();
+        assert_eq!(a, b);
+        let c = cfg(5.0, 43).generate();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prefix_sharing_produces_common_prefixes() {
+        let mut w = cfg(20.0, 7);
+        w.prefix = PrefixConfig {
+            share_prob: 1.0,
+            n_templates: 2,
+            zipf_s: 1.0,
+            shared_frac: (0.5, 0.5),
+        };
+        let reqs = w.generate();
+        // with 2 templates and forced sharing, many pairs share a first token
+        let mut firsts: Vec<u32> = reqs
+            .iter()
+            .filter(|r| !r.cache_tokens.is_empty())
+            .map(|r| r.cache_tokens[0])
+            .collect();
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert!(firsts.len() <= 2, "template firsts = {firsts:?}");
+    }
+
+    #[test]
+    fn no_sharing_when_disabled() {
+        let mut w = cfg(20.0, 8);
+        w.prefix = PrefixConfig::none();
+        let reqs = w.generate();
+        let mut firsts: Vec<u32> = reqs.iter().map(|r| r.cache_tokens[0]).collect();
+        let total = firsts.len();
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert_eq!(firsts.len(), total, "all prompts must be unique");
+    }
+
+    #[test]
+    fn cache_tokens_capped_for_long_prompts() {
+        let w = WorkloadConfig::poisson(LengthProfile::LongBench, 2.0, 30.0, 9);
+        let reqs = w.generate();
+        for r in &reqs {
+            assert!(r.cache_tokens.len() <= CACHE_TOKEN_CAP);
+            assert!(r.cacheable_len() <= r.prompt_len);
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let reqs = cfg(3.0, 10).generate();
+        let text = trace_to_json(&reqs);
+        let back = trace_from_json(&text).unwrap();
+        assert_eq!(reqs, back);
+    }
+
+    #[test]
+    fn rate_at_reflects_burst_phase() {
+        let p = ArrivalProcess::Bursty {
+            rps: 2.0,
+            burst_factor: 4.0,
+            burst_secs: 5.0,
+            period_secs: 20.0,
+        };
+        assert_eq!(p.rate_at(1.0), 8.0);
+        assert_eq!(p.rate_at(6.0), 2.0);
+        assert_eq!(p.rate_at(21.0), 8.0); // wraps
+    }
+}

@@ -1,0 +1,162 @@
+//! Cross-engine integration: the relative-performance *shapes* the paper's
+//! evaluation establishes must hold on fixed representative workloads.
+
+use banaserve::config::{EngineKind, ExperimentConfig};
+use banaserve::engines::run_experiment;
+use banaserve::workload::{LengthProfile, WorkloadConfig};
+
+fn cfg(kind: EngineKind, profile: LengthProfile, rps: f64, seed: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_for(kind, "llama-13b", rps, seed);
+    c.workload = WorkloadConfig::poisson(profile, rps, 60.0, seed);
+    c.warmup = 5.0;
+    c
+}
+
+#[test]
+fn fig8_shape_banaserve_beats_distserve_short_context_high_load() {
+    let bana = run_experiment(&cfg(EngineKind::BanaServe, LengthProfile::AlpacaShort, 16.0, 7));
+    let dist = run_experiment(&cfg(EngineKind::DistServe, LengthProfile::AlpacaShort, 16.0, 7));
+    let ratio = bana.report.throughput_tok_s / dist.report.throughput_tok_s;
+    assert!(
+        ratio > 1.1,
+        "paper Fig 8 shape: bana/distserve = {ratio:.2} (want > 1.1)"
+    );
+    assert!(
+        bana.report.makespan < dist.report.makespan,
+        "total time: bana {:.1}s vs dist {:.1}s",
+        bana.report.makespan,
+        dist.report.makespan
+    );
+}
+
+#[test]
+fn fig10_shape_banaserve_beats_distserve_long_context_high_load() {
+    let bana = run_experiment(&cfg(EngineKind::BanaServe, LengthProfile::LongBench, 12.0, 7));
+    let dist = run_experiment(&cfg(EngineKind::DistServe, LengthProfile::LongBench, 12.0, 7));
+    let ratio = bana.report.throughput_tok_s / dist.report.throughput_tok_s;
+    assert!(
+        ratio > 1.1,
+        "paper Fig 10 shape: bana/distserve = {ratio:.2} (want > 1.1)"
+    );
+}
+
+#[test]
+fn low_load_all_engines_comparable() {
+    // paper: at 1-2 RPS the systems are close (gap grows with load)
+    let rps = 2.0;
+    let bana = run_experiment(&cfg(EngineKind::BanaServe, LengthProfile::AlpacaShort, rps, 9));
+    let dist = run_experiment(&cfg(EngineKind::DistServe, LengthProfile::AlpacaShort, rps, 9));
+    let vllm = run_experiment(&cfg(EngineKind::Vllm, LengthProfile::AlpacaShort, rps, 9));
+    let ts = [
+        bana.report.throughput_tok_s,
+        dist.report.throughput_tok_s,
+        vllm.report.throughput_tok_s,
+    ];
+    let max = ts.iter().cloned().fold(f64::MIN, f64::max);
+    let min = ts.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        max / min < 1.25,
+        "low-load spread too wide: {ts:?}"
+    );
+}
+
+#[test]
+fn fig1_shape_hft_underutilizes_versus_vllm() {
+    let hft = run_experiment(&cfg(EngineKind::HfStatic, LengthProfile::AlpacaShort, 10.0, 5));
+    let vllm = run_experiment(&cfg(EngineKind::Vllm, LengthProfile::AlpacaShort, 10.0, 5));
+    assert!(
+        vllm.report.throughput_tok_s > hft.report.throughput_tok_s,
+        "vllm {:.0} must beat hft {:.0} tok/s",
+        vllm.report.throughput_tok_s,
+        hft.report.throughput_tok_s
+    );
+}
+
+#[test]
+fn fig2a_shape_cache_skew_versus_load_aware_balance() {
+    // vLLM's cache-aware router must skew routed counts far more than
+    // BanaServe's load-aware router on the same skew-heavy workload.
+    let mk = |kind| {
+        let mut c = cfg(kind, LengthProfile::AlpacaShort, 12.0, 3);
+        c.workload.prefix.share_prob = 0.95;
+        c.workload.prefix.n_templates = 3;
+        c.workload.prefix.zipf_s = 1.5;
+        c.workload.prefix.shared_frac = (0.8, 0.95);
+        c.workload.duration = 20.0;
+        c.warmup = 0.0;
+        c.bana.layer_migration = false;
+        c.bana.attention_migration = false;
+        c
+    };
+    let skew = |counts: &[u64]| {
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().filter(|&&c| c > 0).min().unwrap_or(&1) as f64;
+        max / min.max(1.0)
+    };
+    let vllm = run_experiment(&mk(EngineKind::Vllm));
+    let bana = run_experiment(&mk(EngineKind::BanaServe));
+    let vllm_skew = skew(&vllm.extras.routed_counts);
+    // BanaServe routes only across the prefill pool
+    let bana_counts: Vec<u64> = bana
+        .extras
+        .routed_counts
+        .iter()
+        .cloned()
+        .filter(|&c| c > 0)
+        .collect();
+    let bana_skew = skew(&bana_counts);
+    assert!(
+        vllm_skew > 1.8 * bana_skew,
+        "cache-aware skew {vllm_skew:.2} should far exceed load-aware {bana_skew:.2}"
+    );
+}
+
+#[test]
+fn global_store_ablation_reduces_cached_tokens() {
+    let mut with = cfg(EngineKind::BanaServe, LengthProfile::AlpacaShort, 8.0, 13);
+    with.workload.prefix.share_prob = 0.8;
+    let mut without = with.clone();
+    without.bana.global_store = false;
+    let w = run_experiment(&with);
+    let wo = run_experiment(&without);
+    assert!(w.extras.store_hit_rate > 0.2, "store should hit");
+    assert_eq!(wo.extras.store_hit_rate, 0.0);
+    assert!(
+        w.report.cached_tokens > wo.report.cached_tokens,
+        "store must increase cache reuse"
+    );
+}
+
+#[test]
+fn migration_ablation_degrades_throughput_under_pressure() {
+    // disabling both migration granularities must not HELP at saturation
+    let base = cfg(EngineKind::BanaServe, LengthProfile::AlpacaShort, 18.0, 21);
+    let mut off = base.clone();
+    off.bana.layer_migration = false;
+    off.bana.attention_migration = false;
+    let on = run_experiment(&base);
+    let off = run_experiment(&off);
+    assert!(
+        on.report.throughput_tok_s >= off.report.throughput_tok_s * 0.98,
+        "migration hurt: on {:.0} vs off {:.0}",
+        on.report.throughput_tok_s,
+        off.report.throughput_tok_s
+    );
+    assert!(on.extras.layer_migrations > 0, "migration should engage");
+}
+
+#[test]
+fn opt13b_also_runs_all_engines() {
+    // cross-architecture validation (paper Table 1 / Fig 9, 11)
+    for kind in [EngineKind::Vllm, EngineKind::DistServe, EngineKind::BanaServe] {
+        let mut c = ExperimentConfig::default_for(kind, "opt-13b", 6.0, 3);
+        c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 6.0, 20.0, 3);
+        c.warmup = 0.0;
+        let out = run_experiment(&c);
+        assert!(
+            out.report.n_requests > 0 && out.report.throughput_tok_s > 0.0,
+            "{} failed on opt-13b",
+            c.engine.name()
+        );
+    }
+}

@@ -1,0 +1,295 @@
+//! Property tests over the scheduling policies and the full engines:
+//! request conservation, KV accounting, latency sanity, routing and
+//! migration invariants — randomized over workloads, cluster shapes and
+//! engine knobs.
+
+use banaserve::config::{EngineKind, ExperimentConfig};
+use banaserve::engines::banaserve::migration::{self, DeviceLoad, Policy};
+use banaserve::engines::banaserve::scheduler::{self, InstanceLoad};
+use banaserve::engines::banaserve::BanaEngine;
+use banaserve::engines::distserve_sim::DistServeEngine;
+use banaserve::engines::hft::HftEngine;
+use banaserve::engines::vllm_sim::VllmEngine;
+use banaserve::prop_assert;
+use banaserve::sim::{self, Engine};
+use banaserve::util::checker::{check, Gen};
+use banaserve::workload::{ArrivalProcess, LengthProfile, WorkloadConfig};
+
+fn random_cfg(g: &mut Gen, engine: EngineKind) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_for(engine, "llama-13b", 1.0, g.rng.next_u64());
+    c.n_devices = g.usize_in(2, 5);
+    c.n_prefill = g.usize_in(1, c.n_devices - 1);
+    let profile = if g.bool() {
+        LengthProfile::AlpacaShort
+    } else {
+        LengthProfile::LongBench
+    };
+    let rps = g.f64_in(0.5, 8.0);
+    c.workload = WorkloadConfig::poisson(profile, rps, g.f64_in(3.0, 12.0), g.rng.next_u64());
+    if g.bool() {
+        c.workload.arrivals = ArrivalProcess::Bursty {
+            rps,
+            burst_factor: g.f64_in(2.0, 6.0),
+            burst_secs: 2.0,
+            period_secs: 8.0,
+        };
+    }
+    c.workload.prefix.share_prob = g.f64_in(0.0, 0.95);
+    c.warmup = 0.0;
+    c.bana.layer_migration = g.bool();
+    c.bana.attention_migration = g.bool();
+    c.bana.global_store = g.bool();
+    c.bana.control_period = g.f64_in(0.5, 3.0);
+    c
+}
+
+/// The cross-engine invariant bundle every run must satisfy.
+fn check_invariants(
+    label: &str,
+    res: &sim::RunResult,
+    engine: &mut dyn Engine,
+    device_kv: &[u64],
+) -> Result<(), String> {
+    sim::check_conservation(res, engine).map_err(|e| format!("{label}: {e}"))?;
+    let col = engine.collector();
+    for r in &col.records {
+        if r.ttft() < 0.0 || r.e2e() < r.ttft() - 1e-9 || r.queue_delay() < -1e-9 {
+            return Err(format!(
+                "{label}: latency ordering violated for req {}: ttft={} e2e={}",
+                r.id,
+                r.ttft(),
+                r.e2e()
+            ));
+        }
+        if r.cached_tokens > r.prompt_len {
+            return Err(format!("{label}: cached > prompt for req {}", r.id));
+        }
+    }
+    if engine.inflight() == 0 {
+        for (i, &kv) in device_kv.iter().enumerate() {
+            if kv != 0 {
+                return Err(format!("{label}: device {i} leaked {kv} KV bytes"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn all_engines_satisfy_invariants_on_random_workloads() {
+    check("engine invariants", 24, |g| {
+        let kind = *g.pick(&[
+            EngineKind::HfStatic,
+            EngineKind::Vllm,
+            EngineKind::DistServe,
+            EngineKind::BanaServe,
+        ]);
+        let cfg = random_cfg(g, kind);
+        let reqs = cfg.workload.generate();
+        match kind {
+            EngineKind::HfStatic => {
+                let mut e = HftEngine::new(&cfg);
+                let res = sim::run(&mut e, reqs, 1e5);
+                let kv: Vec<u64> = e.devices.iter().map(|d| d.kv_bytes).collect();
+                check_invariants("hft", &res, &mut e, &kv)
+            }
+            EngineKind::Vllm => {
+                let mut e = VllmEngine::new(&cfg);
+                let res = sim::run(&mut e, reqs, 1e5);
+                let kv: Vec<u64> = e.devices.iter().map(|d| d.kv_bytes).collect();
+                check_invariants("vllm", &res, &mut e, &kv)
+            }
+            EngineKind::DistServe => {
+                let mut e = DistServeEngine::new(&cfg);
+                let res = sim::run(&mut e, reqs, 1e5);
+                let kv: Vec<u64> = e.devices.iter().map(|d| d.kv_bytes).collect();
+                check_invariants("distserve", &res, &mut e, &kv)
+            }
+            EngineKind::BanaServe => {
+                let mut e = BanaEngine::new(&cfg);
+                let res = sim::run(&mut e, reqs, 1e5);
+                let kv: Vec<u64> = e.devices.iter().map(|d| d.kv_bytes).collect();
+                check_invariants("banaserve", &res, &mut e, &kv)
+            }
+        }
+    });
+}
+
+#[test]
+fn banaserve_completes_everything_it_admits() {
+    check("banaserve drains", 12, |g| {
+        let cfg = random_cfg(g, EngineKind::BanaServe);
+        let reqs = cfg.workload.generate();
+        let n = reqs.len() as u64;
+        let mut e = BanaEngine::new(&cfg);
+        let res = sim::run(&mut e, reqs, 1e5);
+        let done = e.collector().completed();
+        let dropped = e.collector().dropped;
+        prop_assert!(
+            done + dropped == n && e.inflight() == 0,
+            "stranded work: n={n} done={done} dropped={dropped} inflight={} end={}",
+            e.inflight(),
+            res.end_time
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduler_pick_is_always_a_candidate_and_respects_order() {
+    check("alg2 pick", 60, |g| {
+        let n = g.usize_in(1, 12);
+        let loads: Vec<InstanceLoad> = (0..n)
+            .map(|idx| InstanceLoad {
+                idx,
+                u: g.f64_in(0.0, 2.0),
+                queue_len: g.usize_in(0, 30),
+                pending: 0.0,
+            })
+            .collect();
+        let delta_l = g.f64_in(0.2, 2.0);
+        let Some(p) = scheduler::pick(&loads, delta_l) else {
+            return Err("pick returned None for non-empty candidates".into());
+        };
+        prop_assert!(p < loads.len(), "pick out of range");
+        let chosen = loads[p];
+        if chosen.u < delta_l {
+            // below threshold: must be a minimal-load choice
+            let min_u = loads.iter().map(|l| l.u).fold(f64::INFINITY, f64::min);
+            prop_assert!(
+                chosen.u <= min_u + 1e-12,
+                "picked u={} but min is {}",
+                chosen.u,
+                min_u
+            );
+        } else {
+            // fallback: must be a minimal-queue choice
+            let min_q = loads.iter().map(|l| l.queue_len).min().unwrap();
+            prop_assert!(
+                chosen.queue_len == min_q,
+                "fallback picked queue {} but min is {}",
+                chosen.queue_len,
+                min_q
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn burst_dispatch_never_exceeds_proportional_share_plus_one() {
+    check("alg2 burst fairness", 30, |g| {
+        let n = g.usize_in(2, 8);
+        let mut loads: Vec<InstanceLoad> = (0..n)
+            .map(|idx| InstanceLoad {
+                idx,
+                u: 0.3,
+                queue_len: 0,
+                pending: 0.0,
+            })
+            .collect();
+        let k = g.usize_in(n, 4 * n);
+        let picks = scheduler::dispatch_burst(&mut loads, k, 1.8, 0.1);
+        let mut counts = vec![0usize; n];
+        for p in picks {
+            counts[p] += 1;
+        }
+        let fair = k.div_ceil(n);
+        for (i, c) in counts.iter().enumerate() {
+            prop_assert!(
+                *c <= fair + 1,
+                "instance {i} got {c} of {k} (fair {fair})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn migration_plan_is_feasible_and_terminates() {
+    check("alg1 plan feasibility", 50, |g| {
+        let n = g.usize_in(2, 8);
+        let loads: Vec<DeviceLoad> = (0..n)
+            .map(|idx| {
+                let mem = g.f64_in(0.1, 1.0);
+                let extra = g.f64_in(0.0, 1.0);
+                let share = g.f64_in(0.0, 1.0);
+                DeviceLoad {
+                    idx,
+                    u: mem + extra,
+                    mem_frac: mem,
+                    share_prefill: share,
+                    free_bytes: g.rng.range(0, 20_000_000_000),
+                    busy_prefill: extra * share,
+                    busy_decode: extra * (1.0 - share),
+                }
+            })
+            .collect();
+        let pol = Policy {
+            delta: g.f64_in(0.1, 0.8),
+            rho: g.f64_in(0.2, 3.0),
+            period: 2.0,
+            layer_step: 0.25,
+            enable_layer: g.bool(),
+            enable_attention: g.bool(),
+        };
+        let actions = migration::plan(&loads, &pol, g.f64_in(0.01, 1.0), g.f64_in(0.001, 0.1));
+        prop_assert!(actions.len() <= n, "more actions than devices");
+        for a in &actions {
+            match a {
+                migration::Action::Layer {
+                    from,
+                    to,
+                    delta_share,
+                    ..
+                } => {
+                    prop_assert!(*from < n && *to < n, "layer idx out of range");
+                    prop_assert!(pol.enable_layer, "layer action while disabled");
+                    prop_assert!(
+                        *delta_share > 0.0 && *delta_share <= 1.0,
+                        "bad delta_share {delta_share}"
+                    );
+                }
+                migration::Action::Attention { from, to, kv_frac } => {
+                    prop_assert!(*from < n && *to < n && from != to, "attention idx");
+                    prop_assert!(pol.enable_attention, "attention action while disabled");
+                    prop_assert!(
+                        *kv_frac > 0.0 && *kv_frac <= 0.5,
+                        "bad kv_frac {kv_frac}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trace_replay_reproduces_identical_reports() {
+    // running the same generated trace twice must give bit-identical
+    // metrics — the determinism the 5-seed methodology depends on.
+    check("determinism", 8, |g| {
+        let cfg = random_cfg(g, EngineKind::BanaServe);
+        let reqs = cfg.workload.generate();
+        let mut e1 = BanaEngine::new(&cfg);
+        let r1 = sim::run(&mut e1, reqs.clone(), 1e5);
+        let mut e2 = BanaEngine::new(&cfg);
+        let r2 = sim::run(&mut e2, reqs, 1e5);
+        prop_assert!(
+            (r1.end_time - r2.end_time).abs() < 1e-9
+                && r1.events_processed == r2.events_processed,
+            "nondeterministic run: {} vs {} events {} vs {}",
+            r1.end_time,
+            r2.end_time,
+            r1.events_processed,
+            r2.events_processed
+        );
+        let rep1 = e1.collector().report(r1.end_time);
+        let rep2 = e2.collector().report(r2.end_time);
+        prop_assert!(
+            (rep1.throughput_tok_s - rep2.throughput_tok_s).abs() < 1e-9,
+            "throughput differs"
+        );
+        Ok(())
+    });
+}

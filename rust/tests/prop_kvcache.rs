@@ -1,0 +1,238 @@
+//! Property tests for the KV-cache substrate (paged allocator, radix tree,
+//! global store) via the in-repo checker harness (proptest is not in the
+//! offline registry). Seeds are reported on failure; replay with
+//! BANASERVE_PROP_SEED=<hex>.
+
+use banaserve::kvcache::{BlockAllocator, GlobalKvStore, RadixTree, SeqBlocks, StoreConfig};
+use banaserve::model::LLAMA31_8B;
+use banaserve::prop_assert;
+use banaserve::util::checker::check;
+
+#[test]
+fn allocator_conserves_blocks_under_random_ops() {
+    check("alloc conservation", 60, |g| {
+        let total = g.usize_in(4, 64) as u32;
+        let mut a = BlockAllocator::new(total, 16);
+        let mut live: Vec<u32> = Vec::new();
+        for _ in 0..g.usize_in(10, 200) {
+            match g.usize_in(0, 2) {
+                0 => {
+                    if let Some(b) = a.alloc() {
+                        live.push(b);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = g.usize_in(0, live.len() - 1);
+                        let b = live.swap_remove(i);
+                        a.decref(b);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = g.usize_in(0, live.len() - 1);
+                        let b = live[i];
+                        a.incref(b);
+                        live.push(b); // one live handle per ref
+                    }
+                }
+            }
+            prop_assert!(
+                a.used_blocks() + a.free_blocks() == a.total_blocks(),
+                "used {} + free {} != total {}",
+                a.used_blocks(),
+                a.free_blocks(),
+                a.total_blocks()
+            );
+        }
+        // release everything: pool must be whole again
+        for b in live {
+            a.decref(b);
+        }
+        prop_assert!(
+            a.free_blocks() == total,
+            "leak: {} of {} free after full release",
+            a.free_blocks(),
+            total
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn seq_blocks_never_leak_on_failed_append() {
+    check("seq append no-leak", 40, |g| {
+        let total = g.usize_in(2, 12) as u32;
+        let mut a = BlockAllocator::new(total, 16);
+        let mut seqs: Vec<SeqBlocks> = (0..g.usize_in(1, 4)).map(|_| SeqBlocks::new()).collect();
+        for _ in 0..g.usize_in(5, 60) {
+            let i = g.usize_in(0, seqs.len() - 1);
+            let n = g.usize_in(1, 40) as u64;
+            let before_free = a.free_blocks();
+            let before_tokens = seqs[i].tokens;
+            if !seqs[i].append(&mut a, n) {
+                prop_assert!(
+                    a.free_blocks() == before_free && seqs[i].tokens == before_tokens,
+                    "failed append mutated state"
+                );
+            }
+        }
+        for s in seqs.iter_mut() {
+            s.release(&mut a);
+        }
+        prop_assert!(a.free_blocks() == total, "blocks leaked");
+        Ok(())
+    });
+}
+
+/// Naive oracle: longest common prefix against every stored sequence.
+fn naive_match(stored: &[Vec<u32>], q: &[u32]) -> u64 {
+    stored
+        .iter()
+        .map(|s| {
+            s.iter()
+                .zip(q.iter())
+                .take_while(|(a, b)| a == b)
+                .count() as u64
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+#[test]
+fn radix_matches_naive_prefix_oracle() {
+    check("radix vs naive", 50, |g| {
+        let mut t = RadixTree::new();
+        let mut stored: Vec<Vec<u32>> = Vec::new();
+        let vocab = g.rng.range(2, 8);
+        for _ in 0..g.usize_in(1, 20) {
+            let s = g.tokens(24, vocab);
+            if s.is_empty() {
+                continue;
+            }
+            t.insert(&s);
+            stored.push(s);
+        }
+        for _ in 0..20 {
+            let q = g.tokens(30, vocab);
+            let got = t.peek_prefix(&q);
+            let want = naive_match(&stored, &q);
+            prop_assert!(got == want, "query {q:?}: radix {got} vs naive {want}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn radix_token_count_equals_unique_prefix_mass() {
+    // inserting the same sequences in any order yields the same count
+    check("radix count order-independent", 40, |g| {
+        let vocab = g.rng.range(2, 5);
+        let seqs: Vec<Vec<u32>> = (0..g.usize_in(2, 10))
+            .map(|_| g.tokens(16, vocab))
+            .filter(|s| !s.is_empty())
+            .collect();
+        let mut t1 = RadixTree::new();
+        for s in &seqs {
+            t1.insert(s);
+        }
+        let mut rev = seqs.clone();
+        rev.reverse();
+        let mut t2 = RadixTree::new();
+        for s in &rev {
+            t2.insert(s);
+        }
+        prop_assert!(
+            t1.token_count() == t2.token_count(),
+            "order-dependent token count: {} vs {}",
+            t1.token_count(),
+            t2.token_count()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn radix_eviction_preserves_matching_correctness() {
+    check("radix evict correctness", 40, |g| {
+        let mut t = RadixTree::new();
+        let vocab = g.rng.range(2, 6);
+        let mut stored: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..g.usize_in(3, 15) {
+            let s = g.tokens(20, vocab);
+            if s.is_empty() {
+                continue;
+            }
+            t.insert(&s);
+            stored.push(s);
+        }
+        let budget = g.rng.range(0, t.token_count().max(1));
+        t.evict_to(budget);
+        prop_assert!(t.token_count() <= budget, "over budget after evict");
+        // matches can only shrink, never report phantom tokens: a peek must
+        // never exceed the naive oracle over the ORIGINAL set
+        for q in &stored {
+            let got = t.peek_prefix(q);
+            let want = naive_match(&stored, q);
+            prop_assert!(got <= want, "phantom prefix after eviction");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn store_capacity_is_always_respected() {
+    check("store capacity", 30, |g| {
+        let cap_cpu = g.rng.range(50, 400);
+        let cap_ssd = g.rng.range(0, 400);
+        let mut s = GlobalKvStore::new(StoreConfig {
+            cpu_capacity_tokens: cap_cpu,
+            ssd_capacity_tokens: cap_ssd,
+            ..Default::default()
+        });
+        for _ in 0..g.usize_in(5, 60) {
+            let toks = g.tokens(120, 1000);
+            if toks.is_empty() {
+                continue;
+            }
+            s.insert(&toks);
+            prop_assert!(
+                s.token_count() <= cap_cpu + cap_ssd,
+                "store over capacity: {} > {}",
+                s.token_count(),
+                cap_cpu + cap_ssd
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn store_lookup_hits_are_prefixes_of_insertions() {
+    check("store hit soundness", 30, |g| {
+        let mut s = GlobalKvStore::new(StoreConfig::default());
+        let vocab = g.rng.range(2, 8);
+        let mut inserted: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..g.usize_in(1, 12) {
+            let toks = g.tokens(40, vocab);
+            if toks.is_empty() {
+                continue;
+            }
+            s.insert(&toks);
+            inserted.push(toks);
+        }
+        for _ in 0..10 {
+            let q = g.tokens(50, vocab);
+            let plan = s.lookup(&q, &LLAMA31_8B, 4e-3);
+            let want = naive_match(&inserted, &q);
+            prop_assert!(
+                plan.hit_tokens == want,
+                "hit {} vs oracle {} for {q:?}",
+                plan.hit_tokens,
+                want
+            );
+            prop_assert!(plan.stall >= 0.0, "negative stall");
+        }
+        Ok(())
+    });
+}
