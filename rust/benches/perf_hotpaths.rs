@@ -1,8 +1,14 @@
 //! Perf microbenches for the L3 hot paths (EXPERIMENTS.md §Perf): radix
 //! tree ops, paged allocator, event queue, Alg 2 pick, and whole-engine
 //! event throughput. Run before/after optimization passes.
+//!
+//! Every run appends its numbers to the machine-readable baseline
+//! `BENCH_hotpaths.json` (override with `BENCH_HOTPATHS_OUT`, set it empty
+//! to skip), so PRs carry a perf trajectory instead of anecdotes. The
+//! headline gate is `radix evict_to(half) (4096 seqs)` — the arena/LRU
+//! index must hold its ≥5x margin over the historical O(n²) scan.
 
-use banaserve::bench_support::{bench_n, time_it};
+use banaserve::bench_support::{time_it, BenchRecorder};
 use banaserve::config::{EngineKind, ExperimentConfig};
 use banaserve::engines::banaserve::scheduler::{self, InstanceLoad};
 use banaserve::engines::run_experiment;
@@ -14,13 +20,14 @@ use banaserve::workload::{LengthProfile, WorkloadConfig};
 fn main() {
     println!("\nL3 hot-path microbenchmarks");
     println!("{:-<62}", "");
+    let mut rec = BenchRecorder::new();
 
     // radix tree: insert + match over a realistic mixture
     let mut rng = Rng::new(1);
     let seqs: Vec<Vec<u32>> = (0..512)
         .map(|_| (0..rng.range(8, 64)).map(|_| rng.below(512) as u32).collect())
         .collect();
-    bench_n("radix insert+match (512 seqs, 8-64 toks)", 50, || {
+    rec.bench("radix insert+match (512 seqs, 8-64 toks)", 50, || {
         let mut t = RadixTree::new();
         for s in &seqs {
             t.insert(s);
@@ -33,21 +40,61 @@ fn main() {
     for s in &seqs {
         warm.insert(s);
     }
-    bench_n("radix match only (warm tree)", 2000, || {
+    rec.bench("radix match only (warm tree)", 2000, || {
         for s in seqs.iter().take(16) {
             std::hint::black_box(warm.peek_prefix(s));
         }
     });
-    bench_n("radix evict_to(half)", 200, || {
+    rec.bench("radix evict_to(half)", 200, || {
         let mut t = RadixTree::new();
         for s in seqs.iter().take(64) {
             t.insert(s);
         }
         t.evict_to(t.token_count() / 2);
     });
+    // the headline eviction gate: 4096 resident sequences, evict half.
+    // Cloning the warm tree isolates eviction cost from build cost.
+    let mut rng4k = Rng::new(7);
+    let seqs4k: Vec<Vec<u32>> = (0..4096)
+        .map(|_| {
+            (0..rng4k.range(8, 64))
+                .map(|_| rng4k.below(2048) as u32)
+                .collect()
+        })
+        .collect();
+    let mut warm4k = RadixTree::new();
+    for s in &seqs4k {
+        warm4k.insert(s);
+    }
+    // clone-only row: both eviction rows below pay one clone of the warm
+    // tree per iteration, so the gate ratio subtracts this row first:
+    //   speedup = (scan_reference - clone) / (evict_to - clone)
+    rec.bench("radix clone (4096 seqs)", 50, || {
+        std::hint::black_box(warm4k.clone());
+    });
+    rec.bench("radix evict_to(half) (4096 seqs)", 50, || {
+        let mut t = warm4k.clone();
+        std::hint::black_box(t.evict_to(t.token_count() / 2));
+    });
+    // the pre-arena O(n²) algorithm on the SAME tree: the ≥5x gate compares
+    // this row against the one above (clone cost subtracted), so every
+    // single run measures its own before/after
+    rec.bench("radix evict_to scan-reference (4096 seqs)", 10, || {
+        let mut t = warm4k.clone();
+        std::hint::black_box(t.evict_to_scan_reference(t.token_count() / 2));
+    });
+    // eviction under churn: evict, then re-insert into reclaimed slots
+    rec.bench("radix evict+reinsert churn (4096 seqs)", 20, || {
+        let mut t = warm4k.clone();
+        t.evict_to(t.token_count() / 2);
+        for s in seqs4k.iter().take(512) {
+            t.insert(s);
+        }
+        std::hint::black_box(t.token_count());
+    });
 
     // paged allocator
-    bench_n("allocator alloc/free cycle (1k blocks)", 2000, || {
+    rec.bench("allocator alloc/free cycle (1k blocks)", 2000, || {
         let mut a = BlockAllocator::new(1024, 16);
         let blocks: Vec<u32> = (0..1024).map(|_| a.alloc().unwrap()).collect();
         for b in blocks {
@@ -55,18 +102,19 @@ fn main() {
         }
     });
 
-    // event queue
-    bench_n("event queue push+pop (10k timers)", 100, || {
+    // event queue: push AND drain 10k timers through the driver's pop path
+    rec.bench("event queue push+pop (10k timers)", 100, || {
         let mut q = EventQueue::new();
         let mut r = Rng::new(3);
         for i in 0..10_000u64 {
             q.push_timer(r.f64() * 100.0, Timer::new(i));
         }
-        while q.len() > 0 {
-            // drain through the public pop path via run loop semantics
-            break;
+        let mut drained = 0u64;
+        while let Some((t, ev)) = q.pop() {
+            std::hint::black_box((t, &ev));
+            drained += 1;
         }
-        std::hint::black_box(q.len());
+        assert_eq!(drained, 10_000, "bench must drain everything it pushed");
     });
 
     // Alg 2 pick at fleet size 64
@@ -78,42 +126,49 @@ fn main() {
             pending: 0.0,
         })
         .collect();
-    bench_n("Alg 2 pick (64 instances)", 100_000, || {
+    rec.bench("Alg 2 pick (64 instances)", 100_000, || {
         std::hint::black_box(scheduler::pick(&loads, 1.6));
+    });
+    rec.bench("Alg 2 pick_rotating (64 instances)", 100_000, || {
+        std::hint::black_box(scheduler::pick_rotating(&loads, 1.6, 17));
     });
 
     // real runtime hot loop: host-roundtrip KV vs device-resident KV
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    // (needs the PJRT runtime -> pjrt feature + AOT artifacts)
+    #[cfg(feature = "pjrt")]
+    {
         use banaserve::runtime::{EntryKind, KvCache, Runtime};
-        println!("\nreal serving hot loop (PJRT CPU, tiny model, b4 decode x200 steps):");
-        let rt = Runtime::load("artifacts", "tiny").unwrap();
-        let (vcfg, _) = rt.manifest.variant("tiny").unwrap();
-        let vcfg = vcfg.clone();
-        let decode = rt.find_entry(EntryKind::Decode, 4).unwrap();
-        let toks = [1i32, 2, 3, 4];
-        let lens = [8i32, 8, 8, 8];
-        let mut host_cache = KvCache::zeros(&vcfg, 4);
-        let (_, t_host) = time_it(|| {
-            for _ in 0..200 {
-                std::hint::black_box(
-                    rt.decode_step(decode, &toks, &lens, &mut host_cache).unwrap(),
-                );
-            }
-        });
-        let mut kv_dev = rt.upload_cache(&KvCache::zeros(&vcfg, 4)).unwrap();
-        let (_, t_dev) = time_it(|| {
-            for _ in 0..200 {
-                std::hint::black_box(
-                    rt.decode_step_device(decode, &toks, &lens, &mut kv_dev).unwrap(),
-                );
-            }
-        });
-        println!(
-            "  host-roundtrip KV: {:.3} ms/step   device-resident KV: {:.3} ms/step ({:.2}x)",
-            t_host / 200.0 * 1e3,
-            t_dev / 200.0 * 1e3,
-            t_host / t_dev
-        );
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            println!("\nreal serving hot loop (PJRT CPU, tiny model, b4 decode x200 steps):");
+            let rt = Runtime::load("artifacts", "tiny").unwrap();
+            let (vcfg, _) = rt.manifest.variant("tiny").unwrap();
+            let vcfg = vcfg.clone();
+            let decode = rt.find_entry(EntryKind::Decode, 4).unwrap();
+            let toks = [1i32, 2, 3, 4];
+            let lens = [8i32, 8, 8, 8];
+            let mut host_cache = KvCache::zeros(&vcfg, 4);
+            let (_, t_host) = time_it(|| {
+                for _ in 0..200 {
+                    std::hint::black_box(
+                        rt.decode_step(decode, &toks, &lens, &mut host_cache).unwrap(),
+                    );
+                }
+            });
+            let mut kv_dev = rt.upload_cache(&KvCache::zeros(&vcfg, 4)).unwrap();
+            let (_, t_dev) = time_it(|| {
+                for _ in 0..200 {
+                    std::hint::black_box(
+                        rt.decode_step_device(decode, &toks, &lens, &mut kv_dev).unwrap(),
+                    );
+                }
+            });
+            println!(
+                "  host-roundtrip KV: {:.3} ms/step   device-resident KV: {:.3} ms/step ({:.2}x)",
+                t_host / 200.0 * 1e3,
+                t_dev / 200.0 * 1e3,
+                t_host / t_dev
+            );
+        }
     }
 
     // end-to-end simulator throughput
@@ -122,10 +177,26 @@ fn main() {
     c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 12.0, 60.0, 11);
     c.warmup = 5.0;
     let (out, secs) = time_it(|| run_experiment(&c));
+    let ratio = out.report.makespan / secs;
     println!(
         "  run: {:.3}s wall for {} completed requests -> sim/wall ratio {:.0}x",
-        secs,
-        out.report.n_requests,
-        out.report.makespan / secs
+        secs, out.report.n_requests, ratio
     );
+    rec.extra("sim_wall_ratio", ratio);
+    rec.extra("sim_completed_requests", out.report.n_requests as f64);
+
+    let path = std::env::var("BENCH_HOTPATHS_OUT").unwrap_or_else(|_| {
+        // default: the committed repo-root baseline. `cargo bench` leaves
+        // cwd wherever cargo was invoked (usually rust/), so prefer an
+        // existing baseline in cwd, then in the parent (repo root).
+        for cand in ["BENCH_hotpaths.json", "../BENCH_hotpaths.json"] {
+            if std::path::Path::new(cand).exists() {
+                return cand.to_string();
+            }
+        }
+        "BENCH_hotpaths.json".to_string()
+    });
+    if !path.is_empty() {
+        rec.append_to(&path);
+    }
 }

@@ -147,6 +147,90 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (r, t0.elapsed().as_secs_f64())
 }
 
+/// Collects microbench rows (name, iters, secs/iter) and appends them as a
+/// run record to a machine-readable JSON baseline — the perf trajectory
+/// future PRs compare against (`BENCH_hotpaths.json`).
+#[derive(Debug, Default)]
+pub struct BenchRecorder {
+    pub rows: Vec<(String, u64, f64)>,
+    /// Free-form context rows (e.g. whole-engine sim/wall ratio).
+    pub extras: Vec<(String, f64)>,
+}
+
+impl BenchRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run [`bench_n`] and record its result.
+    pub fn bench(&mut self, name: &str, iters: u64, f: impl FnMut()) -> f64 {
+        let per = bench_n(name, iters, f);
+        self.rows.push((name.to_string(), iters, per));
+        per
+    }
+
+    pub fn extra(&mut self, name: &str, value: f64) {
+        self.extras.push((name.to_string(), value));
+    }
+
+    fn run_json(&self) -> Value {
+        let results: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|(name, iters, per)| {
+                json::obj(vec![
+                    ("name", json::s(name.as_str())),
+                    ("iters", json::num(*iters as f64)),
+                    ("us_per_iter", json::num(per * 1e6)),
+                ])
+            })
+            .collect();
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        let mut pairs = vec![
+            ("unix_time", json::num(unix)),
+            ("results", json::arr(results)),
+        ];
+        for (k, v) in &self.extras {
+            pairs.push((k.as_str(), json::num(*v)));
+        }
+        json::obj(pairs)
+    }
+
+    /// Append this run to the JSON baseline at `path`, preserving prior
+    /// runs and any other top-level fields (e.g. the seeded `note`);
+    /// creates the file (schema `banaserve-perf-hotpaths-v1`) when missing
+    /// or unparseable.
+    pub fn append_to(&self, path: &str) {
+        let mut doc = json::Obj::new();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            match json::parse(&text).ok().and_then(|v| v.as_obj().cloned()) {
+                Some(existing) => doc = existing,
+                None => {
+                    // never clobber an unparseable baseline: the trajectory
+                    // is the point of the file, so park the damaged copy
+                    let bak = format!("{path}.bak");
+                    let _ = std::fs::rename(path, &bak);
+                    println!("\n  [warning: {path} was unparseable; moved to {bak}]");
+                }
+            }
+        }
+        let mut runs: Vec<Value> = doc
+            .get("runs")
+            .and_then(|r| r.as_arr().map(|a| a.to_vec()))
+            .unwrap_or_default();
+        runs.push(self.run_json());
+        doc.insert("schema", json::s("banaserve-perf-hotpaths-v1"));
+        doc.insert("runs", json::arr(runs));
+        match std::fs::write(path, json::write(&Value::Obj(doc))) {
+            Ok(()) => println!("\n  [perf baseline appended to {path}]"),
+            Err(e) => println!("\n  [could not write {path}: {e}]"),
+        }
+    }
+}
+
 /// Repeat-and-summarize micro-benchmark helper.
 pub fn bench_n(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
     // warmup
@@ -171,6 +255,29 @@ mod tests {
         let (v, t) = time_it(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn bench_recorder_appends_runs_to_baseline() {
+        let path = std::env::temp_dir().join("banaserve_bench_recorder_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(&path, r#"{"note":"keep me","runs":[]}"#).unwrap();
+        let mut r = BenchRecorder::new();
+        r.bench("noop", 3, || {});
+        r.extra("sim_wall_ratio", 2.0);
+        r.append_to(&path);
+        r.append_to(&path);
+        let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("banaserve-perf-hotpaths-v1"));
+        assert_eq!(v.get("note").unwrap().as_str(), Some("keep me"), "extra fields survive");
+        let runs = v.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2, "append must preserve prior runs");
+        let row = runs[0].get("results").unwrap().idx(0).unwrap();
+        assert_eq!(row.get("name").unwrap().as_str(), Some("noop"));
+        assert!(row.get("us_per_iter").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(runs[0].get("sim_wall_ratio").unwrap().as_f64(), Some(2.0));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

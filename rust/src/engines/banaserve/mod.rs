@@ -442,20 +442,28 @@ impl BanaEngine {
             step.st.time + step.overhead,
             &step.st,
         );
+        if self.use_store {
+            // write the step's fresh prefix KV back in one batch (layer-wise
+            // overlapped; write path is off the critical path — Fig 5/6):
+            // token slices are borrowed straight from the shared handles and
+            // capacity enforcement runs once for the step, so this is
+            // allocation-free on the hot path
+            let seqs = &self.seqs;
+            self.store.insert_batch(
+                step.seqs
+                    .iter()
+                    .map(|&sid| &*seqs[sid as usize].as_ref().unwrap().req.cache_tokens),
+            );
+        }
         for sid in step.seqs {
-            let (cache_tokens, done) = {
+            let done = {
                 let seq = self.seqs[sid as usize].as_mut().unwrap();
                 seq.ctx = seq.req.prompt_len + 1;
                 seq.generated = 1;
                 seq.first_token = now;
                 seq.instance = i;
-                (seq.req.cache_tokens.clone(), seq.is_done())
+                seq.is_done()
             };
-            if self.use_store {
-                // write the fresh prefix KV back (layer-wise overlapped;
-                // write path is off the critical path — Fig 5/6)
-                self.store.insert(&cache_tokens);
-            }
             if done {
                 self.finish(sid, i, now);
                 continue;

@@ -85,14 +85,19 @@ pub fn pick_rotating(loads: &[InstanceLoad], delta_l: f64, rr: usize) -> Option<
     if loads[least].effective() >= delta_l {
         return Some(least); // overload fallback path: keep Alg 2 line 17
     }
+    // rotate among ties without collecting them: this runs once per arrival,
+    // so it must not allocate
     let min_u = loads[least].effective();
-    let tied: Vec<usize> = loads
+    let min_q = loads[least].queue_len;
+    let tied = |l: &InstanceLoad| l.effective() - min_u < TIE_EPS && l.queue_len == min_q;
+    let n_tied = loads.iter().filter(|l| tied(l)).count();
+    let want = rr % n_tied;
+    loads
         .iter()
         .enumerate()
-        .filter(|(_, l)| l.effective() - min_u < TIE_EPS && l.queue_len == loads[least].queue_len)
+        .filter(|(_, l)| tied(l))
+        .nth(want)
         .map(|(i, _)| i)
-        .collect();
-    Some(tied[rr % tied.len()])
 }
 
 /// Dispatch a whole burst of `n` requests (Alg 2's main loop), updating the

@@ -305,7 +305,7 @@ mod tests {
             arrival: 0.0,
             prompt_len: prompt,
             output_len: out,
-            cache_tokens: (0..prompt.min(64) as u32).collect(),
+            cache_tokens: (0..prompt.min(64) as u32).collect::<Vec<u32>>().into(),
         }
     }
 

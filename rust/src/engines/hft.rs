@@ -348,7 +348,7 @@ mod tests {
             arrival: at,
             prompt_len: 50,
             output_len: out,
-            cache_tokens: vec![id as u32],
+            cache_tokens: vec![id as u32].into(),
         };
         let reqs = vec![mk(0, 0.0, 400), mk(1, 0.1, 4)];
         let mut e = HftEngine::new(&c);

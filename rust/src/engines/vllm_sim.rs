@@ -283,12 +283,16 @@ impl VllmEngine {
                         seq.generated = 1;
                         seq.first_token = now;
                         seq.phase = SeqPhase::Decoding;
+                        // Arc handle: a pointer bump, not a token copy
                         (seq.req.cache_tokens.clone(), seq.is_done())
                     };
                     if self.prefix_caching {
+                        // insert-then-evict per sequence: the cache budget
+                        // models physical memory, so it must hold at every
+                        // point, not just at step boundaries (eviction is
+                        // an O(evicted) LRU pop now, so this stays cheap)
                         self.caches[i].insert(&cache_tokens);
-                        let evict_budget = self.cache_budget;
-                        self.caches[i].evict_to(evict_budget);
+                        self.caches[i].evict_to(self.cache_budget);
                     }
                     if done {
                         self.finish(sid, now);
@@ -509,7 +513,7 @@ mod tests {
             arrival: 0.0,
             prompt_len: 8,
             output_len: 2,
-            cache_tokens: vec![1],
+            cache_tokens: vec![1].into(),
         };
         let picks: Vec<usize> = (0..8).map(|_| e.route(&r)).collect();
         assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
@@ -532,7 +536,7 @@ mod tests {
                 arrival: 0.0,
                 prompt_len: 400,
                 output_len: 200,
-                cache_tokens: vec![i as u32; 8],
+                cache_tokens: vec![i as u32; 8].into(),
             })
             .collect();
         let mut e = VllmEngine::new(&c);

@@ -60,12 +60,18 @@ impl BlockAllocator {
         Some(b)
     }
 
-    /// Allocate `n` blocks atomically (all or nothing).
+    /// Allocate `n` blocks atomically (all or nothing). Takes the tail of
+    /// the free list in one splice instead of n single pops.
     pub fn alloc_n(&mut self, n: u32) -> Option<Vec<BlockId>> {
         if self.free_blocks() < n {
             return None;
         }
-        Some((0..n).map(|_| self.alloc().unwrap()).collect())
+        let bs = self.free.split_off(self.free.len() - n as usize);
+        for &b in &bs {
+            debug_assert_eq!(self.refcounts[b as usize], 0);
+            self.refcounts[b as usize] = 1;
+        }
+        Some(bs)
     }
 
     /// Increase the refcount (prefix sharing).

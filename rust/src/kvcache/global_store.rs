@@ -165,11 +165,37 @@ impl GlobalKvStore {
     pub fn insert(&mut self, tokens: &[u32]) -> u64 {
         let added = self.index.insert(tokens);
         self.stats.tokens_written += added;
-        let cap = self.config.cpu_capacity_tokens + self.config.ssd_capacity_tokens;
+        let cap = self.total_capacity();
         if self.index.token_count() > cap {
             self.stats.tokens_evicted += self.index.evict_to(cap);
         }
         added
+    }
+
+    /// Record a whole prefill step's prompts in one call, enforcing capacity
+    /// once at the end — the insert+evict cycle amortizes over the batch
+    /// instead of running per sequence. Returns total NEW tokens written.
+    ///
+    /// Unlike [`insert`] (which preserves the exact evict-to-cap behavior),
+    /// the batched path evicts to a small slack below capacity so several
+    /// subsequent batches need no eviction pass at all; occupancy never
+    /// exceeds capacity at a call boundary.
+    pub fn insert_batch<'a>(&mut self, seqs: impl IntoIterator<Item = &'a [u32]>) -> u64 {
+        let mut added = 0u64;
+        for tokens in seqs {
+            added += self.index.insert(tokens);
+        }
+        self.stats.tokens_written += added;
+        let cap = self.total_capacity();
+        if self.index.token_count() > cap {
+            let target = cap - cap / 16;
+            self.stats.tokens_evicted += self.index.evict_to(target);
+        }
+        added
+    }
+
+    fn total_capacity(&self) -> u64 {
+        self.config.cpu_capacity_tokens + self.config.ssd_capacity_tokens
     }
 
     /// Peek the hit length without stat effects (router diagnostics).
@@ -277,6 +303,42 @@ mod tests {
         assert_eq!(w1, 100);
         assert_eq!(w2, 0);
         assert_eq!(s.token_count(), 100);
+    }
+
+    #[test]
+    fn batch_overflow_enforces_capacity_with_slack() {
+        // push a batch well past the 5000-token cap: enforcement must run,
+        // land at or below the amortization target (cap - cap/16), and
+        // account the eviction
+        let mut s = store();
+        let seqs: Vec<Vec<u32>> = (0..20u32)
+            .map(|i| (i * 1000..i * 1000 + 400).collect())
+            .collect();
+        let written = s.insert_batch(seqs.iter().map(|v| &v[..]));
+        assert_eq!(written, 8000);
+        let cap = 5000u64;
+        assert!(s.token_count() <= cap - cap / 16, "slack target missed");
+        assert!(s.stats().tokens_evicted > 0);
+        // the most recent prefixes survive (LRU eviction)
+        assert_eq!(s.peek(&seqs[19]), 400);
+    }
+
+    #[test]
+    fn insert_batch_matches_sequential_inserts() {
+        let mut a = store();
+        let mut b = store();
+        let seqs: Vec<Vec<u32>> = (0..6u32)
+            .map(|i| (i * 50..i * 50 + 120).collect())
+            .collect();
+        let mut w_a = 0;
+        for s in &seqs {
+            w_a += a.insert(s);
+        }
+        let w_b = b.insert_batch(seqs.iter().map(|s| &s[..]));
+        assert_eq!(w_a, w_b);
+        assert_eq!(a.token_count(), b.token_count());
+        // both enforce the same total capacity bound
+        assert!(a.token_count() <= 5000 && b.token_count() <= 5000);
     }
 
     #[test]

@@ -4,27 +4,178 @@
 //! Each edge carries a token segment; nodes carry the number of cached
 //! tokens on the path and an LRU timestamp. `match_prefix` returns how many
 //! leading tokens of a query are cached; `insert` adds a sequence, sharing
-//! existing prefixes; `evict_lru` trims leaf segments until a token budget
+//! existing prefixes; `evict_to` trims leaf segments until a token budget
 //! is met (never evicting segments that still have cached descendants,
 //! mirroring vLLM's leaf-only eviction).
+//!
+//! ## Performance design
+//!
+//! The tree is built for churn at cluster scale (the Global Store sits on
+//! every arrival / step-completion / eviction path):
+//!
+//! * **Arena + free list** — nodes live in one `Vec`; evicted slots go on a
+//!   free list and are reused by later inserts, so long-running stores do
+//!   not accumulate tombstones.
+//! * **Intrusive LRU list** — evictable leaves (no children, non-empty
+//!   segment) are threaded on a doubly-linked list ordered by
+//!   `last_access`. Touches move a leaf to the MRU tail in O(1); `evict_to`
+//!   pops the head per evicted leaf instead of scanning every node, taking
+//!   eviction from O(n²) to ~O(evicted). The only non-O(1) maintenance is
+//!   re-linking a parent that just became a leaf, which inserts in stamp
+//!   order scanning from the tail (parents carry recent stamps, so the scan
+//!   is short in practice).
+//! * **Inline child dispatch** — nodes with a single child (the common case
+//!   on prompt chains) dispatch on an inline `(token, index)` pair instead
+//!   of a `HashMap`, so a descent does one hash lookup only at genuinely
+//!   branchy nodes.
 
 use std::collections::HashMap;
 
-#[derive(Debug)]
+const ROOT: usize = 0;
+/// Null link for the intrusive LRU list and arena pointers.
+const NIL: usize = usize::MAX;
+
+/// Child dispatch table. Most nodes have zero or one child, so those cases
+/// stay inline; only branchy nodes pay for a `HashMap`.
+#[derive(Debug, Clone, Default)]
+enum Children {
+    #[default]
+    Empty,
+    One(u32, usize),
+    Many(HashMap<u32, usize>),
+}
+
+impl Children {
+    fn get(&self, tok: u32) -> Option<usize> {
+        match self {
+            Children::Empty => None,
+            Children::One(t, i) => (*t == tok).then_some(*i),
+            Children::Many(m) => m.get(&tok).copied(),
+        }
+    }
+
+    fn insert(&mut self, tok: u32, idx: usize) {
+        match self {
+            Children::Empty => *self = Children::One(tok, idx),
+            Children::One(t, i) => {
+                if *t == tok {
+                    *i = idx;
+                } else {
+                    let mut m = HashMap::with_capacity(2);
+                    m.insert(*t, *i);
+                    m.insert(tok, idx);
+                    *self = Children::Many(m);
+                }
+            }
+            Children::Many(m) => {
+                m.insert(tok, idx);
+            }
+        }
+    }
+
+    fn remove(&mut self, tok: u32) -> Option<usize> {
+        match self {
+            Children::Empty => None,
+            Children::One(t, i) => {
+                if *t == tok {
+                    let idx = *i;
+                    *self = Children::Empty;
+                    Some(idx)
+                } else {
+                    None
+                }
+            }
+            Children::Many(m) => {
+                let removed = m.remove(&tok);
+                if m.len() == 1 {
+                    // collapse back to the inline representation
+                    let (&t, &i) = m.iter().next().unwrap();
+                    *self = Children::One(t, i);
+                }
+                removed
+            }
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        matches!(self, Children::Empty)
+    }
+
+    fn indices(&self) -> Vec<usize> {
+        match self {
+            Children::Empty => Vec::new(),
+            Children::One(_, i) => vec![*i],
+            Children::Many(m) => m.values().copied().collect(),
+        }
+    }
+
+    fn iter(&self) -> ChildIter<'_> {
+        match self {
+            Children::Empty => ChildIter::Empty,
+            Children::One(t, i) => ChildIter::One(Some((*t, *i))),
+            Children::Many(m) => ChildIter::Many(m.iter()),
+        }
+    }
+}
+
+enum ChildIter<'a> {
+    Empty,
+    One(Option<(u32, usize)>),
+    Many(std::collections::hash_map::Iter<'a, u32, usize>),
+}
+
+impl Iterator for ChildIter<'_> {
+    type Item = (u32, usize);
+
+    fn next(&mut self) -> Option<(u32, usize)> {
+        match self {
+            ChildIter::Empty => None,
+            ChildIter::One(o) => o.take(),
+            ChildIter::Many(it) => it.next().map(|(&k, &v)| (k, v)),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
 struct Node {
     /// Children keyed by the first token of their edge segment.
-    children: HashMap<u32, usize>,
-    /// Edge segment from parent to this node.
+    children: Children,
+    /// Edge segment from parent to this node (empty = root or free slot).
     segment: Vec<u32>,
     /// Last access time (LRU), updated on match/insert.
     last_access: u64,
     parent: usize,
+    /// Intrusive LRU links; meaningful only while `in_lru`.
+    lru_prev: usize,
+    lru_next: usize,
+    /// Whether this node is linked on the evictable-leaf LRU list.
+    in_lru: bool,
+}
+
+impl Node {
+    fn new(segment: Vec<u32>, last_access: u64, parent: usize) -> Self {
+        Node {
+            children: Children::Empty,
+            segment,
+            last_access,
+            parent,
+            lru_prev: NIL,
+            lru_next: NIL,
+            in_lru: false,
+        }
+    }
 }
 
 /// Compressed prefix tree with LRU leaf eviction.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct RadixTree {
+    /// Node arena; slot 0 is the root, freed slots are recycled via `free`.
     nodes: Vec<Node>,
+    /// Reclaimed arena slots available for reuse.
+    free: Vec<usize>,
+    /// Head (least recent) / tail (most recent) of the evictable-leaf list.
+    lru_head: usize,
+    lru_tail: usize,
     /// Total tokens stored across all edges.
     tokens: u64,
     clock: u64,
@@ -33,8 +184,6 @@ pub struct RadixTree {
     hit_tokens: u64,
     lookup_tokens: u64,
 }
-
-const ROOT: usize = 0;
 
 impl Default for RadixTree {
     fn default() -> Self {
@@ -45,12 +194,10 @@ impl Default for RadixTree {
 impl RadixTree {
     pub fn new() -> Self {
         RadixTree {
-            nodes: vec![Node {
-                children: HashMap::new(),
-                segment: Vec::new(),
-                last_access: 0,
-                parent: ROOT,
-            }],
+            nodes: vec![Node::new(Vec::new(), 0, ROOT)],
+            free: Vec::new(),
+            lru_head: NIL,
+            lru_tail: NIL,
             tokens: 0,
             clock: 0,
             hits: 0,
@@ -88,6 +235,151 @@ impl RadixTree {
         self.clock
     }
 
+    // --- intrusive LRU list -------------------------------------------------
+
+    fn lru_unlink(&mut self, i: usize) {
+        if !self.nodes[i].in_lru {
+            return;
+        }
+        let (p, n) = (self.nodes[i].lru_prev, self.nodes[i].lru_next);
+        if p == NIL {
+            self.lru_head = n;
+        } else {
+            self.nodes[p].lru_next = n;
+        }
+        if n == NIL {
+            self.lru_tail = p;
+        } else {
+            self.nodes[n].lru_prev = p;
+        }
+        let node = &mut self.nodes[i];
+        node.lru_prev = NIL;
+        node.lru_next = NIL;
+        node.in_lru = false;
+    }
+
+    /// Append at the MRU tail (caller guarantees `i` carries the newest
+    /// stamp, which every touch-path caller does).
+    fn lru_push_tail(&mut self, i: usize) {
+        debug_assert!(!self.nodes[i].in_lru);
+        let t = self.lru_tail;
+        {
+            let node = &mut self.nodes[i];
+            node.lru_prev = t;
+            node.lru_next = NIL;
+            node.in_lru = true;
+        }
+        if t == NIL {
+            self.lru_head = i;
+        } else {
+            self.nodes[t].lru_next = i;
+        }
+        self.lru_tail = i;
+    }
+
+    /// Insert keeping the list ordered by `last_access` ascending from the
+    /// head. Used for parents promoted to leaves by eviction, whose stamp is
+    /// arbitrary relative to the current membership. Scans from whichever
+    /// end is nearer in stamp space (stamps are a monotone clock, so stamp
+    /// distance tracks list position), keeping chain-shaped evictions of
+    /// cold subtrees near O(1) per promotion instead of a full-list walk.
+    /// Either direction lands "after the last node with stamp <= ours", so
+    /// tie order is identical both ways.
+    fn lru_insert_sorted(&mut self, i: usize) {
+        debug_assert!(!self.nodes[i].in_lru);
+        let stamp = self.nodes[i].last_access;
+        let closer_to_head = self.lru_head != NIL && {
+            let head = self.nodes[self.lru_head].last_access;
+            let tail = self.nodes[self.lru_tail].last_access;
+            stamp.saturating_sub(head) <= tail.saturating_sub(stamp)
+        };
+        let after = if closer_to_head {
+            let mut cur = self.lru_head;
+            while cur != NIL && self.nodes[cur].last_access <= stamp {
+                cur = self.nodes[cur].lru_next;
+            }
+            if cur == NIL {
+                self.lru_tail
+            } else {
+                self.nodes[cur].lru_prev
+            }
+        } else {
+            let mut after = self.lru_tail;
+            while after != NIL && self.nodes[after].last_access > stamp {
+                after = self.nodes[after].lru_prev;
+            }
+            after
+        };
+        if after == NIL {
+            // new head
+            let h = self.lru_head;
+            {
+                let node = &mut self.nodes[i];
+                node.lru_prev = NIL;
+                node.lru_next = h;
+                node.in_lru = true;
+            }
+            if h == NIL {
+                self.lru_tail = i;
+            } else {
+                self.nodes[h].lru_prev = i;
+            }
+            self.lru_head = i;
+        } else {
+            let nxt = self.nodes[after].lru_next;
+            {
+                let node = &mut self.nodes[i];
+                node.lru_prev = after;
+                node.lru_next = nxt;
+                node.in_lru = true;
+            }
+            self.nodes[after].lru_next = i;
+            if nxt == NIL {
+                self.lru_tail = i;
+            } else {
+                self.nodes[nxt].lru_prev = i;
+            }
+        }
+    }
+
+    /// Refresh `i`'s LRU position after its stamp was bumped to the newest.
+    fn lru_touch(&mut self, i: usize) {
+        if self.nodes[i].in_lru {
+            self.lru_unlink(i);
+            self.lru_push_tail(i);
+        }
+    }
+
+    // --- arena --------------------------------------------------------------
+
+    fn alloc_node(&mut self, segment: Vec<u32>, last_access: u64, parent: usize) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                debug_assert!(self.nodes[i].children.is_empty() && !self.nodes[i].in_lru);
+                let node = &mut self.nodes[i];
+                node.segment = segment;
+                node.last_access = last_access;
+                node.parent = parent;
+                i
+            }
+            None => {
+                self.nodes.push(Node::new(segment, last_access, parent));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn free_node(&mut self, i: usize) {
+        debug_assert!(i != ROOT && !self.nodes[i].in_lru);
+        let node = &mut self.nodes[i];
+        node.segment = Vec::new();
+        node.children = Children::Empty;
+        node.parent = ROOT;
+        self.free.push(i);
+    }
+
+    // --- queries ------------------------------------------------------------
+
     /// Longest cached prefix of `tokens` (in tokens). Records hit stats and
     /// refreshes LRU stamps along the matched path.
     pub fn match_prefix(&mut self, tokens: &[u32]) -> u64 {
@@ -96,7 +388,7 @@ impl RadixTree {
         let mut matched: u64 = 0;
         let mut i = 0usize;
         while i < tokens.len() {
-            let Some(&child) = self.nodes[node].children.get(&tokens[i]) else {
+            let Some(child) = self.nodes[node].children.get(tokens[i]) else {
                 break;
             };
             let seg_len = self.nodes[child].segment.len();
@@ -109,6 +401,7 @@ impl RadixTree {
                 .count();
             matched += common as u64;
             self.nodes[child].last_access = now;
+            self.lru_touch(child);
             if common < seg_len {
                 break; // partial edge match: stop (cache granularity = edge)
             }
@@ -130,7 +423,7 @@ impl RadixTree {
         let mut matched = 0u64;
         let mut i = 0usize;
         while i < tokens.len() {
-            let Some(&child) = self.nodes[node].children.get(&tokens[i]) else {
+            let Some(child) = self.nodes[node].children.get(tokens[i]) else {
                 break;
             };
             let seg = &self.nodes[child].segment;
@@ -158,19 +451,16 @@ impl RadixTree {
         let mut i = 0usize;
         while i < tokens.len() {
             let first = tokens[i];
-            match self.nodes[node].children.get(&first).copied() {
+            match self.nodes[node].children.get(first) {
                 None => {
                     // new leaf with the remaining suffix
                     let seg: Vec<u32> = tokens[i..].to_vec();
                     let added = seg.len() as u64;
-                    let idx = self.nodes.len();
-                    self.nodes.push(Node {
-                        children: HashMap::new(),
-                        segment: seg,
-                        last_access: now,
-                        parent: node,
-                    });
+                    let idx = self.alloc_node(seg, now, node);
                     self.nodes[node].children.insert(first, idx);
+                    // `node` gained a child: no longer an evictable leaf
+                    self.lru_unlink(node);
+                    self.lru_push_tail(idx);
                     self.tokens += added;
                     return added;
                 }
@@ -184,6 +474,7 @@ impl RadixTree {
                         .take_while(|(a, b)| a == b)
                         .count();
                     self.nodes[child].last_access = now;
+                    self.lru_touch(child);
                     if common == seg_len {
                         // full edge consumed, descend
                         i += common;
@@ -194,22 +485,22 @@ impl RadixTree {
                     let tail: Vec<u32> = self.nodes[child].segment.split_off(common);
                     let tail_first = tail[0];
                     let mid = child; // child keeps the head segment
-                    let idx = self.nodes.len();
-                    let moved_children =
-                        std::mem::take(&mut self.nodes[mid].children);
-                    self.nodes.push(Node {
-                        children: moved_children,
-                        segment: tail,
-                        last_access: self.nodes[mid].last_access,
-                        parent: mid,
-                    });
+                    let stamp = self.nodes[mid].last_access;
+                    let moved_children = std::mem::take(&mut self.nodes[mid].children);
+                    let tail_is_leaf = moved_children.is_empty();
+                    let idx = self.alloc_node(tail, stamp, mid);
+                    self.nodes[idx].children = moved_children;
                     // fix moved children's parent pointers
-                    let moved: Vec<usize> =
-                        self.nodes[idx].children.values().copied().collect();
-                    for c in moved {
+                    for c in self.nodes[idx].children.indices() {
                         self.nodes[c].parent = idx;
                     }
+                    // mid becomes interior (gains the tail child)
+                    self.lru_unlink(mid);
                     self.nodes[mid].children.insert(tail_first, idx);
+                    if tail_is_leaf {
+                        // stamp == now (mid was just touched), so tail is MRU
+                        self.lru_push_tail(idx);
+                    }
                     i += common;
                     node = mid;
                     // loop continues: remaining tokens[i..] get a new leaf
@@ -224,8 +515,40 @@ impl RadixTree {
     pub fn evict_to(&mut self, budget: u64) -> u64 {
         let mut evicted = 0u64;
         while self.tokens > budget {
-            // find the LRU leaf (O(n) scan — tree sizes are modest; see
-            // bench_support notes before optimizing)
+            let leaf = self.lru_head;
+            if leaf == NIL {
+                break;
+            }
+            self.lru_unlink(leaf);
+            let seg_len = self.nodes[leaf].segment.len() as u64;
+            let first = self.nodes[leaf].segment[0];
+            let parent = self.nodes[leaf].parent;
+            self.nodes[parent].children.remove(first);
+            self.free_node(leaf);
+            self.tokens -= seg_len;
+            evicted += seg_len;
+            // the parent may just have become an evictable leaf; link it in
+            // stamp order (its stamp predates the list tail in general)
+            if parent != ROOT
+                && self.nodes[parent].children.is_empty()
+                && !self.nodes[parent].segment.is_empty()
+            {
+                self.lru_insert_sorted(parent);
+            }
+        }
+        evicted
+    }
+
+    /// Reference eviction using the historical full-scan algorithm
+    /// (O(arena) per evicted leaf, tombstones included). Semantically
+    /// identical to [`evict_to`]; kept ONLY so `perf_hotpaths` can measure
+    /// the arena+LRU speedup against the pre-arena behavior on the same
+    /// tree — the ≥5x gate compares the two rows from one run. Never call
+    /// this on a serving path.
+    #[doc(hidden)]
+    pub fn evict_to_scan_reference(&mut self, budget: u64) -> u64 {
+        let mut evicted = 0u64;
+        while self.tokens > budget {
             let mut lru: Option<(usize, u64)> = None;
             for (i, n) in self.nodes.iter().enumerate() {
                 if i == ROOT || !n.children.is_empty() || n.segment.is_empty() {
@@ -240,13 +563,20 @@ impl RadixTree {
                 }
             }
             let Some((leaf, _)) = lru else { break };
+            self.lru_unlink(leaf);
             let seg_len = self.nodes[leaf].segment.len() as u64;
             let first = self.nodes[leaf].segment[0];
             let parent = self.nodes[leaf].parent;
-            self.nodes[parent].children.remove(&first);
-            self.nodes[leaf].segment.clear();
+            self.nodes[parent].children.remove(first);
+            self.free_node(leaf);
             self.tokens -= seg_len;
             evicted += seg_len;
+            if parent != ROOT
+                && self.nodes[parent].children.is_empty()
+                && !self.nodes[parent].segment.is_empty()
+            {
+                self.lru_insert_sorted(parent);
+            }
         }
         evicted
     }
@@ -258,6 +588,111 @@ impl RadixTree {
             .enumerate()
             .filter(|(i, n)| *i == ROOT || !n.segment.is_empty())
             .count()
+    }
+
+    /// Arena capacity (live + free slots), for slot-reuse assertions.
+    pub fn arena_len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Reclaimed arena slots awaiting reuse.
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Exhaustive structural check, for property/stress tests: verifies the
+    /// token count, parent/child links, free-list disjointness, and that the
+    /// LRU list contains exactly the evictable leaves in stamp order.
+    #[doc(hidden)]
+    pub fn validate(&self) -> Result<(), String> {
+        use std::collections::HashSet;
+        let mut seen: HashSet<usize> = HashSet::new();
+        let mut stack = vec![ROOT];
+        let mut sum = 0u64;
+        while let Some(i) = stack.pop() {
+            if !seen.insert(i) {
+                return Err(format!("node {i} reachable twice"));
+            }
+            let n = &self.nodes[i];
+            if i != ROOT {
+                if n.segment.is_empty() {
+                    return Err(format!("live node {i} has empty segment"));
+                }
+                sum += n.segment.len() as u64;
+            }
+            for (tok, c) in n.children.iter() {
+                if self.nodes[c].parent != i {
+                    return Err(format!("child {c} parent link != {i}"));
+                }
+                if self.nodes[c].segment.first() != Some(&tok) {
+                    return Err(format!("child {c} keyed by wrong first token"));
+                }
+                stack.push(c);
+            }
+            let evictable = i != ROOT && n.children.is_empty() && !n.segment.is_empty();
+            if evictable != n.in_lru {
+                return Err(format!(
+                    "node {i}: evictable={evictable} but in_lru={}",
+                    n.in_lru
+                ));
+            }
+        }
+        if sum != self.tokens {
+            return Err(format!(
+                "token_count {} != sum of live segments {sum}",
+                self.tokens
+            ));
+        }
+        for &f in &self.free {
+            if seen.contains(&f) {
+                return Err(format!("free slot {f} still reachable"));
+            }
+            if !self.nodes[f].segment.is_empty() || self.nodes[f].in_lru {
+                return Err(format!("free slot {f} not cleared"));
+            }
+        }
+        if seen.len() + self.free.len() != self.nodes.len() {
+            return Err(format!(
+                "arena leak: {} reachable + {} free != {} slots",
+                seen.len(),
+                self.free.len(),
+                self.nodes.len()
+            ));
+        }
+        // LRU chain: links consistent, members reachable, stamps ascending
+        let mut count = 0usize;
+        let mut prev = NIL;
+        let mut last_stamp = 0u64;
+        let mut i = self.lru_head;
+        while i != NIL {
+            let n = &self.nodes[i];
+            if !n.in_lru {
+                return Err(format!("LRU chain hits unlinked node {i}"));
+            }
+            if n.lru_prev != prev {
+                return Err(format!("node {i} lru_prev broken"));
+            }
+            if n.last_access < last_stamp {
+                return Err(format!("LRU order violated at node {i}"));
+            }
+            last_stamp = n.last_access;
+            count += 1;
+            if count > self.nodes.len() {
+                return Err("LRU cycle".to_string());
+            }
+            prev = i;
+            i = n.lru_next;
+        }
+        if prev != self.lru_tail && !(count == 0 && self.lru_tail == NIL) {
+            return Err("lru_tail inconsistent".to_string());
+        }
+        let in_lru_total = seen.iter().filter(|&&j| self.nodes[j].in_lru).count();
+        if count != in_lru_total {
+            return Err(format!(
+                "LRU chain length {count} != {in_lru_total} flagged nodes"
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -375,5 +810,76 @@ mod tests {
         t.insert(&[1, 2]);
         let _ = t.peek_prefix(&[1, 2]);
         assert_eq!(t.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn eviction_reclaims_arena_slots() {
+        let mut t = RadixTree::new();
+        for i in 0..32u32 {
+            t.insert(&[i, i, i]);
+        }
+        let arena = t.arena_len();
+        t.evict_to(0);
+        assert_eq!(t.free_slots(), 32, "evicted leaves must hit the free list");
+        for i in 100..132u32 {
+            t.insert(&[i, i, i]);
+        }
+        assert_eq!(t.arena_len(), arena, "new leaves must reuse freed slots");
+        assert_eq!(t.free_slots(), 0);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn parent_promoted_to_leaf_keeps_lru_order() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2]); // clock 1: [1,2]
+        t.insert(&[1, 2, 3]); // clock 2: leaf [3] under [1,2]
+        t.insert(&[9, 9]); // clock 3: leaf [9,9]
+        // evict one token: LRU leaf is [3] (stamp 2); its parent [1,2]
+        // (stamp 2) is promoted and must sort BEFORE [9,9] (stamp 3)
+        t.evict_to(4);
+        assert_eq!(t.peek_prefix(&[1, 2]), 2);
+        t.validate().unwrap();
+        // next eviction takes the promoted [1,2], not the younger [9,9]
+        t.evict_to(2);
+        assert_eq!(t.peek_prefix(&[1, 2]), 0, "promoted parent evicts first");
+        assert_eq!(t.peek_prefix(&[9, 9]), 2);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn scan_reference_eviction_matches_lru_eviction() {
+        let build = || {
+            let mut t = RadixTree::new();
+            t.insert(&[1, 2, 3, 4]);
+            t.insert(&[1, 2, 9]);
+            t.insert(&[5, 5, 5]);
+            t.match_prefix(&[5, 5, 5]);
+            t.insert(&[7, 8]);
+            t
+        };
+        let mut a = build();
+        let mut b = build();
+        let ev_a = a.evict_to(5);
+        let ev_b = b.evict_to_scan_reference(5);
+        assert_eq!(ev_a, ev_b);
+        assert_eq!(a.token_count(), b.token_count());
+        for q in [&[1u32, 2, 3, 4][..], &[1, 2, 9], &[5, 5, 5], &[7, 8]] {
+            assert_eq!(a.peek_prefix(q), b.peek_prefix(q), "query {q:?}");
+        }
+        a.validate().unwrap();
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_passes_through_mixed_workload() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4, 5]);
+        t.insert(&[1, 2, 9]);
+        t.insert(&[1, 2, 3, 7]);
+        t.match_prefix(&[1, 2, 3, 4]);
+        t.evict_to(6);
+        t.insert(&[4, 4, 4]);
+        t.validate().unwrap();
     }
 }

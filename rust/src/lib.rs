@@ -26,12 +26,14 @@
 
 pub mod cluster;
 pub mod config;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod engines;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
 pub mod perfmodel;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -16,7 +16,6 @@
 //! --global-store --config <file.json>
 
 use banaserve::config::{EngineKind, ExperimentConfig};
-use banaserve::coordinator::{serve, ServeConfig, ServeRequest};
 use banaserve::engines;
 use banaserve::kvcache::PipelinePlan;
 use banaserve::model;
@@ -66,7 +65,22 @@ fn build_config(a: &Args) -> ExperimentConfig {
     cfg
 }
 
+/// The real PJRT serving path needs the `xla` bindings; without the `pjrt`
+/// feature the simulator-only build explains itself instead of existing
+/// half-broken.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_a: &Args) -> i32 {
+    eprintln!(
+        "the 'serve' subcommand needs the PJRT runtime: add the local xla \
+         path dep (see rust/Cargo.toml) and rebuild with \
+         `cargo build --release --features pjrt`"
+    );
+    2
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(a: &Args) -> i32 {
+    use banaserve::coordinator::{serve, ServeConfig, ServeRequest};
     let cfg = ServeConfig {
         artifacts_dir: a.str_or("artifacts", "artifacts").to_string(),
         variant: a.str_or("variant", "tiny").to_string(),

@@ -123,7 +123,10 @@ impl EventQueue {
         });
     }
 
-    fn pop(&mut self) -> Option<(f64, EventKind)> {
+    /// Pop the next event in time order, advancing the clock. Public so
+    /// harnesses and benches can drive the queue directly (the driver loop
+    /// in [`run`] uses the same path).
+    pub fn pop(&mut self) -> Option<(f64, EventKind)> {
         let ev = self.heap.pop()?;
         debug_assert!(ev.time >= self.now - 1e-9, "time went backwards");
         self.now = ev.time.max(self.now);
@@ -259,7 +262,7 @@ mod tests {
             arrival: at,
             prompt_len: 8,
             output_len: 4,
-            cache_tokens: vec![1, 2, 3],
+            cache_tokens: vec![1, 2, 3].into(),
         }
     }
 

@@ -56,11 +56,27 @@ impl Summary {
         (ss / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest sample; 0.0 for an empty summary (consistent with `mean`).
+    /// Reads the first element when the sorted cache is valid instead of
+    /// re-folding the whole sample vector.
     pub fn min(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        if self.sorted {
+            return self.xs[0];
+        }
         self.xs.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; 0.0 for an empty summary (consistent with `mean`).
     pub fn max(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        if self.sorted {
+            return *self.xs.last().unwrap();
+        }
         self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -272,6 +288,31 @@ mod tests {
         assert_eq!(s.percentile(0.0), 10.0);
         assert_eq!(s.percentile(100.0), 50.0);
         assert!((s.percentile(25.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_all_zeros() {
+        let mut s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.ci95_half_width(), 0.0);
+    }
+
+    #[test]
+    fn min_max_agree_with_sorted_cache() {
+        let mut s = Summary::new();
+        s.extend([3.0, -1.0, 7.0, 2.0]);
+        let (min_unsorted, max_unsorted) = (s.min(), s.max());
+        let _ = s.p50(); // sorts; min/max must now read the cache
+        assert_eq!(s.min(), min_unsorted);
+        assert_eq!(s.max(), max_unsorted);
+        s.add(-5.0); // invalidates the cache
+        assert_eq!(s.min(), -5.0);
+        assert_eq!(s.max(), 7.0);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::util::json::{self, Value};
 use crate::util::prng::{Rng, Zipf};
+use std::sync::Arc;
 
 /// Cacheable-prefix length cap: only the first `CACHE_TOKEN_CAP` tokens of a
 /// prompt participate in prefix matching (bounds radix-tree memory for 85k-
@@ -27,7 +28,9 @@ pub struct Request {
     /// Number of output tokens this request will generate.
     pub output_len: u64,
     /// The cacheable token prefix (capped) used for prefix matching.
-    pub cache_tokens: Vec<u32>,
+    /// Shared (`Arc<[u32]>`) so engines clone a handle, not the tokens:
+    /// per-step store/cache writes are pointer bumps, not memcpys.
+    pub cache_tokens: Arc<[u32]>,
 }
 
 impl Request {
@@ -235,7 +238,7 @@ impl WorkloadConfig {
                 arrival: t,
                 prompt_len,
                 output_len,
-                cache_tokens,
+                cache_tokens: cache_tokens.into(),
             });
         }
         out
@@ -291,7 +294,7 @@ pub fn trace_from_json(text: &str) -> Result<Vec<Request>, String> {
             arrival: get("arrival")?,
             prompt_len: get("prompt_len")? as u64,
             output_len: get("output_len")? as u64,
-            cache_tokens: toks,
+            cache_tokens: toks.into(),
         });
     }
     Ok(out)

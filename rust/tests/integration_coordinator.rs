@@ -1,5 +1,7 @@
 //! Real serving path end-to-end: the threaded coordinator drives the PJRT
-//! runtime with continuous batching. Requires `make artifacts`.
+//! runtime with continuous batching. Requires `make artifacts` and the
+//! `pjrt` feature (xla bindings).
+#![cfg(feature = "pjrt")]
 
 use banaserve::coordinator::{serve, ServeConfig, ServeRequest};
 

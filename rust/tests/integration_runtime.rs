@@ -2,7 +2,9 @@
 //! python (JAX + Pallas) side computed at AOT time — the cross-layer
 //! correctness contract of the three-layer architecture.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Requires `make artifacts` (the Makefile test target guarantees it) and
+//! the `pjrt` feature (xla bindings).
+#![cfg(feature = "pjrt")]
 
 use banaserve::runtime::{argmax, EntryKind, Golden, KvCache, Manifest, Runtime};
 

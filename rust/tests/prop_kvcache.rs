@@ -181,6 +181,112 @@ fn radix_eviction_preserves_matching_correctness() {
 }
 
 #[test]
+fn radix_stress_invariants_under_churn() {
+    // thousands of random insert/match/evict ops; after every op the tree's
+    // structural invariants must hold: token_count == sum of live segments,
+    // LRU contains exactly the evictable leaves in access order, freed arena
+    // slots are disjoint from the live tree.
+    check("radix churn invariants", 20, |g| {
+        let mut t = RadixTree::new();
+        let vocab = g.rng.range(2, 12);
+        let ops = g.usize_in(100, 400);
+        for _ in 0..ops {
+            match g.usize_in(0, 3) {
+                0 | 1 => {
+                    let s = g.tokens(24, vocab);
+                    if !s.is_empty() {
+                        t.insert(&s);
+                    }
+                }
+                2 => {
+                    let q = g.tokens(24, vocab);
+                    t.match_prefix(&q);
+                }
+                _ => {
+                    let budget = g.rng.range(0, t.token_count().max(1));
+                    t.evict_to(budget);
+                    prop_assert!(
+                        t.token_count() <= budget,
+                        "over budget: {} > {budget}",
+                        t.token_count()
+                    );
+                }
+            }
+            if let Err(e) = t.validate() {
+                return Err(format!("invariant broken: {e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn radix_arena_reuses_slots_after_eviction() {
+    check("radix slot reuse", 20, |g| {
+        let mut t = RadixTree::new();
+        let n = g.usize_in(16, 64) as u32;
+        for i in 0..n {
+            // distinct first tokens -> one leaf per insert
+            t.insert(&[i * 100, i * 100 + 1, i * 100 + 2]);
+        }
+        let arena = t.arena_len();
+        t.evict_to(0);
+        prop_assert!(
+            t.free_slots() == n as usize,
+            "expected {n} reclaimed slots, got {}",
+            t.free_slots()
+        );
+        for i in 0..n {
+            t.insert(&[i * 100 + 7, i * 100 + 8]);
+        }
+        prop_assert!(
+            t.arena_len() == arena,
+            "arena grew {} -> {} despite {n} free slots",
+            arena,
+            t.arena_len()
+        );
+        t.validate().map_err(|e| format!("post-reuse: {e}"))
+    });
+}
+
+#[test]
+fn radix_eviction_follows_lru_access_order() {
+    // leaves must fall in access-time order: untouched sequences go first
+    check("radix LRU order", 20, |g| {
+        let mut t = RadixTree::new();
+        let n = g.usize_in(3, 10) as u32;
+        let seqs: Vec<Vec<u32>> = (0..n)
+            .map(|i| vec![i * 1000, i * 1000 + 1, i * 1000 + 2, i * 1000 + 3])
+            .collect();
+        for s in &seqs {
+            t.insert(s);
+        }
+        // touch a random subset; untouched ones are older
+        let mut touched = vec![false; n as usize];
+        for _ in 0..g.usize_in(1, n as usize) {
+            let i = g.usize_in(0, n as usize - 1);
+            t.match_prefix(&seqs[i]);
+            touched[i] = true;
+        }
+        let n_untouched = touched.iter().filter(|&&x| !x).count() as u64;
+        if n_untouched == 0 {
+            return Ok(());
+        }
+        // evict exactly the untouched mass: every touched leaf must survive
+        t.evict_to(t.token_count() - 4 * n_untouched);
+        for (i, s) in seqs.iter().enumerate() {
+            let hit = t.peek_prefix(s);
+            if touched[i] {
+                prop_assert!(hit == 4, "touched seq {i} evicted (hit {hit})");
+            } else {
+                prop_assert!(hit == 0, "untouched seq {i} survived (hit {hit})");
+            }
+        }
+        t.validate().map_err(|e| format!("post-evict: {e}"))
+    });
+}
+
+#[test]
 fn store_capacity_is_always_respected() {
     check("store capacity", 30, |g| {
         let cap_cpu = g.rng.range(50, 400);
