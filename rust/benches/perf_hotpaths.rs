@@ -11,6 +11,7 @@
 use banaserve::bench_support::{time_it, BenchRecorder};
 use banaserve::config::{EngineKind, ExperimentConfig};
 use banaserve::engines::banaserve::scheduler::{self, InstanceLoad};
+use banaserve::engines::fleet::FleetEvent;
 use banaserve::engines::run_experiment;
 use banaserve::kvcache::{BlockAllocator, RadixTree};
 use banaserve::sim::{EventQueue, Timer};
@@ -131,6 +132,50 @@ fn main() {
     });
     rec.bench("Alg 2 pick_rotating (64 instances)", 100_000, || {
         std::hint::black_box(scheduler::pick_rotating(&loads, 1.6, 17));
+    });
+
+    // typed timer-dispatch table: every engine event passes through
+    // FleetEvent encode/decode, so its cost sits on ALL hot paths. The row
+    // replays 1k mixed timers through 4 engine-shaped dispatch loops.
+    let timers: Vec<banaserve::sim::Timer> = (0..1000u64)
+        .map(|i| match i % 5 {
+            0 => FleetEvent::StepDone {
+                worker: (i % 16) as usize,
+            }
+            .timer(),
+            1 => FleetEvent::KvArrive {
+                worker: (i % 8) as usize,
+                seq: i,
+            }
+            .timer(),
+            2 => FleetEvent::Control.timer(),
+            3 => FleetEvent::MigrationDone {
+                device: (i % 4) as usize,
+                kind: i % 2,
+            }
+            .timer(),
+            _ => FleetEvent::Autoscale.timer(),
+        })
+        .collect();
+    rec.bench("fleet dispatch (4 engines × 1k timers)", 2000, || {
+        let mut acc = 0u64;
+        for _engine in 0..4 {
+            for &t in &timers {
+                match FleetEvent::decode(t) {
+                    Some(FleetEvent::StepDone { worker }) => acc += worker as u64,
+                    Some(FleetEvent::KvArrive { worker, seq }) => {
+                        acc += worker as u64 ^ seq
+                    }
+                    Some(FleetEvent::Control) => acc += 1,
+                    Some(FleetEvent::MigrationDone { device, kind }) => {
+                        acc += device as u64 + kind
+                    }
+                    Some(FleetEvent::Autoscale) => acc += 2,
+                    None => unreachable!(),
+                }
+            }
+        }
+        std::hint::black_box(acc);
     });
 
     // real runtime hot loop: host-roundtrip KV vs device-resident KV

@@ -79,12 +79,28 @@ pub enum Role {
     Decode,
 }
 
+/// Fleet-membership lifecycle of a device (elastic scaling).
+///
+/// `Active` devices admit new work; `Draining` devices finish (or migrate
+/// away) their residents but admit nothing new; `Released` devices have
+/// been handed back and must never be touched again. The engines own the
+/// Draining→Released transition (they know when residents are gone); the
+/// autoscaler only ever requests Active→Draining and new Active devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    Active,
+    Draining,
+    Released,
+}
+
 /// Runtime state of one simulated device.
 #[derive(Debug, Clone)]
 pub struct Device {
     pub id: usize,
     pub spec: GpuSpec,
     pub role: Role,
+    /// Elastic-fleet membership (always `Active` for static fleets).
+    pub state: DeviceState,
     /// Bytes of model weights resident (layer migration changes this).
     pub weight_bytes: u64,
     /// Bytes of KV cache currently allocated.
@@ -103,12 +119,18 @@ impl Device {
             id,
             spec,
             role,
+            state: DeviceState::Active,
             weight_bytes: 0,
             kv_bytes: 0,
             compute_util: TimeWeighted::new(),
             memory_util: TimeWeighted::new(),
             busy_until: 0.0,
         }
+    }
+
+    /// Admitting new work? (Draining/Released devices only finish residents.)
+    pub fn is_active(&self) -> bool {
+        self.state == DeviceState::Active
     }
 
     pub fn mem_used(&self) -> u64 {
@@ -197,6 +219,50 @@ impl Cluster {
     pub fn ids_by_role(&self, role: Role) -> Vec<usize> {
         self.by_role(role).map(|d| d.id).collect()
     }
+
+    // --- elastic fleet (runtime scale-out / drain) -------------------------
+    //
+    // Canonical device lifecycle for elastic fleets. The simulation engines
+    // embed `devices: Vec<Device>` directly (they destructure a Cluster at
+    // construction), so they drive the same Active→Draining→Released state
+    // machine on their own vectors; these methods are the reference
+    // implementation — keep the invariants (stable ids, no release while
+    // KV is resident) in lockstep with the engines' inline versions.
+
+    /// Add a device to the running cluster. Device ids are stable (indices
+    /// into `devices`), so released slots are never reused — a new device
+    /// always gets a fresh id at the end of the table.
+    pub fn add_device(&mut self, spec: GpuSpec, role: Role) -> usize {
+        let id = self.devices.len();
+        self.devices.push(Device::new(id, spec, role));
+        id
+    }
+
+    /// Begin draining a device: it stops admitting new work. The engine
+    /// must finish (or migrate away) its residents, then call
+    /// [`Cluster::release_device`]. No-op on already Draining/Released.
+    pub fn drain_device(&mut self, id: usize) {
+        if self.devices[id].state == DeviceState::Active {
+            self.devices[id].state = DeviceState::Draining;
+        }
+    }
+
+    /// Release a drained device. Refuses (returns false) while KV is still
+    /// resident — releasing live state would corrupt memory accounting.
+    pub fn release_device(&mut self, id: usize) -> bool {
+        let d = &mut self.devices[id];
+        if d.state == DeviceState::Draining && d.kv_bytes == 0 {
+            d.state = DeviceState::Released;
+            true
+        } else {
+            d.state == DeviceState::Released
+        }
+    }
+
+    /// Devices currently admitting work.
+    pub fn active_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.is_active()).count()
+    }
 }
 
 #[cfg(test)]
@@ -267,6 +333,43 @@ mod tests {
         let c = Cluster::homogeneous(3, A100_80G, Role::Unified);
         assert_eq!(c.by_role(Role::Unified).count(), 3);
         assert_eq!(c.by_role(Role::Prefill).count(), 0);
+    }
+
+    #[test]
+    fn elastic_add_drain_release_lifecycle() {
+        let mut c = Cluster::pd_split(1, 1, A100_40G);
+        assert_eq!(c.active_count(), 2);
+        let id = c.add_device(A100_40G, Role::Decode);
+        assert_eq!(id, 2);
+        assert_eq!(c.devices[id].state, DeviceState::Active);
+        assert_eq!(c.active_count(), 3);
+
+        c.drain_device(id);
+        assert_eq!(c.devices[id].state, DeviceState::Draining);
+        assert_eq!(c.active_count(), 2);
+
+        // refuse release while KV is resident
+        c.devices[id].kv_bytes = 64;
+        assert!(!c.release_device(id));
+        assert_eq!(c.devices[id].state, DeviceState::Draining);
+        c.devices[id].kv_bytes = 0;
+        assert!(c.release_device(id));
+        assert_eq!(c.devices[id].state, DeviceState::Released);
+        // idempotent
+        assert!(c.release_device(id));
+        // draining a released device is a no-op
+        c.drain_device(id);
+        assert_eq!(c.devices[id].state, DeviceState::Released);
+    }
+
+    #[test]
+    fn new_devices_get_fresh_stable_ids() {
+        let mut c = Cluster::homogeneous(2, A100_80G, Role::Unified);
+        c.drain_device(1);
+        c.release_device(1);
+        let id = c.add_device(A100_80G, Role::Unified);
+        assert_eq!(id, 2, "released slots are never reused");
+        assert_eq!(c.devices[2].id, 2);
     }
 
     #[test]

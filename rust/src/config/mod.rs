@@ -80,6 +80,42 @@ impl Default for BanaConfig {
     }
 }
 
+/// Elastic-fleet autoscaler knobs (windowed-load policy, engine-agnostic;
+/// consumed by `engines::fleet::Autoscaler`). Disabled by default so every
+/// existing configuration keeps its static fleet bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    pub enabled: bool,
+    /// Never drain below this many active devices.
+    pub min_devices: usize,
+    /// Never scale out beyond this many active devices.
+    pub max_devices: usize,
+    /// Scale OUT when windowed mean busy fraction exceeds this.
+    pub scale_out_util: f64,
+    /// Scale IN (drain one device) when it falls below this.
+    pub scale_in_util: f64,
+    /// Seconds after any scaling action before the next is considered.
+    pub cooldown: f64,
+    /// Evaluation window / decision period in seconds. DistServe schedules
+    /// its autoscale tick at this period; BanaServe evaluates on its
+    /// control cycle, rate-limited to at most one decision per window.
+    pub window: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            enabled: false,
+            min_devices: 2,
+            max_devices: 8,
+            scale_out_util: 0.85,
+            scale_in_util: 0.30,
+            cooldown: 5.0,
+            window: 2.0,
+        }
+    }
+}
+
 /// Complete description of one simulation run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -99,6 +135,8 @@ pub struct ExperimentConfig {
     /// Max sequences in one decode batch.
     pub max_batch_seqs: u64,
     pub bana: BanaConfig,
+    /// Elastic-fleet autoscaling (off = static fleet, the default).
+    pub autoscale: AutoscaleConfig,
 }
 
 impl ExperimentConfig {
@@ -122,6 +160,7 @@ impl ExperimentConfig {
             max_batch_tokens: 8192,
             max_batch_seqs: 16,
             bana: BanaConfig::default(),
+            autoscale: AutoscaleConfig::default(),
         }
     }
 
@@ -167,6 +206,25 @@ impl ExperimentConfig {
         if let Some(r) = a.get("rho").and_then(|v| v.parse::<f64>().ok()) {
             self.bana.rho = r;
         }
+        self.autoscale.enabled = a.bool_or("autoscale", self.autoscale.enabled);
+        if let Some(n) = a.get("autoscale-min").and_then(|v| v.parse::<usize>().ok()) {
+            self.autoscale.min_devices = n;
+        }
+        if let Some(n) = a.get("autoscale-max").and_then(|v| v.parse::<usize>().ok()) {
+            self.autoscale.max_devices = n;
+        }
+        if let Some(x) = a.get("scale-out-util").and_then(|v| v.parse::<f64>().ok()) {
+            self.autoscale.scale_out_util = x;
+        }
+        if let Some(x) = a.get("scale-in-util").and_then(|v| v.parse::<f64>().ok()) {
+            self.autoscale.scale_in_util = x;
+        }
+        if let Some(x) = a.get("autoscale-cooldown").and_then(|v| v.parse::<f64>().ok()) {
+            self.autoscale.cooldown = x;
+        }
+        if let Some(x) = a.get("autoscale-window").and_then(|v| v.parse::<f64>().ok()) {
+            self.autoscale.window = x;
+        }
     }
 
     /// Load overrides from a JSON config file.
@@ -203,6 +261,17 @@ impl ExperimentConfig {
                 ("attention_migration", Value::Bool(b)) => {
                     self.bana.attention_migration = *b;
                 }
+                ("autoscale", Value::Bool(b)) => self.autoscale.enabled = *b,
+                ("autoscale_min", Value::Num(n)) => {
+                    self.autoscale.min_devices = *n as usize;
+                }
+                ("autoscale_max", Value::Num(n)) => {
+                    self.autoscale.max_devices = *n as usize;
+                }
+                ("scale_out_util", Value::Num(n)) => self.autoscale.scale_out_util = *n,
+                ("scale_in_util", Value::Num(n)) => self.autoscale.scale_in_util = *n,
+                ("autoscale_cooldown", Value::Num(n)) => self.autoscale.cooldown = *n,
+                ("autoscale_window", Value::Num(n)) => self.autoscale.window = *n,
                 _ => return Err(format!("unknown config key '{k}'")),
             }
         }
@@ -264,6 +333,29 @@ mod tests {
         assert_eq!(c.engine, EngineKind::DistServe);
         assert!(!c.bana.global_store);
         assert!(c.apply_json(r#"{"bogus":1}"#).is_err());
+    }
+
+    #[test]
+    fn autoscale_defaults_off_and_overrides_apply() {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        assert!(!c.autoscale.enabled, "autoscaling must default off");
+        let a = Args::parse(
+            "--autoscale true --autoscale-min 2 --autoscale-max 6 --scale-out-util 0.7"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert!(c.autoscale.enabled);
+        assert_eq!(c.autoscale.min_devices, 2);
+        assert_eq!(c.autoscale.max_devices, 6);
+        assert_eq!(c.autoscale.scale_out_util, 0.7);
+
+        let mut j = ExperimentConfig::default_for(EngineKind::DistServe, "llama-13b", 5.0, 1);
+        j.apply_json(r#"{"autoscale":true,"autoscale_max":5,"scale_in_util":0.2}"#)
+            .unwrap();
+        assert!(j.autoscale.enabled);
+        assert_eq!(j.autoscale.max_devices, 5);
+        assert_eq!(j.autoscale.scale_in_util, 0.2);
     }
 
     #[test]

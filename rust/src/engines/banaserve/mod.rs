@@ -15,11 +15,12 @@
 pub mod migration;
 pub mod scheduler;
 
-use super::common::{self, tags, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
-use crate::cluster::{Cluster, Device, Link};
+use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use super::fleet::{self, FleetEvent};
+use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
 use crate::config::{BanaConfig, ExperimentConfig};
 use crate::kvcache::{GlobalKvStore, StoreConfig};
-use crate::metrics::Collector;
+use crate::metrics::{Collector, TimeSeries};
 use crate::perfmodel::{self, Efficiency};
 use crate::model::ModelSpec;
 use crate::sim::{Engine, EventQueue, Timer};
@@ -66,7 +67,7 @@ pub struct BanaEngine {
     /// can pick them up, which is exactly what breaks the cyclic-hold
     /// deadlock of per-device push queues (Fig 5's store-mediated handoff).
     pending_decode: VecDeque<u64>,
-    seqs: Vec<Option<Seq>>,
+    seqs: fleet::SeqTable,
     col: Collector,
     inflight: u64,
     pub kv_transfer_bytes: u64,
@@ -81,6 +82,19 @@ pub struct BanaEngine {
     hysteresis_latched: bool,
     /// Rotates tie-breaks among equally-loaded prefill candidates.
     route_rr: usize,
+    /// Device spec elastic scale-out builds new devices from.
+    gpu: GpuSpec,
+    /// Elastic-fleet policy (decides on the control cycle's windowed loads).
+    autoscaler: fleet::Autoscaler,
+    /// Next time an autoscale decision may run (honors AutoscaleConfig
+    /// `window` on top of the control-cycle cadence).
+    as_next_eval: f64,
+    /// Is a CONTROL timer currently in flight?
+    control_scheduled: bool,
+    pub fleet_size: TimeSeries,
+    pub fleet_util: TimeSeries,
+    pub scale_outs: u64,
+    pub drains: u64,
 }
 
 impl BanaEngine {
@@ -118,7 +132,7 @@ impl BanaEngine {
             store: GlobalKvStore::new(StoreConfig::default()),
             use_store: cfg.bana.global_store,
             pending_decode: VecDeque::new(),
-            seqs: Vec::new(),
+            seqs: fleet::SeqTable::new(),
             col,
             inflight: 0,
             kv_transfer_bytes: 0,
@@ -130,6 +144,14 @@ impl BanaEngine {
             cooldown_until: 0.0,
             hysteresis_latched: false,
             route_rr: 0,
+            gpu: cfg.gpu.clone(),
+            autoscaler: fleet::Autoscaler::new(cfg.autoscale),
+            as_next_eval: 0.0,
+            control_scheduled: false,
+            fleet_size: TimeSeries::new(),
+            fleet_util: TimeSeries::new(),
+            scale_outs: 0,
+            drains: 0,
         }
     }
 
@@ -168,18 +190,20 @@ impl BanaEngine {
     // --- Alg 2: load-aware request scheduling -----------------------------
 
     fn route_prefill(&self, now: f64) -> Option<usize> {
-        let loads: Vec<scheduler::InstanceLoad> = (0..self.devices.len())
+        let loads: Vec<fleet::InstanceLoad> = (0..self.devices.len())
             .filter(|&i| {
-                self.share_prefill[i] > 0.0 && now >= self.pinsts[i].frozen_until
+                self.share_prefill[i] > 0.0
+                    && now >= self.pinsts[i].frozen_until
+                    && self.devices[i].is_active()
             })
-            .map(|i| scheduler::InstanceLoad {
-                idx: i,
-                u: self.u_now(i),
-                queue_len: self.pinsts[i].queue_len(),
-                pending: 0.0,
+            .map(|i| {
+                let mut l = fleet::InstanceLoad::at(i);
+                l.u = self.u_now(i);
+                l.queue_len = self.pinsts[i].queue_len();
+                l
             })
             .collect();
-        scheduler::pick_rotating(&loads, self.bana.delta_l, self.route_rr)
+        fleet::pick_load_aware(&loads, self.bana.delta_l, self.route_rr)
             .map(|pos| loads[pos].idx)
     }
 
@@ -201,7 +225,7 @@ impl BanaEngine {
         }
         let (ids, items) = common::plan_prefill(
             &mut self.pinsts[i],
-            &self.seqs,
+            self.seqs.slots(),
             &self.devices[i],
             self.spec,
             &self.limits,
@@ -211,7 +235,7 @@ impl BanaEngine {
         }
         let mut stall: f64 = 0.0;
         for &sid in &ids {
-            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            let seq = self.seqs.seq_mut(sid);
             seq.phase = SeqPhase::Prefilling;
             if seq.prefill_start < 0.0 {
                 seq.prefill_start = now;
@@ -235,7 +259,10 @@ impl BanaEngine {
             st,
             overhead: stall,
         });
-        q.push_after(st.time + stall, Timer::with(tags::STEP_DONE, (i * 2) as u64, 0));
+        q.push_after(
+            st.time + stall,
+            FleetEvent::StepDone { worker: i * 2 }.timer(),
+        );
     }
 
     fn maybe_start_decode(&mut self, i: usize, q: &mut EventQueue) {
@@ -253,7 +280,7 @@ impl BanaEngine {
         loop {
             let mut need = 0u64;
             for &sid in &self.dinsts[i].running {
-                let s = self.seqs[sid as usize].as_ref().unwrap();
+                let s = self.seqs.seq(sid);
                 need += common::kv_bytes(self.spec, s.ctx + 1) - s.kv_on_device;
             }
             if need <= self.devices[i].mem_free() {
@@ -275,7 +302,7 @@ impl BanaEngine {
         }
         let (ids, st) = common::plan_decode(
             &self.dinsts[i],
-            &self.seqs,
+            self.seqs.slots(),
             self.spec,
             &self.devices[i].spec,
             &self.eff,
@@ -291,7 +318,7 @@ impl BanaEngine {
         });
         q.push_after(
             st.time + overhead,
-            Timer::with(tags::STEP_DONE, (i * 2 + 1) as u64, 0),
+            FleetEvent::StepDone { worker: i * 2 + 1 }.timer(),
         );
     }
 
@@ -309,7 +336,7 @@ impl BanaEngine {
         let mut idx = 0usize;
         while idx < self.pending_decode.len().min(SKIP_AHEAD) {
             let sid = self.pending_decode[idx];
-            let Some(seq_ref) = self.seqs[sid as usize].as_ref() else {
+            let Some(seq_ref) = self.seqs.get(sid) else {
                 self.pending_decode.remove(idx);
                 continue;
             };
@@ -318,9 +345,16 @@ impl BanaEngine {
                 continue;
             }
             let kv = common::kv_bytes(self.spec, seq_ref.ctx);
+            // NOTE: candidates deliberately include frozen devices — this
+            // same path admits onto devices frozen by module migration in
+            // static runs (they start decoding at MIG_DONE), so filtering
+            // frozen_until here would change static-fleet behavior; spin-up
+            // freezes are link-transfer-short, so the cost is bounded.
             let Some(di) = (0..self.devices.len())
                 .filter(|&i| {
-                    self.share_prefill[i] < 1.0 && self.devices[i].can_fit_kv(kv)
+                    self.share_prefill[i] < 1.0
+                        && self.devices[i].is_active()
+                        && self.devices[i].can_fit_kv(kv)
                 })
                 .min_by(|&a, &b| {
                     // load per unit of decode capacity, with a mild
@@ -338,7 +372,7 @@ impl BanaEngine {
             };
             self.pending_decode.remove(idx);
             self.devices[di].alloc_kv(now, kv);
-            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            let seq = self.seqs.seq_mut(sid);
             seq.kv_on_device = kv;
             seq.instance = di;
             seq.phase = SeqPhase::Decoding;
@@ -356,7 +390,7 @@ impl BanaEngine {
         let pos = self.dinsts[i].running.iter().position(|&x| x == sid).unwrap();
         self.dinsts[i].running.remove(pos);
         {
-            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            let seq = self.seqs.seq_mut(sid);
             self.devices[i].free_kv(q.now(), seq.kv_on_device);
             seq.kv_on_device = 0;
             seq.ctx = 0;
@@ -375,12 +409,12 @@ impl BanaEngine {
         self.preemptions += 1;
         let now = q.now();
         if let Some(pi) = self.route_prefill(now) {
-            self.seqs[sid as usize].as_mut().unwrap().instance = pi;
+            self.seqs.seq_mut(sid).instance = pi;
             self.pinsts[pi].waiting.push_front(sid);
             self.maybe_start_prefill(pi, q);
         } else {
             // no prefill-capable device this instant: park at device 0
-            self.seqs[sid as usize].as_mut().unwrap().instance = 0;
+            self.seqs.seq_mut(sid).instance = 0;
             self.pinsts[0].waiting.push_front(sid);
         }
     }
@@ -392,10 +426,13 @@ impl BanaEngine {
     /// freezes both ends.
     fn offload_seq(&mut self, i: usize, sid: u64, q: &mut EventQueue) -> bool {
         let now = q.now();
-        let kv = self.seqs[sid as usize].as_ref().unwrap().kv_on_device;
+        let kv = self.seqs.seq(sid).kv_on_device;
         let Some(to) = (0..self.devices.len())
             .filter(|&t| {
-                t != i && self.share_prefill[t] < 1.0 && self.devices[t].can_fit_kv(kv)
+                t != i
+                    && self.share_prefill[t] < 1.0
+                    && self.devices[t].is_active()
+                    && self.devices[t].can_fit_kv(kv)
             })
             .max_by_key(|&t| self.devices[t].mem_free())
         else {
@@ -406,7 +443,7 @@ impl BanaEngine {
         self.devices[i].free_kv(now, kv);
         self.devices[to].alloc_kv(now, kv);
         {
-            let s = self.seqs[sid as usize].as_mut().unwrap();
+            let s = self.seqs.seq_mut(sid);
             s.instance = to;
         }
         self.dinsts[to].running.push(sid);
@@ -416,12 +453,15 @@ impl BanaEngine {
         self.dinsts[to].decode_overhead = 2.0 * self.link.latency;
         self.stats.attention_migrations += 1;
         self.stats.migration_seconds += t_mig;
-        q.push_after(t_mig, Timer::with(tags::MIG_DONE, to as u64, 1));
+        q.push_after(
+            t_mig,
+            FleetEvent::MigrationDone { device: to, kind: 1 }.timer(),
+        );
         true
     }
 
     fn finish(&mut self, sid: u64, dev: usize, now: f64) {
-        let seq = self.seqs[sid as usize].as_mut().unwrap();
+        let seq = self.seqs.seq_mut(sid);
         seq.phase = SeqPhase::Finished;
         let rec = seq.record(now);
         let kv = seq.kv_on_device;
@@ -429,7 +469,7 @@ impl BanaEngine {
         self.devices[dev].free_kv(now, kv);
         self.col.finish(rec);
         self.inflight -= 1;
-        self.seqs[sid as usize] = None;
+        self.seqs.remove(sid);
     }
 
     fn prefill_done(&mut self, i: usize, q: &mut EventQueue) {
@@ -452,12 +492,12 @@ impl BanaEngine {
             self.store.insert_batch(
                 step.seqs
                     .iter()
-                    .map(|&sid| &*seqs[sid as usize].as_ref().unwrap().req.cache_tokens),
+                    .map(|&sid| &*seqs.seq(sid).req.cache_tokens),
             );
         }
         for sid in step.seqs {
             let done = {
-                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                let seq = self.seqs.seq_mut(sid);
                 seq.ctx = seq.req.prompt_len + 1;
                 seq.generated = 1;
                 seq.first_token = now;
@@ -473,7 +513,7 @@ impl BanaEngine {
             // store is disabled (full transfer time). The prefill device's
             // memory frees IMMEDIATELY — decode fetches when it has room.
             let kv = {
-                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                let seq = self.seqs.seq_mut(sid);
                 seq.phase = SeqPhase::Transferring;
                 let kv = seq.kv_on_device;
                 seq.kv_on_device = 0;
@@ -487,7 +527,10 @@ impl BanaEngine {
                 crate::cluster::NET_200GBPS.transfer_time(kv)
             };
             self.pending_decode.push_back(sid);
-            q.push_after(t_stage, Timer::with(tags::KV_ARRIVE, 0, sid));
+            q.push_after(
+                t_stage,
+                FleetEvent::KvArrive { worker: 0, seq: sid }.timer(),
+            );
         }
         self.maybe_start_prefill(i, q);
     }
@@ -504,7 +547,7 @@ impl BanaEngine {
         );
         let mut finished = Vec::new();
         for &sid in &step.seqs {
-            let Some(seq) = self.seqs[sid as usize].as_mut() else { continue };
+            let Some(seq) = self.seqs.get_mut(sid) else { continue };
             if seq.phase != SeqPhase::Decoding || seq.instance != i {
                 continue; // migrated away mid-step
             }
@@ -541,14 +584,30 @@ impl BanaEngine {
         if !self.bana.layer_migration {
             return None;
         }
-        let n = self.devices.len() as f64;
-        let cap_p: f64 = self.share_prefill.iter().sum();
+        // capacity is counted over ACTIVE devices only — drained/released
+        // devices neither hold share nor receive it
+        let n = self.active_count() as f64;
+        let cap_p: f64 = (0..self.devices.len())
+            .filter(|&i| self.devices[i].is_active())
+            .map(|i| self.share_prefill[i])
+            .sum();
         let cap_d: f64 = n - cap_p;
         if cap_p <= 0.0 || cap_d <= 0.0 {
             return None;
         }
-        let busy_p: f64 = loads.iter().map(|l| l.busy_prefill).sum();
-        let busy_d: f64 = loads.iter().map(|l| l.busy_decode).sum();
+        // busy must be summed over the same ACTIVE set as the capacity it
+        // divides: a draining device's residual decode work finishes in
+        // place and must not register as demand on active capacity
+        let busy_p: f64 = loads
+            .iter()
+            .filter(|l| self.devices[l.idx].is_active())
+            .map(|l| l.busy_prefill)
+            .sum();
+        let busy_d: f64 = loads
+            .iter()
+            .filter(|l| self.devices[l.idx].is_active())
+            .map(|l| l.busy_decode)
+            .sum();
         let u_p = busy_p / cap_p;
         let u_d = busy_d / cap_d;
         if u_p.max(u_d) < 0.9 {
@@ -563,7 +622,7 @@ impl BanaEngine {
         let mut run_ctx: u64 = 0;
         for inst in &self.dinsts {
             for &sid in &inst.running {
-                if let Some(s) = self.seqs[sid as usize].as_ref() {
+                if let Some(s) = self.seqs.get(sid) {
                     run_count += 1;
                     run_ctx += s.ctx;
                 }
@@ -573,7 +632,7 @@ impl BanaEngine {
         let mut wait_prompt: u64 = 0;
         for inst in &self.pinsts {
             for &sid in &inst.waiting {
-                if let Some(s) = self.seqs[sid as usize].as_ref() {
+                if let Some(s) = self.seqs.get(sid) {
                     wait_count += 1;
                     wait_prompt += s.req.prompt_len;
                 }
@@ -607,7 +666,7 @@ impl BanaEngine {
         let mut w_p = 0.0;
         for inst in &self.pinsts {
             for &sid in &inst.waiting {
-                if let Some(s) = self.seqs[sid as usize].as_ref() {
+                if let Some(s) = self.seqs.get(sid) {
                     w_p += (s.req.prompt_len.saturating_sub(s.cached)) as f64
                         * t_prefill_tok;
                 }
@@ -615,7 +674,7 @@ impl BanaEngine {
         }
         let mut w_d = 0.0;
         let count_d = |sid: u64, w_d: &mut f64| {
-            if let Some(s) = self.seqs[sid as usize].as_ref() {
+            if let Some(s) = self.seqs.get(sid) {
                 *w_d += (s.req.output_len.saturating_sub(s.generated)) as f64
                     * t_decode_tok;
             }
@@ -644,13 +703,21 @@ impl BanaEngine {
         let to_prefill = target_p > cap_p;
         let to = if to_prefill {
             (0..self.devices.len())
-                .filter(|&i| self.share_prefill[i] < 1.0 && !self.mig[i].in_flight)
+                .filter(|&i| {
+                    self.share_prefill[i] < 1.0
+                        && !self.mig[i].in_flight
+                        && self.devices[i].is_active()
+                })
                 .min_by(|&a, &b| {
                     loads[a].busy_decode.partial_cmp(&loads[b].busy_decode).unwrap()
                 })?
         } else {
             (0..self.devices.len())
-                .filter(|&i| self.share_prefill[i] > 0.0 && !self.mig[i].in_flight)
+                .filter(|&i| {
+                    self.share_prefill[i] > 0.0
+                        && !self.mig[i].in_flight
+                        && self.devices[i].is_active()
+                })
                 .min_by(|&a, &b| {
                     loads[a].busy_prefill.partial_cmp(&loads[b].busy_prefill).unwrap()
                 })?
@@ -684,10 +751,17 @@ impl BanaEngine {
                 }
             })
             .collect();
+        // migration only ever considers ACTIVE devices; `loads` keeps full
+        // device indexing because pool_rebalance addresses it by device id
+        let active_loads: Vec<migration::DeviceLoad> = loads
+            .iter()
+            .filter(|l| self.devices[l.idx].is_active())
+            .copied()
+            .collect();
         // hysteresis: once latched by a migration, wait for the gap to fall
         // below δ↓ (or the cooldown to expire) before re-arming
-        let max_u = loads.iter().map(|l| l.u).fold(0.0, f64::max);
-        let min_u = loads.iter().map(|l| l.u).fold(f64::INFINITY, f64::min);
+        let max_u = active_loads.iter().map(|l| l.u).fold(0.0, f64::max);
+        let min_u = active_loads.iter().map(|l| l.u).fold(f64::INFINITY, f64::min);
         let gap = max_u - min_u;
         if self.hysteresis_latched && gap < self.bana.delta_down {
             self.hysteresis_latched = false;
@@ -721,7 +795,7 @@ impl BanaEngine {
             // plus the cooldown below is the oscillation guard (δ↑/δ↓).
             // Rejected per-device actions fall through to the pool-level
             // rebalance so an infeasible attention target can't starve it.
-            let actions = migration::plan(&loads, &pol, cost_layer, cost_attn);
+            let actions = migration::plan(&active_loads, &pol, cost_layer, cost_attn);
             let mut acted = false;
             for a in actions {
                 if self.execute(a, q) {
@@ -740,14 +814,20 @@ impl BanaEngine {
             self.last_busy[i] = (self.pinsts[i].busy_wall, self.dinsts[i].busy_wall);
         }
         self.last_cycle_at = now;
+        // elastic fleet: decide on the same windowed loads the migration
+        // planner saw; executing may append devices or start drains, so
+        // everything below re-reads devices.len()
+        if self.autoscaler.enabled() {
+            self.autoscale_step(&loads, now, q);
+        }
         // safety net: re-dispatch work stranded on share-0 devices and make
         // sure no idle instance is sitting on runnable work
-        for i in 0..n {
+        for i in 0..self.devices.len() {
             if self.share_prefill[i] <= 0.0 && !self.pinsts[i].waiting.is_empty() {
                 let stranded: Vec<u64> = self.pinsts[i].waiting.drain(..).collect();
                 for sid in stranded {
                     let target = self.route_prefill(now).unwrap_or(i);
-                    self.seqs[sid as usize].as_mut().unwrap().instance = target;
+                    self.seqs.seq_mut(sid).instance = target;
                     self.pinsts[target].waiting.push_back(sid);
                 }
             }
@@ -756,34 +836,169 @@ impl BanaEngine {
         // work stealing: an idle prefill-capable device takes half the
         // longest waiting queue — corrects any routing maldistribution
         // regardless of how it arose (router staleness, share changes)
-        for i in 0..n {
+        for i in 0..self.devices.len() {
             if self.share_prefill[i] <= 0.0
+                || !self.devices[i].is_active()
                 || self.pinsts[i].is_busy()
                 || now < self.pinsts[i].frozen_until
                 || !self.pinsts[i].waiting.is_empty()
             {
                 continue;
             }
-            if let Some(donor) = (0..n)
+            if let Some(donor) = (0..self.devices.len())
                 .filter(|&j| j != i && self.pinsts[j].waiting.len() > 1)
                 .max_by_key(|&j| self.pinsts[j].waiting.len())
             {
                 let take = self.pinsts[donor].waiting.len() / 2;
                 for _ in 0..take {
                     if let Some(sid) = self.pinsts[donor].waiting.pop_back() {
-                        self.seqs[sid as usize].as_mut().unwrap().instance = i;
+                        self.seqs.seq_mut(sid).instance = i;
                         self.pinsts[i].waiting.push_back(sid);
                     }
                 }
             }
         }
-        for i in 0..n {
+        for i in 0..self.devices.len() {
             self.maybe_start_prefill(i, q);
             self.maybe_start_decode(i, q);
         }
         // keep cycling while any work remains
         if self.inflight > 0 {
-            q.push_after(self.bana.control_period, Timer::new(tags::CONTROL));
+            self.control_scheduled = true;
+            q.push_after(self.bana.control_period, FleetEvent::Control.timer());
+        } else {
+            self.control_scheduled = false;
+        }
+    }
+
+    // --- elastic fleet -----------------------------------------------------
+
+    fn active_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.is_active()).count()
+    }
+
+    /// May device `i` be drained? Never mid-migration, and never the last
+    /// active prefill-capable or decode-capable device.
+    fn drainable(&self, i: usize) -> bool {
+        if !self.devices[i].is_active() || self.mig[i].in_flight {
+            return false;
+        }
+        let others_prefill = (0..self.devices.len()).any(|j| {
+            j != i && self.devices[j].is_active() && self.share_prefill[j] > 0.0
+        });
+        let others_decode = (0..self.devices.len()).any(|j| {
+            j != i && self.devices[j].is_active() && self.share_prefill[j] < 1.0
+        });
+        others_prefill && others_decode
+    }
+
+    /// Elastic-fleet decision on the control cycle's windowed loads.
+    fn autoscale_step(
+        &mut self,
+        loads: &[migration::DeviceLoad],
+        now: f64,
+        q: &mut EventQueue,
+    ) {
+        self.finish_drains(now);
+        // honor AutoscaleConfig::window: the control cycle may run faster
+        // than the autoscale decision period
+        if now < self.as_next_eval {
+            return;
+        }
+        self.as_next_eval = now + self.autoscaler.cfg.window;
+        let batch_cap = self.limits.max_batch_seqs as usize;
+        let active: Vec<fleet::FleetLoad> = (0..self.devices.len())
+            .filter(|&i| self.devices[i].is_active())
+            .map(|i| fleet::FleetLoad {
+                idx: i,
+                busy: (loads[i].busy_prefill + loads[i].busy_decode).min(1.0),
+                // queued work = prefill waiting + decode backlog beyond one
+                // batch (short-prompt bursts surface as oversized running
+                // sets, not waiting queues)
+                queued: self.pinsts[i].queue_len()
+                    + self.dinsts[i].running.len().saturating_sub(batch_cap),
+                resident: self.pinsts[i].load_seqs() + self.dinsts[i].running.len(),
+                drainable: self.drainable(i),
+            })
+            .collect();
+        if !active.is_empty() {
+            let mean = active.iter().map(|l| l.busy).sum::<f64>() / active.len() as f64;
+            self.fleet_util.push(now, mean);
+        }
+        // store-staged sequences awaiting decode admission are engine-wide
+        // backlog no single device owns
+        match self.autoscaler.decide(now, &active, self.pending_decode.len()) {
+            fleet::ScaleDecision::Out => self.scale_out(q),
+            fleet::ScaleDecision::In { victim } => self.begin_drain(victim, q),
+            fleet::ScaleDecision::Hold => {}
+        }
+    }
+
+    /// Append a device as a hybrid half-prefill/half-decode worker —
+    /// flexible capacity that layer migration then specializes. The device
+    /// serves only after its weight replica lands (spin-up freeze).
+    fn scale_out(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        let id = self.devices.len();
+        let mut dev = Device::new(id, self.gpu.clone(), Role::Decode);
+        dev.weight_bytes = self.spec.weight_bytes();
+        dev.touch_mem(now);
+        self.devices.push(dev);
+        let share = 0.5;
+        let t_up = self.link.transfer_time(self.spec.weight_bytes());
+        let mut p = InstanceSim::new(id, share);
+        p.frozen_until = now + t_up;
+        let mut d = InstanceSim::new(id, 1.0 - share);
+        d.frozen_until = now + t_up;
+        self.share_prefill.push(share);
+        self.pinsts.push(p);
+        self.dinsts.push(d);
+        self.mig.push(MigState::default());
+        self.routed_counts.push(0);
+        self.last_busy.push((0.0, 0.0));
+        self.scale_outs += 1;
+        self.fleet_size.push(now, self.active_count() as f64);
+        log::debug!("banaserve scale-out: device {id} joins hybrid at t={now:.2}");
+    }
+
+    /// Stop admitting at `victim`; its decode residents finish in place,
+    /// its waiting queue is re-routed now, and the next control cycles
+    /// release it once empty.
+    fn begin_drain(&mut self, victim: usize, q: &mut EventQueue) {
+        let now = q.now();
+        self.devices[victim].state = DeviceState::Draining;
+        self.drains += 1;
+        self.share_prefill[victim] = 0.0;
+        self.pinsts[victim].share = 0.0;
+        self.dinsts[victim].share = 1.0; // drain residents at full speed
+        let stranded: Vec<u64> = self.pinsts[victim].waiting.drain(..).collect();
+        for sid in stranded {
+            let target = self.route_prefill(now).unwrap_or(victim);
+            self.seqs.seq_mut(sid).instance = target;
+            self.pinsts[target].waiting.push_back(sid);
+            self.maybe_start_prefill(target, q);
+        }
+        self.fleet_size.push(now, self.active_count() as f64);
+        log::debug!("banaserve drain: device {victim} begins draining at t={now:.2}");
+    }
+
+    /// Release drained devices whose residents are all gone.
+    fn finish_drains(&mut self, now: f64) {
+        for i in 0..self.devices.len() {
+            if self.devices[i].state != DeviceState::Draining {
+                continue;
+            }
+            if self.pinsts[i].waiting.is_empty()
+                && self.pinsts[i].step.is_none()
+                && self.dinsts[i].step.is_none()
+                && self.dinsts[i].running.is_empty()
+                && self.devices[i].kv_bytes == 0
+                && !self.mig[i].in_flight
+            {
+                self.devices[i].state = DeviceState::Released;
+                self.fleet_size.push(now, self.active_count() as f64);
+                log::debug!("banaserve release: device {i} released at t={now:.2}");
+            }
         }
     }
 
@@ -796,13 +1011,17 @@ impl BanaEngine {
                 delta_share,
                 to_prefill,
             } => {
-                if self.mig[to].in_flight {
+                if self.mig[to].in_flight || !self.devices[to].is_active() {
                     return false;
                 }
                 // capacity floor: a migration must never leave the cluster
-                // without at least half a device of either role
-                let total_p: f64 = self.share_prefill.iter().sum();
-                let total_d: f64 = self.share_prefill.len() as f64 - total_p;
+                // without at least half a device of either role (counted
+                // over the ACTIVE fleet)
+                let total_p: f64 = (0..self.devices.len())
+                    .filter(|&i| self.devices[i].is_active())
+                    .map(|i| self.share_prefill[i])
+                    .sum();
+                let total_d: f64 = self.active_count() as f64 - total_p;
                 if to_prefill {
                     let d_after = total_d - delta_share.min(1.0 - self.share_prefill[to]);
                     if d_after < 0.5 {
@@ -833,13 +1052,19 @@ impl BanaEngine {
                 };
                 self.stats.layer_migrations += 1;
                 self.stats.migration_seconds += t_mig;
-                q.push_after(t_mig, Timer::with(tags::MIG_DONE, to as u64, 0));
+                q.push_after(
+                    t_mig,
+                    FleetEvent::MigrationDone { device: to, kind: 0 }.timer(),
+                );
                 self.cooldown_until = now + 3.0 * self.bana.control_period;
                 self.hysteresis_latched = true;
                 true
             }
             migration::Action::Attention { from, to, kv_frac } => {
-                if from == to || self.share_prefill[to] >= 1.0 {
+                if from == to
+                    || self.share_prefill[to] >= 1.0
+                    || !self.devices[to].is_active()
+                {
                     return false;
                 }
                 // move ~kv_frac of `from`'s decode KV: relocate whole
@@ -852,10 +1077,7 @@ impl BanaEngine {
                     if moved >= budget {
                         break;
                     }
-                    let kv = {
-                        let s = self.seqs[sid as usize].as_ref().unwrap();
-                        s.kv_on_device
-                    };
+                    let kv = self.seqs.seq(sid).kv_on_device;
                     if !self.devices[to].can_fit_kv(kv) {
                         continue;
                     }
@@ -869,7 +1091,7 @@ impl BanaEngine {
                     self.devices[from].free_kv(now, kv);
                     self.devices[to].alloc_kv(now, kv);
                     {
-                        let s = self.seqs[sid as usize].as_mut().unwrap();
+                        let s = self.seqs.seq_mut(sid);
                         s.instance = to;
                     }
                     self.dinsts[to].running.push(sid);
@@ -889,7 +1111,10 @@ impl BanaEngine {
                 self.dinsts[to].decode_overhead = 2.0 * self.link.latency;
                 self.stats.attention_migrations += 1;
                 self.stats.migration_seconds += t_mig;
-                q.push_after(t_mig, Timer::with(tags::MIG_DONE, to as u64, 1));
+                q.push_after(
+                    t_mig,
+                    FleetEvent::MigrationDone { device: to, kind: 1 }.timer(),
+                );
                 self.cooldown_until = now + 3.0 * self.bana.control_period;
                 self.hysteresis_latched = true;
                 true
@@ -920,7 +1145,7 @@ impl BanaEngine {
             let now = q.now();
             for sid in stranded {
                 let target = self.route_prefill(now).unwrap_or(dev);
-                self.seqs[sid as usize].as_mut().unwrap().instance = target;
+                self.seqs.seq_mut(sid).instance = target;
                 self.pinsts[target].waiting.push_back(sid);
             }
         }
@@ -941,15 +1166,11 @@ impl BanaEngine {
 
 impl Engine for BanaEngine {
     fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
-        if !common::request_fits(self.spec, &self.devices[0].spec, &req) {
-            log::debug!("dropping request {} (ctx {} + out {} exceeds device KV)",
-                req.id, req.prompt_len, req.output_len);
-            self.col.dropped += 1;
+        if !fleet::admit_or_drop(self.spec, &self.devices[0].spec, &req, &mut self.col) {
             let _ = q;
             return;
         }
         let now = q.now();
-        let sid = self.seqs.len() as u64;
         let mut seq = Seq::new(req);
         if self.use_store {
             // estimate the per-layer forward time for the pipeline check
@@ -974,36 +1195,51 @@ impl Engine for BanaEngine {
         let target = self.route_prefill_mut(now).unwrap_or(0);
         seq.instance = target;
         self.routed_counts[target] += 1;
-        self.seqs.push(Some(seq));
+        let sid = self.seqs.insert(seq);
         self.inflight += 1;
         self.pinsts[target].waiting.push_back(sid);
-        // bootstrap the control loop on first arrival
+        // bootstrap the control loop on first arrival; an elastic fleet
+        // also RE-starts it after idle gaps (the cycle stops at inflight 0,
+        // and autoscaling must keep evaluating across bursts)
         if self.stats.control_cycles == 0 && self.last_cycle_at == 0.0 {
             self.last_cycle_at = now;
-            q.push_after(self.bana.control_period, Timer::new(tags::CONTROL));
+            self.control_scheduled = true;
+            if self.autoscaler.enabled() && self.fleet_size.is_empty() {
+                self.fleet_size.push(now, self.active_count() as f64);
+            }
+            q.push_after(self.bana.control_period, FleetEvent::Control.timer());
             self.stats.control_cycles = 0;
+        } else if self.autoscaler.enabled() && !self.control_scheduled {
+            self.last_cycle_at = now;
+            for i in 0..self.devices.len() {
+                self.last_busy[i] = (self.pinsts[i].busy_wall, self.dinsts[i].busy_wall);
+            }
+            self.control_scheduled = true;
+            q.push_after(self.bana.control_period, FleetEvent::Control.timer());
         }
         self.maybe_start_prefill(target, q);
     }
 
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
-        match t.tag {
-            tags::STEP_DONE => {
-                let dev = (t.a / 2) as usize;
-                if t.a % 2 == 0 {
+        match FleetEvent::decode(t) {
+            Some(FleetEvent::StepDone { worker }) => {
+                let dev = worker / 2;
+                if worker % 2 == 0 {
                     self.prefill_done(dev, q);
                 } else {
                     self.decode_done(dev, q);
                 }
             }
-            tags::KV_ARRIVE => {
-                if let Some(seq) = self.seqs[t.b as usize].as_mut() {
+            Some(FleetEvent::KvArrive { seq: sid, .. }) => {
+                if let Some(seq) = self.seqs.get_mut(sid) {
                     seq.staged = true;
                 }
                 self.try_admit_global(q);
             }
-            tags::CONTROL => self.control_cycle(q),
-            tags::MIG_DONE => self.migration_done(t.a as usize, t.b, q),
+            Some(FleetEvent::Control) => self.control_cycle(q),
+            Some(FleetEvent::MigrationDone { device, kind }) => {
+                self.migration_done(device, kind, q)
+            }
             _ => unreachable!("banaserve got unknown timer {t:?}"),
         }
     }

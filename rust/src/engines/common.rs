@@ -15,7 +15,10 @@ use crate::model::ModelSpec;
 use crate::workload::Request;
 use std::collections::VecDeque;
 
-/// Timer tags (Timer.tag values) used by all engines.
+/// Timer tags (Timer.tag values) used by all engines. Engines no longer
+/// match on these directly — [`super::fleet::FleetEvent`] is the typed
+/// encode/decode layer over them; the raw constants remain the stable wire
+/// format inside [`crate::sim::Timer`].
 pub mod tags {
     /// A compute step finished on instance `a`.
     pub const STEP_DONE: u64 = 1;
@@ -25,6 +28,8 @@ pub mod tags {
     pub const CONTROL: u64 = 3;
     /// Module migration to instance `a` completed.
     pub const MIG_DONE: u64 = 4;
+    /// Elastic-fleet autoscale evaluation tick.
+    pub const AUTOSCALE: u64 = 5;
 }
 
 /// KV page size in tokens used by all simulated paged engines.

@@ -4,11 +4,20 @@
 //! continuous-batch decoding. No prefix caching, no migration, no shared
 //! store — exactly the architecture whose utilization asymmetry Fig 2b
 //! measures and whose rigidity BanaServe attacks.
+//!
+//! With `ExperimentConfig::autoscale` enabled the pools become *elastic*:
+//! a periodic autoscale tick feeds windowed per-device busy fractions to
+//! the shared [`fleet::Autoscaler`]; scale-out appends a device to
+//! whichever role pool is hotter (after a weight spin-up freeze), scale-in
+//! drains the least-loaded device (no new admissions, residents finish,
+//! then the device is released). Device ids stay stable throughout —
+//! timers carry device ids, and `slot_of_dev` maps them to pool slots.
 
-use super::common::{self, tags, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
-use crate::cluster::{Cluster, Device, Link};
+use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use super::fleet::{self, FleetEvent, Router};
+use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
 use crate::config::ExperimentConfig;
-use crate::metrics::Collector;
+use crate::metrics::{Collector, TimeSeries};
 use crate::perfmodel::{self, Efficiency};
 use crate::model::ModelSpec;
 use crate::sim::{Engine, EventQueue, Timer};
@@ -29,12 +38,24 @@ pub struct DistServeEngine {
     /// KV blobs that arrived at a decode instance that could not admit them
     /// yet (memory pressure) — the inter-phase "migration stall".
     admit_queue: Vec<VecDeque<u64>>,
-    seqs: Vec<Option<Seq>>,
+    seqs: fleet::SeqTable,
     col: Collector,
     inflight: u64,
     pub kv_transfer_bytes: u64,
     pub preemptions: u64,
-    rr_prefill: usize,
+    /// Device spec new (scaled-out) devices are built from.
+    gpu: GpuSpec,
+    /// Device id -> slot within its role pool (pools only ever append).
+    slot_of_dev: Vec<usize>,
+    autoscaler: fleet::Autoscaler,
+    /// Per-device busy_wall snapshot at the last autoscale window edge.
+    as_last_busy: Vec<f64>,
+    as_last_eval: f64,
+    autoscale_ticking: bool,
+    pub fleet_size: TimeSeries,
+    pub fleet_util: TimeSeries,
+    pub scale_outs: u64,
+    pub drains: u64,
 }
 
 impl DistServeEngine {
@@ -52,6 +73,9 @@ impl DistServeEngine {
             .collect();
         let mut col = Collector::new();
         col.window_start = cfg.warmup;
+        let mut slot_of_dev: Vec<usize> = (0..cfg.n_prefill).collect();
+        slot_of_dev.extend(0..nd);
+        let n = cfg.n_devices;
         DistServeEngine {
             spec: cfg.model,
             eff: cfg.eff,
@@ -64,34 +88,95 @@ impl DistServeEngine {
             prefill,
             decode,
             admit_queue: (0..nd).map(|_| VecDeque::new()).collect(),
-            seqs: Vec::new(),
+            seqs: fleet::SeqTable::new(),
             col,
             inflight: 0,
             kv_transfer_bytes: 0,
             preemptions: 0,
-            rr_prefill: 0,
+            gpu: cfg.gpu.clone(),
+            slot_of_dev,
+            autoscaler: fleet::Autoscaler::new(cfg.autoscale),
+            as_last_busy: vec![0.0; n],
+            as_last_eval: 0.0,
+            autoscale_ticking: false,
+            fleet_size: TimeSeries::new(),
+            fleet_util: TimeSeries::new(),
+            scale_outs: 0,
+            drains: 0,
         }
     }
 
-    /// Prefill router: least (queue, load) — DistServe's simple dispatch.
-    fn route_prefill(&mut self) -> usize {
-        (0..self.prefill.len())
-            .min_by_key(|&i| (self.prefill[i].queue_len(), self.prefill[i].load_seqs(), i))
-            .unwrap_or_else(|| {
-                let i = self.rr_prefill % self.prefill.len();
-                self.rr_prefill += 1;
-                i
+    /// Prefill router: least (queue, load) over ACTIVE, unfrozen prefill
+    /// devices — DistServe's simple dispatch, behind the fleet `LeastQueue`
+    /// policy. A spinning-up (frozen) instance is skipped while warm peers
+    /// exist; it becomes routable once its weights land. Static fleets
+    /// never freeze, so the filter is a no-op there.
+    fn route_prefill(&self, now: f64) -> usize {
+        let snapshot = |i: usize| {
+            let mut l = fleet::InstanceLoad::at(i);
+            l.queue_len = self.prefill[i].queue_len();
+            l.load_seqs = self.prefill[i].load_seqs();
+            l
+        };
+        let mut loads: Vec<fleet::InstanceLoad> = (0..self.prefill.len())
+            .filter(|&i| {
+                self.devices[self.prefill[i].device].is_active()
+                    && now >= self.prefill[i].frozen_until
             })
+            .map(snapshot)
+            .collect();
+        if loads.is_empty() {
+            // every active device still spinning up: queue at one anyway
+            loads = (0..self.prefill.len())
+                .filter(|&i| self.devices[self.prefill[i].device].is_active())
+                .map(snapshot)
+                .collect();
+        }
+        match fleet::LeastQueue.pick(&loads) {
+            Some(pos) => loads[pos].idx,
+            // unreachable while drain guards keep one active prefill device
+            None => 0,
+        }
     }
 
-    /// Decode placement: most free KV memory.
-    fn route_decode(&self) -> usize {
-        (0..self.decode.len())
-            .max_by_key(|&i| {
-                let d = &self.devices[self.decode[i].device];
-                (d.mem_free(), std::cmp::Reverse(self.decode[i].running.len()))
+    /// Decode placement: most free KV memory over ACTIVE, unfrozen decode
+    /// devices (same spin-up rule as `route_prefill`).
+    fn route_decode(&self, now: f64) -> usize {
+        let snapshot = |i: usize| {
+            let mut l = fleet::InstanceLoad::at(i);
+            l.mem_free = self.devices[self.decode[i].device].mem_free();
+            l.running = self.decode[i].running.len();
+            l
+        };
+        let mut loads: Vec<fleet::InstanceLoad> = (0..self.decode.len())
+            .filter(|&i| {
+                self.devices[self.decode[i].device].is_active()
+                    && now >= self.decode[i].frozen_until
             })
-            .unwrap()
+            .map(snapshot)
+            .collect();
+        if loads.is_empty() {
+            loads = (0..self.decode.len())
+                .filter(|&i| self.devices[self.decode[i].device].is_active())
+                .map(snapshot)
+                .collect();
+        }
+        match fleet::MostFreeMem.pick(&loads) {
+            Some(pos) => loads[pos].idx,
+            None => 0,
+        }
+    }
+
+    fn active_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.is_active()).count()
+    }
+
+    fn busy_wall_of_dev(&self, d: usize) -> f64 {
+        let slot = self.slot_of_dev[d];
+        match self.devices[d].role {
+            Role::Prefill => self.prefill[slot].busy_wall,
+            _ => self.decode[slot].busy_wall,
+        }
     }
 
     fn maybe_start_prefill(&mut self, i: usize, q: &mut EventQueue) {
@@ -102,7 +187,7 @@ impl DistServeEngine {
         let dev_idx = self.prefill[i].device;
         let (ids, items) = common::plan_prefill(
             &mut self.prefill[i],
-            &self.seqs,
+            self.seqs.slots(),
             &self.devices[dev_idx],
             self.spec,
             &self.limits,
@@ -111,7 +196,7 @@ impl DistServeEngine {
             return;
         }
         for &sid in &ids {
-            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            let seq = self.seqs.seq_mut(sid);
             seq.phase = SeqPhase::Prefilling;
             if seq.prefill_start < 0.0 {
                 seq.prefill_start = now;
@@ -134,7 +219,7 @@ impl DistServeEngine {
             st,
             overhead: 0.0,
         });
-        q.push_after(st.time, Timer::with(tags::STEP_DONE, i as u64, 0));
+        q.push_after(st.time, FleetEvent::StepDone { worker: dev_idx }.timer());
     }
 
     fn maybe_start_decode(&mut self, di: usize, q: &mut EventQueue) {
@@ -151,7 +236,7 @@ impl DistServeEngine {
             let dev = &self.devices[self.decode[di].device];
             let mut need = 0u64;
             for &sid in &self.decode[di].running {
-                let s = self.seqs[sid as usize].as_ref().unwrap();
+                let s = self.seqs.seq(sid);
                 need += common::kv_bytes(self.spec, s.ctx + 1) - s.kv_on_device;
             }
             if need <= dev.mem_free() {
@@ -165,7 +250,7 @@ impl DistServeEngine {
         }
         let (ids, st) = common::plan_decode(
             &self.decode[di],
-            &self.seqs,
+            self.seqs.slots(),
             self.spec,
             &self.devices[self.decode[di].device].spec,
             &self.eff,
@@ -182,7 +267,10 @@ impl DistServeEngine {
         });
         q.push_after(
             st.time + overhead,
-            Timer::with(tags::STEP_DONE, (self.prefill.len() + di) as u64, 0),
+            FleetEvent::StepDone {
+                worker: self.decode[di].device,
+            }
+            .timer(),
         );
     }
 
@@ -192,7 +280,7 @@ impl DistServeEngine {
         while let Some(&sid) = self.admit_queue[di].front() {
             let dev_idx = self.decode[di].device;
             let (kv, src_dev) = {
-                let s = self.seqs[sid as usize].as_ref().unwrap();
+                let s = self.seqs.seq(sid);
                 (common::kv_bytes(self.spec, s.ctx), s.instance)
             };
             if !self.devices[dev_idx].can_fit_kv(kv) {
@@ -201,7 +289,7 @@ impl DistServeEngine {
             self.admit_queue[di].pop_front();
             // KV leaves the prefill device only on successful admission —
             // until then it blocks prefill memory (the paper's stall).
-            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            let seq = self.seqs.seq_mut(sid);
             let old_kv = seq.kv_on_device;
             self.devices[src_dev].free_kv(now, old_kv);
             self.devices[dev_idx].alloc_kv(now, kv);
@@ -210,8 +298,8 @@ impl DistServeEngine {
             seq.phase = SeqPhase::Decoding;
             self.decode[di].running.push(sid);
             // the freed prefill memory may unblock that queue
-            if src_dev < self.prefill.len() {
-                self.maybe_start_prefill(src_dev, q);
+            if self.devices[src_dev].role == Role::Prefill {
+                self.maybe_start_prefill(self.slot_of_dev[src_dev], q);
             }
         }
     }
@@ -221,7 +309,7 @@ impl DistServeEngine {
         self.decode[di].running.remove(pos);
         let dev_idx = self.decode[di].device;
         {
-            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            let seq = self.seqs.seq_mut(sid);
             self.devices[dev_idx].free_kv(q.now(), seq.kv_on_device);
             seq.kv_on_device = 0;
             seq.ctx = 0;
@@ -231,14 +319,14 @@ impl DistServeEngine {
             seq.preemptions += 1;
         }
         self.preemptions += 1;
-        let pi = self.route_prefill();
-        self.seqs[sid as usize].as_mut().unwrap().instance = self.prefill[pi].device;
+        let pi = self.route_prefill(q.now());
+        self.seqs.seq_mut(sid).instance = self.prefill[pi].device;
         self.prefill[pi].waiting.push_front(sid);
         self.maybe_start_prefill(pi, q);
     }
 
     fn finish(&mut self, sid: u64, pool_dev: usize, now: f64) {
-        let seq = self.seqs[sid as usize].as_mut().unwrap();
+        let seq = self.seqs.seq_mut(sid);
         seq.phase = SeqPhase::Finished;
         let rec = seq.record(now);
         let kv = seq.kv_on_device;
@@ -246,7 +334,7 @@ impl DistServeEngine {
         self.devices[pool_dev].free_kv(now, kv);
         self.col.finish(rec);
         self.inflight -= 1;
-        self.seqs[sid as usize] = None;
+        self.seqs.remove(sid);
     }
 
     fn prefill_done(&mut self, i: usize, q: &mut EventQueue) {
@@ -262,7 +350,7 @@ impl DistServeEngine {
         );
         for sid in step.seqs {
             let done = {
-                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                let seq = self.seqs.seq_mut(sid);
                 seq.ctx = seq.req.prompt_len + 1;
                 seq.generated = 1;
                 seq.first_token = now;
@@ -274,15 +362,15 @@ impl DistServeEngine {
                 continue;
             }
             // push KV to a decode instance
-            let di = self.route_decode();
+            let di = self.route_decode(now);
             let kv = {
-                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                let seq = self.seqs.seq_mut(sid);
                 seq.phase = SeqPhase::Transferring;
                 common::kv_bytes(self.spec, seq.ctx)
             };
             self.kv_transfer_bytes += kv;
             let t = self.link.transfer_time(kv);
-            q.push_after(t, Timer::with(tags::KV_ARRIVE, di as u64, sid));
+            q.push_after(t, FleetEvent::KvArrive { worker: di, seq: sid }.timer());
         }
         self.maybe_start_prefill(i, q);
     }
@@ -300,7 +388,7 @@ impl DistServeEngine {
         );
         let mut finished = Vec::new();
         for &sid in &step.seqs {
-            let Some(seq) = self.seqs[sid as usize].as_mut() else {
+            let Some(seq) = self.seqs.get_mut(sid) else {
                 continue;
             };
             if seq.phase != SeqPhase::Decoding {
@@ -327,6 +415,195 @@ impl DistServeEngine {
         self.maybe_start_decode(di, q);
     }
 
+    // --- elastic fleet -----------------------------------------------------
+
+    fn windowed_busy(&self, d: usize, period: f64) -> f64 {
+        ((self.busy_wall_of_dev(d) - self.as_last_busy[d]) / period).min(1.0)
+    }
+
+    /// May `d` be drained? Only if its role pool keeps another active device.
+    fn drainable(&self, d: usize) -> bool {
+        if !self.devices[d].is_active() {
+            return false;
+        }
+        let role = self.devices[d].role;
+        self.devices
+            .iter()
+            .filter(|x| x.is_active() && x.role == role)
+            .count()
+            > 1
+    }
+
+    /// Periodic autoscale evaluation (AUTOSCALE timer).
+    fn autoscale_tick(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        let period = (now - self.as_last_eval).max(1e-9);
+        self.finish_drains(now);
+        let active: Vec<fleet::FleetLoad> = (0..self.devices.len())
+            .filter(|&d| self.devices[d].is_active())
+            .map(|d| {
+                let slot = self.slot_of_dev[d];
+                let batch_cap = self.limits.max_batch_seqs as usize;
+                let (queued, resident) = match self.devices[d].role {
+                    Role::Prefill => (
+                        self.prefill[slot].queue_len(),
+                        self.prefill[slot].load_seqs(),
+                    ),
+                    _ => (
+                        // decode backlog = stalled KV blobs + running set
+                        // beyond one batch (compute queueing shows up there)
+                        self.admit_queue[slot].len()
+                            + self.decode[slot]
+                                .running
+                                .len()
+                                .saturating_sub(batch_cap),
+                        self.decode[slot].running.len() + self.admit_queue[slot].len(),
+                    ),
+                };
+                fleet::FleetLoad {
+                    idx: d,
+                    busy: self.windowed_busy(d, period),
+                    queued,
+                    resident,
+                    drainable: self.drainable(d),
+                }
+            })
+            .collect();
+        if !active.is_empty() {
+            let mean = active.iter().map(|l| l.busy).sum::<f64>() / active.len() as f64;
+            self.fleet_util.push(now, mean);
+        }
+        match self.autoscaler.decide(now, &active, 0) {
+            fleet::ScaleDecision::Out => self.scale_out(q),
+            fleet::ScaleDecision::In { victim } => self.begin_drain(victim, q),
+            fleet::ScaleDecision::Hold => {}
+        }
+        // window edge: snapshot busy counters (new devices included)
+        self.as_last_eval = now;
+        for d in 0..self.devices.len() {
+            self.as_last_busy[d] = self.busy_wall_of_dev(d);
+        }
+        // wake sweep: spin-up freezes and drains leave no step-completion
+        // event to re-trigger idle instances, so the tick is the safety net
+        for pi in 0..self.prefill.len() {
+            self.maybe_start_prefill(pi, q);
+        }
+        for di in 0..self.decode.len() {
+            self.try_admit(di, q);
+            self.maybe_start_decode(di, q);
+        }
+        if self.inflight > 0 {
+            q.push_after(self.autoscaler.cfg.window, FleetEvent::Autoscale.timer());
+        } else {
+            self.autoscale_ticking = false;
+        }
+    }
+
+    /// Add one device to the hotter role pool, frozen until its weights land.
+    fn scale_out(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        let period = (now - self.as_last_eval).max(1e-9);
+        let mean_busy = |devs: &DistServeEngine, role: Role| {
+            let ids: Vec<usize> = devs
+                .devices
+                .iter()
+                .filter(|d| d.is_active() && d.role == role)
+                .map(|d| d.id)
+                .collect();
+            if ids.is_empty() {
+                0.0
+            } else {
+                ids.iter().map(|&d| devs.windowed_busy(d, period)).sum::<f64>()
+                    / ids.len() as f64
+            }
+        };
+        let role = if mean_busy(self, Role::Prefill) >= mean_busy(self, Role::Decode) {
+            Role::Prefill
+        } else {
+            Role::Decode
+        };
+        let id = self.devices.len();
+        let mut dev = Device::new(id, self.gpu.clone(), role);
+        dev.weight_bytes = self.spec.weight_bytes();
+        dev.touch_mem(now);
+        self.devices.push(dev);
+        self.as_last_busy.push(0.0);
+        // spin-up: the new replica serves only after its weights transfer
+        let t_up = self.link.transfer_time(self.spec.weight_bytes());
+        let mut inst = InstanceSim::new(id, 1.0);
+        inst.frozen_until = now + t_up;
+        match role {
+            Role::Prefill => {
+                self.slot_of_dev.push(self.prefill.len());
+                self.prefill.push(inst);
+            }
+            _ => {
+                self.slot_of_dev.push(self.decode.len());
+                self.decode.push(inst);
+                self.admit_queue.push(VecDeque::new());
+            }
+        }
+        self.scale_outs += 1;
+        self.fleet_size.push(now, self.active_count() as f64);
+        log::debug!("distserve scale-out: device {id} joins as {role:?} at t={now:.2}");
+    }
+
+    /// Stop admitting at `d`, redistribute queued work, let residents finish.
+    fn begin_drain(&mut self, d: usize, q: &mut EventQueue) {
+        let now = q.now();
+        self.devices[d].state = DeviceState::Draining;
+        self.drains += 1;
+        let slot = self.slot_of_dev[d];
+        match self.devices[d].role {
+            Role::Prefill => {
+                let stranded: Vec<u64> = self.prefill[slot].waiting.drain(..).collect();
+                for sid in stranded {
+                    let pi = self.route_prefill(now);
+                    self.seqs.seq_mut(sid).instance = self.prefill[pi].device;
+                    self.prefill[pi].waiting.push_back(sid);
+                    self.maybe_start_prefill(pi, q);
+                }
+            }
+            _ => {
+                let stranded: Vec<u64> = self.admit_queue[slot].drain(..).collect();
+                for sid in stranded {
+                    let di = self.route_decode(now);
+                    self.admit_queue[di].push_back(sid);
+                    self.try_admit(di, q);
+                    self.maybe_start_decode(di, q);
+                }
+            }
+        }
+        self.fleet_size.push(now, self.active_count() as f64);
+        log::debug!("distserve drain: device {d} begins draining at t={now:.2}");
+    }
+
+    /// Release drained devices whose residents are all gone.
+    fn finish_drains(&mut self, now: f64) {
+        for d in 0..self.devices.len() {
+            if self.devices[d].state != DeviceState::Draining {
+                continue;
+            }
+            let slot = self.slot_of_dev[d];
+            let clear = match self.devices[d].role {
+                Role::Prefill => {
+                    self.prefill[slot].waiting.is_empty()
+                        && self.prefill[slot].step.is_none()
+                }
+                _ => {
+                    self.decode[slot].running.is_empty()
+                        && self.decode[slot].step.is_none()
+                        && self.admit_queue[slot].is_empty()
+                }
+            };
+            if clear && self.devices[d].kv_bytes == 0 {
+                self.devices[d].state = DeviceState::Released;
+                self.fleet_size.push(now, self.active_count() as f64);
+                log::debug!("distserve release: device {d} released at t={now:.2}");
+            }
+        }
+    }
+
     pub fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
         self.devices
             .iter()
@@ -351,39 +628,54 @@ impl DistServeEngine {
 
 impl Engine for DistServeEngine {
     fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
-        if !common::request_fits(self.spec, &self.devices[0].spec, &req) {
-            log::debug!("dropping request {} (ctx {} + out {} exceeds device KV)",
-                req.id, req.prompt_len, req.output_len);
-            self.col.dropped += 1;
+        if !fleet::admit_or_drop(self.spec, &self.devices[0].spec, &req, &mut self.col) {
             let _ = q;
             return;
         }
-        let pi = self.route_prefill();
-        let sid = self.seqs.len() as u64;
+        let pi = self.route_prefill(q.now());
         let mut seq = Seq::new(req);
         seq.instance = self.prefill[pi].device;
-        self.seqs.push(Some(seq));
+        let sid = self.seqs.insert(seq);
         self.inflight += 1;
         self.prefill[pi].waiting.push_back(sid);
+        // bootstrap the autoscale loop on (re-)arrival of work
+        if self.autoscaler.enabled() && !self.autoscale_ticking {
+            self.autoscale_ticking = true;
+            let now = q.now();
+            self.as_last_eval = now;
+            for d in 0..self.devices.len() {
+                self.as_last_busy[d] = self.busy_wall_of_dev(d);
+            }
+            if self.fleet_size.is_empty() {
+                self.fleet_size.push(now, self.active_count() as f64);
+            }
+            q.push_after(self.autoscaler.cfg.window, FleetEvent::Autoscale.timer());
+        }
         self.maybe_start_prefill(pi, q);
     }
 
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
-        match t.tag {
-            tags::STEP_DONE => {
-                let idx = t.a as usize;
-                if idx < self.prefill.len() {
-                    self.prefill_done(idx, q);
-                } else {
-                    self.decode_done(idx - self.prefill.len(), q);
+        match FleetEvent::decode(t) {
+            Some(FleetEvent::StepDone { worker }) => {
+                let slot = self.slot_of_dev[worker];
+                match self.devices[worker].role {
+                    Role::Prefill => self.prefill_done(slot, q),
+                    _ => self.decode_done(slot, q),
                 }
             }
-            tags::KV_ARRIVE => {
-                let di = t.a as usize;
-                self.admit_queue[di].push_back(t.b);
+            Some(FleetEvent::KvArrive { worker, seq }) => {
+                // a transfer targeted while the device was active may land
+                // after it started draining — re-route to an active pool
+                let di = if self.devices[self.decode[worker].device].is_active() {
+                    worker
+                } else {
+                    self.route_decode(q.now())
+                };
+                self.admit_queue[di].push_back(seq);
                 self.try_admit(di, q);
                 self.maybe_start_decode(di, q);
             }
+            Some(FleetEvent::Autoscale) => self.autoscale_tick(q),
             _ => unreachable!("distserve got unknown timer {t:?}"),
         }
     }

@@ -1,0 +1,724 @@
+//! The shared fleet/dispatch layer carved out of the four engines.
+//!
+//! Every engine used to re-implement the same four pieces privately; they
+//! now live here, behind one interface each:
+//!
+//! * [`SeqTable`] — the sequence table (`Vec<Option<Seq>>` + id
+//!   allocation). Ids are assigned in admission order and never reused;
+//!   a finished sequence's slot is emptied but keeps its index so in-flight
+//!   timers referencing the id stay valid.
+//! * [`Router`] — the pluggable routing interface over per-instance
+//!   [`InstanceLoad`] snapshots, unifying vLLM's `RouterPolicy` scoring,
+//!   BanaServe's Alg 2 `pick`/`pick_rotating`, and DistServe's pool picks.
+//!   Each implementation preserves the exact comparison and tie-break
+//!   order of the engine it was extracted from.
+//! * [`FleetEvent`] — the typed timer-dispatch table replacing the
+//!   hand-rolled `match t.tag` blocks. Encoding is lossless over
+//!   [`crate::sim::Timer`]'s `(tag, a, b)` wire format, so refactored
+//!   engines replay identical event streams.
+//! * [`admit_or_drop`] — FCFS admission control (`request_fits`
+//!   rejection + drop accounting), previously copy-pasted four times.
+//!
+//! On top of the shared layer sits the **elastic fleet**: a windowed-load
+//! [`Autoscaler`] that turns per-device [`FleetLoad`] snapshots into
+//! [`ScaleDecision`]s (scale-out / drain-one / hold) under min/max fleet
+//! bounds and a cooldown. The engines own execution: adding worker state
+//! for a new device, or draining and releasing a victim.
+
+use super::common::{self, tags, Seq};
+use crate::cluster::GpuSpec;
+use crate::config::AutoscaleConfig;
+use crate::metrics::Collector;
+use crate::model::ModelSpec;
+use crate::sim::Timer;
+use crate::workload::Request;
+
+// ---------------------------------------------------------------------------
+// Sequence table
+// ---------------------------------------------------------------------------
+
+/// The fleet-wide sequence table. Owns every admitted [`Seq`]; engines
+/// refer to sequences by the `u64` id this table allocates.
+#[derive(Debug, Default)]
+pub struct SeqTable {
+    slots: Vec<Option<Seq>>,
+}
+
+impl SeqTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a sequence; returns its id (= slot index, allocation order).
+    pub fn insert(&mut self, seq: Seq) -> u64 {
+        let sid = self.slots.len() as u64;
+        self.slots.push(Some(seq));
+        sid
+    }
+
+    /// Total slots ever allocated (live + finished).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn get(&self, sid: u64) -> Option<&Seq> {
+        self.slots.get(sid as usize).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, sid: u64) -> Option<&mut Seq> {
+        self.slots.get_mut(sid as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Borrow a live sequence; panics if the id was never allocated or the
+    /// sequence already finished (engine logic error).
+    pub fn seq(&self, sid: u64) -> &Seq {
+        self.slots[sid as usize].as_ref().expect("live seq")
+    }
+
+    pub fn seq_mut(&mut self, sid: u64) -> &mut Seq {
+        self.slots[sid as usize].as_mut().expect("live seq")
+    }
+
+    /// Drop a finished sequence's payload; the slot index stays allocated.
+    pub fn remove(&mut self, sid: u64) -> Option<Seq> {
+        self.slots[sid as usize].take()
+    }
+
+    /// The raw slot view `plan_prefill`/`plan_decode` consume.
+    pub fn slots(&self) -> &[Option<Seq>] {
+        &self.slots
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission
+// ---------------------------------------------------------------------------
+
+/// FCFS admission control shared by all engines: a request whose prompt +
+/// full output can never fit one device's post-weight HBM is dropped (and
+/// counted) instead of deadlocking the head of the queue.
+///
+/// Returns true when the request may be admitted.
+pub fn admit_or_drop(
+    spec: &ModelSpec,
+    gpu: &GpuSpec,
+    req: &Request,
+    col: &mut Collector,
+) -> bool {
+    if common::request_fits(spec, gpu, req) {
+        return true;
+    }
+    log::debug!(
+        "dropping request {} (ctx {} + out {} exceeds device KV)",
+        req.id,
+        req.prompt_len,
+        req.output_len
+    );
+    col.dropped += 1;
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------------
+
+/// Snapshot of one routable instance, superset of what every router needs.
+/// Engines fill the fields their policy consumes and zero the rest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceLoad {
+    /// Engine-level instance/device index (what a pick maps back to).
+    pub idx: usize,
+    /// Waiting + running sequences.
+    pub load_seqs: usize,
+    /// Waiting-queue depth.
+    pub queue_len: usize,
+    /// Running-set size (decode placement).
+    pub running: usize,
+    /// Normalized utilization U ∈ [0, 2] (BanaServe Eq 37).
+    pub u: f64,
+    /// Fraction of the request's cacheable prefix resident at this
+    /// instance's prefix cache (vLLM cache-aware scoring).
+    pub cache_hit: f64,
+    /// Free HBM bytes (DistServe decode placement).
+    pub mem_free: u64,
+}
+
+impl InstanceLoad {
+    /// A zeroed snapshot for `idx` — callers overwrite what they use.
+    pub fn at(idx: usize) -> Self {
+        InstanceLoad {
+            idx,
+            load_seqs: 0,
+            queue_len: 0,
+            running: 0,
+            u: 0.0,
+            cache_hit: 0.0,
+            mem_free: 0,
+        }
+    }
+}
+
+/// A routing policy. `pick` returns the POSITION within `loads` of the
+/// chosen instance (None when `loads` is empty); callers map back through
+/// `loads[pos].idx`. Policies may keep state (round-robin cursors).
+pub trait Router {
+    fn pick(&mut self, loads: &[InstanceLoad]) -> Option<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Strict round robin over the snapshot order.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    /// Allocation-free fast path: round robin needs only the instance
+    /// count, so per-arrival hot paths skip building snapshots entirely.
+    pub fn pick_n(&mut self, n: usize) -> Option<usize> {
+        if n == 0 {
+            return None;
+        }
+        let i = self.next % n;
+        self.next += 1;
+        Some(i)
+    }
+}
+
+impl Router for RoundRobin {
+    fn pick(&mut self, loads: &[InstanceLoad]) -> Option<usize> {
+        self.pick_n(loads.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Min (load_seqs, queue_len, idx) — vLLM's `LeastLoaded`.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Router for LeastLoaded {
+    fn pick(&mut self, loads: &[InstanceLoad]) -> Option<usize> {
+        loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| (l.load_seqs, l.queue_len, l.idx))
+            .map(|(p, _)| p)
+    }
+
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+}
+
+/// Min (queue_len, load_seqs, idx) — DistServe's prefill dispatch.
+#[derive(Debug, Default)]
+pub struct LeastQueue;
+
+impl Router for LeastQueue {
+    fn pick(&mut self, loads: &[InstanceLoad]) -> Option<usize> {
+        loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| (l.queue_len, l.load_seqs, l.idx))
+            .map(|(p, _)| p)
+    }
+
+    fn name(&self) -> &'static str {
+        "least-queue"
+    }
+}
+
+/// Max (mem_free, fewest running) — DistServe's decode placement.
+#[derive(Debug, Default)]
+pub struct MostFreeMem;
+
+impl Router for MostFreeMem {
+    fn pick(&mut self, loads: &[InstanceLoad]) -> Option<usize> {
+        loads
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, l)| (l.mem_free, std::cmp::Reverse(l.running)))
+            .map(|(p, _)| p)
+    }
+
+    fn name(&self) -> &'static str {
+        "most-free-mem"
+    }
+}
+
+/// vLLM/SGLang's cache-aware scoring: `w_cache·hit − w_load·(load/max)`,
+/// highest score wins — the policy whose positive-feedback skew Fig 2a
+/// demonstrates. Ties resolve to the LAST maximal candidate, exactly as
+/// the original `max_by` loop did.
+#[derive(Debug)]
+pub struct CacheAware {
+    pub w_cache: f64,
+    pub w_load: f64,
+}
+
+impl Router for CacheAware {
+    fn pick(&mut self, loads: &[InstanceLoad]) -> Option<usize> {
+        let max_load = loads
+            .iter()
+            .map(|l| l.load_seqs)
+            .max()
+            .unwrap_or(0)
+            .max(1) as f64;
+        let score = |l: &InstanceLoad| {
+            self.w_cache * l.cache_hit - self.w_load * (l.load_seqs as f64 / max_load)
+        };
+        loads
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| score(a).total_cmp(&score(b)))
+            .map(|(p, _)| p)
+    }
+
+    fn name(&self) -> &'static str {
+        "cache-aware"
+    }
+}
+
+/// BanaServe's Alg 2 load-aware pick with rotating tie-breaks, stateless
+/// form: engines that route from `&self` contexts keep their own rotation
+/// cursor and call this directly; [`LoadAware`] wraps it for the trait.
+///
+/// This is a faithful, allocation-free port of
+/// `banaserve::scheduler::pick_rotating` onto fleet snapshots (the fleet
+/// layer must not depend on an engine module); a parity property test in
+/// `tests/prop_engines.rs` pins the two implementations together.
+pub fn pick_load_aware(loads: &[InstanceLoad], delta_l: f64, rr: usize) -> Option<usize> {
+    if loads.is_empty() {
+        return None;
+    }
+    let least = loads
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            a.u.total_cmp(&b.u)
+                .then(a.queue_len.cmp(&b.queue_len))
+                .then(a.idx.cmp(&b.idx))
+        })
+        .map(|(i, _)| i)
+        .unwrap();
+    if loads[least].u >= delta_l {
+        // overloaded everywhere: lowest queue wins (Alg 2 line 17)
+        return loads
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.queue_len
+                    .cmp(&b.queue_len)
+                    .then(a.u.total_cmp(&b.u))
+                    .then(a.idx.cmp(&b.idx))
+            })
+            .map(|(i, _)| i);
+    }
+    // rotate among near-ties of the minimum without allocating
+    const TIE_EPS: f64 = 0.05;
+    let min_u = loads[least].u;
+    let min_q = loads[least].queue_len;
+    let tied = |l: &InstanceLoad| l.u - min_u < TIE_EPS && l.queue_len == min_q;
+    let n_tied = loads.iter().filter(|l| tied(l)).count();
+    let want = rr % n_tied;
+    loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| tied(l))
+        .nth(want)
+        .map(|(i, _)| i)
+}
+
+/// Trait wrapper over [`pick_load_aware`] (BanaServe Alg 2).
+#[derive(Debug)]
+pub struct LoadAware {
+    pub delta_l: f64,
+    rr: usize,
+}
+
+impl LoadAware {
+    pub fn new(delta_l: f64) -> Self {
+        LoadAware { delta_l, rr: 0 }
+    }
+}
+
+impl Router for LoadAware {
+    fn pick(&mut self, loads: &[InstanceLoad]) -> Option<usize> {
+        let p = pick_load_aware(loads, self.delta_l, self.rr);
+        self.rr = self.rr.wrapping_add(1);
+        p
+    }
+
+    fn name(&self) -> &'static str {
+        "load-aware"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed timer dispatch
+// ---------------------------------------------------------------------------
+
+/// The typed form of every timer the engines schedule. `timer()` encodes
+/// into the sim's `(tag, a, b)` wire format; `decode` inverts it. Worker
+/// indices are engine-defined (e.g. BanaServe packs device·2 + role bit),
+/// but the *kind* dispatch is now typed and shared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEvent {
+    /// A compute step finished on worker `worker`.
+    StepDone { worker: usize },
+    /// Staged/transferred KV of sequence `seq` arrived at worker `worker`.
+    KvArrive { worker: usize, seq: u64 },
+    /// Orchestrator control cycle.
+    Control,
+    /// Migration to device `device` completed (`kind`: 0 layer, 1 attention).
+    MigrationDone { device: usize, kind: u64 },
+    /// Elastic-fleet autoscale evaluation tick.
+    Autoscale,
+}
+
+impl FleetEvent {
+    /// Encode into the raw timer wire format.
+    pub fn timer(self) -> Timer {
+        match self {
+            FleetEvent::StepDone { worker } => {
+                Timer::with(tags::STEP_DONE, worker as u64, 0)
+            }
+            FleetEvent::KvArrive { worker, seq } => {
+                Timer::with(tags::KV_ARRIVE, worker as u64, seq)
+            }
+            FleetEvent::Control => Timer::new(tags::CONTROL),
+            FleetEvent::MigrationDone { device, kind } => {
+                Timer::with(tags::MIG_DONE, device as u64, kind)
+            }
+            FleetEvent::Autoscale => Timer::new(tags::AUTOSCALE),
+        }
+    }
+
+    /// Decode a raw timer; None for unknown tags (engine bug).
+    pub fn decode(t: Timer) -> Option<FleetEvent> {
+        match t.tag {
+            tags::STEP_DONE => Some(FleetEvent::StepDone {
+                worker: t.a as usize,
+            }),
+            tags::KV_ARRIVE => Some(FleetEvent::KvArrive {
+                worker: t.a as usize,
+                seq: t.b,
+            }),
+            tags::CONTROL => Some(FleetEvent::Control),
+            tags::MIG_DONE => Some(FleetEvent::MigrationDone {
+                device: t.a as usize,
+                kind: t.b,
+            }),
+            tags::AUTOSCALE => Some(FleetEvent::Autoscale),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elastic fleet: windowed-load autoscaler
+// ---------------------------------------------------------------------------
+
+/// Windowed load snapshot of one ACTIVE device, fed to the autoscaler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetLoad {
+    pub idx: usize,
+    /// Busy fraction over the evaluation window, in [0, 1].
+    pub busy: f64,
+    /// Requests waiting at this device.
+    pub queued: usize,
+    /// Sequences resident (waiting + running, both roles).
+    pub resident: usize,
+    /// May this device be drained? (role constraints are the engine's call:
+    /// e.g. never the last prefill-capable device, never mid-migration).
+    pub drainable: bool,
+}
+
+/// What the autoscaler wants done this window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Add one device.
+    Out,
+    /// Begin draining `victim`.
+    In { victim: usize },
+    Hold,
+}
+
+/// The windowed-load autoscaling policy: scale out when the fleet's mean
+/// busy fraction exceeds `scale_out_util` (or queueing pressure mounts),
+/// drain the least-loaded drainable device when it falls below
+/// `scale_in_util` with empty queues — all bounded by min/max fleet size
+/// and rate-limited by a cooldown so a single burst edge can't thrash.
+#[derive(Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    cooldown_until: f64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Autoscaler {
+            cfg,
+            cooldown_until: 0.0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// One evaluation over the ACTIVE devices' windowed loads.
+    /// `global_backlog` counts engine-wide queued work not attributable to
+    /// one device (e.g. BanaServe's store-staged sequences awaiting decode
+    /// admission); it joins the per-device `queued` sum for the
+    /// queue-pressure trigger.
+    pub fn decide(
+        &mut self,
+        now: f64,
+        active: &[FleetLoad],
+        global_backlog: usize,
+    ) -> ScaleDecision {
+        if !self.cfg.enabled || active.is_empty() || now < self.cooldown_until {
+            return ScaleDecision::Hold;
+        }
+        let n = active.len();
+        let mean_busy = active.iter().map(|l| l.busy).sum::<f64>() / n as f64;
+        let queued: usize =
+            active.iter().map(|l| l.queued).sum::<usize>() + global_backlog;
+        // scale out on sustained utilization OR acute queue pressure — the
+        // queue trigger is what catches a burst edge before a full window
+        // of saturation accrues (the P99 killer on bursty traces)
+        if n < self.cfg.max_devices
+            && (mean_busy > self.cfg.scale_out_util || queued > 4 * n)
+        {
+            self.cooldown_until = now + self.cfg.cooldown;
+            return ScaleDecision::Out;
+        }
+        if n > self.cfg.min_devices && mean_busy < self.cfg.scale_in_util && queued == 0 {
+            let victim = active
+                .iter()
+                .filter(|l| l.drainable)
+                .min_by(|a, b| {
+                    a.busy
+                        .total_cmp(&b.busy)
+                        .then(a.resident.cmp(&b.resident))
+                        .then(a.idx.cmp(&b.idx))
+                })
+                .map(|l| l.idx);
+            if let Some(victim) = victim {
+                self.cooldown_until = now + self.cfg.cooldown;
+                return ScaleDecision::In { victim };
+            }
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::A100_40G;
+    use crate::model::LLAMA_13B;
+
+    fn mkreq(id: u64, prompt: u64, out: u64) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_len: prompt,
+            output_len: out,
+            cache_tokens: vec![1, 2, 3].into(),
+        }
+    }
+
+    #[test]
+    fn seq_table_allocates_monotonic_ids_and_keeps_slots() {
+        let mut t = SeqTable::new();
+        let a = t.insert(Seq::new(mkreq(0, 8, 2)));
+        let b = t.insert(Seq::new(mkreq(1, 8, 2)));
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(t.len(), 2);
+        assert!(t.get(a).is_some());
+        t.remove(a);
+        assert!(t.get(a).is_none(), "removed payload");
+        assert_eq!(t.len(), 2, "slot index survives removal");
+        let c = t.insert(Seq::new(mkreq(2, 8, 2)));
+        assert_eq!(c, 2, "ids are never reused");
+        t.seq_mut(b).generated = 1;
+        assert_eq!(t.seq(b).generated, 1);
+        assert_eq!(t.slots().len(), 3);
+    }
+
+    #[test]
+    fn admission_drops_oversized_and_counts() {
+        let mut col = Collector::new();
+        let ok = mkreq(0, 100, 10);
+        assert!(admit_or_drop(&LLAMA_13B, &A100_40G, &ok, &mut col));
+        assert_eq!(col.dropped, 0);
+        let huge = mkreq(1, 1_000_000, 512);
+        assert!(!admit_or_drop(&LLAMA_13B, &A100_40G, &huge, &mut col));
+        assert_eq!(col.dropped, 1);
+    }
+
+    #[test]
+    fn fleet_event_roundtrips_over_timer_wire_format() {
+        let evs = [
+            FleetEvent::StepDone { worker: 7 },
+            FleetEvent::KvArrive { worker: 3, seq: 99 },
+            FleetEvent::Control,
+            FleetEvent::MigrationDone { device: 2, kind: 1 },
+            FleetEvent::Autoscale,
+        ];
+        for ev in evs {
+            assert_eq!(FleetEvent::decode(ev.timer()), Some(ev));
+        }
+        assert_eq!(FleetEvent::decode(Timer::new(999)), None);
+    }
+
+    fn il(idx: usize, load: usize, q: usize) -> InstanceLoad {
+        InstanceLoad {
+            load_seqs: load,
+            queue_len: q,
+            ..InstanceLoad::at(idx)
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_and_least_loaded_prefers_min() {
+        let loads = vec![il(0, 5, 0), il(1, 1, 0), il(2, 3, 0)];
+        let mut rr = RoundRobin::default();
+        let picks: Vec<usize> = (0..6).map(|_| rr.pick(&loads).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(LeastLoaded.pick(&loads), Some(1));
+        assert_eq!(RoundRobin::default().pick(&[]), None);
+    }
+
+    #[test]
+    fn least_queue_and_most_free_mem_match_distserve_picks() {
+        let mut a = il(0, 9, 2);
+        let mut b = il(1, 1, 4);
+        a.mem_free = 100;
+        a.running = 3;
+        b.mem_free = 100;
+        b.running = 1;
+        let loads = vec![a, b];
+        // distserve prefill: min (queue, load, idx)
+        assert_eq!(LeastQueue.pick(&loads), Some(0));
+        // distserve decode: max (mem_free, fewest running) -> b
+        assert_eq!(MostFreeMem.pick(&loads), Some(1));
+    }
+
+    #[test]
+    fn cache_aware_prefers_hits_until_load_dominates() {
+        let mut hot = il(0, 8, 0);
+        hot.cache_hit = 0.9;
+        let cold = il(1, 1, 0);
+        let mut r = CacheAware {
+            w_cache: 1.0,
+            w_load: 0.5,
+        };
+        // hit 0.9 - 0.5*1.0 = 0.4 beats 0 - 0.5*(1/8)
+        assert_eq!(r.pick(&[hot, cold]), Some(0));
+        let mut heavy = CacheAware {
+            w_cache: 0.1,
+            w_load: 2.0,
+        };
+        assert_eq!(heavy.pick(&[hot, cold]), Some(1), "load term must win");
+    }
+
+    #[test]
+    fn load_aware_rotates_ties_like_alg2() {
+        let loads: Vec<InstanceLoad> = (0..3)
+            .map(|i| {
+                let mut l = il(i, 0, 0);
+                l.u = 0.3;
+                l
+            })
+            .collect();
+        let mut r = LoadAware::new(1.6);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(&loads).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    fn fl(idx: usize, busy: f64, queued: usize, drainable: bool) -> FleetLoad {
+        FleetLoad {
+            idx,
+            busy,
+            queued,
+            resident: queued,
+            drainable,
+        }
+    }
+
+    #[test]
+    fn autoscaler_scales_out_on_util_and_on_queue_pressure() {
+        let mut cfg = AutoscaleConfig::default();
+        cfg.enabled = true;
+        cfg.min_devices = 1;
+        cfg.max_devices = 4;
+        let mut a = Autoscaler::new(cfg);
+        // utilization trigger
+        assert_eq!(
+            a.decide(0.0, &[fl(0, 0.95, 0, true), fl(1, 0.9, 0, true)], 0),
+            ScaleDecision::Out
+        );
+        // cooldown holds
+        assert_eq!(
+            a.decide(1.0, &[fl(0, 0.95, 0, true), fl(1, 0.9, 0, true)], 0),
+            ScaleDecision::Hold
+        );
+        // queue-pressure trigger after cooldown
+        assert_eq!(
+            a.decide(10.0, &[fl(0, 0.2, 9, true), fl(1, 0.1, 4, true)], 0),
+            ScaleDecision::Out
+        );
+        // engine-wide backlog alone can trigger too
+        assert_eq!(
+            a.decide(20.0, &[fl(0, 0.2, 0, true), fl(1, 0.1, 0, true)], 20),
+            ScaleDecision::Out
+        );
+        // at max: hold
+        let four: Vec<FleetLoad> = (0..4).map(|i| fl(i, 0.99, 9, true)).collect();
+        assert_eq!(a.decide(30.0, &four, 0), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn autoscaler_drains_least_loaded_drainable_above_min() {
+        let mut cfg = AutoscaleConfig::default();
+        cfg.enabled = true;
+        cfg.min_devices = 2;
+        cfg.max_devices = 6;
+        let mut a = Autoscaler::new(cfg);
+        let loads = [fl(0, 0.2, 0, false), fl(1, 0.05, 0, true), fl(2, 0.1, 0, true)];
+        assert_eq!(a.decide(0.0, &loads, 0), ScaleDecision::In { victim: 1 });
+        // at min devices: hold even when idle
+        let mut b = Autoscaler::new(cfg);
+        assert_eq!(
+            b.decide(0.0, &[fl(0, 0.0, 0, true), fl(1, 0.0, 0, true)], 0),
+            ScaleDecision::Hold
+        );
+        // nothing drainable: hold
+        let mut c = Autoscaler::new(cfg);
+        assert_eq!(
+            c.decide(
+                0.0,
+                &[fl(0, 0.0, 0, false), fl(1, 0.0, 0, false), fl(2, 0.0, 0, false)],
+                0
+            ),
+            ScaleDecision::Hold
+        );
+    }
+
+    #[test]
+    fn autoscaler_disabled_always_holds() {
+        let mut a = Autoscaler::new(AutoscaleConfig::default());
+        assert!(!a.enabled());
+        assert_eq!(a.decide(0.0, &[fl(0, 1.0, 50, true)], 0), ScaleDecision::Hold);
+    }
+}

@@ -9,7 +9,8 @@
 //! * **no paging**: KV is reserved up front at padded prompt + max output
 //!   for every slot.
 
-use super::common::{self, tags, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use super::common::{self, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use super::fleet::{self, FleetEvent};
 use crate::cluster::{Cluster, Device, Role};
 use crate::config::ExperimentConfig;
 use crate::metrics::Collector;
@@ -37,10 +38,10 @@ pub struct HftEngine {
     pub devices: Vec<Device>,
     pub insts: Vec<InstanceSim>,
     batches: Vec<Option<StaticBatch>>,
-    seqs: Vec<Option<Seq>>,
+    seqs: fleet::SeqTable,
     col: Collector,
     inflight: u64,
-    rr: usize,
+    router: fleet::RoundRobin,
 }
 
 impl HftEngine {
@@ -60,10 +61,10 @@ impl HftEngine {
             devices,
             insts,
             batches: (0..cfg.n_devices).map(|_| None).collect(),
-            seqs: Vec::new(),
+            seqs: fleet::SeqTable::new(),
             col,
             inflight: 0,
-            rr: 0,
+            router: fleet::RoundRobin::default(),
         }
     }
 
@@ -85,7 +86,7 @@ impl HftEngine {
             if chosen.len() as u64 >= self.max_batch {
                 break;
             }
-            let s = self.seqs[sid as usize].as_ref().unwrap();
+            let s = self.seqs.seq(sid);
             let new_pad = padded_prompt.max(s.req.prompt_len);
             let new_out = max_output.max(s.req.output_len);
             let slot_kv = common::kv_bytes(self.spec, new_pad + new_out);
@@ -114,7 +115,7 @@ impl HftEngine {
             })
             .collect();
         for &sid in &chosen {
-            let seq = self.seqs[sid as usize].as_mut().unwrap();
+            let seq = self.seqs.seq_mut(sid);
             seq.phase = SeqPhase::Prefilling;
             seq.prefill_start = now;
         }
@@ -139,7 +140,7 @@ impl HftEngine {
             st,
             overhead: 0.0,
         });
-        q.push_after(st.time, Timer::with(tags::STEP_DONE, i as u64, 0));
+        q.push_after(st.time, FleetEvent::StepDone { worker: i }.timer());
     }
 
     fn step_done(&mut self, i: usize, q: &mut EventQueue) {
@@ -157,7 +158,7 @@ impl HftEngine {
         match step.kind {
             StepKind::Prefill => {
                 for &sid in &batch.seqs {
-                    let seq = self.seqs[sid as usize].as_mut().unwrap();
+                    let seq = self.seqs.seq_mut(sid);
                     seq.ctx = batch.padded_prompt + 1;
                     seq.generated = 1;
                     seq.first_token = now;
@@ -174,7 +175,7 @@ impl HftEngine {
             StepKind::StaticDecode | StepKind::Decode => {
                 batch.steps_done += 1;
                 for &sid in &batch.seqs {
-                    let Some(seq) = self.seqs[sid as usize].as_mut() else {
+                    let Some(seq) = self.seqs.get_mut(sid) else {
                         continue;
                     };
                     if seq.phase != SeqPhase::Decoding {
@@ -214,14 +215,14 @@ impl HftEngine {
             self.batches[i] = Some(batch);
             q.push_after(
                 self.insts[i].step.as_ref().unwrap().st.time,
-                Timer::with(tags::STEP_DONE, i as u64, 0),
+                FleetEvent::StepDone { worker: i }.timer(),
             );
         } else {
             // batch complete: release the reservation, drop seq payloads
             let reserve = batch.slot_kv * batch.seqs.len() as u64;
             self.devices[dev_idx].free_kv(now, reserve);
             for &sid in &batch.seqs {
-                self.seqs[sid as usize] = None;
+                self.seqs.remove(sid);
             }
             self.maybe_start(i, q);
         }
@@ -237,27 +238,22 @@ impl HftEngine {
 
 impl Engine for HftEngine {
     fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
-        if !common::request_fits(self.spec, &self.devices[0].spec, &req) {
-            log::debug!("dropping request {} (ctx {} + out {} exceeds device KV)",
-                req.id, req.prompt_len, req.output_len);
-            self.col.dropped += 1;
+        if !fleet::admit_or_drop(self.spec, &self.devices[0].spec, &req, &mut self.col) {
             let _ = q;
             return;
         }
-        let i = self.rr % self.insts.len();
-        self.rr += 1;
-        let sid = self.seqs.len() as u64;
+        let i = self.router.pick_n(self.insts.len()).expect("non-empty fleet");
         let mut seq = Seq::new(req);
         seq.instance = self.insts[i].device;
-        self.seqs.push(Some(seq));
+        let sid = self.seqs.insert(seq);
         self.inflight += 1;
         self.insts[i].waiting.push_back(sid);
         self.maybe_start(i, q);
     }
 
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
-        match t.tag {
-            tags::STEP_DONE => self.step_done(t.a as usize, q),
+        match FleetEvent::decode(t) {
+            Some(FleetEvent::StepDone { worker }) => self.step_done(worker, q),
             _ => unreachable!("hft got unknown timer {t:?}"),
         }
     }

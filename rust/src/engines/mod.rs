@@ -9,10 +9,37 @@
 //!   push (DistServe-like baseline).
 //! * [`banaserve`] — the paper's system: PD disaggregation + Global KV
 //!   Cache Store + dynamic layer/attention migration + load-aware routing.
+//!
+//! # The fleet layer and its ownership rules
+//!
+//! [`fleet`] is the shared fleet/dispatch layer all four engines build on.
+//! The ownership contract, which every engine (and future policy) must
+//! respect:
+//!
+//! * **Sequences** live in exactly one [`fleet::SeqTable`] per engine; ids
+//!   are allocated once in admission order and NEVER reused. Queues and
+//!   running sets hold ids, never `Seq` values; only the table owns
+//!   payloads. An engine drops a payload (`SeqTable::remove`) exactly once,
+//!   when the request finishes — in-flight timers may still carry the id,
+//!   so handlers must tolerate ids whose slot is already empty.
+//! * **Routing** is a pure function of [`fleet::InstanceLoad`] snapshots:
+//!   a [`fleet::Router`] may keep its own cursor state but must not reach
+//!   into engine state. Engines build snapshots, route, then mutate.
+//! * **Timers** are encoded/decoded exclusively through
+//!   [`fleet::FleetEvent`]; the raw `(tag, a, b)` wire format in
+//!   [`common::tags`] is an implementation detail of that table.
+//! * **Devices** are owned by the engine's device table; ids are stable
+//!   indices, so elastic fleets append new devices and mark drained ones
+//!   `Released` in place ([`crate::cluster::DeviceState`]) instead of
+//!   removing entries. The [`fleet::Autoscaler`] only *decides*
+//!   (out/in/hold over windowed [`fleet::FleetLoad`]s); executing a
+//!   decision — growing per-device state, draining queues, releasing — is
+//!   engine code, because only the engine knows its worker topology.
 
 pub mod banaserve;
 pub mod common;
 pub mod distserve_sim;
+pub mod fleet;
 pub mod hft;
 pub mod vllm_sim;
 
@@ -33,6 +60,13 @@ pub struct EngineExtras {
     pub attention_migrations: u64,
     pub store_hit_rate: f64,
     pub routed_counts: Vec<u64>,
+    /// Elastic fleet: (time, active device count) step series.
+    pub fleet_size_series: Vec<(f64, f64)>,
+    /// Elastic fleet: (time, windowed mean busy fraction) per decision.
+    pub fleet_util_series: Vec<(f64, f64)>,
+    /// Devices added / drained at runtime.
+    pub scale_outs: u64,
+    pub drains: u64,
 }
 
 /// Everything a figure bench consumes from one run.
@@ -79,6 +113,10 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
             let rep = e.collector().report(res.end_time);
             let extras = EngineExtras {
                 kv_transfer_bytes: e.kv_transfer_bytes,
+                fleet_size_series: e.fleet_size.points.clone(),
+                fleet_util_series: e.fleet_util.points.clone(),
+                scale_outs: e.scale_outs,
+                drains: e.drains,
                 ..Default::default()
             };
             (rep, e.device_utilization(res.end_time), extras)
@@ -94,6 +132,10 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
                 attention_migrations: e.stats.attention_migrations,
                 store_hit_rate: e.store_hit_rate(),
                 routed_counts: e.routed_counts.clone(),
+                fleet_size_series: e.fleet_size.points.clone(),
+                fleet_util_series: e.fleet_util.points.clone(),
+                scale_outs: e.scale_outs,
+                drains: e.drains,
                 ..Default::default()
             };
             (rep, e.device_utilization(res.end_time), extras)

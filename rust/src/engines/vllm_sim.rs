@@ -8,7 +8,8 @@
 //! residency bookkeeping of cached blocks is folded into the budget), and
 //! preemption uses vLLM's recompute strategy.
 
-use super::common::{self, tags, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
+use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, Role};
 use crate::config::ExperimentConfig;
 use crate::kvcache::RadixTree;
@@ -18,7 +19,8 @@ use crate::model::ModelSpec;
 use crate::sim::{Engine, EventQueue, Timer};
 use crate::workload::Request;
 
-/// Multi-instance routing policy.
+/// Multi-instance routing policy. Kept as the engine's public declarative
+/// config; each variant maps onto one [`fleet::Router`] implementation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum RouterPolicy {
     /// Prefer the instance with the longest cached prefix, tempered by
@@ -27,6 +29,19 @@ pub enum RouterPolicy {
     /// Ignore caches entirely; pick min (load, queue).
     LeastLoaded,
     RoundRobin,
+}
+
+impl RouterPolicy {
+    /// Instantiate the matching fleet router.
+    fn build(self) -> Box<dyn fleet::Router> {
+        match self {
+            RouterPolicy::RoundRobin => Box::new(fleet::RoundRobin::default()),
+            RouterPolicy::LeastLoaded => Box::new(fleet::LeastLoaded),
+            RouterPolicy::CacheAware { w_cache, w_load } => {
+                Box::new(fleet::CacheAware { w_cache, w_load })
+            }
+        }
+    }
 }
 
 /// Monolithic continuous-batching engine over N unified instances.
@@ -42,8 +57,8 @@ pub struct VllmEngine {
     /// Token budget of each instance's prefix cache.
     cache_budget: u64,
     pub policy: RouterPolicy,
-    rr_next: usize,
-    seqs: Vec<Option<Seq>>,
+    router: Box<dyn fleet::Router>,
+    seqs: fleet::SeqTable,
     col: Collector,
     inflight: u64,
     /// Recomputed prefix tokens (had to be computed because the cache of
@@ -96,8 +111,8 @@ impl VllmEngine {
             prefix_caching,
             cache_budget,
             policy,
-            rr_next: 0,
-            seqs: Vec::new(),
+            router: policy.build(),
+            seqs: fleet::SeqTable::new(),
             col,
             inflight: 0,
             recomputed_tokens: 0,
@@ -106,43 +121,25 @@ impl VllmEngine {
         }
     }
 
-    /// Router: pick the target instance for a request.
+    /// Router: snapshot per-instance loads and delegate to the fleet
+    /// router built from `policy`.
     fn route(&mut self, req: &Request) -> usize {
-        let n = self.insts.len();
-        match self.policy {
-            RouterPolicy::RoundRobin => {
-                let i = self.rr_next % n;
-                self.rr_next += 1;
-                i
-            }
-            RouterPolicy::LeastLoaded => (0..n)
-                .min_by_key(|&i| (self.insts[i].load_seqs(), self.insts[i].queue_len(), i))
-                .unwrap(),
-            RouterPolicy::CacheAware { w_cache, w_load } => {
-                let max_load = self
-                    .insts
-                    .iter()
-                    .map(|x| x.load_seqs())
-                    .max()
-                    .unwrap_or(0)
-                    .max(1) as f64;
-                let plen = req.cache_tokens.len().max(1) as f64;
-                (0..n)
-                    .max_by(|&a, &b| {
-                        let score = |i: usize| {
-                            let hit = if self.prefix_caching {
-                                self.caches[i].peek_prefix(&req.cache_tokens) as f64 / plen
-                            } else {
-                                0.0
-                            };
-                            let load = self.insts[i].load_seqs() as f64 / max_load;
-                            w_cache * hit - w_load * load
-                        };
-                        score(a).partial_cmp(&score(b)).unwrap()
-                    })
-                    .unwrap()
-            }
-        }
+        let wants_cache = matches!(self.policy, RouterPolicy::CacheAware { .. });
+        let plen = req.cache_tokens.len().max(1) as f64;
+        let loads: Vec<fleet::InstanceLoad> = (0..self.insts.len())
+            .map(|i| {
+                let mut l = fleet::InstanceLoad::at(i);
+                l.load_seqs = self.insts[i].load_seqs();
+                l.queue_len = self.insts[i].queue_len();
+                if wants_cache && self.prefix_caching {
+                    l.cache_hit =
+                        self.caches[i].peek_prefix(&req.cache_tokens) as f64 / plen;
+                }
+                l
+            })
+            .collect();
+        let pos = self.router.pick(&loads).expect("non-empty fleet");
+        loads[pos].idx
     }
 
     /// Try to start a step on instance `i`.
@@ -156,7 +153,7 @@ impl VllmEngine {
         let (inst_slice, dev_slice) = (&mut self.insts, &self.devices);
         let (ids, items) = common::plan_prefill(
             &mut inst_slice[i],
-            &self.seqs,
+            self.seqs.slots(),
             &dev_slice[dev_i],
             self.spec,
             &self.limits,
@@ -164,7 +161,7 @@ impl VllmEngine {
         if !ids.is_empty() {
             let dev_idx = self.insts[i].device;
             for &sid in &ids {
-                let seq = self.seqs[sid as usize].as_mut().unwrap();
+                let seq = self.seqs.seq_mut(sid);
                 seq.phase = SeqPhase::Prefilling;
                 if seq.prefill_start < 0.0 {
                     seq.prefill_start = now;
@@ -187,7 +184,7 @@ impl VllmEngine {
                 st,
                 overhead: 0.0,
             });
-            q.push_after(st.time, Timer::with(tags::STEP_DONE, i as u64, 0));
+            q.push_after(st.time, FleetEvent::StepDone { worker: i }.timer());
             return;
         }
         // 2) decode
@@ -199,7 +196,7 @@ impl VllmEngine {
             let dev = &self.devices[self.insts[i].device];
             let mut need: u64 = 0;
             for &sid in &self.insts[i].running {
-                let s = self.seqs[sid as usize].as_ref().unwrap();
+                let s = self.seqs.seq(sid);
                 need += common::kv_bytes(self.spec, s.ctx + 1) - s.kv_on_device;
             }
             if need <= dev.mem_free() {
@@ -214,7 +211,7 @@ impl VllmEngine {
         }
         let (ids, st) = common::plan_decode(
             &self.insts[i],
-            &self.seqs,
+            self.seqs.slots(),
             self.spec,
             &self.devices[self.insts[i].device].spec,
             &self.eff,
@@ -229,14 +226,14 @@ impl VllmEngine {
             st,
             overhead,
         });
-        q.push_after(st.time + overhead, Timer::with(tags::STEP_DONE, i as u64, 0));
+        q.push_after(st.time + overhead, FleetEvent::StepDone { worker: i }.timer());
     }
 
     fn preempt(&mut self, i: usize, sid: u64, now: f64) {
         let pos = self.insts[i].running.iter().position(|&x| x == sid).unwrap();
         self.insts[i].running.remove(pos);
         let dev_idx = self.insts[i].device;
-        let seq = self.seqs[sid as usize].as_mut().unwrap();
+        let seq = self.seqs.seq_mut(sid);
         self.devices[dev_idx].free_kv(now, seq.kv_on_device);
         seq.kv_on_device = 0;
         // recompute: generated tokens are lost; prompt re-prefills (the
@@ -250,7 +247,7 @@ impl VllmEngine {
     }
 
     fn finish(&mut self, sid: u64, now: f64) {
-        let seq = self.seqs[sid as usize].as_mut().unwrap();
+        let seq = self.seqs.seq_mut(sid);
         seq.phase = SeqPhase::Finished;
         let rec = seq.record(now);
         let kv = seq.kv_on_device;
@@ -260,7 +257,7 @@ impl VllmEngine {
         self.devices[dev_idx].free_kv(now, kv);
         self.col.finish(rec);
         self.inflight -= 1;
-        self.seqs[sid as usize] = None; // drop payload
+        self.seqs.remove(sid); // drop payload
     }
 
     fn step_done(&mut self, i: usize, q: &mut EventQueue) {
@@ -278,7 +275,7 @@ impl VllmEngine {
             StepKind::Prefill => {
                 for sid in step.seqs {
                     let (cache_tokens, done) = {
-                        let seq = self.seqs[sid as usize].as_mut().unwrap();
+                        let seq = self.seqs.seq_mut(sid);
                         seq.ctx = seq.req.prompt_len + 1;
                         seq.generated = 1;
                         seq.first_token = now;
@@ -304,7 +301,7 @@ impl VllmEngine {
             StepKind::Decode | StepKind::StaticDecode => {
                 let mut finished = Vec::new();
                 for &sid in &step.seqs {
-                    let seq = self.seqs[sid as usize].as_mut().unwrap();
+                    let seq = self.seqs.seq_mut(sid);
                     if seq.phase != SeqPhase::Decoding {
                         continue; // preempted mid-flight (defensive)
                     }
@@ -357,16 +354,12 @@ impl VllmEngine {
 
 impl Engine for VllmEngine {
     fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
-        if !common::request_fits(self.spec, &self.devices[0].spec, &req) {
-            log::debug!("dropping request {} (ctx {} + out {} exceeds device KV)",
-                req.id, req.prompt_len, req.output_len);
-            self.col.dropped += 1;
+        if !fleet::admit_or_drop(self.spec, &self.devices[0].spec, &req, &mut self.col) {
             let _ = q;
             return;
         }
         let i = self.route(&req);
         self.routed_counts[i] += 1;
-        let sid = self.seqs.len() as u64;
         let mut seq = Seq::new(req);
         seq.instance = i;
         // prefix hit at the routed instance (LRU refresh + stats)
@@ -383,15 +376,15 @@ impl Engine for VllmEngine {
                 .unwrap_or(0);
             self.recomputed_tokens += best.saturating_sub(hit);
         }
-        self.seqs.push(Some(seq));
+        let sid = self.seqs.insert(seq);
         self.inflight += 1;
         self.insts[i].waiting.push_back(sid);
         self.maybe_start(i, q);
     }
 
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
-        match t.tag {
-            tags::STEP_DONE => self.step_done(t.a as usize, q),
+        match FleetEvent::decode(t) {
+            Some(FleetEvent::StepDone { worker }) => self.step_done(worker, q),
             _ => unreachable!("vllm engine got unknown timer {t:?}"),
         }
     }

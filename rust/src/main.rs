@@ -4,7 +4,11 @@
 //!   serve             run the REAL model path: load AOT artifacts, serve a
 //!                     synthetic batch of requests through the threaded
 //!                     coordinator, report latency/throughput
-//!   simulate          one engine on one workload (cluster-scale simulator)
+//!   simulate          one engine on one workload (cluster-scale simulator);
+//!                     --scenario bursty-autoscale runs the elastic-fleet
+//!                     comparison (static base/peak fleets vs autoscaled)
+//!                     on a time-varying-rate trace and reports P99 total
+//!                     processing time + fleet-size series as JSON
 //!   sweep             RPS sweep for one engine/profile
 //!   figure <id>       regenerate a paper figure (1|2a|2b|6|7|8|9|10|11)
 //!   migrate-demo      show Alg 1 decisions on a synthetic imbalance
@@ -13,7 +17,10 @@
 //! Flags shared by the simulation commands: --engine --model --rps
 //! --duration --seed --devices --prefill --profile short|long
 //! --share-prob --delta --rho --layer-migration --attention-migration
-//! --global-store --config <file.json>
+//! --global-store --config <file.json> --autoscale --autoscale-min
+//! --autoscale-max --scale-out-util --scale-in-util --autoscale-cooldown
+//! --autoscale-window; bursty-autoscale adds --base-devices --peak-devices
+//! --burst-factor --burst-secs --period-secs
 
 use banaserve::config::{EngineKind, ExperimentConfig};
 use banaserve::engines;
@@ -136,6 +143,14 @@ fn cmd_serve(a: &Args) -> i32 {
 }
 
 fn cmd_simulate(a: &Args) -> i32 {
+    match a.str_or("scenario", "") {
+        "" => {}
+        "bursty-autoscale" => return cmd_bursty_autoscale(a),
+        other => {
+            eprintln!("unknown scenario '{other}' (known: bursty-autoscale)");
+            return 2;
+        }
+    }
     let cfg = build_config(a);
     let out = engines::run_experiment(&cfg);
     println!(
@@ -157,6 +172,150 @@ fn cmd_simulate(a: &Args) -> i32 {
         println!("  device {i}: compute={c:.2} memory={m:.2}");
     }
     0
+}
+
+/// The elastic-fleet scenario: a time-varying (bursty) arrival rate served
+/// by (a) a static fleet provisioned at the burst trough (`--base-devices`),
+/// (b) a static fleet provisioned at the burst peak (`--peak-devices`), and
+/// (c) an elastic fleet that starts at base and autoscales up to peak.
+/// The headline comparison is elastic vs the base-provisioned static fleet
+/// at equal peak device count — the over-provision-or-violate-SLOs dilemma
+/// the autoscaler dissolves. Results print as a table and land in
+/// `bench_results/bursty_autoscale.json`.
+fn cmd_bursty_autoscale(a: &Args) -> i32 {
+    use banaserve::engines::run_experiment;
+    use banaserve::metrics::TimeSeries;
+    use banaserve::util::json::{self, Value};
+    use banaserve::workload::ArrivalProcess;
+
+    let base = a.usize_or("base-devices", 2);
+    let peak = a.usize_or("peak-devices", 6);
+    let rps = a.f64_or("rps", 5.0);
+    let burst_factor = a.f64_or("burst-factor", 5.0);
+    let burst_secs = a.f64_or("burst-secs", 12.0);
+    let period_secs = a.f64_or("period-secs", 48.0);
+    let duration = a.f64_or("duration", 150.0);
+    let seed = a.u64_or("seed", 11);
+    let model = a.str_or("model", "llama-13b");
+
+    let mk = |engine: EngineKind, devices: usize, elastic: bool| {
+        let mut c = ExperimentConfig::default_for(engine, model, rps, seed);
+        c.n_devices = devices;
+        c.n_prefill = (devices / 2).max(1);
+        c.warmup = 0.0;
+        c.workload.duration = duration;
+        c.workload.seed = seed;
+        c.workload.arrivals = ArrivalProcess::Bursty {
+            rps,
+            burst_factor,
+            burst_secs,
+            period_secs,
+        };
+        if elastic {
+            c.autoscale.enabled = true;
+            c.autoscale.min_devices = base;
+            c.autoscale.max_devices = peak;
+        }
+        c
+    };
+
+    println!(
+        "bursty-autoscale: base={base} peak={peak} devices, {rps} rps x{burst_factor} \
+         bursts ({burst_secs}s of every {period_secs}s), {duration}s trace, seed {seed}"
+    );
+    println!(
+        "  {:<10} {:<12} {:>6} {:>10} {:>10} {:>10} {:>11} {:>9}",
+        "engine", "fleet", "n", "p99 e2e", "mean e2e", "tput", "peak devs", "avg devs"
+    );
+    let mut rows: Vec<Value> = Vec::new();
+    let mut code = 0;
+    for engine in [EngineKind::BanaServe, EngineKind::DistServe] {
+        let mut p99_of: Vec<(&str, f64)> = Vec::new();
+        for (label, devices, elastic) in [
+            ("static-base", base, false),
+            ("static-peak", peak, false),
+            ("elastic", base, true),
+        ] {
+            let cfg = mk(engine, devices, elastic);
+            let out = run_experiment(&cfg);
+            let mut rep = out.report;
+            let p99 = rep.e2e.p99();
+            let fleet = TimeSeries {
+                points: out.extras.fleet_size_series.clone(),
+            };
+            let peak_devs = fleet.max_value().max(devices as f64);
+            let avg_devs = if fleet.is_empty() {
+                devices as f64
+            } else {
+                fleet.time_weighted_mean(rep.makespan)
+            };
+            println!(
+                "  {:<10} {:<12} {:>6} {:>9.2}s {:>9.2}s {:>10.1} {:>11.1} {:>9.2}",
+                cfg.engine.name(),
+                label,
+                rep.n_requests,
+                p99,
+                rep.e2e.mean(),
+                rep.throughput_tok_s,
+                peak_devs,
+                avg_devs
+            );
+            rows.push(json::obj(vec![
+                ("engine", json::s(cfg.engine.name())),
+                ("fleet", json::s(label)),
+                ("n_requests", json::num(rep.n_requests as f64)),
+                ("p99_total_s", json::num(p99)),
+                ("mean_e2e_s", json::num(rep.e2e.mean())),
+                ("throughput_tok_s", json::num(rep.throughput_tok_s)),
+                ("makespan_s", json::num(rep.makespan)),
+                ("peak_devices", json::num(peak_devs)),
+                ("avg_devices", json::num(avg_devs)),
+                ("scale_outs", json::num(out.extras.scale_outs as f64)),
+                ("drains", json::num(out.extras.drains as f64)),
+                (
+                    "fleet_size_series",
+                    json::arr(
+                        out.extras
+                            .fleet_size_series
+                            .iter()
+                            .map(|&(t, v)| json::arr(vec![json::num(t), json::num(v)]))
+                            .collect(),
+                    ),
+                ),
+            ]));
+            p99_of.push((label, p99));
+        }
+        let find = |l: &str| p99_of.iter().find(|r| r.0 == l).map(|r| r.1).unwrap_or(0.0);
+        let (stat, ela) = (find("static-base"), find("elastic"));
+        let better = ela < stat;
+        println!(
+            "  -> {}: elastic p99 {:.2}s vs static-base p99 {:.2}s ({}, {:.2}x)",
+            engine.name(),
+            ela,
+            stat,
+            if better { "elastic wins" } else { "static wins" },
+            stat / ela.max(1e-9)
+        );
+        if engine == EngineKind::BanaServe && !better {
+            code = 1; // the capability gate: elastic must beat static-base
+        }
+    }
+    let _ = std::fs::create_dir_all("bench_results");
+    let doc = json::obj(vec![
+        ("scenario", json::s("bursty-autoscale")),
+        ("base_devices", json::num(base as f64)),
+        ("peak_devices", json::num(peak as f64)),
+        ("rps", json::num(rps)),
+        ("burst_factor", json::num(burst_factor)),
+        ("seed", json::num(seed as f64)),
+        ("results", json::arr(rows)),
+    ]);
+    let path = "bench_results/bursty_autoscale.json";
+    match std::fs::write(path, json::write(&doc)) {
+        Ok(()) => println!("  [results written to {path}]"),
+        Err(e) => eprintln!("  [could not write {path}: {e}]"),
+    }
+    code
 }
 
 fn cmd_sweep(a: &Args) -> i32 {

@@ -164,6 +164,62 @@ impl Report {
     }
 }
 
+/// A recorded step-function time series — fleet size over time, windowed
+/// fleet utilization per control cycle, and similar orchestration signals
+/// the elastic-fleet scenarios report.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    /// (time, value) samples; the value holds until the next sample.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn last_value(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn max_value(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).fold(0.0, f64::max)
+    }
+
+    /// Step-function time average over [first sample, end].
+    pub fn time_weighted_mean(&self, end: f64) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        let t0 = self.points[0].0;
+        let span = end - t0;
+        if span <= 0.0 {
+            return self.points.last().unwrap().1;
+        }
+        let mut acc = 0.0;
+        for w in self.points.windows(2) {
+            // clamp each segment to `end` so querying a sub-range works
+            let seg_end = w[1].0.min(end);
+            acc += w[0].1 * (seg_end - w[0].0).max(0.0);
+        }
+        let (t_last, v_last) = *self.points.last().unwrap();
+        acc += v_last * (end - t_last).max(0.0);
+        acc / span
+    }
+}
+
 /// Aggregates one metric across repeated seeds (paper: 5 repeats, 95% CI).
 #[derive(Debug, Default)]
 pub struct SeedAggregate {
@@ -251,6 +307,23 @@ mod tests {
         assert_eq!(rep.n_requests, 0);
         assert_eq!(rep.throughput_tok_s, 0.0);
         assert_eq!(rep.avg_latency(), 0.0);
+    }
+
+    #[test]
+    fn time_series_step_average_and_extrema() {
+        let mut s = TimeSeries::new();
+        assert_eq!(s.time_weighted_mean(10.0), 0.0);
+        s.push(0.0, 2.0);
+        s.push(4.0, 4.0);
+        s.push(8.0, 2.0);
+        // 2 for 4s, 4 for 4s, 2 for 2s over [0, 10] = (8 + 16 + 4) / 10
+        assert!((s.time_weighted_mean(10.0) - 2.8).abs() < 1e-12);
+        // sub-range query clamps segments at `end`: over [0, 2] the value
+        // is constantly 2
+        assert!((s.time_weighted_mean(2.0) - 2.0).abs() < 1e-12);
+        assert_eq!(s.max_value(), 4.0);
+        assert_eq!(s.last_value(), Some(2.0));
+        assert_eq!(s.len(), 3);
     }
 
     #[test]

@@ -54,10 +54,12 @@ impl Eq for Event {}
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // min-heap by (time, seq): BinaryHeap is a max-heap, so reverse.
+        // total_cmp gives a total order even for NaN — a NaN timestamp can
+        // no longer silently corrupt the heap invariant (push also rejects
+        // non-finite times in debug builds).
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -115,6 +117,10 @@ impl EventQueue {
     }
 
     fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(
+            time.is_finite(),
+            "non-finite event time {time} (tag would fire out of order)"
+        );
         self.seq += 1;
         self.heap.push(Event {
             time,
@@ -305,6 +311,41 @@ mod tests {
         let (t2, _) = q.pop().unwrap();
         assert!(t2 >= t1);
         assert_eq!(q.now(), 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn nan_timer_rejected_in_debug() {
+        let mut q = EventQueue::new();
+        q.push_timer(f64::NAN, Timer::new(0));
+    }
+
+    #[test]
+    fn event_order_is_total_under_dense_ties() {
+        // total_cmp ordering: many duplicate timestamps interleaved with
+        // distinct ones must still drain in (time, insertion) order.
+        let mut q = EventQueue::new();
+        let times = [3.0, 1.0, 1.0, 2.0, 1.0, 3.0, 0.5];
+        for (i, &t) in times.iter().enumerate() {
+            q.push_timer(t, Timer::new(i as u64));
+        }
+        let mut drained = Vec::new();
+        while let Some((t, EventKind::Timer(tm))) = q.pop() {
+            drained.push((t, tm.tag));
+        }
+        assert_eq!(
+            drained,
+            vec![
+                (0.5, 6),
+                (1.0, 1),
+                (1.0, 2),
+                (1.0, 4),
+                (2.0, 3),
+                (3.0, 0),
+                (3.0, 5)
+            ]
+        );
     }
 
     #[test]

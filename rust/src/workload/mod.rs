@@ -436,6 +436,47 @@ mod tests {
     }
 
     #[test]
+    fn trace_roundtrip_preserves_prefix_groups() {
+        // shared-template workload: the prefix-group structure (which
+        // requests share which leading tokens) must survive record/replay
+        let mut w = cfg(10.0, 21);
+        w.prefix = PrefixConfig {
+            share_prob: 1.0,
+            n_templates: 3,
+            zipf_s: 1.2,
+            shared_frac: (0.5, 0.9),
+        };
+        let reqs = w.generate();
+        assert!(reqs.len() > 20);
+        let back = trace_from_json(&trace_to_json(&reqs)).unwrap();
+        assert_eq!(reqs, back, "full field-for-field equality");
+        // group ids (first shared token, high bit set by the generator)
+        let groups = |rs: &[Request]| -> Vec<u32> {
+            rs.iter()
+                .map(|r| r.cache_tokens.first().copied().unwrap_or(0))
+                .collect()
+        };
+        assert_eq!(groups(&reqs), groups(&back));
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.cacheable_len(), b.cacheable_len());
+            assert_eq!(a.cache_tokens, b.cache_tokens);
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip_empty_and_long_context() {
+        assert_eq!(
+            trace_from_json(&trace_to_json(&[])).unwrap(),
+            Vec::<Request>::new()
+        );
+        // LongBench prompts exercise the CACHE_TOKEN_CAP truncation path
+        let w = WorkloadConfig::poisson(LengthProfile::LongBench, 1.0, 10.0, 22);
+        let reqs = w.generate();
+        let back = trace_from_json(&trace_to_json(&reqs)).unwrap();
+        assert_eq!(reqs, back);
+    }
+
+    #[test]
     fn rate_at_reflects_burst_phase() {
         let p = ArrivalProcess::Bursty {
             rps: 2.0,

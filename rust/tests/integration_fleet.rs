@@ -1,0 +1,201 @@
+//! Fleet-layer integration gates:
+//!
+//! * **Behavior preservation** — with autoscaling disabled, a fixed-seed
+//!   run of each of the four engines must produce a `Report` identical to
+//!   the committed golden snapshot (`tests/golden/engine_reports.json`).
+//!   The snapshot self-seeds: the first run on a toolchain writes it, every
+//!   later run (and every refactor) is compared bit-for-bit against it.
+//! * **Elastic capability** — on a bursty trace, the autoscaled BanaServe
+//!   fleet must beat the base-provisioned static fleet's P99 total
+//!   processing time, scale out during bursts, and strand nothing.
+
+use banaserve::config::{EngineKind, ExperimentConfig};
+use banaserve::engines::run_experiment;
+use banaserve::util::json::{self, Value};
+use banaserve::workload::{ArrivalProcess, LengthProfile, WorkloadConfig};
+use std::path::PathBuf;
+
+fn fixed_cfg(kind: EngineKind) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_for(kind, "llama-13b", 6.0, 1234);
+    c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 6.0, 25.0, 1234);
+    c.warmup = 0.0;
+    c
+}
+
+/// Every Report field that must survive a refactor, as a JSON object.
+fn fingerprint(kind: EngineKind) -> Value {
+    let out = run_experiment(&fixed_cfg(kind));
+    let r = &out.report;
+    json::obj(vec![
+        ("submitted", json::num(out.submitted as f64)),
+        ("n_requests", json::num(r.n_requests as f64)),
+        ("dropped", json::num(r.dropped as f64)),
+        ("output_tokens", json::num(r.output_tokens as f64)),
+        ("input_tokens", json::num(r.input_tokens as f64)),
+        ("cached_tokens", json::num(r.cached_tokens as f64)),
+        ("makespan", json::num(r.makespan)),
+        ("throughput_tok_s", json::num(r.throughput_tok_s)),
+        ("ttft_mean", json::num(r.ttft.mean())),
+        ("tpot_mean", json::num(r.tpot.mean())),
+        ("e2e_mean", json::num(r.e2e.mean())),
+        ("queue_mean", json::num(r.queue.mean())),
+    ])
+}
+
+#[test]
+fn behavior_preserved_against_golden_snapshots() {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/engine_reports.json");
+    let kinds = [
+        EngineKind::HfStatic,
+        EngineKind::Vllm,
+        EngineKind::DistServe,
+        EngineKind::BanaServe,
+    ];
+    let current = json::obj(
+        kinds
+            .iter()
+            .map(|&k| (k.name(), fingerprint(k)))
+            .collect(),
+    );
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, json::write(&current)).unwrap();
+        eprintln!(
+            "[behavior gate] golden snapshot seeded at {} — commit it; future \
+             runs compare against it",
+            path.display()
+        );
+        return;
+    }
+    let golden = json::parse(&std::fs::read_to_string(&path).unwrap())
+        .expect("golden snapshot must parse");
+    for &k in &kinds {
+        let want = golden
+            .get(k.name())
+            .unwrap_or_else(|| panic!("golden snapshot missing engine {}", k.name()));
+        let got = current.get(k.name()).unwrap();
+        let obj = want.as_obj().expect("engine entry is an object");
+        for (field, expect) in obj.iter() {
+            let e = expect.as_f64().expect("golden fields are numeric");
+            let g = got
+                .get(field)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("missing field {field} for {}", k.name()));
+            assert!(
+                (e - g).abs() <= 1e-9 * e.abs().max(1.0),
+                "{} {field}: golden {e} != current {g} — the refactor changed \
+                 behavior (delete the snapshot ONLY for an intentional change)",
+                k.name()
+            );
+        }
+    }
+}
+
+fn bursty_cfg(kind: EngineKind, devices: usize, elastic: bool, seed: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_for(kind, "llama-13b", 5.0, seed);
+    c.n_devices = devices;
+    c.n_prefill = (devices / 2).max(1);
+    c.warmup = 0.0;
+    c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 5.0, 120.0, seed);
+    c.workload.arrivals = ArrivalProcess::Bursty {
+        rps: 5.0,
+        burst_factor: 5.0,
+        burst_secs: 12.0,
+        period_secs: 48.0,
+    };
+    if elastic {
+        c.autoscale.enabled = true;
+        c.autoscale.min_devices = devices;
+        c.autoscale.max_devices = 6;
+    }
+    c
+}
+
+#[test]
+fn elastic_fleet_beats_static_base_p99_on_bursty_trace() {
+    // The capability gate: same bursty trace, same base fleet of 2 devices;
+    // the elastic run may scale to 6 during bursts. It must strictly beat
+    // the static fleet's P99 total processing time.
+    let stat = run_experiment(&bursty_cfg(EngineKind::BanaServe, 2, false, 11));
+    let ela = run_experiment(&bursty_cfg(EngineKind::BanaServe, 2, true, 11));
+    assert_eq!(
+        stat.submitted,
+        stat.report.n_requests + stat.report.dropped,
+        "static run must account for every request"
+    );
+    assert_eq!(
+        ela.submitted,
+        ela.report.n_requests + ela.report.dropped,
+        "elastic run must account for every request"
+    );
+    assert!(
+        ela.extras.scale_outs > 0,
+        "bursts must trigger scale-out (got {:?})",
+        ela.extras.scale_outs
+    );
+    let mut rs = stat.report;
+    let mut re = ela.report;
+    let (p_stat, p_ela) = (rs.e2e.p99(), re.e2e.p99());
+    assert!(
+        p_ela < p_stat,
+        "elastic P99 {p_ela:.2}s must beat static-base P99 {p_stat:.2}s"
+    );
+    // the fleet-size series must record the scaling trajectory
+    let peak = ela
+        .extras
+        .fleet_size_series
+        .iter()
+        .map(|&(_, v)| v)
+        .fold(0.0, f64::max);
+    assert!(peak > 2.0, "fleet must have grown past its base size");
+}
+
+#[test]
+fn distserve_elastic_fleet_runs_and_conserves() {
+    let out = run_experiment(&bursty_cfg(EngineKind::DistServe, 2, true, 11));
+    assert_eq!(out.submitted, out.report.n_requests + out.report.dropped);
+    assert!(
+        out.extras.scale_outs > 0,
+        "bursty trace must trigger distserve scale-out"
+    );
+}
+
+#[test]
+fn autoscaler_drain_path_never_strands_requests() {
+    // Aggressive scale-in thresholds force repeated drain/release cycles
+    // between bursts; every admitted request must still complete
+    // (run_experiment panics on conservation violations).
+    for seed in [1, 2, 3] {
+        let mut c = bursty_cfg(EngineKind::BanaServe, 3, true, seed);
+        c.autoscale.min_devices = 2;
+        c.autoscale.max_devices = 5;
+        c.autoscale.scale_in_util = 0.9; // drain whenever not saturated
+        c.autoscale.scale_out_util = 0.95;
+        c.autoscale.cooldown = 1.0;
+        c.bana.control_period = 0.5;
+        c.workload.duration = 60.0;
+        let out = run_experiment(&c);
+        assert_eq!(
+            out.submitted,
+            out.report.n_requests + out.report.dropped,
+            "seed {seed}: requests stranded by the drain path"
+        );
+    }
+}
+
+#[test]
+fn static_runs_are_deterministic_across_repeats() {
+    // the golden gate relies on run-to-run determinism; make it explicit
+    for kind in [EngineKind::Vllm, EngineKind::BanaServe] {
+        let a = run_experiment(&fixed_cfg(kind));
+        let b = run_experiment(&fixed_cfg(kind));
+        assert_eq!(a.report.n_requests, b.report.n_requests);
+        assert!(
+            (a.report.throughput_tok_s - b.report.throughput_tok_s).abs() < 1e-9,
+            "{:?} nondeterministic",
+            kind
+        );
+        assert!((a.report.e2e.mean() - b.report.e2e.mean()).abs() < 1e-9);
+    }
+}

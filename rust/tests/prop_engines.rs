@@ -8,8 +8,9 @@ use banaserve::engines::banaserve::migration::{self, DeviceLoad, Policy};
 use banaserve::engines::banaserve::scheduler::{self, InstanceLoad};
 use banaserve::engines::banaserve::BanaEngine;
 use banaserve::engines::distserve_sim::DistServeEngine;
+use banaserve::engines::fleet::{self, Router};
 use banaserve::engines::hft::HftEngine;
-use banaserve::engines::vllm_sim::VllmEngine;
+use banaserve::engines::vllm_sim::{RouterPolicy, VllmEngine};
 use banaserve::prop_assert;
 use banaserve::sim::{self, Engine};
 use banaserve::util::checker::{check, Gen};
@@ -262,6 +263,111 @@ fn migration_plan_is_feasible_and_terminates() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn fleet_routers_never_starve_an_instance() {
+    // LeastLoaded and RoundRobin: when each pick adds load to the chosen
+    // instance (the engines' feedback loop), every instance must receive
+    // work within a bounded number of arrivals.
+    check("router starvation-freedom", 40, |g| {
+        let n = g.usize_in(2, 10);
+        let k = 7 * n;
+        for mode in 0..2usize {
+            let mut rr = fleet::RoundRobin::default();
+            let mut ll = fleet::LeastLoaded;
+            let mut loads: Vec<fleet::InstanceLoad> = (0..n)
+                .map(|i| {
+                    let mut l = fleet::InstanceLoad::at(i);
+                    l.load_seqs = g.usize_in(0, 5);
+                    l.queue_len = l.load_seqs;
+                    l
+                })
+                .collect();
+            let mut counts = vec![0usize; n];
+            for _ in 0..k {
+                let pos = if mode == 0 {
+                    rr.pick(&loads)
+                } else {
+                    ll.pick(&loads)
+                }
+                .expect("non-empty");
+                counts[pos] += 1;
+                loads[pos].load_seqs += 1;
+                loads[pos].queue_len += 1;
+            }
+            prop_assert!(
+                counts.iter().all(|&c| c > 0),
+                "mode {mode}: starved instance after {k} picks: {counts:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fleet_load_aware_pick_matches_scheduler_alg2() {
+    // fleet::pick_load_aware is an allocation-free port of
+    // scheduler::pick_rotating; they must agree on every input
+    check("alg2 parity", 80, |g| {
+        let n = g.usize_in(1, 12);
+        let fl: Vec<fleet::InstanceLoad> = (0..n)
+            .map(|idx| {
+                let mut l = fleet::InstanceLoad::at(idx);
+                l.u = g.f64_in(0.0, 2.0);
+                l.queue_len = g.usize_in(0, 20);
+                l
+            })
+            .collect();
+        let sc: Vec<InstanceLoad> = fl
+            .iter()
+            .map(|l| InstanceLoad {
+                idx: l.idx,
+                u: l.u,
+                queue_len: l.queue_len,
+                pending: 0.0,
+            })
+            .collect();
+        let delta_l = g.f64_in(0.2, 2.0);
+        let rr = g.usize_in(0, 7);
+        let a = fleet::pick_load_aware(&fl, delta_l, rr);
+        let b = scheduler::pick_rotating(&sc, delta_l, rr);
+        prop_assert!(a == b, "diverged: fleet {a:?} vs scheduler {b:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn cache_aware_router_skews_more_than_least_loaded_fig2a() {
+    // Fig 2a direction: on a shared-prefix workload the cache-aware policy
+    // must spread routed counts MORE unevenly than least-loaded.
+    let mk = || {
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 12.0, 3);
+        c.workload =
+            WorkloadConfig::poisson(LengthProfile::AlpacaShort, 12.0, 20.0, 3);
+        c.warmup = 0.0;
+        c.workload.prefix.share_prob = 0.95;
+        c.workload.prefix.n_templates = 3;
+        c.workload.prefix.zipf_s = 1.5;
+        c.workload.prefix.shared_frac = (0.8, 0.95);
+        c
+    };
+    let spread = |counts: &[u64]| {
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        max / min.max(1.0)
+    };
+    let c = mk();
+    let reqs = c.workload.generate();
+    let mut cache = VllmEngine::new(&c);
+    sim::run(&mut cache, reqs.clone(), 1e6);
+    let mut ll = VllmEngine::with_policy(&c, RouterPolicy::LeastLoaded, true);
+    sim::run(&mut ll, reqs, 1e6);
+    let (s_cache, s_ll) = (spread(&cache.routed_counts), spread(&ll.routed_counts));
+    assert!(
+        s_cache > s_ll,
+        "cache-aware spread {s_cache:.2} must exceed least-loaded {s_ll:.2}"
+    );
 }
 
 #[test]
