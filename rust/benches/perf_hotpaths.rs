@@ -11,10 +11,10 @@
 use banaserve::bench_support::{time_it, BenchRecorder};
 use banaserve::config::{EngineKind, ExperimentConfig};
 use banaserve::engines::banaserve::scheduler::{self, InstanceLoad};
-use banaserve::engines::fleet::FleetEvent;
+use banaserve::engines::fleet::{self, FleetEvent, Router};
 use banaserve::engines::run_experiment;
 use banaserve::kvcache::{BlockAllocator, RadixTree};
-use banaserve::sim::{EventQueue, Timer};
+use banaserve::sim::{EventQueue, HeapEventQueue, Timer};
 use banaserve::util::prng::Rng;
 use banaserve::workload::{LengthProfile, WorkloadConfig};
 
@@ -103,8 +103,25 @@ fn main() {
         }
     });
 
-    // event queue: push AND drain 10k timers through the driver's pop path
+    // event queue: push AND drain 10k timers through the driver's pop path.
+    // The first row is the BinaryHeap REFERENCE implementation (the queue
+    // the sim used through PR 2, kept for this measurement and the
+    // drain-order equivalence gate); the second is the calendar queue the
+    // driver actually runs on now. Same workload, same name continuity.
     rec.bench("event queue push+pop (10k timers)", 100, || {
+        let mut q = HeapEventQueue::new();
+        let mut r = Rng::new(3);
+        for i in 0..10_000u64 {
+            q.push_timer(r.f64() * 100.0, Timer::new(i));
+        }
+        let mut drained = 0u64;
+        while let Some((t, ev)) = q.pop() {
+            std::hint::black_box((t, &ev));
+            drained += 1;
+        }
+        assert_eq!(drained, 10_000, "bench must drain everything it pushed");
+    });
+    rec.bench("event-queue push+pop 10k timers (calendar)", 100, || {
         let mut q = EventQueue::new();
         let mut r = Rng::new(3);
         for i in 0..10_000u64 {
@@ -132,6 +149,36 @@ fn main() {
     });
     rec.bench("Alg 2 pick_rotating (64 instances)", 100_000, || {
         std::hint::black_box(scheduler::pick_rotating(&loads, 1.6, 17));
+    });
+
+    // arrival routing at fleet size 64: the maintained LoadBook slice goes
+    // straight to the router, vs the per-arrival snapshot rebuild (fresh
+    // Vec allocation + full refill) every engine used to do per routed
+    // event — kept here as the in-bench reference, same pattern as
+    // evict_to_scan_reference. Target: LoadBook >= 3x.
+    let mut book = fleet::LoadBook::with_instances(64);
+    for i in 0..64usize {
+        book.set_queue(i, i % 7, (i * 13) % 23);
+    }
+    rec.bench("route arrival (fleet 64, LoadBook)", 200_000, || {
+        std::hint::black_box(fleet::LeastLoaded.pick(book.loads()));
+    });
+    rec.bench("route arrival (fleet 64, snapshot rebuild)", 200_000, || {
+        let loads: Vec<fleet::InstanceLoad> = (0..64usize)
+            .map(|i| {
+                let mut l = fleet::InstanceLoad::at(i);
+                l.queue_len = i % 7;
+                l.load_seqs = (i * 13) % 23;
+                l
+            })
+            .collect();
+        std::hint::black_box(fleet::LeastLoaded.pick(&loads));
+    });
+    // the filtered-scratch variant (BanaServe's Alg 2 candidate view):
+    // reusable buffer fill vs collect-per-pick
+    rec.bench("route arrival (fleet 64, LoadBook filtered)", 200_000, || {
+        let view = book.filtered(|l| l.queue_len < 6);
+        std::hint::black_box(fleet::pick_load_aware(view, 1.6, 17));
     });
 
     // typed timer-dispatch table: every engine event passes through

@@ -16,6 +16,17 @@ pub const RPS_GRID: [f64; 5] = [1.0, 5.0, 10.0, 15.0, 20.0];
 /// Seeds for the 5-repeat methodology.
 pub const SEEDS: [u64; 5] = [11, 23, 37, 51, 73];
 
+/// Derive `n` deterministic seeds from a base seed — the `--seeds N` CLI
+/// contract. The first seed IS the base (so `--seeds 1` reproduces a plain
+/// `--seed` run bit-for-bit); the rest come from the base-seeded xoshiro
+/// stream, so nearby bases give unrelated seed sets.
+pub fn derive_seeds(base: u64, n: usize) -> Vec<u64> {
+    let mut rng = crate::util::prng::Rng::new(base);
+    (0..n.max(1))
+        .map(|i| if i == 0 { base } else { rng.next_u64() })
+        .collect()
+}
+
 /// One cell of a figure: mean ± CI over seeds for each metric.
 #[derive(Debug)]
 pub struct Cell {
@@ -278,6 +289,21 @@ mod tests {
         assert!(row.get("us_per_iter").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(runs[0].get("sim_wall_ratio").unwrap().as_f64(), Some(2.0));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn derive_seeds_is_stable_and_starts_at_base() {
+        let s1 = derive_seeds(11, 5);
+        let s2 = derive_seeds(11, 5);
+        assert_eq!(s1, s2, "seed derivation must be deterministic");
+        assert_eq!(s1[0], 11, "--seeds 1 must reproduce a plain --seed run");
+        assert_eq!(derive_seeds(11, 1), vec![11]);
+        assert_eq!(derive_seeds(11, 0), vec![11], "n is clamped to >= 1");
+        let mut uniq = s1.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 5, "derived seeds must be distinct: {s1:?}");
+        assert_ne!(derive_seeds(12, 5)[1..], s1[1..], "bases must diverge");
     }
 
     #[test]

@@ -176,6 +176,48 @@ impl Device {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared device lifecycle (elastic fleets)
+// ---------------------------------------------------------------------------
+//
+// The engines embed `devices: Vec<Device>` directly (they destructure a
+// Cluster at construction), so the Active→Draining→Released state machine
+// is expressed as free functions over `&mut [Device]`: one implementation
+// serves `Cluster` AND every engine's inline device table, and the
+// release-refusal invariant (never release while KV is resident) lives in
+// exactly one place.
+
+/// Begin draining device `id`: Active→Draining. Returns true when the
+/// transition happened (no-op on already Draining/Released devices).
+pub fn begin_drain(devices: &mut [Device], id: usize) -> bool {
+    if devices[id].state == DeviceState::Active {
+        devices[id].state = DeviceState::Draining;
+        true
+    } else {
+        false
+    }
+}
+
+/// Release a drained device once the engine reports its residents gone
+/// (`residents_clear`: queues empty, no step in flight — only the engine
+/// knows its worker topology). REFUSES while KV bytes are still resident:
+/// releasing live state would corrupt memory accounting. Returns true when
+/// the device is Released after the call (idempotent).
+pub fn try_release(devices: &mut [Device], id: usize, residents_clear: bool) -> bool {
+    let d = &mut devices[id];
+    if d.state == DeviceState::Draining && residents_clear && d.kv_bytes == 0 {
+        d.state = DeviceState::Released;
+        true
+    } else {
+        d.state == DeviceState::Released
+    }
+}
+
+/// Devices currently admitting work.
+pub fn active_count(devices: &[Device]) -> usize {
+    devices.iter().filter(|d| d.is_active()).count()
+}
+
 /// A cluster: devices plus the interconnect model.
 #[derive(Debug, Clone)]
 pub struct Cluster {
@@ -222,12 +264,8 @@ impl Cluster {
 
     // --- elastic fleet (runtime scale-out / drain) -------------------------
     //
-    // Canonical device lifecycle for elastic fleets. The simulation engines
-    // embed `devices: Vec<Device>` directly (they destructure a Cluster at
-    // construction), so they drive the same Active→Draining→Released state
-    // machine on their own vectors; these methods are the reference
-    // implementation — keep the invariants (stable ids, no release while
-    // KV is resident) in lockstep with the engines' inline versions.
+    // Thin wrappers over the shared lifecycle free functions above — the
+    // engines call those functions directly on their own device tables.
 
     /// Add a device to the running cluster. Device ids are stable (indices
     /// into `devices`), so released slots are never reused — a new device
@@ -242,26 +280,18 @@ impl Cluster {
     /// must finish (or migrate away) its residents, then call
     /// [`Cluster::release_device`]. No-op on already Draining/Released.
     pub fn drain_device(&mut self, id: usize) {
-        if self.devices[id].state == DeviceState::Active {
-            self.devices[id].state = DeviceState::Draining;
-        }
+        begin_drain(&mut self.devices, id);
     }
 
     /// Release a drained device. Refuses (returns false) while KV is still
     /// resident — releasing live state would corrupt memory accounting.
     pub fn release_device(&mut self, id: usize) -> bool {
-        let d = &mut self.devices[id];
-        if d.state == DeviceState::Draining && d.kv_bytes == 0 {
-            d.state = DeviceState::Released;
-            true
-        } else {
-            d.state == DeviceState::Released
-        }
+        try_release(&mut self.devices, id, true)
     }
 
     /// Devices currently admitting work.
     pub fn active_count(&self) -> usize {
-        self.devices.iter().filter(|d| d.is_active()).count()
+        active_count(&self.devices)
     }
 }
 
@@ -360,6 +390,32 @@ mod tests {
         // draining a released device is a no-op
         c.drain_device(id);
         assert_eq!(c.devices[id].state, DeviceState::Released);
+    }
+
+    #[test]
+    fn lifecycle_free_functions_enforce_release_refusal() {
+        // the shared &mut [Device] functions the engines call directly
+        let mut devs = vec![
+            Device::new(0, A100_40G, Role::Prefill),
+            Device::new(1, A100_40G, Role::Decode),
+        ];
+        assert_eq!(active_count(&devs), 2);
+        assert!(begin_drain(&mut devs, 1));
+        assert!(!begin_drain(&mut devs, 1), "double drain is a no-op");
+        assert_eq!(active_count(&devs), 1);
+        // refuse while the engine still reports residents
+        assert!(!try_release(&mut devs, 1, false));
+        // refuse while KV is resident even if the engine says clear
+        devs[1].kv_bytes = 64;
+        assert!(!try_release(&mut devs, 1, true));
+        assert_eq!(devs[1].state, DeviceState::Draining);
+        devs[1].kv_bytes = 0;
+        assert!(try_release(&mut devs, 1, true));
+        assert_eq!(devs[1].state, DeviceState::Released);
+        assert!(try_release(&mut devs, 1, true), "release is idempotent");
+        // an Active device never releases through this path
+        assert!(!try_release(&mut devs, 0, true));
+        assert_eq!(devs[0].state, DeviceState::Active);
     }
 
     #[test]

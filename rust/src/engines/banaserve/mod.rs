@@ -82,6 +82,20 @@ pub struct BanaEngine {
     hysteresis_latched: bool,
     /// Rotates tie-breaks among equally-loaded prefill candidates.
     route_rr: usize,
+    /// Reusable routing scratch: Alg 2 candidate views are filled into the
+    /// book's persistent buffer instead of a fresh `Vec` per arrival
+    /// (BanaServe's `U` is step- and memory-dependent, so candidate rows
+    /// are computed at pick time; the allocation is what this removes).
+    book: fleet::LoadBook,
+    /// Reusable per-event scratch buffers — the arrival → route → step →
+    /// eviction hot cycle allocates nothing after warm-up.
+    woke_buf: Vec<usize>,
+    stranded_buf: Vec<u64>,
+    ids_buf: Vec<u64>,
+    finished_buf: Vec<u64>,
+    dloads_buf: Vec<migration::DeviceLoad>,
+    active_loads_buf: Vec<migration::DeviceLoad>,
+    fleet_loads_buf: Vec<fleet::FleetLoad>,
     /// Device spec elastic scale-out builds new devices from.
     gpu: GpuSpec,
     /// Elastic-fleet policy (decides on the control cycle's windowed loads).
@@ -95,6 +109,19 @@ pub struct BanaEngine {
     pub fleet_util: TimeSeries,
     pub scale_outs: u64,
     pub drains: u64,
+}
+
+/// Instantaneous U_d (Eq 32) of one device from its role instances — free
+/// function so the allocation-free routing fill can call it under a split
+/// borrow of the engine's fields.
+fn u_now_of(p: &InstanceSim, d: &InstanceSim, dev: &Device) -> f64 {
+    let c = |inst: &InstanceSim| {
+        inst.step
+            .as_ref()
+            .map(|s| s.st.compute_frac() * inst.share)
+            .unwrap_or(0.0)
+    };
+    (c(p) + c(d)).min(1.0) + dev.mem_frac()
 }
 
 impl BanaEngine {
@@ -144,6 +171,14 @@ impl BanaEngine {
             cooldown_until: 0.0,
             hysteresis_latched: false,
             route_rr: 0,
+            book: fleet::LoadBook::new(),
+            woke_buf: Vec::new(),
+            stranded_buf: Vec::new(),
+            ids_buf: Vec::new(),
+            finished_buf: Vec::new(),
+            dloads_buf: Vec::new(),
+            active_loads_buf: Vec::new(),
+            fleet_loads_buf: Vec::new(),
             gpu: cfg.gpu.clone(),
             autoscaler: fleet::Autoscaler::new(cfg.autoscale),
             as_next_eval: 0.0,
@@ -167,14 +202,7 @@ impl BanaEngine {
     /// Instantaneous U_d (Eq 32): running-step compute fraction scaled by
     /// the role shares, plus the memory fraction.
     fn u_now(&self, dev: usize) -> f64 {
-        let c = |inst: &InstanceSim| {
-            inst.step
-                .as_ref()
-                .map(|s| s.st.compute_frac() * inst.share)
-                .unwrap_or(0.0)
-        };
-        (c(&self.pinsts[dev]) + c(&self.dinsts[dev])).min(1.0)
-            + self.devices[dev].mem_frac()
+        u_now_of(&self.pinsts[dev], &self.dinsts[dev], &self.devices[dev])
     }
 
     /// Windowed U_d used by the control cycle: busy fraction over the last
@@ -189,22 +217,29 @@ impl BanaEngine {
 
     // --- Alg 2: load-aware request scheduling -----------------------------
 
-    fn route_prefill(&self, now: f64) -> Option<usize> {
-        let loads: Vec<fleet::InstanceLoad> = (0..self.devices.len())
-            .filter(|&i| {
-                self.share_prefill[i] > 0.0
-                    && now >= self.pinsts[i].frozen_until
-                    && self.devices[i].is_active()
-            })
-            .map(|i| {
+    /// Alg 2 dispatch over the book's reusable scratch — the candidate view
+    /// (unfrozen, prefill-capable, active devices with live `U`) is filled
+    /// into persistent storage, so the per-arrival snapshot allocation the
+    /// hot loop used to pay is gone.
+    fn route_prefill(&mut self, now: f64) -> Option<usize> {
+        let (book, pinsts, dinsts, devices, share) = (
+            &mut self.book,
+            &self.pinsts,
+            &self.dinsts,
+            &self.devices,
+            &self.share_prefill,
+        );
+        let s = book.fill();
+        for i in 0..devices.len() {
+            if share[i] > 0.0 && now >= pinsts[i].frozen_until && devices[i].is_active() {
                 let mut l = fleet::InstanceLoad::at(i);
-                l.u = self.u_now(i);
-                l.queue_len = self.pinsts[i].queue_len();
-                l
-            })
-            .collect();
-        fleet::pick_load_aware(&loads, self.bana.delta_l, self.route_rr)
-            .map(|pos| loads[pos].idx)
+                l.u = u_now_of(&pinsts[i], &dinsts[i], &devices[i]);
+                l.queue_len = pinsts[i].queue_len();
+                s.push(l);
+            }
+        }
+        fleet::pick_load_aware(book.scratch(), self.bana.delta_l, self.route_rr)
+            .map(|pos| book.scratch()[pos].idx)
     }
 
     fn route_prefill_mut(&mut self, now: f64) -> Option<usize> {
@@ -328,7 +363,8 @@ impl BanaEngine {
     /// cost was paid before the sequence became eligible.
     fn try_admit_global(&mut self, q: &mut EventQueue) {
         let now = q.now();
-        let mut woke: Vec<usize> = Vec::new();
+        let mut woke = std::mem::take(&mut self.woke_buf);
+        woke.clear();
         // mostly-FCFS with bounded skip-ahead: a huge-KV head must not
         // starve admissions that fit behind it (cf. vLLM which has no
         // cross-device queue at all)
@@ -381,9 +417,10 @@ impl BanaEngine {
                 woke.push(di);
             }
         }
-        for di in woke {
+        for &di in &woke {
             self.maybe_start_decode(di, q);
         }
+        self.woke_buf = woke;
     }
 
     fn preempt_to_prefill(&mut self, i: usize, sid: u64, q: &mut EventQueue) {
@@ -545,7 +582,8 @@ impl BanaEngine {
             step.st.time + step.overhead,
             &step.st,
         );
-        let mut finished = Vec::new();
+        let mut finished = std::mem::take(&mut self.finished_buf);
+        finished.clear();
         for &sid in &step.seqs {
             let Some(seq) = self.seqs.get_mut(sid) else { continue };
             if seq.phase != SeqPhase::Decoding || seq.instance != i {
@@ -563,12 +601,13 @@ impl BanaEngine {
                 finished.push(sid);
             }
         }
-        for sid in finished {
+        for &sid in &finished {
             if let Some(p) = self.dinsts[i].running.iter().position(|&x| x == sid) {
                 self.dinsts[i].running.remove(p);
             }
             self.finish(sid, i, now);
         }
+        self.finished_buf = finished;
         self.try_admit_global(q);
         self.maybe_start_decode(i, q);
     }
@@ -737,27 +776,32 @@ impl BanaEngine {
         self.stats.control_cycles += 1;
         let n = self.devices.len();
         let period = (now - self.last_cycle_at).max(1e-9);
-        let loads: Vec<migration::DeviceLoad> = (0..n)
-            .map(|i| {
-                let (bp0, bd0) = self.last_busy[i];
-                migration::DeviceLoad {
-                    idx: i,
-                    u: self.u_windowed(i, now),
-                    mem_frac: self.devices[i].mem_frac(),
-                    share_prefill: self.share_prefill[i],
-                    free_bytes: self.devices[i].mem_free(),
-                    busy_prefill: ((self.pinsts[i].busy_wall - bp0) / period).min(1.0),
-                    busy_decode: ((self.dinsts[i].busy_wall - bd0) / period).min(1.0),
-                }
-            })
-            .collect();
+        // both load views live in engine-owned buffers: a control cycle
+        // allocates nothing once the fleet has reached its peak size
+        let mut loads = std::mem::take(&mut self.dloads_buf);
+        loads.clear();
+        loads.extend((0..n).map(|i| {
+            let (bp0, bd0) = self.last_busy[i];
+            migration::DeviceLoad {
+                idx: i,
+                u: self.u_windowed(i, now),
+                mem_frac: self.devices[i].mem_frac(),
+                share_prefill: self.share_prefill[i],
+                free_bytes: self.devices[i].mem_free(),
+                busy_prefill: ((self.pinsts[i].busy_wall - bp0) / period).min(1.0),
+                busy_decode: ((self.dinsts[i].busy_wall - bd0) / period).min(1.0),
+            }
+        }));
         // migration only ever considers ACTIVE devices; `loads` keeps full
         // device indexing because pool_rebalance addresses it by device id
-        let active_loads: Vec<migration::DeviceLoad> = loads
-            .iter()
-            .filter(|l| self.devices[l.idx].is_active())
-            .copied()
-            .collect();
+        let mut active_loads = std::mem::take(&mut self.active_loads_buf);
+        active_loads.clear();
+        active_loads.extend(
+            loads
+                .iter()
+                .filter(|l| self.devices[l.idx].is_active())
+                .copied(),
+        );
         // hysteresis: once latched by a migration, wait for the gap to fall
         // below δ↓ (or the cooldown to expire) before re-arming
         let max_u = active_loads.iter().map(|l| l.u).fold(0.0, f64::max);
@@ -820,16 +864,23 @@ impl BanaEngine {
         if self.autoscaler.enabled() {
             self.autoscale_step(&loads, now, q);
         }
+        // buffers go back before the wake sweeps below (they re-enter
+        // routing, which shares no state with the migration views)
+        self.dloads_buf = loads;
+        self.active_loads_buf = active_loads;
         // safety net: re-dispatch work stranded on share-0 devices and make
         // sure no idle instance is sitting on runnable work
         for i in 0..self.devices.len() {
             if self.share_prefill[i] <= 0.0 && !self.pinsts[i].waiting.is_empty() {
-                let stranded: Vec<u64> = self.pinsts[i].waiting.drain(..).collect();
-                for sid in stranded {
+                let mut stranded = std::mem::take(&mut self.stranded_buf);
+                stranded.clear();
+                stranded.extend(self.pinsts[i].waiting.drain(..));
+                for &sid in &stranded {
                     let target = self.route_prefill(now).unwrap_or(i);
                     self.seqs.seq_mut(sid).instance = target;
                     self.pinsts[target].waiting.push_back(sid);
                 }
+                self.stranded_buf = stranded;
             }
         }
         self.try_admit_global(q);
@@ -874,7 +925,7 @@ impl BanaEngine {
     // --- elastic fleet -----------------------------------------------------
 
     fn active_count(&self) -> usize {
-        self.devices.iter().filter(|d| d.is_active()).count()
+        crate::cluster::active_count(&self.devices)
     }
 
     /// May device `i` be drained? Never mid-migration, and never the last
@@ -907,27 +958,32 @@ impl BanaEngine {
         }
         self.as_next_eval = now + self.autoscaler.cfg.window;
         let batch_cap = self.limits.max_batch_seqs as usize;
-        let active: Vec<fleet::FleetLoad> = (0..self.devices.len())
-            .filter(|&i| self.devices[i].is_active())
-            .map(|i| fleet::FleetLoad {
-                idx: i,
-                busy: (loads[i].busy_prefill + loads[i].busy_decode).min(1.0),
-                // queued work = prefill waiting + decode backlog beyond one
-                // batch (short-prompt bursts surface as oversized running
-                // sets, not waiting queues)
-                queued: self.pinsts[i].queue_len()
-                    + self.dinsts[i].running.len().saturating_sub(batch_cap),
-                resident: self.pinsts[i].load_seqs() + self.dinsts[i].running.len(),
-                drainable: self.drainable(i),
-            })
-            .collect();
+        let mut active = std::mem::take(&mut self.fleet_loads_buf);
+        active.clear();
+        active.extend(
+            (0..self.devices.len())
+                .filter(|&i| self.devices[i].is_active())
+                .map(|i| fleet::FleetLoad {
+                    idx: i,
+                    busy: (loads[i].busy_prefill + loads[i].busy_decode).min(1.0),
+                    // queued work = prefill waiting + decode backlog beyond
+                    // one batch (short-prompt bursts surface as oversized
+                    // running sets, not waiting queues)
+                    queued: self.pinsts[i].queue_len()
+                        + self.dinsts[i].running.len().saturating_sub(batch_cap),
+                    resident: self.pinsts[i].load_seqs() + self.dinsts[i].running.len(),
+                    drainable: self.drainable(i),
+                }),
+        );
         if !active.is_empty() {
             let mean = active.iter().map(|l| l.busy).sum::<f64>() / active.len() as f64;
             self.fleet_util.push(now, mean);
         }
         // store-staged sequences awaiting decode admission are engine-wide
         // backlog no single device owns
-        match self.autoscaler.decide(now, &active, self.pending_decode.len()) {
+        let decision = self.autoscaler.decide(now, &active, self.pending_decode.len());
+        self.fleet_loads_buf = active;
+        match decision {
             fleet::ScaleDecision::Out => self.scale_out(q),
             fleet::ScaleDecision::In { victim } => self.begin_drain(victim, q),
             fleet::ScaleDecision::Hold => {}
@@ -966,36 +1022,38 @@ impl BanaEngine {
     /// release it once empty.
     fn begin_drain(&mut self, victim: usize, q: &mut EventQueue) {
         let now = q.now();
-        self.devices[victim].state = DeviceState::Draining;
+        crate::cluster::begin_drain(&mut self.devices, victim);
         self.drains += 1;
         self.share_prefill[victim] = 0.0;
         self.pinsts[victim].share = 0.0;
         self.dinsts[victim].share = 1.0; // drain residents at full speed
-        let stranded: Vec<u64> = self.pinsts[victim].waiting.drain(..).collect();
-        for sid in stranded {
+        let mut stranded = std::mem::take(&mut self.stranded_buf);
+        stranded.clear();
+        stranded.extend(self.pinsts[victim].waiting.drain(..));
+        for &sid in &stranded {
             let target = self.route_prefill(now).unwrap_or(victim);
             self.seqs.seq_mut(sid).instance = target;
             self.pinsts[target].waiting.push_back(sid);
             self.maybe_start_prefill(target, q);
         }
+        self.stranded_buf = stranded;
         self.fleet_size.push(now, self.active_count() as f64);
         log::debug!("banaserve drain: device {victim} begins draining at t={now:.2}");
     }
 
-    /// Release drained devices whose residents are all gone.
+    /// Release drained devices whose residents are all gone (the shared
+    /// `cluster::try_release` enforces the KV release-refusal invariant).
     fn finish_drains(&mut self, now: f64) {
         for i in 0..self.devices.len() {
             if self.devices[i].state != DeviceState::Draining {
                 continue;
             }
-            if self.pinsts[i].waiting.is_empty()
+            let clear = self.pinsts[i].waiting.is_empty()
                 && self.pinsts[i].step.is_none()
                 && self.dinsts[i].step.is_none()
                 && self.dinsts[i].running.is_empty()
-                && self.devices[i].kv_bytes == 0
-                && !self.mig[i].in_flight
-            {
-                self.devices[i].state = DeviceState::Released;
+                && !self.mig[i].in_flight;
+            if crate::cluster::try_release(&mut self.devices, i, clear) {
                 self.fleet_size.push(now, self.active_count() as f64);
                 log::debug!("banaserve release: device {i} released at t={now:.2}");
             }
@@ -1072,8 +1130,10 @@ impl BanaEngine {
                 let budget =
                     (self.devices[from].kv_bytes as f64 * kv_frac) as u64;
                 let mut moved = 0u64;
-                let ids: Vec<u64> = self.dinsts[from].running.clone();
-                for sid in ids {
+                let mut ids = std::mem::take(&mut self.ids_buf);
+                ids.clear();
+                ids.extend_from_slice(&self.dinsts[from].running);
+                for &sid in &ids {
                     if moved >= budget {
                         break;
                     }
@@ -1097,6 +1157,7 @@ impl BanaEngine {
                     self.dinsts[to].running.push(sid);
                     moved += kv;
                 }
+                self.ids_buf = ids;
                 if moved == 0 {
                     return false;
                 }
@@ -1141,13 +1202,16 @@ impl BanaEngine {
         }
         // a device whose prefill share hit zero must not strand its queue
         if self.share_prefill[dev] <= 0.0 && !self.pinsts[dev].waiting.is_empty() {
-            let stranded: Vec<u64> = self.pinsts[dev].waiting.drain(..).collect();
+            let mut stranded = std::mem::take(&mut self.stranded_buf);
+            stranded.clear();
+            stranded.extend(self.pinsts[dev].waiting.drain(..));
             let now = q.now();
-            for sid in stranded {
+            for &sid in &stranded {
                 let target = self.route_prefill(now).unwrap_or(dev);
                 self.seqs.seq_mut(sid).instance = target;
                 self.pinsts[target].waiting.push_back(sid);
             }
+            self.stranded_buf = stranded;
         }
         // wake every role on every device (shares just changed)
         for i in 0..self.devices.len() {

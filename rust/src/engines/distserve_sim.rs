@@ -38,6 +38,17 @@ pub struct DistServeEngine {
     /// KV blobs that arrived at a decode instance that could not admit them
     /// yet (memory pressure) — the inter-phase "migration stall".
     admit_queue: Vec<VecDeque<u64>>,
+    /// Maintained prefill-pool loads (queue/resident counters synced at
+    /// admit/step/drain transitions) — `route_prefill` filters the
+    /// maintained slice instead of rebuilding a snapshot per arrival.
+    pbook: fleet::LoadBook,
+    /// Reusable scratch for decode placement (free memory is read live at
+    /// pick time; the book removes the per-handoff Vec allocation).
+    dbook: fleet::LoadBook,
+    /// Reusable per-event scratch (step completions, drains, autoscale).
+    finished_buf: Vec<u64>,
+    stranded_buf: Vec<u64>,
+    fleet_loads_buf: Vec<fleet::FleetLoad>,
     seqs: fleet::SeqTable,
     col: Collector,
     inflight: u64,
@@ -88,6 +99,11 @@ impl DistServeEngine {
             prefill,
             decode,
             admit_queue: (0..nd).map(|_| VecDeque::new()).collect(),
+            pbook: fleet::LoadBook::with_instances(cfg.n_prefill),
+            dbook: fleet::LoadBook::new(),
+            finished_buf: Vec::new(),
+            stranded_buf: Vec::new(),
+            fleet_loads_buf: Vec::new(),
             seqs: fleet::SeqTable::new(),
             col,
             inflight: 0,
@@ -106,33 +122,32 @@ impl DistServeEngine {
         }
     }
 
+    /// Sync the maintained load-book entry of prefill slot `i`.
+    fn sync_prefill(&mut self, i: usize) {
+        let (ql, ls) = (self.prefill[i].queue_len(), self.prefill[i].load_seqs());
+        self.pbook.set_queue(i, ql, ls);
+    }
+
     /// Prefill router: least (queue, load) over ACTIVE, unfrozen prefill
     /// devices — DistServe's simple dispatch, behind the fleet `LeastQueue`
-    /// policy. A spinning-up (frozen) instance is skipped while warm peers
-    /// exist; it becomes routable once its weights land. Static fleets
-    /// never freeze, so the filter is a no-op there.
-    fn route_prefill(&self, now: f64) -> usize {
-        let snapshot = |i: usize| {
-            let mut l = fleet::InstanceLoad::at(i);
-            l.queue_len = self.prefill[i].queue_len();
-            l.load_seqs = self.prefill[i].load_seqs();
-            l
-        };
-        let mut loads: Vec<fleet::InstanceLoad> = (0..self.prefill.len())
-            .filter(|&i| {
-                self.devices[self.prefill[i].device].is_active()
-                    && now >= self.prefill[i].frozen_until
-            })
-            .map(snapshot)
-            .collect();
-        if loads.is_empty() {
-            // every active device still spinning up: queue at one anyway
-            loads = (0..self.prefill.len())
-                .filter(|&i| self.devices[self.prefill[i].device].is_active())
-                .map(snapshot)
-                .collect();
+    /// policy over the MAINTAINED load book (no per-arrival snapshot
+    /// rebuild). A spinning-up (frozen) instance is skipped while warm
+    /// peers exist; it becomes routable once its weights land. Static
+    /// fleets never freeze, so the filter is a no-op there.
+    fn route_prefill(&mut self, now: f64) -> usize {
+        let (book, prefill, devices) = (&mut self.pbook, &self.prefill, &self.devices);
+        {
+            let loads = book.filtered(|l| {
+                devices[prefill[l.idx].device].is_active()
+                    && now >= prefill[l.idx].frozen_until
+            });
+            if let Some(pos) = fleet::LeastQueue.pick(loads) {
+                return loads[pos].idx;
+            }
         }
-        match fleet::LeastQueue.pick(&loads) {
+        // every active device still spinning up: queue at one anyway
+        let loads = book.filtered(|l| devices[prefill[l.idx].device].is_active());
+        match fleet::LeastQueue.pick(loads) {
             Some(pos) => loads[pos].idx,
             // unreachable while drain guards keep one active prefill device
             None => 0,
@@ -140,35 +155,36 @@ impl DistServeEngine {
     }
 
     /// Decode placement: most free KV memory over ACTIVE, unfrozen decode
-    /// devices (same spin-up rule as `route_prefill`).
-    fn route_decode(&self, now: f64) -> usize {
-        let snapshot = |i: usize| {
-            let mut l = fleet::InstanceLoad::at(i);
-            l.mem_free = self.devices[self.decode[i].device].mem_free();
-            l.running = self.decode[i].running.len();
-            l
+    /// devices (same spin-up rule as `route_prefill`). Free memory changes
+    /// with every KV alloc/free, so it is read live into the book's
+    /// reusable scratch rather than maintained.
+    fn route_decode(&mut self, now: f64) -> usize {
+        let (book, decode, devices) = (&mut self.dbook, &self.decode, &self.devices);
+        let fill = |s: &mut Vec<fleet::InstanceLoad>, skip_frozen: bool| {
+            s.clear();
+            for (i, inst) in decode.iter().enumerate() {
+                let dev = &devices[inst.device];
+                if dev.is_active() && (!skip_frozen || now >= inst.frozen_until) {
+                    let mut l = fleet::InstanceLoad::at(i);
+                    l.mem_free = dev.mem_free();
+                    l.running = inst.running.len();
+                    s.push(l);
+                }
+            }
         };
-        let mut loads: Vec<fleet::InstanceLoad> = (0..self.decode.len())
-            .filter(|&i| {
-                self.devices[self.decode[i].device].is_active()
-                    && now >= self.decode[i].frozen_until
-            })
-            .map(snapshot)
-            .collect();
-        if loads.is_empty() {
-            loads = (0..self.decode.len())
-                .filter(|&i| self.devices[self.decode[i].device].is_active())
-                .map(snapshot)
-                .collect();
+        let s = book.fill();
+        fill(s, true);
+        if s.is_empty() {
+            fill(s, false);
         }
-        match fleet::MostFreeMem.pick(&loads) {
-            Some(pos) => loads[pos].idx,
+        match fleet::MostFreeMem.pick(s) {
+            Some(pos) => s[pos].idx,
             None => 0,
         }
     }
 
     fn active_count(&self) -> usize {
-        self.devices.iter().filter(|d| d.is_active()).count()
+        crate::cluster::active_count(&self.devices)
     }
 
     fn busy_wall_of_dev(&self, d: usize) -> f64 {
@@ -179,7 +195,15 @@ impl DistServeEngine {
         }
     }
 
+    /// Try to start a prefill step on slot `i`, then sync its load-book
+    /// entry (arrival pushes, preemption re-queues and drain re-routes all
+    /// end in this call).
     fn maybe_start_prefill(&mut self, i: usize, q: &mut EventQueue) {
+        self.maybe_start_prefill_inner(i, q);
+        self.sync_prefill(i);
+    }
+
+    fn maybe_start_prefill_inner(&mut self, i: usize, q: &mut EventQueue) {
         let now = q.now();
         if self.prefill[i].is_busy() || now < self.prefill[i].frozen_until {
             return;
@@ -386,7 +410,8 @@ impl DistServeEngine {
             step.st.time + step.overhead,
             &step.st,
         );
-        let mut finished = Vec::new();
+        let mut finished = std::mem::take(&mut self.finished_buf);
+        finished.clear();
         for &sid in &step.seqs {
             let Some(seq) = self.seqs.get_mut(sid) else {
                 continue;
@@ -406,12 +431,13 @@ impl DistServeEngine {
                 finished.push(sid);
             }
         }
-        for sid in finished {
+        for &sid in &finished {
             if let Some(p) = self.decode[di].running.iter().position(|&x| x == sid) {
                 self.decode[di].running.remove(p);
             }
             self.finish(sid, dev_idx, now);
         }
+        self.finished_buf = finished;
         self.maybe_start_decode(di, q);
     }
 
@@ -439,41 +465,46 @@ impl DistServeEngine {
         let now = q.now();
         let period = (now - self.as_last_eval).max(1e-9);
         self.finish_drains(now);
-        let active: Vec<fleet::FleetLoad> = (0..self.devices.len())
-            .filter(|&d| self.devices[d].is_active())
-            .map(|d| {
-                let slot = self.slot_of_dev[d];
-                let batch_cap = self.limits.max_batch_seqs as usize;
-                let (queued, resident) = match self.devices[d].role {
-                    Role::Prefill => (
-                        self.prefill[slot].queue_len(),
-                        self.prefill[slot].load_seqs(),
-                    ),
-                    _ => (
-                        // decode backlog = stalled KV blobs + running set
-                        // beyond one batch (compute queueing shows up there)
-                        self.admit_queue[slot].len()
-                            + self.decode[slot]
-                                .running
-                                .len()
-                                .saturating_sub(batch_cap),
-                        self.decode[slot].running.len() + self.admit_queue[slot].len(),
-                    ),
-                };
-                fleet::FleetLoad {
-                    idx: d,
-                    busy: self.windowed_busy(d, period),
-                    queued,
-                    resident,
-                    drainable: self.drainable(d),
-                }
-            })
-            .collect();
+        let mut active = std::mem::take(&mut self.fleet_loads_buf);
+        active.clear();
+        active.extend(
+            (0..self.devices.len())
+                .filter(|&d| self.devices[d].is_active())
+                .map(|d| {
+                    let slot = self.slot_of_dev[d];
+                    let batch_cap = self.limits.max_batch_seqs as usize;
+                    let (queued, resident) = match self.devices[d].role {
+                        Role::Prefill => (
+                            self.prefill[slot].queue_len(),
+                            self.prefill[slot].load_seqs(),
+                        ),
+                        _ => (
+                            // decode backlog = stalled KV blobs + running set
+                            // beyond one batch (compute queueing shows up there)
+                            self.admit_queue[slot].len()
+                                + self.decode[slot]
+                                    .running
+                                    .len()
+                                    .saturating_sub(batch_cap),
+                            self.decode[slot].running.len() + self.admit_queue[slot].len(),
+                        ),
+                    };
+                    fleet::FleetLoad {
+                        idx: d,
+                        busy: self.windowed_busy(d, period),
+                        queued,
+                        resident,
+                        drainable: self.drainable(d),
+                    }
+                }),
+        );
         if !active.is_empty() {
             let mean = active.iter().map(|l| l.busy).sum::<f64>() / active.len() as f64;
             self.fleet_util.push(now, mean);
         }
-        match self.autoscaler.decide(now, &active, 0) {
+        let decision = self.autoscaler.decide(now, &active, 0);
+        self.fleet_loads_buf = active;
+        match decision {
             fleet::ScaleDecision::Out => self.scale_out(q),
             fleet::ScaleDecision::In { victim } => self.begin_drain(victim, q),
             fleet::ScaleDecision::Hold => {}
@@ -499,25 +530,27 @@ impl DistServeEngine {
         }
     }
 
+    /// Mean windowed busy fraction over the ACTIVE devices of one role.
+    fn mean_busy_of_role(&self, role: Role, period: f64) -> f64 {
+        let (mut sum, mut n) = (0.0, 0usize);
+        for d in self.devices.iter().filter(|d| d.is_active() && d.role == role) {
+            sum += self.windowed_busy(d.id, period);
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
     /// Add one device to the hotter role pool, frozen until its weights land.
     fn scale_out(&mut self, q: &mut EventQueue) {
         let now = q.now();
         let period = (now - self.as_last_eval).max(1e-9);
-        let mean_busy = |devs: &DistServeEngine, role: Role| {
-            let ids: Vec<usize> = devs
-                .devices
-                .iter()
-                .filter(|d| d.is_active() && d.role == role)
-                .map(|d| d.id)
-                .collect();
-            if ids.is_empty() {
-                0.0
-            } else {
-                ids.iter().map(|&d| devs.windowed_busy(d, period)).sum::<f64>()
-                    / ids.len() as f64
-            }
-        };
-        let role = if mean_busy(self, Role::Prefill) >= mean_busy(self, Role::Decode) {
+        let role = if self.mean_busy_of_role(Role::Prefill, period)
+            >= self.mean_busy_of_role(Role::Decode, period)
+        {
             Role::Prefill
         } else {
             Role::Decode
@@ -536,6 +569,7 @@ impl DistServeEngine {
             Role::Prefill => {
                 self.slot_of_dev.push(self.prefill.len());
                 self.prefill.push(inst);
+                self.pbook.add_instance(); // stable slot, zeroed counters
             }
             _ => {
                 self.slot_of_dev.push(self.decode.len());
@@ -551,13 +585,16 @@ impl DistServeEngine {
     /// Stop admitting at `d`, redistribute queued work, let residents finish.
     fn begin_drain(&mut self, d: usize, q: &mut EventQueue) {
         let now = q.now();
-        self.devices[d].state = DeviceState::Draining;
+        crate::cluster::begin_drain(&mut self.devices, d);
         self.drains += 1;
         let slot = self.slot_of_dev[d];
+        let mut stranded = std::mem::take(&mut self.stranded_buf);
+        stranded.clear();
         match self.devices[d].role {
             Role::Prefill => {
-                let stranded: Vec<u64> = self.prefill[slot].waiting.drain(..).collect();
-                for sid in stranded {
+                stranded.extend(self.prefill[slot].waiting.drain(..));
+                self.sync_prefill(slot);
+                for &sid in &stranded {
                     let pi = self.route_prefill(now);
                     self.seqs.seq_mut(sid).instance = self.prefill[pi].device;
                     self.prefill[pi].waiting.push_back(sid);
@@ -565,8 +602,8 @@ impl DistServeEngine {
                 }
             }
             _ => {
-                let stranded: Vec<u64> = self.admit_queue[slot].drain(..).collect();
-                for sid in stranded {
+                stranded.extend(self.admit_queue[slot].drain(..));
+                for &sid in &stranded {
                     let di = self.route_decode(now);
                     self.admit_queue[di].push_back(sid);
                     self.try_admit(di, q);
@@ -574,11 +611,13 @@ impl DistServeEngine {
                 }
             }
         }
+        self.stranded_buf = stranded;
         self.fleet_size.push(now, self.active_count() as f64);
         log::debug!("distserve drain: device {d} begins draining at t={now:.2}");
     }
 
-    /// Release drained devices whose residents are all gone.
+    /// Release drained devices whose residents are all gone (the shared
+    /// `cluster::try_release` enforces the KV release-refusal invariant).
     fn finish_drains(&mut self, now: f64) {
         for d in 0..self.devices.len() {
             if self.devices[d].state != DeviceState::Draining {
@@ -596,8 +635,7 @@ impl DistServeEngine {
                         && self.admit_queue[slot].is_empty()
                 }
             };
-            if clear && self.devices[d].kv_bytes == 0 {
-                self.devices[d].state = DeviceState::Released;
+            if crate::cluster::try_release(&mut self.devices, d, clear) {
                 self.fleet_size.push(now, self.active_count() as f64);
                 log::debug!("distserve release: device {d} released at t={now:.2}");
             }

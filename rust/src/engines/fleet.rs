@@ -170,6 +170,113 @@ pub trait Router {
     fn name(&self) -> &'static str;
 }
 
+// ---------------------------------------------------------------------------
+// Incremental load tracking
+// ---------------------------------------------------------------------------
+
+/// Persistent per-engine load tracking: one [`InstanceLoad`] per routable
+/// instance, kept up to date at admit / step / finish / drain transitions,
+/// plus a reusable scratch buffer for filtered router views.
+///
+/// This replaces the per-arrival snapshot rebuild (a fresh
+/// `Vec<InstanceLoad>` allocation + full refill on EVERY routed event) the
+/// engines used to do. Two usage modes:
+///
+/// * **Maintained slice** — engines whose router consumes cheap counters
+///   (queue depth, resident sequences) sync them via [`LoadBook::set_queue`]
+///   at the few transition points that mutate them and hand
+///   [`LoadBook::loads`] straight to [`Router::pick`]: zero per-arrival
+///   work beyond the pick itself (vLLM, HFT).
+/// * **Filtered scratch** — engines that route over a filtered or derived
+///   view (BanaServe's Alg 2 over unfrozen prefill-capable devices,
+///   DistServe's role pools) fill the reusable scratch via
+///   [`LoadBook::filtered`] / [`LoadBook::fill`] instead of collecting a
+///   fresh `Vec`: allocation-free after warm-up.
+///
+/// The equivalence property test in `tests/prop_engines.rs` pins a
+/// maintained book against rebuilt-from-scratch snapshots across random
+/// transition streams.
+#[derive(Debug, Default)]
+pub struct LoadBook {
+    entries: Vec<InstanceLoad>,
+    scratch: Vec<InstanceLoad>,
+}
+
+impl LoadBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A book over `n` instances, all zeroed.
+    pub fn with_instances(n: usize) -> Self {
+        LoadBook {
+            entries: (0..n).map(InstanceLoad::at).collect(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Append a zeroed entry for a new (scaled-out) instance; returns its
+    /// index. Instance indices are stable — drained instances keep their
+    /// entry (engines filter them out of router views).
+    pub fn add_instance(&mut self) -> usize {
+        let idx = self.entries.len();
+        self.entries.push(InstanceLoad::at(idx));
+        idx
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> &InstanceLoad {
+        &self.entries[i]
+    }
+
+    pub fn entry_mut(&mut self, i: usize) -> &mut InstanceLoad {
+        &mut self.entries[i]
+    }
+
+    /// The maintained full slice, in instance order — what a filter-free
+    /// router reads directly.
+    pub fn loads(&self) -> &[InstanceLoad] {
+        &self.entries
+    }
+
+    /// O(1) sync of the queue counters for instance `i` — the common
+    /// admit/step/finish transition hook.
+    pub fn set_queue(&mut self, i: usize, queue_len: usize, load_seqs: usize) {
+        let e = &mut self.entries[i];
+        e.queue_len = queue_len;
+        e.load_seqs = load_seqs;
+    }
+
+    /// Fill the scratch buffer with the maintained entries passing `keep`
+    /// and return it — the reusable filtered router view.
+    pub fn filtered(&mut self, mut keep: impl FnMut(&InstanceLoad) -> bool) -> &[InstanceLoad] {
+        self.scratch.clear();
+        let (entries, scratch) = (&self.entries, &mut self.scratch);
+        scratch.extend(entries.iter().filter(|&l| keep(l)).copied());
+        scratch
+    }
+
+    /// Clear and hand out the scratch buffer for a custom fill (derived
+    /// fields like BanaServe's windowed `U` or DistServe's live free-memory
+    /// reads). Read the result back via [`LoadBook::scratch`].
+    pub fn fill(&mut self) -> &mut Vec<InstanceLoad> {
+        self.scratch.clear();
+        &mut self.scratch
+    }
+
+    /// The scratch buffer as last filled.
+    pub fn scratch(&self) -> &[InstanceLoad] {
+        &self.scratch
+    }
+}
+
 /// Strict round robin over the snapshot order.
 #[derive(Debug, Default)]
 pub struct RoundRobin {
@@ -587,6 +694,51 @@ mod tests {
             queue_len: q,
             ..InstanceLoad::at(idx)
         }
+    }
+
+    #[test]
+    fn load_book_maintains_entries_and_reuses_scratch() {
+        let mut b = LoadBook::with_instances(3);
+        assert_eq!(b.len(), 3);
+        b.set_queue(1, 4, 7);
+        b.entry_mut(2).u = 0.5;
+        assert_eq!(b.get(1).queue_len, 4);
+        assert_eq!(b.loads()[1].load_seqs, 7);
+        assert_eq!(b.loads()[2].u, 0.5);
+        // filtered view preserves instance order and idx mapping
+        let f = b.filtered(|l| l.queue_len > 0);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].idx, 1);
+        // scale-out appends a zeroed stable-index entry
+        assert_eq!(b.add_instance(), 3);
+        assert_eq!(b.get(3), &InstanceLoad::at(3));
+        // custom fill reuses the same scratch storage
+        let s = b.fill();
+        s.push(InstanceLoad::at(9));
+        assert_eq!(b.scratch().len(), 1);
+        assert_eq!(b.scratch()[0].idx, 9);
+        assert!(b.fill().is_empty(), "fill must clear the scratch");
+    }
+
+    #[test]
+    fn load_book_slice_routes_like_a_rebuilt_snapshot() {
+        // the maintained slice and a freshly rebuilt snapshot must be
+        // indistinguishable to every router
+        let mut b = LoadBook::with_instances(4);
+        for (i, (q, l)) in [(3, 5), (1, 2), (0, 0), (2, 9)].iter().enumerate() {
+            b.set_queue(i, *q, *l);
+        }
+        let rebuilt: Vec<InstanceLoad> = (0..4)
+            .map(|i| {
+                let mut l = InstanceLoad::at(i);
+                l.queue_len = b.get(i).queue_len;
+                l.load_seqs = b.get(i).load_seqs;
+                l
+            })
+            .collect();
+        assert_eq!(b.loads(), &rebuilt[..]);
+        assert_eq!(LeastLoaded.pick(b.loads()), LeastLoaded.pick(&rebuilt));
+        assert_eq!(LeastQueue.pick(b.loads()), LeastQueue.pick(&rebuilt));
     }
 
     #[test]

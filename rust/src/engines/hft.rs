@@ -10,7 +10,7 @@
 //!   for every slot.
 
 use super::common::{self, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
-use super::fleet::{self, FleetEvent};
+use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, Role};
 use crate::config::ExperimentConfig;
 use crate::metrics::Collector;
@@ -42,6 +42,9 @@ pub struct HftEngine {
     col: Collector,
     inflight: u64,
     router: fleet::RoundRobin,
+    /// Maintained per-instance loads (round robin ignores the values, but
+    /// the maintained slice lets load-aware policies drop in unchanged).
+    book: fleet::LoadBook,
 }
 
 impl HftEngine {
@@ -65,10 +68,19 @@ impl HftEngine {
             col,
             inflight: 0,
             router: fleet::RoundRobin::default(),
+            book: fleet::LoadBook::with_instances(cfg.n_devices),
         }
     }
 
+    /// Try to start a batch on instance `i`, then sync its load-book entry
+    /// (every waiting-queue mutation ends in this call).
     fn maybe_start(&mut self, i: usize, q: &mut EventQueue) {
+        self.maybe_start_inner(i, q);
+        let (ql, ls) = (self.insts[i].queue_len(), self.insts[i].load_seqs());
+        self.book.set_queue(i, ql, ls);
+    }
+
+    fn maybe_start_inner(&mut self, i: usize, q: &mut EventQueue) {
         let now = q.now();
         if self.insts[i].is_busy() || self.batches[i].is_some() {
             return;
@@ -127,16 +139,19 @@ impl HftEngine {
             1.0,
         );
         common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
+        // the batch owns the seq ids; HFT's step_done iterates the batch's
+        // own list, so the StepInfo carries none — no Vec clone per batch
+        let slot_kv = reserve / chosen.len().max(1) as u64;
         self.batches[i] = Some(StaticBatch {
-            seqs: chosen.clone(),
+            seqs: chosen,
             padded_prompt,
             max_output,
             steps_done: 0,
-            slot_kv: reserve / chosen.len().max(1) as u64,
+            slot_kv,
         });
         self.insts[i].step = Some(StepInfo {
             kind: StepKind::Prefill,
-            seqs: chosen,
+            seqs: Vec::new(),
             st,
             overhead: 0.0,
         });
@@ -208,7 +223,7 @@ impl HftEngine {
             common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
             self.insts[i].step = Some(StepInfo {
                 kind: StepKind::StaticDecode,
-                seqs: batch.seqs.clone(),
+                seqs: Vec::new(), // the batch owns the ids (see maybe_start)
                 st,
                 overhead: 0.0,
             });
@@ -242,7 +257,7 @@ impl Engine for HftEngine {
             let _ = q;
             return;
         }
-        let i = self.router.pick_n(self.insts.len()).expect("non-empty fleet");
+        let i = self.router.pick(self.book.loads()).expect("non-empty fleet");
         let mut seq = Seq::new(req);
         seq.instance = self.insts[i].device;
         let sid = self.seqs.insert(seq);

@@ -22,9 +22,13 @@
 //!   payloads. An engine drops a payload (`SeqTable::remove`) exactly once,
 //!   when the request finishes — in-flight timers may still carry the id,
 //!   so handlers must tolerate ids whose slot is already empty.
-//! * **Routing** is a pure function of [`fleet::InstanceLoad`] snapshots:
-//!   a [`fleet::Router`] may keep its own cursor state but must not reach
-//!   into engine state. Engines build snapshots, route, then mutate.
+//! * **Routing** is a pure function of [`fleet::InstanceLoad`] views: a
+//!   [`fleet::Router`] may keep its own cursor state but must not reach
+//!   into engine state. Views come from the engine's [`fleet::LoadBook`] —
+//!   either the maintained full slice (counters synced at admit/step/
+//!   finish/drain transitions) or the book's reusable scratch for filtered
+//!   and derived candidate sets; per-event snapshot `Vec`s are not
+//!   allocated on the hot path.
 //! * **Timers** are encoded/decoded exclusively through
 //!   [`fleet::FleetEvent`]; the raw `(tag, a, b)` wire format in
 //!   [`common::tags`] is an implementation detail of that table.

@@ -58,6 +58,12 @@ pub struct VllmEngine {
     cache_budget: u64,
     pub policy: RouterPolicy,
     router: Box<dyn fleet::Router>,
+    /// Maintained per-instance loads: synced at admit/step/finish
+    /// transitions so `route` reads a maintained slice instead of
+    /// rebuilding a snapshot `Vec` per arrival.
+    book: fleet::LoadBook,
+    /// Reusable scratch for step-completion bookkeeping (no per-event Vec).
+    finished_buf: Vec<u64>,
     seqs: fleet::SeqTable,
     col: Collector,
     inflight: u64,
@@ -112,6 +118,8 @@ impl VllmEngine {
             cache_budget,
             policy,
             router: policy.build(),
+            book: fleet::LoadBook::with_instances(cfg.n_devices),
+            finished_buf: Vec::new(),
             seqs: fleet::SeqTable::new(),
             col,
             inflight: 0,
@@ -121,29 +129,32 @@ impl VllmEngine {
         }
     }
 
-    /// Router: snapshot per-instance loads and delegate to the fleet
-    /// router built from `policy`.
+    /// Router: the maintained [`fleet::LoadBook`] slice goes straight to
+    /// the fleet router built from `policy` — only the request-specific
+    /// cache-hit fractions are written per arrival (they cannot be
+    /// maintained: they depend on the incoming prompt).
     fn route(&mut self, req: &Request) -> usize {
-        let wants_cache = matches!(self.policy, RouterPolicy::CacheAware { .. });
-        let plen = req.cache_tokens.len().max(1) as f64;
-        let loads: Vec<fleet::InstanceLoad> = (0..self.insts.len())
-            .map(|i| {
-                let mut l = fleet::InstanceLoad::at(i);
-                l.load_seqs = self.insts[i].load_seqs();
-                l.queue_len = self.insts[i].queue_len();
-                if wants_cache && self.prefix_caching {
-                    l.cache_hit =
-                        self.caches[i].peek_prefix(&req.cache_tokens) as f64 / plen;
-                }
-                l
-            })
-            .collect();
-        let pos = self.router.pick(&loads).expect("non-empty fleet");
-        loads[pos].idx
+        if matches!(self.policy, RouterPolicy::CacheAware { .. }) && self.prefix_caching {
+            let plen = req.cache_tokens.len().max(1) as f64;
+            for i in 0..self.caches.len() {
+                self.book.entry_mut(i).cache_hit =
+                    self.caches[i].peek_prefix(&req.cache_tokens) as f64 / plen;
+            }
+        }
+        let pos = self.router.pick(self.book.loads()).expect("non-empty fleet");
+        self.book.loads()[pos].idx
     }
 
-    /// Try to start a step on instance `i`.
+    /// Try to start a step on instance `i`, then sync its load-book entry
+    /// — every queue/running mutation funnels through here (arrival pushes,
+    /// plan_prefill pops, preemption, step completion all end in this call).
     fn maybe_start(&mut self, i: usize, q: &mut EventQueue) {
+        self.maybe_start_inner(i, q);
+        let (ql, ls) = (self.insts[i].queue_len(), self.insts[i].load_seqs());
+        self.book.set_queue(i, ql, ls);
+    }
+
+    fn maybe_start_inner(&mut self, i: usize, q: &mut EventQueue) {
         let now = q.now();
         if self.insts[i].is_busy() || now < self.insts[i].frozen_until {
             return;
@@ -299,7 +310,8 @@ impl VllmEngine {
                 }
             }
             StepKind::Decode | StepKind::StaticDecode => {
-                let mut finished = Vec::new();
+                let mut finished = std::mem::take(&mut self.finished_buf);
+                finished.clear();
                 for &sid in &step.seqs {
                     let seq = self.seqs.seq_mut(sid);
                     if seq.phase != SeqPhase::Decoding {
@@ -317,13 +329,14 @@ impl VllmEngine {
                         finished.push(sid);
                     }
                 }
-                for sid in finished {
+                for &sid in &finished {
                     let pos = self.insts[i].running.iter().position(|&x| x == sid);
                     if let Some(p) = pos {
                         self.insts[i].running.remove(p);
                     }
                     self.finish(sid, now);
                 }
+                self.finished_buf = finished;
             }
         }
         self.maybe_start(i, q);

@@ -8,7 +8,8 @@
 //!                     --scenario bursty-autoscale runs the elastic-fleet
 //!                     comparison (static base/peak fleets vs autoscaled)
 //!                     on a time-varying-rate trace and reports P99 total
-//!                     processing time + fleet-size series as JSON
+//!                     processing time (per-seed + mean ± 95% CI) and
+//!                     fleet-size series as JSON
 //!   sweep             RPS sweep for one engine/profile
 //!   figure <id>       regenerate a paper figure (1|2a|2b|6|7|8|9|10|11)
 //!   migrate-demo      show Alg 1 decisions on a synthetic imbalance
@@ -19,8 +20,11 @@
 //! --share-prob --delta --rho --layer-migration --attention-migration
 //! --global-store --config <file.json> --autoscale --autoscale-min
 //! --autoscale-max --scale-out-util --scale-in-util --autoscale-cooldown
-//! --autoscale-window; bursty-autoscale adds --base-devices --peak-devices
-//! --burst-factor --burst-secs --period-secs
+//! --autoscale-window; sweep and bursty-autoscale add --seeds N (N
+//! deterministic seeds derived from --seed; 5 = the paper's CI
+//! methodology) and --threads (parallel cells, default: all cores);
+//! bursty-autoscale adds --base-devices --peak-devices --burst-factor
+//! --burst-secs --period-secs
 
 use banaserve::config::{EngineKind, ExperimentConfig};
 use banaserve::engines;
@@ -180,12 +184,22 @@ fn cmd_simulate(a: &Args) -> i32 {
 /// (c) an elastic fleet that starts at base and autoscales up to peak.
 /// The headline comparison is elastic vs the base-provisioned static fleet
 /// at equal peak device count — the over-provision-or-violate-SLOs dilemma
-/// the autoscaler dissolves. Results print as a table and land in
-/// `bench_results/bursty_autoscale.json`.
+/// the autoscaler dissolves.
+///
+/// `--seeds N` runs every engine × fleet variant over N deterministic
+/// seeds derived from `--seed` (the paper's 5-repeat methodology is
+/// `--seeds 5`); cells fan out across cores (`--threads`, default: all),
+/// each cell owning its engine + collector, and merge in fixed
+/// (engine, variant, seed) order — per-seed results are byte-identical to
+/// a serial run. The table reports mean ± 95% CI for P99; per-seed values
+/// plus the aggregate land in `bench_results/bursty_autoscale.json`.
 fn cmd_bursty_autoscale(a: &Args) -> i32 {
+    use banaserve::bench_support::derive_seeds;
     use banaserve::engines::run_experiment;
     use banaserve::metrics::TimeSeries;
     use banaserve::util::json::{self, Value};
+    use banaserve::util::parallel;
+    use banaserve::util::stats::Summary;
     use banaserve::workload::ArrivalProcess;
 
     let base = a.usize_or("base-devices", 2);
@@ -196,9 +210,12 @@ fn cmd_bursty_autoscale(a: &Args) -> i32 {
     let period_secs = a.f64_or("period-secs", 48.0);
     let duration = a.f64_or("duration", 150.0);
     let seed = a.u64_or("seed", 11);
+    let n_seeds = a.usize_or("seeds", 1);
+    let threads = a.usize_or("threads", parallel::default_threads());
     let model = a.str_or("model", "llama-13b");
+    let seeds = derive_seeds(seed, n_seeds);
 
-    let mk = |engine: EngineKind, devices: usize, elastic: bool| {
+    let mk = |engine: EngineKind, devices: usize, elastic: bool, seed: u64| {
         let mut c = ExperimentConfig::default_for(engine, model, rps, seed);
         c.n_devices = devices;
         c.n_prefill = (devices / 2).max(1);
@@ -221,78 +238,127 @@ fn cmd_bursty_autoscale(a: &Args) -> i32 {
 
     println!(
         "bursty-autoscale: base={base} peak={peak} devices, {rps} rps x{burst_factor} \
-         bursts ({burst_secs}s of every {period_secs}s), {duration}s trace, seed {seed}"
+         bursts ({burst_secs}s of every {period_secs}s), {duration}s trace, \
+         {} seed(s) from {seed} on {threads} thread(s)",
+        seeds.len()
     );
+
+    let engines_list = [EngineKind::BanaServe, EngineKind::DistServe];
+    let variants: [(&str, usize, bool); 3] = [
+        ("static-base", base, false),
+        ("static-peak", peak, false),
+        ("elastic", base, true),
+    ];
+    // one cell per engine × fleet variant × seed; every cell owns its
+    // engine and collector, so cells are independent and deterministic —
+    // the fan-out below keeps all cores busy (wall-clock ≈ slowest cell)
+    let mut tasks: Vec<(EngineKind, usize, bool, u64)> = Vec::new();
+    for &engine in &engines_list {
+        for &(_, devices, elastic) in &variants {
+            for &s in &seeds {
+                tasks.push((engine, devices, elastic, s));
+            }
+        }
+    }
+    let mut outs = parallel::parallel_map(&tasks, threads, |_, &(engine, devices, elastic, s)| {
+        run_experiment(&mk(engine, devices, elastic, s))
+    });
+
     println!(
-        "  {:<10} {:<12} {:>6} {:>10} {:>10} {:>10} {:>11} {:>9}",
-        "engine", "fleet", "n", "p99 e2e", "mean e2e", "tput", "peak devs", "avg devs"
+        "  {:<10} {:<12} {:>6} {:>16} {:>10} {:>10} {:>11} {:>9}",
+        "engine", "fleet", "n", "p99 e2e (±ci95)", "mean e2e", "tput", "peak devs", "avg devs"
     );
     let mut rows: Vec<Value> = Vec::new();
+    let mut summary_rows: Vec<Value> = Vec::new();
     let mut code = 0;
-    for engine in [EngineKind::BanaServe, EngineKind::DistServe] {
+    for (e_i, &engine) in engines_list.iter().enumerate() {
         let mut p99_of: Vec<(&str, f64)> = Vec::new();
-        for (label, devices, elastic) in [
-            ("static-base", base, false),
-            ("static-peak", peak, false),
-            ("elastic", base, true),
-        ] {
-            let cfg = mk(engine, devices, elastic);
-            let out = run_experiment(&cfg);
-            let mut rep = out.report;
-            let p99 = rep.e2e.p99();
-            let fleet = TimeSeries {
-                points: out.extras.fleet_size_series.clone(),
-            };
-            let peak_devs = fleet.max_value().max(devices as f64);
-            let avg_devs = if fleet.is_empty() {
-                devices as f64
-            } else {
-                fleet.time_weighted_mean(rep.makespan)
-            };
-            println!(
-                "  {:<10} {:<12} {:>6} {:>9.2}s {:>9.2}s {:>10.1} {:>11.1} {:>9.2}",
-                cfg.engine.name(),
-                label,
-                rep.n_requests,
-                p99,
-                rep.e2e.mean(),
-                rep.throughput_tok_s,
-                peak_devs,
-                avg_devs
-            );
-            rows.push(json::obj(vec![
-                ("engine", json::s(cfg.engine.name())),
-                ("fleet", json::s(label)),
-                ("n_requests", json::num(rep.n_requests as f64)),
-                ("p99_total_s", json::num(p99)),
-                ("mean_e2e_s", json::num(rep.e2e.mean())),
-                ("throughput_tok_s", json::num(rep.throughput_tok_s)),
-                ("makespan_s", json::num(rep.makespan)),
-                ("peak_devices", json::num(peak_devs)),
-                ("avg_devices", json::num(avg_devs)),
-                ("scale_outs", json::num(out.extras.scale_outs as f64)),
-                ("drains", json::num(out.extras.drains as f64)),
-                (
-                    "fleet_size_series",
-                    json::arr(
-                        out.extras
-                            .fleet_size_series
-                            .iter()
-                            .map(|&(t, v)| json::arr(vec![json::num(t), json::num(v)]))
-                            .collect(),
+        for (v_i, &(label, devices, _)) in variants.iter().enumerate() {
+            let mut p99s = Summary::new();
+            let mut e2es = Summary::new();
+            let mut tputs = Summary::new();
+            let mut peaks = Summary::new();
+            let mut avgs = Summary::new();
+            let mut n_req = Summary::new();
+            for (s_i, &s) in seeds.iter().enumerate() {
+                let idx = (e_i * variants.len() + v_i) * seeds.len() + s_i;
+                let out = &mut outs[idx];
+                let p99 = out.report.e2e.p99();
+                let fleet = TimeSeries {
+                    points: out.extras.fleet_size_series.clone(),
+                };
+                let peak_devs = fleet.max_value().max(devices as f64);
+                let avg_devs = if fleet.is_empty() {
+                    devices as f64
+                } else {
+                    fleet.time_weighted_mean(out.report.makespan)
+                };
+                p99s.add(p99);
+                e2es.add(out.report.e2e.mean());
+                tputs.add(out.report.throughput_tok_s);
+                peaks.add(peak_devs);
+                avgs.add(avg_devs);
+                n_req.add(out.report.n_requests as f64);
+                rows.push(json::obj(vec![
+                    ("engine", json::s(engine.name())),
+                    ("fleet", json::s(label)),
+                    ("seed", json::num(s as f64)),
+                    ("n_requests", json::num(out.report.n_requests as f64)),
+                    ("p99_total_s", json::num(p99)),
+                    ("mean_e2e_s", json::num(out.report.e2e.mean())),
+                    ("throughput_tok_s", json::num(out.report.throughput_tok_s)),
+                    ("makespan_s", json::num(out.report.makespan)),
+                    ("peak_devices", json::num(peak_devs)),
+                    ("avg_devices", json::num(avg_devs)),
+                    ("scale_outs", json::num(out.extras.scale_outs as f64)),
+                    ("drains", json::num(out.extras.drains as f64)),
+                    (
+                        "fleet_size_series",
+                        json::arr(
+                            out.extras
+                                .fleet_size_series
+                                .iter()
+                                .map(|&(t, v)| json::arr(vec![json::num(t), json::num(v)]))
+                                .collect(),
+                        ),
                     ),
-                ),
+                ]));
+            }
+            println!(
+                "  {:<10} {:<12} {:>6.0} {:>9.2}±{:<6.2} {:>9.2}s {:>10.1} {:>11.1} {:>9.2}",
+                engine.name(),
+                label,
+                n_req.mean(),
+                p99s.mean(),
+                p99s.ci95_half_width(),
+                e2es.mean(),
+                tputs.mean(),
+                peaks.max(),
+                avgs.mean()
+            );
+            summary_rows.push(json::obj(vec![
+                ("engine", json::s(engine.name())),
+                ("fleet", json::s(label)),
+                ("n_seeds", json::num(seeds.len() as f64)),
+                ("p99_total_s_mean", json::num(p99s.mean())),
+                ("p99_total_s_ci95", json::num(p99s.ci95_half_width())),
+                ("mean_e2e_s_mean", json::num(e2es.mean())),
+                ("mean_e2e_s_ci95", json::num(e2es.ci95_half_width())),
+                ("throughput_tok_s_mean", json::num(tputs.mean())),
+                ("peak_devices_max", json::num(peaks.max())),
+                ("avg_devices_mean", json::num(avgs.mean())),
             ]));
-            p99_of.push((label, p99));
+            p99_of.push((label, p99s.mean()));
         }
         let find = |l: &str| p99_of.iter().find(|r| r.0 == l).map(|r| r.1).unwrap_or(0.0);
         let (stat, ela) = (find("static-base"), find("elastic"));
         let better = ela < stat;
         println!(
-            "  -> {}: elastic p99 {:.2}s vs static-base p99 {:.2}s ({}, {:.2}x)",
+            "  -> {}: elastic p99 {:.2}s vs static-base p99 {:.2}s over {} seed(s) ({}, {:.2}x)",
             engine.name(),
             ela,
             stat,
+            seeds.len(),
             if better { "elastic wins" } else { "static wins" },
             stat / ela.max(1e-9)
         );
@@ -308,7 +374,12 @@ fn cmd_bursty_autoscale(a: &Args) -> i32 {
         ("rps", json::num(rps)),
         ("burst_factor", json::num(burst_factor)),
         ("seed", json::num(seed as f64)),
+        (
+            "seeds",
+            json::arr(seeds.iter().map(|&s| json::num(s as f64)).collect()),
+        ),
         ("results", json::arr(rows)),
+        ("summary", json::arr(summary_rows)),
     ]);
     let path = "bench_results/bursty_autoscale.json";
     match std::fs::write(path, json::write(&doc)) {
@@ -319,7 +390,10 @@ fn cmd_bursty_autoscale(a: &Args) -> i32 {
 }
 
 fn cmd_sweep(a: &Args) -> i32 {
-    use banaserve::bench_support::{print_figure, run_cell};
+    use banaserve::bench_support::{derive_seeds, print_figure, Cell};
+    use banaserve::metrics::SeedAggregate;
+    use banaserve::util::parallel;
+    use banaserve::util::stats::Summary;
     let engines_list: Vec<EngineKind> = {
         let l = a.list("engines");
         if l.is_empty() {
@@ -336,19 +410,53 @@ fn cmd_sweep(a: &Args) -> i32 {
             l.iter().filter_map(|s| s.parse().ok()).collect()
         }
     };
-    let seeds: Vec<u64> = vec![a.u64_or("seed", 11)];
+    // `--seeds N` derives N deterministic seeds from `--seed` (first = the
+    // base seed) — the silent single-seed default is now an explicit flag;
+    // `--seeds 5` is the paper's 5-repeat CI methodology in one flag
+    let seeds = derive_seeds(a.u64_or("seed", 11), a.usize_or("seeds", 1));
+    let threads = a.usize_or("threads", parallel::default_threads());
     let template = build_config(a);
-    let mut cells = Vec::new();
+    // every (rps, engine, seed) cell owns its engine + collector; the grid
+    // fans out across cores and merges per cell in fixed seed order, so
+    // the figure is byte-identical to a serial run
+    let mut tasks: Vec<(EngineKind, f64, u64)> = Vec::new();
     for &rps in &rps_list {
         for &e in &engines_list {
-            let template = template.clone();
-            cells.push(run_cell(e, rps, &seeds, move |e, rps, seed| {
-                let mut c = template.clone();
-                c.engine = e;
-                c.workload.seed = seed;
-                c.workload.arrivals = banaserve::workload::ArrivalProcess::Poisson { rps };
-                c
-            }));
+            for &seed in &seeds {
+                tasks.push((e, rps, seed));
+            }
+        }
+    }
+    let outs = parallel::parallel_map(&tasks, threads, |_, &(e, rps, seed)| {
+        let mut c = template.clone();
+        c.engine = e;
+        c.workload.seed = seed;
+        c.workload.arrivals = banaserve::workload::ArrivalProcess::Poisson { rps };
+        banaserve::engines::run_experiment(&c)
+    });
+    let mut cells = Vec::new();
+    let mut it = 0;
+    for &rps in &rps_list {
+        for &e in &engines_list {
+            let mut agg = SeedAggregate::new();
+            let mut hit = Summary::new();
+            let mut mig = Summary::new();
+            for _ in &seeds {
+                let out = &outs[it];
+                it += 1;
+                agg.add(&out.report);
+                hit.add(out.extras.store_hit_rate);
+                mig.add(
+                    (out.extras.layer_migrations + out.extras.attention_migrations) as f64,
+                );
+            }
+            cells.push(Cell {
+                engine: e,
+                rps,
+                agg,
+                extras_hit_rate: hit,
+                migrations: mig,
+            });
         }
     }
     print_figure("sweep", &engines_list, &cells);

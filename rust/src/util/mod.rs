@@ -9,6 +9,7 @@ pub mod args;
 pub mod checker;
 pub mod json;
 pub mod logging;
+pub mod parallel;
 pub mod prng;
 pub mod stats;
 

@@ -1,0 +1,113 @@
+//! Minimal deterministic fork-join helper over `std::thread::scope` (rayon
+//! is not in the offline registry).
+//!
+//! [`parallel_map`] runs independent work items on a bounded worker pool
+//! and returns results **in input order**, so callers that merge results
+//! stay bit-identical to a serial run: each slot's value depends only on
+//! its own item, and the merge order is fixed by index regardless of which
+//! worker finished first. This is what lets the scenario drivers fan
+//! compare-grid cells and multi-seed repetitions across cores while
+//! keeping the per-seed JSON byte-identical to `--threads 1`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker threads to use by default: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `threads` scoped workers; results come
+/// back in input order. `f` must be deterministic per item for the
+/// serial/parallel equivalence guarantee to mean anything — it receives
+/// the item index and a shared reference to the item.
+///
+/// Wall-clock is (work / threads) + the longest single item, not the sum:
+/// workers pull the next unclaimed index until none remain.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("scope joined every worker, so every slot is filled")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, 8, |i, &x| {
+            // stagger completion so out-of-order finishes would show
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let items: Vec<u64> = (0..40).collect();
+        let f = |i: usize, x: &u64| (i as u64).wrapping_mul(31).wrapping_add(*x);
+        let serial = parallel_map(&items, 1, f);
+        let par = parallel_map(&items, 6, f);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..64).collect();
+        let out = parallel_map(&items, 4, |_, &x| {
+            count.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 64);
+        assert_eq!(count.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn empty_and_single_item_edge_cases() {
+        let none: Vec<u32> = Vec::new();
+        assert!(parallel_map(&none, 4, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 16, |_, &x| x + 1), vec![8]);
+        assert!(default_threads() >= 1);
+    }
+}

@@ -306,6 +306,65 @@ fn fleet_routers_never_starve_an_instance() {
 }
 
 #[test]
+fn load_book_always_matches_rebuilt_snapshots() {
+    // the maintained LoadBook (incremental set_queue syncs at admit/step/
+    // finish transitions) must be indistinguishable from a snapshot rebuilt
+    // from scratch — for the full slice, for filtered views, and for every
+    // router's pick over either
+    check("loadbook vs rebuilt snapshot", 40, |g| {
+        let n = g.usize_in(1, 12);
+        let mut book = fleet::LoadBook::with_instances(n);
+        // model state: per-instance (waiting, running) counters
+        let mut model: Vec<(usize, usize)> = vec![(0, 0); n];
+        let steps = g.usize_in(1, 80);
+        for _ in 0..steps {
+            let i = g.usize_in(0, n - 1);
+            match g.usize_in(0, 3) {
+                0 => model[i].0 += 1, // admit: waiting += 1
+                1 => {
+                    // step start: waiting -> running
+                    if model[i].0 > 0 {
+                        model[i].0 -= 1;
+                        model[i].1 += 1;
+                    }
+                }
+                2 => model[i].1 = model[i].1.saturating_sub(1), // finish
+                _ => {}                                         // idle event
+            }
+            book.set_queue(i, model[i].0, model[i].0 + model[i].1);
+
+            let rebuilt: Vec<fleet::InstanceLoad> = (0..n)
+                .map(|j| {
+                    let mut l = fleet::InstanceLoad::at(j);
+                    l.queue_len = model[j].0;
+                    l.load_seqs = model[j].0 + model[j].1;
+                    l
+                })
+                .collect();
+            prop_assert!(
+                book.loads() == &rebuilt[..],
+                "maintained slice diverged from rebuild: {:?} vs {rebuilt:?}",
+                book.loads()
+            );
+            let keep = |l: &fleet::InstanceLoad| l.queue_len > 0;
+            let want: Vec<fleet::InstanceLoad> =
+                rebuilt.iter().copied().filter(keep).collect();
+            prop_assert!(
+                book.filtered(keep) == &want[..],
+                "filtered view diverged from filtered rebuild"
+            );
+            let a = fleet::LeastLoaded.pick(book.loads());
+            let b = fleet::LeastLoaded.pick(&rebuilt);
+            prop_assert!(a == b, "LeastLoaded diverged: {a:?} vs {b:?}");
+            let a = fleet::LeastQueue.pick(book.loads());
+            let b = fleet::LeastQueue.pick(&rebuilt);
+            prop_assert!(a == b, "LeastQueue diverged: {a:?} vs {b:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn fleet_load_aware_pick_matches_scheduler_alg2() {
     // fleet::pick_load_aware is an allocation-free port of
     // scheduler::pick_rotating; they must agree on every input

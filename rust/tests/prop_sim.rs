@@ -1,0 +1,156 @@
+//! Event-queue equivalence gate: the calendar queue the driver runs on
+//! must drain in EXACTLY the same `(time, kind)` order as the `BinaryHeap`
+//! reference implementation, over randomized dense-tie event streams —
+//! duplicate timestamps, zero-delay `push_after`, arrivals interleaved
+//! with timers, pops interleaved with pushes, and far-future events that
+//! cross calendar-year boundaries.
+
+use banaserve::prop_assert;
+use banaserve::sim::{EventKind, EventQueue, HeapEventQueue, Timer};
+use banaserve::util::checker::check;
+use banaserve::workload::Request;
+
+/// Order-relevant identity of a drained event: `(kind, tag, a, b)` for
+/// timers, `(kind, id, ..)` for arrivals.
+fn key(kind: &EventKind) -> (u64, u64, u64, u64) {
+    match kind {
+        EventKind::Arrival(r) => (0, r.id, r.prompt_len, r.output_len),
+        EventKind::Timer(t) => (1, t.tag, t.a, t.b),
+    }
+}
+
+fn pop_both(cal: &mut EventQueue, heap: &mut HeapEventQueue) -> Result<bool, String> {
+    match (cal.pop(), heap.pop()) {
+        (None, None) => Ok(false),
+        (Some((ta, ka)), Some((tb, kb))) => {
+            prop_assert!(
+                ta == tb && key(&ka) == key(&kb),
+                "drain order diverged: calendar ({ta}, {:?}) vs heap ({tb}, {:?})",
+                key(&ka),
+                key(&kb)
+            );
+            prop_assert!(
+                cal.now() == heap.now(),
+                "clocks diverged: {} vs {}",
+                cal.now(),
+                heap.now()
+            );
+            Ok(true)
+        }
+        (a, b) => Err(format!(
+            "one queue drained early: calendar={:?} heap={:?}",
+            a.map(|(t, k)| (t, key(&k))),
+            b.map(|(t, k)| (t, key(&k)))
+        )),
+    }
+}
+
+#[test]
+fn calendar_queue_drains_identically_to_heap_reference() {
+    check("calendar vs heap drain order", 80, |g| {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        // a small palette of times makes exact duplicate timestamps common
+        // — the dense-tie case where only the seq tiebreak orders events
+        let palette: Vec<f64> = (0..g.usize_in(1, 6)).map(|_| g.f64_in(0.0, 8.0)).collect();
+        let ops = g.usize_in(1, g.size.max(4) * 4);
+        let mut next_id = 0u64;
+        for op in 0..ops {
+            let tag = op as u64;
+            match g.usize_in(0, 6) {
+                0 | 1 => {
+                    // timer at a tie-prone absolute time (clamped to now)
+                    let at = g.pick(&palette).max(cal.now());
+                    let t = Timer::with(tag, tag ^ 0xA5, 7);
+                    cal.push_timer(at, t);
+                    heap.push_timer(at, t);
+                }
+                2 => {
+                    // zero-delay push_after: fires at now, ordered by seq
+                    let t = Timer::new(tag);
+                    cal.push_after(0.0, t);
+                    heap.push_after(0.0, t);
+                }
+                3 => {
+                    // arrival interleaved with the timer stream
+                    let req = Request {
+                        id: next_id,
+                        arrival: g.f64_in(0.0, 8.0).max(cal.now()),
+                        prompt_len: 8 + next_id,
+                        output_len: 2,
+                        cache_tokens: vec![1, 2].into(),
+                    };
+                    next_id += 1;
+                    cal.push_arrival(req.clone());
+                    heap.push_arrival(req);
+                }
+                4 => {
+                    // far-future timer: beyond one calendar year, forcing
+                    // year re-anchors and `far` redistribution
+                    let at = cal.now() + g.f64_in(2.0, 60.0);
+                    let t = Timer::with(tag, 1, 2);
+                    cal.push_timer(at, t);
+                    heap.push_timer(at, t);
+                }
+                _ => {
+                    // interleaved pop
+                    pop_both(&mut cal, &mut heap)?;
+                }
+            }
+            prop_assert!(
+                cal.len() == heap.len(),
+                "lengths diverged: {} vs {}",
+                cal.len(),
+                heap.len()
+            );
+        }
+        // drain both to empty in lockstep
+        while pop_both(&mut cal, &mut heap)? {}
+        prop_assert!(
+            cal.is_empty() && heap.is_empty(),
+            "queues not empty after drain"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn calendar_queue_total_drain_is_sorted_by_time() {
+    // independent of the reference: a full drain must be time-sorted with
+    // insertion order breaking ties
+    check("calendar drain sorted", 40, |g| {
+        let mut q = EventQueue::new();
+        let n = g.usize_in(1, 300);
+        for i in 0..n {
+            // mix of dense ties, in-year spread, and cross-year jumps
+            let t = match g.usize_in(0, 2) {
+                0 => 1.0,
+                1 => g.f64_in(0.0, 2.0),
+                _ => g.f64_in(0.0, 50.0),
+            };
+            q.push_timer(t, Timer::new(i as u64));
+        }
+        let mut last_t = f64::NEG_INFINITY;
+        let mut seen_at_t: Vec<u64> = Vec::new();
+        let mut drained = 0;
+        while let Some((t, EventKind::Timer(tm))) = q.pop() {
+            prop_assert!(t >= last_t, "time went backwards: {t} < {last_t}");
+            if t == last_t {
+                if let Some(&prev) = seen_at_t.last() {
+                    prop_assert!(
+                        prev < tm.tag,
+                        "tie at t={t} fired out of insertion order: {seen_at_t:?} then {}",
+                        tm.tag
+                    );
+                }
+            } else {
+                seen_at_t.clear();
+            }
+            seen_at_t.push(tm.tag);
+            last_t = t;
+            drained += 1;
+        }
+        prop_assert!(drained == n, "drained {drained} of {n}");
+        Ok(())
+    });
+}
