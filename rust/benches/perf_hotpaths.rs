@@ -180,6 +180,17 @@ fn main() {
         let view = book.filtered(|l| l.queue_len < 6);
         std::hint::black_box(fleet::pick_load_aware(view, 1.6, 17));
     });
+    // heterogeneous weights: same maintained-slice pick over a mixed
+    // 40G/80G-weighted book — the capacity normalization must not cost the
+    // hot path (acceptance: within 5% of the unweighted LoadBook row)
+    let mut wbook = fleet::LoadBook::with_instances(64);
+    for i in 0..64usize {
+        wbook.set_queue(i, i % 7, (i * 13) % 23);
+        wbook.entry_mut(i).weight = if i % 3 == 0 { 1.3 } else { 1.0 };
+    }
+    rec.bench("route arrival (fleet 64, LoadBook weighted)", 200_000, || {
+        std::hint::black_box(fleet::LeastLoaded.pick(wbook.loads()));
+    });
 
     // typed timer-dispatch table: every engine event passes through
     // FleetEvent encode/decode, so its cost sits on ALL hot paths. The row

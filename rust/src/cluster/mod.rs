@@ -18,6 +18,15 @@ pub struct GpuSpec {
     pub hbm_bytes: u64,
     /// HBM bandwidth in bytes/s.
     pub hbm_bw: f64,
+    /// Relative serving capacity vs the A100-40G baseline (heterogeneous
+    /// fleets: routers divide queue/load counters by this, so a 1.3x
+    /// device absorbs 1.3x the work before looking equally loaded). The
+    /// value tracks the roofline's bandwidth-bound decode ratio — see
+    /// `perfmodel::relative_decode_capacity` and its pinning test.
+    pub weight: f64,
+    /// Relative price per device-second (autoscaler price/perf choice and
+    /// the scenario cost accounting; A100-40G = 1.0).
+    pub cost: f64,
 }
 
 /// NVIDIA A100-40GB (the paper's device; Fig 1 caption).
@@ -26,6 +35,8 @@ pub const A100_40G: GpuSpec = GpuSpec {
     peak_flops: 312e12,
     hbm_bytes: 40_000_000_000,
     hbm_bw: 1.555e12,
+    weight: 1.0,
+    cost: 1.0,
 };
 
 /// NVIDIA A100-80GB.
@@ -34,7 +45,19 @@ pub const A100_80G: GpuSpec = GpuSpec {
     peak_flops: 312e12,
     hbm_bytes: 80_000_000_000,
     hbm_bw: 2.039e12,
+    // decode is bandwidth-bound: 2.039/1.555 ≈ 1.31x the 40G's capacity
+    weight: 1.3,
+    cost: 1.5,
 };
+
+/// Look up a built-in GPU spec by name (CLI `--gpu` / `--gpu-catalog`).
+pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "a100-40g" | "a100" | "40g" => Some(A100_40G),
+        "a100-80g" | "80g" => Some(A100_80G),
+        _ => None,
+    }
+}
 
 /// Interconnect between devices / to the host-side KV store.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -426,6 +449,16 @@ mod tests {
         let id = c.add_device(A100_80G, Role::Unified);
         assert_eq!(id, 2, "released slots are never reused");
         assert_eq!(c.devices[2].id, 2);
+    }
+
+    #[test]
+    fn gpu_by_name_resolves_catalog_specs() {
+        assert_eq!(gpu_by_name("a100-40g"), Some(A100_40G));
+        assert_eq!(gpu_by_name("80G"), Some(A100_80G));
+        assert_eq!(gpu_by_name("h100"), None);
+        assert_eq!(A100_40G.weight, 1.0, "the baseline defines weight 1.0");
+        assert_eq!(A100_40G.cost, 1.0, "the baseline defines cost 1.0");
+        assert!(A100_80G.weight > 1.0 && A100_80G.cost > 1.0);
     }
 
     #[test]

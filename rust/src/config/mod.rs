@@ -100,6 +100,18 @@ pub struct AutoscaleConfig {
     /// its autoscale tick at this period; BanaServe evaluates on its
     /// control cycle, rate-limited to at most one decision per window.
     pub window: f64,
+    /// P99-TTFT target in milliseconds; 0 disables the TTFT objective.
+    /// When either SLO target is set the autoscaler switches from the
+    /// busy-fraction thresholds to SLO mode: scale OUT when the windowed
+    /// P99 exceeds `slo_headroom` x target, scale IN only when every set
+    /// target is comfortably met (< 0.5 x headroom x target) AND the
+    /// fleet is idle by the util thresholds.
+    pub ttft_slo_ms: f64,
+    /// P99-TPOT target in milliseconds; 0 disables the TPOT objective.
+    pub tpot_slo_ms: f64,
+    /// Fraction of the SLO target at which scale-out triggers (< 1.0 acts
+    /// before the target is actually violated).
+    pub slo_headroom: f64,
 }
 
 impl Default for AutoscaleConfig {
@@ -112,6 +124,9 @@ impl Default for AutoscaleConfig {
             scale_in_util: 0.30,
             cooldown: 5.0,
             window: 2.0,
+            ttft_slo_ms: 0.0,
+            tpot_slo_ms: 0.0,
+            slo_headroom: 0.9,
         }
     }
 }
@@ -122,6 +137,9 @@ pub struct ExperimentConfig {
     pub engine: EngineKind,
     pub model: &'static ModelSpec,
     pub gpu: GpuSpec,
+    /// Specs the autoscaler may scale OUT with (price/perf choice under
+    /// the SLO gap). Empty = homogeneous scale-out with `gpu`.
+    pub gpu_catalog: Vec<GpuSpec>,
     /// Total devices (engines split them into pools as needed).
     pub n_devices: usize,
     /// Prefill pool size for PD-disaggregated engines.
@@ -147,6 +165,7 @@ impl ExperimentConfig {
             engine,
             model,
             gpu: crate::cluster::A100_40G,
+            gpu_catalog: Vec::new(),
             n_devices: 4,
             n_prefill: 2,
             eff: Efficiency::default(),
@@ -225,6 +244,34 @@ impl ExperimentConfig {
         if let Some(x) = a.get("autoscale-window").and_then(|v| v.parse::<f64>().ok()) {
             self.autoscale.window = x;
         }
+        if let Some(x) = a.get("ttft-slo-ms").and_then(|v| v.parse::<f64>().ok()) {
+            self.autoscale.ttft_slo_ms = x;
+        }
+        if let Some(x) = a.get("tpot-slo-ms").and_then(|v| v.parse::<f64>().ok()) {
+            self.autoscale.tpot_slo_ms = x;
+        }
+        if let Some(x) = a.get("slo-headroom").and_then(|v| v.parse::<f64>().ok()) {
+            self.autoscale.slo_headroom = x;
+        }
+        if let Some(name) = a.get("gpu") {
+            match crate::cluster::gpu_by_name(name) {
+                Some(g) => self.gpu = g,
+                None => log::warn!("--gpu {name}: unknown spec, keeping {}", self.gpu.name),
+            }
+        }
+        let catalog = a.list("gpu-catalog");
+        if !catalog.is_empty() {
+            self.gpu_catalog = catalog
+                .iter()
+                .filter_map(|s| {
+                    let g = crate::cluster::gpu_by_name(s);
+                    if g.is_none() {
+                        log::warn!("--gpu-catalog {s}: unknown spec, dropped");
+                    }
+                    g
+                })
+                .collect();
+        }
     }
 
     /// Load overrides from a JSON config file.
@@ -272,6 +319,24 @@ impl ExperimentConfig {
                 ("scale_in_util", Value::Num(n)) => self.autoscale.scale_in_util = *n,
                 ("autoscale_cooldown", Value::Num(n)) => self.autoscale.cooldown = *n,
                 ("autoscale_window", Value::Num(n)) => self.autoscale.window = *n,
+                ("ttft_slo_ms", Value::Num(n)) => self.autoscale.ttft_slo_ms = *n,
+                ("tpot_slo_ms", Value::Num(n)) => self.autoscale.tpot_slo_ms = *n,
+                ("slo_headroom", Value::Num(n)) => self.autoscale.slo_headroom = *n,
+                ("gpu", Value::Str(s)) => {
+                    self.gpu =
+                        crate::cluster::gpu_by_name(s).ok_or(format!("bad gpu {s}"))?;
+                }
+                ("gpu_catalog", Value::Arr(xs)) => {
+                    let mut specs = Vec::new();
+                    for x in xs.iter() {
+                        let name = x.as_str().ok_or("gpu_catalog entries are strings")?;
+                        specs.push(
+                            crate::cluster::gpu_by_name(name)
+                                .ok_or(format!("bad gpu {name}"))?,
+                        );
+                    }
+                    self.gpu_catalog = specs;
+                }
                 _ => return Err(format!("unknown config key '{k}'")),
             }
         }
@@ -356,6 +421,39 @@ mod tests {
         assert!(j.autoscale.enabled);
         assert_eq!(j.autoscale.max_devices, 5);
         assert_eq!(j.autoscale.scale_in_util, 0.2);
+    }
+
+    #[test]
+    fn slo_and_catalog_knobs_parse_from_cli_and_json() {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        assert_eq!(c.autoscale.ttft_slo_ms, 0.0, "SLO mode must default off");
+        assert_eq!(c.autoscale.tpot_slo_ms, 0.0);
+        assert!(c.gpu_catalog.is_empty());
+        let a = Args::parse(
+            "--ttft-slo-ms 1500 --tpot-slo-ms 80 --slo-headroom 0.8 \
+             --gpu a100-80g --gpu-catalog a100-40g,a100-80g"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert_eq!(c.autoscale.ttft_slo_ms, 1500.0);
+        assert_eq!(c.autoscale.tpot_slo_ms, 80.0);
+        assert_eq!(c.autoscale.slo_headroom, 0.8);
+        assert_eq!(c.gpu.name, "a100-80g");
+        assert_eq!(c.gpu_catalog.len(), 2);
+        assert_eq!(c.gpu_catalog[1].name, "a100-80g");
+
+        let mut j = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        j.apply_json(
+            r#"{"ttft_slo_ms":900,"slo_headroom":0.7,"gpu":"a100-40g",
+                "gpu_catalog":["a100-40g","a100-80g"]}"#,
+        )
+        .unwrap();
+        assert_eq!(j.autoscale.ttft_slo_ms, 900.0);
+        assert_eq!(j.autoscale.slo_headroom, 0.7);
+        assert_eq!(j.gpu_catalog.len(), 2);
+        assert!(j.apply_json(r#"{"gpu":"h100"}"#).is_err());
+        assert!(j.apply_json(r#"{"gpu_catalog":["h100"]}"#).is_err());
     }
 
     #[test]

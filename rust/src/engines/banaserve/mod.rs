@@ -20,7 +20,7 @@ use super::fleet::{self, FleetEvent};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
 use crate::config::{BanaConfig, ExperimentConfig};
 use crate::kvcache::{GlobalKvStore, StoreConfig};
-use crate::metrics::{Collector, TimeSeries};
+use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency};
 use crate::model::ModelSpec;
 use crate::sim::{Engine, EventQueue, Timer};
@@ -96,17 +96,21 @@ pub struct BanaEngine {
     dloads_buf: Vec<migration::DeviceLoad>,
     active_loads_buf: Vec<migration::DeviceLoad>,
     fleet_loads_buf: Vec<fleet::FleetLoad>,
-    /// Device spec elastic scale-out builds new devices from.
+    /// Device spec elastic scale-out falls back to when the catalog offers
+    /// no choice.
     gpu: GpuSpec,
+    /// Specs the autoscaler may scale out with (price/perf choice).
+    catalog: Vec<GpuSpec>,
     /// Elastic-fleet policy (decides on the control cycle's windowed loads).
     autoscaler: fleet::Autoscaler,
+    /// Windowed P99-TTFT/TPOT digests fed from completion events (SLO mode).
+    slo: SloTracker,
     /// Next time an autoscale decision may run (honors AutoscaleConfig
     /// `window` on top of the control-cycle cadence).
     as_next_eval: f64,
     /// Is a CONTROL timer currently in flight?
     control_scheduled: bool,
-    pub fleet_size: TimeSeries,
-    pub fleet_util: TimeSeries,
+    pub fleet: fleet::FleetSeries,
     pub scale_outs: u64,
     pub drains: u64,
 }
@@ -180,11 +184,16 @@ impl BanaEngine {
             active_loads_buf: Vec::new(),
             fleet_loads_buf: Vec::new(),
             gpu: cfg.gpu.clone(),
+            catalog: if cfg.gpu_catalog.is_empty() {
+                vec![cfg.gpu.clone()]
+            } else {
+                cfg.gpu_catalog.clone()
+            },
             autoscaler: fleet::Autoscaler::new(cfg.autoscale),
+            slo: SloTracker::new(cfg.autoscale.window),
             as_next_eval: 0.0,
             control_scheduled: false,
-            fleet_size: TimeSeries::new(),
-            fleet_util: TimeSeries::new(),
+            fleet: fleet::FleetSeries::new(),
             scale_outs: 0,
             drains: 0,
         }
@@ -197,12 +206,6 @@ impl BanaEngine {
     /// Diagnostics: sequences staged and awaiting decode admission.
     pub fn pending_decode_len(&self) -> usize {
         self.pending_decode.len()
-    }
-
-    /// Instantaneous U_d (Eq 32): running-step compute fraction scaled by
-    /// the role shares, plus the memory fraction.
-    fn u_now(&self, dev: usize) -> f64 {
-        u_now_of(&self.pinsts[dev], &self.dinsts[dev], &self.devices[dev])
     }
 
     /// Windowed U_d used by the control cycle: busy fraction over the last
@@ -235,6 +238,7 @@ impl BanaEngine {
                 let mut l = fleet::InstanceLoad::at(i);
                 l.u = u_now_of(&pinsts[i], &dinsts[i], &devices[i]);
                 l.queue_len = pinsts[i].queue_len();
+                l.weight = devices[i].spec.weight;
                 s.push(l);
             }
         }
@@ -393,11 +397,14 @@ impl BanaEngine {
                         && self.devices[i].can_fit_kv(kv)
                 })
                 .min_by(|&a, &b| {
-                    // load per unit of decode capacity, with a mild
-                    // consolidation bonus: joining an existing batch on a
-                    // dedicated device amortizes the per-step weight read
+                    // load per unit of decode capacity (role share x device
+                    // capacity weight), with a mild consolidation bonus:
+                    // joining an existing batch on a dedicated device
+                    // amortizes the per-step weight read
                     let score = |i: usize| {
-                        let cap = (1.0 - self.share_prefill[i]).max(1e-9);
+                        let cap = ((1.0 - self.share_prefill[i])
+                            * self.devices[i].spec.weight)
+                            .max(1e-9);
                         (self.dinsts[i].running.len() as f64 + 1.0) / cap
                     };
                     score(a).partial_cmp(&score(b)).unwrap()
@@ -504,6 +511,9 @@ impl BanaEngine {
         let kv = seq.kv_on_device;
         seq.kv_on_device = 0;
         self.devices[dev].free_kv(now, kv);
+        if self.autoscaler.enabled() {
+            self.slo.record(now, rec.ttft(), rec.tpot());
+        }
         self.col.finish(rec);
         self.inflight -= 1;
         self.seqs.remove(sid);
@@ -570,6 +580,11 @@ impl BanaEngine {
             );
         }
         self.maybe_start_prefill(i, q);
+        // release Draining devices whose residents just cleared (the
+        // control cycle stops at inflight 0 and would strand them)
+        if self.autoscaler.enabled() {
+            self.finish_drains(now);
+        }
     }
 
     fn decode_done(&mut self, i: usize, q: &mut EventQueue) {
@@ -610,6 +625,12 @@ impl BanaEngine {
         self.finished_buf = finished;
         self.try_admit_global(q);
         self.maybe_start_decode(i, q);
+        // step completions are the release points for Draining devices —
+        // the control cycle alone would strand them when it stops at
+        // inflight 0
+        if self.autoscaler.enabled() {
+            self.finish_drains(now);
+        }
     }
 
     /// Pool-level role rebalance: aim the cluster's prefill/decode share
@@ -977,26 +998,37 @@ impl BanaEngine {
         );
         if !active.is_empty() {
             let mean = active.iter().map(|l| l.busy).sum::<f64>() / active.len() as f64;
-            self.fleet_util.push(now, mean);
+            self.fleet.util.push(now, mean);
         }
+        let view = fleet::SloView {
+            p99_ttft: self.slo.p99_ttft(now),
+            p99_tpot: self.slo.p99_tpot(now),
+        };
         // store-staged sequences awaiting decode admission are engine-wide
         // backlog no single device owns
-        let decision = self.autoscaler.decide(now, &active, self.pending_decode.len());
+        let decision = self.autoscaler.decide(now, &active, self.pending_decode.len(), view);
         self.fleet_loads_buf = active;
         match decision {
-            fleet::ScaleDecision::Out => self.scale_out(q),
+            fleet::ScaleDecision::Out => {
+                let gap = self.autoscaler.slo_gap(view);
+                self.scale_out(gap, q);
+            }
             fleet::ScaleDecision::In { victim } => self.begin_drain(victim, q),
             fleet::ScaleDecision::Hold => {}
         }
     }
 
     /// Append a device as a hybrid half-prefill/half-decode worker —
-    /// flexible capacity that layer migration then specializes. The device
+    /// flexible capacity that layer migration then specializes. The spec
+    /// comes from the catalog by price/perf under the SLO gap; the device
     /// serves only after its weight replica lands (spin-up freeze).
-    fn scale_out(&mut self, q: &mut EventQueue) {
+    fn scale_out(&mut self, slo_gap: f64, q: &mut EventQueue) {
         let now = q.now();
         let id = self.devices.len();
-        let mut dev = Device::new(id, self.gpu.clone(), Role::Decode);
+        let spec = fleet::pick_scale_out_spec(&self.catalog, slo_gap)
+            .cloned()
+            .unwrap_or_else(|| self.gpu.clone());
+        let mut dev = Device::new(id, spec, Role::Decode);
         dev.weight_bytes = self.spec.weight_bytes();
         dev.touch_mem(now);
         self.devices.push(dev);
@@ -1013,7 +1045,7 @@ impl BanaEngine {
         self.routed_counts.push(0);
         self.last_busy.push((0.0, 0.0));
         self.scale_outs += 1;
-        self.fleet_size.push(now, self.active_count() as f64);
+        self.fleet.sample(now, &self.devices);
         log::debug!("banaserve scale-out: device {id} joins hybrid at t={now:.2}");
     }
 
@@ -1037,7 +1069,7 @@ impl BanaEngine {
             self.maybe_start_prefill(target, q);
         }
         self.stranded_buf = stranded;
-        self.fleet_size.push(now, self.active_count() as f64);
+        self.fleet.sample(now, &self.devices);
         log::debug!("banaserve drain: device {victim} begins draining at t={now:.2}");
     }
 
@@ -1054,7 +1086,7 @@ impl BanaEngine {
                 && self.dinsts[i].running.is_empty()
                 && !self.mig[i].in_flight;
             if crate::cluster::try_release(&mut self.devices, i, clear) {
-                self.fleet_size.push(now, self.active_count() as f64);
+                self.fleet.sample(now, &self.devices);
                 log::debug!("banaserve release: device {i} released at t={now:.2}");
             }
         }
@@ -1268,8 +1300,8 @@ impl Engine for BanaEngine {
         if self.stats.control_cycles == 0 && self.last_cycle_at == 0.0 {
             self.last_cycle_at = now;
             self.control_scheduled = true;
-            if self.autoscaler.enabled() && self.fleet_size.is_empty() {
-                self.fleet_size.push(now, self.active_count() as f64);
+            if self.autoscaler.enabled() && self.fleet.is_empty() {
+                self.fleet.sample(now, &self.devices);
             }
             q.push_after(self.bana.control_period, FleetEvent::Control.timer());
             self.stats.control_cycles = 0;

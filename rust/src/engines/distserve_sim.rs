@@ -17,7 +17,7 @@ use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, Ste
 use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
 use crate::config::ExperimentConfig;
-use crate::metrics::{Collector, TimeSeries};
+use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency};
 use crate::model::ModelSpec;
 use crate::sim::{Engine, EventQueue, Timer};
@@ -54,17 +54,21 @@ pub struct DistServeEngine {
     inflight: u64,
     pub kv_transfer_bytes: u64,
     pub preemptions: u64,
-    /// Device spec new (scaled-out) devices are built from.
+    /// Device spec new (scaled-out) devices are built from when the
+    /// catalog offers no choice.
     gpu: GpuSpec,
+    /// Specs the autoscaler may scale out with (price/perf choice).
+    catalog: Vec<GpuSpec>,
     /// Device id -> slot within its role pool (pools only ever append).
     slot_of_dev: Vec<usize>,
     autoscaler: fleet::Autoscaler,
+    /// Windowed P99-TTFT/TPOT digests fed from completion events (SLO mode).
+    slo: SloTracker,
     /// Per-device busy_wall snapshot at the last autoscale window edge.
     as_last_busy: Vec<f64>,
     as_last_eval: f64,
     autoscale_ticking: bool,
-    pub fleet_size: TimeSeries,
-    pub fleet_util: TimeSeries,
+    pub fleet: fleet::FleetSeries,
     pub scale_outs: u64,
     pub drains: u64,
 }
@@ -87,6 +91,15 @@ impl DistServeEngine {
         let mut slot_of_dev: Vec<usize> = (0..cfg.n_prefill).collect();
         slot_of_dev.extend(0..nd);
         let n = cfg.n_devices;
+        let mut pbook = fleet::LoadBook::with_instances(cfg.n_prefill);
+        for i in 0..cfg.n_prefill {
+            pbook.entry_mut(i).weight = devices[i].spec.weight;
+        }
+        let catalog = if cfg.gpu_catalog.is_empty() {
+            vec![cfg.gpu.clone()]
+        } else {
+            cfg.gpu_catalog.clone()
+        };
         DistServeEngine {
             spec: cfg.model,
             eff: cfg.eff,
@@ -99,7 +112,7 @@ impl DistServeEngine {
             prefill,
             decode,
             admit_queue: (0..nd).map(|_| VecDeque::new()).collect(),
-            pbook: fleet::LoadBook::with_instances(cfg.n_prefill),
+            pbook,
             dbook: fleet::LoadBook::new(),
             finished_buf: Vec::new(),
             stranded_buf: Vec::new(),
@@ -110,13 +123,14 @@ impl DistServeEngine {
             kv_transfer_bytes: 0,
             preemptions: 0,
             gpu: cfg.gpu.clone(),
+            catalog,
             slot_of_dev,
             autoscaler: fleet::Autoscaler::new(cfg.autoscale),
+            slo: SloTracker::new(cfg.autoscale.window),
             as_last_busy: vec![0.0; n],
             as_last_eval: 0.0,
             autoscale_ticking: false,
-            fleet_size: TimeSeries::new(),
-            fleet_util: TimeSeries::new(),
+            fleet: fleet::FleetSeries::new(),
             scale_outs: 0,
             drains: 0,
         }
@@ -168,6 +182,7 @@ impl DistServeEngine {
                     let mut l = fleet::InstanceLoad::at(i);
                     l.mem_free = dev.mem_free();
                     l.running = inst.running.len();
+                    l.weight = dev.spec.weight;
                     s.push(l);
                 }
             }
@@ -181,10 +196,6 @@ impl DistServeEngine {
             Some(pos) => s[pos].idx,
             None => 0,
         }
-    }
-
-    fn active_count(&self) -> usize {
-        crate::cluster::active_count(&self.devices)
     }
 
     fn busy_wall_of_dev(&self, d: usize) -> f64 {
@@ -356,6 +367,9 @@ impl DistServeEngine {
         let kv = seq.kv_on_device;
         seq.kv_on_device = 0;
         self.devices[pool_dev].free_kv(now, kv);
+        if self.autoscaler.enabled() {
+            self.slo.record(now, rec.ttft(), rec.tpot());
+        }
         self.col.finish(rec);
         self.inflight -= 1;
         self.seqs.remove(sid);
@@ -397,6 +411,11 @@ impl DistServeEngine {
             q.push_after(t, FleetEvent::KvArrive { worker: di, seq: sid }.timer());
         }
         self.maybe_start_prefill(i, q);
+        // release Draining devices whose residents just cleared (the tick
+        // loop stops at inflight 0 and would strand them)
+        if self.autoscaler.enabled() {
+            self.finish_drains(now);
+        }
     }
 
     fn decode_done(&mut self, di: usize, q: &mut EventQueue) {
@@ -439,6 +458,13 @@ impl DistServeEngine {
         }
         self.finished_buf = finished;
         self.maybe_start_decode(di, q);
+        // step completions are the release points for Draining devices —
+        // the autoscale tick alone would strand them when the tick loop
+        // stops at inflight 0 (a decode completion can also free a
+        // Draining PREFILL device's last handed-off KV, so scan them all)
+        if self.autoscaler.enabled() {
+            self.finish_drains(now);
+        }
     }
 
     // --- elastic fleet -----------------------------------------------------
@@ -500,12 +526,19 @@ impl DistServeEngine {
         );
         if !active.is_empty() {
             let mean = active.iter().map(|l| l.busy).sum::<f64>() / active.len() as f64;
-            self.fleet_util.push(now, mean);
+            self.fleet.util.push(now, mean);
         }
-        let decision = self.autoscaler.decide(now, &active, 0);
+        let view = fleet::SloView {
+            p99_ttft: self.slo.p99_ttft(now),
+            p99_tpot: self.slo.p99_tpot(now),
+        };
+        let decision = self.autoscaler.decide(now, &active, 0, view);
         self.fleet_loads_buf = active;
         match decision {
-            fleet::ScaleDecision::Out => self.scale_out(q),
+            fleet::ScaleDecision::Out => {
+                let gap = self.autoscaler.slo_gap(view);
+                self.scale_out(gap, q);
+            }
             fleet::ScaleDecision::In { victim } => self.begin_drain(victim, q),
             fleet::ScaleDecision::Hold => {}
         }
@@ -544,8 +577,10 @@ impl DistServeEngine {
         }
     }
 
-    /// Add one device to the hotter role pool, frozen until its weights land.
-    fn scale_out(&mut self, q: &mut EventQueue) {
+    /// Add one device to the hotter role pool, frozen until its weights
+    /// land. The spec comes from the catalog by price/perf under the SLO
+    /// gap ([`fleet::pick_scale_out_spec`]).
+    fn scale_out(&mut self, slo_gap: f64, q: &mut EventQueue) {
         let now = q.now();
         let period = (now - self.as_last_eval).max(1e-9);
         let role = if self.mean_busy_of_role(Role::Prefill, period)
@@ -555,8 +590,11 @@ impl DistServeEngine {
         } else {
             Role::Decode
         };
+        let spec = fleet::pick_scale_out_spec(&self.catalog, slo_gap)
+            .cloned()
+            .unwrap_or_else(|| self.gpu.clone());
         let id = self.devices.len();
-        let mut dev = Device::new(id, self.gpu.clone(), role);
+        let mut dev = Device::new(id, spec, role);
         dev.weight_bytes = self.spec.weight_bytes();
         dev.touch_mem(now);
         self.devices.push(dev);
@@ -569,7 +607,8 @@ impl DistServeEngine {
             Role::Prefill => {
                 self.slot_of_dev.push(self.prefill.len());
                 self.prefill.push(inst);
-                self.pbook.add_instance(); // stable slot, zeroed counters
+                let bi = self.pbook.add_instance(); // stable slot, zeroed
+                self.pbook.entry_mut(bi).weight = self.devices[id].spec.weight;
             }
             _ => {
                 self.slot_of_dev.push(self.decode.len());
@@ -578,7 +617,7 @@ impl DistServeEngine {
             }
         }
         self.scale_outs += 1;
-        self.fleet_size.push(now, self.active_count() as f64);
+        self.fleet.sample(now, &self.devices);
         log::debug!("distserve scale-out: device {id} joins as {role:?} at t={now:.2}");
     }
 
@@ -612,7 +651,7 @@ impl DistServeEngine {
             }
         }
         self.stranded_buf = stranded;
-        self.fleet_size.push(now, self.active_count() as f64);
+        self.fleet.sample(now, &self.devices);
         log::debug!("distserve drain: device {d} begins draining at t={now:.2}");
     }
 
@@ -636,7 +675,7 @@ impl DistServeEngine {
                 }
             };
             if crate::cluster::try_release(&mut self.devices, d, clear) {
-                self.fleet_size.push(now, self.active_count() as f64);
+                self.fleet.sample(now, &self.devices);
                 log::debug!("distserve release: device {d} released at t={now:.2}");
             }
         }
@@ -684,8 +723,8 @@ impl Engine for DistServeEngine {
             for d in 0..self.devices.len() {
                 self.as_last_busy[d] = self.busy_wall_of_dev(d);
             }
-            if self.fleet_size.is_empty() {
-                self.fleet_size.push(now, self.active_count() as f64);
+            if self.fleet.is_empty() {
+                self.fleet.sample(now, &self.devices);
             }
             q.push_after(self.autoscaler.cfg.window, FleetEvent::Autoscale.timer());
         }

@@ -26,9 +26,9 @@
 //! for a new device, or draining and releasing a victim.
 
 use super::common::{self, tags, Seq};
-use crate::cluster::GpuSpec;
+use crate::cluster::{Device, GpuSpec};
 use crate::config::AutoscaleConfig;
-use crate::metrics::Collector;
+use crate::metrics::{Collector, TimeSeries};
 use crate::model::ModelSpec;
 use crate::sim::Timer;
 use crate::workload::Request;
@@ -145,6 +145,14 @@ pub struct InstanceLoad {
     pub cache_hit: f64,
     /// Free HBM bytes (DistServe decode placement).
     pub mem_free: u64,
+    /// Relative capacity weight of the backing device (heterogeneous
+    /// fleets; [`crate::cluster::GpuSpec::weight`]). Every policy divides
+    /// its load counters by this, so a 2x device absorbs 2x the work
+    /// before looking equally loaded. 1.0 = the homogeneous baseline;
+    /// with uniform weights the normalization is an exact identity
+    /// (x / 1.0 == x in IEEE), so picks are byte-identical to the
+    /// pre-weight integer comparisons.
+    pub weight: f64,
 }
 
 impl InstanceLoad {
@@ -158,7 +166,26 @@ impl InstanceLoad {
             u: 0.0,
             cache_hit: 0.0,
             mem_free: 0,
+            weight: 1.0,
         }
+    }
+
+    /// Capacity-normalized resident-sequence load.
+    #[inline]
+    pub fn norm_load(&self) -> f64 {
+        self.load_seqs as f64 / self.weight.max(1e-9)
+    }
+
+    /// Capacity-normalized queue depth.
+    #[inline]
+    pub fn norm_queue(&self) -> f64 {
+        self.queue_len as f64 / self.weight.max(1e-9)
+    }
+
+    /// Capacity-normalized running-set size.
+    #[inline]
+    pub fn norm_running(&self) -> f64 {
+        self.running as f64 / self.weight.max(1e-9)
     }
 }
 
@@ -306,7 +333,10 @@ impl Router for RoundRobin {
     }
 }
 
-/// Min (load_seqs, queue_len, idx) — vLLM's `LeastLoaded`.
+/// Min (load_seqs/w, queue_len/w, idx) — vLLM's `LeastLoaded`, capacity-
+/// normalized. With uniform weights the float comparisons reproduce the
+/// historical integer tuple ordering exactly (small counts are exact in
+/// f64 and `total_cmp` agrees with `cmp` on them).
 #[derive(Debug, Default)]
 pub struct LeastLoaded;
 
@@ -315,7 +345,12 @@ impl Router for LeastLoaded {
         loads
             .iter()
             .enumerate()
-            .min_by_key(|(_, l)| (l.load_seqs, l.queue_len, l.idx))
+            .min_by(|(_, a), (_, b)| {
+                a.norm_load()
+                    .total_cmp(&b.norm_load())
+                    .then(a.norm_queue().total_cmp(&b.norm_queue()))
+                    .then(a.idx.cmp(&b.idx))
+            })
             .map(|(p, _)| p)
     }
 
@@ -324,7 +359,8 @@ impl Router for LeastLoaded {
     }
 }
 
-/// Min (queue_len, load_seqs, idx) — DistServe's prefill dispatch.
+/// Min (queue_len/w, load_seqs/w, idx) — DistServe's prefill dispatch,
+/// capacity-normalized.
 #[derive(Debug, Default)]
 pub struct LeastQueue;
 
@@ -333,7 +369,12 @@ impl Router for LeastQueue {
         loads
             .iter()
             .enumerate()
-            .min_by_key(|(_, l)| (l.queue_len, l.load_seqs, l.idx))
+            .min_by(|(_, a), (_, b)| {
+                a.norm_queue()
+                    .total_cmp(&b.norm_queue())
+                    .then(a.norm_load().total_cmp(&b.norm_load()))
+                    .then(a.idx.cmp(&b.idx))
+            })
             .map(|(p, _)| p)
     }
 
@@ -342,7 +383,10 @@ impl Router for LeastQueue {
     }
 }
 
-/// Max (mem_free, fewest running) — DistServe's decode placement.
+/// Max (mem_free, fewest running/w) — DistServe's decode placement. Free
+/// memory is absolute bytes (a bigger HBM IS the capacity difference); only
+/// the running-set tie-break normalizes. Ties resolve to the LAST maximal
+/// candidate, exactly as the original `max_by_key` did.
 #[derive(Debug, Default)]
 pub struct MostFreeMem;
 
@@ -351,7 +395,11 @@ impl Router for MostFreeMem {
         loads
             .iter()
             .enumerate()
-            .max_by_key(|(_, l)| (l.mem_free, std::cmp::Reverse(l.running)))
+            .max_by(|(_, a), (_, b)| {
+                a.mem_free
+                    .cmp(&b.mem_free)
+                    .then(b.norm_running().total_cmp(&a.norm_running()))
+            })
             .map(|(p, _)| p)
     }
 
@@ -362,8 +410,9 @@ impl Router for MostFreeMem {
 
 /// vLLM/SGLang's cache-aware scoring: `w_cache·hit − w_load·(load/max)`,
 /// highest score wins — the policy whose positive-feedback skew Fig 2a
-/// demonstrates. Ties resolve to the LAST maximal candidate, exactly as
-/// the original `max_by` loop did.
+/// demonstrates. Load is capacity-normalized before the max-scaling, so a
+/// heavier device tolerates proportionally more residents. Ties resolve to
+/// the LAST maximal candidate, exactly as the original `max_by` loop did.
 #[derive(Debug)]
 pub struct CacheAware {
     pub w_cache: f64,
@@ -374,12 +423,11 @@ impl Router for CacheAware {
     fn pick(&mut self, loads: &[InstanceLoad]) -> Option<usize> {
         let max_load = loads
             .iter()
-            .map(|l| l.load_seqs)
-            .max()
-            .unwrap_or(0)
-            .max(1) as f64;
+            .map(|l| l.norm_load())
+            .fold(0.0_f64, f64::max)
+            .max(1.0);
         let score = |l: &InstanceLoad| {
-            self.w_cache * l.cache_hit - self.w_load * (l.load_seqs as f64 / max_load)
+            self.w_cache * l.cache_hit - self.w_load * (l.norm_load() / max_load)
         };
         loads
             .iter()
@@ -400,7 +448,9 @@ impl Router for CacheAware {
 /// This is a faithful, allocation-free port of
 /// `banaserve::scheduler::pick_rotating` onto fleet snapshots (the fleet
 /// layer must not depend on an engine module); a parity property test in
-/// `tests/prop_engines.rs` pins the two implementations together.
+/// `tests/prop_engines.rs` pins the two implementations together (at
+/// uniform weight — `u` is already a per-device utilization, so only the
+/// queue tie-breaks are capacity-normalized here).
 pub fn pick_load_aware(loads: &[InstanceLoad], delta_l: f64, rr: usize) -> Option<usize> {
     if loads.is_empty() {
         return None;
@@ -410,7 +460,7 @@ pub fn pick_load_aware(loads: &[InstanceLoad], delta_l: f64, rr: usize) -> Optio
         .enumerate()
         .min_by(|(_, a), (_, b)| {
             a.u.total_cmp(&b.u)
-                .then(a.queue_len.cmp(&b.queue_len))
+                .then(a.norm_queue().total_cmp(&b.norm_queue()))
                 .then(a.idx.cmp(&b.idx))
         })
         .map(|(i, _)| i)
@@ -421,8 +471,8 @@ pub fn pick_load_aware(loads: &[InstanceLoad], delta_l: f64, rr: usize) -> Optio
             .iter()
             .enumerate()
             .min_by(|(_, a), (_, b)| {
-                a.queue_len
-                    .cmp(&b.queue_len)
+                a.norm_queue()
+                    .total_cmp(&b.norm_queue())
                     .then(a.u.total_cmp(&b.u))
                     .then(a.idx.cmp(&b.idx))
             })
@@ -431,8 +481,8 @@ pub fn pick_load_aware(loads: &[InstanceLoad], delta_l: f64, rr: usize) -> Optio
     // rotate among near-ties of the minimum without allocating
     const TIE_EPS: f64 = 0.05;
     let min_u = loads[least].u;
-    let min_q = loads[least].queue_len;
-    let tied = |l: &InstanceLoad| l.u - min_u < TIE_EPS && l.queue_len == min_q;
+    let min_q = loads[least].norm_queue();
+    let tied = |l: &InstanceLoad| l.u - min_u < TIE_EPS && l.norm_queue() == min_q;
     let n_tied = loads.iter().filter(|l| tied(l)).count();
     let want = rr % n_tied;
     loads
@@ -558,11 +608,38 @@ pub enum ScaleDecision {
     Hold,
 }
 
-/// The windowed-load autoscaling policy: scale out when the fleet's mean
-/// busy fraction exceeds `scale_out_util` (or queueing pressure mounts),
-/// drain the least-loaded drainable device when it falls below
-/// `scale_in_util` with empty queues — all bounded by min/max fleet size
-/// and rate-limited by a cooldown so a single burst edge can't thrash.
+/// Windowed P99 observations fed to an SLO-mode decision (from the
+/// engine's [`crate::metrics::SloTracker`]). `None` = no completions in
+/// the retained windows, which the decision treats as "no evidence of a
+/// breach" — queue pressure still covers the cold-start burst edge.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SloView {
+    pub p99_ttft: Option<f64>,
+    pub p99_tpot: Option<f64>,
+}
+
+impl SloView {
+    pub const NONE: SloView = SloView {
+        p99_ttft: None,
+        p99_tpot: None,
+    };
+}
+
+/// The windowed autoscaling policy, in one of two modes:
+///
+/// * **SLO mode** (either `ttft_slo_ms` or `tpot_slo_ms` set): scale out
+///   when the windowed P99 of any set target exceeds `slo_headroom` x
+///   target (or on acute queue pressure — the burst edge fires before a
+///   single completion can raise the P99); drain only when every set
+///   target sits comfortably below half its headroom'd target AND the
+///   fleet is idle by the util thresholds.
+/// * **Util fallback** (no targets set — the PR 2 behavior, bit-identical):
+///   scale out when mean busy exceeds `scale_out_util` or queues mount,
+///   drain when it falls below `scale_in_util` with empty queues.
+///
+/// Both modes are bounded by min/max fleet size, never drain the last
+/// active device, and are rate-limited by a cooldown so a single burst
+/// edge can't thrash.
 #[derive(Debug)]
 pub struct Autoscaler {
     pub cfg: AutoscaleConfig,
@@ -581,16 +658,43 @@ impl Autoscaler {
         self.cfg.enabled
     }
 
+    /// Is the decision SLO-driven (any P99 target set)?
+    pub fn slo_mode(&self) -> bool {
+        self.cfg.ttft_slo_ms > 0.0 || self.cfg.tpot_slo_ms > 0.0
+    }
+
+    /// Relative P99 overshoot above the most-violated set target, >= 0
+    /// (0 in util mode or when every target is met) — the "SLO gap" that
+    /// drives the scale-out spec choice ([`pick_scale_out_spec`]).
+    pub fn slo_gap(&self, slo: SloView) -> f64 {
+        let mut gap = 0.0_f64;
+        if self.cfg.ttft_slo_ms > 0.0 {
+            if let Some(p) = slo.p99_ttft {
+                gap = gap.max(p / (self.cfg.ttft_slo_ms / 1e3) - 1.0);
+            }
+        }
+        if self.cfg.tpot_slo_ms > 0.0 {
+            if let Some(p) = slo.p99_tpot {
+                gap = gap.max(p / (self.cfg.tpot_slo_ms / 1e3) - 1.0);
+            }
+        }
+        gap.max(0.0)
+    }
+
     /// One evaluation over the ACTIVE devices' windowed loads.
     /// `global_backlog` counts engine-wide queued work not attributable to
     /// one device (e.g. BanaServe's store-staged sequences awaiting decode
     /// admission); it joins the per-device `queued` sum for the
-    /// queue-pressure trigger.
+    /// queue-pressure trigger. `slo` carries the windowed P99 digests;
+    /// pass [`SloView::NONE`] in util mode (with no targets set the view
+    /// is ignored and the decision degrades to the util thresholds
+    /// bit-identically — pinned by `tests/prop_fleet.rs`).
     pub fn decide(
         &mut self,
         now: f64,
         active: &[FleetLoad],
         global_backlog: usize,
+        slo: SloView,
     ) -> ScaleDecision {
         if !self.cfg.enabled || active.is_empty() || now < self.cooldown_until {
             return ScaleDecision::Hold;
@@ -599,16 +703,40 @@ impl Autoscaler {
         let mean_busy = active.iter().map(|l| l.busy).sum::<f64>() / n as f64;
         let queued: usize =
             active.iter().map(|l| l.queued).sum::<usize>() + global_backlog;
-        // scale out on sustained utilization OR acute queue pressure — the
-        // queue trigger is what catches a burst edge before a full window
-        // of saturation accrues (the P99 killer on bursty traces)
-        if n < self.cfg.max_devices
-            && (mean_busy > self.cfg.scale_out_util || queued > 4 * n)
-        {
+        // the queue-pressure trigger catches a burst edge before a full
+        // window of saturation (util mode) or a single slow completion
+        // (SLO mode) can register — the P99 killer on bursty traces
+        let (scale_out, scale_in) = if self.slo_mode() {
+            let head = self.cfg.slo_headroom.clamp(1e-3, 10.0);
+            let mut breach = false;
+            let mut comfortable = true;
+            if self.cfg.ttft_slo_ms > 0.0 {
+                let target = head * self.cfg.ttft_slo_ms / 1e3;
+                let p = slo.p99_ttft.unwrap_or(0.0);
+                breach |= p > target;
+                comfortable &= p < 0.5 * target;
+            }
+            if self.cfg.tpot_slo_ms > 0.0 {
+                let target = head * self.cfg.tpot_slo_ms / 1e3;
+                let p = slo.p99_tpot.unwrap_or(0.0);
+                breach |= p > target;
+                comfortable &= p < 0.5 * target;
+            }
+            (
+                breach || queued > 4 * n,
+                comfortable && mean_busy < self.cfg.scale_in_util && queued == 0,
+            )
+        } else {
+            (
+                mean_busy > self.cfg.scale_out_util || queued > 4 * n,
+                mean_busy < self.cfg.scale_in_util && queued == 0,
+            )
+        };
+        if n < self.cfg.max_devices && scale_out {
             self.cooldown_until = now + self.cfg.cooldown;
             return ScaleDecision::Out;
         }
-        if n > self.cfg.min_devices && mean_busy < self.cfg.scale_in_util && queued == 0 {
+        if n > self.cfg.min_devices && n > 1 && scale_in {
             let victim = active
                 .iter()
                 .filter(|l| l.drainable)
@@ -625,6 +753,90 @@ impl Autoscaler {
             }
         }
         ScaleDecision::Hold
+    }
+}
+
+/// Price/perf spec choice for a scale-out: normally the cheapest capacity
+/// wins (min cost/weight, ties to the lower absolute cost, then name);
+/// when the SLO gap is large (windowed P99 >= 50% over target) the
+/// HIGHEST-weight spec wins instead — raw capacity closes a deep gap
+/// faster than another cheap device. Deterministic over any catalog order.
+pub fn pick_scale_out_spec(catalog: &[GpuSpec], slo_gap: f64) -> Option<&GpuSpec> {
+    if catalog.is_empty() {
+        return None;
+    }
+    if slo_gap >= 0.5 {
+        catalog.iter().min_by(|a, b| {
+            b.weight
+                .total_cmp(&a.weight)
+                .then(a.cost.total_cmp(&b.cost))
+                .then(a.name.cmp(b.name))
+        })
+    } else {
+        catalog.iter().min_by(|a, b| {
+            (a.cost / a.weight.max(1e-9))
+                .total_cmp(&(b.cost / b.weight.max(1e-9)))
+                .then(a.cost.total_cmp(&b.cost))
+                .then(a.name.cmp(b.name))
+        })
+    }
+}
+
+/// Step-series bundle an elastic engine records at every fleet-membership
+/// change (and at each decision window for `util`): total active size, the
+/// active fleet's cost rate (Σ `GpuSpec::cost` over Active devices), and
+/// per-spec active counts — the hetero-slo scenario's reporting surface.
+#[derive(Debug, Default)]
+pub struct FleetSeries {
+    /// (time, active device count).
+    pub size: TimeSeries,
+    /// (time, windowed mean busy fraction) per decision window.
+    pub util: TimeSeries,
+    /// (time, Σ active device cost) — integrate for total device-cost.
+    pub cost_rate: TimeSeries,
+    /// (spec name, (time, active count) series), one entry per spec ever
+    /// active in the fleet.
+    pub by_spec: Vec<(&'static str, TimeSeries)>,
+}
+
+impl FleetSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// No membership sample recorded yet?
+    pub fn is_empty(&self) -> bool {
+        self.size.is_empty()
+    }
+
+    /// Record the current fleet composition at `now`. Size and per-spec
+    /// counts cover ACTIVE devices (serving capacity); the cost rate bills
+    /// every non-Released device — a Draining device still finishing its
+    /// residents is still held (`cluster::try_release` refuses while KV is
+    /// resident), so the elastic arm pays for its drain tails.
+    pub fn sample(&mut self, now: f64, devices: &[Device]) {
+        let mut total = 0usize;
+        let mut cost = 0.0;
+        for d in devices.iter() {
+            if d.state != crate::cluster::DeviceState::Released {
+                cost += d.spec.cost;
+            }
+            if d.is_active() {
+                total += 1;
+                if !self.by_spec.iter().any(|(n, _)| *n == d.spec.name) {
+                    self.by_spec.push((d.spec.name, TimeSeries::new()));
+                }
+            }
+        }
+        self.size.push(now, total as f64);
+        self.cost_rate.push(now, cost);
+        for (name, ts) in self.by_spec.iter_mut() {
+            let c = devices
+                .iter()
+                .filter(|d| d.is_active() && d.spec.name == *name)
+                .count();
+            ts.push(now, c as f64);
+        }
     }
 }
 
@@ -815,29 +1027,30 @@ mod tests {
         cfg.min_devices = 1;
         cfg.max_devices = 4;
         let mut a = Autoscaler::new(cfg);
+        assert!(!a.slo_mode(), "no targets set: util fallback mode");
         // utilization trigger
         assert_eq!(
-            a.decide(0.0, &[fl(0, 0.95, 0, true), fl(1, 0.9, 0, true)], 0),
+            a.decide(0.0, &[fl(0, 0.95, 0, true), fl(1, 0.9, 0, true)], 0, SloView::NONE),
             ScaleDecision::Out
         );
         // cooldown holds
         assert_eq!(
-            a.decide(1.0, &[fl(0, 0.95, 0, true), fl(1, 0.9, 0, true)], 0),
+            a.decide(1.0, &[fl(0, 0.95, 0, true), fl(1, 0.9, 0, true)], 0, SloView::NONE),
             ScaleDecision::Hold
         );
         // queue-pressure trigger after cooldown
         assert_eq!(
-            a.decide(10.0, &[fl(0, 0.2, 9, true), fl(1, 0.1, 4, true)], 0),
+            a.decide(10.0, &[fl(0, 0.2, 9, true), fl(1, 0.1, 4, true)], 0, SloView::NONE),
             ScaleDecision::Out
         );
         // engine-wide backlog alone can trigger too
         assert_eq!(
-            a.decide(20.0, &[fl(0, 0.2, 0, true), fl(1, 0.1, 0, true)], 20),
+            a.decide(20.0, &[fl(0, 0.2, 0, true), fl(1, 0.1, 0, true)], 20, SloView::NONE),
             ScaleDecision::Out
         );
         // at max: hold
         let four: Vec<FleetLoad> = (0..4).map(|i| fl(i, 0.99, 9, true)).collect();
-        assert_eq!(a.decide(30.0, &four, 0), ScaleDecision::Hold);
+        assert_eq!(a.decide(30.0, &four, 0, SloView::NONE), ScaleDecision::Hold);
     }
 
     #[test]
@@ -848,11 +1061,14 @@ mod tests {
         cfg.max_devices = 6;
         let mut a = Autoscaler::new(cfg);
         let loads = [fl(0, 0.2, 0, false), fl(1, 0.05, 0, true), fl(2, 0.1, 0, true)];
-        assert_eq!(a.decide(0.0, &loads, 0), ScaleDecision::In { victim: 1 });
+        assert_eq!(
+            a.decide(0.0, &loads, 0, SloView::NONE),
+            ScaleDecision::In { victim: 1 }
+        );
         // at min devices: hold even when idle
         let mut b = Autoscaler::new(cfg);
         assert_eq!(
-            b.decide(0.0, &[fl(0, 0.0, 0, true), fl(1, 0.0, 0, true)], 0),
+            b.decide(0.0, &[fl(0, 0.0, 0, true), fl(1, 0.0, 0, true)], 0, SloView::NONE),
             ScaleDecision::Hold
         );
         // nothing drainable: hold
@@ -861,8 +1077,17 @@ mod tests {
             c.decide(
                 0.0,
                 &[fl(0, 0.0, 0, false), fl(1, 0.0, 0, false), fl(2, 0.0, 0, false)],
-                0
+                0,
+                SloView::NONE
             ),
+            ScaleDecision::Hold
+        );
+        // a lone active device never drains, even with min_devices = 0
+        let mut solo_cfg = cfg;
+        solo_cfg.min_devices = 0;
+        let mut d = Autoscaler::new(solo_cfg);
+        assert_eq!(
+            d.decide(0.0, &[fl(0, 0.0, 0, true)], 0, SloView::NONE),
             ScaleDecision::Hold
         );
     }
@@ -871,6 +1096,117 @@ mod tests {
     fn autoscaler_disabled_always_holds() {
         let mut a = Autoscaler::new(AutoscaleConfig::default());
         assert!(!a.enabled());
-        assert_eq!(a.decide(0.0, &[fl(0, 1.0, 50, true)], 0), ScaleDecision::Hold);
+        assert_eq!(
+            a.decide(0.0, &[fl(0, 1.0, 50, true)], 0, SloView::NONE),
+            ScaleDecision::Hold
+        );
+    }
+
+    #[test]
+    fn slo_mode_scales_on_p99_breach_and_drains_when_comfortable() {
+        let mut cfg = AutoscaleConfig::default();
+        cfg.enabled = true;
+        cfg.min_devices = 1;
+        cfg.max_devices = 4;
+        cfg.ttft_slo_ms = 1000.0;
+        cfg.slo_headroom = 0.9;
+        let mut a = Autoscaler::new(cfg);
+        assert!(a.slo_mode());
+        let calm = [fl(0, 0.5, 0, true), fl(1, 0.5, 0, true)];
+        // P99 above 0.9 x 1s: scale out even though util is moderate
+        let breach = SloView { p99_ttft: Some(1.2), p99_tpot: None };
+        assert_eq!(a.decide(0.0, &calm, 0, breach), ScaleDecision::Out);
+        assert!(a.slo_gap(breach) > 0.19 && a.slo_gap(breach) < 0.21);
+        // P99 just under the headroom'd target but not comfortable: hold
+        let near = SloView { p99_ttft: Some(0.6), p99_tpot: None };
+        assert_eq!(a.decide(10.0, &calm, 0, near), ScaleDecision::Hold);
+        // comfortably under target AND idle: drain
+        let idle = [fl(0, 0.1, 0, true), fl(1, 0.05, 0, true)];
+        let comfy = SloView { p99_ttft: Some(0.1), p99_tpot: None };
+        assert!(matches!(
+            a.decide(20.0, &idle, 0, comfy),
+            ScaleDecision::In { .. }
+        ));
+        // queue pressure still scales out with no P99 evidence at all
+        let mut b = Autoscaler::new(cfg);
+        assert_eq!(
+            b.decide(0.0, &[fl(0, 0.1, 9, true), fl(1, 0.1, 4, true)], 0, SloView::NONE),
+            ScaleDecision::Out
+        );
+        // TPOT target breached alone also triggers
+        let mut tcfg = cfg;
+        tcfg.ttft_slo_ms = 0.0;
+        tcfg.tpot_slo_ms = 50.0;
+        let mut c = Autoscaler::new(tcfg);
+        let slow_tpot = SloView { p99_ttft: None, p99_tpot: Some(0.08) };
+        assert_eq!(c.decide(0.0, &calm, 0, slow_tpot), ScaleDecision::Out);
+    }
+
+    #[test]
+    fn scale_out_spec_pick_is_price_perf_until_the_gap_is_deep() {
+        use crate::cluster::{A100_40G, A100_80G};
+        let catalog = [A100_40G, A100_80G];
+        // cost/weight: 40G = 1.0, 80G = 1.5/1.3 ≈ 1.15 — small gap buys cheap
+        assert_eq!(pick_scale_out_spec(&catalog, 0.0).unwrap().name, "a100-40g");
+        assert_eq!(pick_scale_out_spec(&catalog, 0.3).unwrap().name, "a100-40g");
+        // deep gap buys capacity
+        assert_eq!(pick_scale_out_spec(&catalog, 0.5).unwrap().name, "a100-80g");
+        assert_eq!(pick_scale_out_spec(&catalog, 2.0).unwrap().name, "a100-80g");
+        // catalog order must not matter
+        let rev = [A100_80G, A100_40G];
+        assert_eq!(pick_scale_out_spec(&rev, 0.0).unwrap().name, "a100-40g");
+        assert_eq!(pick_scale_out_spec(&rev, 1.0).unwrap().name, "a100-80g");
+        assert!(pick_scale_out_spec(&[], 0.0).is_none());
+    }
+
+    #[test]
+    fn weighted_routers_prefer_the_heavier_device_at_equal_counts() {
+        let mut light = il(0, 4, 4);
+        light.weight = 1.0;
+        let mut heavy = il(1, 4, 4);
+        heavy.weight = 2.0;
+        let loads = [light, heavy];
+        // same absolute counts, twice the capacity: heavy is less loaded
+        assert_eq!(LeastLoaded.pick(&loads), Some(1));
+        assert_eq!(LeastQueue.pick(&loads), Some(1));
+        // uniform weights keep the historical idx tie-break
+        let uniform = [il(0, 4, 4), il(1, 4, 4)];
+        assert_eq!(LeastLoaded.pick(&uniform), Some(0));
+    }
+
+    #[test]
+    fn fleet_series_samples_size_cost_and_per_spec_counts() {
+        use crate::cluster::{A100_40G, A100_80G, Role};
+        let mut devs = vec![
+            Device::new(0, A100_40G, Role::Unified),
+            Device::new(1, A100_40G, Role::Unified),
+        ];
+        let mut fs = FleetSeries::new();
+        assert!(fs.is_empty());
+        fs.sample(0.0, &devs);
+        devs.push(Device::new(2, A100_80G, Role::Unified));
+        fs.sample(5.0, &devs);
+        crate::cluster::begin_drain(&mut devs, 0);
+        fs.sample(9.0, &devs);
+        assert!(crate::cluster::try_release(&mut devs, 0, true));
+        fs.sample(11.0, &devs);
+        assert_eq!(
+            fs.size.points,
+            vec![(0.0, 2.0), (5.0, 3.0), (9.0, 2.0), (11.0, 2.0)]
+        );
+        let cost = |t: usize| fs.cost_rate.points[t].1;
+        assert!((cost(0) - 2.0).abs() < 1e-12);
+        assert!((cost(1) - (2.0 + A100_80G.cost)).abs() < 1e-12);
+        // a Draining device is still held, so it still bills...
+        assert!((cost(2) - (2.0 + A100_80G.cost)).abs() < 1e-12);
+        // ...and stops billing only once Released
+        assert!((cost(3) - (1.0 + A100_80G.cost)).abs() < 1e-12);
+        let by: Vec<&str> = fs.by_spec.iter().map(|(n, _)| *n).collect();
+        assert_eq!(by, vec!["a100-40g", "a100-80g"]);
+        let forty = &fs.by_spec[0].1;
+        assert_eq!(forty.points.last(), Some(&(9.0, 1.0)));
+        // the 80G series starts at its first appearance
+        let eighty = &fs.by_spec[1].1;
+        assert_eq!(eighty.points.first(), Some(&(5.0, 1.0)));
     }
 }

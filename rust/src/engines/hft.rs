@@ -11,9 +11,9 @@
 
 use super::common::{self, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
-use crate::cluster::{Cluster, Device, Role};
+use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
 use crate::config::ExperimentConfig;
-use crate::metrics::Collector;
+use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency, PrefillItem};
 use crate::model::ModelSpec;
 use crate::sim::{Engine, EventQueue, Timer};
@@ -31,10 +31,17 @@ struct StaticBatch {
 }
 
 /// Static-batching engine over N unified devices, round-robin routed.
+///
+/// With `ExperimentConfig::autoscale` enabled the fleet is *elastic* on
+/// the same AUTOSCALE tick as the other engines: scale-out appends a
+/// unified instance (catalog spec by price/perf) behind a weight spin-up
+/// freeze; scale-in drains an instance — round robin skips it, its queue
+/// re-routes, the running batch finishes, then the device is released.
 pub struct HftEngine {
     spec: &'static ModelSpec,
     eff: Efficiency,
     max_batch: u64,
+    link: Link,
     pub devices: Vec<Device>,
     pub insts: Vec<InstanceSim>,
     batches: Vec<Option<StaticBatch>>,
@@ -45,22 +52,41 @@ pub struct HftEngine {
     /// Maintained per-instance loads (round robin ignores the values, but
     /// the maintained slice lets load-aware policies drop in unchanged).
     book: fleet::LoadBook,
+    /// Specs the autoscaler may scale out with (price/perf choice).
+    catalog: Vec<GpuSpec>,
+    autoscaler: fleet::Autoscaler,
+    /// Windowed P99-TTFT/TPOT digests fed from completion events (SLO mode).
+    slo: SloTracker,
+    as_last_busy: Vec<f64>,
+    as_last_eval: f64,
+    autoscale_ticking: bool,
+    fleet_loads_buf: Vec<fleet::FleetLoad>,
+    stranded_buf: Vec<u64>,
+    pub fleet: fleet::FleetSeries,
+    pub scale_outs: u64,
+    pub drains: u64,
 }
 
 impl HftEngine {
     pub fn new(cfg: &ExperimentConfig) -> Self {
         let cluster = Cluster::homogeneous(cfg.n_devices, cfg.gpu.clone(), Role::Unified);
+        let link = cluster.gpu_link;
         let mut devices = cluster.devices;
         for d in devices.iter_mut() {
             d.weight_bytes = cfg.model.weight_bytes();
         }
         let insts = (0..cfg.n_devices).map(|i| InstanceSim::new(i, 1.0)).collect();
+        let mut book = fleet::LoadBook::with_instances(cfg.n_devices);
+        for i in 0..cfg.n_devices {
+            book.entry_mut(i).weight = devices[i].spec.weight;
+        }
         let mut col = Collector::new();
         col.window_start = cfg.warmup;
         HftEngine {
             spec: cfg.model,
             eff: cfg.eff,
             max_batch: cfg.max_batch_seqs.min(16), // HFT typical small batches
+            link,
             devices,
             insts,
             batches: (0..cfg.n_devices).map(|_| None).collect(),
@@ -68,8 +94,62 @@ impl HftEngine {
             col,
             inflight: 0,
             router: fleet::RoundRobin::default(),
-            book: fleet::LoadBook::with_instances(cfg.n_devices),
+            book,
+            catalog: if cfg.gpu_catalog.is_empty() {
+                vec![cfg.gpu.clone()]
+            } else {
+                cfg.gpu_catalog.clone()
+            },
+            autoscaler: fleet::Autoscaler::new(cfg.autoscale),
+            slo: SloTracker::new(cfg.autoscale.window),
+            as_last_busy: vec![0.0; cfg.n_devices],
+            as_last_eval: 0.0,
+            autoscale_ticking: false,
+            fleet_loads_buf: Vec::new(),
+            stranded_buf: Vec::new(),
+            fleet: fleet::FleetSeries::new(),
+            scale_outs: 0,
+            drains: 0,
         }
+    }
+
+    /// Route one arrival: static fleets keep the plain round robin over
+    /// the maintained slice; elastic fleets round-robin over the filtered
+    /// ACTIVE/unfrozen view (falling back to any active instance while
+    /// every one is still spinning up).
+    fn route(&mut self, now: f64) -> usize {
+        if self.autoscaler.enabled() {
+            {
+                let (book, insts, devices) = (&mut self.book, &self.insts, &self.devices);
+                let loads = book.filtered(|l| {
+                    devices[insts[l.idx].device].is_active()
+                        && now >= insts[l.idx].frozen_until
+                });
+                if let Some(pos) = self.router.pick(loads) {
+                    return loads[pos].idx;
+                }
+            }
+            let (book, insts, devices) = (&mut self.book, &self.insts, &self.devices);
+            let loads = book.filtered(|l| devices[insts[l.idx].device].is_active());
+            return match self.router.pick(loads) {
+                Some(pos) => loads[pos].idx,
+                // unreachable while drain guards keep one active device
+                None => 0,
+            };
+        }
+        self.router.pick(self.book.loads()).expect("non-empty fleet")
+    }
+
+    /// Finish one sequence (record + counters); feeds the SLO tracker.
+    fn finish_seq(&mut self, sid: u64, now: f64) {
+        let seq = self.seqs.seq_mut(sid);
+        seq.phase = SeqPhase::Finished;
+        let rec = seq.record(now);
+        if self.autoscaler.enabled() {
+            self.slo.record(now, rec.ttft(), rec.tpot());
+        }
+        self.col.finish(rec);
+        self.inflight -= 1;
     }
 
     /// Try to start a batch on instance `i`, then sync its load-book entry
@@ -82,7 +162,10 @@ impl HftEngine {
 
     fn maybe_start_inner(&mut self, i: usize, q: &mut EventQueue) {
         let now = q.now();
-        if self.insts[i].is_busy() || self.batches[i].is_some() {
+        if self.insts[i].is_busy()
+            || self.batches[i].is_some()
+            || now < self.insts[i].frozen_until
+        {
             return;
         }
         if self.insts[i].waiting.is_empty() {
@@ -173,16 +256,16 @@ impl HftEngine {
         match step.kind {
             StepKind::Prefill => {
                 for &sid in &batch.seqs {
-                    let seq = self.seqs.seq_mut(sid);
-                    seq.ctx = batch.padded_prompt + 1;
-                    seq.generated = 1;
-                    seq.first_token = now;
-                    seq.phase = SeqPhase::Decoding;
-                    if seq.is_done() {
-                        seq.phase = SeqPhase::Finished;
-                        let rec = seq.record(now);
-                        self.col.finish(rec);
-                        self.inflight -= 1;
+                    let done = {
+                        let seq = self.seqs.seq_mut(sid);
+                        seq.ctx = batch.padded_prompt + 1;
+                        seq.generated = 1;
+                        seq.first_token = now;
+                        seq.phase = SeqPhase::Decoding;
+                        seq.is_done()
+                    };
+                    if done {
+                        self.finish_seq(sid, now);
                     }
                 }
                 batch.steps_done = 1;
@@ -190,19 +273,19 @@ impl HftEngine {
             StepKind::StaticDecode | StepKind::Decode => {
                 batch.steps_done += 1;
                 for &sid in &batch.seqs {
-                    let Some(seq) = self.seqs.get_mut(sid) else {
-                        continue;
+                    let done = {
+                        let Some(seq) = self.seqs.get_mut(sid) else {
+                            continue;
+                        };
+                        if seq.phase != SeqPhase::Decoding {
+                            continue;
+                        }
+                        seq.generated += 1;
+                        seq.ctx += 1;
+                        seq.is_done()
                     };
-                    if seq.phase != SeqPhase::Decoding {
-                        continue;
-                    }
-                    seq.generated += 1;
-                    seq.ctx += 1;
-                    if seq.is_done() {
-                        seq.phase = SeqPhase::Finished;
-                        let rec = seq.record(now);
-                        self.col.finish(rec);
-                        self.inflight -= 1;
+                    if done {
+                        self.finish_seq(sid, now);
                     }
                 }
             }
@@ -240,6 +323,143 @@ impl HftEngine {
                 self.seqs.remove(sid);
             }
             self.maybe_start(i, q);
+            // a Draining device's last batch completion is its release
+            // point — the autoscale tick alone would strand it when the
+            // tick loop stops at inflight 0
+            if self.autoscaler.enabled()
+                && self.devices[dev_idx].state == DeviceState::Draining
+            {
+                self.finish_drains(now);
+            }
+        }
+    }
+
+    // --- elastic fleet -----------------------------------------------------
+
+    /// May instance `i` be drained? Never the last active instance.
+    fn drainable(&self, i: usize) -> bool {
+        self.devices[self.insts[i].device].is_active()
+            && self
+                .insts
+                .iter()
+                .filter(|x| self.devices[x.device].is_active())
+                .count()
+                > 1
+    }
+
+    /// Periodic autoscale evaluation (AUTOSCALE timer).
+    fn autoscale_tick(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        let period = (now - self.as_last_eval).max(1e-9);
+        self.finish_drains(now);
+        let mut active = std::mem::take(&mut self.fleet_loads_buf);
+        active.clear();
+        for i in 0..self.insts.len() {
+            if !self.devices[self.insts[i].device].is_active() {
+                continue;
+            }
+            active.push(fleet::FleetLoad {
+                idx: i,
+                busy: ((self.insts[i].busy_wall - self.as_last_busy[i]) / period).min(1.0),
+                queued: self.insts[i].queue_len(),
+                resident: self.insts[i].load_seqs(),
+                drainable: self.drainable(i),
+            });
+        }
+        if !active.is_empty() {
+            let mean = active.iter().map(|l| l.busy).sum::<f64>() / active.len() as f64;
+            self.fleet.util.push(now, mean);
+        }
+        let view = fleet::SloView {
+            p99_ttft: self.slo.p99_ttft(now),
+            p99_tpot: self.slo.p99_tpot(now),
+        };
+        let decision = self.autoscaler.decide(now, &active, 0, view);
+        self.fleet_loads_buf = active;
+        match decision {
+            fleet::ScaleDecision::Out => {
+                let gap = self.autoscaler.slo_gap(view);
+                self.scale_out(gap, q);
+            }
+            fleet::ScaleDecision::In { victim } => self.begin_drain(victim, q),
+            fleet::ScaleDecision::Hold => {}
+        }
+        self.as_last_eval = now;
+        for i in 0..self.insts.len() {
+            self.as_last_busy[i] = self.insts[i].busy_wall;
+        }
+        // wake sweep: an unfrozen instance with queued work forms a batch
+        for i in 0..self.insts.len() {
+            self.maybe_start(i, q);
+        }
+        if self.inflight > 0 {
+            q.push_after(self.autoscaler.cfg.window, FleetEvent::Autoscale.timer());
+        } else {
+            self.autoscale_ticking = false;
+        }
+    }
+
+    /// Append a unified instance, frozen until its weight replica lands.
+    fn scale_out(&mut self, slo_gap: f64, q: &mut EventQueue) {
+        let now = q.now();
+        let spec = fleet::pick_scale_out_spec(&self.catalog, slo_gap)
+            .cloned()
+            .unwrap_or_else(|| self.devices[0].spec.clone());
+        let id = self.devices.len();
+        let mut dev = Device::new(id, spec, Role::Unified);
+        dev.weight_bytes = self.spec.weight_bytes();
+        dev.touch_mem(now);
+        self.devices.push(dev);
+        let t_up = self.link.transfer_time(self.spec.weight_bytes());
+        let mut inst = InstanceSim::new(id, 1.0);
+        inst.frozen_until = now + t_up;
+        self.insts.push(inst);
+        self.batches.push(None);
+        let bi = self.book.add_instance();
+        self.book.entry_mut(bi).weight = self.devices[id].spec.weight;
+        self.as_last_busy.push(0.0);
+        self.scale_outs += 1;
+        self.fleet.sample(now, &self.devices);
+        log::debug!("hft scale-out: instance {id} joins at t={now:.2}");
+    }
+
+    /// Stop routing to `victim`, re-route its waiting queue now; the
+    /// running batch finishes in place, then the device is released.
+    fn begin_drain(&mut self, victim: usize, q: &mut EventQueue) {
+        let now = q.now();
+        crate::cluster::begin_drain(&mut self.devices, self.insts[victim].device);
+        self.drains += 1;
+        let mut stranded = std::mem::take(&mut self.stranded_buf);
+        stranded.clear();
+        stranded.extend(self.insts[victim].waiting.drain(..));
+        let (ql, ls) = (self.insts[victim].queue_len(), self.insts[victim].load_seqs());
+        self.book.set_queue(victim, ql, ls);
+        for &sid in &stranded {
+            let target = self.route(now);
+            self.seqs.seq_mut(sid).instance = self.insts[target].device;
+            self.insts[target].waiting.push_back(sid);
+            self.maybe_start(target, q);
+        }
+        self.stranded_buf = stranded;
+        self.fleet.sample(now, &self.devices);
+        log::debug!("hft drain: instance {victim} begins draining at t={now:.2}");
+    }
+
+    /// Release drained devices whose residents are all gone (the shared
+    /// `cluster::try_release` enforces the KV release-refusal invariant).
+    fn finish_drains(&mut self, now: f64) {
+        for i in 0..self.insts.len() {
+            let d = self.insts[i].device;
+            if self.devices[d].state != DeviceState::Draining {
+                continue;
+            }
+            let clear = self.insts[i].waiting.is_empty()
+                && self.batches[i].is_none()
+                && self.insts[i].step.is_none();
+            if crate::cluster::try_release(&mut self.devices, d, clear) {
+                self.fleet.sample(now, &self.devices);
+                log::debug!("hft release: instance {i} released at t={now:.2}");
+            }
         }
     }
 
@@ -257,7 +477,20 @@ impl Engine for HftEngine {
             let _ = q;
             return;
         }
-        let i = self.router.pick(self.book.loads()).expect("non-empty fleet");
+        // bootstrap the autoscale loop on (re-)arrival of work
+        if self.autoscaler.enabled() && !self.autoscale_ticking {
+            self.autoscale_ticking = true;
+            let now = q.now();
+            self.as_last_eval = now;
+            for j in 0..self.insts.len() {
+                self.as_last_busy[j] = self.insts[j].busy_wall;
+            }
+            if self.fleet.is_empty() {
+                self.fleet.sample(now, &self.devices);
+            }
+            q.push_after(self.autoscaler.cfg.window, FleetEvent::Autoscale.timer());
+        }
+        let i = self.route(q.now());
         let mut seq = Seq::new(req);
         seq.instance = self.insts[i].device;
         let sid = self.seqs.insert(seq);
@@ -269,6 +502,7 @@ impl Engine for HftEngine {
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
         match FleetEvent::decode(t) {
             Some(FleetEvent::StepDone { worker }) => self.step_done(worker, q),
+            Some(FleetEvent::Autoscale) => self.autoscale_tick(q),
             _ => unreachable!("hft got unknown timer {t:?}"),
         }
     }
@@ -346,6 +580,33 @@ mod tests {
             vl.throughput_tok_s,
             hf.throughput_tok_s
         );
+    }
+
+    #[test]
+    fn elastic_fleet_scales_out_on_burst_and_conserves() {
+        use crate::workload::ArrivalProcess;
+        let mut c = cfg(4.0, 9);
+        c.n_devices = 2;
+        c.workload.duration = 50.0;
+        c.workload.arrivals = ArrivalProcess::Bursty {
+            rps: 4.0,
+            burst_factor: 5.0,
+            burst_secs: 8.0,
+            period_secs: 24.0,
+        };
+        c.autoscale.enabled = true;
+        c.autoscale.min_devices = 2;
+        c.autoscale.max_devices = 5;
+        let reqs = c.workload.generate();
+        let n = reqs.len();
+        let mut e = HftEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        assert_eq!(e.collector().completed() as usize, n);
+        sim::check_conservation(&res, &mut e).unwrap();
+        assert!(e.scale_outs > 0, "burst must trigger scale-out");
+        for d in &e.devices {
+            assert_eq!(d.kv_bytes, 0, "device {} leaked KV", d.id);
+        }
     }
 
     #[test]

@@ -39,6 +39,59 @@
 //!   (out/in/hold over windowed [`fleet::FleetLoad`]s); executing a
 //!   decision — growing per-device state, draining queues, releasing — is
 //!   engine code, because only the engine knows its worker topology.
+//! * **Heterogeneous weights** — every [`fleet::InstanceLoad`] carries the
+//!   backing device's [`crate::cluster::GpuSpec::weight`] (relative
+//!   capacity vs the A100-40G baseline), and every policy compares
+//!   capacity-NORMALIZED counters: `load_seqs / weight`, `queue_len /
+//!   weight`, `running / weight` (absolute byte quantities like `mem_free`
+//!   stay raw — a bigger HBM IS the capacity difference). The engine that
+//!   fills a view is responsible for stamping `weight` from its device
+//!   table. With uniform weights the normalization divides by 1.0, an
+//!   exact IEEE identity, so picks are byte-identical to the pre-weight
+//!   integer comparisons — pinned by the router-heterogeneity properties
+//!   in `tests/prop_engines.rs` and the golden `Report` snapshot gate.
+//!
+//! # SLO-driven elasticity and the `hetero-slo` scenario
+//!
+//! All four engines run the same elastic loop: completion events feed a
+//! windowed [`crate::metrics::SloTracker`]; each autoscale evaluation
+//! passes the P99 digests as a [`fleet::SloView`] to
+//! [`fleet::Autoscaler::decide`] (SLO mode when `ttft_slo_ms` /
+//! `tpot_slo_ms` are set, the PR 2 busy-fraction thresholds otherwise),
+//! and a scale-out picks its device spec from the engine's catalog via
+//! [`fleet::pick_scale_out_spec`] (price/perf, capacity-first under a deep
+//! SLO gap). `simulate --scenario hetero-slo` writes
+//! `bench_results/hetero_slo.json` with this schema:
+//!
+//! ```json
+//! {
+//!   "scenario": "hetero-slo",
+//!   "ttft_slo_ms": 2000.0, "tpot_slo_ms": 0.0,
+//!   "catalog": ["a100-40g", "a100-80g"],
+//!   "base_devices": 2, "peak_devices": 6,
+//!   "seed": 11, "seeds": [11, ...],
+//!   "results": [            // one row per engine x fleet x seed
+//!     {"engine": "banaserve", "fleet": "elastic-slo", "seed": 11,
+//!      "n_requests": 0.0, "p99_ttft_s": 0.0, "ttft_attainment": 0.0,
+//!      "p99_total_s": 0.0, "mean_e2e_s": 0.0, "throughput_tok_s": 0.0,
+//!      "makespan_s": 0.0, "device_cost": 0.0, "peak_devices": 0.0,
+//!      "avg_devices": 0.0, "scale_outs": 0.0, "drains": 0.0,
+//!      "fleet_size_series": [[t, n], ...],
+//!      "fleet_spec_series": {"a100-40g": [[t, n], ...], ...}}
+//!   ],
+//!   "summary": [            // one row per engine x fleet (mean ± ci95)
+//!     {"engine": "...", "fleet": "...", "n_seeds": 5.0,
+//!      "p99_ttft_s_mean": 0.0, "p99_ttft_s_ci95": 0.0,
+//!      "ttft_attainment_mean": 0.0, "device_cost_mean": 0.0,
+//!      "throughput_tok_s_mean": 0.0, "peak_devices_max": 0.0,
+//!      "avg_devices_mean": 0.0}
+//!   ]
+//! }
+//! ```
+//!
+//! `device_cost` is ∫ Σ(active `GpuSpec::cost`) dt over the run — static
+//! fleets pay their full size for the whole makespan; elastic fleets pay
+//! what they actually held.
 
 pub mod banaserve;
 pub mod common;
@@ -68,9 +121,56 @@ pub struct EngineExtras {
     pub fleet_size_series: Vec<(f64, f64)>,
     /// Elastic fleet: (time, windowed mean busy fraction) per decision.
     pub fleet_util_series: Vec<(f64, f64)>,
+    /// Elastic fleet: (time, Σ active device cost) step series.
+    pub fleet_cost_series: Vec<(f64, f64)>,
+    /// Elastic fleet: per-spec (time, active count) step series.
+    pub fleet_spec_series: Vec<(String, Vec<(f64, f64)>)>,
+    /// ∫ Σ(active device cost) dt over the run (static fleets: full size x
+    /// makespan) — the hetero-slo scenario's cost axis.
+    pub device_cost: f64,
+    /// Fraction of windowed requests meeting the TTFT SLO (1.0 when no
+    /// target is configured).
+    pub ttft_slo_attainment: f64,
     /// Devices added / drained at runtime.
     pub scale_outs: u64,
     pub drains: u64,
+}
+
+/// Total device-cost of a run: the recorded cost-rate step series
+/// integrated to `end`, with the pre-first-sample lead-in charged at the
+/// first sampled rate; engines that never sampled (static fleets) pay
+/// `rate_now` for the whole run.
+fn device_cost(series: &crate::metrics::TimeSeries, rate_now: f64, end: f64) -> f64 {
+    if series.points.is_empty() {
+        return rate_now * end;
+    }
+    let (t0, r0) = series.points[0];
+    series.time_weighted_mean(end) * (end - t0) + r0 * t0.max(0.0)
+}
+
+/// Shared elastic-run bookkeeping: cost + fleet series into extras.
+fn fill_fleet_extras(
+    extras: &mut EngineExtras,
+    fleet: &fleet::FleetSeries,
+    devices: &[crate::cluster::Device],
+    end: f64,
+) {
+    // held = not Released (a Draining device still bills; see
+    // FleetSeries::sample) — for static fleets this is the full size
+    let rate_now: f64 = devices
+        .iter()
+        .filter(|d| d.state != crate::cluster::DeviceState::Released)
+        .map(|d| d.spec.cost)
+        .sum();
+    extras.device_cost = device_cost(&fleet.cost_rate, rate_now, end);
+    extras.fleet_size_series = fleet.size.points.clone();
+    extras.fleet_util_series = fleet.util.points.clone();
+    extras.fleet_cost_series = fleet.cost_rate.points.clone();
+    extras.fleet_spec_series = fleet
+        .by_spec
+        .iter()
+        .map(|(name, ts)| (name.to_string(), ts.points.clone()))
+        .collect();
 }
 
 /// Everything a figure bench consumes from one run.
@@ -89,25 +189,41 @@ pub struct ExperimentOutcome {
 pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
     let reqs = cfg.workload.generate();
     let submitted = reqs.len() as u64;
-    let (report, util, extras) = match cfg.engine {
+    let ttft_slo_s = cfg.autoscale.ttft_slo_ms / 1e3;
+    let (report, util, mut extras) = match cfg.engine {
         EngineKind::HfStatic => {
             let mut e = hft::HftEngine::new(cfg);
             let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
             sim::check_conservation(&res, &mut e).expect("hft conservation");
             let rep = e.collector().report(res.end_time);
-            (rep, e.device_utilization(res.end_time), EngineExtras::default())
+            let mut extras = EngineExtras {
+                scale_outs: e.scale_outs,
+                drains: e.drains,
+                ..Default::default()
+            };
+            if ttft_slo_s > 0.0 {
+                extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
+            }
+            fill_fleet_extras(&mut extras, &e.fleet, &e.devices, res.end_time);
+            (rep, e.device_utilization(res.end_time), extras)
         }
         EngineKind::Vllm => {
             let mut e = vllm_sim::VllmEngine::new(cfg);
             let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
             sim::check_conservation(&res, &mut e).expect("vllm conservation");
             let rep = e.collector().report(res.end_time);
-            let extras = EngineExtras {
+            let mut extras = EngineExtras {
                 preemptions: e.preemptions,
                 recomputed_tokens: e.recomputed_tokens,
                 routed_counts: e.routed_counts.clone(),
+                scale_outs: e.scale_outs,
+                drains: e.drains,
                 ..Default::default()
             };
+            if ttft_slo_s > 0.0 {
+                extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
+            }
+            fill_fleet_extras(&mut extras, &e.fleet, &e.devices, res.end_time);
             (rep, e.device_utilization(res.end_time), extras)
         }
         EngineKind::DistServe => {
@@ -115,14 +231,16 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
             let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
             sim::check_conservation(&res, &mut e).expect("distserve conservation");
             let rep = e.collector().report(res.end_time);
-            let extras = EngineExtras {
+            let mut extras = EngineExtras {
                 kv_transfer_bytes: e.kv_transfer_bytes,
-                fleet_size_series: e.fleet_size.points.clone(),
-                fleet_util_series: e.fleet_util.points.clone(),
                 scale_outs: e.scale_outs,
                 drains: e.drains,
                 ..Default::default()
             };
+            if ttft_slo_s > 0.0 {
+                extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
+            }
+            fill_fleet_extras(&mut extras, &e.fleet, &e.devices, res.end_time);
             (rep, e.device_utilization(res.end_time), extras)
         }
         EngineKind::BanaServe => {
@@ -130,21 +248,26 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
             let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
             sim::check_conservation(&res, &mut e).expect("banaserve conservation");
             let rep = e.collector().report(res.end_time);
-            let extras = EngineExtras {
+            let mut extras = EngineExtras {
                 kv_transfer_bytes: e.kv_transfer_bytes,
                 layer_migrations: e.stats.layer_migrations,
                 attention_migrations: e.stats.attention_migrations,
                 store_hit_rate: e.store_hit_rate(),
                 routed_counts: e.routed_counts.clone(),
-                fleet_size_series: e.fleet_size.points.clone(),
-                fleet_util_series: e.fleet_util.points.clone(),
                 scale_outs: e.scale_outs,
                 drains: e.drains,
                 ..Default::default()
             };
+            if ttft_slo_s > 0.0 {
+                extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
+            }
+            fill_fleet_extras(&mut extras, &e.fleet, &e.devices, res.end_time);
             (rep, e.device_utilization(res.end_time), extras)
         }
     };
+    if ttft_slo_s <= 0.0 {
+        extras.ttft_slo_attainment = 1.0;
+    }
     ExperimentOutcome {
         submitted,
         report,

@@ -10,10 +10,10 @@
 
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
-use crate::cluster::{Cluster, Device, Role};
+use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
 use crate::config::ExperimentConfig;
 use crate::kvcache::RadixTree;
-use crate::metrics::Collector;
+use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency};
 use crate::model::ModelSpec;
 use crate::sim::{Engine, EventQueue, Timer};
@@ -45,17 +45,27 @@ impl RouterPolicy {
 }
 
 /// Monolithic continuous-batching engine over N unified instances.
+///
+/// With `ExperimentConfig::autoscale` enabled the fleet is *elastic*: a
+/// periodic AUTOSCALE tick feeds windowed busy fractions (and the windowed
+/// P99 digests in SLO mode) to the shared [`fleet::Autoscaler`]; scale-out
+/// appends a unified instance (spec by price/perf from the catalog) behind
+/// a weight spin-up freeze, scale-in drains an instance — no new routes,
+/// its queue re-routes immediately, residents finish in place, then the
+/// device is released.
 pub struct VllmEngine {
     spec: &'static ModelSpec,
     eff: Efficiency,
     limits: BatchLimits,
+    link: Link,
     pub devices: Vec<Device>,
     pub insts: Vec<InstanceSim>,
     /// Per-instance prefix cache (None = prefix caching disabled).
     pub caches: Vec<RadixTree>,
     pub prefix_caching: bool,
-    /// Token budget of each instance's prefix cache.
-    cache_budget: u64,
+    /// Token budget of each instance's prefix cache (per instance: a
+    /// scaled-out 80G device gets a proportionally larger budget).
+    cache_budgets: Vec<u64>,
     pub policy: RouterPolicy,
     router: Box<dyn fleet::Router>,
     /// Maintained per-instance loads: synced at admit/step/finish
@@ -73,6 +83,21 @@ pub struct VllmEngine {
     pub preemptions: u64,
     /// Requests routed to each instance (Fig 2a skew metric).
     pub routed_counts: Vec<u64>,
+    /// Specs the autoscaler may scale out with (price/perf choice).
+    catalog: Vec<GpuSpec>,
+    autoscaler: fleet::Autoscaler,
+    /// Windowed P99-TTFT/TPOT digests fed from completion events (SLO mode).
+    slo: SloTracker,
+    /// Per-instance busy_wall snapshot at the last autoscale window edge.
+    as_last_busy: Vec<f64>,
+    as_last_eval: f64,
+    autoscale_ticking: bool,
+    /// Reusable per-tick scratch (autoscale loads, drain re-routing).
+    fleet_loads_buf: Vec<fleet::FleetLoad>,
+    stranded_buf: Vec<u64>,
+    pub fleet: fleet::FleetSeries,
+    pub scale_outs: u64,
+    pub drains: u64,
 }
 
 impl VllmEngine {
@@ -93,6 +118,7 @@ impl VllmEngine {
         prefix_caching: bool,
     ) -> Self {
         let cluster = Cluster::homogeneous(cfg.n_devices, cfg.gpu.clone(), Role::Unified);
+        let link = cluster.gpu_link;
         let mut devices = cluster.devices;
         for d in devices.iter_mut() {
             d.weight_bytes = cfg.model.weight_bytes();
@@ -100,8 +126,14 @@ impl VllmEngine {
         let insts = (0..cfg.n_devices).map(|i| InstanceSim::new(i, 1.0)).collect();
         let caches = (0..cfg.n_devices).map(|_| RadixTree::new()).collect();
         // prefix cache budget: tokens worth ~20% of post-weight HBM
-        let free = devices[0].mem_free();
-        let cache_budget = free / 5 / cfg.model.kv_bytes_per_token().max(1);
+        let cache_budgets = devices
+            .iter()
+            .map(|d| d.mem_free() / 5 / cfg.model.kv_bytes_per_token().max(1))
+            .collect();
+        let mut book = fleet::LoadBook::with_instances(cfg.n_devices);
+        for i in 0..cfg.n_devices {
+            book.entry_mut(i).weight = devices[i].spec.weight;
+        }
         let mut col = Collector::new();
         col.window_start = cfg.warmup;
         VllmEngine {
@@ -111,14 +143,15 @@ impl VllmEngine {
                 max_batch_tokens: cfg.max_batch_tokens,
                 max_batch_seqs: cfg.max_batch_seqs,
             },
+            link,
             devices,
             insts,
             caches,
             prefix_caching,
-            cache_budget,
+            cache_budgets,
             policy,
             router: policy.build(),
-            book: fleet::LoadBook::with_instances(cfg.n_devices),
+            book,
             finished_buf: Vec::new(),
             seqs: fleet::SeqTable::new(),
             col,
@@ -126,20 +159,57 @@ impl VllmEngine {
             recomputed_tokens: 0,
             preemptions: 0,
             routed_counts: vec![0; cfg.n_devices],
+            catalog: if cfg.gpu_catalog.is_empty() {
+                vec![cfg.gpu.clone()]
+            } else {
+                cfg.gpu_catalog.clone()
+            },
+            autoscaler: fleet::Autoscaler::new(cfg.autoscale),
+            slo: SloTracker::new(cfg.autoscale.window),
+            as_last_busy: vec![0.0; cfg.n_devices],
+            as_last_eval: 0.0,
+            autoscale_ticking: false,
+            fleet_loads_buf: Vec::new(),
+            stranded_buf: Vec::new(),
+            fleet: fleet::FleetSeries::new(),
+            scale_outs: 0,
+            drains: 0,
         }
     }
 
     /// Router: the maintained [`fleet::LoadBook`] slice goes straight to
     /// the fleet router built from `policy` — only the request-specific
     /// cache-hit fractions are written per arrival (they cannot be
-    /// maintained: they depend on the incoming prompt).
-    fn route(&mut self, req: &Request) -> usize {
+    /// maintained: they depend on the incoming prompt). Elastic fleets
+    /// route over the filtered ACTIVE/unfrozen view instead; static fleets
+    /// keep the zero-copy maintained slice (behavior- and perf-preserving).
+    fn route(&mut self, req: &Request, now: f64) -> usize {
         if matches!(self.policy, RouterPolicy::CacheAware { .. }) && self.prefix_caching {
             let plen = req.cache_tokens.len().max(1) as f64;
             for i in 0..self.caches.len() {
                 self.book.entry_mut(i).cache_hit =
                     self.caches[i].peek_prefix(&req.cache_tokens) as f64 / plen;
             }
+        }
+        if self.autoscaler.enabled() {
+            {
+                let (book, insts, devices) = (&mut self.book, &self.insts, &self.devices);
+                let loads = book.filtered(|l| {
+                    devices[insts[l.idx].device].is_active()
+                        && now >= insts[l.idx].frozen_until
+                });
+                if let Some(pos) = self.router.pick(loads) {
+                    return loads[pos].idx;
+                }
+            }
+            // every active instance still spinning up: queue at one anyway
+            let (book, insts, devices) = (&mut self.book, &self.insts, &self.devices);
+            let loads = book.filtered(|l| devices[insts[l.idx].device].is_active());
+            return match self.router.pick(loads) {
+                Some(pos) => loads[pos].idx,
+                // unreachable while drain guards keep one active device
+                None => 0,
+            };
         }
         let pos = self.router.pick(self.book.loads()).expect("non-empty fleet");
         self.book.loads()[pos].idx
@@ -266,6 +336,9 @@ impl VllmEngine {
         seq.kv_on_device = 0;
         let dev_idx = self.insts[inst].device;
         self.devices[dev_idx].free_kv(now, kv);
+        if self.autoscaler.enabled() {
+            self.slo.record(now, rec.ttft(), rec.tpot());
+        }
         self.col.finish(rec);
         self.inflight -= 1;
         self.seqs.remove(sid); // drop payload
@@ -300,7 +373,7 @@ impl VllmEngine {
                         // point, not just at step boundaries (eviction is
                         // an O(evicted) LRU pop now, so this stays cheap)
                         self.caches[i].insert(&cache_tokens);
-                        self.caches[i].evict_to(self.cache_budget);
+                        self.caches[i].evict_to(self.cache_budgets[i]);
                     }
                     if done {
                         self.finish(sid, now);
@@ -340,6 +413,163 @@ impl VllmEngine {
             }
         }
         self.maybe_start(i, q);
+        // a Draining device's last step completion is its release point —
+        // the autoscale tick alone would strand it when the tick loop
+        // stops at inflight 0
+        if self.autoscaler.enabled()
+            && self.devices[self.insts[i].device].state == DeviceState::Draining
+        {
+            self.finish_drains(now);
+        }
+    }
+
+    // --- elastic fleet -----------------------------------------------------
+
+    /// May instance `i` be drained? Never the last active instance.
+    fn drainable(&self, i: usize) -> bool {
+        self.devices[self.insts[i].device].is_active()
+            && self
+                .insts
+                .iter()
+                .filter(|x| self.devices[x.device].is_active())
+                .count()
+                > 1
+    }
+
+    /// Periodic autoscale evaluation (AUTOSCALE timer).
+    fn autoscale_tick(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        let period = (now - self.as_last_eval).max(1e-9);
+        self.finish_drains(now);
+        let batch_cap = self.limits.max_batch_seqs as usize;
+        let mut active = std::mem::take(&mut self.fleet_loads_buf);
+        active.clear();
+        for i in 0..self.insts.len() {
+            if !self.devices[self.insts[i].device].is_active() {
+                continue;
+            }
+            active.push(fleet::FleetLoad {
+                idx: i,
+                busy: ((self.insts[i].busy_wall - self.as_last_busy[i]) / period).min(1.0),
+                // queued work = prefill waiting + running set beyond one
+                // decode batch (compute queueing shows up there)
+                queued: self.insts[i].queue_len()
+                    + self.insts[i].running.len().saturating_sub(batch_cap),
+                resident: self.insts[i].load_seqs(),
+                drainable: self.drainable(i),
+            });
+        }
+        if !active.is_empty() {
+            let mean = active.iter().map(|l| l.busy).sum::<f64>() / active.len() as f64;
+            self.fleet.util.push(now, mean);
+        }
+        let view = fleet::SloView {
+            p99_ttft: self.slo.p99_ttft(now),
+            p99_tpot: self.slo.p99_tpot(now),
+        };
+        let decision = self.autoscaler.decide(now, &active, 0, view);
+        self.fleet_loads_buf = active;
+        match decision {
+            fleet::ScaleDecision::Out => {
+                let gap = self.autoscaler.slo_gap(view);
+                self.scale_out(gap, q);
+            }
+            fleet::ScaleDecision::In { victim } => self.begin_drain(victim, q),
+            fleet::ScaleDecision::Hold => {}
+        }
+        // window edge: snapshot busy counters (new instances included)
+        self.as_last_eval = now;
+        for i in 0..self.insts.len() {
+            self.as_last_busy[i] = self.insts[i].busy_wall;
+        }
+        // wake sweep: spin-up freezes leave no step-completion event to
+        // re-trigger an idle instance, so the tick is the safety net
+        for i in 0..self.insts.len() {
+            self.maybe_start(i, q);
+        }
+        if self.inflight > 0 {
+            q.push_after(self.autoscaler.cfg.window, FleetEvent::Autoscale.timer());
+        } else {
+            self.autoscale_ticking = false;
+        }
+    }
+
+    /// Append a unified instance, frozen until its weight replica lands.
+    /// The spec comes from the catalog by price/perf under the SLO gap.
+    fn scale_out(&mut self, slo_gap: f64, q: &mut EventQueue) {
+        let now = q.now();
+        let spec = fleet::pick_scale_out_spec(&self.catalog, slo_gap)
+            .cloned()
+            .unwrap_or_else(|| self.devices[0].spec.clone());
+        let id = self.devices.len();
+        let mut dev = Device::new(id, spec, Role::Unified);
+        dev.weight_bytes = self.spec.weight_bytes();
+        dev.touch_mem(now);
+        let budget = dev.mem_free() / 5 / self.spec.kv_bytes_per_token().max(1);
+        self.devices.push(dev);
+        let t_up = self.link.transfer_time(self.spec.weight_bytes());
+        let mut inst = InstanceSim::new(id, 1.0);
+        inst.frozen_until = now + t_up;
+        self.insts.push(inst);
+        self.caches.push(RadixTree::new());
+        self.cache_budgets.push(budget);
+        let bi = self.book.add_instance();
+        self.book.entry_mut(bi).weight = self.devices[id].spec.weight;
+        self.routed_counts.push(0);
+        self.as_last_busy.push(0.0);
+        self.scale_outs += 1;
+        self.fleet.sample(now, &self.devices);
+        log::debug!("vllm scale-out: instance {id} joins at t={now:.2}");
+    }
+
+    /// Stop routing to `victim`, re-route its waiting queue now; running
+    /// sequences finish in place and the device releases once empty.
+    fn begin_drain(&mut self, victim: usize, q: &mut EventQueue) {
+        let now = q.now();
+        crate::cluster::begin_drain(&mut self.devices, self.insts[victim].device);
+        self.drains += 1;
+        let mut stranded = std::mem::take(&mut self.stranded_buf);
+        stranded.clear();
+        stranded.extend(self.insts[victim].waiting.drain(..));
+        let (ql, ls) = (self.insts[victim].queue_len(), self.insts[victim].load_seqs());
+        self.book.set_queue(victim, ql, ls);
+        for &sid in &stranded {
+            // route with the live request (cache-aware scoring needs the
+            // prompt); the prefix-hit estimate is refreshed at the target
+            let req = self.seqs.seq(sid).req.clone();
+            let target = self.route(&req, now);
+            {
+                let seq = self.seqs.seq_mut(sid);
+                seq.instance = target;
+            }
+            if self.prefix_caching {
+                let hit = self.caches[target].match_prefix(&req.cache_tokens);
+                self.seqs.seq_mut(sid).cached = hit.min(req.prompt_len.saturating_sub(1));
+            }
+            self.insts[target].waiting.push_back(sid);
+            self.maybe_start(target, q);
+        }
+        self.stranded_buf = stranded;
+        self.fleet.sample(now, &self.devices);
+        log::debug!("vllm drain: instance {victim} begins draining at t={now:.2}");
+    }
+
+    /// Release drained devices whose residents are all gone (the shared
+    /// `cluster::try_release` enforces the KV release-refusal invariant).
+    fn finish_drains(&mut self, now: f64) {
+        for i in 0..self.insts.len() {
+            let d = self.insts[i].device;
+            if self.devices[d].state != DeviceState::Draining {
+                continue;
+            }
+            let clear = self.insts[i].waiting.is_empty()
+                && self.insts[i].running.is_empty()
+                && self.insts[i].step.is_none();
+            if crate::cluster::try_release(&mut self.devices, d, clear) {
+                self.fleet.sample(now, &self.devices);
+                log::debug!("vllm release: instance {i} released at t={now:.2}");
+            }
+        }
     }
 
     /// Final per-device (compute, memory) utilization averages.
@@ -371,7 +601,20 @@ impl Engine for VllmEngine {
             let _ = q;
             return;
         }
-        let i = self.route(&req);
+        // bootstrap the autoscale loop on (re-)arrival of work
+        if self.autoscaler.enabled() && !self.autoscale_ticking {
+            self.autoscale_ticking = true;
+            let now = q.now();
+            self.as_last_eval = now;
+            for j in 0..self.insts.len() {
+                self.as_last_busy[j] = self.insts[j].busy_wall;
+            }
+            if self.fleet.is_empty() {
+                self.fleet.sample(now, &self.devices);
+            }
+            q.push_after(self.autoscaler.cfg.window, FleetEvent::Autoscale.timer());
+        }
+        let i = self.route(&req, q.now());
         self.routed_counts[i] += 1;
         let mut seq = Seq::new(req);
         seq.instance = i;
@@ -398,6 +641,7 @@ impl Engine for VllmEngine {
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
         match FleetEvent::decode(t) {
             Some(FleetEvent::StepDone { worker }) => self.step_done(worker, q),
+            Some(FleetEvent::Autoscale) => self.autoscale_tick(q),
             _ => unreachable!("vllm engine got unknown timer {t:?}"),
         }
     }
@@ -521,8 +765,36 @@ mod tests {
             output_len: 2,
             cache_tokens: vec![1].into(),
         };
-        let picks: Vec<usize> = (0..8).map(|_| e.route(&r)).collect();
+        let picks: Vec<usize> = (0..8).map(|_| e.route(&r, 0.0)).collect();
         assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn elastic_fleet_scales_out_on_burst_and_conserves() {
+        use crate::workload::ArrivalProcess;
+        let mut c = cfg(5.0, 7);
+        c.n_devices = 2;
+        c.workload.duration = 50.0;
+        c.workload.arrivals = ArrivalProcess::Bursty {
+            rps: 5.0,
+            burst_factor: 5.0,
+            burst_secs: 8.0,
+            period_secs: 24.0,
+        };
+        c.autoscale.enabled = true;
+        c.autoscale.min_devices = 2;
+        c.autoscale.max_devices = 5;
+        let reqs = c.workload.generate();
+        let n = reqs.len();
+        let mut e = VllmEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        assert_eq!(e.collector().completed() as usize, n);
+        sim::check_conservation(&res, &mut e).unwrap();
+        assert!(e.scale_outs > 0, "burst must trigger scale-out");
+        assert!(e.fleet.size.max_value() > 2.0, "fleet must have grown");
+        for d in &e.devices {
+            assert_eq!(d.kv_bytes, 0, "device {} leaked KV", d.id);
+        }
     }
 
     #[test]
@@ -535,6 +807,8 @@ mod tests {
             peak_flops: 312e12,
             hbm_bytes: c.model.weight_bytes() + 3 * common::kv_bytes(c.model, 600),
             hbm_bw: 1.5e12,
+            weight: 1.0,
+            cost: 1.0,
         };
         let reqs: Vec<Request> = (0..4)
             .map(|i| Request {

@@ -71,6 +71,24 @@ impl Collector {
         self.records.len() as u64
     }
 
+    /// Fraction of windowed requests whose TTFT met `slo_s` (SLO
+    /// attainment, the hetero-slo scenario's headline metric). 1.0 when no
+    /// request landed in the window — an empty window violates nothing.
+    pub fn ttft_attainment(&self, slo_s: f64) -> f64 {
+        let (mut n, mut ok) = (0u64, 0u64);
+        for r in self.windowed() {
+            n += 1;
+            if r.ttft() <= slo_s {
+                ok += 1;
+            }
+        }
+        if n == 0 {
+            1.0
+        } else {
+            ok as f64 / n as f64
+        }
+    }
+
     /// Records inside the measurement window.
     fn windowed(&self) -> impl Iterator<Item = &RequestRecord> {
         let w = self.window_start;
@@ -220,6 +238,110 @@ impl TimeSeries {
     }
 }
 
+/// Windowed P99 tracker for SLO-driven autoscaling: per-request TTFT/TPOT
+/// samples are digested into fixed-duration windows; queries report the
+/// P99 over the current + previous window (two windows smooth the edge
+/// where a fresh window has only a handful of samples). Samples older than
+/// one full window behind the current one are dropped, so the tracker sees
+/// the serving system as it IS, not as it was before the last scaling
+/// action took effect.
+///
+/// Time only moves forward (sim time is monotone); a jump of k >= 2
+/// windows — e.g. an idle gap, or the far side of the calendar queue's
+/// year re-anchoring — drops everything, because both retained windows
+/// are stale by then. The P99 uses the same linear-interpolated percentile
+/// as [`crate::util::stats::Summary`], pinned by a sort-based reference
+/// test.
+#[derive(Debug, Clone, Default)]
+pub struct SloTracker {
+    window: f64,
+    started: bool,
+    cur_start: f64,
+    /// [ttft, tpot] samples of the current window.
+    cur: [Vec<f64>; 2],
+    /// [ttft, tpot] samples of the previous window.
+    prev: [Vec<f64>; 2],
+    scratch: Vec<f64>,
+}
+
+impl SloTracker {
+    pub fn new(window: f64) -> Self {
+        SloTracker {
+            window: if window > 0.0 { window } else { 1.0 },
+            ..Default::default()
+        }
+    }
+
+    /// Rotate windows so `now` falls inside the current one.
+    fn roll(&mut self, now: f64) {
+        if !self.started {
+            self.started = true;
+            self.cur_start = now;
+            return;
+        }
+        if now < self.cur_start + self.window {
+            return;
+        }
+        // k windows elapsed since cur_start (k >= 1); computed
+        // multiplicatively so a year-scale jump costs O(1), not O(k)
+        let k = ((now - self.cur_start) / self.window).floor();
+        if k >= 2.0 {
+            self.prev[0].clear();
+            self.prev[1].clear();
+            self.cur[0].clear();
+            self.cur[1].clear();
+        } else {
+            std::mem::swap(&mut self.prev, &mut self.cur);
+            self.cur[0].clear();
+            self.cur[1].clear();
+        }
+        self.cur_start += k * self.window;
+    }
+
+    /// Record one completed request's latencies at sim time `now`.
+    pub fn record(&mut self, now: f64, ttft: f64, tpot: f64) {
+        self.roll(now);
+        self.cur[0].push(ttft);
+        self.cur[1].push(tpot);
+    }
+
+    /// Samples currently retained (both metrics record together).
+    pub fn samples(&self) -> usize {
+        self.cur[0].len() + self.prev[0].len()
+    }
+
+    fn p99_of(&mut self, which: usize) -> Option<f64> {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.prev[which]);
+        self.scratch.extend_from_slice(&self.cur[which]);
+        if self.scratch.is_empty() {
+            return None;
+        }
+        self.scratch.sort_by(|a, b| a.total_cmp(b));
+        let n = self.scratch.len();
+        if n == 1 {
+            return Some(self.scratch[0]);
+        }
+        let rank = 0.99 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        Some(self.scratch[lo] * (1.0 - frac) + self.scratch[hi] * frac)
+    }
+
+    /// Windowed P99 TTFT as of `now`; None when both windows are empty.
+    pub fn p99_ttft(&mut self, now: f64) -> Option<f64> {
+        self.roll(now);
+        self.p99_of(0)
+    }
+
+    /// Windowed P99 TPOT as of `now`; None when both windows are empty.
+    pub fn p99_tpot(&mut self, now: f64) -> Option<f64> {
+        self.roll(now);
+        self.p99_of(1)
+    }
+}
+
 /// Aggregates one metric across repeated seeds (paper: 5 repeats, 95% CI).
 #[derive(Debug, Default)]
 pub struct SeedAggregate {
@@ -324,6 +446,111 @@ mod tests {
         assert_eq!(s.max_value(), 4.0);
         assert_eq!(s.last_value(), Some(2.0));
         assert_eq!(s.len(), 3);
+    }
+
+    /// Sort-based reference for the tracker's two-window P99: keep every
+    /// sample whose window index is the current or previous one, sort, and
+    /// apply the same linear-interpolated percentile as `Summary`.
+    fn reference_p99(samples: &[(f64, f64)], now: f64, t0: f64, w: f64) -> Option<f64> {
+        let win = |t: f64| ((t - t0) / w).floor() as i64;
+        let cur = win(now);
+        let mut xs: Vec<f64> = samples
+            .iter()
+            .filter(|&&(t, _)| win(t) == cur || win(t) == cur - 1)
+            .map(|&(_, x)| x)
+            .collect();
+        if xs.is_empty() {
+            return None;
+        }
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let mut s = crate::util::stats::Summary::new();
+        s.extend(xs);
+        Some(s.p99())
+    }
+
+    #[test]
+    fn slo_tracker_p99_matches_sort_reference_on_random_samples() {
+        // randomized monotone sample stream over many window rotations
+        let mut rng = crate::util::prng::Rng::new(0x510);
+        for _ in 0..20 {
+            let w = 0.5 + rng.f64() * 3.0;
+            let t0 = rng.f64() * 10.0;
+            let mut tr = SloTracker::new(w);
+            let mut all: Vec<(f64, f64)> = Vec::new();
+            let mut t = t0;
+            // the first record anchors the tracker's window grid at t0
+            for i in 0..200 {
+                let x = rng.f64() * 5.0;
+                tr.record(t, x, x * 0.01);
+                all.push((t, x));
+                let got = tr.p99_ttft(t);
+                let want = reference_p99(&all, t, t0, w);
+                match (got, want) {
+                    (Some(g), Some(e)) => assert!(
+                        (g - e).abs() < 1e-9,
+                        "step {i}: tracker {g} != reference {e} (w={w})"
+                    ),
+                    (g, e) => panic!("step {i}: {g:?} vs {e:?}"),
+                }
+                // occasional multi-window jumps exercise the k >= 2 path
+                t += if rng.chance(0.1) {
+                    w * (2.0 + rng.f64() * 3.0)
+                } else {
+                    rng.f64() * w * 0.7
+                };
+            }
+        }
+    }
+
+    #[test]
+    fn slo_tracker_rotation_survives_year_reanchor_scale_jumps() {
+        // the calendar event queue re-anchors its bucket year as sim time
+        // crosses multi-second epochs; the tracker must rotate correctly
+        // across the same jumps: old digests drop, new ones stand alone
+        let mut tr = SloTracker::new(2.0);
+        tr.record(1.0, 10.0, 0.1);
+        tr.record(1.5, 12.0, 0.1);
+        assert!(tr.p99_ttft(1.6).unwrap() > 10.0);
+        // one window later the old samples are still visible (prev window)
+        tr.record(3.0, 1.0, 0.01);
+        let p = tr.p99_ttft(3.0).unwrap();
+        assert!(p > 10.0, "prev window still in the digest: {p}");
+        // a year-scale jump clears both retained windows
+        let far = 3.0 + 31_536_000.0;
+        assert_eq!(tr.p99_ttft(far), None, "stale digests must drop");
+        tr.record(far, 7.0, 0.07);
+        assert_eq!(tr.p99_ttft(far), Some(7.0));
+        assert_eq!(tr.samples(), 1);
+        // and the grid keeps rotating normally on the far side
+        tr.record(far + 2.0, 3.0, 0.03);
+        assert!(tr.p99_ttft(far + 2.0).unwrap() > 3.0);
+        assert_eq!(tr.p99_ttft(far + 6.0), None);
+    }
+
+    #[test]
+    fn slo_tracker_empty_windows_report_none() {
+        let mut tr = SloTracker::new(1.0);
+        assert_eq!(tr.p99_ttft(0.0), None, "never-fed tracker has no P99");
+        assert_eq!(tr.p99_tpot(5.0), None);
+        assert_eq!(tr.samples(), 0);
+        tr.record(10.0, 2.0, 0.02);
+        assert_eq!(tr.p99_ttft(10.1), Some(2.0));
+        assert_eq!(tr.p99_tpot(10.1), Some(0.02));
+        // two full empty windows later the sample has aged out
+        assert_eq!(tr.p99_ttft(12.5), None);
+        assert_eq!(tr.samples(), 0);
+    }
+
+    #[test]
+    fn ttft_attainment_counts_windowed_hits() {
+        let mut c = Collector::new();
+        c.finish(rec(0.0, 0.5, 1.0, 10)); // ttft 0.5
+        c.finish(rec(1.0, 3.0, 4.0, 10)); // ttft 2.0
+        assert!((c.ttft_attainment(1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(c.ttft_attainment(2.5), 1.0);
+        c.window_start = 0.5; // drops the first record from the window
+        assert_eq!(c.ttft_attainment(1.0), 0.0);
+        assert_eq!(Collector::new().ttft_attainment(1.0), 1.0, "empty = met");
     }
 
     #[test]

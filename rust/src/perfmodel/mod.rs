@@ -146,6 +146,25 @@ pub fn decode_step(
     }
 }
 
+/// Relative decode capacity of `gpu` vs `baseline` under the roofline at a
+/// typical serving operating point (batch 16 x 512-token contexts). Decode
+/// is the bandwidth-bound phase (Fig 2b), so this is what one extra device
+/// of a spec buys a saturated fleet — the quantity
+/// [`crate::cluster::GpuSpec::weight`] hard-codes for the router's
+/// capacity normalization; a unit test pins the two together so the specs
+/// can't drift from the model.
+pub fn relative_decode_capacity(
+    model: &ModelSpec,
+    gpu: &GpuSpec,
+    baseline: &GpuSpec,
+    eff: &Efficiency,
+) -> f64 {
+    let (batch, total_ctx) = (16, 16 * 512);
+    let t_base = decode_step(model, baseline, eff, batch, total_ctx, 1.0).time;
+    let t_gpu = decode_step(model, gpu, eff, batch, total_ctx, 1.0).time;
+    t_base / t_gpu.max(1e-12)
+}
+
 // ---------------------------------------------------------------------------
 // Migration latency models (§4.1)
 // ---------------------------------------------------------------------------
@@ -319,6 +338,23 @@ mod tests {
         let eff = Efficiency::default();
         let d = decode_step(&LLAMA_13B, &A100_40G, &eff, 0, 0, 1.0);
         assert_eq!(d.time, 0.0);
+    }
+
+    #[test]
+    fn gpu_spec_weights_track_the_roofline_decode_ratio() {
+        use crate::cluster::A100_80G;
+        let eff = Efficiency::default();
+        let measured =
+            relative_decode_capacity(&LLAMA_13B, &A100_80G, &A100_40G, &eff);
+        // bandwidth-bound decode: 2.039/1.555 ≈ 1.31x
+        assert!(
+            (measured - A100_80G.weight / A100_40G.weight).abs() < 0.1,
+            "A100-80G capacity weight {} drifted from the roofline's {measured:.3}",
+            A100_80G.weight
+        );
+        // a spec is its own baseline
+        let unity = relative_decode_capacity(&LLAMA_13B, &A100_40G, &A100_40G, &eff);
+        assert!((unity - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -22,9 +22,21 @@ fn fixed_cfg(kind: EngineKind) -> ExperimentConfig {
     c
 }
 
+/// Fixed-seed ELASTIC config for the newly-elastic monolithic engines —
+/// the golden gate pins their autoscaling trajectory too (util mode, so
+/// the snapshot does not depend on SLO windowing).
+fn fixed_elastic_cfg(kind: EngineKind) -> ExperimentConfig {
+    let mut c = fixed_cfg(kind);
+    c.n_devices = 2;
+    c.autoscale.enabled = true;
+    c.autoscale.min_devices = 2;
+    c.autoscale.max_devices = 5;
+    c
+}
+
 /// Every Report field that must survive a refactor, as a JSON object.
-fn fingerprint(kind: EngineKind) -> Value {
-    let out = run_experiment(&fixed_cfg(kind));
+fn fingerprint(cfg: &ExperimentConfig) -> Value {
+    let out = run_experiment(cfg);
     let r = &out.report;
     json::obj(vec![
         ("submitted", json::num(out.submitted as f64)),
@@ -52,12 +64,14 @@ fn behavior_preserved_against_golden_snapshots() {
         EngineKind::DistServe,
         EngineKind::BanaServe,
     ];
-    let current = json::obj(
-        kinds
-            .iter()
-            .map(|&k| (k.name(), fingerprint(k)))
-            .collect(),
-    );
+    let mut entries: Vec<(&str, Value)> = kinds
+        .iter()
+        .map(|&k| (k.name(), fingerprint(&fixed_cfg(k))))
+        .collect();
+    // the newly-elastic monolithic engines get their own golden entries
+    entries.push(("vllm-elastic", fingerprint(&fixed_elastic_cfg(EngineKind::Vllm))));
+    entries.push(("hft-elastic", fingerprint(&fixed_elastic_cfg(EngineKind::HfStatic))));
+    let current = json::obj(entries);
     if !path.exists() {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, json::write(&current)).unwrap();
@@ -70,23 +84,27 @@ fn behavior_preserved_against_golden_snapshots() {
     }
     let golden = json::parse(&std::fs::read_to_string(&path).unwrap())
         .expect("golden snapshot must parse");
-    for &k in &kinds {
+    let names: Vec<&str> = kinds
+        .iter()
+        .map(|k| k.name())
+        .chain(["vllm-elastic", "hft-elastic"])
+        .collect();
+    for name in names {
         let want = golden
-            .get(k.name())
-            .unwrap_or_else(|| panic!("golden snapshot missing engine {}", k.name()));
-        let got = current.get(k.name()).unwrap();
+            .get(name)
+            .unwrap_or_else(|| panic!("golden snapshot missing engine {name}"));
+        let got = current.get(name).unwrap();
         let obj = want.as_obj().expect("engine entry is an object");
         for (field, expect) in obj.iter() {
             let e = expect.as_f64().expect("golden fields are numeric");
             let g = got
                 .get(field)
                 .and_then(|v| v.as_f64())
-                .unwrap_or_else(|| panic!("missing field {field} for {}", k.name()));
+                .unwrap_or_else(|| panic!("missing field {field} for {name}"));
             assert!(
                 (e - g).abs() <= 1e-9 * e.abs().max(1.0),
-                "{} {field}: golden {e} != current {g} — the refactor changed \
-                 behavior (delete the snapshot ONLY for an intentional change)",
-                k.name()
+                "{name} {field}: golden {e} != current {g} — the refactor changed \
+                 behavior (delete the snapshot ONLY for an intentional change)"
             );
         }
     }
@@ -182,6 +200,107 @@ fn autoscaler_drain_path_never_strands_requests() {
             "seed {seed}: requests stranded by the drain path"
         );
     }
+}
+
+#[test]
+fn slo_elastic_banaserve_meets_ttft_slo_at_lower_cost_than_static_peak() {
+    // Self-calibrating target: the peak-provisioned static fleet defines
+    // what an achievable TTFT looks like on this trace; the SLO is set to
+    // 3x its P99 (floored at 2s — the scale-out ramp on the first burst
+    // edge is physical, not a policy failure). The elastic fleet starts at
+    // the trough size, scales on the windowed P99, and must (a) meet the
+    // SLO and (b) pay less total device-cost than holding the peak fleet
+    // for the whole run.
+    let peak = run_experiment(&bursty_cfg(EngineKind::BanaServe, 6, false, 11));
+    let mut rp = peak.report;
+    let slo_s = (rp.ttft.p99() * 3.0).max(2.0);
+
+    let mut c = bursty_cfg(EngineKind::BanaServe, 2, true, 11);
+    c.autoscale.ttft_slo_ms = slo_s * 1e3;
+    // ramp fast on breach, hold capacity while the SLO is anywhere near
+    // the line — the cost win comes from the trough tails, not from
+    // shaving devices mid-burst
+    c.autoscale.cooldown = 2.0;
+    c.autoscale.scale_in_util = 0.1;
+    let ela = run_experiment(&c);
+    assert_eq!(
+        ela.submitted,
+        ela.report.n_requests + ela.report.dropped,
+        "elastic-SLO run must account for every request"
+    );
+    assert!(
+        ela.extras.scale_outs > 0,
+        "the SLO breach on the burst edge must trigger scale-out"
+    );
+    let mut re = ela.report;
+    let p99_ttft = re.ttft.p99();
+    assert!(
+        p99_ttft <= slo_s,
+        "elastic-SLO P99 TTFT {p99_ttft:.2}s must meet the {slo_s:.2}s SLO"
+    );
+    assert!(
+        ela.extras.ttft_slo_attainment > 0.9,
+        "attainment {:.2} should be high once the fleet tracks the SLO",
+        ela.extras.ttft_slo_attainment
+    );
+    assert!(
+        ela.extras.device_cost < peak.extras.device_cost,
+        "elastic cost {:.1} must undercut static-peak cost {:.1}",
+        ela.extras.device_cost,
+        peak.extras.device_cost
+    );
+}
+
+#[test]
+fn elastic_vllm_scales_out_and_beats_static_base_p99() {
+    let stat = run_experiment(&bursty_cfg(EngineKind::Vllm, 2, false, 11));
+    let ela = run_experiment(&bursty_cfg(EngineKind::Vllm, 2, true, 11));
+    assert_eq!(stat.submitted, stat.report.n_requests + stat.report.dropped);
+    assert_eq!(ela.submitted, ela.report.n_requests + ela.report.dropped);
+    assert!(
+        ela.extras.scale_outs > 0,
+        "bursts must trigger vllm scale-out"
+    );
+    let (mut rs, mut re) = (stat.report, ela.report);
+    let (p_stat, p_ela) = (rs.e2e.p99(), re.e2e.p99());
+    assert!(
+        p_ela < p_stat,
+        "elastic vllm P99 {p_ela:.2}s must beat static-base P99 {p_stat:.2}s"
+    );
+}
+
+#[test]
+fn elastic_hft_scales_out_and_conserves() {
+    let out = run_experiment(&bursty_cfg(EngineKind::HfStatic, 2, true, 11));
+    assert_eq!(out.submitted, out.report.n_requests + out.report.dropped);
+    assert!(
+        out.extras.scale_outs > 0,
+        "bursty trace must trigger hft scale-out"
+    );
+}
+
+#[test]
+fn hetero_catalog_scale_out_records_mixed_specs_and_costs() {
+    // deep-gap scale-outs under an aggressive SLO with a 40G/80G catalog:
+    // the per-spec series and the cost accounting must both see the fleet
+    let mut c = bursty_cfg(EngineKind::DistServe, 2, true, 11);
+    c.gpu_catalog = vec![banaserve::cluster::A100_40G, banaserve::cluster::A100_80G];
+    c.autoscale.ttft_slo_ms = 200.0; // tight: deep gaps early in each burst
+    let out = run_experiment(&c);
+    assert_eq!(out.submitted, out.report.n_requests + out.report.dropped);
+    assert!(out.extras.scale_outs > 0, "tight SLO must force scale-outs");
+    assert!(
+        !out.extras.fleet_spec_series.is_empty(),
+        "per-spec fleet series must be recorded"
+    );
+    assert!(
+        out.extras.device_cost > 0.0,
+        "elastic runs must report an integrated device cost"
+    );
+    assert!(
+        !out.extras.fleet_cost_series.is_empty(),
+        "cost-rate series must be recorded"
+    );
 }
 
 #[test]

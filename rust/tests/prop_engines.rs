@@ -364,6 +364,130 @@ fn load_book_always_matches_rebuilt_snapshots() {
     });
 }
 
+// --- router heterogeneity -------------------------------------------------
+//
+// Pre-weight reference implementations of the fleet policies, kept here
+// verbatim from PR 2/3: with every weight at 1.0 the weighted policies
+// must reproduce these picks byte-identically over any event stream.
+
+fn ref_least_loaded(loads: &[fleet::InstanceLoad]) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, l)| (l.load_seqs, l.queue_len, l.idx))
+        .map(|(p, _)| p)
+}
+
+fn ref_least_queue(loads: &[fleet::InstanceLoad]) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, l)| (l.queue_len, l.load_seqs, l.idx))
+        .map(|(p, _)| p)
+}
+
+fn ref_most_free_mem(loads: &[fleet::InstanceLoad]) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, l)| (l.mem_free, std::cmp::Reverse(l.running)))
+        .map(|(p, _)| p)
+}
+
+fn ref_cache_aware(loads: &[fleet::InstanceLoad], w_cache: f64, w_load: f64) -> Option<usize> {
+    let max_load = loads.iter().map(|l| l.load_seqs).max().unwrap_or(0).max(1) as f64;
+    let score = |l: &fleet::InstanceLoad| {
+        w_cache * l.cache_hit - w_load * (l.load_seqs as f64 / max_load)
+    };
+    loads
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| score(a).total_cmp(&score(b)))
+        .map(|(p, _)| p)
+}
+
+#[test]
+fn equal_weight_policies_match_preweight_references_on_event_streams() {
+    // fixed-seed event-stream comparison: random mutations between picks,
+    // every policy compared against its pre-weight reference at each step
+    check("weight-1 router parity", 40, |g| {
+        let n = g.usize_in(1, 10);
+        let mut loads: Vec<fleet::InstanceLoad> = (0..n)
+            .map(|i| {
+                let mut l = fleet::InstanceLoad::at(i); // weight == 1.0
+                l.load_seqs = g.usize_in(0, 8);
+                l.queue_len = g.usize_in(0, 8);
+                l.running = g.usize_in(0, 8);
+                l.mem_free = g.rng.range(0, 1_000_000);
+                l.cache_hit = g.f64_in(0.0, 1.0);
+                l
+            })
+            .collect();
+        let (w_cache, w_load) = (g.f64_in(0.1, 2.0), g.f64_in(0.1, 2.0));
+        let mut ca = fleet::CacheAware { w_cache, w_load };
+        let steps = g.usize_in(1, 60);
+        for _ in 0..steps {
+            // event: one instance's counters move (admit/step/finish)
+            let i = g.usize_in(0, n - 1);
+            match g.usize_in(0, 4) {
+                0 => loads[i].load_seqs += 1,
+                1 => loads[i].load_seqs = loads[i].load_seqs.saturating_sub(1),
+                2 => loads[i].queue_len += 1,
+                3 => loads[i].queue_len = loads[i].queue_len.saturating_sub(1),
+                _ => loads[i].mem_free = g.rng.range(0, 1_000_000),
+            }
+            prop_assert!(
+                fleet::LeastLoaded.pick(&loads) == ref_least_loaded(&loads),
+                "LeastLoaded diverged from pre-weight reference: {loads:?}"
+            );
+            prop_assert!(
+                fleet::LeastQueue.pick(&loads) == ref_least_queue(&loads),
+                "LeastQueue diverged from pre-weight reference: {loads:?}"
+            );
+            prop_assert!(
+                fleet::MostFreeMem.pick(&loads) == ref_most_free_mem(&loads),
+                "MostFreeMem diverged from pre-weight reference: {loads:?}"
+            );
+            prop_assert!(
+                ca.pick(&loads) == ref_cache_aware(&loads, w_cache, w_load),
+                "CacheAware diverged from pre-weight reference: {loads:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weighted_least_loaded_long_run_ratio_tracks_capacity() {
+    // a 2x-weight device must absorb ~2x the assignments under the
+    // engines' feedback loop (each pick adds one resident to the target)
+    check("2x-weight assignment ratio", 20, |g| {
+        let heavy = g.usize_in(0, 1); // which of the two is the 2x device
+        let mut loads: Vec<fleet::InstanceLoad> = (0..2)
+            .map(|i| {
+                let mut l = fleet::InstanceLoad::at(i);
+                l.weight = if i == heavy { 2.0 } else { 1.0 };
+                l
+            })
+            .collect();
+        let k = 300;
+        let mut counts = [0usize; 2];
+        for _ in 0..k {
+            let pos = fleet::LeastLoaded.pick(&loads).unwrap();
+            counts[pos] += 1;
+            loads[pos].load_seqs += 1;
+            loads[pos].queue_len += 1;
+        }
+        let ratio = counts[heavy] as f64 / counts[1 - heavy].max(1) as f64;
+        prop_assert!(
+            (1.7..=2.3).contains(&ratio),
+            "assignment ratio {ratio:.2} should track the 2x weight \
+             (counts {counts:?}, heavy={heavy})"
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn fleet_load_aware_pick_matches_scheduler_alg2() {
     // fleet::pick_load_aware is an allocation-free port of

@@ -1,0 +1,235 @@
+//! Property suite for the elastic-fleet autoscaler decision fn
+//! (`fleet::Autoscaler::decide`), randomized over configs, load windows
+//! and SLO observations:
+//!
+//! * the cooldown is never violated (no two non-Hold decisions closer
+//!   than `cooldown` seconds),
+//! * the fleet size stays within `[min_devices, max_devices]` across any
+//!   decision trajectory,
+//! * a drain never picks the last Active device (nor a non-drainable one),
+//! * with no SLO targets set, the decision degrades to the PR 2
+//!   busy-fraction util mode bit-identically, regardless of what P99
+//!   observations are passed in.
+//!
+//! Run with a fixed seed via `BANASERVE_PROP_SEED` (the CI property-suite
+//! step pins one for reproducibility).
+
+use banaserve::config::AutoscaleConfig;
+use banaserve::engines::fleet::{Autoscaler, FleetLoad, ScaleDecision, SloView};
+use banaserve::prop_assert;
+use banaserve::util::checker::{check, Gen};
+
+fn random_cfg(g: &mut Gen, slo: bool) -> AutoscaleConfig {
+    let mut c = AutoscaleConfig::default();
+    c.enabled = true;
+    c.min_devices = g.usize_in(1, 3);
+    c.max_devices = g.usize_in(c.min_devices + 1, c.min_devices + 6);
+    c.scale_out_util = g.f64_in(0.5, 0.95);
+    c.scale_in_util = g.f64_in(0.05, 0.45);
+    c.cooldown = g.f64_in(0.5, 8.0);
+    c.window = g.f64_in(0.5, 4.0);
+    if slo {
+        if g.bool() {
+            c.ttft_slo_ms = g.f64_in(100.0, 5000.0);
+        }
+        if g.bool() || c.ttft_slo_ms == 0.0 {
+            c.tpot_slo_ms = g.f64_in(10.0, 200.0);
+        }
+        c.slo_headroom = g.f64_in(0.5, 1.2);
+    }
+    c
+}
+
+fn random_loads(g: &mut Gen, n: usize) -> Vec<FleetLoad> {
+    (0..n)
+        .map(|idx| FleetLoad {
+            idx,
+            busy: g.f64_in(0.0, 1.0),
+            queued: g.usize_in(0, 12),
+            resident: g.usize_in(0, 24),
+            drainable: g.bool(),
+        })
+        .collect()
+}
+
+fn random_view(g: &mut Gen) -> SloView {
+    SloView {
+        p99_ttft: if g.bool() {
+            Some(g.f64_in(0.0, 10.0))
+        } else {
+            None
+        },
+        p99_tpot: if g.bool() {
+            Some(g.f64_in(0.0, 0.5))
+        } else {
+            None
+        },
+    }
+}
+
+#[test]
+fn cooldown_is_never_violated() {
+    check("autoscaler cooldown", 40, |g| {
+        let cfg = random_cfg(g, g.bool());
+        let mut a = Autoscaler::new(cfg);
+        let mut now = 0.0;
+        let mut last_action: Option<f64> = None;
+        for _ in 0..120 {
+            let n = g.usize_in(1, cfg.max_devices);
+            let loads = random_loads(g, n);
+            let view = random_view(g);
+            let d = a.decide(now, &loads, g.usize_in(0, 10), view);
+            if d != ScaleDecision::Hold {
+                if let Some(t) = last_action {
+                    prop_assert!(
+                        now >= t + cfg.cooldown - 1e-9,
+                        "decision at {now} only {}s after the one at {t} \
+                         (cooldown {})",
+                        now - t,
+                        cfg.cooldown
+                    );
+                }
+                last_action = Some(now);
+            }
+            now += g.f64_in(0.0, cfg.cooldown * 0.9);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fleet_size_stays_within_bounds_across_any_trajectory() {
+    // drive a synthetic fleet purely from the decisions: Out appends an
+    // active device, In{v} eventually releases v — the autoscaler must
+    // never push the count outside [min, max]
+    check("autoscaler bounds", 40, |g| {
+        let cfg = random_cfg(g, g.bool());
+        let mut a = Autoscaler::new(cfg);
+        let mut n = g.usize_in(cfg.min_devices.max(1), cfg.max_devices);
+        let mut now = 0.0;
+        for _ in 0..150 {
+            let loads = random_loads(g, n);
+            let view = random_view(g);
+            match a.decide(now, &loads, g.usize_in(0, 8), view) {
+                ScaleDecision::Out => {
+                    prop_assert!(
+                        n < cfg.max_devices,
+                        "scale-out at max fleet size {n} (max {})",
+                        cfg.max_devices
+                    );
+                    n += 1;
+                }
+                ScaleDecision::In { victim } => {
+                    prop_assert!(
+                        n > cfg.min_devices,
+                        "drain at min fleet size {n} (min {})",
+                        cfg.min_devices
+                    );
+                    prop_assert!(victim < n, "victim {victim} out of range");
+                    n -= 1;
+                }
+                ScaleDecision::Hold => {}
+            }
+            prop_assert!(
+                n >= cfg.min_devices.max(1) && n <= cfg.max_devices,
+                "fleet size {n} escaped [{}, {}]",
+                cfg.min_devices,
+                cfg.max_devices
+            );
+            now += g.f64_in(0.0, 2.0 * cfg.cooldown);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn drain_never_picks_the_last_active_device_or_a_non_drainable_one() {
+    check("autoscaler drain safety", 60, |g| {
+        let mut cfg = random_cfg(g, g.bool());
+        // min_devices 0 is the adversarial case: only the n > 1 guard and
+        // the drainable flags protect the last device
+        cfg.min_devices = g.usize_in(0, 2);
+        let mut a = Autoscaler::new(cfg);
+        let mut now = 0.0;
+        for _ in 0..120 {
+            let n = g.usize_in(1, cfg.max_devices.max(2));
+            let loads = random_loads(g, n);
+            let view = random_view(g);
+            if let ScaleDecision::In { victim } = a.decide(now, &loads, 0, view) {
+                prop_assert!(n > 1, "drained the last active device");
+                let l = loads.iter().find(|l| l.idx == victim);
+                prop_assert!(
+                    l.map(|l| l.drainable).unwrap_or(false),
+                    "victim {victim} is not a drainable active device"
+                );
+            }
+            now += g.f64_in(0.0, 2.0 * cfg.cooldown);
+        }
+        Ok(())
+    });
+}
+
+/// The PR 2 busy-fraction policy, reproduced verbatim as the reference the
+/// SLO-mode code path must degrade to when no targets are set.
+fn util_reference(
+    cfg: &AutoscaleConfig,
+    cooldown_until: &mut f64,
+    now: f64,
+    active: &[FleetLoad],
+    global_backlog: usize,
+) -> ScaleDecision {
+    if !cfg.enabled || active.is_empty() || now < *cooldown_until {
+        return ScaleDecision::Hold;
+    }
+    let n = active.len();
+    let mean_busy = active.iter().map(|l| l.busy).sum::<f64>() / n as f64;
+    let queued: usize = active.iter().map(|l| l.queued).sum::<usize>() + global_backlog;
+    if n < cfg.max_devices && (mean_busy > cfg.scale_out_util || queued > 4 * n) {
+        *cooldown_until = now + cfg.cooldown;
+        return ScaleDecision::Out;
+    }
+    if n > cfg.min_devices && n > 1 && mean_busy < cfg.scale_in_util && queued == 0 {
+        let victim = active
+            .iter()
+            .filter(|l| l.drainable)
+            .min_by(|a, b| {
+                a.busy
+                    .total_cmp(&b.busy)
+                    .then(a.resident.cmp(&b.resident))
+                    .then(a.idx.cmp(&b.idx))
+            })
+            .map(|l| l.idx);
+        if let Some(victim) = victim {
+            *cooldown_until = now + cfg.cooldown;
+            return ScaleDecision::In { victim };
+        }
+    }
+    ScaleDecision::Hold
+}
+
+#[test]
+fn slo_mode_with_no_targets_degrades_to_util_mode_bit_identically() {
+    check("slo-off degradation", 60, |g| {
+        let cfg = random_cfg(g, false); // ttft_slo_ms == tpot_slo_ms == 0
+        let mut a = Autoscaler::new(cfg);
+        assert!(!a.slo_mode());
+        let mut ref_cooldown = 0.0;
+        let mut now = 0.0;
+        for _ in 0..150 {
+            let n = g.usize_in(1, cfg.max_devices + 1);
+            let loads = random_loads(g, n);
+            let backlog = g.usize_in(0, 10);
+            // arbitrary SLO observations MUST be ignored with no targets
+            let view = random_view(g);
+            let got = a.decide(now, &loads, backlog, view);
+            let want = util_reference(&cfg, &mut ref_cooldown, now, &loads, backlog);
+            prop_assert!(
+                got == want,
+                "decisions diverged at t={now}: {got:?} vs util reference {want:?}"
+            );
+            prop_assert!(a.slo_gap(view) == 0.0, "gap must be 0 with no targets");
+            now += g.f64_in(0.0, 2.0 * cfg.cooldown);
+        }
+        Ok(())
+    });
+}
