@@ -27,6 +27,23 @@ pub fn derive_seeds(base: u64, n: usize) -> Vec<u64> {
         .collect()
 }
 
+/// Routed-count skew: the hottest instance's share of requests relative to
+/// a perfectly even split (`max / mean`, so 1.0 = balanced, `n` = all
+/// requests on one instance). The Fig 2a / `cache-skew` load-imbalance
+/// metric; 1.0 for empty or all-zero counts.
+pub fn routed_skew(counts: &[u64]) -> f64 {
+    if counts.is_empty() {
+        return 1.0;
+    }
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / counts.len() as f64;
+    let max = counts.iter().copied().max().unwrap_or(0) as f64;
+    max / mean
+}
+
 /// One cell of a figure: mean ± CI over seeds for each metric.
 #[derive(Debug)]
 pub struct Cell {

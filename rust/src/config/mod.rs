@@ -215,6 +215,12 @@ impl ExperimentConfig {
         if let Some(p) = a.get("share-prob").and_then(|v| v.parse::<f64>().ok()) {
             self.workload.prefix.share_prob = p;
         }
+        if let Some(n) = a.get("prefix-templates").and_then(|v| v.parse::<usize>().ok()) {
+            self.workload.prefix.n_templates = n.max(1);
+        }
+        if let Some(z) = a.get("zipf-s").and_then(|v| v.parse::<f64>().ok()) {
+            self.workload.prefix.zipf_s = z;
+        }
         self.bana.layer_migration = a.bool_or("layer-migration", self.bana.layer_migration);
         self.bana.attention_migration =
             a.bool_or("attention-migration", self.bana.attention_migration);
@@ -295,6 +301,10 @@ impl ExperimentConfig {
                 ("prefill", Value::Num(n)) => self.n_prefill = *n as usize,
                 ("warmup", Value::Num(n)) => self.warmup = *n,
                 ("share_prob", Value::Num(n)) => self.workload.prefix.share_prob = *n,
+                ("prefix_templates", Value::Num(n)) => {
+                    self.workload.prefix.n_templates = (*n as usize).max(1);
+                }
+                ("zipf_s", Value::Num(n)) => self.workload.prefix.zipf_s = *n,
                 ("profile", Value::Str(s)) if s == "long" => {
                     self.workload.profile = LengthProfile::LongBench;
                 }
@@ -454,6 +464,23 @@ mod tests {
         assert_eq!(j.gpu_catalog.len(), 2);
         assert!(j.apply_json(r#"{"gpu":"h100"}"#).is_err());
         assert!(j.apply_json(r#"{"gpu_catalog":["h100"]}"#).is_err());
+    }
+
+    #[test]
+    fn prefix_knobs_parse_from_cli_and_json() {
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        let a = Args::parse(
+            "--share-prob 0.95 --prefix-templates 3 --zipf-s 1.5"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert_eq!(c.workload.prefix.share_prob, 0.95);
+        assert_eq!(c.workload.prefix.n_templates, 3);
+        assert_eq!(c.workload.prefix.zipf_s, 1.5);
+        c.apply_json(r#"{"prefix_templates":8,"zipf_s":1.1}"#).unwrap();
+        assert_eq!(c.workload.prefix.n_templates, 8);
+        assert_eq!(c.workload.prefix.zipf_s, 1.1);
     }
 
     #[test]

@@ -994,6 +994,7 @@ impl BanaEngine {
                         + self.dinsts[i].running.len().saturating_sub(batch_cap),
                     resident: self.pinsts[i].load_seqs() + self.dinsts[i].running.len(),
                     drainable: self.drainable(i),
+                    cost: self.devices[i].spec.cost,
                 }),
         );
         if !active.is_empty() {
@@ -1257,6 +1258,34 @@ impl BanaEngine {
             .iter()
             .map(|d| (d.compute_util.average(end), d.memory_util.average(end)))
             .collect()
+    }
+}
+
+impl crate::engines::EngineHarness for BanaEngine {
+    fn build(cfg: &ExperimentConfig) -> Self {
+        BanaEngine::new(cfg)
+    }
+
+    fn fill_extras(&self, extras: &mut crate::engines::EngineExtras) {
+        extras.kv_transfer_bytes = self.kv_transfer_bytes;
+        extras.layer_migrations = self.stats.layer_migrations;
+        extras.attention_migrations = self.stats.attention_migrations;
+        extras.store_hit_rate = self.store_hit_rate();
+        extras.routed_counts = self.routed_counts.clone();
+        extras.scale_outs = self.scale_outs;
+        extras.drains = self.drains;
+    }
+
+    fn fleet_series(&self) -> &fleet::FleetSeries {
+        &self.fleet
+    }
+
+    fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
+        BanaEngine::device_utilization(self, end)
     }
 }
 

@@ -521,6 +521,7 @@ impl DistServeEngine {
                         queued,
                         resident,
                         drainable: self.drainable(d),
+                        cost: self.devices[d].spec.cost,
                     }
                 }),
         );
@@ -700,6 +701,30 @@ impl DistServeEngine {
             )
         };
         (avg(&self.devices[..np]), avg(&self.devices[np..]))
+    }
+}
+
+impl super::EngineHarness for DistServeEngine {
+    fn build(cfg: &ExperimentConfig) -> Self {
+        DistServeEngine::new(cfg)
+    }
+
+    fn fill_extras(&self, extras: &mut super::EngineExtras) {
+        extras.kv_transfer_bytes = self.kv_transfer_bytes;
+        extras.scale_outs = self.scale_outs;
+        extras.drains = self.drains;
+    }
+
+    fn fleet_series(&self) -> &fleet::FleetSeries {
+        &self.fleet
+    }
+
+    fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
+        DistServeEngine::device_utilization(self, end)
     }
 }
 

@@ -596,6 +596,11 @@ pub struct FleetLoad {
     /// May this device be drained? (role constraints are the engine's call:
     /// e.g. never the last prefill-capable device, never mid-migration).
     pub drainable: bool,
+    /// Cost rate of the backing device ([`GpuSpec::cost`]) — drives the
+    /// cost-greedy drain victim choice. With a homogeneous fleet every
+    /// cost ties and the selection falls through to the load tie-breaks,
+    /// byte-identically to the pre-cost behavior.
+    pub cost: f64,
 }
 
 /// What the autoscaler wants done this window.
@@ -737,12 +742,18 @@ impl Autoscaler {
             return ScaleDecision::Out;
         }
         if n > self.cfg.min_devices && n > 1 && scale_in {
+            // cost-greedy scale-in: once the fleet is comfortable enough to
+            // shrink, release the MOST EXPENSIVE drainable device first
+            // (with mixed specs the 80G should go before a 40G), ties
+            // broken by load exactly as before — so a homogeneous fleet
+            // drains its least-loaded device, bit-identically to PR 2
             let victim = active
                 .iter()
                 .filter(|l| l.drainable)
                 .min_by(|a, b| {
-                    a.busy
-                        .total_cmp(&b.busy)
+                    b.cost
+                        .total_cmp(&a.cost)
+                        .then(a.busy.total_cmp(&b.busy))
                         .then(a.resident.cmp(&b.resident))
                         .then(a.idx.cmp(&b.idx))
                 })
@@ -1017,6 +1028,7 @@ mod tests {
             queued,
             resident: queued,
             drainable,
+            cost: 1.0,
         }
     }
 
@@ -1089,6 +1101,31 @@ mod tests {
         assert_eq!(
             d.decide(0.0, &[fl(0, 0.0, 0, true)], 0, SloView::NONE),
             ScaleDecision::Hold
+        );
+    }
+
+    #[test]
+    fn drain_is_cost_greedy_with_mixed_specs() {
+        let mut cfg = AutoscaleConfig::default();
+        cfg.enabled = true;
+        cfg.min_devices = 1;
+        cfg.max_devices = 6;
+        let mut a = Autoscaler::new(cfg);
+        // the 80G (cost 1.5) is BUSIER than the idle 40Gs but still wins
+        // the drain once the fleet is comfortable — cost beats load...
+        let mut loads = [fl(0, 0.05, 0, true), fl(1, 0.2, 0, true), fl(2, 0.1, 0, true)];
+        loads[1].cost = 1.5;
+        assert_eq!(
+            a.decide(0.0, &loads, 0, SloView::NONE),
+            ScaleDecision::In { victim: 1 }
+        );
+        // ...but a non-drainable expensive device defers to the cheap ones,
+        // which fall back to the least-loaded order
+        let mut b = Autoscaler::new(cfg);
+        loads[1].drainable = false;
+        assert_eq!(
+            b.decide(0.0, &loads, 0, SloView::NONE),
+            ScaleDecision::In { victim: 0 }
         );
     }
 

@@ -364,6 +364,7 @@ impl HftEngine {
                 queued: self.insts[i].queue_len(),
                 resident: self.insts[i].load_seqs(),
                 drainable: self.drainable(i),
+                cost: self.devices[self.insts[i].device].spec.cost,
             });
         }
         if !active.is_empty() {
@@ -468,6 +469,29 @@ impl HftEngine {
             .iter()
             .map(|d| (d.compute_util.average(end), d.memory_util.average(end)))
             .collect()
+    }
+}
+
+impl super::EngineHarness for HftEngine {
+    fn build(cfg: &ExperimentConfig) -> Self {
+        HftEngine::new(cfg)
+    }
+
+    fn fill_extras(&self, extras: &mut super::EngineExtras) {
+        extras.scale_outs = self.scale_outs;
+        extras.drains = self.drains;
+    }
+
+    fn fleet_series(&self) -> &fleet::FleetSeries {
+        &self.fleet
+    }
+
+    fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
+        HftEngine::device_utilization(self, end)
     }
 }
 

@@ -51,7 +51,7 @@
 //!   integer comparisons — pinned by the router-heterogeneity properties
 //!   in `tests/prop_engines.rs` and the golden `Report` snapshot gate.
 //!
-//! # SLO-driven elasticity and the `hetero-slo` scenario
+//! # SLO-driven elasticity
 //!
 //! All four engines run the same elastic loop: completion events feed a
 //! windowed [`crate::metrics::SloTracker`]; each autoscale evaluation
@@ -60,38 +60,19 @@
 //! `tpot_slo_ms` are set, the PR 2 busy-fraction thresholds otherwise),
 //! and a scale-out picks its device spec from the engine's catalog via
 //! [`fleet::pick_scale_out_spec`] (price/perf, capacity-first under a deep
-//! SLO gap). `simulate --scenario hetero-slo` writes
-//! `bench_results/hetero_slo.json` with this schema:
+//! SLO gap). The comparison scenarios (`bursty-autoscale`, `hetero-slo`,
+//! `cache-skew`, ...) live in [`crate::scenario`] as declarative specs;
+//! their JSON output schemas are documented there.
 //!
-//! ```json
-//! {
-//!   "scenario": "hetero-slo",
-//!   "ttft_slo_ms": 2000.0, "tpot_slo_ms": 0.0,
-//!   "catalog": ["a100-40g", "a100-80g"],
-//!   "base_devices": 2, "peak_devices": 6,
-//!   "seed": 11, "seeds": [11, ...],
-//!   "results": [            // one row per engine x fleet x seed
-//!     {"engine": "banaserve", "fleet": "elastic-slo", "seed": 11,
-//!      "n_requests": 0.0, "p99_ttft_s": 0.0, "ttft_attainment": 0.0,
-//!      "p99_total_s": 0.0, "mean_e2e_s": 0.0, "throughput_tok_s": 0.0,
-//!      "makespan_s": 0.0, "device_cost": 0.0, "peak_devices": 0.0,
-//!      "avg_devices": 0.0, "scale_outs": 0.0, "drains": 0.0,
-//!      "fleet_size_series": [[t, n], ...],
-//!      "fleet_spec_series": {"a100-40g": [[t, n], ...], ...}}
-//!   ],
-//!   "summary": [            // one row per engine x fleet (mean ± ci95)
-//!     {"engine": "...", "fleet": "...", "n_seeds": 5.0,
-//!      "p99_ttft_s_mean": 0.0, "p99_ttft_s_ci95": 0.0,
-//!      "ttft_attainment_mean": 0.0, "device_cost_mean": 0.0,
-//!      "throughput_tok_s_mean": 0.0, "peak_devices_max": 0.0,
-//!      "avg_devices_mean": 0.0}
-//!   ]
-//! }
-//! ```
+//! # The experiment harness
 //!
-//! `device_cost` is ∫ Σ(active `GpuSpec::cost`) dt over the run — static
-//! fleets pay their full size for the whole makespan; elastic fleets pay
-//! what they actually held.
+//! [`EngineHarness`] is the uniform surface every engine exposes to
+//! [`run_experiment`]: construction from an [`ExperimentConfig`],
+//! engine-specific [`EngineExtras`] counters, the recorded
+//! [`fleet::FleetSeries`], the device table (cost accounting) and the
+//! per-device utilization averages. `run_experiment` itself is ONE generic
+//! code path (`sim::run` → conservation check → report → extras) — adding
+//! an engine means implementing the trait, not copying the runner.
 
 pub mod banaserve;
 pub mod common;
@@ -100,9 +81,11 @@ pub mod fleet;
 pub mod hft;
 pub mod vllm_sim;
 
+use crate::cluster::Device;
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::metrics::Report;
 use crate::sim::{self, Engine};
+use crate::workload::Request;
 
 /// Hard ceiling on simulated time (safety net against runaway runs).
 pub const MAX_SIM_TIME: f64 = 24.0 * 3600.0;
@@ -183,89 +166,68 @@ pub struct ExperimentOutcome {
     pub extras: EngineExtras,
 }
 
+/// The uniform surface an engine exposes to [`run_experiment`]. The
+/// runner owns everything engine-agnostic — driving [`sim::run`], the
+/// conservation check, the [`Report`], SLO attainment and the fleet/cost
+/// bookkeeping ([`fill_fleet_extras`]) — so an engine only declares how to
+/// build itself and which side-channel counters it exports.
+pub trait EngineHarness: Engine {
+    /// Construct the engine for one experiment.
+    fn build(cfg: &ExperimentConfig) -> Self
+    where
+        Self: Sized;
+
+    /// Copy the engine-specific side channels (migration counts, routed
+    /// counts, transfer bytes, ...) into `extras`. The shared fields
+    /// (`ttft_slo_attainment`, fleet series, `device_cost`) are filled by
+    /// the runner afterwards.
+    fn fill_extras(&self, extras: &mut EngineExtras);
+
+    /// The recorded fleet-membership series (empty for static fleets).
+    fn fleet_series(&self) -> &fleet::FleetSeries;
+
+    /// The engine's device table (drives the cost accounting).
+    fn devices(&self) -> &[Device];
+
+    /// Final per-device (compute, memory) time-averaged utilization.
+    fn device_utilization(&self, end: f64) -> Vec<(f64, f64)>;
+}
+
+/// The one generic run path behind [`run_experiment`] — monomorphized per
+/// engine, byte-identical in behavior to the four hand-written arms it
+/// replaced (pinned by the golden snapshot gate).
+fn run_one<E: EngineHarness>(
+    cfg: &ExperimentConfig,
+    reqs: Vec<Request>,
+) -> (Report, Vec<(f64, f64)>, EngineExtras) {
+    let mut e = E::build(cfg);
+    let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
+    sim::check_conservation(&res, &mut e)
+        .unwrap_or_else(|err| panic!("{} conservation: {err}", cfg.engine.name()));
+    let report = e.collector().report(res.end_time);
+    let mut extras = EngineExtras::default();
+    e.fill_extras(&mut extras);
+    let ttft_slo_s = cfg.autoscale.ttft_slo_ms / 1e3;
+    if ttft_slo_s > 0.0 {
+        extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
+    }
+    fill_fleet_extras(&mut extras, e.fleet_series(), e.devices(), res.end_time);
+    (report, EngineHarness::device_utilization(&e, res.end_time), extras)
+}
+
 /// Build the configured engine, run the workload, and return the report
 /// plus per-device utilization — the single entry point used by the CLI,
-/// the examples, and every figure bench.
+/// the scenario runner, the examples, and every figure bench.
 pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
     let reqs = cfg.workload.generate();
     let submitted = reqs.len() as u64;
-    let ttft_slo_s = cfg.autoscale.ttft_slo_ms / 1e3;
     let (report, util, mut extras) = match cfg.engine {
-        EngineKind::HfStatic => {
-            let mut e = hft::HftEngine::new(cfg);
-            let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
-            sim::check_conservation(&res, &mut e).expect("hft conservation");
-            let rep = e.collector().report(res.end_time);
-            let mut extras = EngineExtras {
-                scale_outs: e.scale_outs,
-                drains: e.drains,
-                ..Default::default()
-            };
-            if ttft_slo_s > 0.0 {
-                extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
-            }
-            fill_fleet_extras(&mut extras, &e.fleet, &e.devices, res.end_time);
-            (rep, e.device_utilization(res.end_time), extras)
-        }
-        EngineKind::Vllm => {
-            let mut e = vllm_sim::VllmEngine::new(cfg);
-            let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
-            sim::check_conservation(&res, &mut e).expect("vllm conservation");
-            let rep = e.collector().report(res.end_time);
-            let mut extras = EngineExtras {
-                preemptions: e.preemptions,
-                recomputed_tokens: e.recomputed_tokens,
-                routed_counts: e.routed_counts.clone(),
-                scale_outs: e.scale_outs,
-                drains: e.drains,
-                ..Default::default()
-            };
-            if ttft_slo_s > 0.0 {
-                extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
-            }
-            fill_fleet_extras(&mut extras, &e.fleet, &e.devices, res.end_time);
-            (rep, e.device_utilization(res.end_time), extras)
-        }
-        EngineKind::DistServe => {
-            let mut e = distserve_sim::DistServeEngine::new(cfg);
-            let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
-            sim::check_conservation(&res, &mut e).expect("distserve conservation");
-            let rep = e.collector().report(res.end_time);
-            let mut extras = EngineExtras {
-                kv_transfer_bytes: e.kv_transfer_bytes,
-                scale_outs: e.scale_outs,
-                drains: e.drains,
-                ..Default::default()
-            };
-            if ttft_slo_s > 0.0 {
-                extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
-            }
-            fill_fleet_extras(&mut extras, &e.fleet, &e.devices, res.end_time);
-            (rep, e.device_utilization(res.end_time), extras)
-        }
-        EngineKind::BanaServe => {
-            let mut e = banaserve::BanaEngine::new(cfg);
-            let res = sim::run(&mut e, reqs, MAX_SIM_TIME);
-            sim::check_conservation(&res, &mut e).expect("banaserve conservation");
-            let rep = e.collector().report(res.end_time);
-            let mut extras = EngineExtras {
-                kv_transfer_bytes: e.kv_transfer_bytes,
-                layer_migrations: e.stats.layer_migrations,
-                attention_migrations: e.stats.attention_migrations,
-                store_hit_rate: e.store_hit_rate(),
-                routed_counts: e.routed_counts.clone(),
-                scale_outs: e.scale_outs,
-                drains: e.drains,
-                ..Default::default()
-            };
-            if ttft_slo_s > 0.0 {
-                extras.ttft_slo_attainment = e.collector().ttft_attainment(ttft_slo_s);
-            }
-            fill_fleet_extras(&mut extras, &e.fleet, &e.devices, res.end_time);
-            (rep, e.device_utilization(res.end_time), extras)
-        }
+        EngineKind::HfStatic => run_one::<hft::HftEngine>(cfg, reqs),
+        EngineKind::Vllm => run_one::<vllm_sim::VllmEngine>(cfg, reqs),
+        EngineKind::DistServe => run_one::<distserve_sim::DistServeEngine>(cfg, reqs),
+        EngineKind::BanaServe => run_one::<banaserve::BanaEngine>(cfg, reqs),
     };
-    if ttft_slo_s <= 0.0 {
+    if cfg.autoscale.ttft_slo_ms <= 0.0 {
         extras.ttft_slo_attainment = 1.0;
     }
     ExperimentOutcome {

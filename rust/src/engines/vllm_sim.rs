@@ -457,6 +457,7 @@ impl VllmEngine {
                     + self.insts[i].running.len().saturating_sub(batch_cap),
                 resident: self.insts[i].load_seqs(),
                 drainable: self.drainable(i),
+                cost: self.devices[self.insts[i].device].spec.cost,
             });
         }
         if !active.is_empty() {
@@ -592,6 +593,32 @@ impl VllmEngine {
         let total: u64 = self.caches.iter().map(|c| c.token_count()).sum();
         let max = self.caches.iter().map(|c| c.token_count()).max().unwrap_or(0);
         total.saturating_sub(max)
+    }
+}
+
+impl super::EngineHarness for VllmEngine {
+    fn build(cfg: &ExperimentConfig) -> Self {
+        VllmEngine::new(cfg)
+    }
+
+    fn fill_extras(&self, extras: &mut super::EngineExtras) {
+        extras.preemptions = self.preemptions;
+        extras.recomputed_tokens = self.recomputed_tokens;
+        extras.routed_counts = self.routed_counts.clone();
+        extras.scale_outs = self.scale_outs;
+        extras.drains = self.drains;
+    }
+
+    fn fleet_series(&self) -> &fleet::FleetSeries {
+        &self.fleet
+    }
+
+    fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    fn device_utilization(&self, end: f64) -> Vec<(f64, f64)> {
+        VllmEngine::device_utilization(self, end)
     }
 }
 

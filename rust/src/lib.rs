@@ -20,6 +20,9 @@
 //!   pipeline of paper §4.2.
 //! * [`workload`] generates Alpaca-like / LongBench-like request streams
 //!   with Poisson or bursty arrivals (paper §5.1).
+//! * [`scenario`] is the declarative scenario registry: every
+//!   `simulate --scenario <name>` comparison is a spec (cell grid, metric
+//!   schema, capability gate) run by one generic multi-seed driver.
 //!
 //! Everything in [`util`] exists because the offline crate registry carries
 //! no tokio/clap/serde/criterion/proptest — those substrates are built here.
@@ -35,6 +38,7 @@ pub mod model;
 pub mod perfmodel;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;
 pub mod workload;

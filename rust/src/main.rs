@@ -5,16 +5,14 @@
 //!                     synthetic batch of requests through the threaded
 //!                     coordinator, report latency/throughput
 //!   simulate          one engine on one workload (cluster-scale simulator);
-//!                     --scenario bursty-autoscale runs the elastic-fleet
-//!                     comparison (static base/peak fleets vs autoscaled)
-//!                     on a time-varying-rate trace and reports P99 total
-//!                     processing time (per-seed + mean ± 95% CI) and
-//!                     fleet-size series as JSON; --scenario hetero-slo
-//!                     runs the SLO-driven heterogeneous comparison (all
-//!                     four engines, static base/peak vs elastic with
-//!                     P99-TTFT/TPOT targets and a mixed 40G/80G catalog)
-//!                     and reports SLO attainment, per-spec fleet series
-//!                     and total device-cost to bench_results/hetero_slo.json
+//!                     --scenario <name> runs a registered comparison
+//!                     scenario instead (multi-engine grid, --seeds N
+//!                     repeats with mean ± 95% CI, JSON under
+//!                     bench_results/) and --list-scenarios prints the
+//!                     registry. Scenario specs live in
+//!                     `rust/src/scenario/`; the registered names and doc
+//!                     lines below are printed from the registry itself:
+//!                       bursty-autoscale, hetero-slo, cache-skew
 //!   sweep             RPS sweep for one engine/profile
 //!   figure <id>       regenerate a paper figure (1|2a|2b|6|7|8|9|10|11)
 //!   migrate-demo      show Alg 1 decisions on a synthetic imbalance
@@ -22,21 +20,26 @@
 //!
 //! Flags shared by the simulation commands: --engine --model --rps
 //! --duration --seed --devices --prefill --profile short|long
-//! --share-prob --delta --rho --layer-migration --attention-migration
-//! --global-store --config <file.json> --autoscale --autoscale-min
-//! --autoscale-max --scale-out-util --scale-in-util --autoscale-cooldown
+//! --share-prob --prefix-templates --zipf-s --delta --rho
+//! --layer-migration --attention-migration --global-store
+//! --config <file.json> --autoscale --autoscale-min --autoscale-max
+//! --scale-out-util --scale-in-util --autoscale-cooldown
 //! --autoscale-window --ttft-slo-ms --tpot-slo-ms --slo-headroom
-//! --gpu <name> --gpu-catalog <name,name>; sweep and both scenarios add
+//! --gpu <name> --gpu-catalog <name,name>; sweep and every scenario add
 //! --seeds N (N deterministic seeds derived from --seed; 5 = the paper's
 //! CI methodology) and --threads (parallel cells, default: all cores);
-//! the scenarios add --base-devices --peak-devices --burst-factor
-//! --burst-secs --period-secs, and hetero-slo --engines
+//! scenarios also take --out-dir plus their own flags (e.g.
+//! --base-devices --peak-devices --burst-factor --burst-secs
+//! --period-secs, hetero-slo --engines, cache-skew --devices).
+//! Unknown flags are rejected: a typo'd flag aborts the command instead
+//! of silently running with the default value.
 
 use banaserve::config::{EngineKind, ExperimentConfig};
 use banaserve::engines;
 use banaserve::kvcache::PipelinePlan;
 use banaserve::model;
 use banaserve::perfmodel;
+use banaserve::scenario;
 use banaserve::util::args::Args;
 use banaserve::util::logging;
 use log::Level;
@@ -45,7 +48,7 @@ fn main() {
     logging::init(Level::Info);
     let args = Args::from_env();
     let (cmd, rest) = args.subcommand();
-    let code = match cmd {
+    let code = match cmd.as_deref() {
         Some("serve") => cmd_serve(&rest),
         Some("simulate") => cmd_simulate(&rest),
         Some("sweep") => cmd_sweep(&rest),
@@ -70,6 +73,21 @@ fn usage() {
         "usage: banaserve <serve|simulate|sweep|figure|migrate-demo|validate-pipeline> [flags]\n\
          see rust/src/main.rs header for the flag list"
     );
+    eprintln!("scenarios (simulate --scenario <name>, --list-scenarios):");
+    for s in scenario::REGISTRY.iter() {
+        eprintln!("  {:<18} {}", s.name, s.doc);
+    }
+}
+
+/// Flag-typo guard: every command calls this after reading all the flags
+/// it understands and before doing any work.
+fn checked(a: &Args) -> Result<(), i32> {
+    if let Err(e) = a.reject_unknown() {
+        eprintln!("{e}");
+        usage();
+        return Err(2);
+    }
+    Ok(())
 }
 
 fn build_config(a: &Args) -> ExperimentConfig {
@@ -107,6 +125,9 @@ fn cmd_serve(a: &Args) -> i32 {
     let n = a.usize_or("requests", 16);
     let max_new = a.usize_or("max-new", 24);
     let seed = a.u64_or("seed", 7);
+    if let Err(code) = checked(a) {
+        return code;
+    }
     let mut rng = banaserve::util::prng::Rng::new(seed);
     let requests: Vec<ServeRequest> = (0..n)
         .map(|i| {
@@ -153,16 +174,30 @@ fn cmd_serve(a: &Args) -> i32 {
 }
 
 fn cmd_simulate(a: &Args) -> i32 {
+    if a.bool_or("list-scenarios", false) {
+        scenario::print_list();
+        return 0;
+    }
     match a.str_or("scenario", "") {
         "" => {}
-        "bursty-autoscale" => return cmd_bursty_autoscale(a),
-        "hetero-slo" => return cmd_hetero_slo(a),
-        other => {
-            eprintln!("unknown scenario '{other}' (known: bursty-autoscale, hetero-slo)");
-            return 2;
+        name => {
+            // registry dispatch: the spec owns flags, grid, gate and JSON
+            return match scenario::by_name(name) {
+                Some(spec) => scenario::run(spec, a),
+                None => {
+                    eprintln!(
+                        "unknown scenario '{name}' (known: {})",
+                        scenario::names().join(", ")
+                    );
+                    2
+                }
+            };
         }
     }
     let cfg = build_config(a);
+    if let Err(code) = checked(a) {
+        return code;
+    }
     let out = engines::run_experiment(&cfg);
     println!(
         "engine={} model={} devices={} ({} prefill)",
@@ -183,508 +218,6 @@ fn cmd_simulate(a: &Args) -> i32 {
         println!("  device {i}: compute={c:.2} memory={m:.2}");
     }
     0
-}
-
-/// The elastic-fleet scenario: a time-varying (bursty) arrival rate served
-/// by (a) a static fleet provisioned at the burst trough (`--base-devices`),
-/// (b) a static fleet provisioned at the burst peak (`--peak-devices`), and
-/// (c) an elastic fleet that starts at base and autoscales up to peak.
-/// The headline comparison is elastic vs the base-provisioned static fleet
-/// at equal peak device count — the over-provision-or-violate-SLOs dilemma
-/// the autoscaler dissolves.
-///
-/// `--seeds N` runs every engine × fleet variant over N deterministic
-/// seeds derived from `--seed` (the paper's 5-repeat methodology is
-/// `--seeds 5`); cells fan out across cores (`--threads`, default: all),
-/// each cell owning its engine + collector, and merge in fixed
-/// (engine, variant, seed) order — per-seed results are byte-identical to
-/// a serial run. The table reports mean ± 95% CI for P99; per-seed values
-/// plus the aggregate land in `bench_results/bursty_autoscale.json`.
-fn cmd_bursty_autoscale(a: &Args) -> i32 {
-    use banaserve::bench_support::derive_seeds;
-    use banaserve::engines::run_experiment;
-    use banaserve::metrics::TimeSeries;
-    use banaserve::util::json::{self, Value};
-    use banaserve::util::parallel;
-    use banaserve::util::stats::Summary;
-    use banaserve::workload::ArrivalProcess;
-
-    let base = a.usize_or("base-devices", 2);
-    let peak = a.usize_or("peak-devices", 6);
-    let rps = a.f64_or("rps", 5.0);
-    let burst_factor = a.f64_or("burst-factor", 5.0);
-    let burst_secs = a.f64_or("burst-secs", 12.0);
-    let period_secs = a.f64_or("period-secs", 48.0);
-    let duration = a.f64_or("duration", 150.0);
-    let seed = a.u64_or("seed", 11);
-    let n_seeds = a.usize_or("seeds", 1);
-    let threads = a.usize_or("threads", parallel::default_threads());
-    let model = a.str_or("model", "llama-13b");
-    let seeds = derive_seeds(seed, n_seeds);
-
-    let mk = |engine: EngineKind, devices: usize, elastic: bool, seed: u64| {
-        let mut c = ExperimentConfig::default_for(engine, model, rps, seed);
-        c.n_devices = devices;
-        c.n_prefill = (devices / 2).max(1);
-        c.warmup = 0.0;
-        c.workload.duration = duration;
-        c.workload.seed = seed;
-        c.workload.arrivals = ArrivalProcess::Bursty {
-            rps,
-            burst_factor,
-            burst_secs,
-            period_secs,
-        };
-        if elastic {
-            c.autoscale.enabled = true;
-            c.autoscale.min_devices = base;
-            c.autoscale.max_devices = peak;
-        }
-        c
-    };
-
-    println!(
-        "bursty-autoscale: base={base} peak={peak} devices, {rps} rps x{burst_factor} \
-         bursts ({burst_secs}s of every {period_secs}s), {duration}s trace, \
-         {} seed(s) from {seed} on {threads} thread(s)",
-        seeds.len()
-    );
-
-    let engines_list = [EngineKind::BanaServe, EngineKind::DistServe];
-    let variants: [(&str, usize, bool); 3] = [
-        ("static-base", base, false),
-        ("static-peak", peak, false),
-        ("elastic", base, true),
-    ];
-    // one cell per engine × fleet variant × seed; every cell owns its
-    // engine and collector, so cells are independent and deterministic —
-    // the fan-out below keeps all cores busy (wall-clock ≈ slowest cell)
-    let mut tasks: Vec<(EngineKind, usize, bool, u64)> = Vec::new();
-    for &engine in &engines_list {
-        for &(_, devices, elastic) in &variants {
-            for &s in &seeds {
-                tasks.push((engine, devices, elastic, s));
-            }
-        }
-    }
-    let mut outs = parallel::parallel_map(&tasks, threads, |_, &(engine, devices, elastic, s)| {
-        run_experiment(&mk(engine, devices, elastic, s))
-    });
-
-    println!(
-        "  {:<10} {:<12} {:>6} {:>16} {:>10} {:>10} {:>11} {:>9}",
-        "engine", "fleet", "n", "p99 e2e (±ci95)", "mean e2e", "tput", "peak devs", "avg devs"
-    );
-    let mut rows: Vec<Value> = Vec::new();
-    let mut summary_rows: Vec<Value> = Vec::new();
-    let mut code = 0;
-    for (e_i, &engine) in engines_list.iter().enumerate() {
-        let mut p99_of: Vec<(&str, f64)> = Vec::new();
-        for (v_i, &(label, devices, _)) in variants.iter().enumerate() {
-            let mut p99s = Summary::new();
-            let mut e2es = Summary::new();
-            let mut tputs = Summary::new();
-            let mut peaks = Summary::new();
-            let mut avgs = Summary::new();
-            let mut n_req = Summary::new();
-            for (s_i, &s) in seeds.iter().enumerate() {
-                let idx = (e_i * variants.len() + v_i) * seeds.len() + s_i;
-                let out = &mut outs[idx];
-                let p99 = out.report.e2e.p99();
-                let fleet = TimeSeries {
-                    points: out.extras.fleet_size_series.clone(),
-                };
-                let peak_devs = fleet.max_value().max(devices as f64);
-                let avg_devs = if fleet.is_empty() {
-                    devices as f64
-                } else {
-                    fleet.time_weighted_mean(out.report.makespan)
-                };
-                p99s.add(p99);
-                e2es.add(out.report.e2e.mean());
-                tputs.add(out.report.throughput_tok_s);
-                peaks.add(peak_devs);
-                avgs.add(avg_devs);
-                n_req.add(out.report.n_requests as f64);
-                rows.push(json::obj(vec![
-                    ("engine", json::s(engine.name())),
-                    ("fleet", json::s(label)),
-                    ("seed", json::num(s as f64)),
-                    ("n_requests", json::num(out.report.n_requests as f64)),
-                    ("p99_total_s", json::num(p99)),
-                    ("mean_e2e_s", json::num(out.report.e2e.mean())),
-                    ("throughput_tok_s", json::num(out.report.throughput_tok_s)),
-                    ("makespan_s", json::num(out.report.makespan)),
-                    ("peak_devices", json::num(peak_devs)),
-                    ("avg_devices", json::num(avg_devs)),
-                    ("scale_outs", json::num(out.extras.scale_outs as f64)),
-                    ("drains", json::num(out.extras.drains as f64)),
-                    (
-                        "fleet_size_series",
-                        json::arr(
-                            out.extras
-                                .fleet_size_series
-                                .iter()
-                                .map(|&(t, v)| json::arr(vec![json::num(t), json::num(v)]))
-                                .collect(),
-                        ),
-                    ),
-                ]));
-            }
-            println!(
-                "  {:<10} {:<12} {:>6.0} {:>9.2}±{:<6.2} {:>9.2}s {:>10.1} {:>11.1} {:>9.2}",
-                engine.name(),
-                label,
-                n_req.mean(),
-                p99s.mean(),
-                p99s.ci95_half_width(),
-                e2es.mean(),
-                tputs.mean(),
-                peaks.max(),
-                avgs.mean()
-            );
-            summary_rows.push(json::obj(vec![
-                ("engine", json::s(engine.name())),
-                ("fleet", json::s(label)),
-                ("n_seeds", json::num(seeds.len() as f64)),
-                ("p99_total_s_mean", json::num(p99s.mean())),
-                ("p99_total_s_ci95", json::num(p99s.ci95_half_width())),
-                ("mean_e2e_s_mean", json::num(e2es.mean())),
-                ("mean_e2e_s_ci95", json::num(e2es.ci95_half_width())),
-                ("throughput_tok_s_mean", json::num(tputs.mean())),
-                ("peak_devices_max", json::num(peaks.max())),
-                ("avg_devices_mean", json::num(avgs.mean())),
-            ]));
-            p99_of.push((label, p99s.mean()));
-        }
-        let find = |l: &str| p99_of.iter().find(|r| r.0 == l).map(|r| r.1).unwrap_or(0.0);
-        let (stat, ela) = (find("static-base"), find("elastic"));
-        let better = ela < stat;
-        println!(
-            "  -> {}: elastic p99 {:.2}s vs static-base p99 {:.2}s over {} seed(s) ({}, {:.2}x)",
-            engine.name(),
-            ela,
-            stat,
-            seeds.len(),
-            if better { "elastic wins" } else { "static wins" },
-            stat / ela.max(1e-9)
-        );
-        if engine == EngineKind::BanaServe && !better {
-            code = 1; // the capability gate: elastic must beat static-base
-        }
-    }
-    let _ = std::fs::create_dir_all("bench_results");
-    let doc = json::obj(vec![
-        ("scenario", json::s("bursty-autoscale")),
-        ("base_devices", json::num(base as f64)),
-        ("peak_devices", json::num(peak as f64)),
-        ("rps", json::num(rps)),
-        ("burst_factor", json::num(burst_factor)),
-        ("seed", json::num(seed as f64)),
-        (
-            "seeds",
-            json::arr(seeds.iter().map(|&s| json::num(s as f64)).collect()),
-        ),
-        ("results", json::arr(rows)),
-        ("summary", json::arr(summary_rows)),
-    ]);
-    let path = "bench_results/bursty_autoscale.json";
-    match std::fs::write(path, json::write(&doc)) {
-        Ok(()) => println!("  [results written to {path}]"),
-        Err(e) => eprintln!("  [could not write {path}: {e}]"),
-    }
-    code
-}
-
-/// The SLO-driven heterogeneous autoscaling scenario: the bursty trace
-/// served by (a) a static A100-40G fleet provisioned at the trough
-/// (`--base-devices`), (b) a static 40G fleet at the peak
-/// (`--peak-devices`), and (c) an elastic fleet that starts at base,
-/// carries P99-TTFT/TPOT targets (`--ttft-slo-ms`/`--tpot-slo-ms`), and
-/// scales out with a mixed 40G/80G catalog (`--gpu-catalog`) by price/perf
-/// under the SLO gap. Runs all four engines by default (`--engines` to
-/// restrict); `--seeds N` is the 5-repeat CI methodology. Reports P99
-/// TTFT, SLO attainment, total device-cost (∫ Σ cost dt) and per-spec
-/// fleet-size series; JSON (schema documented in `engines/mod.rs`) lands
-/// in `bench_results/hetero_slo.json`.
-fn cmd_hetero_slo(a: &Args) -> i32 {
-    use banaserve::bench_support::derive_seeds;
-    use banaserve::cluster::{self, GpuSpec};
-    use banaserve::engines::run_experiment;
-    use banaserve::metrics::TimeSeries;
-    use banaserve::util::json::{self, Value};
-    use banaserve::util::parallel;
-    use banaserve::util::stats::Summary;
-    use banaserve::workload::ArrivalProcess;
-
-    let base = a.usize_or("base-devices", 2);
-    let peak = a.usize_or("peak-devices", 6);
-    let rps = a.f64_or("rps", 5.0);
-    let burst_factor = a.f64_or("burst-factor", 5.0);
-    let burst_secs = a.f64_or("burst-secs", 12.0);
-    let period_secs = a.f64_or("period-secs", 48.0);
-    let duration = a.f64_or("duration", 150.0);
-    let seed = a.u64_or("seed", 11);
-    let n_seeds = a.usize_or("seeds", 1);
-    let threads = a.usize_or("threads", parallel::default_threads());
-    let model = a.str_or("model", "llama-13b");
-    let ttft_slo_ms = a.f64_or("ttft-slo-ms", 2000.0);
-    let tpot_slo_ms = a.f64_or("tpot-slo-ms", 0.0);
-    let seeds = derive_seeds(seed, n_seeds);
-    let catalog: Vec<GpuSpec> = {
-        let names = a.list("gpu-catalog");
-        if names.is_empty() {
-            vec![cluster::A100_40G, cluster::A100_80G]
-        } else {
-            let specs: Vec<GpuSpec> = names
-                .iter()
-                .filter_map(|s| {
-                    let g = cluster::gpu_by_name(s);
-                    if g.is_none() {
-                        eprintln!("--gpu-catalog {s}: unknown spec, dropped");
-                    }
-                    g
-                })
-                .collect();
-            if specs.is_empty() {
-                eprintln!("--gpu-catalog matched no known specs");
-                return 2;
-            }
-            specs
-        }
-    };
-    let engines_list: Vec<EngineKind> = {
-        let l = a.list("engines");
-        if l.is_empty() {
-            vec![
-                EngineKind::BanaServe,
-                EngineKind::DistServe,
-                EngineKind::Vllm,
-                EngineKind::HfStatic,
-            ]
-        } else {
-            l.iter().filter_map(|s| EngineKind::parse(s)).collect()
-        }
-    };
-
-    let mk = |engine: EngineKind, devices: usize, elastic: bool, s: u64| {
-        let mut c = ExperimentConfig::default_for(engine, model, rps, s);
-        c.n_devices = devices;
-        c.n_prefill = (devices / 2).max(1);
-        c.warmup = 0.0;
-        c.workload.duration = duration;
-        c.workload.seed = s;
-        c.workload.arrivals = ArrivalProcess::Bursty {
-            rps,
-            burst_factor,
-            burst_secs,
-            period_secs,
-        };
-        // SLO attainment is reported for every arm (same target), but only
-        // the elastic arm scales on it
-        c.autoscale.ttft_slo_ms = ttft_slo_ms;
-        c.autoscale.tpot_slo_ms = tpot_slo_ms;
-        if elastic {
-            c.autoscale.enabled = true;
-            c.autoscale.min_devices = base;
-            c.autoscale.max_devices = peak;
-            c.gpu_catalog = catalog.clone();
-        }
-        c
-    };
-
-    println!(
-        "hetero-slo: base={base} peak={peak} devices, {rps} rps x{burst_factor} bursts \
-         ({burst_secs}s of every {period_secs}s), {duration}s trace, TTFT SLO {ttft_slo_ms} ms, \
-         catalog [{}], {} seed(s) from {seed} on {threads} thread(s)",
-        catalog.iter().map(|g| g.name).collect::<Vec<_>>().join(", "),
-        seeds.len()
-    );
-
-    let variants: [(&str, usize, bool); 3] = [
-        ("static-base", base, false),
-        ("static-peak", peak, false),
-        ("elastic-slo", base, true),
-    ];
-    let mut tasks: Vec<(EngineKind, usize, bool, u64)> = Vec::new();
-    for &engine in &engines_list {
-        for &(_, devices, elastic) in &variants {
-            for &s in &seeds {
-                tasks.push((engine, devices, elastic, s));
-            }
-        }
-    }
-    let mut outs =
-        parallel::parallel_map(&tasks, threads, |_, &(engine, devices, elastic, s)| {
-            run_experiment(&mk(engine, devices, elastic, s))
-        });
-
-    println!(
-        "  {:<10} {:<12} {:>6} {:>16} {:>8} {:>10} {:>10} {:>9} {:>6}",
-        "engine", "fleet", "n", "p99 ttft (±ci)", "attain", "p99 e2e", "cost", "peak devs", "outs"
-    );
-    let mut rows: Vec<Value> = Vec::new();
-    let mut summary_rows: Vec<Value> = Vec::new();
-    let mut code = 0;
-    for (e_i, &engine) in engines_list.iter().enumerate() {
-        let mut cell_of: Vec<(&str, f64, f64, f64)> = Vec::new(); // (label, p99 ttft, attain, cost)
-        for (v_i, &(label, devices, _)) in variants.iter().enumerate() {
-            let mut p99t = Summary::new();
-            let mut attain = Summary::new();
-            let mut p99e = Summary::new();
-            let mut costs = Summary::new();
-            let mut peaks = Summary::new();
-            let mut avgs = Summary::new();
-            let mut n_req = Summary::new();
-            let mut outs_n = Summary::new();
-            let mut tputs = Summary::new();
-            for (s_i, &s) in seeds.iter().enumerate() {
-                let idx = (e_i * variants.len() + v_i) * seeds.len() + s_i;
-                let out = &mut outs[idx];
-                let fleet = TimeSeries {
-                    points: out.extras.fleet_size_series.clone(),
-                };
-                let peak_devs = fleet.max_value().max(devices as f64);
-                let avg_devs = if fleet.is_empty() {
-                    devices as f64
-                } else {
-                    fleet.time_weighted_mean(out.report.makespan)
-                };
-                p99t.add(out.report.ttft.p99());
-                attain.add(out.extras.ttft_slo_attainment);
-                p99e.add(out.report.e2e.p99());
-                costs.add(out.extras.device_cost);
-                peaks.add(peak_devs);
-                avgs.add(avg_devs);
-                n_req.add(out.report.n_requests as f64);
-                outs_n.add(out.extras.scale_outs as f64);
-                tputs.add(out.report.throughput_tok_s);
-                let spec_series: Vec<(&str, Value)> = out
-                    .extras
-                    .fleet_spec_series
-                    .iter()
-                    .map(|(name, pts)| {
-                        (
-                            name.as_str(),
-                            json::arr(
-                                pts.iter()
-                                    .map(|&(t, v)| {
-                                        json::arr(vec![json::num(t), json::num(v)])
-                                    })
-                                    .collect(),
-                            ),
-                        )
-                    })
-                    .collect();
-                rows.push(json::obj(vec![
-                    ("engine", json::s(engine.name())),
-                    ("fleet", json::s(label)),
-                    ("seed", json::num(s as f64)),
-                    ("n_requests", json::num(out.report.n_requests as f64)),
-                    ("p99_ttft_s", json::num(out.report.ttft.p99())),
-                    ("ttft_attainment", json::num(out.extras.ttft_slo_attainment)),
-                    ("p99_total_s", json::num(out.report.e2e.p99())),
-                    ("mean_e2e_s", json::num(out.report.e2e.mean())),
-                    ("throughput_tok_s", json::num(out.report.throughput_tok_s)),
-                    ("makespan_s", json::num(out.report.makespan)),
-                    ("device_cost", json::num(out.extras.device_cost)),
-                    ("peak_devices", json::num(peak_devs)),
-                    ("avg_devices", json::num(avg_devs)),
-                    ("scale_outs", json::num(out.extras.scale_outs as f64)),
-                    ("drains", json::num(out.extras.drains as f64)),
-                    (
-                        "fleet_size_series",
-                        json::arr(
-                            out.extras
-                                .fleet_size_series
-                                .iter()
-                                .map(|&(t, v)| json::arr(vec![json::num(t), json::num(v)]))
-                                .collect(),
-                        ),
-                    ),
-                    ("fleet_spec_series", json::obj(spec_series)),
-                ]));
-            }
-            println!(
-                "  {:<10} {:<12} {:>6.0} {:>9.2}±{:<6.2} {:>7.0}% {:>9.2}s {:>10.1} {:>9.1} {:>6.0}",
-                engine.name(),
-                label,
-                n_req.mean(),
-                p99t.mean(),
-                p99t.ci95_half_width(),
-                attain.mean() * 100.0,
-                p99e.mean(),
-                costs.mean(),
-                peaks.max(),
-                outs_n.mean()
-            );
-            summary_rows.push(json::obj(vec![
-                ("engine", json::s(engine.name())),
-                ("fleet", json::s(label)),
-                ("n_seeds", json::num(seeds.len() as f64)),
-                ("p99_ttft_s_mean", json::num(p99t.mean())),
-                ("p99_ttft_s_ci95", json::num(p99t.ci95_half_width())),
-                ("ttft_attainment_mean", json::num(attain.mean())),
-                ("device_cost_mean", json::num(costs.mean())),
-                ("throughput_tok_s_mean", json::num(tputs.mean())),
-                ("peak_devices_max", json::num(peaks.max())),
-                ("avg_devices_mean", json::num(avgs.mean())),
-            ]));
-            cell_of.push((label, p99t.mean(), attain.mean(), costs.mean()));
-        }
-        let find = |l: &str| cell_of.iter().find(|r| r.0 == l).copied();
-        if let (Some(b), Some(p), Some(e)) =
-            (find("static-base"), find("static-peak"), find("elastic-slo"))
-        {
-            println!(
-                "  -> {}: elastic-slo attain {:.0}% (base {:.0}%) at cost {:.0} \
-                 (static-peak {:.0}, {:.2}x cheaper); p99 ttft {:.2}s vs base {:.2}s",
-                engine.name(),
-                e.2 * 100.0,
-                b.2 * 100.0,
-                e.3,
-                p.3,
-                p.3 / e.3.max(1e-9),
-                e.1,
-                b.1
-            );
-            // the capability direction for the paper's engine: the elastic
-            // SLO fleet must not be STRICTLY worse than the trough-
-            // provisioned static fleet on either SLO axis (ties are fine —
-            // an easy SLO saturates attainment at 1.0 for both), and must
-            // undercut holding the peak fleet on cost
-            if engine == EngineKind::BanaServe && (e.1 > b.1 || e.2 < b.2 || e.3 >= p.3) {
-                code = 1;
-            }
-        }
-    }
-    let _ = std::fs::create_dir_all("bench_results");
-    let doc = json::obj(vec![
-        ("scenario", json::s("hetero-slo")),
-        ("ttft_slo_ms", json::num(ttft_slo_ms)),
-        ("tpot_slo_ms", json::num(tpot_slo_ms)),
-        (
-            "catalog",
-            json::arr(catalog.iter().map(|g| json::s(g.name)).collect()),
-        ),
-        ("base_devices", json::num(base as f64)),
-        ("peak_devices", json::num(peak as f64)),
-        ("rps", json::num(rps)),
-        ("burst_factor", json::num(burst_factor)),
-        ("seed", json::num(seed as f64)),
-        (
-            "seeds",
-            json::arr(seeds.iter().map(|&s| json::num(s as f64)).collect()),
-        ),
-        ("results", json::arr(rows)),
-        ("summary", json::arr(summary_rows)),
-    ]);
-    let path = "bench_results/hetero_slo.json";
-    match std::fs::write(path, json::write(&doc)) {
-        Ok(()) => println!("  [results written to {path}]"),
-        Err(e) => eprintln!("  [could not write {path}: {e}]"),
-    }
-    code
 }
 
 fn cmd_sweep(a: &Args) -> i32 {
@@ -714,6 +247,9 @@ fn cmd_sweep(a: &Args) -> i32 {
     let seeds = derive_seeds(a.u64_or("seed", 11), a.usize_or("seeds", 1));
     let threads = a.usize_or("threads", parallel::default_threads());
     let template = build_config(a);
+    if let Err(code) = checked(a) {
+        return code;
+    }
     // every (rps, engine, seed) cell owns its engine + collector; the grid
     // fans out across cores and merges per cell in fixed seed order, so
     // the figure is byte-identical to a serial run
@@ -766,6 +302,9 @@ fn cmd_figure(a: &Args) -> i32 {
         eprintln!("figure requires an id: 1 2a 2b 6 7 8 9 10 11");
         return 2;
     };
+    if let Err(code) = checked(a) {
+        return code;
+    }
     let bench = match id {
         "1" => "fig1_utilization",
         "2a" => "fig2a_router_skew",
@@ -790,6 +329,10 @@ fn cmd_figure(a: &Args) -> i32 {
 fn cmd_migrate_demo(a: &Args) -> i32 {
     use banaserve::engines::banaserve::migration::{plan, DeviceLoad, Policy};
     let delta = a.f64_or("delta", 0.35);
+    let model = model::by_name(a.str_or("model", "llama-13b")).unwrap();
+    if let Err(code) = checked(a) {
+        return code;
+    }
     let loads = vec![
         DeviceLoad {
             idx: 0,
@@ -830,7 +373,6 @@ fn cmd_migrate_demo(a: &Args) -> i32 {
         delta,
         ..Policy::default()
     };
-    let model = model::by_name(a.str_or("model", "llama-13b")).unwrap();
     let cost_layer = perfmodel::layer_migration_time(model, 10, 0, &banaserve::cluster::NVLINK);
     let cost_attn =
         perfmodel::attention_migration_time(2_000_000_000, &banaserve::cluster::NVLINK);
@@ -855,6 +397,9 @@ fn cmd_validate_pipeline(a: &Args) -> i32 {
     let l_tokens = a.u64_or("tokens", 1000);
     let hit = a.f64_or("hit-rate", 0.5);
     let t_f = a.f64_or("t-forward", 0.270);
+    if let Err(code) = checked(a) {
+        return code;
+    }
     let bw = banaserve::cluster::NET_200GBPS.bandwidth;
     let t_f_layer = perfmodel::per_layer_forward_time(t_f, hit, model.n_layers);
     let t_kv = perfmodel::per_layer_kv_transfer_time(

@@ -1,0 +1,120 @@
+//! The elastic-fleet scenario: a time-varying (bursty) arrival rate served
+//! by (a) a static fleet provisioned at the burst trough (`--base-devices`),
+//! (b) a static fleet provisioned at the burst peak (`--peak-devices`), and
+//! (c) an elastic fleet that starts at base and autoscales up to peak.
+//! The headline comparison is elastic vs the base-provisioned static fleet
+//! at equal peak device count — the over-provision-or-violate-SLOs dilemma
+//! the autoscaler dissolves.
+
+use super::{Agg, EngineAgg, Metric, ScenarioPlan, ScenarioSpec, SummaryCol, Variant};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::util::args::Args;
+use crate::util::json;
+use crate::workload::ArrivalProcess;
+
+pub const SPEC: ScenarioSpec = ScenarioSpec {
+    name: "bursty-autoscale",
+    doc: "elastic vs static-base/peak fleets (BanaServe + DistServe) on a bursty trace",
+    out_file: "bursty_autoscale.json",
+    row_metrics: &[
+        Metric { key: "n_requests", get: |c| c.out.report.n_requests as f64 },
+        Metric { key: "p99_total_s", get: |c| c.out.report.e2e.p99() },
+        Metric { key: "mean_e2e_s", get: |c| c.out.report.e2e.mean() },
+        Metric { key: "throughput_tok_s", get: |c| c.out.report.throughput_tok_s },
+        Metric { key: "makespan_s", get: |c| c.out.report.makespan },
+        Metric { key: "peak_devices", get: |c| c.peak_devices },
+        Metric { key: "avg_devices", get: |c| c.avg_devices },
+        Metric { key: "scale_outs", get: |c| c.out.extras.scale_outs as f64 },
+        Metric { key: "drains", get: |c| c.out.extras.drains as f64 },
+    ],
+    summary: &[
+        SummaryCol { key: "p99_total_s", agg: Agg::Mean },
+        SummaryCol { key: "p99_total_s", agg: Agg::Ci95 },
+        SummaryCol { key: "mean_e2e_s", agg: Agg::Mean },
+        SummaryCol { key: "mean_e2e_s", agg: Agg::Ci95 },
+        SummaryCol { key: "throughput_tok_s", agg: Agg::Mean },
+        SummaryCol { key: "peak_devices", agg: Agg::Max },
+        SummaryCol { key: "avg_devices", agg: Agg::Mean },
+    ],
+    extra_keys: &["fleet_size_series"],
+    build,
+};
+
+fn build(a: &Args) -> Result<ScenarioPlan, String> {
+    let base = a.usize_or("base-devices", 2);
+    let peak = a.usize_or("peak-devices", 6);
+    let rps = a.f64_or("rps", 5.0);
+    let burst_factor = a.f64_or("burst-factor", 5.0);
+    let burst_secs = a.f64_or("burst-secs", 12.0);
+    let period_secs = a.f64_or("period-secs", 48.0);
+    let duration = a.f64_or("duration", 150.0);
+    let model = a.str_or("model", "llama-13b").to_string();
+    Ok(ScenarioPlan {
+        banner: format!(
+            "bursty-autoscale: base={base} peak={peak} devices, {rps} rps x{burst_factor} \
+             bursts ({burst_secs}s of every {period_secs}s), {duration}s trace"
+        ),
+        engines: vec![EngineKind::BanaServe, EngineKind::DistServe],
+        variants: vec![
+            Variant { label: "static-base", devices: base, elastic: false },
+            Variant { label: "static-peak", devices: peak, elastic: false },
+            Variant { label: "elastic", devices: base, elastic: true },
+        ],
+        params: vec![
+            ("base_devices", json::num(base as f64)),
+            ("peak_devices", json::num(peak as f64)),
+            ("rps", json::num(rps)),
+            ("burst_factor", json::num(burst_factor)),
+        ],
+        make_cfg: Box::new(move |engine, v, seed| {
+            let mut c = ExperimentConfig::default_for(engine, &model, rps, seed);
+            c.n_devices = v.devices;
+            c.n_prefill = (v.devices / 2).max(1);
+            c.warmup = 0.0;
+            c.workload.duration = duration;
+            c.workload.seed = seed;
+            c.workload.arrivals = ArrivalProcess::Bursty {
+                rps,
+                burst_factor,
+                burst_secs,
+                period_secs,
+            };
+            if v.elastic {
+                c.autoscale.enabled = true;
+                c.autoscale.min_devices = base;
+                c.autoscale.max_devices = peak;
+            }
+            c
+        }),
+        row_extra: Some(|c| {
+            vec![(
+                "fleet_size_series".to_string(),
+                super::series_json(&c.out.extras.fleet_size_series),
+            )]
+        }),
+        gate,
+    })
+}
+
+/// The capability gate: for the paper's engine, the elastic fleet's mean
+/// P99 must beat the base-provisioned static fleet's.
+fn gate(aggs: &[EngineAgg]) -> i32 {
+    let mut code = 0;
+    for ea in aggs {
+        let p99 = |l: &str| ea.variant(l).map(|v| v.mean("p99_total_s")).unwrap_or(0.0);
+        let (stat, ela) = (p99("static-base"), p99("elastic"));
+        let better = ela < stat;
+        println!(
+            "  -> {}: elastic p99 {ela:.2}s vs static-base p99 {stat:.2}s over {} seed(s) \
+             ({}, {:.2}x)",
+            ea.engine.name(),
+            ea.n_seeds,
+            if better { "elastic wins" } else { "static wins" },
+            stat / ela.max(1e-9)
+        );
+        if ea.engine == EngineKind::BanaServe && !better {
+            code = 1;
+        }
+    }
+    code
+}

@@ -1,0 +1,103 @@
+//! Fig 2a as a first-class scenario: on a shared-prefix-heavy trace,
+//! vLLM's cache-aware router keeps sending requests wherever their prefix
+//! is already cached — a positive-feedback loop that concentrates load on
+//! a few instances (routed-count skew) and pays for it in tail latency.
+//! BanaServe routes load-aware (Alg 2) because the Global KV Store and
+//! dynamic migration make cache placement free, so it stays balanced.
+//! The gate requires BOTH a larger skew AND a worse P99 from the
+//! cache-aware baseline — the paper's core claim, demonstrated.
+
+use super::{Agg, EngineAgg, Metric, ScenarioPlan, ScenarioSpec, SummaryCol, Variant};
+use crate::bench_support::routed_skew;
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::util::args::Args;
+use crate::util::json;
+use crate::workload::ArrivalProcess;
+
+pub const SPEC: ScenarioSpec = ScenarioSpec {
+    name: "cache-skew",
+    doc: "cache-aware (vLLM) vs load-aware (BanaServe) routing skew + P99 on shared prefixes",
+    out_file: "cache_skew.json",
+    row_metrics: &[
+        Metric { key: "n_requests", get: |c| c.out.report.n_requests as f64 },
+        Metric { key: "routed_skew", get: |c| routed_skew(&c.out.extras.routed_counts) },
+        Metric { key: "p99_total_s", get: |c| c.out.report.e2e.p99() },
+        Metric { key: "mean_e2e_s", get: |c| c.out.report.e2e.mean() },
+        Metric { key: "throughput_tok_s", get: |c| c.out.report.throughput_tok_s },
+        Metric { key: "makespan_s", get: |c| c.out.report.makespan },
+        Metric { key: "recomputed_tokens", get: |c| c.out.extras.recomputed_tokens as f64 },
+        Metric { key: "store_hit_rate", get: |c| c.out.extras.store_hit_rate },
+    ],
+    summary: &[
+        SummaryCol { key: "routed_skew", agg: Agg::Mean },
+        SummaryCol { key: "routed_skew", agg: Agg::Ci95 },
+        SummaryCol { key: "p99_total_s", agg: Agg::Mean },
+        SummaryCol { key: "p99_total_s", agg: Agg::Ci95 },
+        SummaryCol { key: "throughput_tok_s", agg: Agg::Mean },
+    ],
+    extra_keys: &["routed_counts"],
+    build,
+};
+
+fn build(a: &Args) -> Result<ScenarioPlan, String> {
+    let devices = a.usize_or("devices", 4);
+    let rps = a.f64_or("rps", 12.0);
+    let duration = a.f64_or("duration", 60.0);
+    let share_prob = a.f64_or("share-prob", 0.95);
+    let model = a.str_or("model", "llama-13b").to_string();
+    Ok(ScenarioPlan {
+        banner: format!(
+            "cache-skew: {devices} devices, {rps} rps, {duration}s shared-prefix trace \
+             (share_prob {share_prob})"
+        ),
+        engines: vec![EngineKind::Vllm, EngineKind::BanaServe],
+        variants: vec![Variant { label: "static", devices, elastic: false }],
+        params: vec![
+            ("devices", json::num(devices as f64)),
+            ("rps", json::num(rps)),
+            ("share_prob", json::num(share_prob)),
+        ],
+        make_cfg: Box::new(move |engine, v, seed| {
+            let mut c = ExperimentConfig::default_for(engine, &model, rps, seed);
+            c.n_devices = v.devices;
+            c.n_prefill = (v.devices / 2).max(1);
+            c.warmup = 0.0;
+            c.workload.duration = duration;
+            c.workload.seed = seed;
+            c.workload.arrivals = ArrivalProcess::Poisson { rps };
+            // few Zipf-hot templates with deep shared prefixes: maximum
+            // cache affinity, the regime where Fig 2a's feedback loop bites
+            c.workload.prefix.share_prob = share_prob;
+            c.workload.prefix.n_templates = 3;
+            c.workload.prefix.zipf_s = 1.5;
+            c.workload.prefix.shared_frac = (0.8, 0.95);
+            c
+        }),
+        row_extra: Some(|c| {
+            let counts = c.out.extras.routed_counts.iter().map(|&n| json::num(n as f64));
+            vec![("routed_counts".to_string(), json::arr(counts.collect()))]
+        }),
+        gate,
+    })
+}
+
+/// Gate: the cache-aware baseline must show MORE routing skew AND a worse
+/// mean-of-seeds P99 than load-aware BanaServe — the Fig 2a separation.
+fn gate(aggs: &[EngineAgg]) -> i32 {
+    let cell = |e: EngineKind| {
+        aggs.iter()
+            .find(|x| x.engine == e)
+            .and_then(|x| x.variant("static"))
+    };
+    let (Some(v), Some(b)) = (cell(EngineKind::Vllm), cell(EngineKind::BanaServe)) else {
+        return 2;
+    };
+    let (vs, bs) = (v.mean("routed_skew"), b.mean("routed_skew"));
+    let (vp, bp) = (v.mean("p99_total_s"), b.mean("p99_total_s"));
+    let wins = vs > bs && vp > bp;
+    println!(
+        "  -> cache-aware skew {vs:.2}x vs load-aware {bs:.2}x; p99 {vp:.2}s vs {bp:.2}s ({})",
+        if wins { "load-aware wins" } else { "NO Fig 2a separation" }
+    );
+    i32::from(!wins)
+}

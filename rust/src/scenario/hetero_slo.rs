@@ -1,0 +1,207 @@
+//! The SLO-driven heterogeneous autoscaling scenario: the bursty trace
+//! served by (a) a static A100-40G fleet provisioned at the trough
+//! (`--base-devices`), (b) a static 40G fleet at the peak
+//! (`--peak-devices`), and (c) an elastic fleet that starts at base,
+//! carries P99-TTFT/TPOT targets (`--ttft-slo-ms`/`--tpot-slo-ms`), and
+//! scales out with a mixed 40G/80G catalog (`--gpu-catalog`) by price/perf
+//! under the SLO gap. Runs all four engines by default (`--engines` to
+//! restrict). Reports P99 TTFT, SLO attainment, total device-cost
+//! (∫ Σ cost dt) and per-spec fleet-size series.
+
+use super::{Agg, EngineAgg, Metric, ScenarioPlan, ScenarioSpec, SummaryCol, Variant};
+use crate::cluster::{self, GpuSpec};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::util::args::Args;
+use crate::util::json::{self, Value};
+use crate::workload::ArrivalProcess;
+
+pub const SPEC: ScenarioSpec = ScenarioSpec {
+    name: "hetero-slo",
+    doc: "SLO-driven elastic fleets with a mixed GPU catalog vs static fleets (all engines)",
+    out_file: "hetero_slo.json",
+    row_metrics: &[
+        Metric { key: "n_requests", get: |c| c.out.report.n_requests as f64 },
+        Metric { key: "p99_ttft_s", get: |c| c.out.report.ttft.p99() },
+        Metric { key: "ttft_attainment", get: |c| c.out.extras.ttft_slo_attainment },
+        Metric { key: "p99_total_s", get: |c| c.out.report.e2e.p99() },
+        Metric { key: "mean_e2e_s", get: |c| c.out.report.e2e.mean() },
+        Metric { key: "throughput_tok_s", get: |c| c.out.report.throughput_tok_s },
+        Metric { key: "makespan_s", get: |c| c.out.report.makespan },
+        Metric { key: "device_cost", get: |c| c.out.extras.device_cost },
+        Metric { key: "peak_devices", get: |c| c.peak_devices },
+        Metric { key: "avg_devices", get: |c| c.avg_devices },
+        Metric { key: "scale_outs", get: |c| c.out.extras.scale_outs as f64 },
+        Metric { key: "drains", get: |c| c.out.extras.drains as f64 },
+    ],
+    summary: &[
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Mean },
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Ci95 },
+        SummaryCol { key: "ttft_attainment", agg: Agg::Mean },
+        SummaryCol { key: "device_cost", agg: Agg::Mean },
+        SummaryCol { key: "throughput_tok_s", agg: Agg::Mean },
+        SummaryCol { key: "peak_devices", agg: Agg::Max },
+        SummaryCol { key: "avg_devices", agg: Agg::Mean },
+    ],
+    extra_keys: &["fleet_size_series", "fleet_spec_series"],
+    build,
+};
+
+fn build(a: &Args) -> Result<ScenarioPlan, String> {
+    let base = a.usize_or("base-devices", 2);
+    let peak = a.usize_or("peak-devices", 6);
+    let rps = a.f64_or("rps", 5.0);
+    let burst_factor = a.f64_or("burst-factor", 5.0);
+    let burst_secs = a.f64_or("burst-secs", 12.0);
+    let period_secs = a.f64_or("period-secs", 48.0);
+    let duration = a.f64_or("duration", 150.0);
+    let model = a.str_or("model", "llama-13b").to_string();
+    let ttft_slo_ms = a.f64_or("ttft-slo-ms", 2000.0);
+    let tpot_slo_ms = a.f64_or("tpot-slo-ms", 0.0);
+    let catalog: Vec<GpuSpec> = {
+        let names = a.list("gpu-catalog");
+        if names.is_empty() {
+            vec![cluster::A100_40G, cluster::A100_80G]
+        } else {
+            let specs: Vec<GpuSpec> = names
+                .iter()
+                .filter_map(|s| {
+                    let g = cluster::gpu_by_name(s);
+                    if g.is_none() {
+                        eprintln!("--gpu-catalog {s}: unknown spec, dropped");
+                    }
+                    g
+                })
+                .collect();
+            if specs.is_empty() {
+                return Err("--gpu-catalog matched no known specs".to_string());
+            }
+            specs
+        }
+    };
+    let engines: Vec<EngineKind> = {
+        let l = a.list("engines");
+        if l.is_empty() {
+            vec![
+                EngineKind::BanaServe,
+                EngineKind::DistServe,
+                EngineKind::Vllm,
+                EngineKind::HfStatic,
+            ]
+        } else {
+            // a typo'd engine name must fail loudly, not shrink the grid
+            // to nothing and let the gate pass vacuously
+            let mut parsed = Vec::new();
+            for s in &l {
+                match EngineKind::parse(s) {
+                    Some(e) => parsed.push(e),
+                    None => return Err(format!("--engines {s}: unknown engine")),
+                }
+            }
+            parsed
+        }
+    };
+    Ok(ScenarioPlan {
+        banner: format!(
+            "hetero-slo: base={base} peak={peak} devices, {rps} rps x{burst_factor} bursts \
+             ({burst_secs}s of every {period_secs}s), {duration}s trace, TTFT SLO \
+             {ttft_slo_ms} ms, catalog [{}]",
+            catalog.iter().map(|g| g.name).collect::<Vec<_>>().join(", ")
+        ),
+        engines,
+        variants: vec![
+            Variant { label: "static-base", devices: base, elastic: false },
+            Variant { label: "static-peak", devices: peak, elastic: false },
+            Variant { label: "elastic-slo", devices: base, elastic: true },
+        ],
+        params: vec![
+            ("ttft_slo_ms", json::num(ttft_slo_ms)),
+            ("tpot_slo_ms", json::num(tpot_slo_ms)),
+            (
+                "catalog",
+                json::arr(catalog.iter().map(|g| json::s(g.name)).collect()),
+            ),
+            ("base_devices", json::num(base as f64)),
+            ("peak_devices", json::num(peak as f64)),
+            ("rps", json::num(rps)),
+            ("burst_factor", json::num(burst_factor)),
+        ],
+        make_cfg: Box::new(move |engine, v, seed| {
+            let mut c = ExperimentConfig::default_for(engine, &model, rps, seed);
+            c.n_devices = v.devices;
+            c.n_prefill = (v.devices / 2).max(1);
+            c.warmup = 0.0;
+            c.workload.duration = duration;
+            c.workload.seed = seed;
+            c.workload.arrivals = ArrivalProcess::Bursty {
+                rps,
+                burst_factor,
+                burst_secs,
+                period_secs,
+            };
+            // SLO attainment is reported for every arm (same target), but
+            // only the elastic arm scales on it
+            c.autoscale.ttft_slo_ms = ttft_slo_ms;
+            c.autoscale.tpot_slo_ms = tpot_slo_ms;
+            if v.elastic {
+                c.autoscale.enabled = true;
+                c.autoscale.min_devices = base;
+                c.autoscale.max_devices = peak;
+                c.gpu_catalog = catalog.clone();
+            }
+            c
+        }),
+        row_extra: Some(|c| {
+            let mut spec_series = json::Obj::new();
+            for (name, pts) in c.out.extras.fleet_spec_series.iter() {
+                spec_series.insert(name.as_str(), super::series_json(pts));
+            }
+            vec![
+                (
+                    "fleet_size_series".to_string(),
+                    super::series_json(&c.out.extras.fleet_size_series),
+                ),
+                ("fleet_spec_series".to_string(), Value::Obj(spec_series)),
+            ]
+        }),
+        gate,
+    })
+}
+
+/// The capability direction for the paper's engine: the elastic SLO fleet
+/// must not be STRICTLY worse than the trough-provisioned static fleet on
+/// either SLO axis (ties are fine — an easy SLO saturates attainment at
+/// 1.0 for both), and must undercut holding the peak fleet on cost.
+fn gate(aggs: &[EngineAgg]) -> i32 {
+    let mut code = 0;
+    for ea in aggs {
+        let cell = |l: &str| {
+            ea.variant(l).map(|v| {
+                (
+                    v.mean("p99_ttft_s"),
+                    v.mean("ttft_attainment"),
+                    v.mean("device_cost"),
+                )
+            })
+        };
+        if let (Some(b), Some(p), Some(e)) =
+            (cell("static-base"), cell("static-peak"), cell("elastic-slo"))
+        {
+            println!(
+                "  -> {}: elastic-slo attain {:.0}% (base {:.0}%) at cost {:.0} \
+                 (static-peak {:.0}, {:.2}x cheaper); p99 ttft {:.2}s vs base {:.2}s",
+                ea.engine.name(),
+                e.1 * 100.0,
+                b.1 * 100.0,
+                e.2,
+                p.2,
+                p.2 / e.2.max(1e-9),
+                e.0,
+                b.0
+            );
+            if ea.engine == EngineKind::BanaServe && (e.0 > b.0 || e.1 < b.1 || e.2 >= p.2) {
+                code = 1;
+            }
+        }
+    }
+    code
+}

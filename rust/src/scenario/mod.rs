@@ -1,0 +1,586 @@
+//! Declarative scenario registry: every multi-engine comparison the CLI
+//! can run (`simulate --scenario <name>`) is a [`ScenarioSpec`] — a name,
+//! a doc line, a cell grid (engine × fleet variant), config builders, the
+//! metric/summary schema and a capability gate — executed by ONE generic
+//! runner ([`run`]) that owns the `--seeds`/`--threads` fan-out over
+//! [`crate::util::parallel::parallel_map`], the per-seed + mean ± 95% CI
+//! table, and the JSON emission under `bench_results/` (`--out-dir`
+//! overrides the directory).
+//!
+//! Adding a scenario is writing a spec (see [`cache_skew`] — well under
+//! 100 lines), not copying a 250-line driver: the runner guarantees the
+//! fixed (engine, variant, seed) merge order, so per-seed JSON stays
+//! byte-identical to a serial `--threads 1` run.
+//!
+//! # JSON output schema
+//!
+//! Every scenario writes `{out_dir}/{out_file}` with the same envelope;
+//! the per-row keys are the spec's `row_metrics` (plus `extra_keys` for
+//! non-scalar fields like series), and the summary keys follow the
+//! `{metric}_{agg}` convention. For example, `hetero-slo` writes:
+//!
+//! ```json
+//! {
+//!   "scenario": "hetero-slo",
+//!   "ttft_slo_ms": 2000.0, "tpot_slo_ms": 0.0,
+//!   "catalog": ["a100-40g", "a100-80g"],
+//!   "base_devices": 2, "peak_devices": 6,
+//!   "seed": 11, "seeds": [11, ...],
+//!   "results": [            // one row per engine x fleet x seed
+//!     {"engine": "banaserve", "fleet": "elastic-slo", "seed": 11,
+//!      "n_requests": 0.0, "p99_ttft_s": 0.0, "ttft_attainment": 0.0,
+//!      "p99_total_s": 0.0, "mean_e2e_s": 0.0, "throughput_tok_s": 0.0,
+//!      "makespan_s": 0.0, "device_cost": 0.0, "peak_devices": 0.0,
+//!      "avg_devices": 0.0, "scale_outs": 0.0, "drains": 0.0,
+//!      "fleet_size_series": [[t, n], ...],
+//!      "fleet_spec_series": {"a100-40g": [[t, n], ...], ...}}
+//!   ],
+//!   "summary": [            // one row per engine x fleet (mean ± ci95)
+//!     {"engine": "...", "fleet": "...", "n_seeds": 5.0,
+//!      "p99_ttft_s_mean": 0.0, "p99_ttft_s_ci95": 0.0,
+//!      "ttft_attainment_mean": 0.0, "device_cost_mean": 0.0,
+//!      "throughput_tok_s_mean": 0.0, "peak_devices_max": 0.0,
+//!      "avg_devices_mean": 0.0}
+//!   ]
+//! }
+//! ```
+//!
+//! (`bursty-autoscale` uses the same envelope with its own param/metric
+//! keys; `device_cost` is ∫ Σ(active `GpuSpec::cost`) dt over the run —
+//! static fleets pay their full size for the whole makespan, elastic
+//! fleets pay what they actually held.)
+
+use crate::bench_support::derive_seeds;
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::engines::{self, ExperimentOutcome};
+use crate::metrics::TimeSeries;
+use crate::util::args::Args;
+use crate::util::json::{self, Value};
+use crate::util::parallel;
+use crate::util::stats::Summary;
+
+pub mod bursty_autoscale;
+pub mod cache_skew;
+pub mod hetero_slo;
+
+/// All registered scenarios, in `--list-scenarios` order.
+pub static REGISTRY: [ScenarioSpec; 3] = [
+    bursty_autoscale::SPEC,
+    hetero_slo::SPEC,
+    cache_skew::SPEC,
+];
+
+pub fn by_name(name: &str) -> Option<&'static ScenarioSpec> {
+    REGISTRY.iter().find(|s| s.name == name)
+}
+
+/// The names known to the dispatcher (error messages, usage).
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.name).collect()
+}
+
+/// `--list-scenarios`: one line per registered scenario.
+pub fn print_list() {
+    println!("registered scenarios (simulate --scenario <name>):");
+    for s in REGISTRY.iter() {
+        println!("  {:<18} {}", s.name, s.doc);
+    }
+}
+
+/// How a summary column aggregates its metric's per-seed values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Agg {
+    Mean,
+    Ci95,
+    Max,
+}
+
+impl Agg {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Agg::Mean => "mean",
+            Agg::Ci95 => "ci95",
+            Agg::Max => "max",
+        }
+    }
+}
+
+/// One scalar per-cell metric: a JSON row key plus its extractor. The
+/// extractor takes `&mut` because percentile reads sort the sample cache.
+pub struct Metric {
+    pub key: &'static str,
+    pub get: fn(&mut CellOutcome) -> f64,
+}
+
+/// One summary-row column: `{key}_{agg}` over the named metric's seeds.
+pub struct SummaryCol {
+    pub key: &'static str,
+    pub agg: Agg,
+}
+
+/// One fleet variant of the cell grid.
+#[derive(Debug, Clone, Copy)]
+pub struct Variant {
+    pub label: &'static str,
+    /// Configured (starting) device count — the floor for the derived
+    /// peak/avg fleet-size stats.
+    pub devices: usize,
+    pub elastic: bool,
+}
+
+/// One completed cell run plus the derived fleet stats every scenario
+/// reports the same way.
+pub struct CellOutcome {
+    pub out: ExperimentOutcome,
+    pub devices: usize,
+    /// Max of the fleet-size series, floored at the configured size.
+    pub peak_devices: f64,
+    /// Time-weighted mean fleet size (configured size for static fleets).
+    pub avg_devices: f64,
+}
+
+/// A declarative scenario. `build` turns CLI flags into a [`ScenarioPlan`]
+/// (the grid + closures); everything else is static schema the runner and
+/// the registry smoke test share.
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    /// One-line description for `--list-scenarios` / the usage screen.
+    pub doc: &'static str,
+    /// File name under the output dir (default `bench_results/`).
+    pub out_file: &'static str,
+    /// Scalar per-seed row metrics, in JSON emission order.
+    pub row_metrics: &'static [Metric],
+    /// Summary-row columns (also the table columns), in emission order.
+    pub summary: &'static [SummaryCol],
+    /// Keys `ScenarioPlan::row_extra` appends to each row (series etc.) —
+    /// declared here so the smoke test can validate them.
+    pub extra_keys: &'static [&'static str],
+    pub build: fn(&Args) -> Result<ScenarioPlan, String>,
+}
+
+impl ScenarioSpec {
+    /// Every key a result row must carry — the smoke-test contract.
+    pub fn row_schema_keys(&self) -> Vec<String> {
+        let mut v: Vec<String> = ["engine", "fleet", "seed"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        v.extend(self.row_metrics.iter().map(|m| m.key.to_string()));
+        v.extend(self.extra_keys.iter().map(|k| k.to_string()));
+        v
+    }
+
+    /// Every key a summary row must carry.
+    pub fn summary_schema_keys(&self) -> Vec<String> {
+        let mut v: Vec<String> = ["engine", "fleet", "n_seeds"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        v.extend(
+            self.summary
+                .iter()
+                .map(|c| format!("{}_{}", c.key, c.agg.suffix())),
+        );
+        v
+    }
+}
+
+/// The runnable form of a spec for one set of CLI flags.
+pub struct ScenarioPlan {
+    /// Scenario-specific banner prefix; the runner appends the seed/thread
+    /// suffix.
+    pub banner: String,
+    pub engines: Vec<EngineKind>,
+    pub variants: Vec<Variant>,
+    /// Scenario-level JSON params, emitted in order right after
+    /// `"scenario"`.
+    pub params: Vec<(&'static str, Value)>,
+    /// Build the config for one (engine, variant, seed) cell. Must be a
+    /// pure function of its arguments — cells run on worker threads in
+    /// arbitrary order.
+    #[allow(clippy::type_complexity)]
+    pub make_cfg: Box<dyn Fn(EngineKind, &Variant, u64) -> ExperimentConfig + Send + Sync>,
+    /// Non-scalar per-row JSON fields (series, count vectors); keys must
+    /// match the spec's `extra_keys`.
+    pub row_extra: Option<fn(&mut CellOutcome) -> Vec<(String, Value)>>,
+    /// Capability gate over the aggregated grid; returns the process exit
+    /// code (0 = capability demonstrated). Prints its own verdict lines.
+    pub gate: fn(&[EngineAgg]) -> i32,
+}
+
+/// Aggregates for one metric across a cell's seeds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stat {
+    pub mean: f64,
+    pub ci95: f64,
+    pub max: f64,
+}
+
+/// Per-variant aggregates for one engine.
+pub struct VariantAgg {
+    pub label: &'static str,
+    stats: Vec<(&'static str, Stat)>,
+}
+
+impl VariantAgg {
+    pub fn stat(&self, key: &str) -> Option<Stat> {
+        self.stats.iter().find(|(k, _)| *k == key).map(|(_, s)| *s)
+    }
+
+    /// Mean of a metric over seeds (0.0 for unknown keys).
+    pub fn mean(&self, key: &str) -> f64 {
+        self.stat(key).map(|s| s.mean).unwrap_or(0.0)
+    }
+
+    pub fn max(&self, key: &str) -> f64 {
+        self.stat(key).map(|s| s.max).unwrap_or(0.0)
+    }
+}
+
+/// One engine's row of the aggregated grid.
+pub struct EngineAgg {
+    pub engine: EngineKind,
+    pub n_seeds: usize,
+    pub variants: Vec<VariantAgg>,
+}
+
+impl EngineAgg {
+    pub fn variant(&self, label: &str) -> Option<&VariantAgg> {
+        self.variants.iter().find(|v| v.label == label)
+    }
+}
+
+/// `[(t, v), ...]` as nested JSON arrays — the step-series row format.
+pub fn series_json(points: &[(f64, f64)]) -> Value {
+    json::arr(
+        points
+            .iter()
+            .map(|&(t, v)| json::arr(vec![json::num(t), json::num(v)]))
+            .collect(),
+    )
+}
+
+/// Table columns: adjacent Mean+Ci95 of the same metric merge into one
+/// "mean±ci" column.
+enum TableCol {
+    MeanCi(&'static str),
+    Single(&'static str, Agg),
+}
+
+fn table_cols(summary: &[SummaryCol]) -> Vec<TableCol> {
+    let mut cols = Vec::new();
+    let mut i = 0;
+    while i < summary.len() {
+        let c = &summary[i];
+        if c.agg == Agg::Mean
+            && i + 1 < summary.len()
+            && summary[i + 1].agg == Agg::Ci95
+            && summary[i + 1].key == c.key
+        {
+            cols.push(TableCol::MeanCi(c.key));
+            i += 2;
+        } else {
+            cols.push(TableCol::Single(c.key, c.agg));
+            i += 1;
+        }
+    }
+    cols
+}
+
+/// Run one scenario end-to-end: fan the (engine × variant × seed) grid
+/// across `--threads` workers, print the per-variant table, apply the
+/// capability gate and write the JSON document. Returns the exit code.
+pub fn run(spec: &ScenarioSpec, a: &Args) -> i32 {
+    let seed = a.u64_or("seed", 11);
+    let n_seeds = a.usize_or("seeds", 1);
+    let threads = a.usize_or("threads", parallel::default_threads());
+    let out_dir = a.str_or("out-dir", "bench_results").to_string();
+    let seeds = derive_seeds(seed, n_seeds);
+    let plan = match (spec.build)(a) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("scenario {}: {e}", spec.name);
+            return 2;
+        }
+    };
+    // everything the runner and the spec understand has been read by now;
+    // a typo'd flag would otherwise silently fall back to its default
+    if let Err(e) = a.reject_unknown() {
+        eprintln!("scenario {}: {e}", spec.name);
+        return 2;
+    }
+    println!(
+        "{}, {} seed(s) from {seed} on {threads} thread(s)",
+        plan.banner,
+        seeds.len()
+    );
+
+    // one cell per engine × fleet variant × seed; every cell owns its
+    // engine and collector, so cells are independent and deterministic —
+    // the fan-out keeps all cores busy and the fixed merge order keeps
+    // the output byte-identical to a serial run
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+    for e_i in 0..plan.engines.len() {
+        for v_i in 0..plan.variants.len() {
+            for s_i in 0..seeds.len() {
+                tasks.push((e_i, v_i, s_i));
+            }
+        }
+    }
+    let make_cfg = &plan.make_cfg;
+    let (engines_list, variants) = (&plan.engines, &plan.variants);
+    let outs = parallel::parallel_map(&tasks, threads, |_, &(e_i, v_i, s_i)| {
+        engines::run_experiment(&make_cfg(engines_list[e_i], &variants[v_i], seeds[s_i]))
+    });
+
+    // table header
+    let cols = table_cols(spec.summary);
+    let mut header = format!("  {:<10} {:<12} {:>6}", "engine", "fleet", "n");
+    for c in &cols {
+        let h = match c {
+            TableCol::MeanCi(k) => format!("{k} (±ci95)"),
+            TableCol::Single(k, Agg::Max) => format!("{k} (max)"),
+            TableCol::Single(k, _) => k.to_string(),
+        };
+        header.push_str(&format!(" {:>18}", truncated(&h, 18)));
+    }
+    println!("{header}");
+
+    let mut rows: Vec<Value> = Vec::new();
+    let mut summary_rows: Vec<Value> = Vec::new();
+    let mut aggs: Vec<EngineAgg> = Vec::new();
+    let mut it = outs.into_iter();
+    for &engine in engines_list.iter() {
+        let mut ea = EngineAgg {
+            engine,
+            n_seeds: seeds.len(),
+            variants: Vec::new(),
+        };
+        for variant in variants.iter() {
+            let mut acc: Vec<Summary> =
+                spec.row_metrics.iter().map(|_| Summary::new()).collect();
+            for &s in seeds.iter() {
+                let out = it.next().expect("cell grid exhausted early");
+                let mut cell = wrap_cell(out, variant.devices);
+                let mut row = json::Obj::new();
+                row.insert("engine", json::s(engine.name()));
+                row.insert("fleet", json::s(variant.label));
+                row.insert("seed", json::num(s as f64));
+                for (m, acc) in spec.row_metrics.iter().zip(acc.iter_mut()) {
+                    let v = (m.get)(&mut cell);
+                    acc.add(v);
+                    row.insert(m.key, json::num(v));
+                }
+                if let Some(extra) = plan.row_extra {
+                    for (k, v) in extra(&mut cell) {
+                        row.insert(k, v);
+                    }
+                }
+                rows.push(Value::Obj(row));
+            }
+            let stats: Vec<(&'static str, Stat)> = spec
+                .row_metrics
+                .iter()
+                .zip(acc.iter())
+                .map(|(m, s)| {
+                    (
+                        m.key,
+                        Stat {
+                            mean: s.mean(),
+                            ci95: s.ci95_half_width(),
+                            max: s.max(),
+                        },
+                    )
+                })
+                .collect();
+            let va = VariantAgg {
+                label: variant.label,
+                stats,
+            };
+
+            // table row
+            let n = va
+                .stat("n_requests")
+                .map(|s| s.mean)
+                .unwrap_or(seeds.len() as f64);
+            let mut line =
+                format!("  {:<10} {:<12} {:>6.0}", engine.name(), variant.label, n);
+            for c in &cols {
+                let cell_txt = match c {
+                    TableCol::MeanCi(k) => {
+                        let s = va.stat(k).unwrap_or(ZERO_STAT);
+                        format!("{:.2}±{:.2}", s.mean, s.ci95)
+                    }
+                    TableCol::Single(k, Agg::Max) => {
+                        format!("{:.2}", va.max(k))
+                    }
+                    TableCol::Single(k, _) => format!("{:.2}", va.mean(k)),
+                };
+                line.push_str(&format!(" {:>18}", cell_txt));
+            }
+            println!("{line}");
+
+            // summary JSON row
+            let mut srow = json::Obj::new();
+            srow.insert("engine", json::s(engine.name()));
+            srow.insert("fleet", json::s(variant.label));
+            srow.insert("n_seeds", json::num(seeds.len() as f64));
+            for c in spec.summary.iter() {
+                let s = va.stat(c.key).unwrap_or(ZERO_STAT);
+                let v = match c.agg {
+                    Agg::Mean => s.mean,
+                    Agg::Ci95 => s.ci95,
+                    Agg::Max => s.max,
+                };
+                srow.insert(format!("{}_{}", c.key, c.agg.suffix()), json::num(v));
+            }
+            summary_rows.push(Value::Obj(srow));
+            ea.variants.push(va);
+        }
+        aggs.push(ea);
+    }
+
+    let code = (plan.gate)(&aggs);
+
+    let mut doc = json::Obj::new();
+    doc.insert("scenario", json::s(spec.name));
+    for (k, v) in plan.params {
+        doc.insert(k, v);
+    }
+    doc.insert("seed", json::num(seed as f64));
+    doc.insert(
+        "seeds",
+        json::arr(seeds.iter().map(|&s| json::num(s as f64)).collect()),
+    );
+    doc.insert("results", json::arr(rows));
+    doc.insert("summary", json::arr(summary_rows));
+    let _ = std::fs::create_dir_all(&out_dir);
+    let path = format!("{out_dir}/{}", spec.out_file);
+    match std::fs::write(&path, json::write(&Value::Obj(doc))) {
+        Ok(()) => println!("  [results written to {path}]"),
+        Err(e) => eprintln!("  [could not write {path}: {e}]"),
+    }
+    code
+}
+
+const ZERO_STAT: Stat = Stat {
+    mean: 0.0,
+    ci95: 0.0,
+    max: 0.0,
+};
+
+/// First `n` CHARS of `s` — byte slicing would panic mid-'±' in a
+/// "(±ci95)" header whose key length happens to put the cut there.
+fn truncated(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        s.chars().take(n).collect()
+    }
+}
+
+/// Derive the shared fleet stats every scenario reports.
+fn wrap_cell(out: ExperimentOutcome, devices: usize) -> CellOutcome {
+    let fleet = TimeSeries {
+        points: out.extras.fleet_size_series.clone(),
+    };
+    let peak_devices = fleet.max_value().max(devices as f64);
+    let avg_devices = if fleet.is_empty() {
+        devices as f64
+    } else {
+        fleet.time_weighted_mean(out.report.makespan)
+    };
+    CellOutcome {
+        out,
+        devices,
+        peak_devices,
+        avg_devices,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let names = names();
+        assert!(names.contains(&"bursty-autoscale"));
+        assert!(names.contains(&"hetero-slo"));
+        assert!(names.contains(&"cache-skew"));
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate scenario names");
+        for n in names {
+            let s = by_name(n).expect("by_name must resolve every listed name");
+            assert_eq!(s.name, n);
+            assert!(!s.doc.is_empty(), "{n} needs a doc line");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn schema_keys_follow_the_naming_convention() {
+        for s in REGISTRY.iter() {
+            let rows = s.row_schema_keys();
+            assert_eq!(&rows[..3], &["engine", "fleet", "seed"]);
+            let sums = s.summary_schema_keys();
+            assert_eq!(&sums[..3], &["engine", "fleet", "n_seeds"]);
+            for c in s.summary.iter() {
+                assert!(
+                    s.row_metrics.iter().any(|m| m.key == c.key),
+                    "{}: summary column {} names no row metric",
+                    s.name,
+                    c.key
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_and_hetero_keep_their_pre_registry_json_schema() {
+        // the registry refactor must not change the two scenarios' wire
+        // formats: these key lists are transcribed from the PR 3/PR 4
+        // hand-written drivers
+        let b = by_name("bursty-autoscale").unwrap();
+        assert_eq!(
+            b.row_schema_keys(),
+            vec![
+                "engine", "fleet", "seed", "n_requests", "p99_total_s",
+                "mean_e2e_s", "throughput_tok_s", "makespan_s",
+                "peak_devices", "avg_devices", "scale_outs", "drains",
+                "fleet_size_series",
+            ]
+        );
+        assert_eq!(
+            b.summary_schema_keys(),
+            vec![
+                "engine", "fleet", "n_seeds", "p99_total_s_mean",
+                "p99_total_s_ci95", "mean_e2e_s_mean", "mean_e2e_s_ci95",
+                "throughput_tok_s_mean", "peak_devices_max",
+                "avg_devices_mean",
+            ]
+        );
+        let h = by_name("hetero-slo").unwrap();
+        assert_eq!(
+            h.row_schema_keys(),
+            vec![
+                "engine", "fleet", "seed", "n_requests", "p99_ttft_s",
+                "ttft_attainment", "p99_total_s", "mean_e2e_s",
+                "throughput_tok_s", "makespan_s", "device_cost",
+                "peak_devices", "avg_devices", "scale_outs", "drains",
+                "fleet_size_series", "fleet_spec_series",
+            ]
+        );
+        assert_eq!(
+            h.summary_schema_keys(),
+            vec![
+                "engine", "fleet", "n_seeds", "p99_ttft_s_mean",
+                "p99_ttft_s_ci95", "ttft_attainment_mean",
+                "device_cost_mean", "throughput_tok_s_mean",
+                "peak_devices_max", "avg_devices_mean",
+            ]
+        );
+    }
+}

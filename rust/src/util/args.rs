@@ -1,14 +1,22 @@
 //! Tiny CLI argument parser (clap is not in the offline registry).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, positional args, and
-//! subcommand extraction. Typed getters with defaults keep call sites short.
+//! subcommand extraction. Typed getters with defaults keep call sites
+//! short. Every getter records the key it read, so after a command has
+//! parsed its flags it can call [`Args::reject_unknown`] and a typo'd
+//! flag (`--ttft-slo-m`) fails loudly instead of silently running the
+//! wrong experiment with the default value.
 
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{BTreeSet, HashMap};
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub positional: Vec<String>,
     flags: HashMap<String, String>,
+    /// Keys any getter has looked up (hit or miss) — shared interior
+    /// state so read-only call sites keep their `&self` signatures.
+    consumed: RefCell<BTreeSet<String>>,
 }
 
 /// Marker value for boolean flags given without a value.
@@ -46,24 +54,29 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
-    /// First positional argument = subcommand; remaining args form a new Args.
-    pub fn subcommand(&self) -> (Option<&str>, Args) {
+    /// First positional argument = subcommand; remaining args form a new
+    /// Args. The name is owned (the old `&'static str` came from a
+    /// `Box::leak` per call — one leaked allocation per subcommand parse).
+    pub fn subcommand(&self) -> (Option<String>, Args) {
         let mut rest = self.clone();
         if rest.positional.is_empty() {
             return (None, rest);
         }
         let cmd = rest.positional.remove(0);
-        (
-            Some(Box::leak(cmd.into_boxed_str()) as &str),
-            rest,
-        )
+        (Some(cmd), rest)
+    }
+
+    fn touch(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
     }
 
     pub fn has(&self, key: &str) -> bool {
+        self.touch(key);
         self.flags.contains_key(key)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
+        self.touch(key);
         self.flags.get(key).map(|v| v.as_str()).filter(|v| *v != FLAG_SET)
     }
 
@@ -84,6 +97,7 @@ impl Args {
     }
 
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.touch(key);
         match self.flags.get(key).map(|s| s.as_str()) {
             None => default,
             Some(FLAG_SET) => true,
@@ -96,6 +110,38 @@ impl Args {
         self.get(key)
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
             .unwrap_or_default()
+    }
+
+    /// Flags that were passed but never read by any getter — with the
+    /// call-sites' parse-everything-up-front convention, these are typos.
+    /// Sorted for stable error messages.
+    pub fn unconsumed(&self) -> Vec<String> {
+        let seen = self.consumed.borrow();
+        let mut left: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !seen.contains(*k))
+            .cloned()
+            .collect();
+        left.sort();
+        left
+    }
+
+    /// Error out on unconsumed flags. Commands call this after reading
+    /// every flag they understand and before doing any work.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let left = self.unconsumed();
+        if left.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown flag(s): {}",
+                left.iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
     }
 }
 
@@ -144,9 +190,36 @@ mod tests {
         let a = parse("simulate --rps 4 trailing");
         assert_eq!(a.positional, vec!["simulate", "trailing"]);
         let (cmd, rest) = a.subcommand();
-        assert_eq!(cmd, Some("simulate"));
+        assert_eq!(cmd.as_deref(), Some("simulate"));
         assert_eq!(rest.positional, vec!["trailing"]);
         assert_eq!(rest.u64_or("rps", 0), 4);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_until_consumed() {
+        let a = parse("--rps 5 --ttft-slo-m 2000 --verbose");
+        assert_eq!(a.f64_or("rps", 0.0), 5.0);
+        // two flags never read: the typo and the unread boolean
+        assert_eq!(a.unconsumed(), vec!["ttft-slo-m", "verbose"]);
+        let err = a.reject_unknown().unwrap_err();
+        assert!(err.contains("--ttft-slo-m"), "{err}");
+        assert!(err.contains("--verbose"), "{err}");
+        // reading them (even as a miss-typed getter) clears the rejection
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.f64_or("ttft-slo-m", 0.0), 2000.0);
+        assert!(a.reject_unknown().is_ok());
+        // a getter miss on an absent key must not create phantom flags
+        assert_eq!(a.get("absent"), None);
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn subcommand_rest_tracks_consumption_independently() {
+        let a = parse("simulate --rps 4 --bogus 1");
+        let (cmd, rest) = a.subcommand();
+        assert_eq!(cmd.as_deref(), Some("simulate"));
+        assert_eq!(rest.u64_or("rps", 0), 4);
+        assert_eq!(rest.unconsumed(), vec!["bogus"]);
     }
 
     #[test]

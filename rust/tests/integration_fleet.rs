@@ -110,6 +110,26 @@ fn behavior_preserved_against_golden_snapshots() {
     }
 }
 
+#[test]
+fn golden_snapshot_covers_every_harness_entry() {
+    // the snapshot (once seeded) must keep one fingerprint per harness
+    // configuration — a refactor that silently drops an engine from the
+    // gate would otherwise pass vacuously
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/engine_reports.json");
+    if !path.exists() {
+        eprintln!("[behavior gate] no golden snapshot yet — seeded by the gate test");
+        return;
+    }
+    let golden = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    for name in ["hft", "vllm", "distserve", "banaserve", "vllm-elastic", "hft-elastic"] {
+        assert!(
+            golden.get(name).is_some(),
+            "golden snapshot lost the '{name}' entry"
+        );
+    }
+}
+
 fn bursty_cfg(kind: EngineKind, devices: usize, elastic: bool, seed: u64) -> ExperimentConfig {
     let mut c = ExperimentConfig::default_for(kind, "llama-13b", 5.0, seed);
     c.n_devices = devices;
@@ -306,15 +326,32 @@ fn hetero_catalog_scale_out_records_mixed_specs_and_costs() {
 #[test]
 fn static_runs_are_deterministic_across_repeats() {
     // the golden gate relies on run-to-run determinism; make it explicit
-    for kind in [EngineKind::Vllm, EngineKind::BanaServe] {
-        let a = run_experiment(&fixed_cfg(kind));
-        let b = run_experiment(&fixed_cfg(kind));
+    // for every configuration the snapshot pins — since the harness
+    // refactor all six entries flow through the same generic
+    // `run_experiment` path, so this also pins that path per engine
+    let configs: Vec<ExperimentConfig> = [
+        EngineKind::HfStatic,
+        EngineKind::Vllm,
+        EngineKind::DistServe,
+        EngineKind::BanaServe,
+    ]
+    .iter()
+    .map(|&k| fixed_cfg(k))
+    .chain([
+        fixed_elastic_cfg(EngineKind::Vllm),
+        fixed_elastic_cfg(EngineKind::HfStatic),
+    ])
+    .collect();
+    for cfg in &configs {
+        let a = run_experiment(cfg);
+        let b = run_experiment(cfg);
         assert_eq!(a.report.n_requests, b.report.n_requests);
         assert!(
             (a.report.throughput_tok_s - b.report.throughput_tok_s).abs() < 1e-9,
             "{:?} nondeterministic",
-            kind
+            cfg.engine
         );
         assert!((a.report.e2e.mean() - b.report.e2e.mean()).abs() < 1e-9);
+        assert_eq!(a.extras.scale_outs, b.extras.scale_outs);
     }
 }

@@ -48,6 +48,9 @@ fn random_loads(g: &mut Gen, n: usize) -> Vec<FleetLoad> {
             queued: g.usize_in(0, 12),
             resident: g.usize_in(0, 24),
             drainable: g.bool(),
+            // a small mixed catalog: costs tie often enough to exercise
+            // the load tie-breaks under the cost-greedy comparator
+            cost: *g.pick(&[1.0, 1.0, 1.5, 2.0]),
         })
         .collect()
 }
@@ -169,8 +172,12 @@ fn drain_never_picks_the_last_active_device_or_a_non_drainable_one() {
     });
 }
 
-/// The PR 2 busy-fraction policy, reproduced verbatim as the reference the
-/// SLO-mode code path must degrade to when no targets are set.
+/// The PR 2 busy-fraction *thresholds*, reproduced verbatim as the
+/// reference the SLO-mode code path must degrade to when no targets are
+/// set. The drain victim comparator is the current cost-greedy one (max
+/// cost, then least loaded) — at uniform cost it reduces to the PR 2
+/// least-loaded order exactly, which `drain_is_cost_greedy_with_mixed_
+/// specs` and the cost-greedy property below pin from both sides.
 fn util_reference(
     cfg: &AutoscaleConfig,
     cooldown_until: &mut f64,
@@ -193,8 +200,9 @@ fn util_reference(
             .iter()
             .filter(|l| l.drainable)
             .min_by(|a, b| {
-                a.busy
-                    .total_cmp(&b.busy)
+                b.cost
+                    .total_cmp(&a.cost)
+                    .then(a.busy.total_cmp(&b.busy))
                     .then(a.resident.cmp(&b.resident))
                     .then(a.idx.cmp(&b.idx))
             })
@@ -205,6 +213,48 @@ fn util_reference(
         }
     }
     ScaleDecision::Hold
+}
+
+#[test]
+fn drain_victim_is_cost_greedy_then_least_loaded() {
+    // whenever the autoscaler decides to drain, the victim must be a
+    // most-expensive drainable device, and among those the least busy
+    // (then fewest-resident, then lowest-idx) one
+    check("autoscaler cost-greedy drain", 60, |g| {
+        let cfg = random_cfg(g, g.bool());
+        let mut a = Autoscaler::new(cfg);
+        let mut now = 0.0;
+        for _ in 0..120 {
+            let n = g.usize_in(2, cfg.max_devices.max(3));
+            let loads = random_loads(g, n);
+            let view = random_view(g);
+            if let ScaleDecision::In { victim } = a.decide(now, &loads, 0, view) {
+                let v = loads.iter().find(|l| l.idx == victim).unwrap();
+                for l in loads.iter().filter(|l| l.drainable) {
+                    prop_assert!(
+                        v.cost >= l.cost,
+                        "victim {victim} (cost {}) passed over the pricier \
+                         drainable device {} (cost {})",
+                        v.cost,
+                        l.idx,
+                        l.cost
+                    );
+                    if l.cost == v.cost && l.idx != v.idx {
+                        prop_assert!(
+                            v.busy <= l.busy,
+                            "victim {victim} (busy {:.2}) is not the least \
+                             busy of the max-cost drainables ({} at {:.2})",
+                            v.busy,
+                            l.idx,
+                            l.busy
+                        );
+                    }
+                }
+            }
+            now += g.f64_in(0.0, 2.0 * cfg.cooldown);
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -1,0 +1,108 @@
+//! Registry smoke gate: every registered scenario must run end-to-end in
+//! a tiny mode (≤2 s of simulated trace, 1 seed) and emit a JSON document
+//! whose rows carry exactly the keys its spec declares — the schema each
+//! spec publishes IS the schema it writes. Capability gates are expected
+//! to fail on a 2 s trace, so the exit code is not asserted here (the CI
+//! workflow runs `cache-skew` at full scale for the capability proof).
+
+use banaserve::scenario::{self, ScenarioSpec};
+use banaserve::util::args::Args;
+use banaserve::util::json;
+use std::path::PathBuf;
+
+fn tiny_args(out_dir: &str) -> Args {
+    Args::parse(
+        format!("--duration 2 --seeds 1 --rps 3 --threads 2 --out-dir {out_dir}")
+            .split_whitespace()
+            .map(String::from),
+    )
+}
+
+fn smoke(spec: &ScenarioSpec) -> json::Value {
+    let out_dir: PathBuf = std::env::temp_dir().join(format!(
+        "banaserve-scenario-smoke-{}-{}",
+        std::process::id(),
+        spec.name
+    ));
+    let dir = out_dir.to_str().expect("utf-8 temp dir");
+    let code = scenario::run(spec, &tiny_args(dir));
+    assert!(
+        code != 2,
+        "{}: tiny-mode run must not fail flag/plan validation",
+        spec.name
+    );
+    let path = out_dir.join(spec.out_file);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: no JSON at {}: {e}", spec.name, path.display()));
+    let doc = json::parse(&text)
+        .unwrap_or_else(|e| panic!("{}: emitted invalid JSON: {e}", spec.name));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    doc
+}
+
+fn validate_schema(spec: &ScenarioSpec, doc: &json::Value) {
+    assert_eq!(
+        doc.get("scenario").and_then(|v| v.as_str()),
+        Some(spec.name),
+        "{}: scenario tag",
+        spec.name
+    );
+    let seeds = doc.get("seeds").and_then(|v| v.as_arr()).expect("seeds array");
+    assert_eq!(seeds.len(), 1, "{}: --seeds 1 must yield one seed", spec.name);
+    let rows = doc.get("results").and_then(|v| v.as_arr()).expect("results array");
+    assert!(!rows.is_empty(), "{}: no result rows", spec.name);
+    for (i, row) in rows.iter().enumerate() {
+        for key in spec.row_schema_keys() {
+            assert!(
+                row.get(&key).is_some(),
+                "{} row {i}: missing declared key '{key}'",
+                spec.name
+            );
+        }
+    }
+    let sums = doc.get("summary").and_then(|v| v.as_arr()).expect("summary array");
+    assert!(!sums.is_empty(), "{}: no summary rows", spec.name);
+    for (i, row) in sums.iter().enumerate() {
+        for key in spec.summary_schema_keys() {
+            assert!(
+                row.get(&key).is_some(),
+                "{} summary row {i}: missing declared key '{key}'",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn every_registered_scenario_runs_tiny_and_matches_its_schema() {
+    for spec in scenario::REGISTRY.iter() {
+        let doc = smoke(spec);
+        validate_schema(spec, &doc);
+    }
+}
+
+#[test]
+fn scenario_rejects_unknown_flags() {
+    let spec = scenario::by_name("bursty-autoscale").unwrap();
+    let a = Args::parse(
+        "--duration 2 --seeds 1 --base-devicess 3"
+            .split_whitespace()
+            .map(String::from),
+    );
+    assert_eq!(scenario::run(spec, &a), 2, "typo'd flag must abort the run");
+}
+
+#[test]
+fn cache_skew_grid_covers_both_routers() {
+    // the new scenario's grid is (vllm, banaserve) × one static variant —
+    // the registry must expose that shape so the CI tiny run exercises
+    // both routers
+    let spec = scenario::by_name("cache-skew").unwrap();
+    let plan = (spec.build)(&tiny_args("unused")).unwrap();
+    let engines: Vec<&str> = plan.engines.iter().map(|e| e.name()).collect();
+    assert_eq!(engines, vec!["vllm", "banaserve"]);
+    assert_eq!(plan.variants.len(), 1);
+    let cfg = (plan.make_cfg)(plan.engines[0], &plan.variants[0], 7);
+    assert!(cfg.workload.prefix.share_prob > 0.5, "needs shared prefixes");
+    assert_eq!(cfg.workload.seed, 7);
+}
