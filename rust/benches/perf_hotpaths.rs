@@ -199,6 +199,7 @@ fn main() {
         .map(|i| match i % 5 {
             0 => FleetEvent::StepDone {
                 worker: (i % 16) as usize,
+                token: i,
             }
             .timer(),
             1 => FleetEvent::KvArrive {
@@ -220,7 +221,9 @@ fn main() {
         for _engine in 0..4 {
             for &t in &timers {
                 match FleetEvent::decode(t) {
-                    Some(FleetEvent::StepDone { worker }) => acc += worker as u64,
+                    Some(FleetEvent::StepDone { worker, token }) => {
+                        acc += worker as u64 ^ token
+                    }
                     Some(FleetEvent::KvArrive { worker, seq }) => {
                         acc += worker as u64 ^ seq
                     }
@@ -229,6 +232,8 @@ fn main() {
                         acc += device as u64 + kind
                     }
                     Some(FleetEvent::Autoscale) => acc += 2,
+                    Some(FleetEvent::Fault) => acc += 3,
+                    Some(FleetEvent::Requeue { seq }) => acc += seq,
                     None => unreachable!(),
                 }
             }

@@ -71,7 +71,32 @@ pub struct Link {
 impl Link {
     /// Time to move `bytes` over this link (Eqs 4, 11, 13).
     pub fn transfer_time(&self, bytes: u64) -> f64 {
+        debug_assert!(
+            self.bandwidth.is_finite() && self.bandwidth > 0.0,
+            "Link bandwidth {} is degenerate — validate() at config time",
+            self.bandwidth
+        );
         self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Reject degenerate link parameters at config time. A zero or
+    /// non-finite bandwidth would make `transfer_time` return inf/NaN,
+    /// which only the event queue's debug_assert would catch (and only in
+    /// debug builds) — so config validation makes it a hard error instead.
+    pub fn validate(&self, name: &str) -> Result<(), String> {
+        if !(self.bandwidth.is_finite() && self.bandwidth > 0.0) {
+            return Err(format!(
+                "{name}: link bandwidth must be finite and > 0 (got {})",
+                self.bandwidth
+            ));
+        }
+        if !(self.latency.is_finite() && self.latency >= 0.0) {
+            return Err(format!(
+                "{name}: link latency must be finite and >= 0 (got {})",
+                self.latency
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -109,11 +134,19 @@ pub enum Role {
 /// been handed back and must never be touched again. The engines own the
 /// Draining→Released transition (they know when residents are gone); the
 /// autoscaler only ever requests Active→Draining and new Active devices.
+///
+/// `Failed` devices (fault injection) have crashed: they admit nothing,
+/// their in-flight work is torn down by the engine, and — unlike
+/// `Released` — they keep billing their cost until recovered, because a
+/// crashed machine in a reservation is still paid for. `is_active()`
+/// is false for Failed, so every routing/admission filter excludes them
+/// automatically.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DeviceState {
     Active,
     Draining,
     Released,
+    Failed,
 }
 
 /// Runtime state of one simulated device.
@@ -134,6 +167,11 @@ pub struct Device {
     pub memory_util: TimeWeighted,
     /// Busy until this sim time (one outstanding step at a time).
     pub busy_until: f64,
+    /// Straggler slowdown multiplier (fault injection): 1.0 = nominal;
+    /// a 3.0 straggler takes 3x the modeled step time. Steps fold
+    /// `straggle_overhead` into their completion timer, so the factor in
+    /// effect at step START governs the whole step.
+    pub slow_factor: f64,
 }
 
 impl Device {
@@ -148,6 +186,7 @@ impl Device {
             compute_util: TimeWeighted::new(),
             memory_util: TimeWeighted::new(),
             busy_until: 0.0,
+            slow_factor: 1.0,
         }
     }
 
@@ -197,6 +236,13 @@ impl Device {
         self.kv_bytes -= bytes;
         self.touch_mem(now);
     }
+
+    /// Extra wall time a straggling device adds on top of a step's
+    /// `nominal` modeled duration. Exactly 0.0 at the nominal factor, so
+    /// healthy fleets (and fault-off runs) see bit-identical timers.
+    pub fn straggle_overhead(&self, nominal: f64) -> f64 {
+        (self.slow_factor - 1.0).max(0.0) * nominal
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -233,6 +279,34 @@ pub fn try_release(devices: &mut [Device], id: usize, residents_clear: bool) -> 
         true
     } else {
         d.state == DeviceState::Released
+    }
+}
+
+/// Crash device `id` (fault injection): Active|Draining → Failed. The
+/// engine must tear down its in-flight work (free KV, re-admit or count
+/// sequences lost) — the state flip only stops admission. Returns true
+/// when the transition happened (no-op on Released/already-Failed).
+pub fn fail_device(devices: &mut [Device], id: usize) -> bool {
+    match devices[id].state {
+        DeviceState::Active | DeviceState::Draining => {
+            devices[id].state = DeviceState::Failed;
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Recover a crashed device: Failed → Active (a device that was Draining
+/// when it crashed rejoins Active — the autoscaler will re-drain it if the
+/// fleet is still oversized). Also resets any straggler slowdown. Returns
+/// true when the transition happened.
+pub fn recover_device(devices: &mut [Device], id: usize) -> bool {
+    if devices[id].state == DeviceState::Failed {
+        devices[id].state = DeviceState::Active;
+        devices[id].slow_factor = 1.0;
+        true
+    } else {
+        false
     }
 }
 
@@ -459,6 +533,65 @@ mod tests {
         assert_eq!(A100_40G.weight, 1.0, "the baseline defines weight 1.0");
         assert_eq!(A100_40G.cost, 1.0, "the baseline defines cost 1.0");
         assert!(A100_80G.weight > 1.0 && A100_80G.cost > 1.0);
+    }
+
+    #[test]
+    fn link_validate_rejects_degenerate_parameters() {
+        assert!(NVLINK.validate("nvlink").is_ok());
+        assert!(NET_200GBPS.validate("net").is_ok());
+        assert!(PCIE_GEN4.validate("pcie").is_ok());
+        let zero_bw = Link { bandwidth: 0.0, latency: 1e-6 };
+        assert!(zero_bw.validate("z").unwrap_err().contains("bandwidth"));
+        let nan_bw = Link { bandwidth: f64::NAN, latency: 1e-6 };
+        assert!(nan_bw.validate("n").is_err());
+        let inf_bw = Link { bandwidth: f64::INFINITY, latency: 1e-6 };
+        assert!(inf_bw.validate("i").is_err());
+        let neg_lat = Link { bandwidth: 1e9, latency: -1.0 };
+        assert!(neg_lat.validate("l").unwrap_err().contains("latency"));
+        let nan_lat = Link { bandwidth: 1e9, latency: f64::NAN };
+        assert!(nan_lat.validate("l").is_err());
+    }
+
+    #[test]
+    fn fail_recover_lifecycle() {
+        let mut devs = vec![
+            Device::new(0, A100_40G, Role::Unified),
+            Device::new(1, A100_40G, Role::Unified),
+        ];
+        assert!(fail_device(&mut devs, 1));
+        assert_eq!(devs[1].state, DeviceState::Failed);
+        assert!(!devs[1].is_active(), "Failed must not admit work");
+        assert_eq!(active_count(&devs), 1);
+        assert!(!fail_device(&mut devs, 1), "double crash is a no-op");
+        // a Failed device cannot be drained or released
+        assert!(!begin_drain(&mut devs, 1));
+        assert!(!try_release(&mut devs, 1, true));
+        assert_eq!(devs[1].state, DeviceState::Failed);
+        devs[1].slow_factor = 3.0;
+        assert!(recover_device(&mut devs, 1));
+        assert_eq!(devs[1].state, DeviceState::Active);
+        assert_eq!(devs[1].slow_factor, 1.0, "recovery clears slowdown");
+        assert!(!recover_device(&mut devs, 1), "recover is Failed-only");
+        // a Draining device that crashes recovers straight to Active
+        assert!(begin_drain(&mut devs, 0));
+        assert!(fail_device(&mut devs, 0));
+        assert!(recover_device(&mut devs, 0));
+        assert_eq!(devs[0].state, DeviceState::Active);
+        // a Released device never fails (it is gone)
+        assert!(begin_drain(&mut devs, 0));
+        assert!(try_release(&mut devs, 0, true));
+        assert!(!fail_device(&mut devs, 0));
+        assert_eq!(devs[0].state, DeviceState::Released);
+    }
+
+    #[test]
+    fn straggle_overhead_is_zero_at_nominal_factor() {
+        let mut d = Device::new(0, A100_40G, Role::Unified);
+        assert_eq!(d.straggle_overhead(0.25), 0.0);
+        d.slow_factor = 3.0;
+        assert!((d.straggle_overhead(0.25) - 0.5).abs() < 1e-12);
+        d.slow_factor = 0.5; // a "fast" factor never shortens a step
+        assert_eq!(d.straggle_overhead(0.25), 0.0);
     }
 
     #[test]

@@ -131,6 +131,92 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Deterministic fault-injection knobs (chaos layer; consumed by
+/// `fault::FaultPlan`). Disabled by default so every existing
+/// configuration keeps its fault-free event stream bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    pub enabled: bool,
+    /// Fleet-wide mean time between fault events (seconds): fault arrival
+    /// times are Exp(1/mtbf) gaps drawn from the seed's "faults" substream.
+    pub crash_mtbf: f64,
+    /// Mean downtime of a crashed device (seconds, Exp-distributed).
+    pub recovery_time: f64,
+    /// Probability a fault event is a straggler slowdown instead of a
+    /// crash.
+    pub straggler_prob: f64,
+    /// Step-time multiplier while straggling (3.0 = steps take 3x).
+    pub straggler_factor: f64,
+    /// Fixed duration of a straggler episode (seconds).
+    pub straggler_secs: f64,
+    /// Crash re-admissions allowed per sequence before it is counted
+    /// `lost` (BanaServe's store rescue also charges a retry — the budget
+    /// bounds work, not the recovery mechanism).
+    pub retry_budget: u32,
+    /// Base re-queue delay after a crash (seconds); doubles per retry
+    /// (exponential backoff). BanaServe's store-rescue path re-routes
+    /// immediately and skips the backoff — recovery is a fetch, not a
+    /// recompute stampede.
+    pub retry_backoff: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            crash_mtbf: 25.0,
+            recovery_time: 10.0,
+            straggler_prob: 0.3,
+            straggler_factor: 3.0,
+            straggler_secs: 5.0,
+            retry_budget: 3,
+            retry_backoff: 0.25,
+        }
+    }
+}
+
+impl FaultConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if !(self.crash_mtbf.is_finite() && self.crash_mtbf > 0.0) {
+            return Err(format!("fault-mtbf must be finite and > 0 (got {})", self.crash_mtbf));
+        }
+        if !(self.recovery_time.is_finite() && self.recovery_time > 0.0) {
+            return Err(format!(
+                "fault-recovery-time must be finite and > 0 (got {})",
+                self.recovery_time
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.straggler_prob) {
+            return Err(format!(
+                "fault-straggler-prob must be in [0, 1] (got {})",
+                self.straggler_prob
+            ));
+        }
+        if !(self.straggler_factor.is_finite() && self.straggler_factor >= 1.0) {
+            return Err(format!(
+                "fault-straggler-factor must be finite and >= 1 (got {})",
+                self.straggler_factor
+            ));
+        }
+        if !(self.straggler_secs.is_finite() && self.straggler_secs > 0.0) {
+            return Err(format!(
+                "fault-straggler-secs must be finite and > 0 (got {})",
+                self.straggler_secs
+            ));
+        }
+        if !(self.retry_backoff.is_finite() && self.retry_backoff >= 0.0) {
+            return Err(format!(
+                "fault-retry-backoff must be finite and >= 0 (got {})",
+                self.retry_backoff
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Complete description of one simulation run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -155,6 +241,8 @@ pub struct ExperimentConfig {
     pub bana: BanaConfig,
     /// Elastic-fleet autoscaling (off = static fleet, the default).
     pub autoscale: AutoscaleConfig,
+    /// Deterministic fault injection (off = no faults, the default).
+    pub fault: FaultConfig,
 }
 
 impl ExperimentConfig {
@@ -180,7 +268,20 @@ impl ExperimentConfig {
             max_batch_seqs: 16,
             bana: BanaConfig::default(),
             autoscale: AutoscaleConfig::default(),
+            fault: FaultConfig::default(),
         }
+    }
+
+    /// Hard-error validation of degenerate parameters: link shapes that
+    /// would produce inf/NaN transfer times (only a debug_assert catches
+    /// those at runtime) and fault-injection knobs. Called by the CLI
+    /// after all overrides are applied, before any work starts.
+    pub fn validate(&self) -> Result<(), String> {
+        crate::cluster::NVLINK.validate("nvlink")?;
+        crate::cluster::NET_200GBPS.validate("net-200gbps")?;
+        crate::cluster::PCIE_GEN4.validate("pcie-gen4")?;
+        self.fault.validate()?;
+        Ok(())
     }
 
     /// Apply CLI overrides (`--rps`, `--duration`, `--devices`, ...).
@@ -259,6 +360,29 @@ impl ExperimentConfig {
         if let Some(x) = a.get("slo-headroom").and_then(|v| v.parse::<f64>().ok()) {
             self.autoscale.slo_headroom = x;
         }
+        self.fault.enabled = a.bool_or("fault-enabled", self.fault.enabled);
+        if let Some(x) = a.get("fault-mtbf").and_then(|v| v.parse::<f64>().ok()) {
+            self.fault.crash_mtbf = x;
+        }
+        if let Some(x) = a.get("fault-recovery-time").and_then(|v| v.parse::<f64>().ok()) {
+            self.fault.recovery_time = x;
+        }
+        if let Some(x) = a.get("fault-straggler-prob").and_then(|v| v.parse::<f64>().ok()) {
+            self.fault.straggler_prob = x;
+        }
+        if let Some(x) = a.get("fault-straggler-factor").and_then(|v| v.parse::<f64>().ok())
+        {
+            self.fault.straggler_factor = x;
+        }
+        if let Some(x) = a.get("fault-straggler-secs").and_then(|v| v.parse::<f64>().ok()) {
+            self.fault.straggler_secs = x;
+        }
+        if let Some(n) = a.get("fault-retry-budget").and_then(|v| v.parse::<u32>().ok()) {
+            self.fault.retry_budget = n;
+        }
+        if let Some(x) = a.get("fault-retry-backoff").and_then(|v| v.parse::<f64>().ok()) {
+            self.fault.retry_backoff = x;
+        }
         if let Some(name) = a.get("gpu") {
             match crate::cluster::gpu_by_name(name) {
                 Some(g) => self.gpu = g,
@@ -332,6 +456,24 @@ impl ExperimentConfig {
                 ("ttft_slo_ms", Value::Num(n)) => self.autoscale.ttft_slo_ms = *n,
                 ("tpot_slo_ms", Value::Num(n)) => self.autoscale.tpot_slo_ms = *n,
                 ("slo_headroom", Value::Num(n)) => self.autoscale.slo_headroom = *n,
+                ("fault_enabled", Value::Bool(b)) => self.fault.enabled = *b,
+                ("fault_mtbf", Value::Num(n)) => self.fault.crash_mtbf = *n,
+                ("fault_recovery_time", Value::Num(n)) => self.fault.recovery_time = *n,
+                ("fault_straggler_prob", Value::Num(n)) => {
+                    self.fault.straggler_prob = *n;
+                }
+                ("fault_straggler_factor", Value::Num(n)) => {
+                    self.fault.straggler_factor = *n;
+                }
+                ("fault_straggler_secs", Value::Num(n)) => {
+                    self.fault.straggler_secs = *n;
+                }
+                ("fault_retry_budget", Value::Num(n)) => {
+                    self.fault.retry_budget = *n as u32;
+                }
+                ("fault_retry_backoff", Value::Num(n)) => {
+                    self.fault.retry_backoff = *n;
+                }
                 ("gpu", Value::Str(s)) => {
                     self.gpu =
                         crate::cluster::gpu_by_name(s).ok_or(format!("bad gpu {s}"))?;
@@ -481,6 +623,70 @@ mod tests {
         c.apply_json(r#"{"prefix_templates":8,"zipf_s":1.1}"#).unwrap();
         assert_eq!(c.workload.prefix.n_templates, 8);
         assert_eq!(c.workload.prefix.zipf_s, 1.1);
+    }
+
+    #[test]
+    fn fault_knobs_default_off_and_parse_from_cli_and_json() {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        assert!(!c.fault.enabled, "fault injection must default off");
+        assert!(c.validate().is_ok());
+        let a = Args::parse(
+            "--fault-enabled true --fault-mtbf 12 --fault-recovery-time 6 \
+             --fault-straggler-prob 0.4 --fault-straggler-factor 2.5 \
+             --fault-straggler-secs 3 --fault-retry-budget 5 \
+             --fault-retry-backoff 0.5"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert!(c.fault.enabled);
+        assert_eq!(c.fault.crash_mtbf, 12.0);
+        assert_eq!(c.fault.recovery_time, 6.0);
+        assert_eq!(c.fault.straggler_prob, 0.4);
+        assert_eq!(c.fault.straggler_factor, 2.5);
+        assert_eq!(c.fault.straggler_secs, 3.0);
+        assert_eq!(c.fault.retry_budget, 5);
+        assert_eq!(c.fault.retry_backoff, 0.5);
+        assert!(c.validate().is_ok());
+
+        let mut j = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        j.apply_json(
+            r#"{"fault_enabled":true,"fault_mtbf":30,"fault_retry_budget":2,
+                "fault_straggler_prob":0.1,"fault_recovery_time":4,
+                "fault_straggler_factor":4,"fault_straggler_secs":2,
+                "fault_retry_backoff":0.1}"#,
+        )
+        .unwrap();
+        assert!(j.fault.enabled);
+        assert_eq!(j.fault.crash_mtbf, 30.0);
+        assert_eq!(j.fault.retry_budget, 2);
+        assert!(j.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_fault_knobs() {
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        c.fault.crash_mtbf = 0.0;
+        assert!(c.validate().is_ok(), "disabled faults skip validation");
+        c.fault.enabled = true;
+        assert!(c.validate().unwrap_err().contains("fault-mtbf"));
+        c.fault.crash_mtbf = 25.0;
+        c.fault.straggler_prob = 1.5;
+        assert!(c.validate().unwrap_err().contains("straggler-prob"));
+        c.fault.straggler_prob = 0.3;
+        c.fault.straggler_factor = 0.5;
+        assert!(c.validate().unwrap_err().contains("straggler-factor"));
+        c.fault.straggler_factor = 3.0;
+        c.fault.retry_backoff = f64::NAN;
+        assert!(c.validate().unwrap_err().contains("retry-backoff"));
+        c.fault.retry_backoff = 0.25;
+        c.fault.recovery_time = f64::INFINITY;
+        assert!(c.validate().unwrap_err().contains("recovery-time"));
+        c.fault.recovery_time = 10.0;
+        c.fault.straggler_secs = -1.0;
+        assert!(c.validate().unwrap_err().contains("straggler-secs"));
+        c.fault.straggler_secs = 5.0;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -18,7 +18,8 @@ pub mod scheduler;
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
-use crate::config::{BanaConfig, ExperimentConfig};
+use crate::config::{BanaConfig, ExperimentConfig, FaultConfig};
+use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::kvcache::{GlobalKvStore, StoreConfig};
 use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency};
@@ -113,6 +114,8 @@ pub struct BanaEngine {
     pub fleet: fleet::FleetSeries,
     pub scale_outs: u64,
     pub drains: u64,
+    fault_cfg: FaultConfig,
+    faults: FaultTimeline,
 }
 
 /// Instantaneous U_d (Eq 32) of one device from its role instances — free
@@ -196,6 +199,13 @@ impl BanaEngine {
             fleet: fleet::FleetSeries::new(),
             scale_outs: 0,
             drains: 0,
+            fault_cfg: cfg.fault,
+            faults: FaultTimeline::new(FaultPlan::generate(
+                &cfg.fault,
+                cfg.workload.seed,
+                cfg.n_devices,
+                cfg.workload.duration,
+            )),
         }
     }
 
@@ -280,8 +290,13 @@ impl BanaEngine {
                 seq.prefill_start = now;
             }
             stall = stall.max(seq.store_stall);
+            let crashed_at = seq.crashed_at;
+            seq.crashed_at = -1.0;
             let kv = common::kv_bytes(self.spec, seq.req.prompt_len + 1);
             seq.kv_on_device = kv;
+            if crashed_at >= 0.0 {
+                self.faults.stats.on_recovered_seq(now, crashed_at);
+            }
             self.devices[i].alloc_kv(now, kv);
         }
         let st = perfmodel::prefill_step(
@@ -292,15 +307,18 @@ impl BanaEngine {
             self.pinsts[i].share,
         );
         common::mark_step_start(&mut self.devices[i], &mut self.pinsts[i], now, &st);
+        let overhead = stall + self.devices[i].straggle_overhead(st.time);
+        self.pinsts[i].step_token += 1;
+        let token = self.pinsts[i].step_token;
         self.pinsts[i].step = Some(StepInfo {
             kind: StepKind::Prefill,
             seqs: ids,
             st,
-            overhead: stall,
+            overhead,
         });
         q.push_after(
-            st.time + stall,
-            FleetEvent::StepDone { worker: i * 2 }.timer(),
+            st.time + overhead,
+            FleetEvent::StepDone { worker: i * 2, token }.timer(),
         );
     }
 
@@ -348,7 +366,10 @@ impl BanaEngine {
             &self.limits,
         );
         common::mark_step_start(&mut self.devices[i], &mut self.dinsts[i], now, &st);
-        let overhead = self.dinsts[i].decode_overhead;
+        let overhead =
+            self.dinsts[i].decode_overhead + self.devices[i].straggle_overhead(st.time);
+        self.dinsts[i].step_token += 1;
+        let token = self.dinsts[i].step_token;
         self.dinsts[i].step = Some(StepInfo {
             kind: StepKind::Decode,
             seqs: ids,
@@ -357,7 +378,7 @@ impl BanaEngine {
         });
         q.push_after(
             st.time + overhead,
-            FleetEvent::StepDone { worker: i * 2 + 1 }.timer(),
+            FleetEvent::StepDone { worker: i * 2 + 1, token }.timer(),
         );
     }
 
@@ -519,7 +540,10 @@ impl BanaEngine {
         self.seqs.remove(sid);
     }
 
-    fn prefill_done(&mut self, i: usize, q: &mut EventQueue) {
+    fn prefill_done(&mut self, i: usize, token: u64, q: &mut EventQueue) {
+        if token != self.pinsts[i].step_token {
+            return; // stale timer from a step cancelled by a crash teardown
+        }
         let now = q.now();
         let step = self.pinsts[i].step.take().expect("prefill step");
         common::mark_step_end(
@@ -587,7 +611,10 @@ impl BanaEngine {
         }
     }
 
-    fn decode_done(&mut self, i: usize, q: &mut EventQueue) {
+    fn decode_done(&mut self, i: usize, token: u64, q: &mut EventQueue) {
+        if token != self.dinsts[i].step_token {
+            return; // stale timer from a step cancelled by a crash teardown
+        }
         let now = q.now();
         let step = self.dinsts[i].step.take().expect("decode step");
         common::mark_step_end(
@@ -943,6 +970,199 @@ impl BanaEngine {
         }
     }
 
+    // --- fault injection ---------------------------------------------------
+
+    /// Route to prefill, falling back to the first ACTIVE prefill-capable
+    /// device when routing refuses (every candidate frozen). Never parks
+    /// work on a failed device — the crash guard keeps one such device up.
+    fn route_prefill_or_park(&mut self, now: f64) -> usize {
+        if let Some(pi) = self.route_prefill(now) {
+            return pi;
+        }
+        (0..self.devices.len())
+            .find(|&j| self.devices[j].is_active() && self.share_prefill[j] > 0.0)
+            .unwrap_or(0)
+    }
+
+    /// Apply all due fault events, then keep exactly one FAULT timer armed
+    /// while events remain and work is in flight.
+    fn service_faults(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        while let Some(ev) = self.faults.pop_due(now) {
+            self.apply_fault(ev, q);
+        }
+        if !self.faults.armed && self.inflight > 0 {
+            if let Some(t) = self.faults.next_time() {
+                self.faults.armed = true;
+                q.push_timer(t.max(now), FleetEvent::Fault.timer());
+            }
+        }
+    }
+
+    fn apply_fault(&mut self, ev: FaultEvent, q: &mut EventQueue) {
+        let now = q.now();
+        match ev.kind {
+            FaultKind::Crash => {
+                // shares move at runtime, so the role guard is dynamic:
+                // never fail the last prefill-capable or decode-capable
+                // active device
+                let dev = ev.device;
+                let others_prefill = (0..self.devices.len()).any(|j| {
+                    j != dev && self.devices[j].is_active() && self.share_prefill[j] > 0.0
+                });
+                let others_decode = (0..self.devices.len()).any(|j| {
+                    j != dev && self.devices[j].is_active() && self.share_prefill[j] < 1.0
+                });
+                let active = self.active_count();
+                if !(others_prefill && others_decode)
+                    || active <= 1
+                    || !crate::cluster::fail_device(&mut self.devices, dev)
+                {
+                    return;
+                }
+                self.faults.stats.on_crash(now, active);
+                self.crash_teardown(dev, q);
+                self.fleet.sample(now, &self.devices);
+            }
+            FaultKind::Recover => {
+                if crate::cluster::recover_device(&mut self.devices, ev.device) {
+                    self.faults
+                        .stats
+                        .on_capacity_gain(now, self.active_count());
+                    self.maybe_start_prefill(ev.device, q);
+                    self.try_admit_global(q);
+                    self.maybe_start_decode(ev.device, q);
+                    self.fleet.sample(now, &self.devices);
+                }
+            }
+            FaultKind::SlowStart => {
+                if self.devices[ev.device].is_active() {
+                    self.devices[ev.device].slow_factor = self.fault_cfg.straggler_factor;
+                    self.faults.stats.stragglers += 1;
+                }
+            }
+            FaultKind::SlowEnd => {
+                if self.devices[ev.device].state != DeviceState::Failed {
+                    self.devices[ev.device].slow_factor = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Tear down a crashed device. Sequences staged in the Global KV Store
+    /// (`pending_decode`) hold no bytes on any GPU and SURVIVE the crash —
+    /// only the device's in-step prefills and resident decodes are torn
+    /// down, and those are rescued through the store (`crash_seq`).
+    fn crash_teardown(&mut self, dev: usize, q: &mut EventQueue) {
+        let now = q.now();
+        // a migration in flight toward this device dies with it; the stale
+        // MIG_DONE timer then applies nothing
+        self.mig[dev] = MigState::default();
+        self.pinsts[dev].step_token += 1;
+        self.dinsts[dev].step_token += 1;
+        let mut victims = std::mem::take(&mut self.stranded_buf);
+        victims.clear();
+        if let Some(step) = self.pinsts[dev].step.take() {
+            victims.extend(step.seqs);
+        }
+        if self.dinsts[dev].step.take().is_some() || !victims.is_empty() {
+            self.devices[dev].compute_util.set(now, 0.0);
+        }
+        victims.extend(self.dinsts[dev].running.drain(..));
+        for &sid in &victims {
+            self.crash_seq(sid, q);
+        }
+        // queued work lost no progress: re-route free of charge
+        victims.clear();
+        victims.extend(self.pinsts[dev].waiting.drain(..));
+        for &sid in &victims {
+            let target = self.route_prefill_or_park(now);
+            self.seqs.seq_mut(sid).instance = target;
+            self.pinsts[target].waiting.push_back(sid);
+        }
+        victims.clear();
+        self.stranded_buf = victims;
+        debug_assert_eq!(self.devices[dev].kv_bytes, 0, "crashed device must hold no KV");
+        // wake sweep: rescued sequences were routed across the fleet
+        for j in 0..self.devices.len() {
+            self.maybe_start_prefill(j, q);
+            self.maybe_start_decode(j, q);
+        }
+        self.try_admit_global(q);
+    }
+
+    /// Fail one in-flight sequence. With the Global Store on, the rescue
+    /// path re-admits IMMEDIATELY through prefill with the store-resident
+    /// prefix skipped (paper §4.2's re-fetch: `lookup` prices the staged
+    /// prefix pull over the link as a stall, not a recompute). Without the
+    /// store it degrades to recompute-from-scratch after backoff, like the
+    /// baselines.
+    fn crash_seq(&mut self, sid: u64, q: &mut EventQueue) {
+        let now = q.now();
+        let seq = self.seqs.seq_mut(sid);
+        let (kv, dev) = (seq.kv_on_device, seq.instance);
+        seq.kv_on_device = 0;
+        seq.ctx = 0;
+        seq.generated = 0;
+        seq.cached = 0;
+        seq.store_stall = 0.0;
+        seq.staged = false;
+        seq.first_token = -1.0;
+        seq.phase = SeqPhase::Waiting;
+        seq.retries += 1;
+        seq.crashed_at = now;
+        let retries = seq.retries;
+        self.devices[dev].free_kv(now, kv);
+        if retries > self.fault_cfg.retry_budget {
+            self.col.lost += 1;
+            self.inflight -= 1;
+            self.seqs.remove(sid);
+            return;
+        }
+        self.faults.stats.retries += 1;
+        if self.use_store {
+            let st_est = perfmodel::prefill_step(
+                self.spec,
+                &self.devices[0].spec,
+                &self.eff,
+                &[perfmodel::PrefillItem {
+                    prompt: self.seqs.seq(sid).req.prompt_len,
+                    cached: 0,
+                }],
+                1.0,
+            );
+            let t_fwd_layer = st_est.time / self.spec.n_layers as f64;
+            let plan = self
+                .store
+                .lookup(&self.seqs.seq(sid).req.cache_tokens, self.spec, t_fwd_layer);
+            let seq = self.seqs.seq_mut(sid);
+            seq.cached = plan.hit_tokens.min(seq.req.prompt_len.saturating_sub(1));
+            seq.store_stall = plan.stall;
+            let target = self.route_prefill_or_park(now);
+            self.seqs.seq_mut(sid).instance = target;
+            self.pinsts[target].waiting.push_back(sid);
+        } else {
+            q.push_after(
+                fault::backoff_delay(&self.fault_cfg, retries),
+                FleetEvent::Requeue { seq: sid }.timer(),
+            );
+        }
+    }
+
+    /// Re-admit a crashed sequence once its backoff expires (store-less
+    /// fallback path only; the store rescue re-admits synchronously).
+    fn requeue(&mut self, sid: u64, q: &mut EventQueue) {
+        match self.seqs.slots().get(sid as usize) {
+            Some(Some(_)) => {}
+            _ => return,
+        }
+        let now = q.now();
+        let target = self.route_prefill_or_park(now);
+        self.seqs.seq_mut(sid).instance = target;
+        self.pinsts[target].waiting.push_back(sid);
+        self.maybe_start_prefill(target, q);
+    }
+
     // --- elastic fleet -----------------------------------------------------
 
     fn active_count(&self) -> usize {
@@ -1274,6 +1494,7 @@ impl crate::engines::EngineHarness for BanaEngine {
         extras.routed_counts = self.routed_counts.clone();
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
+        self.faults.stats.fill_extras(extras);
     }
 
     fn fleet_series(&self) -> &fleet::FleetSeries {
@@ -1343,21 +1564,28 @@ impl Engine for BanaEngine {
             q.push_after(self.bana.control_period, FleetEvent::Control.timer());
         }
         self.maybe_start_prefill(target, q);
+        if self.faults.enabled() {
+            self.service_faults(q);
+        }
     }
 
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
         match FleetEvent::decode(t) {
-            Some(FleetEvent::StepDone { worker }) => {
+            Some(FleetEvent::StepDone { worker, token }) => {
                 let dev = worker / 2;
                 if worker % 2 == 0 {
-                    self.prefill_done(dev, q);
+                    self.prefill_done(dev, token, q);
                 } else {
-                    self.decode_done(dev, q);
+                    self.decode_done(dev, token, q);
                 }
             }
             Some(FleetEvent::KvArrive { seq: sid, .. }) => {
+                // only staged hand-offs consume the arrival; a crash rescue
+                // may have pulled the sequence back to prefill mid-flight
                 if let Some(seq) = self.seqs.get_mut(sid) {
-                    seq.staged = true;
+                    if seq.phase == SeqPhase::Transferring {
+                        seq.staged = true;
+                    }
                 }
                 self.try_admit_global(q);
             }
@@ -1365,6 +1593,11 @@ impl Engine for BanaEngine {
             Some(FleetEvent::MigrationDone { device, kind }) => {
                 self.migration_done(device, kind, q)
             }
+            Some(FleetEvent::Fault) => {
+                self.faults.armed = false;
+                self.service_faults(q);
+            }
+            Some(FleetEvent::Requeue { seq }) => self.requeue(seq, q),
             _ => unreachable!("banaserve got unknown timer {t:?}"),
         }
     }

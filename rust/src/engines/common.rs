@@ -30,6 +30,10 @@ pub mod tags {
     pub const MIG_DONE: u64 = 4;
     /// Elastic-fleet autoscale evaluation tick.
     pub const AUTOSCALE: u64 = 5;
+    /// Next due fault-plan entry (crash / recovery / straggler edge).
+    pub const FAULT: u64 = 6;
+    /// Crash-retry backoff expired for sequence `a`: re-admit it.
+    pub const REQUEUE: u64 = 7;
 }
 
 /// KV page size in tokens used by all simulated paged engines.
@@ -91,6 +95,11 @@ pub struct Seq {
     /// PD handoff: KV staging (store write / direct push) has completed and
     /// the sequence is eligible for decode admission.
     pub staged: bool,
+    /// Times this sequence was re-admitted after a device crash.
+    pub retries: u32,
+    /// Time of the most recent crash that evicted this sequence, or < 0 when
+    /// it is not currently in a recovery path (used for recovery latency).
+    pub crashed_at: f64,
 }
 
 impl Seq {
@@ -108,6 +117,8 @@ impl Seq {
             preemptions: 0,
             store_stall: 0.0,
             staged: false,
+            retries: 0,
+            crashed_at: -1.0,
         }
     }
 
@@ -174,6 +185,9 @@ pub struct InstanceSim {
     pub busy_compute: f64,
     /// Cumulative busy wall seconds.
     pub busy_wall: f64,
+    /// Step token carried by StepDone timers; a crash teardown bumps it so
+    /// the torn-down step's in-flight StepDone is recognized as stale.
+    pub step_token: u64,
 }
 
 impl InstanceSim {
@@ -188,6 +202,7 @@ impl InstanceSim {
             decode_overhead: 0.0,
             busy_compute: 0.0,
             busy_wall: 0.0,
+            step_token: 0,
         }
     }
 

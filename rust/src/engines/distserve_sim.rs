@@ -16,7 +16,8 @@
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, FaultConfig};
+use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency};
 use crate::model::ModelSpec;
@@ -71,6 +72,8 @@ pub struct DistServeEngine {
     pub fleet: fleet::FleetSeries,
     pub scale_outs: u64,
     pub drains: u64,
+    fault_cfg: FaultConfig,
+    faults: FaultTimeline,
 }
 
 impl DistServeEngine {
@@ -133,6 +136,13 @@ impl DistServeEngine {
             fleet: fleet::FleetSeries::new(),
             scale_outs: 0,
             drains: 0,
+            fault_cfg: cfg.fault,
+            faults: FaultTimeline::new(FaultPlan::generate(
+                &cfg.fault,
+                cfg.workload.seed,
+                cfg.n_devices,
+                cfg.workload.duration,
+            )),
         }
     }
 
@@ -236,8 +246,13 @@ impl DistServeEngine {
             if seq.prefill_start < 0.0 {
                 seq.prefill_start = now;
             }
+            let crashed_at = seq.crashed_at;
+            seq.crashed_at = -1.0;
             let kv = common::kv_bytes(self.spec, seq.req.prompt_len + 1);
             seq.kv_on_device = kv;
+            if crashed_at >= 0.0 {
+                self.faults.stats.on_recovered_seq(now, crashed_at);
+            }
             self.devices[dev_idx].alloc_kv(now, kv);
         }
         let st = perfmodel::prefill_step(
@@ -248,13 +263,19 @@ impl DistServeEngine {
             self.prefill[i].share,
         );
         common::mark_step_start(&mut self.devices[dev_idx], &mut self.prefill[i], now, &st);
+        let overhead = self.devices[dev_idx].straggle_overhead(st.time);
+        self.prefill[i].step_token += 1;
+        let token = self.prefill[i].step_token;
         self.prefill[i].step = Some(StepInfo {
             kind: StepKind::Prefill,
             seqs: ids,
             st,
-            overhead: 0.0,
+            overhead,
         });
-        q.push_after(st.time, FleetEvent::StepDone { worker: dev_idx }.timer());
+        q.push_after(
+            st.time + overhead,
+            FleetEvent::StepDone { worker: dev_idx, token }.timer(),
+        );
     }
 
     fn maybe_start_decode(&mut self, di: usize, q: &mut EventQueue) {
@@ -293,7 +314,10 @@ impl DistServeEngine {
         );
         let dev_idx = self.decode[di].device;
         common::mark_step_start(&mut self.devices[dev_idx], &mut self.decode[di], now, &st);
-        let overhead = self.decode[di].decode_overhead;
+        let overhead =
+            self.decode[di].decode_overhead + self.devices[dev_idx].straggle_overhead(st.time);
+        self.decode[di].step_token += 1;
+        let token = self.decode[di].step_token;
         self.decode[di].step = Some(StepInfo {
             kind: StepKind::Decode,
             seqs: ids,
@@ -302,10 +326,7 @@ impl DistServeEngine {
         });
         q.push_after(
             st.time + overhead,
-            FleetEvent::StepDone {
-                worker: self.decode[di].device,
-            }
-            .timer(),
+            FleetEvent::StepDone { worker: dev_idx, token }.timer(),
         );
     }
 
@@ -313,6 +334,15 @@ impl DistServeEngine {
     fn try_admit(&mut self, di: usize, q: &mut EventQueue) {
         let now = q.now();
         while let Some(&sid) = self.admit_queue[di].front() {
+            // a fault teardown may have retired this hand-off while the
+            // blob sat stalled — drop stale entries instead of admitting
+            match self.seqs.slots().get(sid as usize) {
+                Some(Some(s)) if s.phase == SeqPhase::Transferring => {}
+                _ => {
+                    self.admit_queue[di].pop_front();
+                    continue;
+                }
+            }
             let dev_idx = self.decode[di].device;
             let (kv, src_dev) = {
                 let s = self.seqs.seq(sid);
@@ -375,7 +405,10 @@ impl DistServeEngine {
         self.seqs.remove(sid);
     }
 
-    fn prefill_done(&mut self, i: usize, q: &mut EventQueue) {
+    fn prefill_done(&mut self, i: usize, token: u64, q: &mut EventQueue) {
+        if token != self.prefill[i].step_token {
+            return; // stale timer from a step cancelled by a crash teardown
+        }
         let now = q.now();
         let step = self.prefill[i].step.take().expect("prefill step");
         let dev_idx = self.prefill[i].device;
@@ -383,7 +416,7 @@ impl DistServeEngine {
             &mut self.devices[dev_idx],
             &mut self.prefill[i],
             now,
-            step.st.time,
+            step.st.time + step.overhead,
             &step.st,
         );
         for sid in step.seqs {
@@ -418,7 +451,10 @@ impl DistServeEngine {
         }
     }
 
-    fn decode_done(&mut self, di: usize, q: &mut EventQueue) {
+    fn decode_done(&mut self, di: usize, token: u64, q: &mut EventQueue) {
+        if token != self.decode[di].step_token {
+            return; // stale timer from a step cancelled by a crash teardown
+        }
         let now = q.now();
         let step = self.decode[di].step.take().expect("decode step");
         let dev_idx = self.decode[di].device;
@@ -465,6 +501,179 @@ impl DistServeEngine {
         if self.autoscaler.enabled() {
             self.finish_drains(now);
         }
+    }
+
+    // --- fault injection ---------------------------------------------------
+
+    /// Apply all due fault events, then keep exactly one FAULT timer armed
+    /// while events remain and work is in flight.
+    fn service_faults(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        while let Some(ev) = self.faults.pop_due(now) {
+            self.apply_fault(ev, q);
+        }
+        if !self.faults.armed && self.inflight > 0 {
+            if let Some(t) = self.faults.next_time() {
+                self.faults.armed = true;
+                q.push_timer(t.max(now), FleetEvent::Fault.timer());
+            }
+        }
+    }
+
+    fn apply_fault(&mut self, ev: FaultEvent, q: &mut EventQueue) {
+        let now = q.now();
+        match ev.kind {
+            FaultKind::Crash => {
+                // never fail the last active device of a role pool — the
+                // plan's fleet-wide guard cannot see the PD split
+                let role = self.devices[ev.device].role;
+                let role_active = self
+                    .devices
+                    .iter()
+                    .filter(|d| d.is_active() && d.role == role)
+                    .count();
+                let active = crate::cluster::active_count(&self.devices);
+                if role_active <= 1
+                    || active <= 1
+                    || !crate::cluster::fail_device(&mut self.devices, ev.device)
+                {
+                    return;
+                }
+                self.faults.stats.on_crash(now, active);
+                self.crash_teardown(ev.device, q);
+                self.fleet.sample(now, &self.devices);
+            }
+            FaultKind::Recover => {
+                if crate::cluster::recover_device(&mut self.devices, ev.device) {
+                    self.faults
+                        .stats
+                        .on_capacity_gain(now, crate::cluster::active_count(&self.devices));
+                    let slot = self.slot_of_dev[ev.device];
+                    match self.devices[ev.device].role {
+                        Role::Prefill => self.maybe_start_prefill(slot, q),
+                        _ => {
+                            self.try_admit(slot, q);
+                            self.maybe_start_decode(slot, q);
+                        }
+                    }
+                    self.fleet.sample(now, &self.devices);
+                }
+            }
+            FaultKind::SlowStart => {
+                if self.devices[ev.device].is_active() {
+                    self.devices[ev.device].slow_factor = self.fault_cfg.straggler_factor;
+                    self.faults.stats.stragglers += 1;
+                }
+            }
+            FaultKind::SlowEnd => {
+                if self.devices[ev.device].state != DeviceState::Failed {
+                    self.devices[ev.device].slow_factor = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Tear down a crashed device: cancel its in-flight step, free every KV
+    /// byte it held, and push each victim through retry/re-admission.
+    fn crash_teardown(&mut self, dev: usize, q: &mut EventQueue) {
+        let now = q.now();
+        let slot = self.slot_of_dev[dev];
+        let mut victims = std::mem::take(&mut self.stranded_buf);
+        victims.clear();
+        match self.devices[dev].role {
+            Role::Prefill => {
+                self.prefill[slot].step_token += 1;
+                if let Some(step) = self.prefill[slot].step.take() {
+                    self.devices[dev].compute_util.set(now, 0.0);
+                    victims.extend(step.seqs);
+                }
+                // staged KV of handed-off (Transferring) sequences lived in
+                // this device's HBM — those must recompute too
+                for (sid, slot_opt) in self.seqs.slots().iter().enumerate() {
+                    if let Some(s) = slot_opt {
+                        if s.phase == SeqPhase::Transferring && s.instance == dev {
+                            victims.push(sid as u64);
+                        }
+                    }
+                }
+                for &sid in &victims {
+                    self.crash_seq(sid, q);
+                }
+                // queued work lost no progress: re-route free of charge
+                let waiting: Vec<u64> = self.prefill[slot].waiting.drain(..).collect();
+                self.sync_prefill(slot);
+                for sid in waiting {
+                    let pi = self.route_prefill(now);
+                    self.seqs.seq_mut(sid).instance = self.prefill[pi].device;
+                    self.prefill[pi].waiting.push_back(sid);
+                    self.maybe_start_prefill(pi, q);
+                }
+            }
+            _ => {
+                self.decode[slot].step_token += 1;
+                if self.decode[slot].step.take().is_some() {
+                    self.devices[dev].compute_util.set(now, 0.0);
+                }
+                victims.extend(self.decode[slot].running.drain(..));
+                for &sid in &victims {
+                    self.crash_seq(sid, q);
+                }
+                // stalled KV blobs still live on their source prefill
+                // device: move the hand-off target, no retry charged
+                let stalled: Vec<u64> = self.admit_queue[slot].drain(..).collect();
+                for sid in stalled {
+                    let di = self.route_decode(now);
+                    self.admit_queue[di].push_back(sid);
+                    self.try_admit(di, q);
+                    self.maybe_start_decode(di, q);
+                }
+            }
+        }
+        victims.clear();
+        self.stranded_buf = victims;
+        debug_assert_eq!(self.devices[dev].kv_bytes, 0, "crashed device must hold no KV");
+    }
+
+    /// Fail one in-flight sequence: free its KV, reset all progress, and
+    /// either re-queue it after exponential backoff or count it lost.
+    fn crash_seq(&mut self, sid: u64, q: &mut EventQueue) {
+        let now = q.now();
+        let seq = self.seqs.seq_mut(sid);
+        let (kv, dev) = (seq.kv_on_device, seq.instance);
+        seq.kv_on_device = 0;
+        seq.ctx = 0;
+        seq.generated = 0;
+        seq.cached = 0;
+        seq.first_token = -1.0;
+        seq.phase = SeqPhase::Waiting;
+        seq.retries += 1;
+        seq.crashed_at = now;
+        let retries = seq.retries;
+        self.devices[dev].free_kv(now, kv);
+        if retries > self.fault_cfg.retry_budget {
+            self.col.lost += 1;
+            self.inflight -= 1;
+            self.seqs.remove(sid);
+            return;
+        }
+        self.faults.stats.retries += 1;
+        q.push_after(
+            fault::backoff_delay(&self.fault_cfg, retries),
+            FleetEvent::Requeue { seq: sid }.timer(),
+        );
+    }
+
+    /// Re-admit a crashed sequence once its backoff expires (recompute from
+    /// scratch through the prefill pool — DistServe keeps no KV copy).
+    fn requeue(&mut self, sid: u64, q: &mut EventQueue) {
+        match self.seqs.slots().get(sid as usize) {
+            Some(Some(_)) => {}
+            _ => return,
+        }
+        let pi = self.route_prefill(q.now());
+        self.seqs.seq_mut(sid).instance = self.prefill[pi].device;
+        self.prefill[pi].waiting.push_back(sid);
+        self.maybe_start_prefill(pi, q);
     }
 
     // --- elastic fleet -----------------------------------------------------
@@ -713,6 +922,7 @@ impl super::EngineHarness for DistServeEngine {
         extras.kv_transfer_bytes = self.kv_transfer_bytes;
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
+        self.faults.stats.fill_extras(extras);
     }
 
     fn fleet_series(&self) -> &fleet::FleetSeries {
@@ -754,18 +964,27 @@ impl Engine for DistServeEngine {
             q.push_after(self.autoscaler.cfg.window, FleetEvent::Autoscale.timer());
         }
         self.maybe_start_prefill(pi, q);
+        if self.faults.enabled() {
+            self.service_faults(q);
+        }
     }
 
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
         match FleetEvent::decode(t) {
-            Some(FleetEvent::StepDone { worker }) => {
+            Some(FleetEvent::StepDone { worker, token }) => {
                 let slot = self.slot_of_dev[worker];
                 match self.devices[worker].role {
-                    Role::Prefill => self.prefill_done(slot, q),
-                    _ => self.decode_done(slot, q),
+                    Role::Prefill => self.prefill_done(slot, token, q),
+                    _ => self.decode_done(slot, token, q),
                 }
             }
             Some(FleetEvent::KvArrive { worker, seq }) => {
+                // a crash teardown may have retired this hand-off while the
+                // blob was on the wire — drop the stale delivery
+                match self.seqs.slots().get(seq as usize) {
+                    Some(Some(s)) if s.phase == SeqPhase::Transferring => {}
+                    _ => return,
+                }
                 // a transfer targeted while the device was active may land
                 // after it started draining — re-route to an active pool
                 let di = if self.devices[self.decode[worker].device].is_active() {
@@ -778,6 +997,11 @@ impl Engine for DistServeEngine {
                 self.maybe_start_decode(di, q);
             }
             Some(FleetEvent::Autoscale) => self.autoscale_tick(q),
+            Some(FleetEvent::Fault) => {
+                self.faults.armed = false;
+                self.service_faults(q);
+            }
+            Some(FleetEvent::Requeue { seq }) => self.requeue(seq, q),
             _ => unreachable!("distserve got unknown timer {t:?}"),
         }
     }

@@ -528,8 +528,14 @@ impl Router for LoadAware {
 /// but the *kind* dispatch is now typed and shared.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FleetEvent {
-    /// A compute step finished on worker `worker`.
-    StepDone { worker: usize },
+    /// A compute step finished on worker `worker`. `token` is the
+    /// worker's step token at schedule time: a crash teardown bumps the
+    /// worker's token, so a StepDone from a torn-down step arrives with a
+    /// stale token and is dropped instead of completing ghost work. With
+    /// faults off tokens always match (the pre-fault wire format carried a
+    /// constant 0 here — same (tag, a, b) layout, so event streams keep
+    /// their exact (time, seq) order).
+    StepDone { worker: usize, token: u64 },
     /// Staged/transferred KV of sequence `seq` arrived at worker `worker`.
     KvArrive { worker: usize, seq: u64 },
     /// Orchestrator control cycle.
@@ -538,14 +544,18 @@ pub enum FleetEvent {
     MigrationDone { device: usize, kind: u64 },
     /// Elastic-fleet autoscale evaluation tick.
     Autoscale,
+    /// Next due entry of the fault plan (crash/recover/straggler edges).
+    Fault,
+    /// Re-queue sequence `seq` after its crash-retry backoff expired.
+    Requeue { seq: u64 },
 }
 
 impl FleetEvent {
     /// Encode into the raw timer wire format.
     pub fn timer(self) -> Timer {
         match self {
-            FleetEvent::StepDone { worker } => {
-                Timer::with(tags::STEP_DONE, worker as u64, 0)
+            FleetEvent::StepDone { worker, token } => {
+                Timer::with(tags::STEP_DONE, worker as u64, token)
             }
             FleetEvent::KvArrive { worker, seq } => {
                 Timer::with(tags::KV_ARRIVE, worker as u64, seq)
@@ -555,6 +565,8 @@ impl FleetEvent {
                 Timer::with(tags::MIG_DONE, device as u64, kind)
             }
             FleetEvent::Autoscale => Timer::new(tags::AUTOSCALE),
+            FleetEvent::Fault => Timer::new(tags::FAULT),
+            FleetEvent::Requeue { seq } => Timer::with(tags::REQUEUE, seq, 0),
         }
     }
 
@@ -563,6 +575,7 @@ impl FleetEvent {
         match t.tag {
             tags::STEP_DONE => Some(FleetEvent::StepDone {
                 worker: t.a as usize,
+                token: t.b,
             }),
             tags::KV_ARRIVE => Some(FleetEvent::KvArrive {
                 worker: t.a as usize,
@@ -574,6 +587,8 @@ impl FleetEvent {
                 kind: t.b,
             }),
             tags::AUTOSCALE => Some(FleetEvent::Autoscale),
+            tags::FAULT => Some(FleetEvent::Fault),
+            tags::REQUEUE => Some(FleetEvent::Requeue { seq: t.a }),
             _ => None,
         }
     }
@@ -899,11 +914,13 @@ mod tests {
     #[test]
     fn fleet_event_roundtrips_over_timer_wire_format() {
         let evs = [
-            FleetEvent::StepDone { worker: 7 },
+            FleetEvent::StepDone { worker: 7, token: 42 },
             FleetEvent::KvArrive { worker: 3, seq: 99 },
             FleetEvent::Control,
             FleetEvent::MigrationDone { device: 2, kind: 1 },
             FleetEvent::Autoscale,
+            FleetEvent::Fault,
+            FleetEvent::Requeue { seq: 12 },
         ];
         for ev in evs {
             assert_eq!(FleetEvent::decode(ev.timer()), Some(ev));

@@ -12,7 +12,8 @@
 use super::common::{self, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, FaultConfig};
+use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency, PrefillItem};
 use crate::model::ModelSpec;
@@ -65,6 +66,8 @@ pub struct HftEngine {
     pub fleet: fleet::FleetSeries,
     pub scale_outs: u64,
     pub drains: u64,
+    fault_cfg: FaultConfig,
+    faults: FaultTimeline,
 }
 
 impl HftEngine {
@@ -110,6 +113,13 @@ impl HftEngine {
             fleet: fleet::FleetSeries::new(),
             scale_outs: 0,
             drains: 0,
+            fault_cfg: cfg.fault,
+            faults: FaultTimeline::new(FaultPlan::generate(
+                &cfg.fault,
+                cfg.workload.seed,
+                cfg.n_devices,
+                cfg.workload.duration,
+            )),
         }
     }
 
@@ -118,7 +128,7 @@ impl HftEngine {
     /// ACTIVE/unfrozen view (falling back to any active instance while
     /// every one is still spinning up).
     fn route(&mut self, now: f64) -> usize {
-        if self.autoscaler.enabled() {
+        if self.autoscaler.enabled() || self.faults.enabled() {
             {
                 let (book, insts, devices) = (&mut self.book, &self.insts, &self.devices);
                 let loads = book.filtered(|l| {
@@ -213,6 +223,11 @@ impl HftEngine {
             let seq = self.seqs.seq_mut(sid);
             seq.phase = SeqPhase::Prefilling;
             seq.prefill_start = now;
+            if seq.crashed_at >= 0.0 {
+                let crashed_at = seq.crashed_at;
+                seq.crashed_at = -1.0;
+                self.faults.stats.on_recovered_seq(now, crashed_at);
+            }
         }
         let st = perfmodel::prefill_step(
             self.spec,
@@ -232,16 +247,25 @@ impl HftEngine {
             steps_done: 0,
             slot_kv,
         });
+        let overhead = self.devices[dev_idx].straggle_overhead(st.time);
         self.insts[i].step = Some(StepInfo {
             kind: StepKind::Prefill,
             seqs: Vec::new(),
             st,
-            overhead: 0.0,
+            overhead,
         });
-        q.push_after(st.time, FleetEvent::StepDone { worker: i }.timer());
+        self.insts[i].step_token += 1;
+        let token = self.insts[i].step_token;
+        q.push_after(
+            st.time + overhead,
+            FleetEvent::StepDone { worker: i, token }.timer(),
+        );
     }
 
-    fn step_done(&mut self, i: usize, q: &mut EventQueue) {
+    fn step_done(&mut self, i: usize, token: u64, q: &mut EventQueue) {
+        if token != self.insts[i].step_token {
+            return; // stale timer from a batch torn down by a crash
+        }
         let now = q.now();
         let step = self.insts[i].step.take().expect("step");
         let dev_idx = self.insts[i].device;
@@ -249,7 +273,7 @@ impl HftEngine {
             &mut self.devices[dev_idx],
             &mut self.insts[i],
             now,
-            step.st.time,
+            step.st.time + step.overhead,
             &step.st,
         );
         let mut batch = self.batches[i].take().expect("batch");
@@ -304,16 +328,19 @@ impl HftEngine {
                 1.0,
             );
             common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
+            let overhead = self.devices[dev_idx].straggle_overhead(st.time);
             self.insts[i].step = Some(StepInfo {
                 kind: StepKind::StaticDecode,
                 seqs: Vec::new(), // the batch owns the ids (see maybe_start)
                 st,
-                overhead: 0.0,
+                overhead,
             });
             self.batches[i] = Some(batch);
+            self.insts[i].step_token += 1;
+            let token = self.insts[i].step_token;
             q.push_after(
-                self.insts[i].step.as_ref().unwrap().st.time,
-                FleetEvent::StepDone { worker: i }.timer(),
+                self.insts[i].step.as_ref().unwrap().st.time + overhead,
+                FleetEvent::StepDone { worker: i, token }.timer(),
             );
         } else {
             // batch complete: release the reservation, drop seq payloads
@@ -332,6 +359,135 @@ impl HftEngine {
                 self.finish_drains(now);
             }
         }
+    }
+
+    // --- fault injection ---------------------------------------------------
+
+    /// Apply every due fault event, then keep exactly one Fault timer
+    /// armed while events remain and work is in flight (arrivals re-arm).
+    fn service_faults(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        while let Some(ev) = self.faults.pop_due(now) {
+            self.apply_fault(ev, q);
+        }
+        if !self.faults.armed && self.inflight > 0 {
+            if let Some(t) = self.faults.next_time() {
+                self.faults.armed = true;
+                q.push_timer(t.max(now), FleetEvent::Fault.timer());
+            }
+        }
+    }
+
+    fn apply_fault(&mut self, ev: FaultEvent, q: &mut EventQueue) {
+        let now = q.now();
+        match ev.kind {
+            FaultKind::Crash => {
+                let active = crate::cluster::active_count(&self.devices);
+                if active <= 1 || !crate::cluster::fail_device(&mut self.devices, ev.device) {
+                    return;
+                }
+                self.faults.stats.on_crash(now, active);
+                self.crash_teardown(ev.device, q);
+                self.fleet.sample(now, &self.devices);
+                log::debug!("hft crash: instance {} fails at t={now:.2}", ev.device);
+            }
+            FaultKind::Recover => {
+                if crate::cluster::recover_device(&mut self.devices, ev.device) {
+                    let active = crate::cluster::active_count(&self.devices);
+                    self.faults.stats.on_capacity_gain(now, active);
+                    self.fleet.sample(now, &self.devices);
+                    self.maybe_start(ev.device, q);
+                }
+            }
+            FaultKind::SlowStart => {
+                if self.devices[ev.device].state == DeviceState::Active {
+                    self.devices[ev.device].slow_factor = self.fault_cfg.straggler_factor;
+                    self.faults.stats.stragglers += 1;
+                }
+            }
+            FaultKind::SlowEnd => {
+                if self.devices[ev.device].state != DeviceState::Failed {
+                    self.devices[ev.device].slow_factor = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Crash teardown of instance `i`: drop the whole static batch and its
+    /// padded KV reservation, invalidate the in-flight step, re-route the
+    /// waiting queue free of charge, retry-or-lose the batch residents.
+    fn crash_teardown(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        self.insts[i].step_token += 1; // in-flight StepDone becomes stale
+        let dev = self.insts[i].device;
+        if self.insts[i].step.take().is_some() {
+            self.devices[dev].compute_util.set(now, 0.0);
+        }
+        if let Some(batch) = self.batches[i].take() {
+            let reserve = batch.slot_kv * batch.seqs.len() as u64;
+            self.devices[dev].free_kv(now, reserve);
+            for &sid in &batch.seqs {
+                let Some(seq) = self.seqs.get_mut(sid) else {
+                    continue;
+                };
+                if seq.phase == SeqPhase::Finished {
+                    // completed rows only waited for the batch: keep them
+                    self.seqs.remove(sid);
+                    continue;
+                }
+                self.crash_seq(sid, now, q);
+            }
+        }
+        let waiting: Vec<u64> = self.insts[i].waiting.drain(..).collect();
+        let (ql, ls) = (self.insts[i].queue_len(), self.insts[i].load_seqs());
+        self.book.set_queue(i, ql, ls);
+        for sid in waiting {
+            // queued work lost nothing: re-route now, no retry charged
+            self.admit_to_fleet(sid, q);
+        }
+        debug_assert_eq!(self.devices[dev].kv_bytes, 0, "crash must free all KV");
+    }
+
+    /// Retry path of one sequence that lost batch progress.
+    fn crash_seq(&mut self, sid: u64, now: f64, q: &mut EventQueue) {
+        let budget = self.fault_cfg.retry_budget;
+        let seq = self.seqs.seq_mut(sid);
+        // recompute recovery: all progress is gone (KV was the batch
+        // reservation, freed wholesale by the caller)
+        seq.ctx = 0;
+        seq.generated = 0;
+        seq.first_token = -1.0;
+        seq.phase = SeqPhase::Waiting;
+        seq.retries += 1;
+        seq.crashed_at = now;
+        let retries = seq.retries;
+        if retries > budget {
+            self.col.lost += 1;
+            self.inflight -= 1;
+            self.seqs.remove(sid);
+        } else {
+            self.faults.stats.retries += 1;
+            let delay = fault::backoff_delay(&self.fault_cfg, retries);
+            q.push_after(delay, FleetEvent::Requeue { seq: sid }.timer());
+        }
+    }
+
+    /// Route a live sequence to an Active instance and enqueue it.
+    fn admit_to_fleet(&mut self, sid: u64, q: &mut EventQueue) {
+        let now = q.now();
+        let target = self.route(now);
+        self.seqs.seq_mut(sid).instance = self.insts[target].device;
+        self.insts[target].waiting.push_back(sid);
+        self.maybe_start(target, q);
+    }
+
+    /// Requeue timer: the sequence's crash-retry backoff expired.
+    fn requeue(&mut self, sid: u64, q: &mut EventQueue) {
+        match self.seqs.slots().get(sid as usize) {
+            Some(Some(_)) => {}
+            _ => return, // lost/finished in the meantime (defensive)
+        }
+        self.admit_to_fleet(sid, q);
     }
 
     // --- elastic fleet -----------------------------------------------------
@@ -480,6 +636,7 @@ impl super::EngineHarness for HftEngine {
     fn fill_extras(&self, extras: &mut super::EngineExtras) {
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
+        self.faults.stats.fill_extras(extras);
     }
 
     fn fleet_series(&self) -> &fleet::FleetSeries {
@@ -521,12 +678,20 @@ impl Engine for HftEngine {
         self.inflight += 1;
         self.insts[i].waiting.push_back(sid);
         self.maybe_start(i, q);
+        if self.faults.enabled() {
+            self.service_faults(q);
+        }
     }
 
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
         match FleetEvent::decode(t) {
-            Some(FleetEvent::StepDone { worker }) => self.step_done(worker, q),
+            Some(FleetEvent::StepDone { worker, token }) => self.step_done(worker, token, q),
             Some(FleetEvent::Autoscale) => self.autoscale_tick(q),
+            Some(FleetEvent::Fault) => {
+                self.faults.armed = false;
+                self.service_faults(q);
+            }
+            Some(FleetEvent::Requeue { seq }) => self.requeue(seq, q),
             _ => unreachable!("hft got unknown timer {t:?}"),
         }
     }

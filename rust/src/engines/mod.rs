@@ -64,6 +64,49 @@
 //! `cache-skew`, ...) live in [`crate::scenario`] as declarative specs;
 //! their JSON output schemas are documented there.
 //!
+//! # Failure semantics (fault injection)
+//!
+//! With `fault.enabled` (`--fault-enabled`) the experiment seed derives a
+//! deterministic [`crate::fault::FaultPlan`] — crashes, recoveries, and
+//! straggler episodes as first-class sim events, scheduled through
+//! `FleetEvent::Fault` timers. The contract every engine implements:
+//!
+//! * **The plan decides, the engine tears down.** A crash flips the device
+//!   to [`crate::cluster::DeviceState::Failed`] (`fail_device`); the engine
+//!   then frees ALL KV on the dead device, bumps the instance's
+//!   `step_token` (so the torn-down step's in-flight `StepDone` is
+//!   recognized as stale and dropped), and disposes of every sequence that
+//!   was waiting, running, or staged there. Failed devices keep billing
+//!   until recovered — capacity loss is not free.
+//! * **Who re-admits.** Waiting-queue sequences are re-routed to another
+//!   Active instance immediately and charge NO retry (they lost no work).
+//!   Sequences that lost prefill/decode progress charge one retry and
+//!   follow the engine's recovery path: vLLM / HFT / DistServe *recompute*
+//!   — state resets to scratch (`ctx = generated = cached = 0`) and the
+//!   sequence re-enters through a `FleetEvent::Requeue` timer after an
+//!   exponential backoff (`fault.retry_backoff * 2^(retries-1)`); BanaServe
+//!   *rescues* — the Global KV Cache Store still holds the prefix, so the
+//!   sequence re-enters prefill immediately (no backoff) with `cached` set
+//!   from `GlobalKvStore::lookup` and only the store fetch + uncached tail
+//!   to pay.
+//! * **Retry budget.** A sequence whose retry count exceeds
+//!   `fault.retry_budget` is removed and counted `lost` — never silently
+//!   dropped: [`crate::sim::check_conservation`] enforces
+//!   `submitted = completed + dropped + lost + inflight` under arbitrary
+//!   fault schedules.
+//! * **Routing safety.** Routers only ever see Active instances: fault-
+//!   aware paths route over [`fleet::LoadBook`] views filtered by
+//!   `Device::is_active()`, which is false for Draining, Released, AND
+//!   Failed. The autoscaler counts Failed devices as capacity loss and
+//!   scales out replacements.
+//! * **Stragglers** multiply a device's step latency via
+//!   `Device::slow_factor` ([`crate::cluster::Device::straggle_overhead`])
+//!   for a fixed episode; recovery resets the factor.
+//!
+//! The layer is zero-cost when off: no plan, no Fault timers, tokens always
+//! match, and `straggle_overhead` is exactly 0.0 — fixed-seed no-fault
+//! Reports are byte-identical to the pre-fault engine.
+//!
 //! # The experiment harness
 //!
 //! [`EngineHarness`] is the uniform surface every engine exposes to
@@ -117,6 +160,18 @@ pub struct EngineExtras {
     /// Devices added / drained at runtime.
     pub scale_outs: u64,
     pub drains: u64,
+    /// Fault injection: device crashes applied during the run.
+    pub crashes: u64,
+    /// Fault injection: straggler episodes applied during the run.
+    pub stragglers: u64,
+    /// Fault injection: crash re-admissions charged to sequences.
+    pub retries: u64,
+    /// Fault injection: sequences that re-entered service after a crash.
+    pub recovered_seqs: u64,
+    /// Mean crash→re-prefill-start latency over recovered sequences (s).
+    pub recovery_latency_s: f64,
+    /// Mean time from first capacity deficit to active-count refill (s).
+    pub time_to_refill_s: f64,
 }
 
 /// Total device-cost of a run: the recorded cost-rate step series

@@ -11,7 +11,8 @@
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, FaultConfig};
+use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::kvcache::RadixTree;
 use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency};
@@ -98,6 +99,8 @@ pub struct VllmEngine {
     pub fleet: fleet::FleetSeries,
     pub scale_outs: u64,
     pub drains: u64,
+    fault_cfg: FaultConfig,
+    faults: FaultTimeline,
 }
 
 impl VllmEngine {
@@ -174,15 +177,23 @@ impl VllmEngine {
             fleet: fleet::FleetSeries::new(),
             scale_outs: 0,
             drains: 0,
+            fault_cfg: cfg.fault,
+            faults: FaultTimeline::new(FaultPlan::generate(
+                &cfg.fault,
+                cfg.workload.seed,
+                cfg.n_devices,
+                cfg.workload.duration,
+            )),
         }
     }
 
     /// Router: the maintained [`fleet::LoadBook`] slice goes straight to
     /// the fleet router built from `policy` — only the request-specific
     /// cache-hit fractions are written per arrival (they cannot be
-    /// maintained: they depend on the incoming prompt). Elastic fleets
-    /// route over the filtered ACTIVE/unfrozen view instead; static fleets
-    /// keep the zero-copy maintained slice (behavior- and perf-preserving).
+    /// maintained: they depend on the incoming prompt). Elastic and
+    /// fault-injected fleets route over the filtered ACTIVE/unfrozen view
+    /// instead; static no-fault fleets keep the zero-copy maintained slice
+    /// (behavior- and perf-preserving).
     fn route(&mut self, req: &Request, now: f64) -> usize {
         if matches!(self.policy, RouterPolicy::CacheAware { .. }) && self.prefix_caching {
             let plen = req.cache_tokens.len().max(1) as f64;
@@ -191,7 +202,7 @@ impl VllmEngine {
                     self.caches[i].peek_prefix(&req.cache_tokens) as f64 / plen;
             }
         }
-        if self.autoscaler.enabled() {
+        if self.autoscaler.enabled() || self.faults.enabled() {
             {
                 let (book, insts, devices) = (&mut self.book, &self.insts, &self.devices);
                 let loads = book.filtered(|l| {
@@ -247,6 +258,12 @@ impl VllmEngine {
                 if seq.prefill_start < 0.0 {
                     seq.prefill_start = now;
                 }
+                if seq.crashed_at >= 0.0 {
+                    let crashed_at = seq.crashed_at;
+                    seq.crashed_at = -1.0;
+                    self.faults.stats.on_recovered_seq(now, crashed_at);
+                }
+                let seq = self.seqs.seq_mut(sid);
                 let kv = common::kv_bytes(self.spec, seq.req.prompt_len + 1);
                 seq.kv_on_device = kv;
                 self.devices[dev_idx].alloc_kv(now, kv);
@@ -259,13 +276,19 @@ impl VllmEngine {
                 self.insts[i].share,
             );
             common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
+            let overhead = self.devices[dev_idx].straggle_overhead(st.time);
             self.insts[i].step = Some(StepInfo {
                 kind: StepKind::Prefill,
                 seqs: ids,
                 st,
-                overhead: 0.0,
+                overhead,
             });
-            q.push_after(st.time, FleetEvent::StepDone { worker: i }.timer());
+            self.insts[i].step_token += 1;
+            let token = self.insts[i].step_token;
+            q.push_after(
+                st.time + overhead,
+                FleetEvent::StepDone { worker: i, token }.timer(),
+            );
             return;
         }
         // 2) decode
@@ -300,14 +323,20 @@ impl VllmEngine {
         );
         let dev_idx = self.insts[i].device;
         common::mark_step_start(&mut self.devices[dev_idx], &mut self.insts[i], now, &st);
-        let overhead = self.insts[i].decode_overhead;
+        let overhead =
+            self.insts[i].decode_overhead + self.devices[dev_idx].straggle_overhead(st.time);
         self.insts[i].step = Some(StepInfo {
             kind: StepKind::Decode,
             seqs: ids,
             st,
             overhead,
         });
-        q.push_after(st.time + overhead, FleetEvent::StepDone { worker: i }.timer());
+        self.insts[i].step_token += 1;
+        let token = self.insts[i].step_token;
+        q.push_after(
+            st.time + overhead,
+            FleetEvent::StepDone { worker: i, token }.timer(),
+        );
     }
 
     fn preempt(&mut self, i: usize, sid: u64, now: f64) {
@@ -344,7 +373,10 @@ impl VllmEngine {
         self.seqs.remove(sid); // drop payload
     }
 
-    fn step_done(&mut self, i: usize, q: &mut EventQueue) {
+    fn step_done(&mut self, i: usize, token: u64, q: &mut EventQueue) {
+        if token != self.insts[i].step_token {
+            return; // stale timer from a step torn down by a crash
+        }
         let now = q.now();
         let step = self.insts[i].step.take().expect("step in flight");
         let dev_idx = self.insts[i].device;
@@ -421,6 +453,145 @@ impl VllmEngine {
         {
             self.finish_drains(now);
         }
+    }
+
+    // --- fault injection ---------------------------------------------------
+
+    /// Apply every due fault event, then keep exactly one Fault timer
+    /// armed while events remain and work is in flight (arrivals re-arm).
+    fn service_faults(&mut self, q: &mut EventQueue) {
+        let now = q.now();
+        while let Some(ev) = self.faults.pop_due(now) {
+            self.apply_fault(ev, q);
+        }
+        if !self.faults.armed && self.inflight > 0 {
+            if let Some(t) = self.faults.next_time() {
+                self.faults.armed = true;
+                q.push_timer(t.max(now), FleetEvent::Fault.timer());
+            }
+        }
+    }
+
+    fn apply_fault(&mut self, ev: FaultEvent, q: &mut EventQueue) {
+        let now = q.now();
+        match ev.kind {
+            FaultKind::Crash => {
+                // runtime guard: never kill the last active device
+                let active = crate::cluster::active_count(&self.devices);
+                if active <= 1 || !crate::cluster::fail_device(&mut self.devices, ev.device) {
+                    return;
+                }
+                self.faults.stats.on_crash(now, active);
+                self.crash_teardown(ev.device, q);
+                self.fleet.sample(now, &self.devices);
+                log::debug!("vllm crash: instance {} fails at t={now:.2}", ev.device);
+            }
+            FaultKind::Recover => {
+                if crate::cluster::recover_device(&mut self.devices, ev.device) {
+                    let active = crate::cluster::active_count(&self.devices);
+                    self.faults.stats.on_capacity_gain(now, active);
+                    self.fleet.sample(now, &self.devices);
+                    self.maybe_start(ev.device, q);
+                }
+            }
+            FaultKind::SlowStart => {
+                if self.devices[ev.device].state == DeviceState::Active {
+                    self.devices[ev.device].slow_factor = self.fault_cfg.straggler_factor;
+                    self.faults.stats.stragglers += 1;
+                }
+            }
+            FaultKind::SlowEnd => {
+                if self.devices[ev.device].state != DeviceState::Failed {
+                    self.devices[ev.device].slow_factor = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Crash teardown of unified instance `i` (device index == instance
+    /// index for the initial vllm fleet the plan covers): free all KV,
+    /// invalidate the in-flight step, drop the dead prefix cache, re-route
+    /// the waiting queue free of charge, and send every sequence that lost
+    /// work through the retry path.
+    fn crash_teardown(&mut self, i: usize, q: &mut EventQueue) {
+        let now = q.now();
+        self.insts[i].step_token += 1; // in-flight StepDone becomes stale
+        let dev = self.insts[i].device;
+        let mut victims: Vec<u64> = Vec::new();
+        if let Some(step) = self.insts[i].step.take() {
+            self.devices[dev].compute_util.set(now, 0.0);
+            if step.kind == StepKind::Prefill {
+                // decode-step seqs are members of `running`, covered below
+                victims.extend(step.seqs);
+            }
+        }
+        victims.extend(self.insts[i].running.drain(..));
+        for sid in victims {
+            self.crash_seq(sid, now, q);
+        }
+        if self.prefix_caching {
+            self.caches[i] = RadixTree::new(); // cache died with the HBM
+        }
+        let waiting: Vec<u64> = self.insts[i].waiting.drain(..).collect();
+        let (ql, ls) = (self.insts[i].queue_len(), self.insts[i].load_seqs());
+        self.book.set_queue(i, ql, ls);
+        for sid in waiting {
+            // queued work lost nothing: re-route now, no retry charged
+            self.admit_to_fleet(sid, q);
+        }
+        debug_assert_eq!(self.devices[dev].kv_bytes, 0, "crash must free all KV");
+    }
+
+    /// Retry path of one sequence that lost prefill/decode progress.
+    fn crash_seq(&mut self, sid: u64, now: f64, q: &mut EventQueue) {
+        let budget = self.fault_cfg.retry_budget;
+        let seq = self.seqs.seq_mut(sid);
+        let dev = self.insts[seq.instance].device;
+        let kv = seq.kv_on_device;
+        seq.kv_on_device = 0;
+        // recompute recovery: all progress is gone
+        seq.ctx = 0;
+        seq.generated = 0;
+        seq.cached = 0;
+        seq.first_token = -1.0;
+        seq.phase = SeqPhase::Waiting;
+        seq.retries += 1;
+        seq.crashed_at = now;
+        let retries = seq.retries;
+        self.devices[dev].free_kv(now, kv);
+        if retries > budget {
+            self.col.lost += 1;
+            self.inflight -= 1;
+            self.seqs.remove(sid);
+        } else {
+            self.faults.stats.retries += 1;
+            let delay = fault::backoff_delay(&self.fault_cfg, retries);
+            q.push_after(delay, FleetEvent::Requeue { seq: sid }.timer());
+        }
+    }
+
+    /// Route a live sequence to an Active instance and enqueue it (crash
+    /// waiting-queue re-routes and Requeue timer re-admissions).
+    fn admit_to_fleet(&mut self, sid: u64, q: &mut EventQueue) {
+        let now = q.now();
+        let req = self.seqs.seq(sid).req.clone();
+        let target = self.route(&req, now);
+        if self.prefix_caching {
+            let hit = self.caches[target].match_prefix(&req.cache_tokens);
+            self.seqs.seq_mut(sid).cached = hit.min(req.prompt_len.saturating_sub(1));
+        }
+        self.seqs.seq_mut(sid).instance = target;
+        self.insts[target].waiting.push_back(sid);
+        self.maybe_start(target, q);
+    }
+
+    /// Requeue timer: the sequence's crash-retry backoff expired.
+    fn requeue(&mut self, sid: u64, q: &mut EventQueue) {
+        match self.seqs.slots().get(sid as usize) {
+            Some(Some(_)) => {}
+            _ => return, // lost/finished in the meantime (defensive)
+        }
+        self.admit_to_fleet(sid, q);
     }
 
     // --- elastic fleet -----------------------------------------------------
@@ -607,6 +778,7 @@ impl super::EngineHarness for VllmEngine {
         extras.routed_counts = self.routed_counts.clone();
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
+        self.faults.stats.fill_extras(extras);
     }
 
     fn fleet_series(&self) -> &fleet::FleetSeries {
@@ -663,12 +835,20 @@ impl Engine for VllmEngine {
         self.inflight += 1;
         self.insts[i].waiting.push_back(sid);
         self.maybe_start(i, q);
+        if self.faults.enabled() {
+            self.service_faults(q);
+        }
     }
 
     fn on_timer(&mut self, t: Timer, q: &mut EventQueue) {
         match FleetEvent::decode(t) {
-            Some(FleetEvent::StepDone { worker }) => self.step_done(worker, q),
+            Some(FleetEvent::StepDone { worker, token }) => self.step_done(worker, token, q),
             Some(FleetEvent::Autoscale) => self.autoscale_tick(q),
+            Some(FleetEvent::Fault) => {
+                self.faults.armed = false;
+                self.service_faults(q);
+            }
+            Some(FleetEvent::Requeue { seq }) => self.requeue(seq, q),
             _ => unreachable!("vllm engine got unknown timer {t:?}"),
         }
     }

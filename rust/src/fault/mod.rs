@@ -1,0 +1,413 @@
+//! Deterministic fault injection: a seeded [`FaultPlan`] of device
+//! crashes, recoveries, and straggler episodes, plus the [`FaultTimeline`]
+//! cursor engines drain as first-class sim events and the [`FaultStats`]
+//! side channels the robustness scenarios report.
+//!
+//! The plan is derived from the experiment seed through the dedicated
+//! `"faults"` PRNG substream, so the same seed yields a byte-identical
+//! fault schedule for every engine — the `fault-recovery` scenario's
+//! apples-to-apples guarantee: BanaServe and the recompute baselines face
+//! the exact same crashes at the exact same times. With `enabled = false`
+//! the plan is empty and engines schedule no Fault timers at all (the
+//! zero-cost-off property pinned by `tests/fault_injection.rs`).
+//!
+//! How the failures land on an engine is documented in
+//! [`crate::engines`] ("Failure semantics").
+
+use crate::config::FaultConfig;
+use crate::util::prng::Rng;
+
+/// What happens to a device at one fault-plan instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Device dies: `Failed` state, all resident work torn down.
+    Crash,
+    /// Device comes back: `Active`, empty, nominal speed.
+    Recover,
+    /// Straggler episode begins: step latency multiplied by the
+    /// configured factor.
+    SlowStart,
+    /// Straggler episode ends: back to nominal speed.
+    SlowEnd,
+}
+
+/// One scheduled fault event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub device: usize,
+    pub kind: FaultKind,
+}
+
+/// The full, immutable fault schedule of one run, sorted by time.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Generate the schedule for `n_devices` over `[0, horizon)`.
+    ///
+    /// Fleet-wide fault instants are an exponential process with mean gap
+    /// `crash_mtbf`; each instant becomes a straggler episode with
+    /// probability `straggler_prob`, otherwise a crash with an
+    /// exponentially distributed downtime of mean `recovery_time`. Victims
+    /// are drawn uniformly from devices not already down or slowed; a
+    /// crash that would leave fewer than two devices up is skipped (the
+    /// plan never kills the fleet — engines additionally guard their own
+    /// role pools at apply time). Disabled configs yield an empty plan.
+    pub fn generate(cfg: &FaultConfig, seed: u64, n_devices: usize, horizon: f64) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if !cfg.enabled || n_devices == 0 || horizon <= 0.0 {
+            return plan;
+        }
+        let mut rng = Rng::new(seed).substream("faults");
+        let mut down_until = vec![0.0f64; n_devices];
+        let mut slow_until = vec![0.0f64; n_devices];
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / cfg.crash_mtbf);
+            if t >= horizon {
+                break;
+            }
+            let straggle = rng.chance(cfg.straggler_prob);
+            // candidates: devices currently up, and (for stragglers) not
+            // already inside an episode
+            let mut candidates: Vec<usize> = (0..n_devices)
+                .filter(|&d| down_until[d] <= t && (!straggle || slow_until[d] <= t))
+                .collect();
+            if straggle {
+                if candidates.is_empty() {
+                    continue;
+                }
+            } else {
+                // never schedule a crash that leaves < 2 devices up
+                let up = down_until.iter().filter(|&&u| u <= t).count();
+                if up < 3 {
+                    continue;
+                }
+                candidates.retain(|&d| down_until[d] <= t);
+            }
+            let dev = candidates[rng.below(candidates.len() as u64) as usize];
+            if straggle {
+                slow_until[dev] = t + cfg.straggler_secs;
+                plan.events.push(FaultEvent {
+                    t,
+                    device: dev,
+                    kind: FaultKind::SlowStart,
+                });
+                plan.events.push(FaultEvent {
+                    t: t + cfg.straggler_secs,
+                    device: dev,
+                    kind: FaultKind::SlowEnd,
+                });
+            } else {
+                let downtime = rng.exponential(1.0 / cfg.recovery_time);
+                down_until[dev] = t + downtime;
+                plan.events.push(FaultEvent {
+                    t,
+                    device: dev,
+                    kind: FaultKind::Crash,
+                });
+                plan.events.push(FaultEvent {
+                    t: t + downtime,
+                    device: dev,
+                    kind: FaultKind::Recover,
+                });
+            }
+        }
+        // generation pushes recover/slow-end edges out of order; stable
+        // sort by time keeps the push order for exact ties
+        plan.events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        plan
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Exponential re-queue backoff for a sequence on its `retries`-th crash
+/// re-admission: `retry_backoff * 2^(retries-1)`.
+pub fn backoff_delay(cfg: &FaultConfig, retries: u32) -> f64 {
+    cfg.retry_backoff * f64::powi(2.0, retries.saturating_sub(1).min(62) as i32)
+}
+
+/// Fault-side counters an engine accumulates while applying its timeline.
+#[derive(Debug, Clone)]
+pub struct FaultStats {
+    /// Crashes actually applied (a planned crash on an already-Failed or
+    /// Released device is a no-op and not counted).
+    pub crashes: u64,
+    /// Straggler episodes actually applied.
+    pub stragglers: u64,
+    /// Crash re-admissions charged to sequences.
+    pub retries: u64,
+    /// Sequences that re-entered a prefill step after a crash.
+    pub recovered_seqs: u64,
+    /// Σ (re-prefill start − crash time) over recovered sequences.
+    pub recovery_latency_sum: f64,
+    /// Σ (refill time − first deficit time) over completed refills.
+    pub refill_time_sum: f64,
+    /// Capacity deficits that were fully refilled.
+    pub refills: u64,
+    /// Start of the current (unfilled) capacity deficit, < 0 when none.
+    deficit_start: f64,
+    /// Active-device count to restore before the deficit counts as filled.
+    deficit_target: usize,
+}
+
+impl Default for FaultStats {
+    fn default() -> Self {
+        FaultStats {
+            crashes: 0,
+            stragglers: 0,
+            retries: 0,
+            recovered_seqs: 0,
+            recovery_latency_sum: 0.0,
+            refill_time_sum: 0.0,
+            refills: 0,
+            deficit_start: -1.0,
+            deficit_target: 0,
+        }
+    }
+}
+
+impl FaultStats {
+    /// A crash landed; `active_before` is the active count it destroys
+    /// (the refill target when this opens a new deficit).
+    pub fn on_crash(&mut self, now: f64, active_before: usize) {
+        self.crashes += 1;
+        if self.deficit_start < 0.0 {
+            self.deficit_start = now;
+            self.deficit_target = active_before;
+        }
+    }
+
+    /// Capacity came back (recovery or autoscale scale-out finished);
+    /// closes the open deficit once the active count reaches the target.
+    pub fn on_capacity_gain(&mut self, now: f64, active_now: usize) {
+        if self.deficit_start >= 0.0 && active_now >= self.deficit_target {
+            self.refill_time_sum += now - self.deficit_start;
+            self.refills += 1;
+            self.deficit_start = -1.0;
+        }
+    }
+
+    /// A crashed sequence re-entered a prefill step.
+    pub fn on_recovered_seq(&mut self, now: f64, crashed_at: f64) {
+        self.recovered_seqs += 1;
+        self.recovery_latency_sum += (now - crashed_at).max(0.0);
+    }
+
+    pub fn mean_recovery_latency(&self) -> f64 {
+        if self.recovered_seqs == 0 {
+            0.0
+        } else {
+            self.recovery_latency_sum / self.recovered_seqs as f64
+        }
+    }
+
+    pub fn mean_refill_time(&self) -> f64 {
+        if self.refills == 0 {
+            0.0
+        } else {
+            self.refill_time_sum / self.refills as f64
+        }
+    }
+
+    /// Copy the fault counters into the run's extras.
+    pub fn fill_extras(&self, extras: &mut crate::engines::EngineExtras) {
+        extras.crashes = self.crashes;
+        extras.stragglers = self.stragglers;
+        extras.retries = self.retries;
+        extras.recovered_seqs = self.recovered_seqs;
+        extras.recovery_latency_s = self.mean_recovery_latency();
+        extras.time_to_refill_s = self.mean_refill_time();
+    }
+}
+
+/// An engine's cursor over its [`FaultPlan`] plus its [`FaultStats`].
+#[derive(Debug, Default)]
+pub struct FaultTimeline {
+    plan: FaultPlan,
+    cursor: usize,
+    /// Whether a `FleetEvent::Fault` timer is currently scheduled.
+    pub armed: bool,
+    pub stats: FaultStats,
+}
+
+impl FaultTimeline {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultTimeline {
+            plan,
+            ..Default::default()
+        }
+    }
+
+    /// True when the timeline has any events at all (i.e. faults are on).
+    pub fn enabled(&self) -> bool {
+        !self.plan.events.is_empty()
+    }
+
+    /// Time of the next unapplied event.
+    pub fn next_time(&self) -> Option<f64> {
+        self.plan.events.get(self.cursor).map(|e| e.t)
+    }
+
+    /// Pop the next event if it is due at `now`.
+    pub fn pop_due(&mut self, now: f64) -> Option<FaultEvent> {
+        let ev = *self.plan.events.get(self.cursor)?;
+        if ev.t <= now {
+            self.cursor += 1;
+            Some(ev)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_on() -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn disabled_plan_is_empty() {
+        let plan = FaultPlan::generate(&FaultConfig::default(), 7, 8, 1000.0);
+        assert!(plan.is_empty());
+        let tl = FaultTimeline::new(plan);
+        assert!(!tl.enabled());
+        assert_eq!(tl.next_time(), None);
+    }
+
+    #[test]
+    fn same_seed_same_plan_different_seed_differs() {
+        let cfg = cfg_on();
+        let a = FaultPlan::generate(&cfg, 42, 8, 500.0);
+        let b = FaultPlan::generate(&cfg, 42, 8, 500.0);
+        assert!(!a.is_empty(), "500s at mtbf 25 must schedule faults");
+        assert_eq!(a, b, "same seed must replay byte-identically");
+        let c = FaultPlan::generate(&cfg, 43, 8, 500.0);
+        assert_ne!(a, c, "different seed must diverge");
+    }
+
+    #[test]
+    fn plan_is_sorted_and_crashes_pair_with_recoveries() {
+        let plan = FaultPlan::generate(&cfg_on(), 1, 6, 400.0);
+        for w in plan.events.windows(2) {
+            assert!(w[0].t <= w[1].t, "events must be time-sorted");
+        }
+        let crashes = plan
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Crash)
+            .count();
+        let recovers = plan
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Recover)
+            .count();
+        assert_eq!(crashes, recovers, "every crash has a recovery edge");
+        let slow_starts = plan
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::SlowStart)
+            .count();
+        let slow_ends = plan
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::SlowEnd)
+            .count();
+        assert_eq!(slow_starts, slow_ends);
+    }
+
+    #[test]
+    fn plan_never_empties_the_fleet() {
+        // replay each plan's crash/recover edges and track the up-count
+        for seed in 0..20u64 {
+            let mut cfg = cfg_on();
+            cfg.crash_mtbf = 2.0; // aggressive
+            cfg.straggler_prob = 0.0;
+            let plan = FaultPlan::generate(&cfg, seed, 4, 200.0);
+            let mut up = 4i64;
+            for ev in &plan.events {
+                match ev.kind {
+                    FaultKind::Crash => up -= 1,
+                    FaultKind::Recover => up += 1,
+                    _ => {}
+                }
+                assert!(up >= 2, "seed {seed}: fleet dipped below 2 up devices");
+            }
+        }
+    }
+
+    #[test]
+    fn two_device_fleets_get_no_crashes() {
+        let mut cfg = cfg_on();
+        cfg.crash_mtbf = 1.0;
+        cfg.straggler_prob = 0.0;
+        let plan = FaultPlan::generate(&cfg, 3, 2, 300.0);
+        assert!(plan.is_empty(), "crashing either of 2 devices is refused");
+    }
+
+    #[test]
+    fn timeline_pops_in_order_and_only_when_due() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    t: 1.0,
+                    device: 0,
+                    kind: FaultKind::Crash,
+                },
+                FaultEvent {
+                    t: 2.0,
+                    device: 0,
+                    kind: FaultKind::Recover,
+                },
+            ],
+        };
+        let mut tl = FaultTimeline::new(plan);
+        assert!(tl.enabled());
+        assert_eq!(tl.next_time(), Some(1.0));
+        assert_eq!(tl.pop_due(0.5), None);
+        assert_eq!(tl.pop_due(1.0).map(|e| e.kind), Some(FaultKind::Crash));
+        assert_eq!(tl.next_time(), Some(2.0));
+        assert_eq!(tl.pop_due(5.0).map(|e| e.kind), Some(FaultKind::Recover));
+        assert_eq!(tl.pop_due(5.0), None);
+        assert_eq!(tl.next_time(), None);
+    }
+
+    #[test]
+    fn backoff_doubles_per_retry() {
+        let cfg = FaultConfig::default();
+        let b1 = backoff_delay(&cfg, 1);
+        let b2 = backoff_delay(&cfg, 2);
+        let b3 = backoff_delay(&cfg, 3);
+        assert!((b1 - cfg.retry_backoff).abs() < 1e-12);
+        assert!((b2 - 2.0 * b1).abs() < 1e-12);
+        assert!((b3 - 4.0 * b1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_track_deficit_refill_and_recovery_latency() {
+        let mut s = FaultStats::default();
+        s.on_crash(10.0, 4);
+        s.on_crash(11.0, 3); // deeper deficit keeps the original target
+        assert_eq!(s.crashes, 2);
+        s.on_capacity_gain(12.0, 3); // not yet back to 4
+        assert_eq!(s.refills, 0);
+        s.on_capacity_gain(15.0, 4);
+        assert_eq!(s.refills, 1);
+        assert!((s.mean_refill_time() - 5.0).abs() < 1e-12);
+        s.on_recovered_seq(20.0, 18.0);
+        s.on_recovered_seq(21.0, 20.0);
+        assert!((s.mean_recovery_latency() - 1.5).abs() < 1e-12);
+    }
+}

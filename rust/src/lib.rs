@@ -32,6 +32,7 @@ pub mod config;
 #[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod engines;
+pub mod fault;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

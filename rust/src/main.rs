@@ -12,7 +12,8 @@
 //!                     registry. Scenario specs live in
 //!                     `rust/src/scenario/`; the registered names and doc
 //!                     lines below are printed from the registry itself:
-//!                       bursty-autoscale, hetero-slo, cache-skew
+//!                       bursty-autoscale, hetero-slo, cache-skew,
+//!                       fault-recovery
 //!   sweep             RPS sweep for one engine/profile
 //!   figure <id>       regenerate a paper figure (1|2a|2b|6|7|8|9|10|11)
 //!   migrate-demo      show Alg 1 decisions on a synthetic imbalance
@@ -25,12 +26,17 @@
 //! --config <file.json> --autoscale --autoscale-min --autoscale-max
 //! --scale-out-util --scale-in-util --autoscale-cooldown
 //! --autoscale-window --ttft-slo-ms --tpot-slo-ms --slo-headroom
-//! --gpu <name> --gpu-catalog <name,name>; sweep and every scenario add
+//! --gpu <name> --gpu-catalog <name,name>; fault injection (off by
+//! default, deterministic per --seed): --fault-enabled --fault-mtbf
+//! --fault-recovery-time --fault-straggler-prob --fault-straggler-factor
+//! --fault-straggler-secs --fault-retry-budget --fault-retry-backoff
+//! (JSON keys: fault_enabled, fault_mtbf, ...); sweep and every scenario add
 //! --seeds N (N deterministic seeds derived from --seed; 5 = the paper's
 //! CI methodology) and --threads (parallel cells, default: all cores);
 //! scenarios also take --out-dir plus their own flags (e.g.
 //! --base-devices --peak-devices --burst-factor --burst-secs
-//! --period-secs, hetero-slo --engines, cache-skew --devices).
+//! --period-secs, hetero-slo --engines, cache-skew --devices,
+//! fault-recovery --crash-mtbf --recovery-time --retry-budget).
 //! Unknown flags are rejected: a typo'd flag aborts the command instead
 //! of silently running with the default value.
 
@@ -97,6 +103,12 @@ fn build_config(a: &Args) -> ExperimentConfig {
         cfg.apply_json(&text).expect("applying --config file");
     }
     cfg.apply_args(a);
+    // degenerate link shapes / fault knobs are a hard error up front, not
+    // a NaN-timer panic mid-run
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid config: {e}");
+        std::process::exit(2);
+    }
     cfg
 }
 

@@ -49,8 +49,12 @@ impl RequestRecord {
 pub struct Collector {
     pub records: Vec<RequestRecord>,
     /// Requests rejected / dropped (admission control) — counted so the
-    /// conservation property (submitted = done + dropped + inflight) holds.
+    /// conservation property (submitted = done + dropped + lost + inflight)
+    /// holds.
     pub dropped: u64,
+    /// Requests torn down by device crashes more times than the retry
+    /// budget allows. Always 0 with fault injection off.
+    pub lost: u64,
     /// Measurement window start (after warm-up).
     pub window_start: f64,
 }
@@ -130,6 +134,7 @@ impl Collector {
         Report {
             n_requests: n,
             dropped: self.dropped,
+            lost: self.lost,
             output_tokens: out_tokens,
             input_tokens: in_tokens,
             cached_tokens: cached,
@@ -148,6 +153,8 @@ impl Collector {
 pub struct Report {
     pub n_requests: u64,
     pub dropped: u64,
+    /// Crash-lost requests (retry budget exceeded); 0 with faults off.
+    pub lost: u64,
     pub output_tokens: u64,
     pub input_tokens: u64,
     pub cached_tokens: u64,
@@ -169,7 +176,7 @@ impl Report {
     }
 
     pub fn one_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "n={} tput={:.1} tok/s total={:.2}s ttft(mean)={:.3}s tpot(mean)={:.4}s e2e(mean)={:.3}s drop={}",
             self.n_requests,
             self.throughput_tok_s,
@@ -178,7 +185,11 @@ impl Report {
             self.tpot.mean(),
             self.e2e.mean(),
             self.dropped,
-        )
+        );
+        if self.lost > 0 {
+            line.push_str(&format!(" lost={}", self.lost));
+        }
+        line
     }
 }
 

@@ -1,0 +1,125 @@
+//! Fault injection as a first-class scenario: all four engines run the
+//! SAME seeded crash/straggler schedule (the [`crate::fault::FaultPlan`]
+//! is a pure function of `(fault cfg, seed, devices, duration)`, so every
+//! engine sees identical fault arrival times). The baselines recover by
+//! recompute-from-scratch with exponential backoff; BanaServe rescues
+//! crashed sequences through the Global KV Cache Store — the staged
+//! prefix survives off-GPU and re-admission skips the store-resident
+//! part of prefill. The gate requires BanaServe to beat the
+//! architecture-matched recompute baseline (DistServe) on BOTH goodput
+//! and P99 TTFT under the equal crash schedule.
+
+use super::{Agg, EngineAgg, Metric, ScenarioPlan, ScenarioSpec, SummaryCol, Variant};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::util::args::Args;
+use crate::util::json;
+use crate::workload::ArrivalProcess;
+
+pub const SPEC: ScenarioSpec = ScenarioSpec {
+    name: "fault-recovery",
+    doc: "store-rescue (BanaServe) vs recompute retry under an equal seeded crash schedule",
+    out_file: "fault_recovery.json",
+    row_metrics: &[
+        Metric { key: "n_requests", get: |c| c.out.report.n_requests as f64 },
+        Metric {
+            key: "goodput_rps",
+            get: |c| c.out.report.n_requests as f64 / c.out.report.makespan.max(1e-9),
+        },
+        Metric { key: "lost", get: |c| c.out.report.lost as f64 },
+        Metric { key: "retries", get: |c| c.out.extras.retries as f64 },
+        Metric { key: "p99_ttft_s", get: |c| c.out.report.ttft.p99() },
+        Metric { key: "mean_e2e_s", get: |c| c.out.report.e2e.mean() },
+        Metric { key: "throughput_tok_s", get: |c| c.out.report.throughput_tok_s },
+        Metric { key: "makespan_s", get: |c| c.out.report.makespan },
+        Metric { key: "crashes", get: |c| c.out.extras.crashes as f64 },
+        Metric { key: "recovery_latency_s", get: |c| c.out.extras.recovery_latency_s },
+        Metric { key: "time_to_refill_s", get: |c| c.out.extras.time_to_refill_s },
+    ],
+    summary: &[
+        SummaryCol { key: "goodput_rps", agg: Agg::Mean },
+        SummaryCol { key: "goodput_rps", agg: Agg::Ci95 },
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Mean },
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Ci95 },
+        SummaryCol { key: "lost", agg: Agg::Mean },
+        SummaryCol { key: "retries", agg: Agg::Mean },
+        SummaryCol { key: "crashes", agg: Agg::Mean },
+    ],
+    extra_keys: &[],
+    build,
+};
+
+fn build(a: &Args) -> Result<ScenarioPlan, String> {
+    let devices = a.usize_or("devices", 6);
+    let rps = a.f64_or("rps", 8.0);
+    let duration = a.f64_or("duration", 60.0);
+    let crash_mtbf = a.f64_or("crash-mtbf", 12.0);
+    let recovery_time = a.f64_or("recovery-time", 8.0);
+    let retry_budget = a.u64_or("retry-budget", 3) as u32;
+    let share_prob = a.f64_or("share-prob", 0.6);
+    let model = a.str_or("model", "llama-13b").to_string();
+    Ok(ScenarioPlan {
+        banner: format!(
+            "fault-recovery: {devices} devices, {rps} rps, {duration}s, \
+             crash MTBF {crash_mtbf}s, recovery {recovery_time}s, \
+             retry budget {retry_budget}"
+        ),
+        engines: vec![
+            EngineKind::HfStatic,
+            EngineKind::Vllm,
+            EngineKind::DistServe,
+            EngineKind::BanaServe,
+        ],
+        variants: vec![Variant { label: "faulty", devices, elastic: false }],
+        params: vec![
+            ("devices", json::num(devices as f64)),
+            ("rps", json::num(rps)),
+            ("crash_mtbf_s", json::num(crash_mtbf)),
+            ("recovery_time_s", json::num(recovery_time)),
+            ("retry_budget", json::num(retry_budget as f64)),
+        ],
+        make_cfg: Box::new(move |engine, v, seed| {
+            let mut c = ExperimentConfig::default_for(engine, &model, rps, seed);
+            c.n_devices = v.devices;
+            c.n_prefill = (v.devices / 2).max(1);
+            c.warmup = 0.0;
+            c.workload.duration = duration;
+            c.workload.seed = seed;
+            c.workload.arrivals = ArrivalProcess::Poisson { rps };
+            // a moderate shared-prefix mix: crashes then hit sequences the
+            // Global Store has already staged, which is exactly the rescue
+            // the paper's unified cache makes possible
+            c.workload.prefix.share_prob = share_prob;
+            c.fault.enabled = true;
+            c.fault.crash_mtbf = crash_mtbf;
+            c.fault.recovery_time = recovery_time;
+            c.fault.retry_budget = retry_budget;
+            c
+        }),
+        row_extra: None,
+        gate,
+    })
+}
+
+/// Gate: under the identical crash schedule, BanaServe's store rescue
+/// must deliver MORE goodput AND a LOWER P99 TTFT than DistServe's
+/// recompute-from-scratch retry.
+fn gate(aggs: &[EngineAgg]) -> i32 {
+    let cell = |e: EngineKind| {
+        aggs.iter()
+            .find(|x| x.engine == e)
+            .and_then(|x| x.variant("faulty"))
+    };
+    let (Some(d), Some(b)) = (cell(EngineKind::DistServe), cell(EngineKind::BanaServe))
+    else {
+        return 2;
+    };
+    let (dg, bg) = (d.mean("goodput_rps"), b.mean("goodput_rps"));
+    let (dp, bp) = (d.mean("p99_ttft_s"), b.mean("p99_ttft_s"));
+    let wins = bg > dg && bp < dp;
+    println!(
+        "  -> goodput: store-rescue {bg:.2} rps vs recompute {dg:.2} rps; \
+         p99 ttft {bp:.2}s vs {dp:.2}s ({})",
+        if wins { "store rescue wins" } else { "NO rescue advantage" }
+    );
+    i32::from(!wins)
+}

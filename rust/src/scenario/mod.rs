@@ -61,13 +61,15 @@ use crate::util::stats::Summary;
 
 pub mod bursty_autoscale;
 pub mod cache_skew;
+pub mod fault_recovery;
 pub mod hetero_slo;
 
 /// All registered scenarios, in `--list-scenarios` order.
-pub static REGISTRY: [ScenarioSpec; 3] = [
+pub static REGISTRY: [ScenarioSpec; 4] = [
     bursty_autoscale::SPEC,
     hetero_slo::SPEC,
     cache_skew::SPEC,
+    fault_recovery::SPEC,
 ];
 
 pub fn by_name(name: &str) -> Option<&'static ScenarioSpec> {
@@ -508,6 +510,7 @@ mod tests {
         assert!(names.contains(&"bursty-autoscale"));
         assert!(names.contains(&"hetero-slo"));
         assert!(names.contains(&"cache-skew"));
+        assert!(names.contains(&"fault-recovery"));
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();

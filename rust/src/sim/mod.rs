@@ -397,16 +397,19 @@ pub fn run(
 }
 
 /// Verify request conservation after a run: submitted = completed + dropped
-/// + inflight. Engines must keep this identity or the run is invalid.
+/// + lost + inflight. `lost` counts crash casualties whose retry budget ran
+/// out (always 0 with fault injection off). Engines must keep this identity
+/// — under arbitrary fault schedules too — or the run is invalid.
 pub fn check_conservation(res: &RunResult, engine: &mut dyn Engine) -> Result<(), String> {
     let done = engine.collector().completed();
     let dropped = engine.collector().dropped;
+    let lost = engine.collector().lost;
     let inflight = engine.inflight();
-    if done + dropped + inflight == res.submitted {
+    if done + dropped + lost + inflight == res.submitted {
         Ok(())
     } else {
         Err(format!(
-            "conservation violated: submitted={} done={done} dropped={dropped} inflight={inflight}",
+            "conservation violated: submitted={} done={done} dropped={dropped} lost={lost} inflight={inflight}",
             res.submitted
         ))
     }

@@ -11,11 +11,27 @@
 //!   busy-fraction util mode bit-identically, regardless of what P99
 //!   observations are passed in.
 //!
+//! Plus the PR 6 fault-layer properties:
+//!
+//! * no Router policy ever picks a Draining/Released/Failed device when
+//!   fed the engines' `LoadBook::filtered(is_active)` view, across
+//!   randomized fail/recover/drain/release trajectories,
+//! * the seeded `FaultPlan` is a pure function of `(cfg, seed, devices,
+//!   horizon)` — same inputs give an identical schedule, a different
+//!   seed gives a different one.
+//!
 //! Run with a fixed seed via `BANASERVE_PROP_SEED` (the CI property-suite
 //! step pins one for reproducibility).
 
-use banaserve::config::AutoscaleConfig;
-use banaserve::engines::fleet::{Autoscaler, FleetLoad, ScaleDecision, SloView};
+use banaserve::cluster::{
+    self, gpu_by_name, Device, DeviceState, Role,
+};
+use banaserve::config::{AutoscaleConfig, FaultConfig};
+use banaserve::engines::fleet::{
+    pick_load_aware, Autoscaler, CacheAware, FleetLoad, LeastLoaded, LeastQueue, LoadBook,
+    MostFreeMem, Router, RoundRobin, ScaleDecision, SloView,
+};
+use banaserve::fault::FaultPlan;
 use banaserve::prop_assert;
 use banaserve::util::checker::{check, Gen};
 
@@ -279,6 +295,151 @@ fn slo_mode_with_no_targets_degrades_to_util_mode_bit_identically() {
             );
             prop_assert!(a.slo_gap(view) == 0.0, "gap must be 0 with no targets");
             now += g.f64_in(0.0, 2.0 * cfg.cooldown);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PR 6: fault-aware routing + deterministic fault plans
+// ---------------------------------------------------------------------------
+
+/// Every engine routes through the same pattern: maintain a full
+/// [`LoadBook`], then hand policies the `filtered(|l|
+/// devices[l.idx].is_active())` view. This property drives a random
+/// fail/recover/drain/release trajectory over a small fleet and checks
+/// that no policy's pick ever maps back to a non-Active device — the
+/// invariant the chaos layer leans on to keep crashed and draining
+/// devices out of the admission path.
+#[test]
+fn no_router_policy_picks_a_non_active_device() {
+    check("router fault filtering", 60, |g| {
+        let n = g.usize_in(2, 8);
+        let spec = gpu_by_name("a100-80g").unwrap();
+        let mut devices: Vec<Device> = (0..n)
+            .map(|i| Device::new(i, spec.clone(), Role::Unified))
+            .collect();
+        let mut book = LoadBook::with_instances(n);
+        let mut rr = RoundRobin::default();
+        let mut aware = CacheAware { w_cache: 2.0, w_load: 1.0 };
+        for step in 0..60 {
+            // random membership transition (fault layer + elastic fleet)
+            let d = g.usize_in(0, n - 1);
+            match g.usize_in(0, 3) {
+                0 => {
+                    cluster::fail_device(&mut devices, d);
+                }
+                1 => {
+                    cluster::recover_device(&mut devices, d);
+                }
+                2 => {
+                    cluster::begin_drain(&mut devices, d);
+                }
+                _ => {
+                    cluster::try_release(&mut devices, d, true);
+                }
+            }
+            for i in 0..n {
+                let e = book.entry_mut(i);
+                e.load_seqs = g.usize_in(0, 20);
+                e.queue_len = g.usize_in(0, 10);
+                e.running = g.usize_in(0, 16);
+                e.u = g.f64_in(0.0, 2.0);
+                e.cache_hit = g.f64_in(0.0, 1.0);
+                e.mem_free = g.usize_in(0, 1 << 30) as u64;
+                e.weight = *g.pick(&[1.0, 1.0, 2.0]);
+            }
+            let view: Vec<_> = book
+                .filtered(|l| devices[l.idx].is_active())
+                .to_vec();
+            let n_active = cluster::active_count(&devices);
+            prop_assert!(
+                view.len() == n_active,
+                "filtered view has {} rows but {} devices are Active",
+                view.len(),
+                n_active
+            );
+            let picks = [
+                ("round-robin", rr.pick(&view)),
+                ("least-loaded", LeastLoaded.pick(&view)),
+                ("least-queue", LeastQueue.pick(&view)),
+                ("most-free-mem", MostFreeMem.pick(&view)),
+                ("cache-aware", aware.pick(&view)),
+                ("load-aware", pick_load_aware(&view, g.f64_in(0.1, 2.0), step)),
+            ];
+            for (name, pick) in picks {
+                if let Some(pos) = pick {
+                    prop_assert!(pos < view.len(), "{name}: pick {pos} out of range");
+                    let idx = view[pos].idx;
+                    prop_assert!(
+                        devices[idx].state == DeviceState::Active,
+                        "{name} picked device {idx} in state {:?}",
+                        devices[idx].state
+                    );
+                } else {
+                    prop_assert!(
+                        view.is_empty(),
+                        "{name} returned None with {} active candidates",
+                        view.len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The chaos schedule must be a pure function of its inputs: identical
+/// `(cfg, seed, n_devices, horizon)` gives a byte-identical plan (the
+/// cross-engine fairness guarantee — every engine in a scenario cell sees
+/// the same crashes at the same instants), and a different seed gives a
+/// different plan (the generator actually consumes its seed).
+#[test]
+fn fault_plan_is_a_pure_function_of_its_seed() {
+    check("fault plan determinism", 60, |g| {
+        let mut cfg = FaultConfig::default();
+        cfg.enabled = true;
+        cfg.crash_mtbf = g.f64_in(1.0, 20.0);
+        cfg.recovery_time = g.f64_in(0.5, 10.0);
+        cfg.straggler_prob = g.f64_in(0.0, 1.0);
+        cfg.straggler_secs = g.f64_in(0.5, 5.0);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let n = g.usize_in(1, 12);
+        let horizon = g.f64_in(10.0, 200.0);
+        let a = FaultPlan::generate(&cfg, seed, n, horizon);
+        let b = FaultPlan::generate(&cfg, seed, n, horizon);
+        prop_assert!(
+            a == b,
+            "same (cfg, seed {seed}, {n} devices, {horizon:.1}s) produced \
+             different schedules ({} vs {} events)",
+            a.events.len(),
+            b.events.len()
+        );
+        for w in a.events.windows(2) {
+            prop_assert!(
+                w[0].t <= w[1].t,
+                "fault schedule out of order: {:.4} after {:.4}",
+                w[1].t,
+                w[0].t
+            );
+        }
+        for ev in &a.events {
+            prop_assert!(
+                ev.device < n && ev.t >= 0.0,
+                "event targets device {} of {n} at t={:.4}",
+                ev.device,
+                ev.t
+            );
+        }
+        // a long enough horizon makes an empty schedule astronomically
+        // unlikely, so a changed seed must actually change the plan
+        if !a.events.is_empty() {
+            let c = FaultPlan::generate(&cfg, seed ^ 0xDEAD_BEEF, n, horizon);
+            prop_assert!(
+                a != c,
+                "seed {seed} and seed {} produced identical non-empty plans",
+                seed ^ 0xDEAD_BEEF
+            );
         }
         Ok(())
     });

@@ -93,6 +93,28 @@ fn scenario_rejects_unknown_flags() {
 }
 
 #[test]
+fn fault_recovery_grid_crashes_all_four_engines_identically() {
+    // the robustness gate only means something if every engine faces the
+    // SAME seeded crash schedule: all four engines, fault layer on, and
+    // identical fault knobs in every generated cell config
+    let spec = scenario::by_name("fault-recovery").unwrap();
+    let plan = (spec.build)(&tiny_args("unused")).unwrap();
+    let engines: Vec<&str> = plan.engines.iter().map(|e| e.name()).collect();
+    assert_eq!(engines, vec!["hft", "vllm", "distserve", "banaserve"]);
+    assert_eq!(plan.variants.len(), 1);
+    for &kind in &plan.engines {
+        let cfg = (plan.make_cfg)(kind, &plan.variants[0], 11);
+        assert!(cfg.fault.enabled, "{}: fault layer must be on", kind.name());
+        assert_eq!(cfg.workload.seed, 11);
+        assert!(
+            cfg.fault.crash_mtbf > 0.0 && cfg.fault.recovery_time > 0.0,
+            "{}: degenerate fault knobs",
+            kind.name()
+        );
+    }
+}
+
+#[test]
 fn cache_skew_grid_covers_both_routers() {
     // the new scenario's grid is (vllm, banaserve) × one static variant —
     // the registry must expose that shape so the CI tiny run exercises
