@@ -134,6 +134,25 @@ fn main() {
         }
         assert_eq!(drained, 10_000, "bench must drain everything it pushed");
     });
+    // the sim's ACTUAL access pattern: timers land a short, nearly-sorted
+    // horizon ahead of the cursor (step completions, KV transfers), not
+    // uniformly across the day — the calendar queue's best case, measured
+    // separately so a bucket-sizing regression can't hide behind the
+    // uniform-random row above
+    rec.bench("event-queue push+pop 10k timers (calendar, near-monotone)", 100, || {
+        let mut q = EventQueue::new();
+        let mut r = Rng::new(3);
+        for i in 0..10_000u64 {
+            let t = i as f64 * 0.01 + r.f64() * 0.05;
+            q.push_timer(t, Timer::new(i));
+        }
+        let mut drained = 0u64;
+        while let Some((t, ev)) = q.pop() {
+            std::hint::black_box((t, &ev));
+            drained += 1;
+        }
+        assert_eq!(drained, 10_000, "bench must drain everything it pushed");
+    });
 
     // Alg 2 pick at fleet size 64
     let loads: Vec<InstanceLoad> = (0..64)
@@ -190,6 +209,45 @@ fn main() {
     }
     rec.bench("route arrival (fleet 64, LoadBook weighted)", 200_000, || {
         std::hint::black_box(fleet::LeastLoaded.pick(wbook.loads()));
+    });
+
+    // the ISSUE 7 scalability rows: one arrival at fleet 8192 = one load
+    // mutation (the book write that routing a request implies) + one pick.
+    // Scan pays O(n) per arrival; the tournament index pays O(log n) for
+    // the dirty repair + O(1) for the winner; p2c pays O(k). CI gates
+    // tournament >= 10x and p2c >= 50x over the scan reference.
+    let mut book8k = fleet::LoadBook::with_instances(8192);
+    for i in 0..8192usize {
+        book8k.set_queue(i, i % 7, (i * 13) % 23);
+    }
+    let mut i8k = 0usize;
+    rec.bench("route arrival (fleet 8192, scan reference)", 2_000, || {
+        i8k = (i8k + 1) % 8192;
+        book8k.set_queue(i8k, i8k % 7, (i8k * 13) % 23);
+        std::hint::black_box(fleet::LeastLoaded.pick(book8k.loads()));
+    });
+    let mut tbook8k = fleet::LoadBook::with_instances(8192);
+    for i in 0..8192usize {
+        tbook8k.set_queue(i, i % 7, (i * 13) % 23);
+    }
+    tbook8k.enable_index(&[fleet::TreeKey::LeastLoaded]);
+    let mut ti8k = 0usize;
+    rec.bench("route arrival (fleet 8192, tournament)", 200_000, || {
+        ti8k = (ti8k + 1) % 8192;
+        tbook8k.set_queue(ti8k, ti8k % 7, (ti8k * 13) % 23);
+        std::hint::black_box(tbook8k.pick_indexed(fleet::TreeKey::LeastLoaded));
+    });
+    let mut sampler = fleet::RouteSampler::new(11);
+    let mut pi8k = 0usize;
+    rec.bench("route arrival (fleet 8192, p2c)", 200_000, || {
+        pi8k = (pi8k + 1) % 8192;
+        book8k.set_queue(pi8k, pi8k % 7, (pi8k * 13) % 23);
+        let cands = sampler.sample(8192, 2, |_| true);
+        std::hint::black_box(fleet::best_of(
+            fleet::TreeKey::LeastLoaded,
+            book8k.loads(),
+            cands,
+        ));
     });
 
     // typed timer-dispatch table: every engine event passes through

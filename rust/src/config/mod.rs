@@ -217,6 +217,89 @@ impl FaultConfig {
     }
 }
 
+/// How per-arrival routing picks are computed over the fleet (the
+/// `engines::fleet` scalable-routing layer). The default (`Auto`) keeps
+/// the exact linear scan on small fleets — where it is both fastest and
+/// the historical behavior, so fixed-seed Reports stay byte-identical —
+/// and switches to the exact O(log n) tournament index above
+/// [`RoutingConfig::scan_threshold`] devices. `P2c` (power-of-two-choices
+/// sampling, O(1) per arrival) is strictly opt-in: it changes picks (and
+/// consumes a dedicated PRNG substream), trading a provably small load
+/// penalty for fleet-size-independent cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouteMode {
+    /// Scan at fleet <= `scan_threshold`, tournament index above.
+    #[default]
+    Auto,
+    /// Exact linear scan (the historical reference behavior).
+    Scan,
+    /// Exact O(log n) tournament-tree index over the maintained book.
+    Tournament,
+    /// O(1) power-of-two-choices sampling (`sample_k` candidates).
+    P2c,
+}
+
+impl RouteMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(RouteMode::Auto),
+            "scan" => Some(RouteMode::Scan),
+            "tournament" | "tree" | "index" => Some(RouteMode::Tournament),
+            "p2c" | "sample" | "sampled" => Some(RouteMode::P2c),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouteMode::Auto => "auto",
+            RouteMode::Scan => "scan",
+            RouteMode::Tournament => "tournament",
+            RouteMode::P2c => "p2c",
+        }
+    }
+}
+
+/// Scalable-routing knobs (consumed by every engine's router call sites).
+/// Defaults reproduce the historical scans bit-for-bit on every fleet the
+/// existing benches/goldens run (all <= 64 devices).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoutingConfig {
+    pub mode: RouteMode,
+    /// Candidates sampled per pick in `P2c` mode (k = 2 is the classic
+    /// power-of-two-choices operating point).
+    pub sample_k: usize,
+    /// `Auto` resolves to `Scan` at fleets up to this size and to
+    /// `Tournament` above it.
+    pub scan_threshold: usize,
+}
+
+impl Default for RoutingConfig {
+    fn default() -> Self {
+        RoutingConfig {
+            mode: RouteMode::Auto,
+            sample_k: 2,
+            scan_threshold: 64,
+        }
+    }
+}
+
+impl RoutingConfig {
+    /// Resolve `Auto` against the fleet size; never returns `Auto`.
+    pub fn resolve(&self, fleet_size: usize) -> RouteMode {
+        match self.mode {
+            RouteMode::Auto => {
+                if fleet_size <= self.scan_threshold {
+                    RouteMode::Scan
+                } else {
+                    RouteMode::Tournament
+                }
+            }
+            m => m,
+        }
+    }
+}
+
 /// Complete description of one simulation run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -243,6 +326,9 @@ pub struct ExperimentConfig {
     pub autoscale: AutoscaleConfig,
     /// Deterministic fault injection (off = no faults, the default).
     pub fault: FaultConfig,
+    /// Scalable routing (scan/tournament/p2c; Auto = scan at small fleets,
+    /// byte-identical to the historical behavior).
+    pub routing: RoutingConfig,
 }
 
 impl ExperimentConfig {
@@ -269,6 +355,7 @@ impl ExperimentConfig {
             bana: BanaConfig::default(),
             autoscale: AutoscaleConfig::default(),
             fault: FaultConfig::default(),
+            routing: RoutingConfig::default(),
         }
     }
 
@@ -383,6 +470,32 @@ impl ExperimentConfig {
         if let Some(x) = a.get("fault-retry-backoff").and_then(|v| v.parse::<f64>().ok()) {
             self.fault.retry_backoff = x;
         }
+        if let Some(m) = a.get("route-mode").and_then(RouteMode::parse) {
+            self.routing.mode = m;
+        }
+        if let Some(k) = a.get("route-sample-k").and_then(|v| v.parse::<usize>().ok()) {
+            self.routing.sample_k = k.max(1);
+        }
+        if let Some(t) = a.get("route-scan-threshold").and_then(|v| v.parse::<usize>().ok())
+        {
+            self.routing.scan_threshold = t;
+        }
+        if let Some(n) = a.get("tenants").and_then(|v| v.parse::<usize>().ok()) {
+            self.workload.tenants.n_tenants = n.max(1);
+        }
+        if let Some(z) = a.get("tenant-zipf-s").and_then(|v| v.parse::<f64>().ok()) {
+            self.workload.tenants.zipf_s = z;
+        }
+        // --diurnal-ratio converts the current arrival rate (its peak) into
+        // the day/night envelope; keep this after --rps so the two compose
+        if let Some(r) = a.get("diurnal-ratio").and_then(|v| v.parse::<f64>().ok()) {
+            let day = a
+                .get("diurnal-day-secs")
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(60.0);
+            self.workload.arrivals =
+                ArrivalProcess::diurnal(self.workload.arrivals.peak(), r, day);
+        }
         if let Some(name) = a.get("gpu") {
             match crate::cluster::gpu_by_name(name) {
                 Some(g) => self.gpu = g,
@@ -473,6 +586,24 @@ impl ExperimentConfig {
                 }
                 ("fault_retry_backoff", Value::Num(n)) => {
                     self.fault.retry_backoff = *n;
+                }
+                ("route_mode", Value::Str(s)) => {
+                    self.routing.mode =
+                        RouteMode::parse(s).ok_or(format!("bad route_mode {s}"))?;
+                }
+                ("route_sample_k", Value::Num(n)) => {
+                    self.routing.sample_k = (*n as usize).max(1);
+                }
+                ("route_scan_threshold", Value::Num(n)) => {
+                    self.routing.scan_threshold = *n as usize;
+                }
+                ("tenants", Value::Num(n)) => {
+                    self.workload.tenants.n_tenants = (*n as usize).max(1);
+                }
+                ("tenant_zipf_s", Value::Num(n)) => self.workload.tenants.zipf_s = *n,
+                ("diurnal_ratio", Value::Num(n)) => {
+                    self.workload.arrivals =
+                        ArrivalProcess::diurnal(self.workload.arrivals.peak(), *n, 60.0);
                 }
                 ("gpu", Value::Str(s)) => {
                     self.gpu =
@@ -687,6 +818,66 @@ mod tests {
         assert!(c.validate().unwrap_err().contains("straggler-secs"));
         c.fault.straggler_secs = 5.0;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn routing_knobs_default_to_scan_on_small_fleets_and_parse() {
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        assert_eq!(c.routing.mode, RouteMode::Auto, "routing must default Auto");
+        assert_eq!(c.routing.sample_k, 2);
+        assert_eq!(c.routing.resolve(4), RouteMode::Scan);
+        assert_eq!(c.routing.resolve(64), RouteMode::Scan, "64 is still scan");
+        assert_eq!(c.routing.resolve(65), RouteMode::Tournament);
+        let a = Args::parse(
+            "--route-mode p2c --route-sample-k 4 --route-scan-threshold 16"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert_eq!(c.routing.mode, RouteMode::P2c);
+        assert_eq!(c.routing.sample_k, 4);
+        assert_eq!(c.routing.scan_threshold, 16);
+        assert_eq!(c.routing.resolve(10_000), RouteMode::P2c, "explicit mode wins");
+        c.apply_json(r#"{"route_mode":"tournament","route_scan_threshold":8}"#)
+            .unwrap();
+        assert_eq!(c.routing.mode, RouteMode::Tournament);
+        assert_eq!(c.routing.scan_threshold, 8);
+        assert!(c.apply_json(r#"{"route_mode":"bogus"}"#).is_err());
+        assert_eq!(RouteMode::parse("tree"), Some(RouteMode::Tournament));
+        assert_eq!(RouteMode::parse("sampled"), Some(RouteMode::P2c));
+    }
+
+    #[test]
+    fn tenant_and_diurnal_knobs_parse_from_cli_and_json() {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        assert_eq!(c.workload.tenants.n_tenants, 1, "multi-tenancy must default off");
+        let a = Args::parse(
+            "--tenants 64 --tenant-zipf-s 1.2 --diurnal-ratio 4 --diurnal-day-secs 30"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert_eq!(c.workload.tenants.n_tenants, 64);
+        assert_eq!(c.workload.tenants.zipf_s, 1.2);
+        match c.workload.arrivals {
+            ArrivalProcess::Diurnal { rps_peak, day_night_ratio, day_secs, .. } => {
+                assert_eq!(rps_peak, 5.0, "diurnal peak inherits the prior rate");
+                assert_eq!(day_night_ratio, 4.0);
+                assert_eq!(day_secs, 30.0);
+            }
+            _ => panic!("expected diurnal arrivals"),
+        }
+        let mut j = ExperimentConfig::default_for(EngineKind::DistServe, "llama-13b", 8.0, 1);
+        j.apply_json(r#"{"tenants":8,"tenant_zipf_s":1.0,"diurnal_ratio":2}"#)
+            .unwrap();
+        assert_eq!(j.workload.tenants.n_tenants, 8);
+        match j.workload.arrivals {
+            ArrivalProcess::Diurnal { rps_peak, day_night_ratio, .. } => {
+                assert_eq!(rps_peak, 8.0);
+                assert_eq!(day_night_ratio, 2.0);
+            }
+            _ => panic!("expected diurnal arrivals"),
+        }
     }
 
     #[test]

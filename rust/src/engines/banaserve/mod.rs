@@ -83,6 +83,14 @@ pub struct BanaEngine {
     hysteresis_latched: bool,
     /// Rotates tie-breaks among equally-loaded prefill candidates.
     route_rr: usize,
+    /// Resolved routing mode for this fleet size (`auto` → scan at ≤ 64).
+    /// BanaServe's `U` is derived per-arrival, so `tournament` falls back
+    /// to the exact scan; `p2c` computes `U` for the k samples only.
+    route_mode: crate::config::RouteMode,
+    /// p2c sample width (k).
+    sample_k: usize,
+    /// Dedicated `"route-p2c"` PRNG substream — zero draws unless p2c runs.
+    sampler: fleet::RouteSampler,
     /// Reusable routing scratch: Alg 2 candidate views are filled into the
     /// book's persistent buffer instead of a fresh `Vec` per arrival
     /// (BanaServe's `U` is step- and memory-dependent, so candidate rows
@@ -178,6 +186,9 @@ impl BanaEngine {
             cooldown_until: 0.0,
             hysteresis_latched: false,
             route_rr: 0,
+            route_mode: cfg.routing.resolve(cfg.n_devices),
+            sample_k: cfg.routing.sample_k.max(1),
+            sampler: fleet::RouteSampler::new(cfg.workload.seed),
             book: fleet::LoadBook::new(),
             woke_buf: Vec::new(),
             stranded_buf: Vec::new(),
@@ -235,6 +246,36 @@ impl BanaEngine {
     /// into persistent storage, so the per-arrival snapshot allocation the
     /// hot loop used to pay is gone.
     fn route_prefill(&mut self, now: f64) -> Option<usize> {
+        // p2c: Alg 2 over k sampled candidates — `U` is computed for the
+        // sample only, making the pick O(k) instead of O(fleet). An empty
+        // sample (every sampled device frozen/drained) falls through to
+        // the exact scan. `tournament` has no tree here (U cannot be
+        // book-maintained) and uses the scan too.
+        if self.route_mode == crate::config::RouteMode::P2c {
+            let n = self.devices.len();
+            let k = self.sample_k;
+            let (pinsts, dinsts, devices, share) =
+                (&self.pinsts, &self.dinsts, &self.devices, &self.share_prefill);
+            let cands = self.sampler.sample(n, k, |i| {
+                share[i] > 0.0 && now >= pinsts[i].frozen_until && devices[i].is_active()
+            });
+            if !cands.is_empty() {
+                let s = self.book.fill();
+                for &i in cands {
+                    let mut l = fleet::InstanceLoad::at(i);
+                    l.u = u_now_of(&pinsts[i], &dinsts[i], &devices[i]);
+                    l.queue_len = pinsts[i].queue_len();
+                    l.weight = devices[i].spec.weight;
+                    s.push(l);
+                }
+                return fleet::pick_load_aware(
+                    self.book.scratch(),
+                    self.bana.delta_l,
+                    self.route_rr,
+                )
+                .map(|pos| self.book.scratch()[pos].idx);
+            }
+        }
         let (book, pinsts, dinsts, devices, share) = (
             &mut self.book,
             &self.pinsts,

@@ -16,7 +16,7 @@
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
-use crate::config::{ExperimentConfig, FaultConfig};
+use crate::config::{ExperimentConfig, FaultConfig, RouteMode};
 use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency};
@@ -55,6 +55,14 @@ pub struct DistServeEngine {
     inflight: u64,
     pub kv_transfer_bytes: u64,
     pub preemptions: u64,
+    /// Requests routed to each prefill slot (routed-skew metric).
+    pub routed_counts: Vec<u64>,
+    /// Resolved routing mode for this fleet size (`auto` → scan at ≤ 64).
+    route_mode: RouteMode,
+    /// p2c sample width (k).
+    sample_k: usize,
+    /// Dedicated `"route-p2c"` PRNG substream — zero draws unless p2c runs.
+    sampler: fleet::RouteSampler,
     /// Device spec new (scaled-out) devices are built from when the
     /// catalog offers no choice.
     gpu: GpuSpec,
@@ -94,9 +102,16 @@ impl DistServeEngine {
         let mut slot_of_dev: Vec<usize> = (0..cfg.n_prefill).collect();
         slot_of_dev.extend(0..nd);
         let n = cfg.n_devices;
+        let route_mode = cfg.routing.resolve(cfg.n_devices);
         let mut pbook = fleet::LoadBook::with_instances(cfg.n_prefill);
         for i in 0..cfg.n_prefill {
             pbook.entry_mut(i).weight = devices[i].spec.weight;
+        }
+        // tournament index over the maintained prefill book; decode routes
+        // on live free-memory reads and uses sampling instead (see
+        // `route_decode`)
+        if route_mode == RouteMode::Tournament {
+            pbook.enable_index(&[fleet::TreeKey::LeastQueue]);
         }
         let catalog = if cfg.gpu_catalog.is_empty() {
             vec![cfg.gpu.clone()]
@@ -125,6 +140,10 @@ impl DistServeEngine {
             inflight: 0,
             kv_transfer_bytes: 0,
             preemptions: 0,
+            routed_counts: vec![0; cfg.n_prefill],
+            route_mode,
+            sample_k: cfg.routing.sample_k.max(1),
+            sampler: fleet::RouteSampler::new(cfg.workload.seed),
             gpu: cfg.gpu.clone(),
             catalog,
             slot_of_dev,
@@ -159,6 +178,36 @@ impl DistServeEngine {
     /// peers exist; it becomes routable once its weights land. Static
     /// fleets never freeze, so the filter is a no-op there.
     fn route_prefill(&mut self, now: f64) -> usize {
+        // sampled / indexed fast paths (O(1) / O(log n)); a miss (invalid
+        // or frozen winner) falls through to the exact scan below
+        match self.route_mode {
+            RouteMode::P2c => {
+                let n = self.prefill.len();
+                let k = self.sample_k;
+                let (prefill, devices) = (&self.prefill, &self.devices);
+                let cands = self.sampler.sample(n, k, |i| {
+                    devices[prefill[i].device].is_active() && now >= prefill[i].frozen_until
+                });
+                if let Some(i) = fleet::best_of(fleet::TreeKey::LeastQueue, self.pbook.loads(), cands)
+                {
+                    return i;
+                }
+            }
+            RouteMode::Tournament => {
+                // index winner validated against live active/frozen state
+                // (the index tracks membership; spin-up freezes are
+                // time-based); a valid min-policy winner is exactly the
+                // filtered scan's winner
+                if let Some(best) = self.pbook.pick_indexed(fleet::TreeKey::LeastQueue) {
+                    if self.devices[self.prefill[best].device].is_active()
+                        && now >= self.prefill[best].frozen_until
+                    {
+                        return best;
+                    }
+                }
+            }
+            _ => {}
+        }
         let (book, prefill, devices) = (&mut self.pbook, &self.prefill, &self.devices);
         {
             let loads = book.filtered(|l| {
@@ -183,6 +232,31 @@ impl DistServeEngine {
     /// with every KV alloc/free, so it is read live into the book's
     /// reusable scratch rather than maintained.
     fn route_decode(&mut self, now: f64) -> usize {
+        // free memory cannot be book-maintained, so there is no tournament
+        // tree here: both non-scan modes use k-sampled placement (the live
+        // mem_free read happens for the k candidates only)
+        if self.route_mode != RouteMode::Scan {
+            let n = self.decode.len();
+            let k = self.sample_k;
+            let (decode, devices) = (&self.decode, &self.devices);
+            let cands = self.sampler.sample(n, k, |i| {
+                devices[decode[i].device].is_active() && now >= decode[i].frozen_until
+            });
+            if !cands.is_empty() {
+                let s = self.dbook.fill();
+                for &i in cands {
+                    let dev = &devices[decode[i].device];
+                    let mut l = fleet::InstanceLoad::at(i);
+                    l.mem_free = dev.mem_free();
+                    l.running = decode[i].running.len();
+                    l.weight = dev.spec.weight;
+                    s.push(l);
+                }
+                if let Some(pos) = fleet::MostFreeMem.pick(s) {
+                    return s[pos].idx;
+                }
+            }
+        }
         let (book, decode, devices) = (&mut self.dbook, &self.decode, &self.devices);
         let fill = |s: &mut Vec<fleet::InstanceLoad>, skip_frozen: bool| {
             s.clear();
@@ -549,6 +623,9 @@ impl DistServeEngine {
                         .stats
                         .on_capacity_gain(now, crate::cluster::active_count(&self.devices));
                     let slot = self.slot_of_dev[ev.device];
+                    if self.devices[ev.device].role == Role::Prefill {
+                        self.pbook.set_eligible(slot, true);
+                    }
                     match self.devices[ev.device].role {
                         Role::Prefill => self.maybe_start_prefill(slot, q),
                         _ => {
@@ -582,6 +659,7 @@ impl DistServeEngine {
         victims.clear();
         match self.devices[dev].role {
             Role::Prefill => {
+                self.pbook.set_eligible(slot, false);
                 self.prefill[slot].step_token += 1;
                 if let Some(step) = self.prefill[slot].step.take() {
                     self.devices[dev].compute_util.set(now, 0.0);
@@ -819,6 +897,7 @@ impl DistServeEngine {
                 self.prefill.push(inst);
                 let bi = self.pbook.add_instance(); // stable slot, zeroed
                 self.pbook.entry_mut(bi).weight = self.devices[id].spec.weight;
+                self.routed_counts.push(0);
             }
             _ => {
                 self.slot_of_dev.push(self.decode.len());
@@ -841,6 +920,7 @@ impl DistServeEngine {
         stranded.clear();
         match self.devices[d].role {
             Role::Prefill => {
+                self.pbook.set_eligible(slot, false);
                 stranded.extend(self.prefill[slot].waiting.drain(..));
                 self.sync_prefill(slot);
                 for &sid in &stranded {
@@ -920,6 +1000,7 @@ impl super::EngineHarness for DistServeEngine {
 
     fn fill_extras(&self, extras: &mut super::EngineExtras) {
         extras.kv_transfer_bytes = self.kv_transfer_bytes;
+        extras.routed_counts = self.routed_counts.clone();
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
         self.faults.stats.fill_extras(extras);
@@ -945,6 +1026,7 @@ impl Engine for DistServeEngine {
             return;
         }
         let pi = self.route_prefill(q.now());
+        self.routed_counts[pi] += 1;
         let mut seq = Seq::new(req);
         seq.instance = self.prefill[pi].device;
         let sid = self.seqs.insert(seq);

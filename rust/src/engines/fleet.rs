@@ -31,6 +31,7 @@ use crate::config::AutoscaleConfig;
 use crate::metrics::{Collector, TimeSeries};
 use crate::model::ModelSpec;
 use crate::sim::Timer;
+use crate::util::prng::Rng;
 use crate::workload::Request;
 
 // ---------------------------------------------------------------------------
@@ -227,6 +228,11 @@ pub trait Router {
 pub struct LoadBook {
     entries: Vec<InstanceLoad>,
     scratch: Vec<InstanceLoad>,
+    /// Optional tournament-tree index over the maintained entries (opt-in
+    /// via [`LoadBook::enable_index`]; large fleets only — see the routing
+    /// ownership rules in [`crate::engines`]). `None` costs nothing on the
+    /// sync hot paths.
+    index: Option<Box<BookIndex>>,
 }
 
 impl LoadBook {
@@ -239,15 +245,32 @@ impl LoadBook {
         LoadBook {
             entries: (0..n).map(InstanceLoad::at).collect(),
             scratch: Vec::new(),
+            index: None,
         }
     }
 
     /// Append a zeroed entry for a new (scaled-out) instance; returns its
     /// index. Instance indices are stable — drained instances keep their
-    /// entry (engines filter them out of router views).
+    /// entry (engines filter them out of router views). With an index
+    /// enabled the new entry joins every tree as eligible (engines mark it
+    /// ineligible/frozen through the usual transition hooks).
     pub fn add_instance(&mut self) -> usize {
         let idx = self.entries.len();
         self.entries.push(InstanceLoad::at(idx));
+        if let Some(ix) = self.index.as_mut() {
+            ix.eligible.push(true);
+            ix.dirty_mark.push(false);
+            let (entries, eligible) = (&self.entries, &ix.eligible);
+            if entries.len() > ix.trees.first().map_or(0, |t| t.cap) {
+                for t in ix.trees.iter_mut() {
+                    t.rebuild(entries, eligible);
+                }
+            } else {
+                for t in ix.trees.iter_mut() {
+                    t.update(idx, entries, eligible);
+                }
+            }
+        }
         idx
     }
 
@@ -264,6 +287,7 @@ impl LoadBook {
     }
 
     pub fn entry_mut(&mut self, i: usize) -> &mut InstanceLoad {
+        self.mark_dirty(i);
         &mut self.entries[i]
     }
 
@@ -274,11 +298,120 @@ impl LoadBook {
     }
 
     /// O(1) sync of the queue counters for instance `i` — the common
-    /// admit/step/finish transition hook.
+    /// admit/step/finish transition hook. With an index enabled this only
+    /// marks the entry dirty (O(1)); the deferred O(log n) tree repair
+    /// happens at the next indexed pick.
     pub fn set_queue(&mut self, i: usize, queue_len: usize, load_seqs: usize) {
         let e = &mut self.entries[i];
         e.queue_len = queue_len;
         e.load_seqs = load_seqs;
+        self.mark_dirty(i);
+    }
+
+    // --- tournament-tree index (opt-in, large fleets) ----------------------
+
+    /// Build a tournament-tree index with one tree per key over the current
+    /// entries (all eligible). From here on `set_queue`/`entry_mut` mark
+    /// entries dirty and [`LoadBook::pick_indexed`] serves exact O(log n)
+    /// best-of-fleet picks.
+    pub fn enable_index(&mut self, keys: &[TreeKey]) {
+        let n = self.entries.len();
+        let mut ix = Box::new(BookIndex {
+            trees: keys.iter().map(|&k| TournamentTree::new(k)).collect(),
+            eligible: vec![true; n],
+            dirty: Vec::new(),
+            dirty_mark: vec![false; n],
+            ties: Vec::new(),
+        });
+        for t in ix.trees.iter_mut() {
+            t.rebuild(&self.entries, &ix.eligible);
+        }
+        self.index = Some(ix);
+    }
+
+    /// Is a tournament index active on this book?
+    pub fn index_enabled(&self) -> bool {
+        self.index.is_some()
+    }
+
+    /// Mark instance `i` (in)eligible for indexed picks — the membership
+    /// hook engines call at scale-out / drain / fail / recover transitions.
+    /// No-op without an index. O(1); the tree repair is deferred.
+    pub fn set_eligible(&mut self, i: usize, on: bool) {
+        if let Some(ix) = self.index.as_mut() {
+            if i < ix.eligible.len() {
+                ix.eligible[i] = on;
+            }
+        }
+        self.mark_dirty(i);
+    }
+
+    #[inline]
+    fn mark_dirty(&mut self, i: usize) {
+        if let Some(ix) = self.index.as_mut() {
+            if i < ix.dirty_mark.len() && !ix.dirty_mark[i] {
+                ix.dirty_mark[i] = true;
+                ix.dirty.push(i);
+            }
+        }
+    }
+
+    /// Repair every tree for the entries dirtied since the last pick
+    /// (O(dirty · log n), amortized over the syncs that dirtied them).
+    fn flush_index(&mut self) {
+        let Some(ix) = self.index.as_mut() else { return };
+        if ix.dirty.is_empty() {
+            return;
+        }
+        let entries = &self.entries;
+        let (dirty, marks, eligible, trees) = (
+            &mut ix.dirty,
+            &mut ix.dirty_mark,
+            &ix.eligible,
+            &mut ix.trees,
+        );
+        for t in trees.iter_mut() {
+            for &i in dirty.iter() {
+                t.update(i, entries, eligible);
+            }
+        }
+        for &i in dirty.iter() {
+            marks[i] = false;
+        }
+        dirty.clear();
+    }
+
+    /// Exact O(log n) pick: the position of the best ELIGIBLE entry under
+    /// `key`, identical to the corresponding router's linear scan over the
+    /// eligible subset (pinned by `tests/prop_routing.rs`). None when no
+    /// tree for `key` was enabled or every entry is ineligible.
+    pub fn pick_indexed(&mut self, key: TreeKey) -> Option<usize> {
+        self.flush_index();
+        let ix = self.index.as_ref()?;
+        ix.trees.iter().find(|t| t.key == key)?.best()
+    }
+
+    /// Indexed form of [`pick_load_aware`] (BanaServe Alg 2): the
+    /// LoadAwareU tree serves the min-U pick and the near-tie rotation set
+    /// (tree descent pruned on the `TIE_EPS` band), the LoadAwareQ tree the
+    /// overloaded-everywhere fallback. Requires both trees enabled.
+    pub fn pick_indexed_load_aware(&mut self, delta_l: f64, rr: usize) -> Option<usize> {
+        self.flush_index();
+        let entries = &self.entries;
+        let ix = self.index.as_mut()?;
+        let tu = ix.trees.iter().position(|t| t.key == TreeKey::LoadAwareU)?;
+        let tq = ix.trees.iter().position(|t| t.key == TreeKey::LoadAwareQ)?;
+        let least = ix.trees[tu].best()?;
+        if entries[least].u >= delta_l {
+            // overloaded everywhere: lowest queue wins (Alg 2 line 17)
+            return ix.trees[tq].best();
+        }
+        let (min_u, min_q) = (entries[least].u, entries[least].norm_queue());
+        let (trees, ties) = (&ix.trees, &mut ix.ties);
+        ties.clear();
+        trees[tu].collect_ties(1, entries, min_u, min_q, ties);
+        let want = rr % ties.len().max(1);
+        ties.get(want).copied()
     }
 
     /// Fill the scratch buffer with the maintained entries passing `keep`
@@ -441,6 +574,12 @@ impl Router for CacheAware {
     }
 }
 
+/// Near-tie band of BanaServe's Alg 2 rotation: candidates whose `U` sits
+/// within this of the fleet minimum (at equal normalized queue depth) share
+/// the rotating tie-break. Shared between the linear-scan pick and the
+/// indexed tree descent so the two stay bit-identical.
+pub const TIE_EPS: f64 = 0.05;
+
 /// BanaServe's Alg 2 load-aware pick with rotating tie-breaks, stateless
 /// form: engines that route from `&self` contexts keep their own rotation
 /// cursor and call this directly; [`LoadAware`] wraps it for the trait.
@@ -479,7 +618,6 @@ pub fn pick_load_aware(loads: &[InstanceLoad], delta_l: f64, rr: usize) -> Optio
             .map(|(i, _)| i);
     }
     // rotate among near-ties of the minimum without allocating
-    const TIE_EPS: f64 = 0.05;
     let min_u = loads[least].u;
     let min_q = loads[least].norm_queue();
     let tied = |l: &InstanceLoad| l.u - min_u < TIE_EPS && l.norm_queue() == min_q;
@@ -516,6 +654,289 @@ impl Router for LoadAware {
     fn name(&self) -> &'static str {
         "load-aware"
     }
+}
+
+// ---------------------------------------------------------------------------
+// Scalable routing: tournament-tree index + power-of-two-choices sampling
+// ---------------------------------------------------------------------------
+
+/// Sentinel for "no eligible entry" in a tournament-tree slot.
+pub const NONE_POS: usize = usize::MAX;
+
+/// The comparison key a [`TournamentTree`] maintains its winner under. Each
+/// key reproduces one scan router's exact comparison-and-tie-break order
+/// over MAINTAINED book entries (where position == `idx`), so an indexed
+/// pick is bit-identical to the linear scan over the eligible subset.
+/// `CacheAware` has no key: its score depends on the request being routed
+/// (per-request `cache_hit`) and cannot be maintained in an index — it
+/// scales via sampling only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreeKey {
+    /// Min (load_seqs/w, queue_len/w, idx) — [`LeastLoaded`].
+    LeastLoaded,
+    /// Min (queue_len/w, load_seqs/w, idx) — [`LeastQueue`].
+    LeastQueue,
+    /// Max (mem_free, fewest running/w), ties to the LAST candidate —
+    /// [`MostFreeMem`].
+    MostFreeMem,
+    /// Min (u, queue_len/w, idx) — the primary pick of
+    /// [`pick_load_aware`] (Alg 2). The tree winner of any subtree attains
+    /// that subtree's minimum `u`, which is what makes the near-tie
+    /// descent's pruning exact.
+    LoadAwareU,
+    /// Min (queue_len/w, u, idx) — Alg 2's overloaded-everywhere fallback.
+    LoadAwareQ,
+}
+
+impl TreeKey {
+    /// Does candidate `b` beat the incumbent `a` under this key? The final
+    /// `idx` comparison reproduces the scan routers' tie-break exactly:
+    /// min policies keep the FIRST (lowest-idx) minimum, `MostFreeMem`
+    /// keeps the LAST maximum — so the result is a total order usable both
+    /// structurally (tree merges, where `a` is always the lower-position
+    /// side) and over unordered p2c candidate sets.
+    pub fn prefer(self, a: &InstanceLoad, b: &InstanceLoad) -> bool {
+        use std::cmp::Ordering::*;
+        match self {
+            TreeKey::LeastLoaded => {
+                b.norm_load()
+                    .total_cmp(&a.norm_load())
+                    .then(b.norm_queue().total_cmp(&a.norm_queue()))
+                    .then(b.idx.cmp(&a.idx))
+                    == Less
+            }
+            TreeKey::LeastQueue => {
+                b.norm_queue()
+                    .total_cmp(&a.norm_queue())
+                    .then(b.norm_load().total_cmp(&a.norm_load()))
+                    .then(b.idx.cmp(&a.idx))
+                    == Less
+            }
+            TreeKey::LoadAwareU => {
+                b.u.total_cmp(&a.u)
+                    .then(b.norm_queue().total_cmp(&a.norm_queue()))
+                    .then(b.idx.cmp(&a.idx))
+                    == Less
+            }
+            TreeKey::LoadAwareQ => {
+                b.norm_queue()
+                    .total_cmp(&a.norm_queue())
+                    .then(b.u.total_cmp(&a.u))
+                    .then(b.idx.cmp(&a.idx))
+                    == Less
+            }
+            TreeKey::MostFreeMem => {
+                match a
+                    .mem_free
+                    .cmp(&b.mem_free)
+                    .then(b.norm_running().total_cmp(&a.norm_running()))
+                {
+                    Less => true,
+                    Greater => false,
+                    // exact tie: the LAST maximal candidate wins, as the
+                    // scan's max_by does
+                    Equal => b.idx > a.idx,
+                }
+            }
+        }
+    }
+}
+
+/// Merge two slot winners (positions or [`NONE_POS`]) under `key`.
+#[inline]
+fn tree_winner(key: TreeKey, a: usize, b: usize, loads: &[InstanceLoad]) -> usize {
+    if a == NONE_POS {
+        return b;
+    }
+    if b == NONE_POS {
+        return a;
+    }
+    if key.prefer(&loads[a], &loads[b]) {
+        b
+    } else {
+        a
+    }
+}
+
+/// Segment-tree-style min/max index over a [`LoadBook`]'s maintained
+/// entries: a 1-based implicit binary tree whose leaves hold eligible entry
+/// positions (or [`NONE_POS`]) and whose internal nodes hold the winner of
+/// their two children under [`TreeKey::prefer`]. Rebuild is O(n), a
+/// point update bubbles to the root in O(log n), and the overall best sits
+/// at the root — exact picks without the O(fleet) scan.
+#[derive(Debug)]
+pub struct TournamentTree {
+    key: TreeKey,
+    /// Power-of-two leaf count (>= entries); leaf `i` lives at `cap + i`.
+    cap: usize,
+    slots: Vec<usize>,
+}
+
+impl TournamentTree {
+    pub fn new(key: TreeKey) -> Self {
+        TournamentTree {
+            key,
+            cap: 0,
+            slots: Vec::new(),
+        }
+    }
+
+    pub fn key(&self) -> TreeKey {
+        self.key
+    }
+
+    /// Rebuild from scratch over `loads` (leaf `i` eligible iff
+    /// `eligible[i]`). O(n).
+    pub fn rebuild(&mut self, loads: &[InstanceLoad], eligible: &[bool]) {
+        let key = self.key;
+        self.cap = loads.len().next_power_of_two().max(1);
+        self.slots.clear();
+        self.slots.resize(2 * self.cap, NONE_POS);
+        for i in 0..loads.len() {
+            if eligible[i] {
+                self.slots[self.cap + i] = i;
+            }
+        }
+        for node in (1..self.cap).rev() {
+            let w = tree_winner(key, self.slots[2 * node], self.slots[2 * node + 1], loads);
+            self.slots[node] = w;
+        }
+    }
+
+    /// Re-key entry `pos` after its load (or eligibility) changed: reset
+    /// its leaf and bubble the winner chain to the root. O(log n).
+    pub fn update(&mut self, pos: usize, loads: &[InstanceLoad], eligible: &[bool]) {
+        if pos >= self.cap {
+            self.rebuild(loads, eligible);
+            return;
+        }
+        let key = self.key;
+        let mut node = self.cap + pos;
+        self.slots[node] = if eligible[pos] { pos } else { NONE_POS };
+        node /= 2;
+        while node >= 1 {
+            let w = tree_winner(key, self.slots[2 * node], self.slots[2 * node + 1], loads);
+            self.slots[node] = w;
+            node /= 2;
+        }
+    }
+
+    /// The best eligible position, or None when the tree is empty.
+    pub fn best(&self) -> Option<usize> {
+        match self.slots.get(1) {
+            Some(&w) if w != NONE_POS => Some(w),
+            _ => None,
+        }
+    }
+
+    /// Collect (in position order) every eligible leaf satisfying Alg 2's
+    /// near-tie predicate `u - min_u < TIE_EPS && norm_queue == min_q`,
+    /// pruning every subtree whose winner already sits outside the `u`
+    /// band. Sound only on a [`TreeKey::LoadAwareU`] tree: that tree's
+    /// subtree winner attains the subtree-minimum `u`, so
+    /// `winner.u - min_u >= TIE_EPS` implies the same for every leaf below
+    /// it (IEEE subtraction by a constant is monotone) — and the pruning
+    /// expression is the SAME `x - min_u >= TIE_EPS` the scan evaluates,
+    /// keeping the two bit-identical.
+    fn collect_ties(
+        &self,
+        node: usize,
+        loads: &[InstanceLoad],
+        min_u: f64,
+        min_q: f64,
+        out: &mut Vec<usize>,
+    ) {
+        debug_assert_eq!(self.key, TreeKey::LoadAwareU);
+        let Some(&w) = self.slots.get(node) else { return };
+        if w == NONE_POS || loads[w].u - min_u >= TIE_EPS {
+            return;
+        }
+        if node >= self.cap {
+            if loads[w].norm_queue() == min_q {
+                out.push(w);
+            }
+            return;
+        }
+        self.collect_ties(2 * node, loads, min_u, min_q, out);
+        self.collect_ties(2 * node + 1, loads, min_u, min_q, out);
+    }
+}
+
+/// The tournament-index state a [`LoadBook`] owns when indexing is enabled:
+/// one tree per requested key, a shared eligibility mask, and the deferred
+/// dirty set `set_queue`/`entry_mut` feed (flushed at the next pick).
+#[derive(Debug)]
+pub struct BookIndex {
+    trees: Vec<TournamentTree>,
+    eligible: Vec<bool>,
+    dirty: Vec<usize>,
+    dirty_mark: Vec<bool>,
+    /// Reusable near-tie buffer for the indexed Alg 2 rotation.
+    ties: Vec<usize>,
+}
+
+/// Power-of-two-choices candidate sampler: draws `k` DISTINCT eligible
+/// positions from `[0, n)` on a dedicated PRNG substream derived from the
+/// experiment seed ("route-p2c"), so enabling sampling never perturbs the
+/// workload/fault streams — and leaving it off draws nothing, keeping
+/// fixed-seed Reports byte-identical.
+#[derive(Debug)]
+pub struct RouteSampler {
+    rng: Rng,
+    scratch: Vec<usize>,
+}
+
+impl RouteSampler {
+    pub fn new(seed: u64) -> Self {
+        RouteSampler {
+            rng: Rng::new(seed).substream("route-p2c"),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Sample up to `k` distinct eligible positions from `[0, n)`. Small
+    /// fleets (`n <= k`) enumerate the eligible positions directly with
+    /// ZERO draws; large fleets use bounded rejection sampling (sparse
+    /// eligibility can return fewer than `k` — possibly zero — candidates,
+    /// and callers fall back to their filtered scan then).
+    pub fn sample(&mut self, n: usize, k: usize, mut eligible: impl FnMut(usize) -> bool) -> &[usize] {
+        self.scratch.clear();
+        if n == 0 || k == 0 {
+            return &self.scratch;
+        }
+        if n <= k {
+            for i in 0..n {
+                if eligible(i) {
+                    self.scratch.push(i);
+                }
+            }
+            return &self.scratch;
+        }
+        let max_attempts = (8 * k).max(16);
+        let mut attempts = 0;
+        while self.scratch.len() < k && attempts < max_attempts {
+            attempts += 1;
+            let i = self.rng.below(n as u64) as usize;
+            if eligible(i) && !self.scratch.contains(&i) {
+                self.scratch.push(i);
+            }
+        }
+        &self.scratch
+    }
+}
+
+/// The p2c decision step: the best position among `candidates` under
+/// `key`'s exact comparator (deterministic over unordered candidate sets —
+/// [`TreeKey::prefer`] breaks exact ties by `idx`).
+pub fn best_of(key: TreeKey, loads: &[InstanceLoad], candidates: &[usize]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for &c in candidates {
+        best = match best {
+            Some(b) if !key.prefer(&loads[b], &loads[c]) => Some(b),
+            _ => Some(c),
+        };
+    }
+    best
 }
 
 // ---------------------------------------------------------------------------
@@ -1036,6 +1457,131 @@ mod tests {
         let mut r = LoadAware::new(1.6);
         let picks: Vec<usize> = (0..6).map(|_| r.pick(&loads).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    /// A small book with varied counters for index/scan comparisons.
+    fn varied_book(n: usize) -> LoadBook {
+        let mut b = LoadBook::with_instances(n);
+        for i in 0..n {
+            b.set_queue(i, (i * 7 + 3) % 5, (i * 13 + 1) % 9);
+            let e = b.entry_mut(i);
+            e.u = ((i * 31 + 5) % 17) as f64 / 10.0;
+            e.running = (i * 3) % 6;
+            e.mem_free = ((i * 11 + 2) % 13) as u64 * 1_000;
+        }
+        b
+    }
+
+    #[test]
+    fn tournament_index_matches_scan_for_each_key() {
+        for n in [1usize, 2, 3, 7, 8, 9, 33] {
+            let mut b = varied_book(n);
+            b.enable_index(&[TreeKey::LeastLoaded, TreeKey::LeastQueue, TreeKey::MostFreeMem]);
+            assert_eq!(b.pick_indexed(TreeKey::LeastLoaded), LeastLoaded.pick(b.loads()), "n={n}");
+            assert_eq!(b.pick_indexed(TreeKey::LeastQueue), LeastQueue.pick(b.loads()), "n={n}");
+            assert_eq!(b.pick_indexed(TreeKey::MostFreeMem), MostFreeMem.pick(b.loads()), "n={n}");
+            // incremental update keeps them identical
+            b.set_queue(n / 2, 0, 0);
+            assert_eq!(b.pick_indexed(TreeKey::LeastLoaded), LeastLoaded.pick(b.loads()));
+            assert_eq!(b.pick_indexed(TreeKey::LeastQueue), LeastQueue.pick(b.loads()));
+        }
+    }
+
+    #[test]
+    fn tournament_index_respects_eligibility_and_growth() {
+        let mut b = varied_book(4);
+        b.enable_index(&[TreeKey::LeastQueue]);
+        let full = b.pick_indexed(TreeKey::LeastQueue).unwrap();
+        b.set_eligible(full, false);
+        let next = b.pick_indexed(TreeKey::LeastQueue).unwrap();
+        assert_ne!(next, full, "ineligible winner must be excluded");
+        // the indexed pick over the eligible subset equals the filtered scan
+        let keep: Vec<InstanceLoad> =
+            b.loads().iter().filter(|l| l.idx != full).copied().collect();
+        assert_eq!(b.loads()[next].idx, keep[LeastQueue.pick(&keep).unwrap()].idx);
+        // scale-out past the power-of-two capacity rebuilds transparently
+        for _ in 0..8 {
+            let i = b.add_instance();
+            b.set_queue(i, 0, 0);
+        }
+        assert_eq!(
+            b.pick_indexed(TreeKey::LeastQueue),
+            LeastQueue.pick(&b.filtered(|l| l.idx != full).to_vec())
+                .map(|p| if p >= full { p + 1 } else { p }),
+        );
+        // everything ineligible -> None
+        for i in 0..b.len() {
+            b.set_eligible(i, false);
+        }
+        assert_eq!(b.pick_indexed(TreeKey::LeastQueue), None);
+    }
+
+    #[test]
+    fn indexed_load_aware_matches_scan_rotation() {
+        let mut b = varied_book(9);
+        b.enable_index(&[TreeKey::LoadAwareU, TreeKey::LoadAwareQ]);
+        // force a near-tie band: three devices share the minimum-ish U
+        for i in [1usize, 4, 7] {
+            b.set_queue(i, 0, 0);
+            b.entry_mut(i).u = 0.10 + 0.01 * (i % 2) as f64;
+        }
+        for rr in 0..12 {
+            assert_eq!(
+                b.pick_indexed_load_aware(1.6, rr),
+                pick_load_aware(b.loads(), 1.6, rr),
+                "rr={rr}"
+            );
+        }
+        // overloaded everywhere: the LoadAwareQ fallback must agree too
+        for i in 0..b.len() {
+            b.entry_mut(i).u = 1.9 + 0.01 * i as f64;
+        }
+        for rr in 0..4 {
+            assert_eq!(
+                b.pick_indexed_load_aware(1.6, rr),
+                pick_load_aware(b.loads(), 1.6, rr)
+            );
+        }
+    }
+
+    #[test]
+    fn route_sampler_draws_distinct_eligible_candidates() {
+        let mut s = RouteSampler::new(42);
+        // n <= k enumerates eligible positions with zero draws
+        assert_eq!(s.sample(3, 8, |_| true), &[0, 1, 2]);
+        assert_eq!(s.sample(3, 8, |i| i != 1), &[0, 2]);
+        // large n: k distinct positions
+        let picks: Vec<usize> = s.sample(1000, 2, |_| true).to_vec();
+        assert_eq!(picks.len(), 2);
+        assert_ne!(picks[0], picks[1]);
+        assert!(picks.iter().all(|&i| i < 1000));
+        // an eligibility filter is always honored
+        let evens: Vec<usize> = s.sample(1000, 2, |i| i % 2 == 0).to_vec();
+        assert!(evens.iter().all(|&i| i % 2 == 0));
+        // same seed -> same stream
+        let mut a = RouteSampler::new(7);
+        let mut c = RouteSampler::new(7);
+        for _ in 0..16 {
+            assert_eq!(a.sample(512, 2, |_| true).to_vec(), c.sample(512, 2, |_| true).to_vec());
+        }
+        // nothing eligible: bounded attempts, empty result
+        assert!(s.sample(1000, 2, |_| false).is_empty());
+    }
+
+    #[test]
+    fn best_of_matches_policy_comparators() {
+        let b = varied_book(16);
+        let all: Vec<usize> = (0..16).collect();
+        assert_eq!(best_of(TreeKey::LeastLoaded, b.loads(), &all), LeastLoaded.pick(b.loads()));
+        assert_eq!(best_of(TreeKey::LeastQueue, b.loads(), &all), LeastQueue.pick(b.loads()));
+        assert_eq!(best_of(TreeKey::MostFreeMem, b.loads(), &all), MostFreeMem.pick(b.loads()));
+        // candidate order must not matter
+        let rev: Vec<usize> = (0..16).rev().collect();
+        assert_eq!(
+            best_of(TreeKey::LeastQueue, b.loads(), &rev),
+            best_of(TreeKey::LeastQueue, b.loads(), &all)
+        );
+        assert_eq!(best_of(TreeKey::LeastLoaded, b.loads(), &[]), None);
     }
 
     fn fl(idx: usize, busy: f64, queued: usize, drainable: bool) -> FleetLoad {

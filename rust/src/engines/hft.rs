@@ -12,7 +12,7 @@
 use super::common::{self, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
-use crate::config::{ExperimentConfig, FaultConfig};
+use crate::config::{ExperimentConfig, FaultConfig, RouteMode};
 use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency, PrefillItem};
@@ -53,6 +53,13 @@ pub struct HftEngine {
     /// Maintained per-instance loads (round robin ignores the values, but
     /// the maintained slice lets load-aware policies drop in unchanged).
     book: fleet::LoadBook,
+    /// Resolved routing mode: static round robin is already O(1), so only
+    /// the elastic filtered path has a p2c fast path here.
+    route_mode: RouteMode,
+    /// p2c sample width (k).
+    sample_k: usize,
+    /// Dedicated `"route-p2c"` PRNG substream — zero draws unless p2c runs.
+    sampler: fleet::RouteSampler,
     /// Specs the autoscaler may scale out with (price/perf choice).
     catalog: Vec<GpuSpec>,
     autoscaler: fleet::Autoscaler,
@@ -98,6 +105,9 @@ impl HftEngine {
             inflight: 0,
             router: fleet::RoundRobin::default(),
             book,
+            route_mode: cfg.routing.resolve(cfg.n_devices),
+            sample_k: cfg.routing.sample_k.max(1),
+            sampler: fleet::RouteSampler::new(cfg.workload.seed),
             catalog: if cfg.gpu_catalog.is_empty() {
                 vec![cfg.gpu.clone()]
             } else {
@@ -129,6 +139,22 @@ impl HftEngine {
     /// every one is still spinning up).
     fn route(&mut self, now: f64) -> usize {
         if self.autoscaler.enabled() || self.faults.enabled() {
+            // p2c fast path: round robin over a filtered view is O(fleet)
+            // per arrival; sampling k active unfrozen candidates and
+            // least-loading among them keeps elastic HFT O(1) too
+            if self.route_mode == RouteMode::P2c {
+                let n = self.insts.len();
+                let k = self.sample_k;
+                let (insts, devices) = (&self.insts, &self.devices);
+                let cands = self.sampler.sample(n, k, |i| {
+                    devices[insts[i].device].is_active() && now >= insts[i].frozen_until
+                });
+                if let Some(i) =
+                    fleet::best_of(fleet::TreeKey::LeastLoaded, self.book.loads(), cands)
+                {
+                    return i;
+                }
+            }
             {
                 let (book, insts, devices) = (&mut self.book, &self.insts, &self.devices);
                 let loads = book.filtered(|l| {

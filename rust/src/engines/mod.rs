@@ -29,6 +29,25 @@
 //!   finish/drain transitions) or the book's reusable scratch for filtered
 //!   and derived candidate sets; per-event snapshot `Vec`s are not
 //!   allocated on the hot path.
+//! * **Routing modes** ([`crate::config::RouteMode`], CLI `--route-mode`,
+//!   JSON `route_mode`; `--route-sample-k` / `--route-scan-threshold`):
+//!   every load-comparing pick runs in one of three modes. `scan` is the
+//!   exact O(fleet) reference; `tournament` keeps a
+//!   [`fleet::TournamentTree`] min-index over the book (O(log n) exact
+//!   picks, marked dirty at the existing `set_queue`/`entry_mut` sync
+//!   points and repaired lazily at the next pick); `p2c` draws k (default
+//!   2) candidates per arrival from a dedicated `"route-p2c"` PRNG
+//!   substream of the experiment seed and picks the best of the sample —
+//!   O(1), approximate, deterministic. The default `auto` resolves to
+//!   `scan` at fleet ≤ 64 (so all fixed-seed golden Reports stay
+//!   byte-identical) and `tournament` above. Per-engine support: vLLM
+//!   LeastLoaded and DistServe prefill LeastQueue implement both
+//!   `tournament` and `p2c`; policies whose key is derived per-arrival
+//!   rather than book-maintained (vLLM cache-aware, DistServe decode
+//!   free-memory, BanaServe load-aware `u`, elastic HFT) implement `p2c`
+//!   and fall back to the exact scan under `tournament`. Every mode
+//!   preserves the capacity-normalized comparison and tie-break order of
+//!   the scan it replaces — pinned by `tests/prop_routing.rs`.
 //! * **Timers** are encoded/decoded exclusively through
 //!   [`fleet::FleetEvent`]; the raw `(tag, a, b)` wire format in
 //!   [`common::tags`] is an implementation detail of that table.
@@ -219,6 +238,9 @@ pub struct ExperimentOutcome {
     /// Per-device (compute, memory) time-averaged utilization.
     pub device_util: Vec<(f64, f64)>,
     pub extras: EngineExtras,
+    /// Wall-clock seconds spent simulating (excludes trace generation) —
+    /// the denominator of `sim_wall_ratio` in the megafleet scenario.
+    pub wall_secs: f64,
 }
 
 /// The uniform surface an engine exposes to [`run_experiment`]. The
@@ -276,12 +298,14 @@ fn run_one<E: EngineHarness>(
 pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
     let reqs = cfg.workload.generate();
     let submitted = reqs.len() as u64;
+    let started = std::time::Instant::now();
     let (report, util, mut extras) = match cfg.engine {
         EngineKind::HfStatic => run_one::<hft::HftEngine>(cfg, reqs),
         EngineKind::Vllm => run_one::<vllm_sim::VllmEngine>(cfg, reqs),
         EngineKind::DistServe => run_one::<distserve_sim::DistServeEngine>(cfg, reqs),
         EngineKind::BanaServe => run_one::<banaserve::BanaEngine>(cfg, reqs),
     };
+    let wall_secs = started.elapsed().as_secs_f64();
     if cfg.autoscale.ttft_slo_ms <= 0.0 {
         extras.ttft_slo_attainment = 1.0;
     }
@@ -290,5 +314,6 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentOutcome {
         report,
         device_util: util,
         extras,
+        wall_secs,
     }
 }

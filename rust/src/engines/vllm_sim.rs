@@ -11,7 +11,7 @@
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
 use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
-use crate::config::{ExperimentConfig, FaultConfig};
+use crate::config::{ExperimentConfig, FaultConfig, RouteMode};
 use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::kvcache::RadixTree;
 use crate::metrics::{Collector, SloTracker};
@@ -69,6 +69,12 @@ pub struct VllmEngine {
     cache_budgets: Vec<u64>,
     pub policy: RouterPolicy,
     router: Box<dyn fleet::Router>,
+    /// Resolved routing mode for this fleet size (`auto` → scan at ≤ 64).
+    route_mode: RouteMode,
+    /// p2c sample width (k).
+    sample_k: usize,
+    /// Dedicated `"route-p2c"` PRNG substream — zero draws unless p2c runs.
+    sampler: fleet::RouteSampler,
     /// Maintained per-instance loads: synced at admit/step/finish
     /// transitions so `route` reads a maintained slice instead of
     /// rebuilding a snapshot `Vec` per arrival.
@@ -133,9 +139,15 @@ impl VllmEngine {
             .iter()
             .map(|d| d.mem_free() / 5 / cfg.model.kv_bytes_per_token().max(1))
             .collect();
+        let route_mode = cfg.routing.resolve(cfg.n_devices);
         let mut book = fleet::LoadBook::with_instances(cfg.n_devices);
         for i in 0..cfg.n_devices {
             book.entry_mut(i).weight = devices[i].spec.weight;
+        }
+        // tournament index only for the book-maintained policy; cache-aware
+        // keys depend on the incoming prompt and fall back to the scan
+        if route_mode == RouteMode::Tournament && matches!(policy, RouterPolicy::LeastLoaded) {
+            book.enable_index(&[fleet::TreeKey::LeastLoaded]);
         }
         let mut col = Collector::new();
         col.window_start = cfg.warmup;
@@ -154,6 +166,9 @@ impl VllmEngine {
             cache_budgets,
             policy,
             router: policy.build(),
+            route_mode,
+            sample_k: cfg.routing.sample_k.max(1),
+            sampler: fleet::RouteSampler::new(cfg.workload.seed),
             book,
             finished_buf: Vec::new(),
             seqs: fleet::SeqTable::new(),
@@ -195,6 +210,22 @@ impl VllmEngine {
     /// instead; static no-fault fleets keep the zero-copy maintained slice
     /// (behavior- and perf-preserving).
     fn route(&mut self, req: &Request, now: f64) -> usize {
+        // sampled / indexed fast paths (O(1) / O(log n)); a miss (no valid
+        // winner, e.g. every sampled instance still frozen) falls through
+        // to the exact scan below
+        match self.route_mode {
+            RouteMode::P2c if !matches!(self.policy, RouterPolicy::RoundRobin) => {
+                if let Some(i) = self.route_p2c(req, now) {
+                    return i;
+                }
+            }
+            RouteMode::Tournament if matches!(self.policy, RouterPolicy::LeastLoaded) => {
+                if let Some(i) = self.route_tournament(now) {
+                    return i;
+                }
+            }
+            _ => {}
+        }
         if matches!(self.policy, RouterPolicy::CacheAware { .. }) && self.prefix_caching {
             let plen = req.cache_tokens.len().max(1) as f64;
             for i in 0..self.caches.len() {
@@ -224,6 +255,71 @@ impl VllmEngine {
         }
         let pos = self.router.pick(self.book.loads()).expect("non-empty fleet");
         self.book.loads()[pos].idx
+    }
+
+    /// O(log n) exact pick off the tournament index, validated against the
+    /// live active/frozen state (the index tracks device membership but
+    /// spin-up freezes are time-based). A min-policy winner that passes
+    /// validation is exactly the filtered scan's winner; an invalid winner
+    /// returns None and the caller's scan fallback handles it.
+    fn route_tournament(&mut self, now: f64) -> Option<usize> {
+        let best = self.book.pick_indexed(fleet::TreeKey::LeastLoaded)?;
+        let ok = self.devices[self.insts[best].device].is_active()
+            && now >= self.insts[best].frozen_until;
+        if ok {
+            Some(best)
+        } else {
+            None
+        }
+    }
+
+    /// Power-of-two-choices pick: k sampled candidates from the active
+    /// unfrozen view, best of the sample under the policy's own comparison
+    /// (cache-aware probes the k sampled caches only — that is the point).
+    fn route_p2c(&mut self, req: &Request, now: f64) -> Option<usize> {
+        let n = self.insts.len();
+        let elastic = self.autoscaler.enabled() || self.faults.enabled();
+        let k = self.sample_k;
+        let (insts, devices) = (&self.insts, &self.devices);
+        let cands = self.sampler.sample(n, k, |i| {
+            !elastic || (devices[insts[i].device].is_active() && now >= insts[i].frozen_until)
+        });
+        if cands.is_empty() {
+            return None;
+        }
+        match self.policy {
+            RouterPolicy::RoundRobin => None,
+            RouterPolicy::LeastLoaded => {
+                fleet::best_of(fleet::TreeKey::LeastLoaded, self.book.loads(), cands)
+            }
+            RouterPolicy::CacheAware { w_cache, w_load } => {
+                let loads = self.book.loads();
+                let plen = req.cache_tokens.len().max(1) as f64;
+                // max-load normalization over the sample (the scan uses the
+                // fleet max; over k candidates this is the approximation)
+                let max_load = cands
+                    .iter()
+                    .map(|&i| loads[i].norm_load())
+                    .fold(0.0_f64, f64::max)
+                    .max(1.0);
+                let mut best = None;
+                let mut best_score = f64::NEG_INFINITY;
+                for &i in cands {
+                    let hit = if self.prefix_caching {
+                        self.caches[i].peek_prefix(&req.cache_tokens) as f64 / plen
+                    } else {
+                        0.0
+                    };
+                    let score = w_cache * hit - w_load * (loads[i].norm_load() / max_load);
+                    // >= : ties resolve to the LAST maximal, like the scan
+                    if best.is_none() || score >= best_score {
+                        best = Some(i);
+                        best_score = score;
+                    }
+                }
+                best
+            }
+        }
     }
 
     /// Try to start a step on instance `i`, then sync its load-book entry
@@ -488,6 +584,7 @@ impl VllmEngine {
             }
             FaultKind::Recover => {
                 if crate::cluster::recover_device(&mut self.devices, ev.device) {
+                    self.book.set_eligible(ev.device, true);
                     let active = crate::cluster::active_count(&self.devices);
                     self.faults.stats.on_capacity_gain(now, active);
                     self.fleet.sample(now, &self.devices);
@@ -516,6 +613,7 @@ impl VllmEngine {
     fn crash_teardown(&mut self, i: usize, q: &mut EventQueue) {
         let now = q.now();
         self.insts[i].step_token += 1; // in-flight StepDone becomes stale
+        self.book.set_eligible(i, false);
         let dev = self.insts[i].device;
         let mut victims: Vec<u64> = Vec::new();
         if let Some(step) = self.insts[i].step.take() {
@@ -699,6 +797,7 @@ impl VllmEngine {
     fn begin_drain(&mut self, victim: usize, q: &mut EventQueue) {
         let now = q.now();
         crate::cluster::begin_drain(&mut self.devices, self.insts[victim].device);
+        self.book.set_eligible(victim, false);
         self.drains += 1;
         let mut stranded = std::mem::take(&mut self.stranded_buf);
         stranded.clear();

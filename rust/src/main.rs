@@ -13,7 +13,7 @@
 //!                     `rust/src/scenario/`; the registered names and doc
 //!                     lines below are printed from the registry itself:
 //!                       bursty-autoscale, hetero-slo, cache-skew,
-//!                       fault-recovery
+//!                       fault-recovery, megafleet
 //!   sweep             RPS sweep for one engine/profile
 //!   figure <id>       regenerate a paper figure (1|2a|2b|6|7|8|9|10|11)
 //!   migrate-demo      show Alg 1 decisions on a synthetic imbalance
@@ -30,13 +30,20 @@
 //! default, deterministic per --seed): --fault-enabled --fault-mtbf
 //! --fault-recovery-time --fault-straggler-prob --fault-straggler-factor
 //! --fault-straggler-secs --fault-retry-budget --fault-retry-backoff
-//! (JSON keys: fault_enabled, fault_mtbf, ...); sweep and every scenario add
+//! (JSON keys: fault_enabled, fault_mtbf, ...); scalable routing (defaults
+//! reproduce the historical scan bit-for-bit at fleet <= 64):
+//! --route-mode auto|scan|tournament|p2c --route-sample-k
+//! --route-scan-threshold; diurnal multi-tenant traces: --diurnal-ratio
+//! --diurnal-day-secs --tenants --tenant-zipf-s (JSON keys: route_mode,
+//! route_sample_k, route_scan_threshold, diurnal_ratio, tenants,
+//! tenant_zipf_s); sweep and every scenario add
 //! --seeds N (N deterministic seeds derived from --seed; 5 = the paper's
 //! CI methodology) and --threads (parallel cells, default: all cores);
 //! scenarios also take --out-dir plus their own flags (e.g.
 //! --base-devices --peak-devices --burst-factor --burst-secs
 //! --period-secs, hetero-slo --engines, cache-skew --devices,
-//! fault-recovery --crash-mtbf --recovery-time --retry-budget).
+//! fault-recovery --crash-mtbf --recovery-time --retry-budget,
+//! megafleet --rps --duration --tenants --diurnal-ratio).
 //! Unknown flags are rejected: a typo'd flag aborts the command instead
 //! of silently running with the default value.
 

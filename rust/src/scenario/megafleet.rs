@@ -1,0 +1,164 @@
+//! The ISSUE 7 scalability proof: BanaServe and DistServe on a diurnal
+//! multi-tenant trace at fleet sizes {64, 1024, 8192}, once per routing
+//! mode (exact scan reference, power-of-two-choices sampling, tournament
+//! index). The scan pays O(fleet) per arrival and collapses at 8192; the
+//! sampled/indexed modes keep the simulator usable (`sim_wall_ratio`)
+//! without giving up routing quality — the gate requires P99 TTFT within
+//! 5% of the scan at fleet 64 AND a wall-clock win at fleet ≥ 1024.
+//!
+//! `--rps` is the FLEET-WIDE aggregate peak rate (default 200): arrivals
+//! per second stay constant across fleet sizes, so the per-arrival routing
+//! cost is the only thing that grows with the fleet — exactly the axis
+//! this scenario measures.
+
+use super::{Agg, EngineAgg, Metric, ScenarioPlan, ScenarioSpec, SummaryCol, Variant};
+use crate::bench_support::routed_skew;
+use crate::config::{EngineKind, ExperimentConfig, RouteMode};
+use crate::util::args::Args;
+use crate::util::json;
+use crate::workload::ArrivalProcess;
+
+pub const SPEC: ScenarioSpec = ScenarioSpec {
+    name: "megafleet",
+    doc: "scan vs p2c vs tournament routing at fleet {64, 1024, 8192} on a diurnal trace",
+    out_file: "megafleet.json",
+    row_metrics: &[
+        Metric { key: "n_requests", get: |c| c.out.report.n_requests as f64 },
+        Metric { key: "p99_ttft_s", get: |c| c.out.report.ttft.p99() },
+        Metric { key: "routed_skew", get: |c| routed_skew(&c.out.extras.routed_counts) },
+        Metric { key: "wall_secs", get: |c| c.out.wall_secs },
+        Metric {
+            key: "sim_wall_ratio",
+            get: |c| c.out.report.makespan / c.out.wall_secs.max(1e-9),
+        },
+        Metric { key: "throughput_tok_s", get: |c| c.out.report.throughput_tok_s },
+        Metric { key: "makespan_s", get: |c| c.out.report.makespan },
+    ],
+    summary: &[
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Mean },
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Ci95 },
+        SummaryCol { key: "routed_skew", agg: Agg::Mean },
+        SummaryCol { key: "wall_secs", agg: Agg::Mean },
+        SummaryCol { key: "sim_wall_ratio", agg: Agg::Mean },
+    ],
+    extra_keys: &[],
+    build,
+};
+
+/// mode × fleet grid; the label encodes both and `make_cfg` parses it back.
+const VARIANTS: [Variant; 9] = [
+    Variant { label: "scan-64", devices: 64, elastic: false },
+    Variant { label: "p2c-64", devices: 64, elastic: false },
+    Variant { label: "tournament-64", devices: 64, elastic: false },
+    Variant { label: "scan-1024", devices: 1024, elastic: false },
+    Variant { label: "p2c-1024", devices: 1024, elastic: false },
+    Variant { label: "tournament-1024", devices: 1024, elastic: false },
+    Variant { label: "scan-8192", devices: 8192, elastic: false },
+    Variant { label: "p2c-8192", devices: 8192, elastic: false },
+    Variant { label: "tournament-8192", devices: 8192, elastic: false },
+];
+
+fn build(a: &Args) -> Result<ScenarioPlan, String> {
+    let rps = a.f64_or("rps", 200.0); // fleet-wide aggregate peak
+    let duration = a.f64_or("duration", 20.0);
+    let tenants = a.usize_or("tenants", 64);
+    let ratio = a.f64_or("diurnal-ratio", 4.0);
+    let model = a.str_or("model", "llama-13b").to_string();
+    Ok(ScenarioPlan {
+        banner: format!(
+            "megafleet: {rps} rps aggregate, {duration}s diurnal trace, {tenants} tenants, \
+             fleets {{64, 1024, 8192}} x modes {{scan, p2c, tournament}}"
+        ),
+        engines: vec![EngineKind::BanaServe, EngineKind::DistServe],
+        variants: VARIANTS.to_vec(),
+        params: vec![
+            ("rps", json::num(rps)),
+            ("tenants", json::num(tenants as f64)),
+            ("diurnal_ratio", json::num(ratio)),
+        ],
+        make_cfg: Box::new(move |engine, v, seed| {
+            let mode = v
+                .label
+                .split('-')
+                .next()
+                .and_then(RouteMode::parse)
+                .unwrap_or(RouteMode::Auto);
+            let mut c = ExperimentConfig::default_for(engine, &model, rps, seed);
+            c.n_devices = v.devices;
+            c.n_prefill = (v.devices / 2).max(1);
+            c.warmup = 0.0;
+            c.routing.mode = mode;
+            c.workload.duration = duration;
+            c.workload.seed = seed;
+            // day = one trace: the run sweeps trough -> peak -> trough
+            c.workload.arrivals = ArrivalProcess::diurnal(rps, ratio, duration.max(1e-3));
+            c.workload.tenants.n_tenants = tenants.max(1);
+            c.workload.tenants.zipf_s = 1.2;
+            c
+        }),
+        row_extra: None,
+        gate,
+    })
+}
+
+/// Gate: (1) every fleet-8192 cell finished with a finite sim_wall_ratio;
+/// (2) at fleet 64 the sampled/indexed modes keep P99 TTFT within 5% of
+/// the exact scan (plus a 50 ms absolute epsilon for near-zero tails);
+/// (3) at fleet ≥ 1024 p2c beats the scan on wall-clock for both engines,
+/// and the tournament index beats it for DistServe (BanaServe's per-
+/// arrival `U` cannot be tree-indexed, so its tournament mode IS the scan
+/// and is exempt from the wall-clock requirement).
+fn gate(aggs: &[EngineAgg]) -> i32 {
+    let mut ok = true;
+    for ea in aggs.iter() {
+        let name = ea.engine.name();
+        let Some(scan64) = ea.variant("scan-64") else { return 2 };
+        let p_scan = scan64.mean("p99_ttft_s");
+        for mode in ["p2c", "tournament"] {
+            let label = format!("{mode}-64");
+            let Some(v) = ea.variant(&label) else { return 2 };
+            let p = v.mean("p99_ttft_s");
+            let pass = p <= p_scan * 1.05 + 0.05;
+            println!(
+                "  -> {name} {mode} p99 TTFT at fleet 64: {p:.3}s vs scan {p_scan:.3}s ({})",
+                if pass { "within 5%" } else { "DEGRADED" }
+            );
+            ok &= pass;
+        }
+        for label in ["scan-8192", "p2c-8192", "tournament-8192"] {
+            let r = ea.variant(label).map(|v| v.mean("sim_wall_ratio")).unwrap_or(0.0);
+            let finite = r.is_finite() && r > 0.0;
+            if !finite {
+                println!("  -> {name} {label}: sim_wall_ratio {r} not finite/positive");
+            }
+            ok &= finite;
+        }
+        let wall = |mode: &str| -> f64 {
+            ["1024", "8192"]
+                .iter()
+                .map(|f| {
+                    ea.variant(&format!("{mode}-{f}"))
+                        .map(|v| v.mean("wall_secs"))
+                        .unwrap_or(f64::INFINITY)
+                })
+                .sum()
+        };
+        let (ws, wp) = (wall("scan"), wall("p2c"));
+        let p2c_fast = wp < ws;
+        println!(
+            "  -> {name} wall-clock at fleet >= 1024: p2c {wp:.2}s vs scan {ws:.2}s ({})",
+            if p2c_fast { "p2c wins" } else { "NO speedup" }
+        );
+        ok &= p2c_fast;
+        if ea.engine == EngineKind::DistServe {
+            let wt = wall("tournament");
+            let t_fast = wt < ws;
+            println!(
+                "  -> {name} wall-clock at fleet >= 1024: tournament {wt:.2}s vs scan {ws:.2}s ({})",
+                if t_fast { "tournament wins" } else { "NO speedup" }
+            );
+            ok &= t_fast;
+        }
+    }
+    i32::from(!ok)
+}

@@ -63,13 +63,15 @@ pub mod bursty_autoscale;
 pub mod cache_skew;
 pub mod fault_recovery;
 pub mod hetero_slo;
+pub mod megafleet;
 
 /// All registered scenarios, in `--list-scenarios` order.
-pub static REGISTRY: [ScenarioSpec; 4] = [
+pub static REGISTRY: [ScenarioSpec; 5] = [
     bursty_autoscale::SPEC,
     hetero_slo::SPEC,
     cache_skew::SPEC,
     fault_recovery::SPEC,
+    megafleet::SPEC,
 ];
 
 pub fn by_name(name: &str) -> Option<&'static ScenarioSpec> {
@@ -511,6 +513,7 @@ mod tests {
         assert!(names.contains(&"hetero-slo"));
         assert!(names.contains(&"cache-skew"));
         assert!(names.contains(&"fault-recovery"));
+        assert!(names.contains(&"megafleet"));
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();

@@ -89,9 +89,46 @@ pub enum ArrivalProcess {
         burst_secs: f64,
         period_secs: f64,
     },
+    /// Day/night rate envelope with periodic bursts riding on top (the
+    /// ROADMAP "million-user" diurnal trace): rate follows a raised-cosine
+    /// between `rps_peak` and `rps_peak / day_night_ratio` over a
+    /// `day_secs`-long day, and every `burst_period` seconds a
+    /// `burst_secs`-long window multiplies the envelope by `burst_factor`
+    /// (the "everyone opens the app at 9am" spike).
+    Diurnal {
+        rps_peak: f64,
+        day_night_ratio: f64,
+        day_secs: f64,
+        burst_factor: f64,
+        burst_secs: f64,
+        burst_period: f64,
+    },
 }
 
 impl ArrivalProcess {
+    /// Diurnal process with the default burst shape: 1.5× spikes lasting
+    /// 1/20 of a day, every 1/4 day.
+    pub fn diurnal(rps_peak: f64, day_night_ratio: f64, day_secs: f64) -> Self {
+        ArrivalProcess::Diurnal {
+            rps_peak,
+            day_night_ratio: day_night_ratio.max(1.0),
+            day_secs: day_secs.max(1e-9),
+            burst_factor: 1.5,
+            burst_secs: day_secs.max(1e-9) / 20.0,
+            burst_period: day_secs.max(1e-9) / 4.0,
+        }
+    }
+
+    /// The nominal peak rate of the process (the `rps` knob an operator
+    /// would size capacity against). Used by config layering: `--rps` sets
+    /// the peak, `--diurnal-ratio` reshapes around it.
+    pub fn peak(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rps } => rps,
+            ArrivalProcess::Bursty { rps, .. } => rps,
+            ArrivalProcess::Diurnal { rps_peak, .. } => rps_peak,
+        }
+    }
     /// Instantaneous rate at time t.
     pub fn rate_at(&self, t: f64) -> f64 {
         match *self {
@@ -109,6 +146,27 @@ impl ArrivalProcess {
                     rps
                 }
             }
+            ArrivalProcess::Diurnal {
+                rps_peak,
+                day_night_ratio,
+                day_secs,
+                burst_factor,
+                burst_secs,
+                burst_period,
+            } => {
+                let trough = rps_peak / day_night_ratio;
+                // raised cosine: rate(0) = trough (midnight), rate(day/2) = peak
+                let envelope = trough
+                    + (rps_peak - trough)
+                        * 0.5
+                        * (1.0 - (2.0 * std::f64::consts::PI * t / day_secs).cos());
+                let phase = t % burst_period;
+                if phase < burst_secs {
+                    envelope * burst_factor
+                } else {
+                    envelope
+                }
+            }
         }
     }
 
@@ -119,6 +177,11 @@ impl ArrivalProcess {
             ArrivalProcess::Bursty {
                 rps, burst_factor, ..
             } => rps * burst_factor,
+            ArrivalProcess::Diurnal {
+                rps_peak,
+                burst_factor,
+                ..
+            } => rps_peak * burst_factor,
         };
         let mut out = Vec::new();
         let mut t = 0.0;
@@ -174,6 +237,28 @@ impl PrefixConfig {
     }
 }
 
+/// Multi-tenant mixing: each request belongs to a Zipf-popular tenant, and
+/// tenants have *disjoint* template pools (tenant t's template j is globally
+/// `t * n_templates + j`). One tenant (the default) degenerates to the
+/// single-pool behaviour with zero extra PRNG draws, so every existing
+/// fixed-seed trace stays byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantConfig {
+    /// Number of tenants (1 = single-tenant, the legacy behaviour).
+    pub n_tenants: usize,
+    /// Zipf skew of tenant popularity.
+    pub zipf_s: f64,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig {
+            n_tenants: 1,
+            zipf_s: 1.1,
+        }
+    }
+}
+
 /// Full workload description.
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -182,6 +267,7 @@ pub struct WorkloadConfig {
     pub duration: f64,
     pub seed: u64,
     pub prefix: PrefixConfig,
+    pub tenants: TenantConfig,
 }
 
 impl WorkloadConfig {
@@ -192,6 +278,7 @@ impl WorkloadConfig {
             duration,
             seed,
             prefix: PrefixConfig::default(),
+            tenants: TenantConfig::default(),
         }
     }
 
@@ -201,7 +288,11 @@ impl WorkloadConfig {
         let mut r_arr = root.substream("arrivals");
         let mut r_len = root.substream("lengths");
         let mut r_pfx = root.substream("prefixes");
+        // tenant draws live on their own substream so enabling multi-tenancy
+        // never shifts the arrival/length/prefix streams
+        let mut r_ten = root.substream("tenants");
         let zipf = Zipf::new(self.prefix.n_templates.max(1), self.prefix.zipf_s);
+        let tenant_zipf = Zipf::new(self.tenants.n_tenants.max(1), self.tenants.zipf_s);
 
         let times = self.arrivals.arrivals(self.duration, &mut r_arr);
         let mut out = Vec::with_capacity(times.len());
@@ -214,7 +305,15 @@ impl WorkloadConfig {
 
             let mut cache_tokens = Vec::with_capacity(cacheable);
             if self.prefix.share_prob > 0.0 && r_pfx.chance(self.prefix.share_prob) {
-                let template = zipf.sample(&mut r_pfx) as u32;
+                let local = zipf.sample(&mut r_pfx) as u32;
+                // tenant 0 with zero draws when multi-tenancy is off: the
+                // template id (and thus every token) is unchanged
+                let tenant = if self.tenants.n_tenants > 1 {
+                    tenant_zipf.sample(&mut r_ten) as u32
+                } else {
+                    0
+                };
+                let template = tenant * self.prefix.n_templates as u32 + local;
                 let (lo, hi) = self.prefix.shared_frac;
                 let frac = lo + r_pfx.f64() * (hi - lo);
                 let shared = ((cacheable as f64 * frac) as usize).min(cacheable);
@@ -474,6 +573,88 @@ mod tests {
         let reqs = w.generate();
         let back = trace_from_json(&trace_to_json(&reqs)).unwrap();
         assert_eq!(reqs, back);
+    }
+
+    #[test]
+    fn diurnal_envelope_peaks_midday_and_bursts_ride_on_top() {
+        let p = ArrivalProcess::diurnal(10.0, 5.0, 100.0);
+        // constructor fills in the default burst shape
+        let (bf, bs, bp) = match p {
+            ArrivalProcess::Diurnal {
+                burst_factor,
+                burst_secs,
+                burst_period,
+                ..
+            } => (burst_factor, burst_secs, burst_period),
+            _ => unreachable!(),
+        };
+        assert_eq!((bf, bs, bp), (1.5, 5.0, 25.0));
+        assert_eq!(p.peak(), 10.0);
+        // midnight trough = peak/ratio, but t=0 sits in a burst window
+        assert!((p.rate_at(0.0) - 2.0 * 1.5).abs() < 1e-9, "{}", p.rate_at(0.0));
+        // just past the burst window: bare trough-side envelope
+        let early = p.rate_at(6.0);
+        assert!(early < 3.0, "near-trough rate {early}");
+        // midday (t=50) is outside bursts (50 % 25 = 0 is in-burst; use 56)
+        let midday = p.rate_at(56.0);
+        let evening = p.rate_at(80.0);
+        assert!(midday > 9.0, "midday {midday}");
+        assert!(evening < midday && evening > early, "evening {evening}");
+        // thinning bound covers every instant
+        for i in 0..1000 {
+            let t = i as f64 * 0.1;
+            assert!(p.rate_at(t) <= 10.0 * 1.5 + 1e-9);
+        }
+        // and the generated stream is denser midday than at night
+        let mut rng = Rng::new(11);
+        let times = p.arrivals(100.0, &mut rng);
+        let mid = times.iter().filter(|t| (40.0..60.0).contains(*t)).count();
+        let night = times.iter().filter(|t| (5.0..25.0).contains(*t)).count();
+        assert!(
+            mid > night,
+            "diurnal density: midday {mid} vs night {night}"
+        );
+    }
+
+    #[test]
+    fn single_tenant_stream_is_byte_identical_to_legacy() {
+        // tenants.n_tenants == 1 must not perturb any PRNG stream
+        let base = cfg(20.0, 12).generate();
+        let mut w = cfg(20.0, 12);
+        w.tenants = TenantConfig {
+            n_tenants: 1,
+            zipf_s: 3.0, // skew irrelevant at one tenant
+        };
+        assert_eq!(base, w.generate());
+    }
+
+    #[test]
+    fn tenants_partition_the_template_space() {
+        let mut w = cfg(20.0, 13);
+        w.prefix = PrefixConfig {
+            share_prob: 1.0,
+            n_templates: 2,
+            zipf_s: 1.0,
+            shared_frac: (0.5, 0.5),
+        };
+        w.tenants = TenantConfig {
+            n_tenants: 8,
+            zipf_s: 1.0, // near-uniform so several tenants appear
+        };
+        let reqs = w.generate();
+        let mut firsts: Vec<u32> = reqs
+            .iter()
+            .filter(|r| !r.cache_tokens.is_empty())
+            .map(|r| r.cache_tokens[0])
+            .collect();
+        firsts.sort_unstable();
+        firsts.dedup();
+        // more template groups than a single tenant could produce, but no
+        // more than the global pool size
+        assert!(firsts.len() > 2, "tenant mixing groups = {}", firsts.len());
+        assert!(firsts.len() <= 16);
+        // deterministic under the same seed
+        assert_eq!(reqs, w.generate());
     }
 
     #[test]

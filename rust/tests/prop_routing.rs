@@ -1,0 +1,245 @@
+//! Property and identity gates for the scalable-routing layer (ISSUE 7):
+//!
+//! * **Index exactness** — over randomized load/weight/membership
+//!   trajectories, every tournament-tree pick must equal the corresponding
+//!   router's linear scan over the eligible subset, for every [`TreeKey`]
+//!   and for the indexed Alg 2 rotation.
+//! * **Sampler soundness** — p2c candidates are distinct, eligible and
+//!   bounded by `k`; fleets with `n <= k` enumerate without consuming any
+//!   randomness.
+//! * **Default-off byte-identity** — `auto` resolves to the exact scan at
+//!   fleet ≤ 64, so fixed-seed Reports are byte-identical to explicit
+//!   `scan` on all four engines (the golden-snapshot protection).
+//! * **End-to-end identity** — tournament-routed vLLM `LeastLoaded` on a
+//!   static fleet reproduces the scan's routing decision-for-decision.
+
+use banaserve::config::{EngineKind, ExperimentConfig, RouteMode};
+use banaserve::engines::fleet::{self, Router, TreeKey};
+use banaserve::engines::run_experiment;
+use banaserve::engines::vllm_sim::{RouterPolicy, VllmEngine};
+use banaserve::prop_assert;
+use banaserve::sim::{self, Engine};
+use banaserve::util::checker::check;
+use banaserve::util::json;
+use banaserve::workload::{LengthProfile, WorkloadConfig};
+
+/// The Report fields the golden snapshot pins, as a comparable string.
+fn fingerprint(cfg: &ExperimentConfig) -> String {
+    let out = run_experiment(cfg);
+    let r = &out.report;
+    json::write(&json::obj(vec![
+        ("submitted", json::num(out.submitted as f64)),
+        ("n_requests", json::num(r.n_requests as f64)),
+        ("dropped", json::num(r.dropped as f64)),
+        ("output_tokens", json::num(r.output_tokens as f64)),
+        ("input_tokens", json::num(r.input_tokens as f64)),
+        ("cached_tokens", json::num(r.cached_tokens as f64)),
+        ("makespan", json::num(r.makespan)),
+        ("throughput_tok_s", json::num(r.throughput_tok_s)),
+        ("ttft_mean", json::num(r.ttft.mean())),
+        ("tpot_mean", json::num(r.tpot.mean())),
+        ("e2e_mean", json::num(r.e2e.mean())),
+        ("queue_mean", json::num(r.queue.mean())),
+    ]))
+}
+
+#[test]
+fn tournament_picks_match_the_exact_scan_for_every_policy() {
+    check("tournament == scan", 60, |g| {
+        let n = g.usize_in(1, 170);
+        let mut book = fleet::LoadBook::with_instances(n);
+        book.enable_index(&[
+            TreeKey::LeastLoaded,
+            TreeKey::LeastQueue,
+            TreeKey::MostFreeMem,
+            TreeKey::LoadAwareU,
+            TreeKey::LoadAwareQ,
+        ]);
+        let mut elig = vec![true; n];
+        let steps = g.usize_in(1, 30);
+        for _ in 0..steps {
+            // a batch of load syncs + membership flips between picks, the
+            // pattern the engines produce (dirty set flushed per pick)
+            for _ in 0..g.usize_in(1, 8) {
+                let i = g.usize_in(0, n - 1);
+                match g.usize_in(0, 3) {
+                    0 => book.set_queue(i, g.usize_in(0, 12), g.usize_in(0, 40)),
+                    1 => {
+                        let e = book.entry_mut(i);
+                        e.u = g.f64_in(0.0, 2.0);
+                        e.mem_free = g.rng.range(0, 1 << 30);
+                        e.running = g.usize_in(0, 16);
+                    }
+                    2 => {
+                        book.entry_mut(i).weight =
+                            if g.bool() { 1.0 } else { g.f64_in(0.5, 2.0) };
+                    }
+                    _ => {
+                        elig[i] = !elig[i];
+                        book.set_eligible(i, elig[i]);
+                    }
+                }
+            }
+            let view: Vec<fleet::InstanceLoad> =
+                book.loads().iter().filter(|l| elig[l.idx]).copied().collect();
+            let scan_ll = fleet::LeastLoaded.pick(&view).map(|p| view[p].idx);
+            let got_ll = book.pick_indexed(TreeKey::LeastLoaded);
+            prop_assert!(got_ll == scan_ll, "LeastLoaded: tree {got_ll:?} != scan {scan_ll:?}");
+            let scan_lq = fleet::LeastQueue.pick(&view).map(|p| view[p].idx);
+            let got_lq = book.pick_indexed(TreeKey::LeastQueue);
+            prop_assert!(got_lq == scan_lq, "LeastQueue: tree {got_lq:?} != scan {scan_lq:?}");
+            let scan_mf = fleet::MostFreeMem.pick(&view).map(|p| view[p].idx);
+            let got_mf = book.pick_indexed(TreeKey::MostFreeMem);
+            prop_assert!(got_mf == scan_mf, "MostFreeMem: tree {got_mf:?} != scan {scan_mf:?}");
+            let delta_l = g.f64_in(0.5, 2.0);
+            let rr = g.usize_in(0, 999);
+            let scan_la = fleet::pick_load_aware(&view, delta_l, rr).map(|p| view[p].idx);
+            let got_la = book.pick_indexed_load_aware(delta_l, rr);
+            prop_assert!(
+                got_la == scan_la,
+                "Alg 2 (delta_l {delta_l:.3}, rr {rr}): tree {got_la:?} != scan {scan_la:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sampled_candidates_are_distinct_eligible_and_bounded() {
+    check("p2c sampler", 50, |g| {
+        let n = g.usize_in(0, 50);
+        let k = g.usize_in(1, 6);
+        let mask: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+        let mut s = fleet::RouteSampler::new(g.rng.next_u64());
+        let cands: Vec<usize> = s.sample(n, k, |i| mask[i]).to_vec();
+        let mut dedup = cands.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        prop_assert!(dedup.len() == cands.len(), "duplicate candidates: {cands:?}");
+        prop_assert!(
+            cands.iter().all(|&i| i < n && mask[i]),
+            "out-of-range or ineligible candidate: {cands:?}"
+        );
+        if n > k {
+            prop_assert!(cands.len() <= k, "more than k candidates: {cands:?}");
+        } else {
+            let want: Vec<usize> = (0..n).filter(|&i| mask[i]).collect();
+            prop_assert!(
+                cands == want,
+                "small fleet must enumerate the eligible set: {cands:?} != {want:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn small_fleet_sampling_consumes_no_randomness() {
+    // n <= k enumerates without drawing, so a sampler that served a small
+    // fleet stays stream-identical to a fresh one — the zero-perturbation
+    // half of the byte-identity guarantee
+    let mut a = fleet::RouteSampler::new(7);
+    let mut b = fleet::RouteSampler::new(7);
+    let _ = a.sample(4, 8, |_| true).to_vec();
+    let x = a.sample(100, 2, |_| true).to_vec();
+    let y = b.sample(100, 2, |_| true).to_vec();
+    assert_eq!(x, y, "n <= k sampling must not advance the PRNG");
+}
+
+#[test]
+fn auto_mode_at_small_fleets_is_byte_identical_to_explicit_scan() {
+    for kind in [
+        EngineKind::HfStatic,
+        EngineKind::Vllm,
+        EngineKind::DistServe,
+        EngineKind::BanaServe,
+    ] {
+        let mk = |mode: RouteMode| {
+            let mut c = ExperimentConfig::default_for(kind, "llama-13b", 6.0, 1234);
+            c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 6.0, 20.0, 1234);
+            c.warmup = 0.0;
+            c.routing.mode = mode;
+            c
+        };
+        let auto = mk(RouteMode::Auto);
+        assert_eq!(
+            auto.routing.resolve(auto.n_devices),
+            RouteMode::Scan,
+            "{kind:?}: auto must resolve to the exact scan at fleet <= 64"
+        );
+        assert_eq!(
+            fingerprint(&auto),
+            fingerprint(&mk(RouteMode::Scan)),
+            "{kind:?}: default routing at fleet <= 64 must stay byte-identical to scan"
+        );
+    }
+}
+
+#[test]
+fn tournament_routed_vllm_least_loaded_matches_scan_end_to_end() {
+    // on a static no-fault fleet every instance is always an eligible,
+    // unfrozen winner candidate, so the indexed pick must reproduce the
+    // scan's routing decision-for-decision — not just statistically
+    let run = |mode: RouteMode| {
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 10.0, 77);
+        c.n_devices = 6;
+        c.warmup = 0.0;
+        c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 10.0, 20.0, 77);
+        c.routing.mode = mode;
+        let reqs = c.workload.generate();
+        let mut e = VllmEngine::with_policy(&c, RouterPolicy::LeastLoaded, true);
+        sim::run(&mut e, reqs, 1e6);
+        let recs: Vec<(u64, f64, f64)> = e
+            .collector()
+            .records
+            .iter()
+            .map(|r| (r.id, r.ttft(), r.e2e()))
+            .collect();
+        (e.routed_counts.clone(), recs)
+    };
+    let (rc_scan, rec_scan) = run(RouteMode::Scan);
+    let (rc_tree, rec_tree) = run(RouteMode::Tournament);
+    assert_eq!(rc_scan, rc_tree, "tournament must reproduce the scan's routed counts");
+    assert_eq!(rec_scan.len(), rec_tree.len());
+    for (a, b) in rec_scan.iter().zip(rec_tree.iter()) {
+        assert_eq!(a.0, b.0, "request order diverged");
+        assert!(
+            (a.1 - b.1).abs() < 1e-12 && (a.2 - b.2).abs() < 1e-12,
+            "latency diverged for req {}: scan ({}, {}) vs tournament ({}, {})",
+            a.0, a.1, a.2, b.1, b.2
+        );
+    }
+}
+
+#[test]
+fn p2c_and_tournament_runs_conserve_and_replay_deterministically() {
+    for kind in [
+        EngineKind::HfStatic,
+        EngineKind::Vllm,
+        EngineKind::DistServe,
+        EngineKind::BanaServe,
+    ] {
+        for mode in [RouteMode::P2c, RouteMode::Tournament] {
+            let mk = || {
+                let mut c = ExperimentConfig::default_for(kind, "llama-13b", 6.0, 9);
+                c.n_devices = 5;
+                c.n_prefill = 2;
+                c.warmup = 0.0;
+                c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, 6.0, 12.0, 9);
+                c.routing.mode = mode;
+                c
+            };
+            let out = run_experiment(&mk());
+            assert_eq!(
+                out.submitted,
+                out.report.n_requests + out.report.dropped,
+                "{kind:?} {mode:?}: requests not conserved"
+            );
+            assert_eq!(
+                fingerprint(&mk()),
+                fingerprint(&mk()),
+                "{kind:?} {mode:?}: sampled routing must replay deterministically"
+            );
+        }
+    }
+}
