@@ -100,6 +100,43 @@ impl Link {
     }
 }
 
+/// Live health of one device's uplink under transfer-plane fault
+/// injection (`fault::FaultKind::LinkDegrade`/`LinkPartition`). Engines
+/// keep one per device; the default is a perfectly healthy link, and the
+/// nominal `slowdown` of 1.0 is an exact IEEE multiplicative identity —
+/// healthy links charge byte-identical transfer times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkHealth {
+    /// Transfer-time multiplier (1.0 = nominal, >1 = degraded).
+    pub slowdown: f64,
+    /// True while the uplink is fully partitioned (no bytes move).
+    pub partitioned: bool,
+}
+
+impl Default for LinkHealth {
+    fn default() -> Self {
+        LinkHealth {
+            slowdown: 1.0,
+            partitioned: false,
+        }
+    }
+}
+
+impl LinkHealth {
+    pub fn healthy(&self) -> bool {
+        self.slowdown == 1.0 && !self.partitioned
+    }
+}
+
+/// Worst-case health over a transfer's two endpoints: the transfer runs
+/// at the slower end's speed and is partitioned if either end is.
+pub fn path_health(a: LinkHealth, b: LinkHealth) -> LinkHealth {
+    LinkHealth {
+        slowdown: a.slowdown.max(b.slowdown),
+        partitioned: a.partitioned || b.partitioned,
+    }
+}
+
 /// NVLink 3 (intra-node GPU<->GPU): ~300 GB/s effective, ~5 µs setup.
 pub const NVLINK: Link = Link {
     bandwidth: 300e9,

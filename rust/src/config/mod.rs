@@ -63,6 +63,13 @@ pub struct BanaConfig {
     pub attention_migration: bool,
     /// Enable the Global KV Cache Store.
     pub global_store: bool,
+    /// Number of store nodes the Global KV Store is sharded across
+    /// (prefix-hash placement). 1 = the historical flat singleton.
+    pub store_nodes: usize,
+    /// Replicas per prefix (1 = no replication). Must be <= `store_nodes`;
+    /// with >= 2 a lookup whose owner node is down is served from a
+    /// surviving replica instead of degrading to recompute.
+    pub store_replication: usize,
 }
 
 impl Default for BanaConfig {
@@ -76,6 +83,8 @@ impl Default for BanaConfig {
             layer_migration: true,
             attention_migration: true,
             global_store: true,
+            store_nodes: 1,
+            store_replication: 1,
         }
     }
 }
@@ -158,6 +167,28 @@ pub struct FaultConfig {
     /// immediately and skips the backoff — recovery is a fetch, not a
     /// recompute stampede.
     pub retry_backoff: f64,
+    /// Mean time between transfer-link fault episodes (seconds); 0 keeps
+    /// the transfer plane perfectly reliable (the historical behavior)
+    /// even when device faults are on.
+    pub link_mtbf: f64,
+    /// Transfer-time multiplier while a link is degraded (4.0 = transfers
+    /// over that uplink take 4x as long).
+    pub link_degrade_factor: f64,
+    /// Probability a link episode is a full partition (no bytes move)
+    /// instead of a bandwidth degradation.
+    pub link_partition_prob: f64,
+    /// Fixed duration of one link episode (seconds).
+    pub link_fault_secs: f64,
+    /// Mean time between Global-KV-Store node crashes (seconds); 0 keeps
+    /// every store node up. Node downtime reuses `recovery_time`.
+    pub store_crash_mtbf: f64,
+    /// Transfer-transaction deadline as a multiple of the healthy
+    /// transfer time: an in-flight transfer aborts (rolls back) once
+    /// `factor x nominal` elapses without completing.
+    pub transfer_timeout_factor: f64,
+    /// Abort-retries allowed per transfer transaction before the engine
+    /// falls back (recompute for KV hand-offs, give-up for spin-ups).
+    pub transfer_retries: u32,
 }
 
 impl Default for FaultConfig {
@@ -171,6 +202,13 @@ impl Default for FaultConfig {
             straggler_secs: 5.0,
             retry_budget: 3,
             retry_backoff: 0.25,
+            link_mtbf: 0.0,
+            link_degrade_factor: 4.0,
+            link_partition_prob: 0.25,
+            link_fault_secs: 3.0,
+            store_crash_mtbf: 0.0,
+            transfer_timeout_factor: 4.0,
+            transfer_retries: 2,
         }
     }
 }
@@ -213,7 +251,55 @@ impl FaultConfig {
                 self.retry_backoff
             ));
         }
+        if !(self.link_mtbf.is_finite() && self.link_mtbf >= 0.0) {
+            return Err(format!(
+                "fault-link-mtbf must be finite and >= 0 (got {})",
+                self.link_mtbf
+            ));
+        }
+        if self.link_mtbf > 0.0 {
+            if !(self.link_degrade_factor.is_finite() && self.link_degrade_factor >= 1.0) {
+                return Err(format!(
+                    "fault-link-degrade-factor must be finite and >= 1 (got {})",
+                    self.link_degrade_factor
+                ));
+            }
+            if !(0.0..=1.0).contains(&self.link_partition_prob) {
+                return Err(format!(
+                    "fault-link-partition-prob must be in [0, 1] (got {})",
+                    self.link_partition_prob
+                ));
+            }
+            if !(self.link_fault_secs.is_finite() && self.link_fault_secs > 0.0) {
+                return Err(format!(
+                    "fault-link-secs must be finite and > 0 (got {})",
+                    self.link_fault_secs
+                ));
+            }
+            if !(self.transfer_timeout_factor.is_finite()
+                && self.transfer_timeout_factor > 1.0)
+            {
+                return Err(format!(
+                    "fault-transfer-timeout must be finite and > 1 (got {})",
+                    self.transfer_timeout_factor
+                ));
+            }
+        }
+        if !(self.store_crash_mtbf.is_finite() && self.store_crash_mtbf >= 0.0) {
+            return Err(format!(
+                "fault-store-mtbf must be finite and >= 0 (got {})",
+                self.store_crash_mtbf
+            ));
+        }
         Ok(())
+    }
+
+    /// Is the transfer-transaction plane active? Transfers become
+    /// deadline-bounded abortable transactions only when link chaos is
+    /// on; otherwise every transfer keeps its legacy fire-and-forget
+    /// timer (byte-identical event stream).
+    pub fn transfer_plane(&self) -> bool {
+        self.enabled && self.link_mtbf > 0.0
     }
 }
 
@@ -368,6 +454,17 @@ impl ExperimentConfig {
         crate::cluster::NET_200GBPS.validate("net-200gbps")?;
         crate::cluster::PCIE_GEN4.validate("pcie-gen4")?;
         self.fault.validate()?;
+        if self.bana.store_nodes == 0 {
+            return Err("store-nodes must be >= 1".to_string());
+        }
+        if self.bana.store_replication == 0
+            || self.bana.store_replication > self.bana.store_nodes
+        {
+            return Err(format!(
+                "store-replication must be in [1, store-nodes={}] (got {})",
+                self.bana.store_nodes, self.bana.store_replication
+            ));
+        }
         Ok(())
     }
 
@@ -469,6 +566,39 @@ impl ExperimentConfig {
         }
         if let Some(x) = a.get("fault-retry-backoff").and_then(|v| v.parse::<f64>().ok()) {
             self.fault.retry_backoff = x;
+        }
+        if let Some(x) = a.get("fault-link-mtbf").and_then(|v| v.parse::<f64>().ok()) {
+            self.fault.link_mtbf = x;
+        }
+        if let Some(x) =
+            a.get("fault-link-degrade-factor").and_then(|v| v.parse::<f64>().ok())
+        {
+            self.fault.link_degrade_factor = x;
+        }
+        if let Some(x) =
+            a.get("fault-link-partition-prob").and_then(|v| v.parse::<f64>().ok())
+        {
+            self.fault.link_partition_prob = x;
+        }
+        if let Some(x) = a.get("fault-link-secs").and_then(|v| v.parse::<f64>().ok()) {
+            self.fault.link_fault_secs = x;
+        }
+        if let Some(x) = a.get("fault-store-mtbf").and_then(|v| v.parse::<f64>().ok()) {
+            self.fault.store_crash_mtbf = x;
+        }
+        if let Some(x) = a.get("fault-transfer-timeout").and_then(|v| v.parse::<f64>().ok())
+        {
+            self.fault.transfer_timeout_factor = x;
+        }
+        if let Some(n) = a.get("fault-transfer-retries").and_then(|v| v.parse::<u32>().ok())
+        {
+            self.fault.transfer_retries = n;
+        }
+        if let Some(n) = a.get("store-nodes").and_then(|v| v.parse::<usize>().ok()) {
+            self.bana.store_nodes = n;
+        }
+        if let Some(n) = a.get("store-replication").and_then(|v| v.parse::<usize>().ok()) {
+            self.bana.store_replication = n;
         }
         if let Some(m) = a.get("route-mode").and_then(RouteMode::parse) {
             self.routing.mode = m;
@@ -586,6 +716,27 @@ impl ExperimentConfig {
                 }
                 ("fault_retry_backoff", Value::Num(n)) => {
                     self.fault.retry_backoff = *n;
+                }
+                ("fault_link_mtbf", Value::Num(n)) => self.fault.link_mtbf = *n,
+                ("fault_link_degrade_factor", Value::Num(n)) => {
+                    self.fault.link_degrade_factor = *n;
+                }
+                ("fault_link_partition_prob", Value::Num(n)) => {
+                    self.fault.link_partition_prob = *n;
+                }
+                ("fault_link_secs", Value::Num(n)) => self.fault.link_fault_secs = *n,
+                ("fault_store_mtbf", Value::Num(n)) => self.fault.store_crash_mtbf = *n,
+                ("fault_transfer_timeout", Value::Num(n)) => {
+                    self.fault.transfer_timeout_factor = *n;
+                }
+                ("fault_transfer_retries", Value::Num(n)) => {
+                    self.fault.transfer_retries = *n as u32;
+                }
+                ("store_nodes", Value::Num(n)) => {
+                    self.bana.store_nodes = *n as usize;
+                }
+                ("store_replication", Value::Num(n)) => {
+                    self.bana.store_replication = *n as usize;
                 }
                 ("route_mode", Value::Str(s)) => {
                     self.routing.mode =
@@ -792,6 +943,84 @@ mod tests {
         assert_eq!(j.fault.crash_mtbf, 30.0);
         assert_eq!(j.fault.retry_budget, 2);
         assert!(j.validate().is_ok());
+    }
+
+    #[test]
+    fn transfer_plane_knobs_default_off_and_parse_from_cli_and_json() {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        assert_eq!(c.fault.link_mtbf, 0.0, "link chaos must default off");
+        assert_eq!(c.fault.store_crash_mtbf, 0.0, "store chaos must default off");
+        assert_eq!(c.bana.store_nodes, 1, "store must default to a flat singleton");
+        assert_eq!(c.bana.store_replication, 1);
+        assert!(!c.fault.transfer_plane(), "plane needs enabled + link chaos");
+        let a = Args::parse(
+            "--fault-enabled true --fault-link-mtbf 6 --fault-link-degrade-factor 5 \
+             --fault-link-partition-prob 0.3 --fault-link-secs 2.5 \
+             --fault-store-mtbf 9 --fault-transfer-timeout 3 \
+             --fault-transfer-retries 4 --store-nodes 3 --store-replication 2"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert_eq!(c.fault.link_mtbf, 6.0);
+        assert_eq!(c.fault.link_degrade_factor, 5.0);
+        assert_eq!(c.fault.link_partition_prob, 0.3);
+        assert_eq!(c.fault.link_fault_secs, 2.5);
+        assert_eq!(c.fault.store_crash_mtbf, 9.0);
+        assert_eq!(c.fault.transfer_timeout_factor, 3.0);
+        assert_eq!(c.fault.transfer_retries, 4);
+        assert_eq!(c.bana.store_nodes, 3);
+        assert_eq!(c.bana.store_replication, 2);
+        assert!(c.fault.transfer_plane());
+        assert!(c.validate().is_ok());
+
+        let mut j = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        j.apply_json(
+            r#"{"fault_enabled":true,"fault_link_mtbf":4,
+                "fault_link_degrade_factor":2,"fault_link_partition_prob":0.5,
+                "fault_link_secs":1.5,"fault_store_mtbf":7,
+                "fault_transfer_timeout":5,"fault_transfer_retries":1,
+                "store_nodes":4,"store_replication":2}"#,
+        )
+        .unwrap();
+        assert_eq!(j.fault.link_mtbf, 4.0);
+        assert_eq!(j.fault.store_crash_mtbf, 7.0);
+        assert_eq!(j.fault.transfer_retries, 1);
+        assert_eq!(j.bana.store_nodes, 4);
+        assert_eq!(j.bana.store_replication, 2);
+        assert!(j.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_transfer_plane_knobs() {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        c.fault.enabled = true;
+        c.fault.link_mtbf = -1.0;
+        assert!(c.validate().unwrap_err().contains("link-mtbf"));
+        c.fault.link_mtbf = 6.0;
+        c.fault.link_degrade_factor = 0.5;
+        assert!(c.validate().unwrap_err().contains("degrade-factor"));
+        c.fault.link_degrade_factor = 4.0;
+        c.fault.link_partition_prob = 1.5;
+        assert!(c.validate().unwrap_err().contains("partition-prob"));
+        c.fault.link_partition_prob = 0.25;
+        c.fault.link_fault_secs = 0.0;
+        assert!(c.validate().unwrap_err().contains("link-secs"));
+        c.fault.link_fault_secs = 3.0;
+        c.fault.transfer_timeout_factor = 1.0;
+        assert!(c.validate().unwrap_err().contains("transfer-timeout"));
+        c.fault.transfer_timeout_factor = 4.0;
+        c.fault.store_crash_mtbf = f64::NAN;
+        assert!(c.validate().unwrap_err().contains("store-mtbf"));
+        c.fault.store_crash_mtbf = 0.0;
+        assert!(c.validate().is_ok());
+        c.bana.store_nodes = 0;
+        assert!(c.validate().unwrap_err().contains("store-nodes"));
+        c.bana.store_nodes = 2;
+        c.bana.store_replication = 3;
+        assert!(c.validate().unwrap_err().contains("store-replication"));
+        c.bana.store_replication = 2;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

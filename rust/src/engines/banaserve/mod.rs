@@ -17,10 +17,11 @@ pub mod scheduler;
 
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent};
-use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
+use super::xfer::{self, TxTable};
+use crate::cluster::{self, Cluster, Device, DeviceState, GpuSpec, Link, LinkHealth, Role};
 use crate::config::{BanaConfig, ExperimentConfig, FaultConfig};
 use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
-use crate::kvcache::{GlobalKvStore, StoreConfig};
+use crate::kvcache::{ShardedKvStore, StoreConfig};
 use crate::metrics::{Collector, SloTracker};
 use crate::perfmodel::{self, Efficiency};
 use crate::model::ModelSpec;
@@ -35,6 +36,43 @@ pub struct BanaStats {
     pub attention_migrations: u64,
     pub control_cycles: u64,
     pub migration_seconds: f64,
+}
+
+/// Transfer transactions this engine tracks when the transfer plane is
+/// armed (`engines::xfer`). Each shape defines its own rollback.
+#[derive(Debug)]
+enum BanaTx {
+    /// Scale-out weight spin-up onto a half-born hybrid device.
+    SpinUp(xfer::SpinUp),
+    /// KV staging off a prefill device (store write / host push). Final
+    /// failure rescues the sequence through `crash_seq` — the store
+    /// re-fetch when available, recompute otherwise.
+    Staging {
+        seq: u64,
+        src: usize,
+        t_nominal: f64,
+        retries: u32,
+        aborted: bool,
+    },
+    /// Layer migration toward `dev`: the share delta parked in `mig[dev]`
+    /// lands only at `XferDone`; abort clears it. Migrations are never
+    /// retried — the next control cycle re-decides from fresh loads.
+    LayerMig {
+        /// Path anchor: layer weights stream from the fleet's first device.
+        src: usize,
+        dev: usize,
+        t_nominal: f64,
+        aborted: bool,
+    },
+    /// Attention migration of `sids` from `from` to `to`; abort moves the
+    /// sequences (and their KV accounting) back. Never retried.
+    AttnMig {
+        from: usize,
+        to: usize,
+        sids: Vec<u64>,
+        t_nominal: f64,
+        aborted: bool,
+    },
 }
 
 /// Per-device migration bookkeeping.
@@ -61,8 +99,12 @@ pub struct BanaEngine {
     /// share_prefill per device (`pinsts[i].share` mirrors this).
     pub share_prefill: Vec<f64>,
     mig: Vec<MigState>,
-    store: GlobalKvStore,
+    store: ShardedKvStore,
     use_store: bool,
+    /// Per-device link-endpoint health (transfer plane).
+    linkh: Vec<LinkHealth>,
+    /// In-flight transfer transactions (empty unless the plane is armed).
+    txs: TxTable<BanaTx>,
     /// Sequences whose prefill finished, KV staged off-GPU (Global Store /
     /// host), awaiting decode admission. Global — any decode-capable device
     /// can pick them up, which is exactly what breaks the cyclic-hold
@@ -171,8 +213,14 @@ impl BanaEngine {
             dinsts,
             share_prefill,
             mig: vec![MigState::default(); n],
-            store: GlobalKvStore::new(StoreConfig::default()),
+            store: ShardedKvStore::new(
+                StoreConfig::default(),
+                cfg.bana.store_nodes,
+                cfg.bana.store_replication,
+            ),
             use_store: cfg.bana.global_store,
+            linkh: vec![LinkHealth::default(); n],
+            txs: TxTable::default(),
             pending_decode: VecDeque::new(),
             seqs: fleet::SeqTable::new(),
             col,
@@ -211,12 +259,23 @@ impl BanaEngine {
             scale_outs: 0,
             drains: 0,
             fault_cfg: cfg.fault,
-            faults: FaultTimeline::new(FaultPlan::generate(
-                &cfg.fault,
-                cfg.workload.seed,
-                cfg.n_devices,
-                cfg.workload.duration,
-            )),
+            faults: FaultTimeline::new({
+                let mut plan = FaultPlan::generate(
+                    &cfg.fault,
+                    cfg.workload.seed,
+                    cfg.n_devices,
+                    cfg.workload.duration,
+                );
+                // store-node outages only exist for the store-bearing
+                // engine; they ride their own substream (see fault::)
+                plan.add_store_events(
+                    &cfg.fault,
+                    cfg.workload.seed,
+                    cfg.bana.store_nodes,
+                    cfg.workload.duration,
+                );
+                plan
+            }),
         }
     }
 
@@ -555,14 +614,29 @@ impl BanaEngine {
         self.dinsts[to].running.push(sid);
         let t_mig = perfmodel::attention_migration_time(kv, &self.link);
         self.kv_transfer_bytes += kv;
-        self.dinsts[to].frozen_until = self.dinsts[to].frozen_until.max(now + t_mig);
         self.dinsts[to].decode_overhead = 2.0 * self.link.latency;
         self.stats.attention_migrations += 1;
         self.stats.migration_seconds += t_mig;
-        q.push_after(
-            t_mig,
-            FleetEvent::MigrationDone { device: to, kind: 1 }.timer(),
-        );
+        if self.fault_cfg.transfer_plane() {
+            // transactional: both ends pause until the transfer resolves
+            // (Eq 11 pauses both ends); abort moves the sequence back
+            self.dinsts[i].frozen_until = f64::INFINITY;
+            self.dinsts[to].frozen_until = f64::INFINITY;
+            let id = self.txs.insert(BanaTx::AttnMig {
+                from: i,
+                to,
+                sids: vec![sid],
+                t_nominal: t_mig,
+                aborted: false,
+            });
+            self.issue_tx(id, 0.0, q);
+        } else {
+            self.dinsts[to].frozen_until = self.dinsts[to].frozen_until.max(now + t_mig);
+            q.push_after(
+                t_mig,
+                FleetEvent::MigrationDone { device: to, kind: 1 }.timer(),
+            );
+        }
         true
     }
 
@@ -633,16 +707,30 @@ impl BanaEngine {
             };
             self.devices[i].free_kv(now, kv);
             self.kv_transfer_bytes += kv;
+            // both variants price the CONFIGURED link: store writes are
+            // layer-wise overlapped (latency only), the direct host push
+            // pays the full transfer time for the KV bytes
             let t_stage = if self.use_store {
                 self.link.latency
             } else {
-                crate::cluster::NET_200GBPS.transfer_time(kv)
+                self.link.transfer_time(kv)
             };
             self.pending_decode.push_back(sid);
-            q.push_after(
-                t_stage,
-                FleetEvent::KvArrive { worker: 0, seq: sid }.timer(),
-            );
+            if self.fault_cfg.transfer_plane() {
+                let id = self.txs.insert(BanaTx::Staging {
+                    seq: sid,
+                    src: i,
+                    t_nominal: t_stage,
+                    retries: 0,
+                    aborted: false,
+                });
+                self.issue_tx(id, 0.0, q);
+            } else {
+                q.push_after(
+                    t_stage,
+                    FleetEvent::KvArrive { worker: 0, seq: sid }.timer(),
+                );
+            }
         }
         self.maybe_start_prefill(i, q);
         // release Draining devices whose residents just cleared (the
@@ -1087,6 +1175,274 @@ impl BanaEngine {
                     self.devices[ev.device].slow_factor = 1.0;
                 }
             }
+            FaultKind::LinkDegrade => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device].slowdown = self.fault_cfg.link_degrade_factor;
+                    self.faults.stats.link_degradations += 1;
+                }
+            }
+            FaultKind::LinkPartition => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device].partitioned = true;
+                    self.faults.stats.link_degradations += 1;
+                    self.abort_crossing_txs(ev.device);
+                }
+            }
+            FaultKind::LinkRestore => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device] = LinkHealth::default();
+                }
+            }
+            FaultKind::StoreCrash => {
+                // ev.device indexes store NODES here, not GPUs; a downed
+                // node loses its shard and lookups degrade to the
+                // surviving replicas (or a clean recompute miss)
+                if self.store.set_node_up(ev.device, false) {
+                    self.faults.stats.store_node_crashes += 1;
+                }
+            }
+            FaultKind::StoreRecover => {
+                // cold restart: the shard re-warms from fresh traffic
+                self.store.set_node_up(ev.device, true);
+            }
+        }
+    }
+
+    // --- transfer plane ----------------------------------------------------
+
+    /// Live transfer transactions (tests: must drain back to 0).
+    pub fn inflight_transfers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// A partition at `dev` dooms every in-flight transaction crossing it;
+    /// the queued `XferDone` timers reroute to the abort path on arrival.
+    fn abort_crossing_txs(&mut self, dev: usize) {
+        for (_, tx) in self.txs.iter_mut() {
+            match tx {
+                BanaTx::SpinUp(s) => {
+                    if s.src == dev || s.inst == dev {
+                        s.aborted = true;
+                    }
+                }
+                BanaTx::Staging { src, aborted, .. } => {
+                    if *src == dev {
+                        *aborted = true;
+                    }
+                }
+                BanaTx::LayerMig { src, dev: d, aborted, .. } => {
+                    if *src == dev || *d == dev {
+                        *aborted = true;
+                    }
+                }
+                BanaTx::AttnMig { from, to, aborted, .. } => {
+                    if *from == dev || *to == dev {
+                        *aborted = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Un-freeze `dev`'s role instances after a transaction resolved —
+    /// unless another live transaction still holds a freeze on them
+    /// (overlapping migrations both park their endpoint at INFINITY; only
+    /// the last one out lifts it). Finite legacy freezes are never touched.
+    fn thaw(&mut self, dev: usize, now: f64) {
+        let mut p_held = false;
+        let mut d_held = false;
+        for (_, tx) in self.txs.iter_mut() {
+            match tx {
+                BanaTx::SpinUp(s) if s.inst == dev => {
+                    p_held = true;
+                    d_held = true;
+                }
+                BanaTx::LayerMig { dev: d, .. } if *d == dev => {
+                    p_held = true;
+                    d_held = true;
+                }
+                BanaTx::AttnMig { from, to, .. } if *from == dev || *to == dev => {
+                    d_held = true;
+                }
+                _ => {}
+            }
+        }
+        if !p_held && self.pinsts[dev].frozen_until.is_infinite() {
+            self.pinsts[dev].frozen_until = now;
+        }
+        if !d_held && self.dinsts[dev].frozen_until.is_infinite() {
+            self.dinsts[dev].frozen_until = now;
+        }
+    }
+
+    /// (Re-)issue a transaction: plan it over the current path health and
+    /// schedule `XferDone` at the effective time, or `XferAbort` at the
+    /// deadline when the path is partitioned or too slow to make it.
+    fn issue_tx(&mut self, id: u64, delay: f64, q: &mut EventQueue) {
+        let Some(tx) = self.txs.get(id) else { return };
+        let (src, dst, t_nominal) = match tx {
+            BanaTx::SpinUp(s) => (s.src, s.inst, s.t_nominal),
+            BanaTx::Staging { src, t_nominal, .. } => (*src, *src, *t_nominal),
+            BanaTx::LayerMig { src, dev, t_nominal, .. } => (*src, *dev, *t_nominal),
+            BanaTx::AttnMig { from, to, t_nominal, .. } => (*from, *to, *t_nominal),
+        };
+        let health = cluster::path_health(self.linkh[src], self.linkh[dst]);
+        let plan = xfer::plan(t_nominal, health, self.fault_cfg.transfer_timeout_factor);
+        if plan.doomed {
+            q.push_after(delay + plan.deadline, FleetEvent::XferAbort { tx: id }.timer());
+        } else {
+            q.push_after(delay + plan.t_eff, FleetEvent::XferDone { tx: id }.timer());
+        }
+    }
+
+    fn xfer_done(&mut self, id: u64, q: &mut EventQueue) {
+        let aborted = match self.txs.get(id) {
+            None => return, // already resolved (stale timer)
+            Some(BanaTx::SpinUp(s)) => s.aborted,
+            Some(BanaTx::Staging { aborted, .. })
+            | Some(BanaTx::LayerMig { aborted, .. })
+            | Some(BanaTx::AttnMig { aborted, .. }) => *aborted,
+        };
+        if aborted {
+            // a partition crossed this transfer mid-flight
+            return self.xfer_abort(id, q);
+        }
+        let now = q.now();
+        let Some(tx) = self.txs.remove(id) else { return };
+        match tx {
+            BanaTx::SpinUp(s) => {
+                self.thaw(s.inst, now);
+                self.maybe_start_prefill(s.inst, q);
+                self.try_admit_global(q);
+                self.maybe_start_decode(s.inst, q);
+            }
+            BanaTx::Staging { seq: sid, .. } => {
+                // same contract as the legacy KvArrive: only staged
+                // hand-offs consume the arrival
+                if let Some(seq) = self.seqs.get_mut(sid) {
+                    if seq.phase == SeqPhase::Transferring {
+                        seq.staged = true;
+                    }
+                }
+                self.try_admit_global(q);
+            }
+            BanaTx::LayerMig { dev, .. } => {
+                self.thaw(dev, now);
+                self.migration_done(dev, 0, q);
+            }
+            BanaTx::AttnMig { from, to, .. } => {
+                self.thaw(from, now);
+                self.thaw(to, now);
+                self.migration_done(to, 1, q);
+            }
+        }
+    }
+
+    fn xfer_abort(&mut self, id: u64, q: &mut EventQueue) {
+        let now = q.now();
+        let budget = self.fault_cfg.transfer_retries;
+        // retryable shapes re-issue in place; the rest resolve by rollback
+        let retry = match self.txs.get_mut(id) {
+            None => return, // already resolved (stale timer)
+            Some(BanaTx::SpinUp(s)) if s.retries < budget => {
+                s.retries += 1;
+                s.aborted = false;
+                Some(s.retries)
+            }
+            Some(BanaTx::Staging { retries, aborted, .. }) if *retries < budget => {
+                *retries += 1;
+                *aborted = false;
+                Some(*retries)
+            }
+            Some(_) => None,
+        };
+        self.faults.stats.transfer_timeouts += 1;
+        if let Some(r) = retry {
+            self.faults.stats.transfer_retries += 1;
+            let delay = fault::backoff_delay(&self.fault_cfg, r);
+            self.issue_tx(id, delay, q);
+            return;
+        }
+        let Some(tx) = self.txs.remove(id) else { return };
+        match tx {
+            BanaTx::SpinUp(s) => {
+                self.thaw(s.inst, now);
+                if self.drainable(s.inst) {
+                    // the replica never arrived: release the half-born
+                    // device (it held no KV or queue — exact rollback)
+                    self.begin_drain(s.inst, q);
+                    self.finish_drains(now);
+                } else {
+                    // draining the last prefill/decode-capable device
+                    // would wedge the fleet; treat the weights as having
+                    // landed late instead
+                    self.maybe_start_prefill(s.inst, q);
+                    self.try_admit_global(q);
+                    self.maybe_start_decode(s.inst, q);
+                }
+            }
+            BanaTx::Staging { seq: sid, .. } => {
+                // the staging write never landed: pull the hand-off back
+                // out of the admission queue and rescue the sequence
+                // (store re-fetch when available, recompute otherwise)
+                if let Some(pos) = self.pending_decode.iter().position(|&x| x == sid) {
+                    self.pending_decode.remove(pos);
+                }
+                let live = matches!(
+                    self.seqs.slots().get(sid as usize),
+                    Some(Some(s)) if s.phase == SeqPhase::Transferring
+                );
+                if live {
+                    self.crash_seq(sid, q);
+                    for j in 0..self.devices.len() {
+                        self.maybe_start_prefill(j, q);
+                    }
+                }
+            }
+            BanaTx::LayerMig { dev, .. } => {
+                // rollback = drop the parked share delta; shares were
+                // never applied, so the pre-transaction split is intact
+                self.mig[dev] = MigState::default();
+                self.thaw(dev, now);
+                for i in 0..self.devices.len() {
+                    self.maybe_start_prefill(i, q);
+                    self.maybe_start_decode(i, q);
+                }
+            }
+            BanaTx::AttnMig { from, to, sids, .. } => {
+                // rollback = the sequences (and their KV accounting)
+                // return to the source; a sequence that cannot go home
+                // (source crashed or refilled) is rescued via the store
+                for &sid in &sids {
+                    let live = matches!(
+                        self.seqs.slots().get(sid as usize),
+                        Some(Some(s)) if s.phase == SeqPhase::Decoding && s.instance == to
+                    );
+                    if !live {
+                        continue; // torn down by a crash mid-transfer
+                    }
+                    let Some(pos) =
+                        self.dinsts[to].running.iter().position(|&x| x == sid)
+                    else {
+                        continue;
+                    };
+                    self.dinsts[to].running.remove(pos);
+                    let kv = self.seqs.seq(sid).kv_on_device;
+                    if self.devices[from].is_active() && self.devices[from].can_fit_kv(kv) {
+                        self.devices[to].free_kv(now, kv);
+                        self.devices[from].alloc_kv(now, kv);
+                        self.seqs.seq_mut(sid).instance = from;
+                        self.dinsts[from].running.push(sid);
+                    } else {
+                        self.crash_seq(sid, q);
+                    }
+                }
+                self.thaw(from, now);
+                self.thaw(to, now);
+                self.maybe_start_decode(from, q);
+                self.maybe_start_decode(to, q);
+                self.try_admit_global(q);
+            }
         }
     }
 
@@ -1296,18 +1652,31 @@ impl BanaEngine {
         self.devices.push(dev);
         let share = 0.5;
         let t_up = self.link.transfer_time(self.spec.weight_bytes());
+        let plane = self.fault_cfg.transfer_plane();
         let mut p = InstanceSim::new(id, share);
-        p.frozen_until = now + t_up;
         let mut d = InstanceSim::new(id, 1.0 - share);
-        d.frozen_until = now + t_up;
+        if plane {
+            // deadline-bounded spin-up: frozen until the weight transfer
+            // transaction resolves (done OR abort), never a bare timer
+            p.frozen_until = f64::INFINITY;
+            d.frozen_until = f64::INFINITY;
+        } else {
+            p.frozen_until = now + t_up;
+            d.frozen_until = now + t_up;
+        }
         self.share_prefill.push(share);
         self.pinsts.push(p);
         self.dinsts.push(d);
         self.mig.push(MigState::default());
         self.routed_counts.push(0);
         self.last_busy.push((0.0, 0.0));
+        self.linkh.push(LinkHealth::default());
         self.scale_outs += 1;
         self.fleet.sample(now, &self.devices);
+        if plane {
+            let tx = self.txs.insert(BanaTx::SpinUp(xfer::SpinUp::new(id, t_up)));
+            self.issue_tx(tx, 0.0, q);
+        }
         log::debug!("banaserve scale-out: device {id} joins hybrid at t={now:.2}");
     }
 
@@ -1393,10 +1762,16 @@ impl BanaEngine {
                 let k = (self.spec.n_layers as f64 * delta_share).ceil() as u32;
                 let t_mig = perfmodel::layer_migration_time(self.spec, k, 0, &self.link);
                 let _ = from;
+                let plane = self.fault_cfg.transfer_plane();
                 // the target is frozen while weights land (Fig 3: other
                 // devices keep serving in parallel)
-                self.pinsts[to].frozen_until = now + t_mig;
-                self.dinsts[to].frozen_until = now + t_mig;
+                if plane {
+                    self.pinsts[to].frozen_until = f64::INFINITY;
+                    self.dinsts[to].frozen_until = f64::INFINITY;
+                } else {
+                    self.pinsts[to].frozen_until = now + t_mig;
+                    self.dinsts[to].frozen_until = now + t_mig;
+                }
                 self.mig[to] = MigState {
                     pending_share: delta_share,
                     pending_to_prefill: to_prefill,
@@ -1404,10 +1779,20 @@ impl BanaEngine {
                 };
                 self.stats.layer_migrations += 1;
                 self.stats.migration_seconds += t_mig;
-                q.push_after(
-                    t_mig,
-                    FleetEvent::MigrationDone { device: to, kind: 0 }.timer(),
-                );
+                if plane {
+                    let id = self.txs.insert(BanaTx::LayerMig {
+                        src: 0,
+                        dev: to,
+                        t_nominal: t_mig,
+                        aborted: false,
+                    });
+                    self.issue_tx(id, 0.0, q);
+                } else {
+                    q.push_after(
+                        t_mig,
+                        FleetEvent::MigrationDone { device: to, kind: 0 }.timer(),
+                    );
+                }
                 self.cooldown_until = now + 3.0 * self.bana.control_period;
                 self.hysteresis_latched = true;
                 true
@@ -1423,6 +1808,10 @@ impl BanaEngine {
                 // sequences until the budget is met (head-group granularity)
                 let budget =
                     (self.devices[from].kv_bytes as f64 * kv_frac) as u64;
+                let plane = self.fault_cfg.transfer_plane();
+                // with the plane armed the moved set must be recorded so an
+                // abort can send it home (allocated only in that mode)
+                let mut moved_sids: Vec<u64> = Vec::new();
                 let mut moved = 0u64;
                 let mut ids = std::mem::take(&mut self.ids_buf);
                 ids.clear();
@@ -1450,6 +1839,9 @@ impl BanaEngine {
                     }
                     self.dinsts[to].running.push(sid);
                     moved += kv;
+                    if plane {
+                        moved_sids.push(sid);
+                    }
                 }
                 self.ids_buf = ids;
                 if moved == 0 {
@@ -1459,17 +1851,30 @@ impl BanaEngine {
                 self.kv_transfer_bytes += moved;
                 // both ends pause briefly for the transfer; the Eq 10
                 // exchange then costs a link round trip per decode step
-                self.dinsts[from].frozen_until =
-                    self.dinsts[from].frozen_until.max(now + t_mig);
-                self.dinsts[to].frozen_until =
-                    self.dinsts[to].frozen_until.max(now + t_mig);
                 self.dinsts[to].decode_overhead = 2.0 * self.link.latency;
                 self.stats.attention_migrations += 1;
                 self.stats.migration_seconds += t_mig;
-                q.push_after(
-                    t_mig,
-                    FleetEvent::MigrationDone { device: to, kind: 1 }.timer(),
-                );
+                if plane {
+                    self.dinsts[from].frozen_until = f64::INFINITY;
+                    self.dinsts[to].frozen_until = f64::INFINITY;
+                    let id = self.txs.insert(BanaTx::AttnMig {
+                        from,
+                        to,
+                        sids: moved_sids,
+                        t_nominal: t_mig,
+                        aborted: false,
+                    });
+                    self.issue_tx(id, 0.0, q);
+                } else {
+                    self.dinsts[from].frozen_until =
+                        self.dinsts[from].frozen_until.max(now + t_mig);
+                    self.dinsts[to].frozen_until =
+                        self.dinsts[to].frozen_until.max(now + t_mig);
+                    q.push_after(
+                        t_mig,
+                        FleetEvent::MigrationDone { device: to, kind: 1 }.timer(),
+                    );
+                }
                 self.cooldown_until = now + 3.0 * self.bana.control_period;
                 self.hysteresis_latched = true;
                 true
@@ -1536,6 +1941,9 @@ impl crate::engines::EngineHarness for BanaEngine {
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
         self.faults.stats.fill_extras(extras);
+        // the sharded store tracks its own degraded lookups (every
+        // replica down); surface them through the common fault extras
+        extras.degraded_lookups = self.store.degraded_lookups;
     }
 
     fn fleet_series(&self) -> &fleet::FleetSeries {
@@ -1639,6 +2047,8 @@ impl Engine for BanaEngine {
                 self.service_faults(q);
             }
             Some(FleetEvent::Requeue { seq }) => self.requeue(seq, q),
+            Some(FleetEvent::XferDone { tx }) => self.xfer_done(tx, q),
+            Some(FleetEvent::XferAbort { tx }) => self.xfer_abort(tx, q),
             _ => unreachable!("banaserve got unknown timer {t:?}"),
         }
     }
@@ -1779,6 +2189,67 @@ mod tests {
         sim::run(&mut e, reqs, 1e6);
         let cached: u64 = e.col.records.iter().map(|r| r.cached_tokens).sum();
         assert_eq!(cached, 0);
+    }
+
+    #[test]
+    fn staging_without_store_pays_the_configured_link() {
+        // regression: the store-less host push used to charge a hardcoded
+        // NET_200GBPS for the staging hand-off, ignoring the cluster's
+        // actual interconnect — a slower configured link must now hurt
+        let mut c = cfg(6.0, 9);
+        c.bana.global_store = false;
+        let reqs = c.workload.generate();
+
+        let mut fast = BanaEngine::new(&c);
+        let rf = sim::run(&mut fast, reqs.clone(), 1e6);
+        let rep_f = fast.collector().report(rf.end_time);
+
+        let mut slow = BanaEngine::new(&c);
+        slow.link.bandwidth /= 100.0;
+        let rs = sim::run(&mut slow, reqs, 1e6);
+        let rep_s = slow.collector().report(rs.end_time);
+
+        assert!(
+            rep_s.avg_latency() > rep_f.avg_latency() * 1.01,
+            "a 100x slower configured link must lengthen the staging hand-off: \
+             fast {:.4}s vs slow {:.4}s",
+            rep_f.avg_latency(),
+            rep_s.avg_latency()
+        );
+    }
+
+    #[test]
+    fn store_replication_rides_out_store_node_crashes() {
+        // sharded store under store-node chaos: replication 2 must keep a
+        // higher hit rate than replication 1 on the same seeded schedule
+        let run = |replication: usize| {
+            let mut c = cfg(10.0, 11);
+            c.workload.duration = 40.0;
+            c.workload.prefix.share_prob = 0.9;
+            c.workload.prefix.n_templates = 2;
+            c.bana.store_nodes = 3;
+            c.bana.store_replication = replication;
+            c.fault.enabled = true;
+            c.fault.store_crash_mtbf = 6.0;
+            c.fault.recovery_time = 20.0;
+            let reqs = c.workload.generate();
+            let mut e = BanaEngine::new(&c);
+            sim::run(&mut e, reqs, 1e6);
+            (e.store_hit_rate(), e.store.degraded_lookups)
+        };
+        let (hit1, deg1) = run(1);
+        let (hit2, deg2) = run(2);
+        assert!(
+            hit2 > hit1,
+            "replication 2 must out-hit replication 1 under store crashes: \
+             {hit2:.3} vs {hit1:.3}"
+        );
+        // degrading needs EVERY replica down — a strictly stronger
+        // condition per lookup, so replication can only help
+        assert!(
+            deg2 <= deg1,
+            "replication 2 must not degrade more often: {deg2} vs {deg1}"
+        );
     }
 
     #[test]

@@ -34,6 +34,10 @@ pub mod tags {
     pub const FAULT: u64 = 6;
     /// Crash-retry backoff expired for sequence `a`: re-admit it.
     pub const REQUEUE: u64 = 7;
+    /// Transfer transaction `a` completed (transfer plane).
+    pub const XFER_DONE: u64 = 8;
+    /// Transfer transaction `a` hit its deadline: abort + rollback.
+    pub const XFER_ABORT: u64 = 9;
 }
 
 /// KV page size in tokens used by all simulated paged engines.

@@ -15,7 +15,8 @@
 
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
-use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
+use super::xfer::{self, TxTable};
+use crate::cluster::{self, Cluster, Device, DeviceState, GpuSpec, Link, LinkHealth, Role};
 use crate::config::{ExperimentConfig, FaultConfig, RouteMode};
 use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::metrics::{Collector, SloTracker};
@@ -24,6 +25,25 @@ use crate::model::ModelSpec;
 use crate::sim::{Engine, EventQueue, Timer};
 use crate::workload::Request;
 use std::collections::VecDeque;
+
+/// A DistServe transfer transaction (transfer plane only): either a
+/// scale-out weight spin-up or a prefill→decode KV push.
+enum DistTx {
+    SpinUp(xfer::SpinUp),
+    KvPush {
+        seq: u64,
+        /// Source prefill DEVICE id (the KV stays resident there until
+        /// the decode side admits — abort rolls back to exactly this).
+        src: usize,
+        /// Target decode SLOT (re-picked on retry).
+        di: usize,
+        /// Target decode DEVICE id (for link-fault matching).
+        dst: usize,
+        t_nominal: f64,
+        retries: u32,
+        aborted: bool,
+    },
+}
 
 /// Static PD-disaggregated engine.
 pub struct DistServeEngine {
@@ -82,6 +102,10 @@ pub struct DistServeEngine {
     pub drains: u64,
     fault_cfg: FaultConfig,
     faults: FaultTimeline,
+    /// Per-device link health (transfer plane); default = healthy.
+    linkh: Vec<LinkHealth>,
+    /// In-flight transfer transactions (empty while the plane is off).
+    txs: TxTable<DistTx>,
 }
 
 impl DistServeEngine {
@@ -162,6 +186,8 @@ impl DistServeEngine {
                 cfg.n_devices,
                 cfg.workload.duration,
             )),
+            linkh: vec![LinkHealth::default(); cfg.n_devices],
+            txs: TxTable::default(),
         }
     }
 
@@ -515,7 +541,22 @@ impl DistServeEngine {
             };
             self.kv_transfer_bytes += kv;
             let t = self.link.transfer_time(kv);
-            q.push_after(t, FleetEvent::KvArrive { worker: di, seq: sid }.timer());
+            if self.fault_cfg.transfer_plane() {
+                // transactional hand-off: abortable, retried, rolled back
+                let dst = self.decode[di].device;
+                let id = self.txs.insert(DistTx::KvPush {
+                    seq: sid,
+                    src: dev_idx,
+                    di,
+                    dst,
+                    t_nominal: t,
+                    retries: 0,
+                    aborted: false,
+                });
+                self.issue_tx(id, 0.0, q);
+            } else {
+                q.push_after(t, FleetEvent::KvArrive { worker: di, seq: sid }.timer());
+            }
         }
         self.maybe_start_prefill(i, q);
         // release Draining devices whose residents just cleared (the tick
@@ -646,6 +687,206 @@ impl DistServeEngine {
                 if self.devices[ev.device].state != DeviceState::Failed {
                     self.devices[ev.device].slow_factor = 1.0;
                 }
+            }
+            FaultKind::LinkDegrade => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device].slowdown = self.fault_cfg.link_degrade_factor;
+                    self.faults.stats.link_degradations += 1;
+                }
+            }
+            FaultKind::LinkPartition => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device].partitioned = true;
+                    self.faults.stats.link_degradations += 1;
+                    self.abort_crossing_txs(ev.device);
+                }
+            }
+            FaultKind::LinkRestore => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device] = LinkHealth::default();
+                }
+            }
+            // store nodes exist only in the BanaServe engine
+            FaultKind::StoreCrash | FaultKind::StoreRecover => {}
+        }
+    }
+
+    // --- transfer plane ----------------------------------------------------
+
+    /// Live transfer transactions (tests: must drain back to 0).
+    pub fn inflight_transfers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// A partition on `dev` dooms every in-flight transfer crossing it.
+    fn abort_crossing_txs(&mut self, dev: usize) {
+        for (_, tx) in self.txs.iter_mut() {
+            match tx {
+                DistTx::SpinUp(s) => {
+                    if s.src == dev || s.inst == dev {
+                        s.aborted = true;
+                    }
+                }
+                DistTx::KvPush { src, dst, aborted, .. } => {
+                    if *src == dev || *dst == dev {
+                        *aborted = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Issue (or re-issue) the transfer for tx `id` under the current path
+    /// health, `delay` seconds from now (retry backoff).
+    fn issue_tx(&mut self, id: u64, delay: f64, q: &mut EventQueue) {
+        let (src, dst, t_nominal) = match self.txs.get(id).expect("issuing a resolved tx") {
+            DistTx::SpinUp(s) => (s.src, s.inst, s.t_nominal),
+            DistTx::KvPush { src, dst, t_nominal, .. } => (*src, *dst, *t_nominal),
+        };
+        let health = cluster::path_health(self.linkh[src], self.linkh[dst]);
+        let plan = xfer::plan(t_nominal, health, self.fault_cfg.transfer_timeout_factor);
+        if plan.doomed {
+            q.push_after(delay + plan.deadline, FleetEvent::XferAbort { tx: id }.timer());
+        } else {
+            q.push_after(delay + plan.t_eff, FleetEvent::XferDone { tx: id }.timer());
+        }
+    }
+
+    /// Was this KvPush hand-off retired (crash teardown / completion) while
+    /// the transfer was on the wire? Retired txs just drop.
+    fn kv_push_retired(&self, sid: u64) -> bool {
+        !matches!(
+            self.seqs.slots().get(sid as usize),
+            Some(Some(s)) if s.phase == SeqPhase::Transferring
+        )
+    }
+
+    /// Transfer landed: spin-ups unfreeze their instance, KV pushes enter
+    /// the decode admit queue (re-routed if the target went inactive).
+    fn xfer_done(&mut self, id: u64, q: &mut EventQueue) {
+        let aborted = match self.txs.get(id) {
+            None => return, // already resolved (stale timer)
+            Some(DistTx::SpinUp(s)) => s.aborted,
+            Some(DistTx::KvPush { aborted, .. }) => *aborted,
+        };
+        if aborted {
+            return self.xfer_abort(id, q);
+        }
+        let now = q.now();
+        match self.txs.remove(id).expect("live tx") {
+            DistTx::SpinUp(s) => {
+                let slot = self.slot_of_dev[s.inst];
+                match self.devices[s.inst].role {
+                    Role::Prefill => {
+                        self.prefill[slot].frozen_until = now;
+                        self.maybe_start_prefill(slot, q);
+                    }
+                    _ => {
+                        self.decode[slot].frozen_until = now;
+                        self.try_admit(slot, q);
+                        self.maybe_start_decode(slot, q);
+                    }
+                }
+            }
+            DistTx::KvPush { seq: sid, di, .. } => {
+                if self.kv_push_retired(sid) {
+                    return; // hand-off retired by a crash teardown
+                }
+                let di = if self.devices[self.decode[di].device].is_active() {
+                    di
+                } else {
+                    self.route_decode(now)
+                };
+                self.admit_queue[di].push_back(sid);
+                self.try_admit(di, q);
+                self.maybe_start_decode(di, q);
+            }
+        }
+    }
+
+    /// Transfer aborted (deadline or partition): retry within the budget;
+    /// final failure rolls back — a spin-up drains its half-born device, a
+    /// KV push falls back to recompute (the KV never left the prefill
+    /// source, so `crash_seq` frees it there and requeues the sequence).
+    fn xfer_abort(&mut self, id: u64, q: &mut EventQueue) {
+        let now = q.now();
+        let budget = self.fault_cfg.transfer_retries;
+        let retired = match self.txs.get(id) {
+            None => return, // already resolved (stale timer)
+            Some(DistTx::KvPush { seq, .. }) => self.kv_push_retired(*seq),
+            Some(DistTx::SpinUp(_)) => false,
+        };
+        if retired {
+            self.txs.remove(id);
+            return;
+        }
+        self.faults.stats.transfer_timeouts += 1;
+        enum Next {
+            Retry(u32),
+            SpinUpFail(usize),
+            PushFail(u64),
+        }
+        let next = match self.txs.get_mut(id).expect("live tx") {
+            DistTx::SpinUp(s) => {
+                if s.retries < budget {
+                    s.retries += 1;
+                    s.aborted = false;
+                    Next::Retry(s.retries)
+                } else {
+                    Next::SpinUpFail(s.inst)
+                }
+            }
+            DistTx::KvPush { seq, retries, aborted, .. } => {
+                if *retries < budget {
+                    *retries += 1;
+                    *aborted = false;
+                    Next::Retry(*retries)
+                } else {
+                    Next::PushFail(*seq)
+                }
+            }
+        };
+        match next {
+            Next::Retry(r) => {
+                self.faults.stats.transfer_retries += 1;
+                // a KV push re-picks its decode target (the old one may be
+                // exactly what partitioned)
+                if matches!(self.txs.get(id), Some(DistTx::KvPush { .. })) {
+                    let ndi = self.route_decode(now);
+                    let ndst = self.decode[ndi].device;
+                    if let Some(DistTx::KvPush { di, dst, .. }) = self.txs.get_mut(id) {
+                        *di = ndi;
+                        *dst = ndst;
+                    }
+                }
+                let delay = fault::backoff_delay(&self.fault_cfg, r);
+                self.issue_tx(id, delay, q);
+            }
+            Next::SpinUpFail(dev) => {
+                self.txs.remove(id);
+                let slot = self.slot_of_dev[dev];
+                match self.devices[dev].role {
+                    Role::Prefill => self.prefill[slot].frozen_until = now,
+                    _ => self.decode[slot].frozen_until = now,
+                }
+                if self.drainable(dev) {
+                    self.begin_drain(dev, q);
+                    self.finish_drains(now);
+                } else {
+                    // last active device of its pool: keep it (treat the
+                    // late weight arrival as done) rather than strand work
+                    match self.devices[dev].role {
+                        Role::Prefill => self.maybe_start_prefill(slot, q),
+                        _ => {
+                            self.try_admit(slot, q);
+                            self.maybe_start_decode(slot, q);
+                        }
+                    }
+                }
+            }
+            Next::PushFail(sid) => {
+                self.txs.remove(id);
+                self.crash_seq(sid, q);
             }
         }
     }
@@ -890,7 +1131,14 @@ impl DistServeEngine {
         // spin-up: the new replica serves only after its weights transfer
         let t_up = self.link.transfer_time(self.spec.weight_bytes());
         let mut inst = InstanceSim::new(id, 1.0);
-        inst.frozen_until = now + t_up;
+        let plane = self.fault_cfg.transfer_plane();
+        if plane {
+            // transactional spin-up: frozen until the transfer resolves
+            inst.frozen_until = f64::INFINITY;
+        } else {
+            inst.frozen_until = now + t_up;
+        }
+        self.linkh.push(LinkHealth::default());
         match role {
             Role::Prefill => {
                 self.slot_of_dev.push(self.prefill.len());
@@ -904,6 +1152,10 @@ impl DistServeEngine {
                 self.decode.push(inst);
                 self.admit_queue.push(VecDeque::new());
             }
+        }
+        if plane {
+            let tx = self.txs.insert(DistTx::SpinUp(xfer::SpinUp::new(id, t_up)));
+            self.issue_tx(tx, 0.0, q);
         }
         self.scale_outs += 1;
         self.fleet.sample(now, &self.devices);
@@ -1084,6 +1336,8 @@ impl Engine for DistServeEngine {
                 self.service_faults(q);
             }
             Some(FleetEvent::Requeue { seq }) => self.requeue(seq, q),
+            Some(FleetEvent::XferDone { tx }) => self.xfer_done(tx, q),
+            Some(FleetEvent::XferAbort { tx }) => self.xfer_abort(tx, q),
             _ => unreachable!("distserve got unknown timer {t:?}"),
         }
     }

@@ -969,6 +969,12 @@ pub enum FleetEvent {
     Fault,
     /// Re-queue sequence `seq` after its crash-retry backoff expired.
     Requeue { seq: u64 },
+    /// Transfer transaction `tx` completed (transfer plane only): the
+    /// engine commits the transfer's effect and removes the transaction.
+    XferDone { tx: u64 },
+    /// Transfer transaction `tx` hit its deadline (timeout or partition):
+    /// the engine rolls back and retries or falls back.
+    XferAbort { tx: u64 },
 }
 
 impl FleetEvent {
@@ -988,6 +994,8 @@ impl FleetEvent {
             FleetEvent::Autoscale => Timer::new(tags::AUTOSCALE),
             FleetEvent::Fault => Timer::new(tags::FAULT),
             FleetEvent::Requeue { seq } => Timer::with(tags::REQUEUE, seq, 0),
+            FleetEvent::XferDone { tx } => Timer::with(tags::XFER_DONE, tx, 0),
+            FleetEvent::XferAbort { tx } => Timer::with(tags::XFER_ABORT, tx, 0),
         }
     }
 
@@ -1010,6 +1018,8 @@ impl FleetEvent {
             tags::AUTOSCALE => Some(FleetEvent::Autoscale),
             tags::FAULT => Some(FleetEvent::Fault),
             tags::REQUEUE => Some(FleetEvent::Requeue { seq: t.a }),
+            tags::XFER_DONE => Some(FleetEvent::XferDone { tx: t.a }),
+            tags::XFER_ABORT => Some(FleetEvent::XferAbort { tx: t.a }),
             _ => None,
         }
     }
@@ -1342,6 +1352,8 @@ mod tests {
             FleetEvent::Autoscale,
             FleetEvent::Fault,
             FleetEvent::Requeue { seq: 12 },
+            FleetEvent::XferDone { tx: 17 },
+            FleetEvent::XferAbort { tx: 18 },
         ];
         for ev in evs {
             assert_eq!(FleetEvent::decode(ev.timer()), Some(ev));

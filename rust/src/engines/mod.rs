@@ -122,9 +122,54 @@
 //!   `Device::slow_factor` ([`crate::cluster::Device::straggle_overhead`])
 //!   for a fixed episode; recovery resets the factor.
 //!
+//! ## Transfer-plane faults and transactions
+//!
+//! With `fault.link_mtbf > 0` (`--fault-link-mtbf`) the same `"faults"`
+//! substream also draws *link* episodes — per-device bandwidth degradation
+//! (`--fault-link-degrade-factor`), latency-spike-equivalent slowdowns, or
+//! full partitions (`--fault-link-partition-prob`), each lasting
+//! `--fault-link-secs`. While the transfer plane is armed
+//! ([`crate::config::FaultConfig::transfer_plane`]), every in-flight
+//! transfer — BanaServe KV staging and layer/attention migration, the
+//! DistServe prefill→decode KV push, and the scale-out weight spin-up in
+//! all four engines — runs as a deadline-bounded *transaction* tracked in
+//! a per-engine [`xfer::TxTable`]:
+//!
+//! * **Start**: effective time = nominal time x the path's
+//!   [`crate::cluster::LinkHealth`] slowdown (worst endpoint wins);
+//!   deadline = nominal time x `--fault-transfer-timeout`. A partitioned
+//!   path, or an effective time past the deadline, schedules
+//!   `FleetEvent::XferAbort` at the deadline instead of `XferDone`.
+//! * **Abort ⇒ rollback**: the transaction undoes its side effects
+//!   exactly — a migration leaves the share delta unapplied and the
+//!   sequences resident on the source, a spin-up drains the half-born
+//!   device, a staging or P→D push returns the sequence to its pre-
+//!   transfer state — so capacity is never double-counted and
+//!   conservation holds under arbitrary partition schedules.
+//! * **Retry**: data-plane transfers re-issue up to
+//!   `--fault-transfer-retries` times with the standard exponential
+//!   backoff; budget exhaustion falls back to the engine's recovery path
+//!   (recompute, or drop to `lost` through the retry budget). Migrations
+//!   carry no explicit retry — the next control cycle re-decides from
+//!   fresh load, which is the natural retry.
+//! * **Mid-flight partition**: queued `XferDone` timers cannot be
+//!   cancelled, so a partition marks crossing transactions aborted and
+//!   the `XferDone` handler reroutes them to the abort path.
+//!
+//! BanaServe's Global KV Cache Store additionally shards across
+//! `--store-nodes` nodes (prefix-hash placement, `--store-replication`
+//! replicas); `--fault-store-mtbf` draws store-node crash/recover events
+//! on a separate `"store-faults"` substream. A lookup whose replicas are
+//! all down degrades gracefully to a 0-hit miss (recompute) and counts
+//! `degraded_lookups`; replication ≥ 2 keeps serving from a surviving
+//! replica. A recovered node restarts cold (empty shard).
+//!
 //! The layer is zero-cost when off: no plan, no Fault timers, tokens always
 //! match, and `straggle_overhead` is exactly 0.0 — fixed-seed no-fault
-//! Reports are byte-identical to the pre-fault engine.
+//! Reports are byte-identical to the pre-fault engine. The transfer plane
+//! preserves the same contract: with `link_mtbf == 0` no link events are
+//! drawn (zero RNG draws), no transaction is ever created, and the legacy
+//! fire-and-forget transfer timers are emitted verbatim.
 //!
 //! # The experiment harness
 //!
@@ -142,6 +187,7 @@ pub mod distserve_sim;
 pub mod fleet;
 pub mod hft;
 pub mod vllm_sim;
+pub mod xfer;
 
 use crate::cluster::Device;
 use crate::config::{EngineKind, ExperimentConfig};
@@ -191,6 +237,16 @@ pub struct EngineExtras {
     pub recovery_latency_s: f64,
     /// Mean time from first capacity deficit to active-count refill (s).
     pub time_to_refill_s: f64,
+    /// Transfer plane: link degrade/partition episodes applied.
+    pub link_degradations: u64,
+    /// Transfer plane: transactions aborted at their deadline.
+    pub transfer_timeouts: u64,
+    /// Transfer plane: aborted transactions re-issued.
+    pub transfer_retries: u64,
+    /// Transfer plane: Global-KV-Store node crashes applied.
+    pub store_node_crashes: u64,
+    /// Transfer plane: store lookups served degraded (all replicas down).
+    pub degraded_lookups: u64,
 }
 
 /// Total device-cost of a run: the recorded cost-rate step series

@@ -10,7 +10,8 @@
 
 use super::common::{self, BatchLimits, InstanceSim, Seq, SeqPhase, StepInfo, StepKind};
 use super::fleet::{self, FleetEvent, Router};
-use crate::cluster::{Cluster, Device, DeviceState, GpuSpec, Link, Role};
+use super::xfer::{self, TxTable};
+use crate::cluster::{self, Cluster, Device, DeviceState, GpuSpec, Link, LinkHealth, Role};
 use crate::config::{ExperimentConfig, FaultConfig, RouteMode};
 use crate::fault::{self, FaultEvent, FaultKind, FaultPlan, FaultTimeline};
 use crate::kvcache::RadixTree;
@@ -107,6 +108,10 @@ pub struct VllmEngine {
     pub drains: u64,
     fault_cfg: FaultConfig,
     faults: FaultTimeline,
+    /// Per-device link health (transfer plane); default = healthy.
+    linkh: Vec<LinkHealth>,
+    /// In-flight spin-up transactions (empty while the plane is off).
+    txs: TxTable<xfer::SpinUp>,
 }
 
 impl VllmEngine {
@@ -199,6 +204,8 @@ impl VllmEngine {
                 cfg.n_devices,
                 cfg.workload.duration,
             )),
+            linkh: vec![LinkHealth::default(); cfg.n_devices],
+            txs: TxTable::default(),
         }
     }
 
@@ -602,6 +609,107 @@ impl VllmEngine {
                     self.devices[ev.device].slow_factor = 1.0;
                 }
             }
+            FaultKind::LinkDegrade => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device].slowdown = self.fault_cfg.link_degrade_factor;
+                    self.faults.stats.link_degradations += 1;
+                }
+            }
+            FaultKind::LinkPartition => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device].partitioned = true;
+                    self.faults.stats.link_degradations += 1;
+                    self.abort_crossing_txs(ev.device);
+                }
+            }
+            FaultKind::LinkRestore => {
+                if ev.device < self.linkh.len() {
+                    self.linkh[ev.device] = LinkHealth::default();
+                }
+            }
+            // store nodes exist only in the BanaServe engine
+            FaultKind::StoreCrash | FaultKind::StoreRecover => {}
+        }
+    }
+
+    // --- transfer plane ----------------------------------------------------
+
+    /// Live transfer transactions (tests: must drain back to 0).
+    pub fn inflight_transfers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// A partition on `dev` dooms every in-flight transfer crossing it.
+    fn abort_crossing_txs(&mut self, dev: usize) {
+        for (_, tx) in self.txs.iter_mut() {
+            if tx.src == dev || tx.inst == dev {
+                tx.aborted = true;
+            }
+        }
+    }
+
+    /// Issue (or re-issue) the spin-up transfer for tx `id` under the
+    /// current path health, `delay` seconds from now (retry backoff).
+    fn issue_spin_up(&mut self, id: u64, delay: f64, q: &mut EventQueue) {
+        let tx = self.txs.get(id).expect("issuing a resolved tx");
+        let health = cluster::path_health(self.linkh[tx.src], self.linkh[tx.inst]);
+        let plan = xfer::plan(tx.t_nominal, health, self.fault_cfg.transfer_timeout_factor);
+        if plan.doomed {
+            q.push_after(delay + plan.deadline, FleetEvent::XferAbort { tx: id }.timer());
+        } else {
+            q.push_after(delay + plan.t_eff, FleetEvent::XferDone { tx: id }.timer());
+        }
+    }
+
+    /// Spin-up transfer landed: unfreeze the instance and let it work.
+    fn xfer_done(&mut self, id: u64, q: &mut EventQueue) {
+        let aborted = match self.txs.get(id) {
+            None => return, // already resolved (stale timer)
+            Some(tx) => tx.aborted,
+        };
+        if aborted {
+            return self.xfer_abort(id, q);
+        }
+        let tx = self.txs.remove(id).expect("live tx");
+        let now = q.now();
+        self.insts[tx.inst].frozen_until = now;
+        self.maybe_start(tx.inst, q);
+    }
+
+    /// Spin-up transfer aborted (deadline or partition): retry within the
+    /// budget; a final failure drains the half-born instance — its device
+    /// never held weights or KV, so release is the exact rollback.
+    fn xfer_abort(&mut self, id: u64, q: &mut EventQueue) {
+        let now = q.now();
+        let budget = self.fault_cfg.transfer_retries;
+        let (retries, exhausted) = match self.txs.get_mut(id) {
+            None => return, // already resolved (stale timer)
+            Some(tx) => {
+                self.faults.stats.transfer_timeouts += 1;
+                if tx.retries < budget {
+                    tx.retries += 1;
+                    tx.aborted = false;
+                    (tx.retries, false)
+                } else {
+                    (tx.retries, true)
+                }
+            }
+        };
+        if !exhausted {
+            self.faults.stats.transfer_retries += 1;
+            let delay = fault::backoff_delay(&self.fault_cfg, retries);
+            self.issue_spin_up(id, delay, q);
+            return;
+        }
+        let tx = self.txs.remove(id).expect("live tx");
+        self.insts[tx.inst].frozen_until = now;
+        if self.drainable(tx.inst) {
+            self.begin_drain(tx.inst, q);
+            self.finish_drains(now);
+        } else {
+            // last active instance: keep it (treat the late arrival of the
+            // weights as done) rather than strand queued work forever
+            self.maybe_start(tx.inst, q);
         }
     }
 
@@ -779,10 +887,21 @@ impl VllmEngine {
         self.devices.push(dev);
         let t_up = self.link.transfer_time(self.spec.weight_bytes());
         let mut inst = InstanceSim::new(id, 1.0);
-        inst.frozen_until = now + t_up;
+        let plane = self.fault_cfg.transfer_plane();
+        if plane {
+            // transactional spin-up: frozen until the transfer resolves
+            inst.frozen_until = f64::INFINITY;
+        } else {
+            inst.frozen_until = now + t_up;
+        }
         self.insts.push(inst);
+        self.linkh.push(LinkHealth::default());
         self.caches.push(RadixTree::new());
         self.cache_budgets.push(budget);
+        if plane {
+            let tx = self.txs.insert(xfer::SpinUp::new(id, t_up));
+            self.issue_spin_up(tx, 0.0, q);
+        }
         let bi = self.book.add_instance();
         self.book.entry_mut(bi).weight = self.devices[id].spec.weight;
         self.routed_counts.push(0);
@@ -948,6 +1067,8 @@ impl Engine for VllmEngine {
                 self.service_faults(q);
             }
             Some(FleetEvent::Requeue { seq }) => self.requeue(seq, q),
+            Some(FleetEvent::XferDone { tx }) => self.xfer_done(tx, q),
+            Some(FleetEvent::XferAbort { tx }) => self.xfer_abort(tx, q),
             _ => unreachable!("vllm engine got unknown timer {t:?}"),
         }
     }

@@ -1,0 +1,241 @@
+//! Deadline-bounded transfer transactions (the transfer plane).
+//!
+//! When [`crate::config::FaultConfig::transfer_plane`] is armed, every
+//! in-flight transfer — KV staging, layer/attention migration, the
+//! DistServe prefill→decode push, scale-out weight spin-up — is tracked
+//! as a transaction in a [`TxTable`] so that a link fault can abort it
+//! and the engine can roll its side effects back exactly.
+//!
+//! The table is a generational slot map: ids encode `(generation, slot)`
+//! so a stale `XferDone`/`XferAbort` timer for a transaction that already
+//! resolved can never alias a newer transaction that reused the slot.
+//! All storage is `Vec`-based (LIFO free list) — iteration order and id
+//! allocation are pure functions of the call sequence, which keeps
+//! fixed-seed runs byte-identical.
+
+use crate::cluster::LinkHealth;
+
+/// How a transaction should be scheduled, given the path health at start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct XferPlan {
+    /// Nominal transfer time x the path slowdown.
+    pub t_eff: f64,
+    /// Nominal transfer time x `fault.transfer_timeout_factor`.
+    pub deadline: f64,
+    /// True when the transfer cannot complete: the path is partitioned at
+    /// start, or the degraded effective time already exceeds the deadline.
+    /// Doomed transfers schedule `XferAbort` at the deadline; healthy ones
+    /// schedule `XferDone` at `t_eff`.
+    pub doomed: bool,
+}
+
+/// Plan one transfer over a path: worst-endpoint slowdown stretches the
+/// effective time, the timeout factor fixes the deadline from the
+/// *nominal* time (so a degraded link genuinely risks timing out).
+pub fn plan(t_nominal: f64, health: LinkHealth, timeout_factor: f64) -> XferPlan {
+    let t_eff = t_nominal * health.slowdown;
+    let deadline = t_nominal * timeout_factor;
+    XferPlan {
+        t_eff,
+        deadline,
+        doomed: health.partitioned || t_eff > deadline,
+    }
+}
+
+/// A scale-out weight spin-up tracked as a transfer transaction — the
+/// one transaction shape all four engines share (engine-specific
+/// transfers wrap their own payloads around a [`TxTable`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SpinUp {
+    /// The half-born instance waiting on its weights.
+    pub inst: usize,
+    /// Path anchor: weights stream from the fleet's first device.
+    pub src: usize,
+    /// Healthy-link transfer time (the deadline base).
+    pub t_nominal: f64,
+    pub retries: u32,
+    /// A mid-flight partition cannot cancel the queued `XferDone`; it
+    /// marks the tx aborted and the handler reroutes to the abort path.
+    pub aborted: bool,
+}
+
+impl SpinUp {
+    pub fn new(inst: usize, t_nominal: f64) -> Self {
+        SpinUp {
+            inst,
+            src: 0,
+            t_nominal,
+            retries: 0,
+            aborted: false,
+        }
+    }
+}
+
+/// A generational slot map for in-flight transactions.
+///
+/// Ids are `(generation << 32) | slot`; `remove` bumps the slot's
+/// generation, so lookups with a resolved id return `None` instead of
+/// the slot's next tenant.
+#[derive(Debug)]
+pub struct TxTable<T> {
+    slots: Vec<Option<T>>,
+    gens: Vec<u32>,
+    free: Vec<usize>,
+    live: usize,
+}
+
+impl<T> Default for TxTable<T> {
+    fn default() -> Self {
+        TxTable {
+            slots: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+}
+
+impl<T> TxTable<T> {
+    fn id_of(&self, slot: usize) -> u64 {
+        ((self.gens[slot] as u64) << 32) | slot as u64
+    }
+
+    fn slot_of(&self, id: u64) -> Option<usize> {
+        let slot = (id & 0xffff_ffff) as usize;
+        let generation = (id >> 32) as u32;
+        if slot < self.slots.len() && self.gens[slot] == generation && self.slots[slot].is_some() {
+            Some(slot)
+        } else {
+            None
+        }
+    }
+
+    /// Insert a transaction and return its id (stable until `remove`).
+    pub fn insert(&mut self, tx: T) -> u64 {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s] = Some(tx);
+                s
+            }
+            None => {
+                self.slots.push(Some(tx));
+                self.gens.push(0);
+                self.slots.len() - 1
+            }
+        };
+        self.live += 1;
+        self.id_of(slot)
+    }
+
+    pub fn get(&self, id: u64) -> Option<&T> {
+        self.slot_of(id).and_then(|s| self.slots[s].as_ref())
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut T> {
+        match self.slot_of(id) {
+            Some(s) => self.slots[s].as_mut(),
+            None => None,
+        }
+    }
+
+    /// Resolve a transaction: frees the slot and invalidates the id.
+    pub fn remove(&mut self, id: u64) -> Option<T> {
+        let slot = self.slot_of(id)?;
+        let tx = self.slots[slot].take();
+        self.gens[slot] = self.gens[slot].wrapping_add(1);
+        self.free.push(slot);
+        self.live -= 1;
+        tx
+    }
+
+    /// Live transaction count (the engine's in-flight contribution).
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate live transactions in slot order (deterministic).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (u64, &mut T)> {
+        let gens = &self.gens;
+        self.slots
+            .iter_mut()
+            .enumerate()
+            .filter_map(move |(slot, opt)| {
+                opt.as_mut()
+                    .map(|tx| (((gens[slot] as u64) << 32) | slot as u64, tx))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_ids_survive_slot_reuse() {
+        let mut t: TxTable<&str> = TxTable::default();
+        let a = t.insert("a");
+        let b = t.insert("b");
+        assert_eq!(t.get(a), Some(&"a"));
+        assert_eq!(t.remove(a), Some("a"));
+        // The freed slot is reused, but under a new generation: the old
+        // id must not resolve to the new tenant.
+        let c = t.insert("c");
+        assert_ne!(a, c);
+        assert_eq!(a & 0xffff_ffff, c & 0xffff_ffff);
+        assert_eq!(t.get(a), None);
+        assert_eq!(t.remove(a), None);
+        assert_eq!(t.get(c), Some(&"c"));
+        assert_eq!(t.get(b), Some(&"b"));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn iteration_is_slot_ordered_and_ids_round_trip() {
+        let mut t: TxTable<u32> = TxTable::default();
+        let ids: Vec<u64> = (0..5).map(|v| t.insert(v)).collect();
+        t.remove(ids[2]);
+        let seen: Vec<(u64, u32)> = t.iter_mut().map(|(id, v)| (id, *v)).collect();
+        assert_eq!(seen.len(), 4);
+        // Slot order == insertion order minus the removed middle slot.
+        assert_eq!(
+            seen.iter().map(|&(_, v)| v).collect::<Vec<_>>(),
+            vec![0, 1, 3, 4]
+        );
+        for (id, v) in seen {
+            assert_eq!(t.get(id), Some(&v));
+        }
+    }
+
+    #[test]
+    fn plan_applies_slowdown_and_dooms_partitions_and_timeouts() {
+        let healthy = LinkHealth::default();
+        let p = plan(2.0, healthy, 4.0);
+        assert_eq!(p.t_eff, 2.0);
+        assert_eq!(p.deadline, 8.0);
+        assert!(!p.doomed);
+
+        let slow = LinkHealth {
+            slowdown: 3.0,
+            partitioned: false,
+        };
+        let p = plan(2.0, slow, 4.0);
+        assert_eq!(p.t_eff, 6.0);
+        assert!(!p.doomed, "3x slowdown still beats a 4x deadline");
+
+        let too_slow = LinkHealth {
+            slowdown: 5.0,
+            partitioned: false,
+        };
+        assert!(plan(2.0, too_slow, 4.0).doomed);
+
+        let cut = LinkHealth {
+            slowdown: 1.0,
+            partitioned: true,
+        };
+        assert!(plan(2.0, cut, 4.0).doomed);
+    }
+}

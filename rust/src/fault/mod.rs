@@ -29,6 +29,19 @@ pub enum FaultKind {
     SlowStart,
     /// Straggler episode ends: back to nominal speed.
     SlowEnd,
+    /// The device's uplink degrades: transfers over it slow by the
+    /// configured `link_degrade_factor`.
+    LinkDegrade,
+    /// The device's uplink partitions fully: no bytes move; in-flight
+    /// transfer transactions touching it abort at their deadline.
+    LinkPartition,
+    /// The uplink episode ends: the link is healthy again.
+    LinkRestore,
+    /// A Global-KV-Store node goes down (`device` is the node index):
+    /// lookups owned by it degrade to recompute unless a replica serves.
+    StoreCrash,
+    /// The store node comes back up.
+    StoreRecover,
 }
 
 /// One scheduled fault event.
@@ -116,10 +129,96 @@ impl FaultPlan {
                 });
             }
         }
+        // link-degradation episodes ride the SAME substream, drawn after
+        // the device loop: with `link_mtbf == 0` (the default) not one
+        // extra value is consumed, so pre-existing fault-enabled plans
+        // stay byte-identical
+        if cfg.link_mtbf > 0.0 {
+            let mut link_until = vec![0.0f64; n_devices];
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(1.0 / cfg.link_mtbf);
+                if t >= horizon {
+                    break;
+                }
+                let partition = rng.chance(cfg.link_partition_prob);
+                let candidates: Vec<usize> =
+                    (0..n_devices).filter(|&d| link_until[d] <= t).collect();
+                if candidates.is_empty() {
+                    continue;
+                }
+                let dev = candidates[rng.below(candidates.len() as u64) as usize];
+                link_until[dev] = t + cfg.link_fault_secs;
+                plan.events.push(FaultEvent {
+                    t,
+                    device: dev,
+                    kind: if partition {
+                        FaultKind::LinkPartition
+                    } else {
+                        FaultKind::LinkDegrade
+                    },
+                });
+                plan.events.push(FaultEvent {
+                    t: t + cfg.link_fault_secs,
+                    device: dev,
+                    kind: FaultKind::LinkRestore,
+                });
+            }
+        }
         // generation pushes recover/slow-end edges out of order; stable
         // sort by time keeps the push order for exact ties
         plan.events.sort_by(|a, b| a.t.total_cmp(&b.t));
         plan
+    }
+
+    /// Append store-node crash/recover events for `n_nodes` store shards
+    /// over `[0, horizon)` and re-sort. Drawn from the dedicated
+    /// `"store-faults"` substream (not `"faults"`), so adding them never
+    /// perturbs the shared device/link schedule; only the store-bearing
+    /// engine calls this. A crash that would down every node is skipped —
+    /// replication can then always find *some* surviving shard, and total
+    /// store loss is modeled by `n_nodes == 1` outages instead.
+    pub fn add_store_events(
+        &mut self,
+        cfg: &FaultConfig,
+        seed: u64,
+        n_nodes: usize,
+        horizon: f64,
+    ) {
+        if !cfg.enabled || cfg.store_crash_mtbf <= 0.0 || n_nodes == 0 || horizon <= 0.0 {
+            return;
+        }
+        let mut rng = Rng::new(seed).substream("store-faults");
+        let mut down_until = vec![0.0f64; n_nodes];
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / cfg.store_crash_mtbf);
+            if t >= horizon {
+                break;
+            }
+            let candidates: Vec<usize> =
+                (0..n_nodes).filter(|&d| down_until[d] <= t).collect();
+            if n_nodes > 1 && candidates.len() <= 1 {
+                continue;
+            }
+            if candidates.is_empty() {
+                continue;
+            }
+            let node = candidates[rng.below(candidates.len() as u64) as usize];
+            let downtime = rng.exponential(1.0 / cfg.recovery_time);
+            down_until[node] = t + downtime;
+            self.events.push(FaultEvent {
+                t,
+                device: node,
+                kind: FaultKind::StoreCrash,
+            });
+            self.events.push(FaultEvent {
+                t: t + downtime,
+                device: node,
+                kind: FaultKind::StoreRecover,
+            });
+        }
+        self.events.sort_by(|a, b| a.t.total_cmp(&b.t));
     }
 
     pub fn is_empty(&self) -> bool {
@@ -151,6 +250,17 @@ pub struct FaultStats {
     pub refill_time_sum: f64,
     /// Capacity deficits that were fully refilled.
     pub refills: u64,
+    /// Link episodes actually applied (degradations + partitions).
+    pub link_degradations: u64,
+    /// Transfer transactions that hit their deadline and aborted.
+    pub transfer_timeouts: u64,
+    /// Transfer transactions re-issued after an abort.
+    pub transfer_retries: u64,
+    /// Store-node crashes actually applied.
+    pub store_node_crashes: u64,
+    /// Store lookups that degraded to the recompute path because every
+    /// replica of the owning shard was down.
+    pub degraded_lookups: u64,
     /// Start of the current (unfilled) capacity deficit, < 0 when none.
     deficit_start: f64,
     /// Active-device count to restore before the deficit counts as filled.
@@ -167,6 +277,11 @@ impl Default for FaultStats {
             recovery_latency_sum: 0.0,
             refill_time_sum: 0.0,
             refills: 0,
+            link_degradations: 0,
+            transfer_timeouts: 0,
+            transfer_retries: 0,
+            store_node_crashes: 0,
+            degraded_lookups: 0,
             deficit_start: -1.0,
             deficit_target: 0,
         }
@@ -224,6 +339,11 @@ impl FaultStats {
         extras.recovered_seqs = self.recovered_seqs;
         extras.recovery_latency_s = self.mean_recovery_latency();
         extras.time_to_refill_s = self.mean_refill_time();
+        extras.link_degradations = self.link_degradations;
+        extras.transfer_timeouts = self.transfer_timeouts;
+        extras.transfer_retries = self.transfer_retries;
+        extras.store_node_crashes = self.store_node_crashes;
+        extras.degraded_lookups = self.degraded_lookups;
     }
 }
 
@@ -382,6 +502,83 @@ mod tests {
         assert_eq!(tl.pop_due(5.0).map(|e| e.kind), Some(FaultKind::Recover));
         assert_eq!(tl.pop_due(5.0), None);
         assert_eq!(tl.next_time(), None);
+    }
+
+    #[test]
+    fn link_knob_off_leaves_existing_plans_byte_identical() {
+        // the zero-cost-off seam: enabling link chaos must not perturb the
+        // device schedule, and disabling it must not consume a single draw
+        let base = FaultPlan::generate(&cfg_on(), 11, 6, 300.0);
+        let mut with_links = cfg_on();
+        with_links.link_mtbf = 5.0;
+        let plan = FaultPlan::generate(&with_links, 11, 6, 300.0);
+        let device_only: Vec<FaultEvent> = plan
+            .events
+            .iter()
+            .copied()
+            .filter(|e| {
+                !matches!(
+                    e.kind,
+                    FaultKind::LinkDegrade | FaultKind::LinkPartition | FaultKind::LinkRestore
+                )
+            })
+            .collect();
+        assert_eq!(device_only, base.events, "device schedule must be untouched");
+        assert!(
+            plan.events.len() > base.events.len(),
+            "link chaos at mtbf 5 over 300s must schedule episodes"
+        );
+    }
+
+    #[test]
+    fn link_episodes_pair_with_restores_and_respect_partition_prob() {
+        let mut cfg = cfg_on();
+        cfg.link_mtbf = 3.0;
+        cfg.link_partition_prob = 1.0;
+        let plan = FaultPlan::generate(&cfg, 5, 4, 400.0);
+        let parts = plan
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::LinkPartition)
+            .count();
+        let degrades = plan
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::LinkDegrade)
+            .count();
+        let restores = plan
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::LinkRestore)
+            .count();
+        assert!(parts > 0, "mtbf 3 over 400s must schedule link faults");
+        assert_eq!(degrades, 0, "partition_prob 1.0 allows no degradations");
+        assert_eq!(parts + degrades, restores, "every episode has a restore edge");
+    }
+
+    #[test]
+    fn store_events_are_seeded_and_never_down_all_multi_node_shards() {
+        let mut cfg = cfg_on();
+        cfg.store_crash_mtbf = 4.0;
+        let mut a = FaultPlan::default();
+        a.add_store_events(&cfg, 9, 3, 500.0);
+        let mut b = FaultPlan::default();
+        b.add_store_events(&cfg, 9, 3, 500.0);
+        assert_eq!(a, b, "same seed must replay byte-identically");
+        assert!(!a.is_empty());
+        let mut up = 3i64;
+        for ev in &a.events {
+            match ev.kind {
+                FaultKind::StoreCrash => up -= 1,
+                FaultKind::StoreRecover => up += 1,
+                _ => panic!("store plan has only store events"),
+            }
+            assert!(up >= 1, "multi-node store must keep one shard up");
+        }
+        // disabled knob adds nothing
+        let mut c = FaultPlan::default();
+        c.add_store_events(&cfg_on(), 9, 3, 500.0);
+        assert!(c.is_empty(), "store chaos must default off");
     }
 
     #[test]

@@ -204,6 +204,177 @@ impl GlobalKvStore {
     }
 }
 
+/// Prefix-hash shard placement: FNV-1a over the first (up to) 32 tokens.
+/// Hashing a short leading window — not the whole prompt — keeps every
+/// request of one shared-prefix template on the same shard, so a cached
+/// prefix is always wholly resident on its owner node.
+fn shard_of(tokens: &[u32], n: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens.iter().take(32) {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    (h % n as u64) as usize
+}
+
+/// The Global KV Store sharded across N store nodes with optional
+/// replication (paper Fig 5 meets the Mooncake availability argument):
+/// prefix-hash placement picks an owner node per prefix family, writes go
+/// to the owner plus `replication - 1` successor nodes, and a lookup
+/// whose owner is down fails over to a surviving replica. When every
+/// replica is down the lookup *degrades gracefully* — a clean 0-hit miss
+/// (recompute path), never a stall on a dead node.
+///
+/// With the default shape (1 node, replication 1, no store faults) every
+/// call delegates verbatim to the single inner [`GlobalKvStore`], so flat
+/// configurations stay byte-identical.
+#[derive(Debug)]
+pub struct ShardedKvStore {
+    nodes: Vec<GlobalKvStore>,
+    up: Vec<bool>,
+    replication: usize,
+    /// Lookups that found every replica down (degraded to recompute).
+    pub degraded_lookups: u64,
+}
+
+impl ShardedKvStore {
+    /// Build `n_nodes` shards from a total-store config: multi-node
+    /// stores split the tier capacities evenly (same total footprint);
+    /// a single node keeps `config` untouched.
+    pub fn new(config: StoreConfig, n_nodes: usize, replication: usize) -> Self {
+        let n = n_nodes.max(1);
+        let replication = replication.clamp(1, n);
+        let node_config = if n == 1 {
+            config
+        } else {
+            StoreConfig {
+                cpu_capacity_tokens: config.cpu_capacity_tokens / n as u64,
+                ssd_capacity_tokens: config.ssd_capacity_tokens / n as u64,
+                ..config
+            }
+        };
+        ShardedKvStore {
+            nodes: (0..n).map(|_| GlobalKvStore::new(node_config.clone())).collect(),
+            up: vec![true; n],
+            replication,
+            degraded_lookups: 0,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn nodes_up(&self) -> usize {
+        self.up.iter().filter(|&&u| u).count()
+    }
+
+    /// Mark a store node down/up (fault-plan `StoreCrash`/`StoreRecover`).
+    /// Returns false when the transition is a no-op (already in state or
+    /// out of range). A node that went down lost its DRAM-tier contents:
+    /// recovery brings back an *empty* shard that re-warms from traffic.
+    pub fn set_node_up(&mut self, node: usize, up: bool) -> bool {
+        if node >= self.nodes.len() || self.up[node] == up {
+            return false;
+        }
+        if up {
+            // cold restart: the index died with the node
+            let cfg = self.nodes[node].config.clone();
+            self.nodes[node] = GlobalKvStore::new(cfg);
+        }
+        self.up[node] = up;
+        true
+    }
+
+    /// Replica chain of the prefix owning `tokens`: owner first, then
+    /// successor nodes.
+    fn replicas(&self, tokens: &[u32]) -> impl Iterator<Item = usize> + '_ {
+        let n = self.nodes.len();
+        let owner = shard_of(tokens, n);
+        (0..self.replication).map(move |r| (owner + r) % n)
+    }
+
+    /// Look up the cached prefix on the first live replica; every replica
+    /// down degrades to a clean miss (recompute) and is counted.
+    pub fn lookup(&mut self, tokens: &[u32], spec: &ModelSpec, t_fwd_layer: f64) -> FetchPlan {
+        let node = self.replicas(tokens).find(|&i| self.up[i]);
+        match node {
+            Some(i) => self.nodes[i].lookup(tokens, spec, t_fwd_layer),
+            None => {
+                self.degraded_lookups += 1;
+                FetchPlan {
+                    hit_tokens: 0,
+                    tier: Tier::Cpu,
+                    t_fetch_layer: 0.0,
+                    stall: 0.0,
+                    raw_transfer: 0.0,
+                }
+            }
+        }
+    }
+
+    /// Record a batch of freshly prefilled prompts: each prompt is written
+    /// to every live replica of its owner (down replicas simply miss the
+    /// write and re-warm after recovery). Returns new tokens written
+    /// summed over shards.
+    pub fn insert_batch<'a>(&mut self, seqs: impl IntoIterator<Item = &'a [u32]>) -> u64 {
+        let n = self.nodes.len();
+        if n == 1 {
+            if !self.up[0] {
+                return 0;
+            }
+            return self.nodes[0].insert_batch(seqs);
+        }
+        let mut per_node: Vec<Vec<&[u32]>> = vec![Vec::new(); n];
+        for tokens in seqs {
+            for i in self.replicas(tokens).collect::<Vec<_>>() {
+                per_node[i].push(tokens);
+            }
+        }
+        let mut added = 0u64;
+        for (i, batch) in per_node.into_iter().enumerate() {
+            if self.up[i] && !batch.is_empty() {
+                added += self.nodes[i].insert_batch(batch);
+            }
+        }
+        added
+    }
+
+    /// Peek the best hit length over live replicas, without stat effects.
+    pub fn peek(&self, tokens: &[u32]) -> u64 {
+        self.replicas(tokens)
+            .filter(|&i| self.up[i])
+            .map(|i| self.nodes[i].peek(tokens))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Request hit rate aggregated over shards.
+    pub fn hit_rate(&self) -> f64 {
+        let (mut hits, mut lookups) = (0u64, 0u64);
+        for s in &self.nodes {
+            hits += s.stats.hits;
+            lookups += s.stats.lookups;
+        }
+        // degraded lookups never reached a shard but were still lookups
+        lookups += self.degraded_lookups;
+        if lookups == 0 {
+            0.0
+        } else {
+            hits as f64 / lookups as f64
+        }
+    }
+
+    pub fn token_count(&self) -> u64 {
+        self.nodes.iter().map(|s| s.token_count()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,5 +520,104 @@ mod tests {
         assert_eq!(s.peek(&[1, 2, 3]), 3);
         let after = s.stats();
         assert_eq!(before.lookups, after.lookups);
+    }
+
+    // --- sharded store -----------------------------------------------------
+
+    fn sharded(n: usize, rep: usize) -> ShardedKvStore {
+        ShardedKvStore::new(StoreConfig::default(), n, rep)
+    }
+
+    #[test]
+    fn single_node_sharded_store_matches_flat_store() {
+        let mut flat = GlobalKvStore::new(StoreConfig::default());
+        let mut shard = sharded(1, 1);
+        let seqs: Vec<Vec<u32>> = (0..8u32).map(|i| (i * 37..i * 37 + 90).collect()).collect();
+        assert_eq!(
+            flat.insert_batch(seqs.iter().map(|v| &v[..])),
+            shard.insert_batch(seqs.iter().map(|v| &v[..]))
+        );
+        for s in &seqs {
+            let a = flat.lookup(s, &LLAMA31_8B, 4.22e-3);
+            let b = shard.lookup(s, &LLAMA31_8B, 4.22e-3);
+            assert_eq!(a, b, "flat and 1-node sharded plans must be identical");
+            assert_eq!(flat.peek(s), shard.peek(s));
+        }
+        assert_eq!(flat.hit_rate(), shard.hit_rate());
+        assert_eq!(shard.degraded_lookups, 0);
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_prefix_families_colocate() {
+        let shard = sharded(4, 1);
+        let template: Vec<u32> = (1000..1200).collect();
+        let mut long_a = template.clone();
+        long_a.extend(5000..5300u32);
+        let mut long_b = template.clone();
+        long_b.extend(7000..7100u32);
+        let n = shard.n_nodes();
+        assert_eq!(super::shard_of(&long_a, n), super::shard_of(&template, n));
+        assert_eq!(super::shard_of(&long_b, n), super::shard_of(&template, n));
+        // and a different family can land elsewhere (FNV spreads keys)
+        let spread: std::collections::HashSet<usize> = (0..64u32)
+            .map(|i| {
+                let fam: Vec<u32> = (i * 997..i * 997 + 40).collect();
+                super::shard_of(&fam, n)
+            })
+            .collect();
+        assert!(spread.len() > 1, "64 families must not all hash to one shard");
+    }
+
+    #[test]
+    fn owner_down_degrades_to_recompute_and_counts() {
+        let mut s = sharded(3, 1);
+        let toks: Vec<u32> = (0..200).collect();
+        s.insert_batch([&toks[..]]);
+        let owner = super::shard_of(&toks, 3);
+        assert_eq!(s.lookup(&toks, &LLAMA31_8B, 4.22e-3).hit_tokens, 200);
+        assert!(s.set_node_up(owner, false));
+        let p = s.lookup(&toks, &LLAMA31_8B, 4.22e-3);
+        assert_eq!(p.hit_tokens, 0, "down owner must degrade to a clean miss");
+        assert_eq!(p.stall, 0.0, "degraded lookups never stall");
+        assert_eq!(s.degraded_lookups, 1);
+        // recovery brings back an EMPTY shard (DRAM died with the node)
+        assert!(s.set_node_up(owner, true));
+        assert_eq!(s.lookup(&toks, &LLAMA31_8B, 4.22e-3).hit_tokens, 0);
+        s.insert_batch([&toks[..]]);
+        assert_eq!(s.lookup(&toks, &LLAMA31_8B, 4.22e-3).hit_tokens, 200);
+    }
+
+    #[test]
+    fn replication_serves_from_surviving_replica() {
+        let mut s = sharded(3, 2);
+        let toks: Vec<u32> = (400..700).collect();
+        s.insert_batch([&toks[..]]);
+        let owner = super::shard_of(&toks, 3);
+        assert!(s.set_node_up(owner, false));
+        let p = s.lookup(&toks, &LLAMA31_8B, 4.22e-3);
+        assert_eq!(p.hit_tokens, 300, "replica must serve while the owner is down");
+        assert_eq!(s.degraded_lookups, 0);
+        assert_eq!(s.peek(&toks), 300);
+        // both replicas down -> degraded after all
+        assert!(s.set_node_up((owner + 1) % 3, false));
+        assert_eq!(s.lookup(&toks, &LLAMA31_8B, 4.22e-3).hit_tokens, 0);
+        assert_eq!(s.degraded_lookups, 1);
+        assert_eq!(s.nodes_up(), 1);
+    }
+
+    #[test]
+    fn multi_node_capacity_splits_but_total_is_preserved() {
+        let cfg = StoreConfig {
+            cpu_capacity_tokens: 900,
+            ssd_capacity_tokens: 300,
+            ..StoreConfig::default()
+        };
+        let s = ShardedKvStore::new(cfg, 3, 1);
+        for node in &s.nodes {
+            assert_eq!(node.config.cpu_capacity_tokens, 300);
+            assert_eq!(node.config.ssd_capacity_tokens, 100);
+        }
+        assert_eq!(s.n_nodes(), 3);
+        assert_eq!(s.nodes_up(), 3);
     }
 }

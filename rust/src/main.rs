@@ -13,7 +13,7 @@
 //!                     `rust/src/scenario/`; the registered names and doc
 //!                     lines below are printed from the registry itself:
 //!                       bursty-autoscale, hetero-slo, cache-skew,
-//!                       fault-recovery, megafleet
+//!                       fault-recovery, degraded-service, megafleet
 //!   sweep             RPS sweep for one engine/profile
 //!   figure <id>       regenerate a paper figure (1|2a|2b|6|7|8|9|10|11)
 //!   migrate-demo      show Alg 1 decisions on a synthetic imbalance
@@ -30,7 +30,14 @@
 //! default, deterministic per --seed): --fault-enabled --fault-mtbf
 //! --fault-recovery-time --fault-straggler-prob --fault-straggler-factor
 //! --fault-straggler-secs --fault-retry-budget --fault-retry-backoff
-//! (JSON keys: fault_enabled, fault_mtbf, ...); scalable routing (defaults
+//! (JSON keys: fault_enabled, fault_mtbf, ...); transfer-plane chaos
+//! (armed by --fault-link-mtbf > 0; every in-flight transfer then runs
+//! as a deadline-bounded transaction that aborts, rolls back and
+//! retries): --fault-link-mtbf --fault-link-degrade-factor
+//! --fault-link-partition-prob --fault-link-secs --fault-store-mtbf
+//! --fault-transfer-timeout --fault-transfer-retries; sharded Global KV
+//! Store (BanaServe): --store-nodes --store-replication (JSON keys:
+//! fault_link_mtbf, ..., store_nodes, store_replication); scalable routing (defaults
 //! reproduce the historical scan bit-for-bit at fleet <= 64):
 //! --route-mode auto|scan|tournament|p2c --route-sample-k
 //! --route-scan-threshold; diurnal multi-tenant traces: --diurnal-ratio
@@ -43,6 +50,8 @@
 //! --base-devices --peak-devices --burst-factor --burst-secs
 //! --period-secs, hetero-slo --engines, cache-skew --devices,
 //! fault-recovery --crash-mtbf --recovery-time --retry-budget,
+//! degraded-service --crash-mtbf --link-mtbf --link-partition-prob
+//! --link-secs --store-mtbf --store-nodes --share-prob,
 //! megafleet --rps --duration --tenants --diurnal-ratio).
 //! Unknown flags are rejected: a typo'd flag aborts the command instead
 //! of silently running with the default value.

@@ -1,0 +1,166 @@
+//! Transfer-plane chaos as a first-class scenario: all four engines run
+//! the SAME seeded schedule of device crashes, link degradations /
+//! partitions and Global-KV-Store node outages (device and link faults
+//! share the `"faults"` substream; store outages ride `"store-faults"`,
+//! so only the store-bearing engine consumes them). Every in-flight
+//! transfer is a deadline-bounded transaction: a partition or timeout
+//! aborts it, the engine rolls the side effects back exactly and retries
+//! within a capped budget. The gate tells the replication story on the
+//! BanaServe cells alone: with the store sharded across N nodes, serving
+//! from a surviving replica (`--store-replication 2`) must beat the
+//! degrade-to-recompute single-copy store on BOTH goodput and P99 TTFT
+//! under the identical chaos schedule.
+
+use super::{Agg, EngineAgg, Metric, ScenarioPlan, ScenarioSpec, SummaryCol, Variant};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::util::args::Args;
+use crate::util::json;
+use crate::workload::ArrivalProcess;
+
+pub const SPEC: ScenarioSpec = ScenarioSpec {
+    name: "degraded-service",
+    doc: "link flaps + store-node outages: transfer transactions and store replication under chaos",
+    out_file: "degraded_service.json",
+    row_metrics: &[
+        Metric { key: "n_requests", get: |c| c.out.report.n_requests as f64 },
+        Metric {
+            key: "goodput_rps",
+            get: |c| c.out.report.n_requests as f64 / c.out.report.makespan.max(1e-9),
+        },
+        Metric { key: "lost", get: |c| c.out.report.lost as f64 },
+        Metric { key: "p99_ttft_s", get: |c| c.out.report.ttft.p99() },
+        Metric { key: "mean_e2e_s", get: |c| c.out.report.e2e.mean() },
+        Metric { key: "throughput_tok_s", get: |c| c.out.report.throughput_tok_s },
+        Metric { key: "makespan_s", get: |c| c.out.report.makespan },
+        Metric { key: "crashes", get: |c| c.out.extras.crashes as f64 },
+        Metric { key: "retries", get: |c| c.out.extras.retries as f64 },
+        Metric {
+            key: "link_degradations",
+            get: |c| c.out.extras.link_degradations as f64,
+        },
+        Metric {
+            key: "transfer_timeouts",
+            get: |c| c.out.extras.transfer_timeouts as f64,
+        },
+        Metric {
+            key: "transfer_retries",
+            get: |c| c.out.extras.transfer_retries as f64,
+        },
+        Metric {
+            key: "store_node_crashes",
+            get: |c| c.out.extras.store_node_crashes as f64,
+        },
+        Metric {
+            key: "degraded_lookups",
+            get: |c| c.out.extras.degraded_lookups as f64,
+        },
+        Metric { key: "store_hit_rate", get: |c| c.out.extras.store_hit_rate },
+    ],
+    summary: &[
+        SummaryCol { key: "goodput_rps", agg: Agg::Mean },
+        SummaryCol { key: "goodput_rps", agg: Agg::Ci95 },
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Mean },
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Ci95 },
+        SummaryCol { key: "transfer_timeouts", agg: Agg::Mean },
+        SummaryCol { key: "degraded_lookups", agg: Agg::Mean },
+        SummaryCol { key: "store_hit_rate", agg: Agg::Mean },
+    ],
+    extra_keys: &[],
+    build,
+};
+
+fn build(a: &Args) -> Result<ScenarioPlan, String> {
+    let devices = a.usize_or("devices", 6);
+    let rps = a.f64_or("rps", 8.0);
+    let duration = a.f64_or("duration", 60.0);
+    let crash_mtbf = a.f64_or("crash-mtbf", 15.0);
+    let recovery_time = a.f64_or("recovery-time", 8.0);
+    let link_mtbf = a.f64_or("link-mtbf", 6.0);
+    let link_partition_prob = a.f64_or("link-partition-prob", 0.3);
+    let link_secs = a.f64_or("link-secs", 2.5);
+    let store_mtbf = a.f64_or("store-mtbf", 10.0);
+    let store_nodes = a.usize_or("store-nodes", 3);
+    let share_prob = a.f64_or("share-prob", 0.9);
+    let model = a.str_or("model", "llama-13b").to_string();
+    Ok(ScenarioPlan {
+        banner: format!(
+            "degraded-service: {devices} devices, {rps} rps, {duration}s, \
+             crash MTBF {crash_mtbf}s, link MTBF {link_mtbf}s \
+             (partition p={link_partition_prob}), store MTBF {store_mtbf}s \
+             over {store_nodes} nodes"
+        ),
+        engines: vec![
+            EngineKind::HfStatic,
+            EngineKind::Vllm,
+            EngineKind::DistServe,
+            EngineKind::BanaServe,
+        ],
+        // the two variants differ ONLY in the store replication factor —
+        // a no-op for the store-less baselines, whose cells double as the
+        // conservation workout under the same chaos schedule
+        variants: vec![
+            Variant { label: "store-rep1", devices, elastic: false },
+            Variant { label: "store-rep2", devices, elastic: false },
+        ],
+        params: vec![
+            ("devices", json::num(devices as f64)),
+            ("rps", json::num(rps)),
+            ("crash_mtbf_s", json::num(crash_mtbf)),
+            ("link_mtbf_s", json::num(link_mtbf)),
+            ("link_partition_prob", json::num(link_partition_prob)),
+            ("store_mtbf_s", json::num(store_mtbf)),
+            ("store_nodes", json::num(store_nodes as f64)),
+        ],
+        make_cfg: Box::new(move |engine, v, seed| {
+            let mut c = ExperimentConfig::default_for(engine, &model, rps, seed);
+            c.n_devices = v.devices;
+            c.n_prefill = (v.devices / 2).max(1);
+            c.warmup = 0.0;
+            c.workload.duration = duration;
+            c.workload.seed = seed;
+            c.workload.arrivals = ArrivalProcess::Poisson { rps };
+            // heavy prefix sharing: crash rescue and TTFT both lean on
+            // the store's staged prefixes, so store availability is the
+            // difference the replication variants isolate
+            c.workload.prefix.share_prob = share_prob;
+            c.fault.enabled = true;
+            c.fault.crash_mtbf = crash_mtbf;
+            c.fault.recovery_time = recovery_time;
+            c.fault.link_mtbf = link_mtbf;
+            c.fault.link_partition_prob = link_partition_prob;
+            c.fault.link_fault_secs = link_secs;
+            c.fault.store_crash_mtbf = store_mtbf;
+            c.bana.store_nodes = store_nodes;
+            c.bana.store_replication = if v.label == "store-rep2" { 2 } else { 1 };
+            c
+        }),
+        row_extra: None,
+        gate,
+    })
+}
+
+/// Gate: under the identical chaos schedule, BanaServe with a replicated
+/// sharded store must deliver MORE goodput AND a LOWER P99 TTFT than the
+/// single-copy store that degrades to recompute whenever the owner shard
+/// is down.
+fn gate(aggs: &[EngineAgg]) -> i32 {
+    let Some(b) = aggs.iter().find(|x| x.engine == EngineKind::BanaServe) else {
+        return 2;
+    };
+    let (Some(r1), Some(r2)) = (b.variant("store-rep1"), b.variant("store-rep2")) else {
+        return 2;
+    };
+    let (g1, g2) = (r1.mean("goodput_rps"), r2.mean("goodput_rps"));
+    let (p1, p2) = (r1.mean("p99_ttft_s"), r2.mean("p99_ttft_s"));
+    let wins = g2 > g1 && p2 < p1;
+    println!(
+        "  -> goodput: replicated {g2:.2} rps vs single-copy {g1:.2} rps; \
+         p99 ttft {p2:.2}s vs {p1:.2}s ({})",
+        if wins {
+            "replication rides out the outages"
+        } else {
+            "NO replication advantage"
+        }
+    );
+    i32::from(!wins)
+}

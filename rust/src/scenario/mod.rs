@@ -61,16 +61,18 @@ use crate::util::stats::Summary;
 
 pub mod bursty_autoscale;
 pub mod cache_skew;
+pub mod degraded_service;
 pub mod fault_recovery;
 pub mod hetero_slo;
 pub mod megafleet;
 
 /// All registered scenarios, in `--list-scenarios` order.
-pub static REGISTRY: [ScenarioSpec; 5] = [
+pub static REGISTRY: [ScenarioSpec; 6] = [
     bursty_autoscale::SPEC,
     hetero_slo::SPEC,
     cache_skew::SPEC,
     fault_recovery::SPEC,
+    degraded_service::SPEC,
     megafleet::SPEC,
 ];
 
@@ -513,6 +515,7 @@ mod tests {
         assert!(names.contains(&"hetero-slo"));
         assert!(names.contains(&"cache-skew"));
         assert!(names.contains(&"fault-recovery"));
+        assert!(names.contains(&"degraded-service"));
         assert!(names.contains(&"megafleet"));
         let mut dedup = names.clone();
         dedup.sort();

@@ -13,6 +13,13 @@
 //! * **Store rescue** — BanaServe's Global-KV-Store recovery path fires
 //!   (recovered sequences observed) on a shared-prefix workload under
 //!   crashes.
+//!
+//! Plus the PR 8 transfer-plane suite:
+//!
+//! * degraded runs (link flaps + store-node crashes) replay
+//!   byte-identically from the same seed for every engine,
+//! * conservation holds for all four engines under aggressive link
+//!   partitions, with the link fault counters proving the chaos engaged.
 
 use banaserve::config::{EngineKind, ExperimentConfig};
 use banaserve::engines::{run_experiment, ExperimentOutcome};
@@ -44,6 +51,22 @@ fn faulty_cfg(kind: EngineKind, seed: u64) -> ExperimentConfig {
     c.fault.straggler_secs = 2.0;
     c.fault.retry_budget = 1;
     c.fault.retry_backoff = 0.1;
+    c
+}
+
+/// Device crashes plus the PR 8 transfer-plane chaos: link flaps with a
+/// high partition share, and store-node crashes over a 3-shard store.
+fn degraded_cfg(kind: EngineKind, seed: u64) -> ExperimentConfig {
+    let mut c = faulty_cfg(kind, seed);
+    c.fault.crash_mtbf = 8.0;
+    c.fault.retry_budget = 3;
+    c.fault.link_mtbf = 2.0;
+    c.fault.link_partition_prob = 1.0;
+    c.fault.link_fault_secs = 2.0;
+    c.fault.store_crash_mtbf = 5.0;
+    c.bana.store_nodes = 3;
+    c.bana.store_replication = 2;
+    c.workload.prefix.share_prob = 0.6;
     c
 }
 
@@ -85,6 +108,17 @@ fn fault_knobs_are_inert_while_disabled() {
         scrambled.fault.straggler_secs = 30.0;
         scrambled.fault.retry_budget = 0;
         scrambled.fault.retry_backoff = 5.0;
+        // PR 8 transfer-plane knobs ride the same master switch. (The
+        // sharded-store *topology* knobs — bana.store_nodes / replication —
+        // are deliberately not scrambled: shard placement changes behavior
+        // even with a perfectly healthy store.)
+        scrambled.fault.link_mtbf = 2.0;
+        scrambled.fault.link_degrade_factor = 16.0;
+        scrambled.fault.link_partition_prob = 1.0;
+        scrambled.fault.link_fault_secs = 9.0;
+        scrambled.fault.store_crash_mtbf = 1.0;
+        scrambled.fault.transfer_timeout_factor = 1.1;
+        scrambled.fault.transfer_retries = 0;
         let off = run_experiment(&scrambled);
         assert_eq!(
             fingerprint(&clean),
@@ -138,6 +172,59 @@ fn crashes_force_retries_and_budget_overruns_are_lost_not_leaked() {
     assert!(
         any_lost,
         "no engine recorded lost requests despite zero retry budget"
+    );
+}
+
+#[test]
+fn same_seed_replays_an_identical_degraded_run() {
+    // link flaps, partitions and store-node crashes all ride seeded
+    // substreams — a degraded run must replay byte-for-byte, or scenario
+    // cells comparing replication settings lose their paired schedules
+    for kind in ALL_ENGINES {
+        let a = run_experiment(&degraded_cfg(kind, 13));
+        let b = run_experiment(&degraded_cfg(kind, 13));
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "{:?}: same seed must replay the same degraded run",
+            kind
+        );
+    }
+}
+
+#[test]
+fn conservation_holds_under_aggressive_link_partitions() {
+    // run_experiment panics if submitted != completed + dropped + lost +
+    // inflight, so completing these runs IS the conservation check; the
+    // counters then prove the transfer plane actually engaged
+    let mut timeouts_or_retries = 0u64;
+    for kind in ALL_ENGINES {
+        for seed in [3, 11] {
+            let out = run_experiment(&degraded_cfg(kind, seed));
+            assert!(
+                out.report.n_requests > 0,
+                "{:?} seed {seed}: nothing completed under link partitions",
+                kind
+            );
+            assert!(
+                out.extras.link_degradations > 0,
+                "{:?} seed {seed}: no link episodes were applied",
+                kind
+            );
+            timeouts_or_retries +=
+                out.extras.transfer_timeouts + out.extras.transfer_retries;
+            if kind == EngineKind::BanaServe {
+                assert!(
+                    out.extras.store_node_crashes > 0,
+                    "seed {seed}: no store-node crashes engaged",
+                );
+            }
+        }
+    }
+    assert!(
+        timeouts_or_retries > 0,
+        "no engine ever timed out or retried a transfer despite \
+         guaranteed partitions"
     );
 }
 

@@ -20,20 +20,33 @@
 //!   horizon)` — same inputs give an identical schedule, a different
 //!   seed gives a different one.
 //!
+//! Plus the PR 8 transfer-plane properties:
+//!
+//! * under aggressive link chaos (partitions, degradations, device and
+//!   store crashes) every engine's transfer-transaction table drains back
+//!   to zero by the end of the run and request conservation still holds,
+//! * BanaServe's abort/rollback paths leave no residue: no device retains
+//!   KV bytes after the drain, and `pinsts[i].share` never diverges from
+//!   `share_prefill[i]` (an aborted layer migration must undo its parked
+//!   share delta exactly).
+//!
 //! Run with a fixed seed via `BANASERVE_PROP_SEED` (the CI property-suite
 //! step pins one for reproducibility).
 
 use banaserve::cluster::{
     self, gpu_by_name, Device, DeviceState, Role,
 };
-use banaserve::config::{AutoscaleConfig, FaultConfig};
+use banaserve::config::{AutoscaleConfig, EngineKind, ExperimentConfig, FaultConfig};
+use banaserve::engines::{banaserve as bana, distserve_sim, hft, vllm_sim};
 use banaserve::engines::fleet::{
     pick_load_aware, Autoscaler, CacheAware, FleetLoad, LeastLoaded, LeastQueue, LoadBook,
     MostFreeMem, Router, RoundRobin, ScaleDecision, SloView,
 };
 use banaserve::fault::FaultPlan;
 use banaserve::prop_assert;
+use banaserve::sim;
 use banaserve::util::checker::{check, Gen};
+use banaserve::workload::{LengthProfile, WorkloadConfig};
 
 fn random_cfg(g: &mut Gen, slo: bool) -> AutoscaleConfig {
     let mut c = AutoscaleConfig::default();
@@ -439,6 +452,155 @@ fn fault_plan_is_a_pure_function_of_its_seed() {
                 a != c,
                 "seed {seed} and seed {} produced identical non-empty plans",
                 seed ^ 0xDEAD_BEEF
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PR 8: transfer-plane transactions — abort/rollback invariants
+// ---------------------------------------------------------------------------
+
+/// One knob set per case, so every engine in that case faces the same
+/// chaos schedule (the fault plan is a pure function of cfg + seed).
+struct ChaosKnobs {
+    seed: u64,
+    rps: f64,
+    duration: f64,
+    crash_mtbf: f64,
+    link_mtbf: f64,
+    partition_prob: f64,
+    link_secs: f64,
+    timeout_factor: f64,
+    transfer_retries: u32,
+    store_mtbf: f64,
+    store_nodes: usize,
+    store_replication: usize,
+}
+
+fn random_chaos(g: &mut Gen) -> ChaosKnobs {
+    let store_nodes = g.usize_in(1, 3);
+    ChaosKnobs {
+        seed: g.usize_in(0, 1 << 16) as u64,
+        rps: g.f64_in(4.0, 9.0),
+        duration: g.f64_in(12.0, 20.0),
+        crash_mtbf: g.f64_in(4.0, 12.0),
+        link_mtbf: g.f64_in(1.5, 5.0),
+        partition_prob: g.f64_in(0.5, 1.0),
+        link_secs: g.f64_in(1.0, 3.0),
+        timeout_factor: g.f64_in(1.5, 4.0),
+        transfer_retries: g.usize_in(0, 3) as u32,
+        store_mtbf: g.f64_in(4.0, 10.0),
+        store_nodes,
+        store_replication: g.usize_in(1, store_nodes),
+    }
+}
+
+fn chaos_cfg(kind: EngineKind, k: &ChaosKnobs) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_for(kind, "llama-13b", k.rps, k.seed);
+    c.workload = WorkloadConfig::poisson(LengthProfile::AlpacaShort, k.rps, k.duration, k.seed);
+    c.workload.prefix.share_prob = 0.6;
+    c.warmup = 0.0;
+    c.n_devices = 6;
+    c.n_prefill = 3;
+    c.fault.enabled = true;
+    c.fault.crash_mtbf = k.crash_mtbf;
+    c.fault.recovery_time = 2.0;
+    c.fault.retry_budget = 3;
+    c.fault.retry_backoff = 0.1;
+    c.fault.link_mtbf = k.link_mtbf;
+    c.fault.link_partition_prob = k.partition_prob;
+    c.fault.link_fault_secs = k.link_secs;
+    c.fault.transfer_timeout_factor = k.timeout_factor;
+    c.fault.transfer_retries = k.transfer_retries;
+    c.fault.store_crash_mtbf = k.store_mtbf;
+    c.bana.store_nodes = k.store_nodes;
+    c.bana.store_replication = k.store_replication;
+    c
+}
+
+/// Every transfer transaction an engine opens — staging hand-off, P→D KV
+/// transfer, layer/attention migration, scale-out spin-up — must resolve
+/// (complete, or abort through its rollback path) by the time the event
+/// queue drains, no matter how the link plane misbehaves. A live entry
+/// after the drain is a leaked transaction: its timers fired without the
+/// bookkeeping being released.
+#[test]
+fn transfer_transactions_always_drain_under_link_chaos() {
+    check("transfer-plane drain", 6, |g| {
+        let k = random_chaos(g);
+        macro_rules! drained {
+            ($Engine:ty, $kind:expr) => {{
+                let c = chaos_cfg($kind, &k);
+                let reqs = c.workload.generate();
+                let mut e = <$Engine>::new(&c);
+                let res = sim::run(&mut e, reqs, 1e6);
+                if let Err(msg) = sim::check_conservation(&res, &mut e) {
+                    return Err(format!("{:?} (seed {}): {msg}", $kind, k.seed));
+                }
+                prop_assert!(
+                    e.inflight_transfers() == 0,
+                    "{:?} (seed {}): {} transfer transactions still live \
+                     after the queue drained",
+                    $kind,
+                    k.seed,
+                    e.inflight_transfers()
+                );
+            }};
+        }
+        drained!(hft::HftEngine, EngineKind::HfStatic);
+        drained!(vllm_sim::VllmEngine, EngineKind::Vllm);
+        drained!(distserve_sim::DistServeEngine, EngineKind::DistServe);
+        drained!(bana::BanaEngine, EngineKind::BanaServe);
+        Ok(())
+    });
+}
+
+/// BanaServe's abort paths must restore exact pre-transaction state: a
+/// timed-out staging push or attention migration frees (or re-homes) the
+/// KV it reserved, and an aborted layer migration discards its parked
+/// share delta without applying any part of it. Observable residue after
+/// a full drain — leaked device KV bytes, or `pinsts[i].share` out of
+/// sync with `share_prefill[i]` — means a rollback path double-counted
+/// or half-applied.
+#[test]
+fn banaserve_rollback_leaves_no_residue() {
+    check("banaserve rollback residue", 8, |g| {
+        let mut k = random_chaos(g);
+        // partitions are the abort trigger — keep them likely
+        k.partition_prob = g.f64_in(0.8, 1.0);
+        let c = chaos_cfg(EngineKind::BanaServe, &k);
+        let reqs = c.workload.generate();
+        let mut e = bana::BanaEngine::new(&c);
+        let res = sim::run(&mut e, reqs, 1e6);
+        if let Err(msg) = sim::check_conservation(&res, &mut e) {
+            return Err(format!("seed {}: {msg}", k.seed));
+        }
+        prop_assert!(
+            e.inflight_transfers() == 0,
+            "seed {}: {} transactions leaked past the drain",
+            k.seed,
+            e.inflight_transfers()
+        );
+        for (i, d) in e.devices.iter().enumerate() {
+            prop_assert!(
+                d.kv_bytes == 0,
+                "seed {}: device {i} holds {} KV bytes after the drain — an \
+                 aborted transfer failed to free or re-home its reservation",
+                k.seed,
+                d.kv_bytes
+            );
+        }
+        for i in 0..e.devices.len() {
+            prop_assert!(
+                (e.pinsts[i].share - e.share_prefill[i]).abs() < 1e-9,
+                "seed {}: device {i} pinst share {} diverged from \
+                 share_prefill {} — a rolled-back layer migration leaked \
+                 part of its share delta",
+                k.seed,
+                e.pinsts[i].share,
+                e.share_prefill[i]
             );
         }
         Ok(())
