@@ -70,6 +70,15 @@ pub struct BanaConfig {
     /// with >= 2 a lookup whose owner node is down is served from a
     /// surviving replica instead of degrading to recompute.
     pub store_replication: usize,
+    /// Token capacity of the store's hot DRAM tier (total across shards).
+    /// Overflow demotes LRU prefixes to the SSD tier instead of evicting.
+    pub store_cpu_tokens: u64,
+    /// Token capacity of the store's cold SSD tier (total across shards).
+    /// 0 disables the cold tier: DRAM overflow then evicts directly.
+    pub store_ssd_tokens: u64,
+    /// Effective SSD streaming bandwidth in bytes/s; prices the fetch of
+    /// cold-tier (demoted) prefixes.
+    pub store_ssd_bw: f64,
 }
 
 impl Default for BanaConfig {
@@ -85,6 +94,11 @@ impl Default for BanaConfig {
             global_store: true,
             store_nodes: 1,
             store_replication: 1,
+            // flat-default tier shape: mirrors kvcache::StoreConfig::default()
+            // so default runs keep today's flat (never-demoting) behavior
+            store_cpu_tokens: 2_000_000,
+            store_ssd_tokens: 20_000_000,
+            store_ssd_bw: 6e9,
         }
     }
 }
@@ -465,6 +479,15 @@ impl ExperimentConfig {
                 self.bana.store_nodes, self.bana.store_replication
             ));
         }
+        if self.bana.store_cpu_tokens == 0 {
+            return Err("store-cpu-tokens must be >= 1".to_string());
+        }
+        if !self.bana.store_ssd_bw.is_finite() || self.bana.store_ssd_bw <= 0.0 {
+            return Err(format!(
+                "store-ssd-bw must be finite and > 0 (got {})",
+                self.bana.store_ssd_bw
+            ));
+        }
         Ok(())
     }
 
@@ -599,6 +622,15 @@ impl ExperimentConfig {
         }
         if let Some(n) = a.get("store-replication").and_then(|v| v.parse::<usize>().ok()) {
             self.bana.store_replication = n;
+        }
+        if let Some(n) = a.get("store-cpu-tokens").and_then(|v| v.parse::<u64>().ok()) {
+            self.bana.store_cpu_tokens = n;
+        }
+        if let Some(n) = a.get("store-ssd-tokens").and_then(|v| v.parse::<u64>().ok()) {
+            self.bana.store_ssd_tokens = n;
+        }
+        if let Some(x) = a.get("store-ssd-bw").and_then(|v| v.parse::<f64>().ok()) {
+            self.bana.store_ssd_bw = x;
         }
         if let Some(m) = a.get("route-mode").and_then(RouteMode::parse) {
             self.routing.mode = m;
@@ -737,6 +769,15 @@ impl ExperimentConfig {
                 }
                 ("store_replication", Value::Num(n)) => {
                     self.bana.store_replication = *n as usize;
+                }
+                ("store_cpu_tokens", Value::Num(n)) => {
+                    self.bana.store_cpu_tokens = *n as u64;
+                }
+                ("store_ssd_tokens", Value::Num(n)) => {
+                    self.bana.store_ssd_tokens = *n as u64;
+                }
+                ("store_ssd_bw", Value::Num(n)) => {
+                    self.bana.store_ssd_bw = *n;
                 }
                 ("route_mode", Value::Str(s)) => {
                     self.routing.mode =
@@ -952,12 +993,16 @@ mod tests {
         assert_eq!(c.fault.store_crash_mtbf, 0.0, "store chaos must default off");
         assert_eq!(c.bana.store_nodes, 1, "store must default to a flat singleton");
         assert_eq!(c.bana.store_replication, 1);
+        assert_eq!(c.bana.store_cpu_tokens, 2_000_000, "flat-default DRAM tier");
+        assert_eq!(c.bana.store_ssd_tokens, 20_000_000, "flat-default SSD tier");
+        assert_eq!(c.bana.store_ssd_bw, 6e9);
         assert!(!c.fault.transfer_plane(), "plane needs enabled + link chaos");
         let a = Args::parse(
             "--fault-enabled true --fault-link-mtbf 6 --fault-link-degrade-factor 5 \
              --fault-link-partition-prob 0.3 --fault-link-secs 2.5 \
              --fault-store-mtbf 9 --fault-transfer-timeout 3 \
-             --fault-transfer-retries 4 --store-nodes 3 --store-replication 2"
+             --fault-transfer-retries 4 --store-nodes 3 --store-replication 2 \
+             --store-cpu-tokens 50000 --store-ssd-tokens 800000 --store-ssd-bw 3e9"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -971,6 +1016,9 @@ mod tests {
         assert_eq!(c.fault.transfer_retries, 4);
         assert_eq!(c.bana.store_nodes, 3);
         assert_eq!(c.bana.store_replication, 2);
+        assert_eq!(c.bana.store_cpu_tokens, 50_000);
+        assert_eq!(c.bana.store_ssd_tokens, 800_000);
+        assert_eq!(c.bana.store_ssd_bw, 3e9);
         assert!(c.fault.transfer_plane());
         assert!(c.validate().is_ok());
 
@@ -980,7 +1028,9 @@ mod tests {
                 "fault_link_degrade_factor":2,"fault_link_partition_prob":0.5,
                 "fault_link_secs":1.5,"fault_store_mtbf":7,
                 "fault_transfer_timeout":5,"fault_transfer_retries":1,
-                "store_nodes":4,"store_replication":2}"#,
+                "store_nodes":4,"store_replication":2,
+                "store_cpu_tokens":60000,"store_ssd_tokens":900000,
+                "store_ssd_bw":2.5e9}"#,
         )
         .unwrap();
         assert_eq!(j.fault.link_mtbf, 4.0);
@@ -988,6 +1038,9 @@ mod tests {
         assert_eq!(j.fault.transfer_retries, 1);
         assert_eq!(j.bana.store_nodes, 4);
         assert_eq!(j.bana.store_replication, 2);
+        assert_eq!(j.bana.store_cpu_tokens, 60_000);
+        assert_eq!(j.bana.store_ssd_tokens, 900_000);
+        assert_eq!(j.bana.store_ssd_bw, 2.5e9);
         assert!(j.validate().is_ok());
     }
 
@@ -1020,6 +1073,15 @@ mod tests {
         c.bana.store_replication = 3;
         assert!(c.validate().unwrap_err().contains("store-replication"));
         c.bana.store_replication = 2;
+        assert!(c.validate().is_ok());
+        c.bana.store_cpu_tokens = 0;
+        assert!(c.validate().unwrap_err().contains("store-cpu-tokens"));
+        c.bana.store_cpu_tokens = 1000;
+        c.bana.store_ssd_bw = 0.0;
+        assert!(c.validate().unwrap_err().contains("store-ssd-bw"));
+        c.bana.store_ssd_bw = f64::NAN;
+        assert!(c.validate().unwrap_err().contains("store-ssd-bw"));
+        c.bana.store_ssd_bw = 6e9;
         assert!(c.validate().is_ok());
     }
 

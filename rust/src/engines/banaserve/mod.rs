@@ -214,7 +214,12 @@ impl BanaEngine {
             share_prefill,
             mig: vec![MigState::default(); n],
             store: ShardedKvStore::new(
-                StoreConfig::default(),
+                StoreConfig {
+                    cpu_capacity_tokens: cfg.bana.store_cpu_tokens,
+                    ssd_capacity_tokens: cfg.bana.store_ssd_tokens,
+                    ssd_bw: cfg.bana.store_ssd_bw,
+                    ..StoreConfig::default()
+                },
                 cfg.bana.store_nodes,
                 cfg.bana.store_replication,
             ),
@@ -1944,6 +1949,9 @@ impl crate::engines::EngineHarness for BanaEngine {
         // the sharded store tracks its own degraded lookups (every
         // replica down); surface them through the common fault extras
         extras.degraded_lookups = self.store.degraded_lookups;
+        let (hot, cold) = self.store.tier_tokens_served();
+        extras.store_hot_tokens = hot;
+        extras.store_cold_tokens = cold;
     }
 
     fn fleet_series(&self) -> &fleet::FleetSeries {
@@ -2093,6 +2101,30 @@ mod tests {
         let res = sim::run(&mut e, reqs, 1e6);
         assert_eq!(e.collector().completed() as usize, n);
         sim::check_conservation(&res, &mut e).unwrap();
+    }
+
+    #[test]
+    fn flat_default_tier_knobs_keep_fixed_seed_runs_byte_identical() {
+        // with the working set far inside the default DRAM budget nothing
+        // ever demotes, so the SSD-tier knob must not perturb a single
+        // record: the tiered store at flat defaults IS the flat store
+        let run = |ssd_bw: f64| {
+            let mut c = cfg(10.0, 7);
+            c.workload.prefix.share_prob = 0.9;
+            c.workload.prefix.n_templates = 2;
+            c.bana.store_ssd_bw = ssd_bw;
+            let reqs = c.workload.generate();
+            let mut e = BanaEngine::new(&c);
+            sim::run(&mut e, reqs, 1e6);
+            e.col
+                .records
+                .iter()
+                .map(|r| (r.id, r.prefill_start, r.first_token, r.completion, r.cached_tokens))
+                .collect::<Vec<_>>()
+        };
+        let a = run(6e9);
+        let b = run(0.01e9); // 600x slower SSD: must be inert while all-DRAM
+        assert_eq!(a, b, "ssd_bw leaked into an all-DRAM run");
     }
 
     #[test]

@@ -162,7 +162,24 @@
 //! on a separate `"store-faults"` substream. A lookup whose replicas are
 //! all down degrades gracefully to a 0-hit miss (recompute) and counts
 //! `degraded_lookups`; replication ≥ 2 keeps serving from a surviving
-//! replica. A recovered node restarts cold (empty shard).
+//! replica — the lookup peeks every live replica and serves from the one
+//! with the longest (then hottest) match, so a cold-restarted owner never
+//! shadows a still-warm replica. A recovered node restarts cold (empty
+//! shard).
+//!
+//! The store itself is two-tiered (Mooncake-style): new KV lands in a
+//! DRAM hot tier of `--store-cpu-tokens`, LRU leaves DEMOTE to an SSD
+//! cold tier of `--store-ssd-tokens` (read at `--store-ssd-bw` bytes/s)
+//! instead of being evicted, and SSD-side LRU eviction runs only when
+//! both tiers are full. A hit is priced from the tier each matched byte
+//! resides in — hot hits cost a DRAM-link fetch, cold hits an SSD fetch
+//! (still layer-overlapped with the forward pass), and only a true miss
+//! recomputes — and the hit promotes the prefix back to DRAM.
+//! `store_hot_tokens` / `store_cold_tokens` count the hit tokens served
+//! per tier. `--store-ssd-tokens 0` collapses the store to the flat
+//! single-tier behavior (overflow evicts, everything stays hot), and the
+//! default budgets are large enough that the stock workloads never
+//! demote — fixed-seed Reports are byte-identical to the flat store.
 //!
 //! The layer is zero-cost when off: no plan, no Fault timers, tokens always
 //! match, and `straggle_overhead` is exactly 0.0 — fixed-seed no-fault
@@ -247,6 +264,11 @@ pub struct EngineExtras {
     pub store_node_crashes: u64,
     /// Transfer plane: store lookups served degraded (all replicas down).
     pub degraded_lookups: u64,
+    /// Tiered store: hit tokens served from the hot DRAM tier.
+    pub store_hot_tokens: u64,
+    /// Tiered store: hit tokens served from the cold SSD tier (demoted
+    /// prefixes that were still cheaper to fetch than to recompute).
+    pub store_cold_tokens: u64,
 }
 
 /// Total device-cost of a run: the recorded cost-rate step series

@@ -7,18 +7,25 @@
 //! ([`super::pipeline`]), so with adequate bandwidth the store is latency-
 //! transparent (Fig 6); when bandwidth is starved the residual stall is
 //! charged to TTFT (the T_load/T_fetch of Eq 21).
+//!
+//! ## Tiering (Mooncake-style)
+//!
+//! The store is a true two-tier cache: prefixes live in a hot DRAM tier or
+//! a cold SSD tier, with residency tracked per edge in the radix index.
+//! Overflowing the DRAM budget *demotes* LRU leaves to SSD (the prefix
+//! stays cached, only its fetch bandwidth changes); a hit promotes the
+//! matched path back to DRAM; true eviction is SSD-side LRU and happens
+//! only once both tiers are full. A lookup prices its [`FetchPlan`] from
+//! the tier each matched byte actually resides in — hot bytes stream at
+//! the fabric link rate, cold bytes at SSD bandwidth — so consumers see
+//! hot hit ≫ cold hit ≫ recompute without any occupancy-blend heuristics.
 
 use super::pipeline::PipelinePlan;
-use super::radix::RadixTree;
+use super::radix::{RadixTree, TieredMatch};
 use crate::cluster::Link;
 use crate::model::ModelSpec;
 
-/// Storage tier of a cached prefix.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Tier {
-    Cpu,
-    Ssd,
-}
+pub use super::radix::Tier;
 
 /// Capacity / bandwidth description of the store.
 #[derive(Debug, Clone)]
@@ -50,7 +57,13 @@ pub struct StoreStats {
     pub lookups: u64,
     pub hits: u64,
     pub tokens_served: u64,
+    /// Served tokens that were DRAM-resident at fetch time.
+    pub hot_tokens_served: u64,
+    /// Served tokens that had been demoted to SSD at fetch time.
+    pub cold_tokens_served: u64,
     pub tokens_written: u64,
+    /// Tokens moved DRAM -> SSD by demotion (still cached afterwards).
+    pub tokens_demoted: u64,
     pub tokens_evicted: u64,
 }
 
@@ -62,19 +75,43 @@ pub struct GlobalKvStore {
     stats: StoreStats,
 }
 
-/// Result of a prefix lookup with transfer accounting.
+/// Result of a prefix lookup with transfer accounting. The hit is broken
+/// down by residency — `hit_tokens == hot_tokens + cold_tokens`, and the
+/// remaining `prompt - hit_tokens` is the recompute share — so consumers
+/// can weigh hot hit ≫ cold hit ≫ recompute.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FetchPlan {
     /// Cached tokens found (leading prefix).
     pub hit_tokens: u64,
-    /// Which tier the fetch is (mostly) served from.
+    /// Hit tokens served from the hot DRAM tier (fabric-link bandwidth).
+    pub hot_tokens: u64,
+    /// Hit tokens served from the cold SSD tier (SSD bandwidth).
+    pub cold_tokens: u64,
+    /// Slowest tier the fetch touches: `Ssd` as soon as any matched byte
+    /// was SSD-resident, else `Cpu`.
     pub tier: Tier,
-    /// Per-layer fetch time (Eq 13).
+    /// Per-layer fetch time (Eq 13), priced per tier actually hit.
     pub t_fetch_layer: f64,
     /// Residual TTFT stall after pipeline overlap (0 when hidden).
     pub stall: f64,
     /// Raw un-overlapped transfer time (for reporting).
     pub raw_transfer: f64,
+}
+
+impl FetchPlan {
+    /// The all-zero plan of a degraded (every-replica-down) lookup or
+    /// pure miss: recompute everything, never stall on the store.
+    fn miss() -> Self {
+        FetchPlan {
+            hit_tokens: 0,
+            hot_tokens: 0,
+            cold_tokens: 0,
+            tier: Tier::Cpu,
+            t_fetch_layer: 0.0,
+            stall: 0.0,
+            raw_transfer: 0.0,
+        }
+    }
 }
 
 impl GlobalKvStore {
@@ -107,74 +144,110 @@ impl GlobalKvStore {
         self.index.token_hit_rate()
     }
 
-    fn current_tier(&self) -> Tier {
-        if self.index.token_count() <= self.config.cpu_capacity_tokens {
-            Tier::Cpu
-        } else {
-            Tier::Ssd
-        }
+    /// Tokens resident in the hot (DRAM) tier.
+    pub fn hot_token_count(&self) -> u64 {
+        self.index.hot_tokens()
     }
 
-    /// Effective store bandwidth given tier occupancy: the fraction beyond
-    /// CPU capacity streams at SSD speed.
-    pub fn effective_bandwidth(&self) -> f64 {
-        let total = self.index.token_count();
-        if total == 0 || total <= self.config.cpu_capacity_tokens {
-            return self.config.cpu_link.bandwidth;
-        }
-        let cpu_frac = self.config.cpu_capacity_tokens as f64 / total as f64;
-        // time-weighted (harmonic) combination of the two tiers
-        1.0 / (cpu_frac / self.config.cpu_link.bandwidth
-            + (1.0 - cpu_frac) / self.config.ssd_bw)
+    /// Tokens resident in the cold (SSD) tier.
+    pub fn cold_token_count(&self) -> u64 {
+        self.index.cold_tokens()
+    }
+
+    /// Per-layer fetch time for a hit split across the tiers: hot bytes
+    /// stream at the fabric link rate, cold bytes at SSD bandwidth (the
+    /// SSD read dominates its DRAM staging hop), plus one link latency.
+    fn t_fetch_layer(&self, hot: u64, cold: u64, spec: &ModelSpec) -> f64 {
+        let kvb = spec.kv_bytes_per_token_layer();
+        (hot * kvb) as f64 / self.config.cpu_link.bandwidth
+            + (cold * kvb) as f64 / self.config.ssd_bw
+            + self.config.cpu_link.latency
     }
 
     /// Look up the cached prefix of `tokens` and produce a fetch plan given
     /// the per-layer forward time of the prefill that will consume it.
-    pub fn lookup(
-        &mut self,
-        tokens: &[u32],
-        spec: &ModelSpec,
-        t_fwd_layer: f64,
-    ) -> FetchPlan {
-        let hit = self.index.match_prefix(tokens);
+    ///
+    /// The fetch is priced from the tier each matched byte resides in (the
+    /// hit itself promotes the path back to DRAM for later readers), the
+    /// pipeline's store channel carries the write-back of the NEWLY
+    /// produced KV (`tokens.len() - hit`, not the hit), and a pure miss
+    /// costs exactly zero fetch.
+    pub fn lookup(&mut self, tokens: &[u32], spec: &ModelSpec, t_fwd_layer: f64) -> FetchPlan {
+        let m = self.index.match_prefix_tiered(tokens);
         self.stats.lookups += 1;
-        if hit > 0 {
+        if m.matched > 0 {
             self.stats.hits += 1;
-            self.stats.tokens_served += hit;
+            self.stats.tokens_served += m.matched;
+            self.stats.hot_tokens_served += m.hot;
+            self.stats.cold_tokens_served += m.cold;
         }
-        let bw = self.effective_bandwidth();
-        let per_layer_bytes = hit * spec.kv_bytes_per_token_layer();
-        let t_fetch_layer = per_layer_bytes as f64 / bw + self.config.cpu_link.latency;
-        let plan = PipelinePlan::schedule(
-            spec.n_layers,
-            t_fwd_layer,
-            if hit > 0 { t_fetch_layer } else { 0.0 },
-            t_fetch_layer, // write-back of new KV, same channel cost model
-        );
+        // promotion may have pushed the hot tier past its budget (a flat
+        // store — zero SSD capacity — has nothing to demote into and its
+        // tree is all-hot by construction)
+        if self.config.ssd_capacity_tokens > 0 {
+            self.stats.tokens_demoted += self.index.demote_to(self.config.cpu_capacity_tokens);
+        }
+        if m.matched == 0 {
+            return FetchPlan::miss();
+        }
+        let t_fetch_layer = self.t_fetch_layer(m.hot, m.cold, spec);
+        let new_tokens = tokens.len() as u64 - m.matched;
+        let t_store_layer = if new_tokens > 0 {
+            // write-back of the newly produced KV, landing in DRAM
+            (new_tokens * spec.kv_bytes_per_token_layer()) as f64
+                / self.config.cpu_link.bandwidth
+                + self.config.cpu_link.latency
+        } else {
+            0.0
+        };
+        let plan = PipelinePlan::schedule(spec.n_layers, t_fwd_layer, t_fetch_layer, t_store_layer);
         FetchPlan {
-            hit_tokens: hit,
-            tier: self.current_tier(),
+            hit_tokens: m.matched,
+            hot_tokens: m.hot,
+            cold_tokens: m.cold,
+            tier: if m.cold > 0 { Tier::Ssd } else { Tier::Cpu },
             t_fetch_layer,
-            stall: if hit > 0 { plan.stall() } else { 0.0 },
+            stall: plan.stall(),
             raw_transfer: spec.n_layers as f64 * t_fetch_layer,
         }
     }
 
-    /// Record a freshly prefilled prompt's KV into the store, evicting LRU
-    /// prefixes beyond total capacity.
+    /// Demote past the DRAM budget, then evict SSD-side LRU leaves if both
+    /// tiers are full (down to `target_total` resident tokens). The global
+    /// fallback only fires if hot interior residue alone exceeds the total
+    /// budget (demotion is leaf-granular).
+    fn enforce_capacity(&mut self, target_total: u64) {
+        if self.config.ssd_capacity_tokens == 0 {
+            // flat store: there is no cold tier to demote into, so the DRAM
+            // budget is enforced by straight LRU eviction and every resident
+            // byte stays hot
+            self.stats.tokens_evicted += self.index.evict_to(target_total);
+            return;
+        }
+        self.stats.tokens_demoted += self.index.demote_to(self.config.cpu_capacity_tokens);
+        if self.index.token_count() > target_total {
+            let cold_budget = target_total.saturating_sub(self.index.hot_tokens());
+            self.stats.tokens_evicted += self.index.evict_cold_to(cold_budget);
+            if self.index.token_count() > target_total {
+                self.stats.tokens_evicted += self.index.evict_to(target_total);
+            }
+        }
+    }
+
+    /// Record a freshly prefilled prompt's KV into the store: new tokens
+    /// land in DRAM, LRU DRAM leaves demote to SSD past the hot budget,
+    /// and SSD-side LRU eviction runs only when both tiers are full.
     pub fn insert(&mut self, tokens: &[u32]) -> u64 {
         let added = self.index.insert(tokens);
         self.stats.tokens_written += added;
-        let cap = self.total_capacity();
-        if self.index.token_count() > cap {
-            self.stats.tokens_evicted += self.index.evict_to(cap);
-        }
+        self.enforce_capacity(self.total_capacity());
         added
     }
 
     /// Record a whole prefill step's prompts in one call, enforcing capacity
-    /// once at the end — the insert+evict cycle amortizes over the batch
-    /// instead of running per sequence. Returns total NEW tokens written.
+    /// once at the end — the insert+demote+evict cycle amortizes over the
+    /// batch instead of running per sequence. Returns total NEW tokens
+    /// written.
     ///
     /// Unlike [`insert`] (which preserves the exact evict-to-cap behavior),
     /// the batched path evicts to a small slack below capacity so several
@@ -187,10 +260,12 @@ impl GlobalKvStore {
         }
         self.stats.tokens_written += added;
         let cap = self.total_capacity();
-        if self.index.token_count() > cap {
-            let target = cap - cap / 16;
-            self.stats.tokens_evicted += self.index.evict_to(target);
-        }
+        let target = if self.index.token_count() > cap {
+            cap - cap / 16
+        } else {
+            cap
+        };
+        self.enforce_capacity(target);
         added
     }
 
@@ -201,6 +276,12 @@ impl GlobalKvStore {
     /// Peek the hit length without stat effects (router diagnostics).
     pub fn peek(&self, tokens: &[u32]) -> u64 {
         self.index.peek_prefix(tokens)
+    }
+
+    /// Peek the per-tier hit breakdown without stat or residency effects
+    /// (replica selection).
+    pub fn peek_tiered(&self, tokens: &[u32]) -> TieredMatch {
+        self.index.peek_prefix_tiered(tokens)
     }
 }
 
@@ -299,21 +380,31 @@ impl ShardedKvStore {
         (0..self.replication).map(move |r| (owner + r) % n)
     }
 
-    /// Look up the cached prefix on the first live replica; every replica
-    /// down degrades to a clean miss (recompute) and is counted.
+    /// Look up the cached prefix on the hottest surviving replica: deepest
+    /// hit first, most DRAM-resident hit as the tie-break, owner order
+    /// last — so a cold-restarted owner never shadows a warm replica, and
+    /// a replica whose copy is still hot beats one that demoted it to SSD.
+    /// Every replica down degrades to a clean miss (recompute), counted.
     pub fn lookup(&mut self, tokens: &[u32], spec: &ModelSpec, t_fwd_layer: f64) -> FetchPlan {
-        let node = self.replicas(tokens).find(|&i| self.up[i]);
-        match node {
-            Some(i) => self.nodes[i].lookup(tokens, spec, t_fwd_layer),
+        let mut best: Option<(usize, TieredMatch)> = None;
+        for i in self.replicas(tokens) {
+            if !self.up[i] {
+                continue;
+            }
+            let m = self.nodes[i].peek_tiered(tokens);
+            let better = match &best {
+                None => true,
+                Some((_, b)) => m.matched > b.matched || (m.matched == b.matched && m.hot > b.hot),
+            };
+            if better {
+                best = Some((i, m));
+            }
+        }
+        match best {
+            Some((i, _)) => self.nodes[i].lookup(tokens, spec, t_fwd_layer),
             None => {
                 self.degraded_lookups += 1;
-                FetchPlan {
-                    hit_tokens: 0,
-                    tier: Tier::Cpu,
-                    t_fetch_layer: 0.0,
-                    stall: 0.0,
-                    raw_transfer: 0.0,
-                }
+                FetchPlan::miss()
             }
         }
     }
@@ -373,6 +464,29 @@ impl ShardedKvStore {
     pub fn token_count(&self) -> u64 {
         self.nodes.iter().map(|s| s.token_count()).sum()
     }
+
+    /// Tokens resident in the hot (DRAM) tier, summed over shards.
+    pub fn hot_token_count(&self) -> u64 {
+        self.nodes.iter().map(|s| s.hot_token_count()).sum()
+    }
+
+    /// Tokens resident in the cold (SSD) tier, summed over shards.
+    pub fn cold_token_count(&self) -> u64 {
+        self.nodes.iter().map(|s| s.cold_token_count()).sum()
+    }
+
+    /// `(hot, cold)` tokens served across all shards — the hot-hit /
+    /// cold-hit split that, against total recompute, orders the three
+    /// outcomes hot hit ≫ cold hit ≫ recompute.
+    pub fn tier_tokens_served(&self) -> (u64, u64) {
+        let mut hot = 0u64;
+        let mut cold = 0u64;
+        for s in &self.nodes {
+            hot += s.stats.hot_tokens_served;
+            cold += s.stats.cold_tokens_served;
+        }
+        (hot, cold)
+    }
 }
 
 #[cfg(test)]
@@ -398,9 +512,13 @@ mod tests {
         let p = s.lookup(&toks, &LLAMA31_8B, t_fwd);
         assert_eq!(p.hit_tokens, 0);
         assert_eq!(p.stall, 0.0);
+        // a pure miss fetches nothing: zero cost, not a latency charge
+        assert_eq!(p.t_fetch_layer, 0.0);
+        assert_eq!(p.raw_transfer, 0.0);
         s.insert(&toks);
         let p2 = s.lookup(&toks, &LLAMA31_8B, t_fwd);
         assert_eq!(p2.hit_tokens, 100);
+        assert_eq!((p2.hot_tokens, p2.cold_tokens), (100, 0));
         assert!(s.hit_rate() > 0.4);
     }
 
@@ -440,16 +558,85 @@ mod tests {
     }
 
     #[test]
-    fn tier_degrades_past_cpu_capacity() {
+    fn overflow_demotes_to_ssd_and_cold_hits_cost_more() {
         let mut s = store(); // cpu cap 1000
         let a: Vec<u32> = (0..900).collect();
         s.insert(&a);
-        assert_eq!(s.current_tier(), Tier::Cpu);
-        let bw_cpu = s.effective_bandwidth();
+        assert_eq!(s.hot_token_count(), 900);
+        assert_eq!(s.cold_token_count(), 0);
+        // overflow the DRAM budget: LRU leaves DEMOTE (stay cached on SSD)
         let b: Vec<u32> = (10_000..13_000).collect();
         s.insert(&b);
-        assert_eq!(s.current_tier(), Tier::Ssd);
-        assert!(s.effective_bandwidth() < bw_cpu);
+        assert!(s.hot_token_count() <= 1000);
+        assert_eq!(
+            s.hot_token_count() + s.cold_token_count(),
+            s.token_count(),
+            "residency conserved"
+        );
+        assert!(s.stats().tokens_demoted > 0);
+        assert_eq!(s.stats().tokens_evicted, 0, "demotion is not eviction");
+        // a's prefix is still a full hit — but priced at SSD bandwidth
+        let cold = s.lookup(&a, &LLAMA31_8B, 4.22e-3);
+        assert_eq!(cold.hit_tokens, 900);
+        assert_eq!(cold.tier, Tier::Ssd);
+        assert!(cold.cold_tokens > 0);
+        // the hit promoted a back to DRAM: the next reader pays DRAM cost
+        let hot = s.lookup(&a, &LLAMA31_8B, 4.22e-3);
+        assert_eq!((hot.hot_tokens, hot.cold_tokens), (900, 0));
+        assert_eq!(hot.tier, Tier::Cpu);
+        assert!(
+            cold.t_fetch_layer > 2.0 * hot.t_fetch_layer,
+            "SSD fetch ({}) must cost well above DRAM fetch ({})",
+            cold.t_fetch_layer,
+            hot.t_fetch_layer
+        );
+    }
+
+    #[test]
+    fn zero_ssd_capacity_is_a_flat_store() {
+        // with no cold tier to demote into, overflow must EVICT (the
+        // pre-tiering behavior) and nothing may ever go cold
+        let mut s = GlobalKvStore::new(StoreConfig {
+            cpu_capacity_tokens: 1000,
+            ssd_capacity_tokens: 0,
+            cpu_link: NET_200GBPS,
+            ssd_bw: 6e9,
+        });
+        let a: Vec<u32> = (0..900).collect();
+        s.insert(&a);
+        let b: Vec<u32> = (10_000..13_000).collect();
+        s.insert(&b);
+        assert!(s.token_count() <= 1000);
+        assert_eq!(s.cold_token_count(), 0);
+        assert_eq!(s.stats().tokens_demoted, 0, "flat store must not demote");
+        assert!(s.stats().tokens_evicted > 0);
+    }
+
+    #[test]
+    fn ssd_bw_is_inert_while_everything_fits_in_dram() {
+        // flat-default invariance: with the working set inside the DRAM
+        // budget nothing ever demotes, so the SSD knob must not move a
+        // single plan field — the tiered store degrades to the flat one
+        let cfg = |bw: f64| StoreConfig {
+            cpu_capacity_tokens: 100_000,
+            ssd_capacity_tokens: 400_000,
+            cpu_link: NET_200GBPS,
+            ssd_bw: bw,
+        };
+        let mut a = GlobalKvStore::new(cfg(6e9));
+        let mut b = GlobalKvStore::new(cfg(0.05e9));
+        let seqs: Vec<Vec<u32>> = (0..12u32).map(|i| (i * 61..i * 61 + 250).collect()).collect();
+        for s in &seqs {
+            a.insert(s);
+            b.insert(s);
+        }
+        for s in &seqs {
+            let pa = a.lookup(s, &LLAMA31_8B, 4.22e-3);
+            let pb = b.lookup(s, &LLAMA31_8B, 4.22e-3);
+            assert_eq!(pa, pb, "ssd_bw leaked into an all-DRAM plan");
+            assert_eq!(pa.cold_tokens, 0);
+        }
+        assert_eq!(a.cold_token_count(), 0);
     }
 
     #[test]
@@ -603,6 +790,47 @@ mod tests {
         assert_eq!(s.lookup(&toks, &LLAMA31_8B, 4.22e-3).hit_tokens, 0);
         assert_eq!(s.degraded_lookups, 1);
         assert_eq!(s.nodes_up(), 1);
+    }
+
+    #[test]
+    fn lookup_prefers_warm_replica_over_cold_restarted_owner() {
+        let mut s = sharded(3, 2);
+        let toks: Vec<u32> = (400..700).collect();
+        s.insert_batch([&toks[..]]);
+        let owner = super::shard_of(&toks, 3);
+        // owner crashes and comes back COLD (empty index). The replica
+        // still holds the prefix: replica selection must route the lookup
+        // there instead of taking the owner's guaranteed miss.
+        assert!(s.set_node_up(owner, false));
+        assert!(s.set_node_up(owner, true));
+        let p = s.lookup(&toks, &LLAMA31_8B, 4.22e-3);
+        assert_eq!(p.hit_tokens, 300, "warm replica must beat the cold owner");
+        assert_eq!(s.degraded_lookups, 0);
+        // on equal warmth the owner wins ties (deterministic placement)
+        let both: Vec<u32> = (800..900).collect();
+        s.insert_batch([&both[..]]);
+        assert_eq!(s.lookup(&both, &LLAMA31_8B, 4.22e-3).hit_tokens, 100);
+    }
+
+    #[test]
+    fn sharded_residency_is_conserved_under_churn() {
+        let cfg = StoreConfig {
+            cpu_capacity_tokens: 600,
+            ssd_capacity_tokens: 1800,
+            ..StoreConfig::default()
+        };
+        let mut s = ShardedKvStore::new(cfg, 3, 2);
+        for i in 0..40u32 {
+            let toks: Vec<u32> = (i * 501..i * 501 + 180).collect();
+            s.insert_batch([&toks[..]]);
+            let _ = s.lookup(&toks, &LLAMA31_8B, 4.22e-3);
+            assert_eq!(
+                s.hot_token_count() + s.cold_token_count(),
+                s.token_count(),
+                "hot + cold must equal resident tokens after op {i}"
+            );
+        }
+        assert!(s.token_count() <= 600 + 1800);
     }
 
     #[test]

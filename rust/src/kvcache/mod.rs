@@ -9,6 +9,6 @@ pub mod pipeline;
 pub mod radix;
 
 pub use block_allocator::{BlockAllocator, BlockId, SeqBlocks};
-pub use global_store::{GlobalKvStore, ShardedKvStore, StoreConfig, StoreStats, Tier};
+pub use global_store::{FetchPlan, GlobalKvStore, ShardedKvStore, StoreConfig, StoreStats};
 pub use pipeline::{PipelinePlan, PipelineStage, StageKind};
-pub use radix::RadixTree;
+pub use radix::{RadixTree, Tier, TieredMatch};

@@ -8,6 +8,21 @@
 //! is met (never evicting segments that still have cached descendants,
 //! mirroring vLLM's leaf-only eviction).
 //!
+//! ## Tier residency
+//!
+//! Every node carries a [`Tier`] bit: `Cpu` (hot, DRAM-resident) or `Ssd`
+//! (cold, demoted). New and touched prefixes are hot; `demote_to` moves the
+//! least-recently-used hot leaves to the cold tier (Mooncake-style demotion
+//! instead of eviction), `evict_cold_to` drops cold leaves once both tiers
+//! are full, and a match or insert promotes every node on its path back to
+//! hot. Two invariants hold throughout: `hot + cold == token_count()`, and
+//! a cold node never has a hot descendant (prefixes are read before their
+//! suffixes, so DRAM always holds a path prefix of what SSD holds).
+//! Demotion and promotion act at edge (leaf-block) granularity: a partial
+//! edge match promotes the whole edge, and shared interior prefixes are
+//! never demoted below their children, so a bounded interior residue can
+//! stay hot past the budget until eviction frees its subtree.
+//!
 //! ## Performance design
 //!
 //! The tree is built for churn at cluster scale (the Global Store sits on
@@ -34,6 +49,35 @@ use std::collections::HashMap;
 const ROOT: usize = 0;
 /// Null link for the intrusive LRU list and arena pointers.
 const NIL: usize = usize::MAX;
+
+/// Storage tier a cached prefix resides in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Hot tier: CPU DRAM, reachable at network/DRAM bandwidth.
+    Cpu,
+    /// Cold tier: SSD-backed, bandwidth-limited.
+    Ssd,
+}
+
+impl Tier {
+    #[inline]
+    fn idx(self) -> usize {
+        match self {
+            Tier::Cpu => 0,
+            Tier::Ssd => 1,
+        }
+    }
+}
+
+/// Per-tier breakdown of a prefix match: `matched == hot + cold`, counted
+/// against the tier each edge resided in BEFORE the promotion the match
+/// itself triggers (the fetch pays the cost of where the bytes were).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TieredMatch {
+    pub matched: u64,
+    pub hot: u64,
+    pub cold: u64,
+}
 
 /// Child dispatch table. Most nodes have zero or one child, so those cases
 /// stay inline; only branchy nodes pay for a `HashMap`.
@@ -148,8 +192,10 @@ struct Node {
     /// Intrusive LRU links; meaningful only while `in_lru`.
     lru_prev: usize,
     lru_next: usize,
-    /// Whether this node is linked on the evictable-leaf LRU list.
+    /// Whether this node is linked on its tier's evictable-leaf LRU list.
     in_lru: bool,
+    /// Storage tier this edge's tokens reside in.
+    tier: Tier,
 }
 
 impl Node {
@@ -162,6 +208,7 @@ impl Node {
             lru_prev: NIL,
             lru_next: NIL,
             in_lru: false,
+            tier: Tier::Cpu,
         }
     }
 }
@@ -173,11 +220,16 @@ pub struct RadixTree {
     nodes: Vec<Node>,
     /// Reclaimed arena slots available for reuse.
     free: Vec<usize>,
-    /// Head (least recent) / tail (most recent) of the evictable-leaf list.
-    lru_head: usize,
-    lru_tail: usize,
+    /// Head (least recent) / tail (most recent) of the evictable-leaf list,
+    /// one chain per tier (`Tier::idx`): demotion pops the hot head,
+    /// cold eviction pops the cold head.
+    lru_head: [usize; 2],
+    lru_tail: [usize; 2],
     /// Total tokens stored across all edges.
     tokens: u64,
+    /// Tokens resident per tier; `hot_toks + cold_toks == tokens` always.
+    hot_toks: u64,
+    cold_toks: u64,
     clock: u64,
     hits: u64,
     lookups: u64,
@@ -196,9 +248,11 @@ impl RadixTree {
         RadixTree {
             nodes: vec![Node::new(Vec::new(), 0, ROOT)],
             free: Vec::new(),
-            lru_head: NIL,
-            lru_tail: NIL,
+            lru_head: [NIL; 2],
+            lru_tail: [NIL; 2],
             tokens: 0,
+            hot_toks: 0,
+            cold_toks: 0,
             clock: 0,
             hits: 0,
             lookups: 0,
@@ -210,6 +264,16 @@ impl RadixTree {
     /// Number of cached tokens resident.
     pub fn token_count(&self) -> u64 {
         self.tokens
+    }
+
+    /// Tokens resident in the hot (DRAM) tier.
+    pub fn hot_tokens(&self) -> u64 {
+        self.hot_toks
+    }
+
+    /// Tokens resident in the cold (SSD) tier.
+    pub fn cold_tokens(&self) -> u64 {
+        self.cold_toks
     }
 
     /// Fraction of lookups with any hit.
@@ -237,18 +301,20 @@ impl RadixTree {
 
     // --- intrusive LRU list -------------------------------------------------
 
+    /// Unlink `i` from its tier's chain (no-op if not linked).
     fn lru_unlink(&mut self, i: usize) {
         if !self.nodes[i].in_lru {
             return;
         }
+        let c = self.nodes[i].tier.idx();
         let (p, n) = (self.nodes[i].lru_prev, self.nodes[i].lru_next);
         if p == NIL {
-            self.lru_head = n;
+            self.lru_head[c] = n;
         } else {
             self.nodes[p].lru_next = n;
         }
         if n == NIL {
-            self.lru_tail = p;
+            self.lru_tail[c] = p;
         } else {
             self.nodes[n].lru_prev = p;
         }
@@ -258,11 +324,12 @@ impl RadixTree {
         node.in_lru = false;
     }
 
-    /// Append at the MRU tail (caller guarantees `i` carries the newest
-    /// stamp, which every touch-path caller does).
+    /// Append at the MRU tail of `i`'s tier chain (caller guarantees `i`
+    /// carries the newest stamp, which every touch-path caller does).
     fn lru_push_tail(&mut self, i: usize) {
         debug_assert!(!self.nodes[i].in_lru);
-        let t = self.lru_tail;
+        let c = self.nodes[i].tier.idx();
+        let t = self.lru_tail[c];
         {
             let node = &mut self.nodes[i];
             node.lru_prev = t;
@@ -270,15 +337,16 @@ impl RadixTree {
             node.in_lru = true;
         }
         if t == NIL {
-            self.lru_head = i;
+            self.lru_head[c] = i;
         } else {
             self.nodes[t].lru_next = i;
         }
-        self.lru_tail = i;
+        self.lru_tail[c] = i;
     }
 
-    /// Insert keeping the list ordered by `last_access` ascending from the
-    /// head. Used for parents promoted to leaves by eviction, whose stamp is
+    /// Insert into `i`'s tier chain keeping it ordered by `last_access`
+    /// ascending from the head. Used for parents promoted to leaves by
+    /// eviction and for leaves demoted into the cold chain, whose stamp is
     /// arbitrary relative to the current membership. Scans from whichever
     /// end is nearer in stamp space (stamps are a monotone clock, so stamp
     /// distance tracks list position), keeping chain-shaped evictions of
@@ -287,24 +355,25 @@ impl RadixTree {
     /// tie order is identical both ways.
     fn lru_insert_sorted(&mut self, i: usize) {
         debug_assert!(!self.nodes[i].in_lru);
+        let c = self.nodes[i].tier.idx();
         let stamp = self.nodes[i].last_access;
-        let closer_to_head = self.lru_head != NIL && {
-            let head = self.nodes[self.lru_head].last_access;
-            let tail = self.nodes[self.lru_tail].last_access;
+        let closer_to_head = self.lru_head[c] != NIL && {
+            let head = self.nodes[self.lru_head[c]].last_access;
+            let tail = self.nodes[self.lru_tail[c]].last_access;
             stamp.saturating_sub(head) <= tail.saturating_sub(stamp)
         };
         let after = if closer_to_head {
-            let mut cur = self.lru_head;
+            let mut cur = self.lru_head[c];
             while cur != NIL && self.nodes[cur].last_access <= stamp {
                 cur = self.nodes[cur].lru_next;
             }
             if cur == NIL {
-                self.lru_tail
+                self.lru_tail[c]
             } else {
                 self.nodes[cur].lru_prev
             }
         } else {
-            let mut after = self.lru_tail;
+            let mut after = self.lru_tail[c];
             while after != NIL && self.nodes[after].last_access > stamp {
                 after = self.nodes[after].lru_prev;
             }
@@ -312,7 +381,7 @@ impl RadixTree {
         };
         if after == NIL {
             // new head
-            let h = self.lru_head;
+            let h = self.lru_head[c];
             {
                 let node = &mut self.nodes[i];
                 node.lru_prev = NIL;
@@ -320,11 +389,11 @@ impl RadixTree {
                 node.in_lru = true;
             }
             if h == NIL {
-                self.lru_tail = i;
+                self.lru_tail[c] = i;
             } else {
                 self.nodes[h].lru_prev = i;
             }
-            self.lru_head = i;
+            self.lru_head[c] = i;
         } else {
             let nxt = self.nodes[after].lru_next;
             {
@@ -335,7 +404,7 @@ impl RadixTree {
             }
             self.nodes[after].lru_next = i;
             if nxt == NIL {
-                self.lru_tail = i;
+                self.lru_tail[c] = i;
             } else {
                 self.nodes[nxt].lru_prev = i;
             }
@@ -350,6 +419,32 @@ impl RadixTree {
         }
     }
 
+    /// Touch `i` (stamp already bumped by the caller) and promote it to the
+    /// hot tier if it was cold, moving it between chains and updating the
+    /// per-tier token counters. Returns the tier `i` resided in BEFORE the
+    /// call — the tier whose bandwidth a fetch of these tokens pays.
+    fn touch_promote(&mut self, i: usize) -> Tier {
+        let was = self.nodes[i].tier;
+        match was {
+            Tier::Cpu => self.lru_touch(i),
+            Tier::Ssd => {
+                let seg = self.nodes[i].segment.len() as u64;
+                let linked = self.nodes[i].in_lru;
+                if linked {
+                    self.lru_unlink(i); // from the cold chain
+                }
+                self.nodes[i].tier = Tier::Cpu;
+                self.cold_toks -= seg;
+                self.hot_toks += seg;
+                if linked {
+                    // stamp is the newest clock, so the hot MRU tail is right
+                    self.lru_push_tail(i);
+                }
+            }
+        }
+        was
+    }
+
     // --- arena --------------------------------------------------------------
 
     fn alloc_node(&mut self, segment: Vec<u32>, last_access: u64, parent: usize) -> usize {
@@ -360,6 +455,7 @@ impl RadixTree {
                 node.segment = segment;
                 node.last_access = last_access;
                 node.parent = parent;
+                node.tier = Tier::Cpu;
                 i
             }
             None => {
@@ -375,6 +471,7 @@ impl RadixTree {
         node.segment = Vec::new();
         node.children = Children::Empty;
         node.parent = ROOT;
+        node.tier = Tier::Cpu;
         self.free.push(i);
     }
 
@@ -383,9 +480,19 @@ impl RadixTree {
     /// Longest cached prefix of `tokens` (in tokens). Records hit stats and
     /// refreshes LRU stamps along the matched path.
     pub fn match_prefix(&mut self, tokens: &[u32]) -> u64 {
+        self.match_prefix_tiered(tokens).matched
+    }
+
+    /// Longest cached prefix of `tokens`, broken down by the tier each
+    /// matched edge resided in. Records hit stats, refreshes LRU stamps,
+    /// and promotes every matched edge to the hot tier (a partial edge
+    /// match promotes the whole edge — cache granularity is the edge). The
+    /// returned hot/cold split reflects pre-promotion residency: the tier
+    /// the fetch actually reads from.
+    pub fn match_prefix_tiered(&mut self, tokens: &[u32]) -> TieredMatch {
         let now = self.tick();
         let mut node = ROOT;
-        let mut matched: u64 = 0;
+        let mut m = TieredMatch::default();
         let mut i = 0usize;
         while i < tokens.len() {
             let Some(child) = self.nodes[node].children.get(tokens[i]) else {
@@ -399,9 +506,12 @@ impl RadixTree {
                 .zip(avail.iter())
                 .take_while(|(a, b)| a == b)
                 .count();
-            matched += common as u64;
+            m.matched += common as u64;
             self.nodes[child].last_access = now;
-            self.lru_touch(child);
+            match self.touch_promote(child) {
+                Tier::Cpu => m.hot += common as u64,
+                Tier::Ssd => m.cold += common as u64,
+            }
             if common < seg_len {
                 break; // partial edge match: stop (cache granularity = edge)
             }
@@ -410,17 +520,23 @@ impl RadixTree {
         }
         self.lookups += 1;
         self.lookup_tokens += tokens.len() as u64;
-        if matched > 0 {
+        if m.matched > 0 {
             self.hits += 1;
-            self.hit_tokens += matched;
+            self.hit_tokens += m.matched;
         }
-        matched
+        m
     }
 
-    /// Peek the match length without touching stats or LRU.
+    /// Peek the match length without touching stats, LRU, or residency.
     pub fn peek_prefix(&self, tokens: &[u32]) -> u64 {
+        self.peek_prefix_tiered(tokens).matched
+    }
+
+    /// Peek the per-tier match breakdown without touching stats, LRU, or
+    /// residency. Used by replica selection to find the hottest copy.
+    pub fn peek_prefix_tiered(&self, tokens: &[u32]) -> TieredMatch {
         let mut node = ROOT;
-        let mut matched = 0u64;
+        let mut m = TieredMatch::default();
         let mut i = 0usize;
         while i < tokens.len() {
             let Some(child) = self.nodes[node].children.get(tokens[i]) else {
@@ -433,18 +549,25 @@ impl RadixTree {
                 .zip(avail.iter())
                 .take_while(|(a, b)| a == b)
                 .count();
-            matched += common as u64;
+            m.matched += common as u64;
+            match self.nodes[child].tier {
+                Tier::Cpu => m.hot += common as u64,
+                Tier::Ssd => m.cold += common as u64,
+            }
             if common < seg.len() {
                 break;
             }
             i += common;
             node = child;
         }
-        matched
+        m
     }
 
     /// Insert a token sequence, sharing existing prefixes; returns the
-    /// number of NEW tokens added to the tree.
+    /// number of NEW tokens added to the tree. New tokens land in the hot
+    /// tier, and the existing path they extend is promoted back to hot
+    /// (KV is written into DRAM; a cold prefix under fresh hot tokens
+    /// would be unreadable order — the prefix must load first).
     pub fn insert(&mut self, tokens: &[u32]) -> u64 {
         let now = self.tick();
         let mut node = ROOT;
@@ -462,6 +585,7 @@ impl RadixTree {
                     self.lru_unlink(node);
                     self.lru_push_tail(idx);
                     self.tokens += added;
+                    self.hot_toks += added;
                     return added;
                 }
                 Some(child) => {
@@ -474,7 +598,7 @@ impl RadixTree {
                         .take_while(|(a, b)| a == b)
                         .count();
                     self.nodes[child].last_access = now;
-                    self.lru_touch(child);
+                    self.touch_promote(child);
                     if common == seg_len {
                         // full edge consumed, descend
                         i += common;
@@ -510,31 +634,96 @@ impl RadixTree {
         0 // fully contained already
     }
 
+    /// Remove an evictable leaf from the tree, updating token counters and
+    /// re-linking the parent if it just became an evictable leaf (in stamp
+    /// order — its stamp predates the list tail in general). Returns the
+    /// number of tokens freed.
+    fn remove_leaf(&mut self, leaf: usize) -> u64 {
+        self.lru_unlink(leaf);
+        let seg_len = self.nodes[leaf].segment.len() as u64;
+        let first = self.nodes[leaf].segment[0];
+        let parent = self.nodes[leaf].parent;
+        match self.nodes[leaf].tier {
+            Tier::Cpu => self.hot_toks -= seg_len,
+            Tier::Ssd => self.cold_toks -= seg_len,
+        }
+        self.nodes[parent].children.remove(first);
+        self.free_node(leaf);
+        self.tokens -= seg_len;
+        if parent != ROOT
+            && self.nodes[parent].children.is_empty()
+            && !self.nodes[parent].segment.is_empty()
+        {
+            self.lru_insert_sorted(parent);
+        }
+        seg_len
+    }
+
     /// Evict least-recently-used leaf segments until at most `budget`
-    /// tokens remain. Returns tokens evicted.
+    /// tokens remain, across both tiers in global stamp order (ties prefer
+    /// the cold chain — its members were demoted as older). Returns tokens
+    /// evicted. On an all-hot tree this is exactly the flat single-chain
+    /// LRU eviction.
     pub fn evict_to(&mut self, budget: u64) -> u64 {
         let mut evicted = 0u64;
         while self.tokens > budget {
-            let leaf = self.lru_head;
+            let hot = self.lru_head[Tier::Cpu.idx()];
+            let cold = self.lru_head[Tier::Ssd.idx()];
+            let leaf = match (hot, cold) {
+                (NIL, NIL) => break,
+                (h, NIL) => h,
+                (NIL, c) => c,
+                (h, c) => {
+                    if self.nodes[c].last_access <= self.nodes[h].last_access {
+                        c
+                    } else {
+                        h
+                    }
+                }
+            };
+            evicted += self.remove_leaf(leaf);
+        }
+        evicted
+    }
+
+    /// Demote least-recently-used hot leaves to the cold tier until at most
+    /// `hot_budget` tokens are DRAM-resident — Mooncake-style demotion
+    /// instead of eviction: the prefix stays cached, only its fetch cost
+    /// changes. Leaf-granularity: shared interior prefixes are never
+    /// demoted below their children, so a bounded interior residue can
+    /// stay hot past the budget until eviction frees its subtree. Returns
+    /// tokens demoted.
+    pub fn demote_to(&mut self, hot_budget: u64) -> u64 {
+        let mut demoted = 0u64;
+        while self.hot_toks > hot_budget {
+            let leaf = self.lru_head[Tier::Cpu.idx()];
             if leaf == NIL {
                 break;
             }
-            self.lru_unlink(leaf);
-            let seg_len = self.nodes[leaf].segment.len() as u64;
-            let first = self.nodes[leaf].segment[0];
-            let parent = self.nodes[leaf].parent;
-            self.nodes[parent].children.remove(first);
-            self.free_node(leaf);
-            self.tokens -= seg_len;
-            evicted += seg_len;
-            // the parent may just have become an evictable leaf; link it in
-            // stamp order (its stamp predates the list tail in general)
-            if parent != ROOT
-                && self.nodes[parent].children.is_empty()
-                && !self.nodes[parent].segment.is_empty()
-            {
-                self.lru_insert_sorted(parent);
+            self.lru_unlink(leaf); // from the hot chain
+            let seg = self.nodes[leaf].segment.len() as u64;
+            self.nodes[leaf].tier = Tier::Ssd;
+            self.hot_toks -= seg;
+            self.cold_toks += seg;
+            demoted += seg;
+            // cold-chain stamps can interleave with ours (promotion hands
+            // out fresh stamps), so keep the chain sorted
+            self.lru_insert_sorted(leaf);
+        }
+        demoted
+    }
+
+    /// Evict least-recently-used COLD leaves until at most `cold_budget`
+    /// tokens remain on the SSD tier — the only true eviction path once
+    /// both tiers are full. Returns tokens evicted.
+    pub fn evict_cold_to(&mut self, cold_budget: u64) -> u64 {
+        let mut evicted = 0u64;
+        while self.cold_toks > cold_budget {
+            let leaf = self.lru_head[Tier::Ssd.idx()];
+            if leaf == NIL {
+                break;
             }
+            evicted += self.remove_leaf(leaf);
         }
         evicted
     }
@@ -563,20 +752,7 @@ impl RadixTree {
                 }
             }
             let Some((leaf, _)) = lru else { break };
-            self.lru_unlink(leaf);
-            let seg_len = self.nodes[leaf].segment.len() as u64;
-            let first = self.nodes[leaf].segment[0];
-            let parent = self.nodes[leaf].parent;
-            self.nodes[parent].children.remove(first);
-            self.free_node(leaf);
-            self.tokens -= seg_len;
-            evicted += seg_len;
-            if parent != ROOT
-                && self.nodes[parent].children.is_empty()
-                && !self.nodes[parent].segment.is_empty()
-            {
-                self.lru_insert_sorted(parent);
-            }
+            evicted += self.remove_leaf(leaf);
         }
         evicted
     }
@@ -601,14 +777,17 @@ impl RadixTree {
     }
 
     /// Exhaustive structural check, for property/stress tests: verifies the
-    /// token count, parent/child links, free-list disjointness, and that the
-    /// LRU list contains exactly the evictable leaves in stamp order.
+    /// token count and per-tier residency sums, parent/child links, the
+    /// cold-has-no-hot-descendant tier invariant, free-list disjointness,
+    /// and that each tier's LRU list contains exactly that tier's evictable
+    /// leaves in stamp order.
     #[doc(hidden)]
     pub fn validate(&self) -> Result<(), String> {
         use std::collections::HashSet;
         let mut seen: HashSet<usize> = HashSet::new();
         let mut stack = vec![ROOT];
         let mut sum = 0u64;
+        let mut tier_sum = [0u64; 2];
         while let Some(i) = stack.pop() {
             if !seen.insert(i) {
                 return Err(format!("node {i} reachable twice"));
@@ -619,6 +798,7 @@ impl RadixTree {
                     return Err(format!("live node {i} has empty segment"));
                 }
                 sum += n.segment.len() as u64;
+                tier_sum[n.tier.idx()] += n.segment.len() as u64;
             }
             for (tok, c) in n.children.iter() {
                 if self.nodes[c].parent != i {
@@ -626,6 +806,9 @@ impl RadixTree {
                 }
                 if self.nodes[c].segment.first() != Some(&tok) {
                     return Err(format!("child {c} keyed by wrong first token"));
+                }
+                if i != ROOT && n.tier == Tier::Ssd && self.nodes[c].tier == Tier::Cpu {
+                    return Err(format!("cold node {i} has hot child {c}"));
                 }
                 stack.push(c);
             }
@@ -641,6 +824,22 @@ impl RadixTree {
             return Err(format!(
                 "token_count {} != sum of live segments {sum}",
                 self.tokens
+            ));
+        }
+        if tier_sum[Tier::Cpu.idx()] != self.hot_toks || tier_sum[Tier::Ssd.idx()] != self.cold_toks
+        {
+            return Err(format!(
+                "tier residency counters hot={}/cold={} != sums hot={}/cold={}",
+                self.hot_toks,
+                self.cold_toks,
+                tier_sum[Tier::Cpu.idx()],
+                tier_sum[Tier::Ssd.idx()]
+            ));
+        }
+        if self.hot_toks + self.cold_toks != self.tokens {
+            return Err(format!(
+                "residency not conserved: {} hot + {} cold != {} total",
+                self.hot_toks, self.cold_toks, self.tokens
             ));
         }
         for &f in &self.free {
@@ -659,37 +858,45 @@ impl RadixTree {
                 self.nodes.len()
             ));
         }
-        // LRU chain: links consistent, members reachable, stamps ascending
-        let mut count = 0usize;
-        let mut prev = NIL;
-        let mut last_stamp = 0u64;
-        let mut i = self.lru_head;
-        while i != NIL {
-            let n = &self.nodes[i];
-            if !n.in_lru {
-                return Err(format!("LRU chain hits unlinked node {i}"));
+        // per-tier LRU chains: links consistent, members reachable and of
+        // the chain's tier, stamps ascending
+        let mut total_count = 0usize;
+        for c in 0..2usize {
+            let mut count = 0usize;
+            let mut prev = NIL;
+            let mut last_stamp = 0u64;
+            let mut i = self.lru_head[c];
+            while i != NIL {
+                let n = &self.nodes[i];
+                if !n.in_lru {
+                    return Err(format!("LRU chain {c} hits unlinked node {i}"));
+                }
+                if n.tier.idx() != c {
+                    return Err(format!("node {i} on chain {c} but tier {:?}", n.tier));
+                }
+                if n.lru_prev != prev {
+                    return Err(format!("node {i} lru_prev broken"));
+                }
+                if n.last_access < last_stamp {
+                    return Err(format!("LRU order violated at node {i} (chain {c})"));
+                }
+                last_stamp = n.last_access;
+                count += 1;
+                if count > self.nodes.len() {
+                    return Err(format!("LRU cycle on chain {c}"));
+                }
+                prev = i;
+                i = n.lru_next;
             }
-            if n.lru_prev != prev {
-                return Err(format!("node {i} lru_prev broken"));
+            if prev != self.lru_tail[c] && !(count == 0 && self.lru_tail[c] == NIL) {
+                return Err(format!("lru_tail inconsistent on chain {c}"));
             }
-            if n.last_access < last_stamp {
-                return Err(format!("LRU order violated at node {i}"));
-            }
-            last_stamp = n.last_access;
-            count += 1;
-            if count > self.nodes.len() {
-                return Err("LRU cycle".to_string());
-            }
-            prev = i;
-            i = n.lru_next;
-        }
-        if prev != self.lru_tail && !(count == 0 && self.lru_tail == NIL) {
-            return Err("lru_tail inconsistent".to_string());
+            total_count += count;
         }
         let in_lru_total = seen.iter().filter(|&&j| self.nodes[j].in_lru).count();
-        if count != in_lru_total {
+        if total_count != in_lru_total {
             return Err(format!(
-                "LRU chain length {count} != {in_lru_total} flagged nodes"
+                "LRU chains length {total_count} != {in_lru_total} flagged nodes"
             ));
         }
         Ok(())
@@ -880,6 +1087,88 @@ mod tests {
         t.match_prefix(&[1, 2, 3, 4]);
         t.evict_to(6);
         t.insert(&[4, 4, 4]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn demotion_moves_lru_leaf_cold_and_conserves_residency() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 1, 1, 1]);
+        t.insert(&[2, 2, 2, 2]);
+        t.match_prefix(&[2, 2, 2, 2]); // [1,1,1,1] is now LRU
+        let demoted = t.demote_to(4);
+        assert_eq!(demoted, 4);
+        assert_eq!(t.hot_tokens(), 4);
+        assert_eq!(t.cold_tokens(), 4);
+        assert_eq!(t.hot_tokens() + t.cold_tokens(), t.token_count());
+        // the LRU sequence went cold, the touched one stayed hot
+        let m = t.peek_prefix_tiered(&[1, 1, 1, 1]);
+        assert_eq!((m.hot, m.cold), (0, 4), "LRU leaf demoted");
+        let m = t.peek_prefix_tiered(&[2, 2, 2, 2]);
+        assert_eq!((m.hot, m.cold), (4, 0), "MRU leaf stays hot");
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn match_promotes_cold_prefix_back_to_hot() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 1, 1, 1]);
+        t.insert(&[2, 2, 2, 2]);
+        t.match_prefix(&[2, 2, 2, 2]);
+        t.demote_to(4); // [1,1,1,1] cold
+        // the match itself reports the pre-promotion (cold) residency...
+        let m = t.match_prefix_tiered(&[1, 1, 1, 1]);
+        assert_eq!((m.matched, m.hot, m.cold), (4, 0, 4));
+        // ...and flips the prefix hot for the next reader
+        let m = t.peek_prefix_tiered(&[1, 1, 1, 1]);
+        assert_eq!((m.hot, m.cold), (4, 0), "promoted on hit");
+        assert_eq!(t.hot_tokens(), 8);
+        assert_eq!(t.cold_tokens(), 0);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn cold_eviction_takes_lru_cold_leaf_only() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 1, 1]); // clock 1: oldest
+        t.insert(&[2, 2, 2]); // clock 2
+        t.insert(&[3, 3, 3]); // clock 3: stays hot
+        t.demote_to(3); // [1,1,1] and [2,2,2] demoted in LRU order
+        assert_eq!(t.cold_tokens(), 6);
+        t.evict_cold_to(3);
+        assert_eq!(t.peek_prefix(&[1, 1, 1]), 0, "oldest cold leaf evicted");
+        assert_eq!(t.peek_prefix(&[2, 2, 2]), 3, "younger cold leaf survives");
+        assert_eq!(t.peek_prefix(&[3, 3, 3]), 3, "hot leaf untouched");
+        assert_eq!(t.hot_tokens() + t.cold_tokens(), t.token_count());
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn insert_extending_cold_prefix_promotes_the_path() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3]);
+        t.insert(&[9, 9, 9]);
+        t.match_prefix(&[9, 9, 9]);
+        t.demote_to(3); // [1,2,3] cold
+        assert_eq!(t.peek_prefix_tiered(&[1, 2, 3]).cold, 3);
+        // extending the cold prefix writes hot KV above it: the path must
+        // come back hot or validate()'s tier-direction invariant would trip
+        t.insert(&[1, 2, 3, 4, 5]);
+        let m = t.peek_prefix_tiered(&[1, 2, 3, 4, 5]);
+        assert_eq!((m.hot, m.cold), (5, 0));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn global_eviction_merges_both_tiers_in_stamp_order() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 1, 1]); // clock 1
+        t.insert(&[2, 2, 2]); // clock 2
+        t.demote_to(3); // [1,1,1] cold (stamp 1), [2,2,2] hot (stamp 2)
+        // global eviction must take the cold stamp-1 leaf before the hot one
+        t.evict_to(3);
+        assert_eq!(t.peek_prefix(&[1, 1, 1]), 0);
+        assert_eq!(t.peek_prefix(&[2, 2, 2]), 3);
         t.validate().unwrap();
     }
 }

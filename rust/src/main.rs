@@ -13,7 +13,8 @@
 //!                     `rust/src/scenario/`; the registered names and doc
 //!                     lines below are printed from the registry itself:
 //!                       bursty-autoscale, hetero-slo, cache-skew,
-//!                       fault-recovery, degraded-service, megafleet
+//!                       fault-recovery, degraded-service, megafleet,
+//!                       tiered-store
 //!   sweep             RPS sweep for one engine/profile
 //!   figure <id>       regenerate a paper figure (1|2a|2b|6|7|8|9|10|11)
 //!   migrate-demo      show Alg 1 decisions on a synthetic imbalance
@@ -36,8 +37,12 @@
 //! retries): --fault-link-mtbf --fault-link-degrade-factor
 //! --fault-link-partition-prob --fault-link-secs --fault-store-mtbf
 //! --fault-transfer-timeout --fault-transfer-retries; sharded Global KV
-//! Store (BanaServe): --store-nodes --store-replication (JSON keys:
-//! fault_link_mtbf, ..., store_nodes, store_replication); scalable routing (defaults
+//! Store (BanaServe): --store-nodes --store-replication; tiered store
+//! budgets (DRAM hot tier with LRU demotion to an SSD cold tier;
+//! --store-ssd-tokens 0 = flat single-tier store):
+//! --store-cpu-tokens --store-ssd-tokens --store-ssd-bw (JSON keys:
+//! fault_link_mtbf, ..., store_nodes, store_replication,
+//! store_cpu_tokens, store_ssd_tokens, store_ssd_bw); scalable routing (defaults
 //! reproduce the historical scan bit-for-bit at fleet <= 64):
 //! --route-mode auto|scan|tournament|p2c --route-sample-k
 //! --route-scan-threshold; diurnal multi-tenant traces: --diurnal-ratio
@@ -52,7 +57,8 @@
 //! fault-recovery --crash-mtbf --recovery-time --retry-budget,
 //! degraded-service --crash-mtbf --link-mtbf --link-partition-prob
 //! --link-secs --store-mtbf --store-nodes --share-prob,
-//! megafleet --rps --duration --tenants --diurnal-ratio).
+//! megafleet --rps --duration --tenants --diurnal-ratio,
+//! tiered-store --devices --share-prob --templates).
 //! Unknown flags are rejected: a typo'd flag aborts the command instead
 //! of silently running with the default value.
 

@@ -223,8 +223,17 @@ impl TimeSeries {
         self.points.last().map(|&(_, v)| v)
     }
 
+    /// Largest sampled value; 0.0 for an empty series. Folds from
+    /// `NEG_INFINITY`, not 0.0, so all-negative series report their true
+    /// maximum instead of a phantom zero.
     pub fn max_value(&self) -> f64 {
-        self.points.iter().map(|&(_, v)| v).fold(0.0, f64::max)
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max)
     }
 
     /// Step-function time average over [first sample, end].
@@ -457,6 +466,19 @@ mod tests {
         assert_eq!(s.max_value(), 4.0);
         assert_eq!(s.last_value(), Some(2.0));
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn max_value_of_all_negative_series_is_not_zero() {
+        // regression: a 0.0-seeded fold reported a phantom zero maximum for
+        // series that never cross zero (e.g. a drain-rate deficit series)
+        let mut s = TimeSeries::new();
+        s.push(0.0, -7.5);
+        s.push(1.0, -2.25);
+        s.push(2.0, -11.0);
+        assert_eq!(s.max_value(), -2.25);
+        // the empty series keeps the documented 0.0 sentinel
+        assert_eq!(TimeSeries::new().max_value(), 0.0);
     }
 
     /// Sort-based reference for the tracker's two-window P99: keep every

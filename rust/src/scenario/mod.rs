@@ -65,15 +65,17 @@ pub mod degraded_service;
 pub mod fault_recovery;
 pub mod hetero_slo;
 pub mod megafleet;
+pub mod tiered_store;
 
 /// All registered scenarios, in `--list-scenarios` order.
-pub static REGISTRY: [ScenarioSpec; 6] = [
+pub static REGISTRY: [ScenarioSpec; 7] = [
     bursty_autoscale::SPEC,
     hetero_slo::SPEC,
     cache_skew::SPEC,
     fault_recovery::SPEC,
     degraded_service::SPEC,
     megafleet::SPEC,
+    tiered_store::SPEC,
 ];
 
 pub fn by_name(name: &str) -> Option<&'static ScenarioSpec> {
@@ -517,6 +519,7 @@ mod tests {
         assert!(names.contains(&"fault-recovery"));
         assert!(names.contains(&"degraded-service"));
         assert!(names.contains(&"megafleet"));
+        assert!(names.contains(&"tiered-store"));
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();

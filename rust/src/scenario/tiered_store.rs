@@ -1,0 +1,195 @@
+//! The tiered Global KV Cache Store's economics as a first-class scenario
+//! (paper Fig 5 + the Mooncake-style DRAM/SSD split): a long-context trace
+//! whose shared-prefix working set is several times the DRAM budget, run
+//! on BanaServe under three store shapes that isolate what the cold tier
+//! buys:
+//!
+//! * `tiered`     — small DRAM + large SSD: LRU prefixes DEMOTE to SSD and
+//!   come back as cold hits (slower than DRAM, far cheaper than recompute).
+//! * `flat-small` — the same DRAM alone: overflow is EVICTED, so the tail
+//!   of the template pool is recomputed from scratch every time it cycles
+//!   back in. Recompute-bound.
+//! * `flat-large` — DRAM sized to hold everything (DRAM + SSD budgets
+//!   combined, all of it priced as DRAM): the unrealistic memory-rich
+//!   upper bound on hit quality.
+//!
+//! The gate prices the tiers like the capacity planner would: tiered must
+//! beat flat-small on P99 TTFT outright (cold hits beat recompute), and
+//! beat flat-large on cost-weighted P99 TTFT, where each variant's cost is
+//! its device-time integral plus its provisioned store bytes held for the
+//! makespan at per-tier $/token·s rates (DRAM ~12x SSD per byte).
+
+use super::{Agg, EngineAgg, Metric, ScenarioPlan, ScenarioSpec, SummaryCol, Variant};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::util::args::Args;
+use crate::util::json;
+use crate::workload::{ArrivalProcess, LengthProfile};
+
+/// Hot-tier (DRAM) budget shared by all three variants, in tokens. Sized
+/// well below the trace's shared working set (~40 templates x ~3.5k capped
+/// shared tokens) so the tiered variant demotes continuously.
+pub const DRAM_TOKENS: u64 = 24_000;
+/// Cold-tier (SSD) budget of the `tiered` variant; `flat-large` gets this
+/// much EXTRA DRAM instead.
+pub const SSD_TOKENS: u64 = 2_000_000;
+/// Store cost rates in $ per token-second of provisioned capacity. Only
+/// the ~12x DRAM/SSD ratio matters to the gate; the absolute scale is
+/// chosen so store cost and device cost land in comparable units.
+pub const DRAM_RATE: f64 = 1.0 / 1.0e6;
+pub const SSD_RATE: f64 = DRAM_RATE / 12.0;
+
+pub const SPEC: ScenarioSpec = ScenarioSpec {
+    name: "tiered-store",
+    doc: "DRAM+SSD tiered KV store vs flat stores on a long-context prefix-reuse trace",
+    out_file: "tiered_store.json",
+    row_metrics: &[
+        Metric { key: "n_requests", get: |c| c.out.report.n_requests as f64 },
+        Metric { key: "p99_ttft_s", get: |c| c.out.report.ttft.p99() },
+        Metric { key: "mean_ttft_s", get: |c| c.out.report.ttft.mean() },
+        Metric { key: "mean_e2e_s", get: |c| c.out.report.e2e.mean() },
+        Metric { key: "throughput_tok_s", get: |c| c.out.report.throughput_tok_s },
+        Metric { key: "makespan_s", get: |c| c.out.report.makespan },
+        Metric { key: "device_cost", get: |c| c.out.extras.device_cost },
+        Metric { key: "store_hit_rate", get: |c| c.out.extras.store_hit_rate },
+        Metric {
+            key: "store_hot_tokens",
+            get: |c| c.out.extras.store_hot_tokens as f64,
+        },
+        Metric {
+            key: "store_cold_tokens",
+            get: |c| c.out.extras.store_cold_tokens as f64,
+        },
+        Metric {
+            key: "recomputed_tokens",
+            get: |c| c.out.extras.recomputed_tokens as f64,
+        },
+    ],
+    summary: &[
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Mean },
+        SummaryCol { key: "p99_ttft_s", agg: Agg::Ci95 },
+        SummaryCol { key: "store_hit_rate", agg: Agg::Mean },
+        SummaryCol { key: "store_cold_tokens", agg: Agg::Mean },
+        SummaryCol { key: "recomputed_tokens", agg: Agg::Mean },
+        SummaryCol { key: "device_cost", agg: Agg::Mean },
+    ],
+    extra_keys: &[],
+    build,
+};
+
+fn build(a: &Args) -> Result<ScenarioPlan, String> {
+    let devices = a.usize_or("devices", 6);
+    let rps = a.f64_or("rps", 6.0);
+    let duration = a.f64_or("duration", 60.0);
+    let share_prob = a.f64_or("share-prob", 0.95);
+    let n_templates = a.usize_or("templates", 40);
+    let model = a.str_or("model", "llama-13b").to_string();
+    Ok(ScenarioPlan {
+        banner: format!(
+            "tiered-store: {devices} devices, {rps} rps, {duration}s long-context trace, \
+             {n_templates} templates (share_prob {share_prob}); DRAM {DRAM_TOKENS} + SSD \
+             {SSD_TOKENS} tokens vs flat"
+        ),
+        engines: vec![EngineKind::BanaServe],
+        // identical workload and fleet; only the store shape differs
+        variants: vec![
+            Variant { label: "tiered", devices, elastic: false },
+            Variant { label: "flat-small", devices, elastic: false },
+            Variant { label: "flat-large", devices, elastic: false },
+        ],
+        params: vec![
+            ("devices", json::num(devices as f64)),
+            ("rps", json::num(rps)),
+            ("share_prob", json::num(share_prob)),
+            ("n_templates", json::num(n_templates as f64)),
+            ("dram_tokens", json::num(DRAM_TOKENS as f64)),
+            ("ssd_tokens", json::num(SSD_TOKENS as f64)),
+            ("dram_rate", json::num(DRAM_RATE)),
+            ("ssd_rate", json::num(SSD_RATE)),
+        ],
+        make_cfg: Box::new(move |engine, v, seed| {
+            let mut c = ExperimentConfig::default_for(engine, &model, rps, seed);
+            c.n_devices = v.devices;
+            c.n_prefill = (v.devices / 2).max(1);
+            c.warmup = 0.0;
+            c.workload.profile = LengthProfile::LongBench;
+            c.workload.duration = duration;
+            c.workload.seed = seed;
+            c.workload.arrivals = ArrivalProcess::Poisson { rps };
+            // a broad, mildly skewed template pool with deep shared
+            // prefixes: the working set cycles through DRAM, so what
+            // happens to the demoted tail IS the experiment
+            c.workload.prefix.share_prob = share_prob;
+            c.workload.prefix.n_templates = n_templates;
+            c.workload.prefix.zipf_s = 0.7;
+            c.workload.prefix.shared_frac = (0.85, 1.0);
+            c.bana.store_cpu_tokens = match v.label {
+                "flat-large" => DRAM_TOKENS + SSD_TOKENS,
+                _ => DRAM_TOKENS,
+            };
+            c.bana.store_ssd_tokens = if v.label == "tiered" { SSD_TOKENS } else { 0 };
+            c
+        }),
+        row_extra: None,
+        gate,
+    })
+}
+
+/// Provisioned-store cost of a variant over `makespan` seconds, from the
+/// same constants `make_cfg` shapes the stores with.
+fn store_cost(label: &str, makespan: f64) -> f64 {
+    let (dram, ssd) = match label {
+        "tiered" => (DRAM_TOKENS, SSD_TOKENS),
+        "flat-large" => (DRAM_TOKENS + SSD_TOKENS, 0),
+        _ => (DRAM_TOKENS, 0),
+    };
+    (dram as f64 * DRAM_RATE + ssd as f64 * SSD_RATE) * makespan
+}
+
+/// Gate: the tiered store must beat the recompute-bound flat store of the
+/// same DRAM size on raw P99 TTFT, AND beat the memory-rich flat store on
+/// cost-weighted P99 TTFT (P99 x total provisioned cost) — i.e. SSD hits
+/// are worth caching, and the last word in latency is not worth 12x the
+/// byte rate.
+fn gate(aggs: &[EngineAgg]) -> i32 {
+    let Some(b) = aggs.iter().find(|x| x.engine == EngineKind::BanaServe) else {
+        return 2;
+    };
+    let (Some(t), Some(fs), Some(fl)) = (
+        b.variant("tiered"),
+        b.variant("flat-small"),
+        b.variant("flat-large"),
+    ) else {
+        return 2;
+    };
+    let (tp, sp, lp) = (
+        t.mean("p99_ttft_s"),
+        fs.mean("p99_ttft_s"),
+        fl.mean("p99_ttft_s"),
+    );
+    let cost = |v: &super::VariantAgg, label: &str| {
+        v.mean("device_cost") + store_cost(label, v.mean("makespan_s"))
+    };
+    let (tc, lc) = (cost(t, "tiered"), cost(fl, "flat-large"));
+    let latency_win = tp < sp;
+    let cost_win = tp * tc < lp * lc;
+    println!(
+        "  -> p99 ttft: tiered {tp:.2}s vs flat-small {sp:.2}s ({})",
+        if latency_win {
+            "cold hits beat recompute"
+        } else {
+            "NO tiering advantage over recompute"
+        }
+    );
+    println!(
+        "  -> cost-weighted p99: tiered {:.2} (cost {tc:.1}) vs flat-large {:.2} \
+         (p99 {lp:.2}s, cost {lc:.1}) ({})",
+        tp * tc,
+        lp * lc,
+        if cost_win {
+            "SSD capacity is the cheaper latency"
+        } else {
+            "NO cost advantage over all-DRAM"
+        }
+    );
+    i32::from(!(latency_win && cost_win))
+}

@@ -289,6 +289,45 @@ mod tests {
         assert!(counts[0] > 10 * counts[50].max(1));
     }
 
+    /// Property: the sampler's clamp (`Err(i) => i.min(n - 1)`) keeps every
+    /// sample strictly inside [0, n) for any skew, including the degenerate
+    /// n = 1 and s = 0 cases where float round-off can push the normalized
+    /// CDF's last entry below 1.0 and `binary_search` returns `Err(n)`.
+    #[test]
+    fn zipf_samples_always_in_range() {
+        for &n in &[1usize, 2, 3, 17, 100] {
+            for &s in &[0.0f64, 0.5, 1.0, 1.1, 2.5] {
+                let z = Zipf::new(n, s);
+                let mut r = Rng::new((n as u64) << 8 | (s * 10.0) as u64);
+                for _ in 0..20_000 {
+                    let k = z.sample(&mut r);
+                    assert!(k < n, "n={n} s={s} sample={k}");
+                }
+            }
+        }
+    }
+
+    /// Property: s = 0 degenerates Zipf to the uniform distribution over
+    /// ranks, so observed frequencies must be flat within sampling noise.
+    #[test]
+    fn zipf_s_zero_is_uniform() {
+        let n = 8;
+        let z = Zipf::new(n, 0.0);
+        let mut r = Rng::new(41);
+        let trials = 80_000u32;
+        let mut counts = vec![0u32; n];
+        for _ in 0..trials {
+            counts[z.sample(&mut r)] += 1;
+        }
+        let expect = trials / n as u32; // 10_000 per rank
+        for (k, c) in counts.iter().enumerate() {
+            assert!(
+                (expect * 9 / 10..=expect * 11 / 10).contains(c),
+                "rank {k}: count={c} expected ~{expect}"
+            );
+        }
+    }
+
     #[test]
     fn shuffle_is_permutation() {
         let mut r = Rng::new(31);

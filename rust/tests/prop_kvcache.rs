@@ -191,7 +191,7 @@ fn radix_stress_invariants_under_churn() {
         let vocab = g.rng.range(2, 12);
         let ops = g.usize_in(100, 400);
         for _ in 0..ops {
-            match g.usize_in(0, 3) {
+            match g.usize_in(0, 5) {
                 0 | 1 => {
                     let s = g.tokens(24, vocab);
                     if !s.is_empty() {
@@ -202,13 +202,34 @@ fn radix_stress_invariants_under_churn() {
                     let q = g.tokens(24, vocab);
                     t.match_prefix(&q);
                 }
-                _ => {
+                3 => {
                     let budget = g.rng.range(0, t.token_count().max(1));
                     t.evict_to(budget);
                     prop_assert!(
                         t.token_count() <= budget,
                         "over budget: {} > {budget}",
                         t.token_count()
+                    );
+                }
+                4 => {
+                    // tier demotion: hot mass moves to SSD, nothing is lost
+                    let before = t.token_count();
+                    let hot_budget = g.rng.range(0, t.hot_tokens().max(1));
+                    t.demote_to(hot_budget);
+                    prop_assert!(
+                        t.token_count() == before,
+                        "demotion changed residency: {} -> {}",
+                        before,
+                        t.token_count()
+                    );
+                }
+                _ => {
+                    let cold_budget = g.rng.range(0, t.cold_tokens().max(1));
+                    t.evict_cold_to(cold_budget);
+                    prop_assert!(
+                        t.cold_tokens() <= cold_budget,
+                        "cold tier over budget: {} > {cold_budget}",
+                        t.cold_tokens()
                     );
                 }
             }
@@ -305,6 +326,56 @@ fn store_capacity_is_always_respected() {
             prop_assert!(
                 s.token_count() <= cap_cpu + cap_ssd,
                 "store over capacity: {} > {}",
+                s.token_count(),
+                cap_cpu + cap_ssd
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn store_tier_residency_is_conserved_under_churn() {
+    // hot + cold must always equal the tree's total token count, the total
+    // must respect cpu+ssd capacity, and every lookup's hot/cold split must
+    // sum to its hit count — across random interleavings of insert/lookup
+    // with small random tier budgets that force demotion and cold eviction.
+    check("store tier conservation", 30, |g| {
+        let cap_cpu = g.rng.range(40, 200);
+        let cap_ssd = g.rng.range(0, 300);
+        let mut s = GlobalKvStore::new(StoreConfig {
+            cpu_capacity_tokens: cap_cpu,
+            ssd_capacity_tokens: cap_ssd,
+            ..Default::default()
+        });
+        let vocab = g.rng.range(2, 10);
+        for _ in 0..g.usize_in(10, 80) {
+            let toks = g.tokens(90, vocab);
+            if toks.is_empty() {
+                continue;
+            }
+            if g.rng.chance(0.5) {
+                s.insert(&toks);
+            } else {
+                let plan = s.lookup(&toks, &LLAMA31_8B, 4e-3);
+                prop_assert!(
+                    plan.hot_tokens + plan.cold_tokens == plan.hit_tokens,
+                    "tier split {} + {} != hit {}",
+                    plan.hot_tokens,
+                    plan.cold_tokens,
+                    plan.hit_tokens
+                );
+            }
+            prop_assert!(
+                s.hot_token_count() + s.cold_token_count() == s.token_count(),
+                "residency leak: hot {} + cold {} != total {}",
+                s.hot_token_count(),
+                s.cold_token_count(),
+                s.token_count()
+            );
+            prop_assert!(
+                s.token_count() <= cap_cpu + cap_ssd,
+                "store over total capacity: {} > {}",
                 s.token_count(),
                 cap_cpu + cap_ssd
             );

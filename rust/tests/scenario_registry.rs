@@ -115,6 +115,35 @@ fn fault_recovery_grid_crashes_all_four_engines_identically() {
 }
 
 #[test]
+fn tiered_store_grid_isolates_the_store_shape() {
+    // three BanaServe-only variants over the SAME workload; only the
+    // store's tier budgets differ, and the flat variants really are flat
+    // (zero SSD capacity -> no demotion path at all)
+    let spec = scenario::by_name("tiered-store").unwrap();
+    let plan = (spec.build)(&tiny_args("unused")).unwrap();
+    let engines: Vec<&str> = plan.engines.iter().map(|e| e.name()).collect();
+    assert_eq!(engines, vec!["banaserve"]);
+    let labels: Vec<&str> = plan.variants.iter().map(|v| v.label).collect();
+    assert_eq!(labels, vec!["tiered", "flat-small", "flat-large"]);
+    let cfg_of = |i: usize| (plan.make_cfg)(plan.engines[0], &plan.variants[i], 13);
+    let (t, fs, fl) = (cfg_of(0), cfg_of(1), cfg_of(2));
+    assert_eq!(t.bana.store_cpu_tokens, fs.bana.store_cpu_tokens);
+    assert!(t.bana.store_ssd_tokens > 0);
+    assert_eq!(fs.bana.store_ssd_tokens, 0);
+    assert_eq!(fl.bana.store_ssd_tokens, 0);
+    assert_eq!(
+        fl.bana.store_cpu_tokens,
+        t.bana.store_cpu_tokens + t.bana.store_ssd_tokens,
+        "flat-large must hold the tiered variant's total capacity in DRAM"
+    );
+    // identical trace across variants: the workload knobs must not depend
+    // on the variant label
+    assert_eq!(t.workload.seed, 13);
+    assert_eq!(t.workload.prefix.share_prob, fs.workload.prefix.share_prob);
+    assert!(t.workload.prefix.n_templates >= 20, "needs a wide working set");
+}
+
+#[test]
 fn cache_skew_grid_covers_both_routers() {
     // the new scenario's grid is (vllm, banaserve) × one static variant —
     // the registry must expose that shape so the CI tiny run exercises
