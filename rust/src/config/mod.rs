@@ -400,6 +400,118 @@ impl RoutingConfig {
     }
 }
 
+/// How the autoscaler uses traffic forecasts (`--forecast-mode`). The
+/// default (`Off`) never constructs a forecaster: the reactive SLO/util
+/// path runs bit-identically to before the forecast subsystem existed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ForecastMode {
+    /// No forecasting; reactive autoscaling only (the historical path).
+    #[default]
+    Off,
+    /// Forecast-driven proactive scaling: scale out ahead of a predicted
+    /// spike, shrink into a predicted trough, size the P/D pools jointly
+    /// from the measured demand ratio.
+    Proactive,
+}
+
+impl ForecastMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" | "reactive" => Some(ForecastMode::Off),
+            "proactive" | "on" | "predictive" => Some(ForecastMode::Proactive),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ForecastMode::Off => "off",
+            ForecastMode::Proactive => "proactive",
+        }
+    }
+}
+
+/// Traffic-forecast knobs (consumed by `forecast::RateForecaster` and the
+/// proactive path of `engines::fleet::Autoscaler`). Off by default so
+/// every existing configuration keeps its reactive decisions bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ForecastConfig {
+    pub mode: ForecastMode,
+    /// Rate-sampling window in seconds (arrivals are counted per window;
+    /// each closed window folds into the EWMA level).
+    pub window: f64,
+    /// EWMA smoothing factor in (0, 1]; higher tracks faster.
+    pub alpha: f64,
+    /// Look-ahead horizon in seconds — roughly the fleet's spin-up time
+    /// (weight transfer + join): the proactive trigger compares capacity
+    /// against the predicted PEAK over this horizon.
+    pub horizon: f64,
+    /// Capacity-headroom fraction: scale out once predicted demand
+    /// exceeds `capacity × headroom` (< 1 acts before saturation).
+    pub headroom: f64,
+    /// Seasonal period T in seconds for the raised-cosine estimator;
+    /// 0 = resolve from the trace (a diurnal trace contributes its day
+    /// length, anything else disables the seasonal term).
+    pub period: f64,
+    /// Warm-start scale-out (BanaServe): prefetch the hottest Global KV
+    /// Store prefixes into a scaled-out device during its spin-up freeze
+    /// so it joins warm instead of cold.
+    pub warm_start: bool,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            mode: ForecastMode::Off,
+            window: 2.0,
+            alpha: 0.4,
+            horizon: 10.0,
+            headroom: 0.75,
+            period: 0.0,
+            warm_start: false,
+        }
+    }
+}
+
+impl ForecastConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mode == ForecastMode::Off {
+            return Ok(());
+        }
+        if !(self.window.is_finite() && self.window > 0.0) {
+            return Err(format!(
+                "forecast-window must be finite and > 0 (got {})",
+                self.window
+            ));
+        }
+        if !(self.alpha.is_finite() && self.alpha > 0.0 && self.alpha <= 1.0) {
+            return Err(format!(
+                "forecast-alpha must be in (0, 1] (got {})",
+                self.alpha
+            ));
+        }
+        if !(self.horizon.is_finite() && self.horizon >= 0.0) {
+            return Err(format!(
+                "forecast-horizon must be finite and >= 0 (got {})",
+                self.horizon
+            ));
+        }
+        if !(self.headroom.is_finite() && self.headroom > 0.0) {
+            return Err(format!(
+                "forecast-headroom must be finite and > 0 (got {})",
+                self.headroom
+            ));
+        }
+        if !(self.period.is_finite() && self.period >= 0.0) {
+            return Err(format!(
+                "forecast-period must be finite and >= 0 (got {})",
+                self.period
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Complete description of one simulation run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -429,6 +541,9 @@ pub struct ExperimentConfig {
     /// Scalable routing (scan/tournament/p2c; Auto = scan at small fleets,
     /// byte-identical to the historical behavior).
     pub routing: RoutingConfig,
+    /// Traffic forecasting + proactive autoscaling (off = reactive only,
+    /// the default).
+    pub forecast: ForecastConfig,
 }
 
 impl ExperimentConfig {
@@ -456,6 +571,7 @@ impl ExperimentConfig {
             autoscale: AutoscaleConfig::default(),
             fault: FaultConfig::default(),
             routing: RoutingConfig::default(),
+            forecast: ForecastConfig::default(),
         }
     }
 
@@ -488,6 +604,35 @@ impl ExperimentConfig {
                 self.bana.store_ssd_bw
             ));
         }
+        if self.workload.tenants.n_tenants == 0 {
+            return Err("tenants must be >= 1".to_string());
+        }
+        if !(self.workload.tenants.zipf_s.is_finite()
+            && self.workload.tenants.zipf_s >= 0.0)
+        {
+            return Err(format!(
+                "tenant-zipf-s must be finite and >= 0 (got {})",
+                self.workload.tenants.zipf_s
+            ));
+        }
+        if let ArrivalProcess::Diurnal {
+            day_night_ratio,
+            day_secs,
+            ..
+        } = self.workload.arrivals
+        {
+            if !(day_night_ratio.is_finite() && day_night_ratio >= 1.0) {
+                return Err(format!(
+                    "diurnal-ratio must be finite and >= 1 (got {day_night_ratio})"
+                ));
+            }
+            if !(day_secs.is_finite() && day_secs > 0.0) {
+                return Err(format!(
+                    "diurnal-day-secs must be finite and > 0 (got {day_secs})"
+                ));
+            }
+        }
+        self.forecast.validate()?;
         Ok(())
     }
 
@@ -643,21 +788,49 @@ impl ExperimentConfig {
             self.routing.scan_threshold = t;
         }
         if let Some(n) = a.get("tenants").and_then(|v| v.parse::<usize>().ok()) {
-            self.workload.tenants.n_tenants = n.max(1);
+            self.workload.tenants.n_tenants = n;
         }
         if let Some(z) = a.get("tenant-zipf-s").and_then(|v| v.parse::<f64>().ok()) {
             self.workload.tenants.zipf_s = z;
         }
         // --diurnal-ratio converts the current arrival rate (its peak) into
-        // the day/night envelope; keep this after --rps so the two compose
+        // the day/night envelope; keep this after --rps so the two compose.
+        // Values are stored RAW (same burst defaults as
+        // ArrivalProcess::diurnal, no clamps) so validate() can hard-reject
+        // degenerates instead of silently repairing them.
         if let Some(r) = a.get("diurnal-ratio").and_then(|v| v.parse::<f64>().ok()) {
             let day = a
                 .get("diurnal-day-secs")
                 .and_then(|v| v.parse::<f64>().ok())
                 .unwrap_or(60.0);
-            self.workload.arrivals =
-                ArrivalProcess::diurnal(self.workload.arrivals.peak(), r, day);
+            self.workload.arrivals = ArrivalProcess::Diurnal {
+                rps_peak: self.workload.arrivals.peak(),
+                day_night_ratio: r,
+                day_secs: day,
+                burst_factor: 1.5,
+                burst_secs: day / 20.0,
+                burst_period: day / 4.0,
+            };
         }
+        if let Some(m) = a.get("forecast-mode").and_then(ForecastMode::parse) {
+            self.forecast.mode = m;
+        }
+        if let Some(x) = a.get("forecast-window").and_then(|v| v.parse::<f64>().ok()) {
+            self.forecast.window = x;
+        }
+        if let Some(x) = a.get("forecast-alpha").and_then(|v| v.parse::<f64>().ok()) {
+            self.forecast.alpha = x;
+        }
+        if let Some(x) = a.get("forecast-horizon").and_then(|v| v.parse::<f64>().ok()) {
+            self.forecast.horizon = x;
+        }
+        if let Some(x) = a.get("forecast-headroom").and_then(|v| v.parse::<f64>().ok()) {
+            self.forecast.headroom = x;
+        }
+        if let Some(x) = a.get("forecast-period").and_then(|v| v.parse::<f64>().ok()) {
+            self.forecast.period = x;
+        }
+        self.forecast.warm_start = a.bool_or("warm-start", self.forecast.warm_start);
         if let Some(name) = a.get("gpu") {
             match crate::cluster::gpu_by_name(name) {
                 Some(g) => self.gpu = g,
@@ -790,13 +963,31 @@ impl ExperimentConfig {
                     self.routing.scan_threshold = *n as usize;
                 }
                 ("tenants", Value::Num(n)) => {
-                    self.workload.tenants.n_tenants = (*n as usize).max(1);
+                    self.workload.tenants.n_tenants = *n as usize;
                 }
                 ("tenant_zipf_s", Value::Num(n)) => self.workload.tenants.zipf_s = *n,
                 ("diurnal_ratio", Value::Num(n)) => {
-                    self.workload.arrivals =
-                        ArrivalProcess::diurnal(self.workload.arrivals.peak(), *n, 60.0);
+                    // raw storage (validate() rejects degenerates); 60 s
+                    // day with the standard burst shape, as before
+                    self.workload.arrivals = ArrivalProcess::Diurnal {
+                        rps_peak: self.workload.arrivals.peak(),
+                        day_night_ratio: *n,
+                        day_secs: 60.0,
+                        burst_factor: 1.5,
+                        burst_secs: 60.0 / 20.0,
+                        burst_period: 60.0 / 4.0,
+                    };
                 }
+                ("forecast_mode", Value::Str(s)) => {
+                    self.forecast.mode =
+                        ForecastMode::parse(s).ok_or(format!("bad forecast_mode {s}"))?;
+                }
+                ("forecast_window", Value::Num(n)) => self.forecast.window = *n,
+                ("forecast_alpha", Value::Num(n)) => self.forecast.alpha = *n,
+                ("forecast_horizon", Value::Num(n)) => self.forecast.horizon = *n,
+                ("forecast_headroom", Value::Num(n)) => self.forecast.headroom = *n,
+                ("forecast_period", Value::Num(n)) => self.forecast.period = *n,
+                ("warm_start", Value::Bool(b)) => self.forecast.warm_start = *b,
                 ("gpu", Value::Str(s)) => {
                     self.gpu =
                         crate::cluster::gpu_by_name(s).ok_or(format!("bad gpu {s}"))?;
@@ -1169,6 +1360,126 @@ mod tests {
             }
             _ => panic!("expected diurnal arrivals"),
         }
+    }
+
+    #[test]
+    fn forecast_knobs_default_off_and_parse_from_cli_and_json() {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        assert_eq!(c.forecast.mode, ForecastMode::Off, "forecasting must default off");
+        assert!(!c.forecast.warm_start, "warm-start must default off");
+        assert!(c.validate().is_ok());
+        let a = Args::parse(
+            "--forecast-mode proactive --forecast-window 3 --forecast-alpha 0.5 \
+             --forecast-horizon 12 --forecast-headroom 0.8 --forecast-period 90 \
+             --warm-start true"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a);
+        assert_eq!(c.forecast.mode, ForecastMode::Proactive);
+        assert_eq!(c.forecast.window, 3.0);
+        assert_eq!(c.forecast.alpha, 0.5);
+        assert_eq!(c.forecast.horizon, 12.0);
+        assert_eq!(c.forecast.headroom, 0.8);
+        assert_eq!(c.forecast.period, 90.0);
+        assert!(c.forecast.warm_start);
+        assert!(c.validate().is_ok());
+
+        let mut j = ExperimentConfig::default_for(EngineKind::DistServe, "llama-13b", 5.0, 1);
+        j.apply_json(
+            r#"{"forecast_mode":"proactive","forecast_window":4,
+                "forecast_alpha":0.25,"forecast_horizon":8,
+                "forecast_headroom":0.7,"forecast_period":120,
+                "warm_start":true}"#,
+        )
+        .unwrap();
+        assert_eq!(j.forecast.mode, ForecastMode::Proactive);
+        assert_eq!(j.forecast.window, 4.0);
+        assert_eq!(j.forecast.alpha, 0.25);
+        assert_eq!(j.forecast.period, 120.0);
+        assert!(j.forecast.warm_start);
+        assert!(j.apply_json(r#"{"forecast_mode":"bogus"}"#).is_err());
+        assert_eq!(ForecastMode::parse("predictive"), Some(ForecastMode::Proactive));
+        assert_eq!(ForecastMode::parse("reactive"), Some(ForecastMode::Off));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_forecast_knobs() {
+        let mut c = ExperimentConfig::default_for(EngineKind::BanaServe, "llama-13b", 5.0, 1);
+        c.forecast.window = 0.0;
+        assert!(c.validate().is_ok(), "forecast-off skips forecast validation");
+        c.forecast.mode = ForecastMode::Proactive;
+        assert!(c.validate().unwrap_err().contains("forecast-window"));
+        c.forecast.window = 2.0;
+        c.forecast.alpha = 0.0;
+        assert!(c.validate().unwrap_err().contains("forecast-alpha"));
+        c.forecast.alpha = 1.5;
+        assert!(c.validate().unwrap_err().contains("forecast-alpha"));
+        c.forecast.alpha = 0.4;
+        c.forecast.horizon = f64::NAN;
+        assert!(c.validate().unwrap_err().contains("forecast-horizon"));
+        c.forecast.horizon = 10.0;
+        c.forecast.headroom = -0.5;
+        assert!(c.validate().unwrap_err().contains("forecast-headroom"));
+        c.forecast.headroom = 0.75;
+        c.forecast.period = -1.0;
+        assert!(c.validate().unwrap_err().contains("forecast-period"));
+        c.forecast.period = 0.0;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_workload_knobs() {
+        // --tenants 0 is no longer silently clamped: it parses raw and
+        // validate() hard-rejects it (main.rs exits 2)
+        let mut c = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        let a = Args::parse("--tenants 0".split_whitespace().map(String::from));
+        c.apply_args(&a);
+        assert_eq!(c.workload.tenants.n_tenants, 0, "stored raw, not clamped");
+        assert!(c.validate().unwrap_err().contains("tenants"));
+        c.workload.tenants.n_tenants = 4;
+        c.workload.tenants.zipf_s = -0.5;
+        assert!(c.validate().unwrap_err().contains("tenant-zipf-s"));
+        c.workload.tenants.zipf_s = f64::NAN;
+        assert!(c.validate().unwrap_err().contains("tenant-zipf-s"));
+        c.workload.tenants.zipf_s = 1.0;
+        assert!(c.validate().is_ok());
+
+        // degenerate diurnal shapes are rejected instead of clamped
+        let b = Args::parse(
+            "--diurnal-ratio 0.5 --diurnal-day-secs 30"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&b);
+        assert!(c.validate().unwrap_err().contains("diurnal-ratio"));
+        let d = Args::parse(
+            "--diurnal-ratio 4 --diurnal-day-secs 0"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&d);
+        assert!(c.validate().unwrap_err().contains("diurnal-day-secs"));
+        let ok = Args::parse(
+            "--diurnal-ratio 4 --diurnal-day-secs 30"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&ok);
+        assert!(c.validate().is_ok());
+        // valid inputs keep the exact historical burst defaults
+        match c.workload.arrivals {
+            ArrivalProcess::Diurnal { burst_factor, burst_secs, burst_period, .. } => {
+                assert_eq!(burst_factor, 1.5);
+                assert_eq!(burst_secs, 1.5);
+                assert_eq!(burst_period, 7.5);
+            }
+            _ => panic!("expected diurnal arrivals"),
+        }
+        // JSON tenants parse raw too
+        let mut j = ExperimentConfig::default_for(EngineKind::Vllm, "llama-13b", 5.0, 1);
+        j.apply_json(r#"{"tenants":0}"#).unwrap();
+        assert!(j.validate().unwrap_err().contains("tenants"));
     }
 
     #[test]

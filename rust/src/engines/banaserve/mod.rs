@@ -166,6 +166,26 @@ pub struct BanaEngine {
     pub drains: u64,
     fault_cfg: FaultConfig,
     faults: FaultTimeline,
+    /// Forecast subsystem; `None` with `--forecast-mode off`, in which
+    /// case no signal ever reaches the autoscaler and the reactive path
+    /// is bit-identical to pre-forecast builds.
+    forecaster: Option<crate::forecast::RateForecaster>,
+    /// Joint P/D demand planner (consulted only in proactive mode).
+    pd: fleet::PdPlanner,
+    /// Warm-start prefetch armed (`--warm-start`; needs the Global Store).
+    warm_start: bool,
+    /// Per scaled-out device: prefix index of what warm-start prefetched
+    /// into it during spin-up — an arrival whose store hit is covered
+    /// here skips the store fetch stall (the KV is already on-device).
+    warm: std::collections::HashMap<usize, crate::kvcache::RadixTree>,
+    pub warm_prefetch_tokens: u64,
+    /// When each device joined via scale-out (None = initial fleet);
+    /// drives the post-scale-out TTFT watch window
+    /// ([`fleet::SCALEOUT_WATCH_SECS`]).
+    joined_at: Vec<Option<f64>>,
+    /// (Σ TTFT, n) over requests finishing on a scaled-out device inside
+    /// its watch window.
+    post_scaleout_ttft: (f64, u64),
 }
 
 /// Instantaneous U_d (Eq 32) of one device from its role instances — free
@@ -281,6 +301,24 @@ impl BanaEngine {
                 );
                 plan
             }),
+            forecaster: if crate::forecast::enabled(&cfg.forecast) {
+                Some(crate::forecast::RateForecaster::new(
+                    &cfg.forecast,
+                    crate::forecast::resolve_period(&cfg.forecast, &cfg.workload.arrivals),
+                ))
+            } else {
+                None
+            },
+            pd: fleet::PdPlanner::new(),
+            // warm-start rides proactive mode: with `--forecast-mode off`
+            // the flag is inert so reactive runs stay bit-identical
+            warm_start: cfg.forecast.warm_start
+                && cfg.bana.global_store
+                && crate::forecast::enabled(&cfg.forecast),
+            warm: std::collections::HashMap::new(),
+            warm_prefetch_tokens: 0,
+            joined_at: vec![None; n],
+            post_scaleout_ttft: (0.0, 0),
         }
     }
 
@@ -655,6 +693,12 @@ impl BanaEngine {
         if self.autoscaler.enabled() {
             self.slo.record(now, rec.ttft(), rec.tpot());
         }
+        if let Some(j) = self.joined_at[dev] {
+            if now <= j + fleet::SCALEOUT_WATCH_SECS {
+                self.post_scaleout_ttft.0 += rec.ttft();
+                self.post_scaleout_ttft.1 += 1;
+            }
+        }
         self.col.finish(rec);
         self.inflight -= 1;
         self.seqs.remove(sid);
@@ -685,6 +729,19 @@ impl BanaEngine {
                     .iter()
                     .map(|&sid| &*seqs.seq(sid).req.cache_tokens),
             );
+        }
+        if self.forecaster.is_some() {
+            // P/D demand accounting: prompt tokens actually computed this
+            // step (cached prefixes were fetched, not prefilled)
+            let toks: u64 = step
+                .seqs
+                .iter()
+                .map(|&sid| {
+                    let s = self.seqs.seq(sid);
+                    s.req.prompt_len.saturating_sub(s.cached)
+                })
+                .sum();
+            self.pd.record_prefill(toks);
         }
         for sid in step.seqs {
             let done = {
@@ -760,6 +817,7 @@ impl BanaEngine {
         );
         let mut finished = std::mem::take(&mut self.finished_buf);
         finished.clear();
+        let mut gen_toks = 0u64;
         for &sid in &step.seqs {
             let Some(seq) = self.seqs.get_mut(sid) else { continue };
             if seq.phase != SeqPhase::Decoding || seq.instance != i {
@@ -767,6 +825,7 @@ impl BanaEngine {
             }
             seq.generated += 1;
             seq.ctx += 1;
+            gen_toks += 1;
             let new_kv = common::kv_bytes(self.spec, seq.ctx);
             if new_kv > seq.kv_on_device {
                 let delta = new_kv - seq.kv_on_device;
@@ -776,6 +835,9 @@ impl BanaEngine {
             if seq.is_done() {
                 finished.push(sid);
             }
+        }
+        if self.forecaster.is_some() {
+            self.pd.record_decode(gen_toks);
         }
         for &sid in &finished {
             if let Some(p) = self.dinsts[i].running.iter().position(|&x| x == sid) {
@@ -1317,6 +1379,9 @@ impl BanaEngine {
         match tx {
             BanaTx::SpinUp(s) => {
                 self.thaw(s.inst, now);
+                if self.joined_at[s.inst].is_none() {
+                    self.joined_at[s.inst] = Some(now);
+                }
                 self.maybe_start_prefill(s.inst, q);
                 self.try_admit_global(q);
                 self.maybe_start_decode(s.inst, q);
@@ -1381,6 +1446,9 @@ impl BanaEngine {
                     // draining the last prefill/decode-capable device
                     // would wedge the fleet; treat the weights as having
                     // landed late instead
+                    if self.joined_at[s.inst].is_none() {
+                        self.joined_at[s.inst] = Some(now);
+                    }
                     self.maybe_start_prefill(s.inst, q);
                     self.try_admit_global(q);
                     self.maybe_start_decode(s.inst, q);
@@ -1627,9 +1695,25 @@ impl BanaEngine {
             p99_ttft: self.slo.p99_ttft(now),
             p99_tpot: self.slo.p99_tpot(now),
         };
+        // proactive mode: close the forecast + P/D demand windows and hand
+        // the autoscaler the predicted rate (None keeps `decide` verbatim)
+        let signal = match self.forecaster.as_mut() {
+            Some(f) => {
+                let s = f.signal(now);
+                self.pd.roll();
+                Some(s)
+            }
+            None => None,
+        };
         // store-staged sequences awaiting decode admission are engine-wide
         // backlog no single device owns
-        let decision = self.autoscaler.decide(now, &active, self.pending_decode.len(), view);
+        let decision = self.autoscaler.decide_proactive(
+            now,
+            &active,
+            self.pending_decode.len(),
+            view,
+            signal,
+        );
         self.fleet_loads_buf = active;
         match decision {
             fleet::ScaleDecision::Out => {
@@ -1654,9 +1738,46 @@ impl BanaEngine {
         let mut dev = Device::new(id, spec, Role::Decode);
         dev.weight_bytes = self.spec.weight_bytes();
         dev.touch_mem(now);
+        // coordinated P/D sizing: in proactive mode the hybrid device
+        // starts at the MEASURED prefill share instead of the fixed ½
+        // split (clamped so neither role starts starved)
+        let share = if self.forecaster.is_some() {
+            self.pd
+                .prefill_share()
+                .map(|s| s.clamp(0.1, 0.9))
+                .unwrap_or(0.5)
+        } else {
+            0.5
+        };
+        let mut t_up = self.link.transfer_time(self.spec.weight_bytes());
+        if self.warm_start {
+            // warm-start: prefetch the hottest store prefixes into the new
+            // device during its spin-up freeze. Budget = a quarter of the
+            // post-weight KV capacity (warm KV is droppable cache and must
+            // not crowd out serving); the stream has no forward pass to
+            // hide behind, so a prefetch outlasting the weight transfer
+            // extends the freeze.
+            let budget = dev
+                .spec
+                .hbm_bytes
+                .saturating_sub(self.spec.weight_bytes())
+                / self.spec.kv_bytes_per_token().max(1)
+                / 4;
+            let prefixes = self.store.hottest_prefixes(budget);
+            let total: u64 = prefixes.iter().map(|(_, n)| n).sum();
+            if total > 0 {
+                let tree = self
+                    .warm
+                    .entry(id)
+                    .or_insert_with(crate::kvcache::RadixTree::new);
+                for (p, _) in &prefixes {
+                    tree.insert(p);
+                }
+                self.warm_prefetch_tokens += total;
+                t_up = t_up.max(self.store.prefetch_time(total, self.spec));
+            }
+        }
         self.devices.push(dev);
-        let share = 0.5;
-        let t_up = self.link.transfer_time(self.spec.weight_bytes());
         let plane = self.fault_cfg.transfer_plane();
         let mut p = InstanceSim::new(id, share);
         let mut d = InstanceSim::new(id, 1.0 - share);
@@ -1676,6 +1797,8 @@ impl BanaEngine {
         self.routed_counts.push(0);
         self.last_busy.push((0.0, 0.0));
         self.linkh.push(LinkHealth::default());
+        // plane mode learns the true join time when the SpinUp resolves
+        self.joined_at.push(if plane { None } else { Some(now + t_up) });
         self.scale_outs += 1;
         self.fleet.sample(now, &self.devices);
         if plane {
@@ -1952,6 +2075,15 @@ impl crate::engines::EngineHarness for BanaEngine {
         let (hot, cold) = self.store.tier_tokens_served();
         extras.store_hot_tokens = hot;
         extras.store_cold_tokens = cold;
+        extras.warm_prefetch_tokens = self.warm_prefetch_tokens;
+        if self.post_scaleout_ttft.1 > 0 {
+            extras.ttft_after_scaleout_s =
+                self.post_scaleout_ttft.0 / self.post_scaleout_ttft.1 as f64;
+        }
+        if let Some(f) = &self.forecaster {
+            extras.forecast_series = f.forecast_series().to_vec();
+            extras.actual_rate_series = f.actual_series().to_vec();
+        }
     }
 
     fn fleet_series(&self) -> &fleet::FleetSeries {
@@ -1969,11 +2101,15 @@ impl crate::engines::EngineHarness for BanaEngine {
 
 impl Engine for BanaEngine {
     fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+        let now = q.now();
+        if let Some(f) = self.forecaster.as_mut() {
+            // every offered arrival counts toward the rate estimate,
+            // including ones admission drops — demand is demand
+            f.observe(now);
+        }
         if !fleet::admit_or_drop(self.spec, &self.devices[0].spec, &req, &mut self.col) {
-            let _ = q;
             return;
         }
-        let now = q.now();
         let mut seq = Seq::new(req);
         if self.use_store {
             // estimate the per-layer forward time for the pipeline check
@@ -1996,6 +2132,15 @@ impl Engine for BanaEngine {
         }
         // Alg 2 dispatch
         let target = self.route_prefill_mut(now).unwrap_or(0);
+        if seq.store_stall > 0.0 {
+            // warm-start: the hit prefix was prefetched into this device
+            // during its spin-up, so the demand fetch is a local read
+            if let Some(w) = self.warm.get(&target) {
+                if w.peek_prefix(&seq.req.cache_tokens) >= seq.cached {
+                    seq.store_stall = 0.0;
+                }
+            }
+        }
         seq.instance = target;
         self.routed_counts[target] += 1;
         let sid = self.seqs.insert(seq);

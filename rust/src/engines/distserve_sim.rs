@@ -106,6 +106,18 @@ pub struct DistServeEngine {
     linkh: Vec<LinkHealth>,
     /// In-flight transfer transactions (empty while the plane is off).
     txs: TxTable<DistTx>,
+    /// Forecast subsystem; `None` with `--forecast-mode off` — the
+    /// reactive path then never sees a signal and stays bit-identical.
+    forecaster: Option<crate::forecast::RateForecaster>,
+    /// Joint P/D planner: in proactive mode it overrides the hotter-pool
+    /// role choice on scale-out with the measured token-mix target.
+    pd: fleet::PdPlanner,
+    /// When each device joined via scale-out (None = initial fleet);
+    /// drives the post-scale-out TTFT watch window.
+    joined_at: Vec<Option<f64>>,
+    /// (Σ TTFT, n) over requests finishing on a scaled-out device inside
+    /// its watch window ([`fleet::SCALEOUT_WATCH_SECS`]).
+    post_scaleout_ttft: (f64, u64),
 }
 
 impl DistServeEngine {
@@ -188,6 +200,17 @@ impl DistServeEngine {
             )),
             linkh: vec![LinkHealth::default(); cfg.n_devices],
             txs: TxTable::default(),
+            forecaster: if crate::forecast::enabled(&cfg.forecast) {
+                Some(crate::forecast::RateForecaster::new(
+                    &cfg.forecast,
+                    crate::forecast::resolve_period(&cfg.forecast, &cfg.workload.arrivals),
+                ))
+            } else {
+                None
+            },
+            pd: fleet::PdPlanner::new(),
+            joined_at: vec![None; cfg.n_devices],
+            post_scaleout_ttft: (0.0, 0),
         }
     }
 
@@ -500,6 +523,12 @@ impl DistServeEngine {
         if self.autoscaler.enabled() {
             self.slo.record(now, rec.ttft(), rec.tpot());
         }
+        if let Some(j) = self.joined_at[pool_dev] {
+            if now <= j + fleet::SCALEOUT_WATCH_SECS {
+                self.post_scaleout_ttft.0 += rec.ttft();
+                self.post_scaleout_ttft.1 += 1;
+            }
+        }
         self.col.finish(rec);
         self.inflight -= 1;
         self.seqs.remove(sid);
@@ -519,6 +548,15 @@ impl DistServeEngine {
             step.st.time + step.overhead,
             &step.st,
         );
+        if self.forecaster.is_some() {
+            // DistServe has no prefix cache: every prompt token is prefilled
+            let toks: u64 = step
+                .seqs
+                .iter()
+                .map(|&sid| self.seqs.seq(sid).req.prompt_len)
+                .sum();
+            self.pd.record_prefill(toks);
+        }
         for sid in step.seqs {
             let done = {
                 let seq = self.seqs.seq_mut(sid);
@@ -582,6 +620,7 @@ impl DistServeEngine {
         );
         let mut finished = std::mem::take(&mut self.finished_buf);
         finished.clear();
+        let mut gen_toks = 0u64;
         for &sid in &step.seqs {
             let Some(seq) = self.seqs.get_mut(sid) else {
                 continue;
@@ -591,6 +630,7 @@ impl DistServeEngine {
             }
             seq.generated += 1;
             seq.ctx += 1;
+            gen_toks += 1;
             let new_kv = common::kv_bytes(self.spec, seq.ctx);
             if new_kv > seq.kv_on_device {
                 let delta = new_kv - seq.kv_on_device;
@@ -600,6 +640,9 @@ impl DistServeEngine {
             if seq.is_done() {
                 finished.push(sid);
             }
+        }
+        if self.forecaster.is_some() {
+            self.pd.record_decode(gen_toks);
         }
         for &sid in &finished {
             if let Some(p) = self.decode[di].running.iter().position(|&x| x == sid) {
@@ -775,6 +818,10 @@ impl DistServeEngine {
         let now = q.now();
         match self.txs.remove(id).expect("live tx") {
             DistTx::SpinUp(s) => {
+                // transfer-plane mode: the true join time is only known now
+                if self.joined_at[s.inst].is_none() {
+                    self.joined_at[s.inst] = Some(now);
+                }
                 let slot = self.slot_of_dev[s.inst];
                 match self.devices[s.inst].role {
                     Role::Prefill => {
@@ -875,6 +922,9 @@ impl DistServeEngine {
                 } else {
                     // last active device of its pool: keep it (treat the
                     // late weight arrival as done) rather than strand work
+                    if self.joined_at[dev].is_none() {
+                        self.joined_at[dev] = Some(now);
+                    }
                     match self.devices[dev].role {
                         Role::Prefill => self.maybe_start_prefill(slot, q),
                         _ => {
@@ -1061,7 +1111,15 @@ impl DistServeEngine {
             p99_ttft: self.slo.p99_ttft(now),
             p99_tpot: self.slo.p99_tpot(now),
         };
-        let decision = self.autoscaler.decide(now, &active, 0, view);
+        let signal = match self.forecaster.as_mut() {
+            Some(f) => {
+                let s = f.signal(now);
+                self.pd.roll();
+                Some(s)
+            }
+            None => None,
+        };
+        let decision = self.autoscaler.decide_proactive(now, &active, 0, view, signal);
         self.fleet_loads_buf = active;
         match decision {
             fleet::ScaleDecision::Out => {
@@ -1112,13 +1170,30 @@ impl DistServeEngine {
     fn scale_out(&mut self, slo_gap: f64, q: &mut EventQueue) {
         let now = q.now();
         let period = (now - self.as_last_eval).max(1e-9);
-        let role = if self.mean_busy_of_role(Role::Prefill, period)
+        let mut role = if self.mean_busy_of_role(Role::Prefill, period)
             >= self.mean_busy_of_role(Role::Decode, period)
         {
             Role::Prefill
         } else {
             Role::Decode
         };
+        // coordinated P/D sizing: in proactive mode the measured token mix
+        // overrides the hotter-pool heuristic (falls through uncalibrated)
+        if self.forecaster.is_some() {
+            let np = self
+                .devices
+                .iter()
+                .filter(|d| d.is_active() && d.role == Role::Prefill)
+                .count();
+            let nd = self
+                .devices
+                .iter()
+                .filter(|d| d.is_active() && d.role == Role::Decode)
+                .count();
+            if let Some(to_prefill) = self.pd.scale_out_to_prefill(np, nd) {
+                role = if to_prefill { Role::Prefill } else { Role::Decode };
+            }
+        }
         let spec = fleet::pick_scale_out_spec(&self.catalog, slo_gap)
             .cloned()
             .unwrap_or_else(|| self.gpu.clone());
@@ -1130,6 +1205,9 @@ impl DistServeEngine {
         self.as_last_busy.push(0.0);
         // spin-up: the new replica serves only after its weights transfer
         let t_up = self.link.transfer_time(self.spec.weight_bytes());
+        // plane mode learns the real join time at SpinUp resolution
+        self.joined_at
+            .push(if self.fault_cfg.transfer_plane() { None } else { Some(now + t_up) });
         let mut inst = InstanceSim::new(id, 1.0);
         let plane = self.fault_cfg.transfer_plane();
         if plane {
@@ -1255,6 +1333,14 @@ impl super::EngineHarness for DistServeEngine {
         extras.routed_counts = self.routed_counts.clone();
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
+        if self.post_scaleout_ttft.1 > 0 {
+            extras.ttft_after_scaleout_s =
+                self.post_scaleout_ttft.0 / self.post_scaleout_ttft.1 as f64;
+        }
+        if let Some(f) = &self.forecaster {
+            extras.forecast_series = f.forecast_series().to_vec();
+            extras.actual_rate_series = f.actual_series().to_vec();
+        }
         self.faults.stats.fill_extras(extras);
     }
 
@@ -1273,11 +1359,16 @@ impl super::EngineHarness for DistServeEngine {
 
 impl Engine for DistServeEngine {
     fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+        let now = q.now();
+        // every offered arrival counts toward the rate estimate, including
+        // ones admission drops — demand is demand
+        if let Some(f) = self.forecaster.as_mut() {
+            f.observe(now);
+        }
         if !fleet::admit_or_drop(self.spec, &self.devices[0].spec, &req, &mut self.col) {
-            let _ = q;
             return;
         }
-        let pi = self.route_prefill(q.now());
+        let pi = self.route_prefill(now);
         self.routed_counts[pi] += 1;
         let mut seq = Seq::new(req);
         seq.instance = self.prefill[pi].device;

@@ -28,6 +28,7 @@
 use super::common::{self, tags, Seq};
 use crate::cluster::{Device, GpuSpec};
 use crate::config::AutoscaleConfig;
+use crate::forecast::ForecastSignal;
 use crate::metrics::{Collector, TimeSeries};
 use crate::model::ModelSpec;
 use crate::sim::Timer;
@@ -1049,6 +1050,12 @@ pub struct FleetLoad {
     pub cost: f64,
 }
 
+/// How long a freshly scaled-out device stays "under watch" for the
+/// post-scale-out TTFT report ([`crate::engines::EngineExtras::ttft_after_scaleout_s`]):
+/// requests finishing on the device within this many seconds of it joining
+/// the fleet contribute — the window where a cold KV cache hurts most.
+pub const SCALEOUT_WATCH_SECS: f64 = 30.0;
+
 /// What the autoscaler wants done this window.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScaleDecision {
@@ -1095,6 +1102,12 @@ impl SloView {
 pub struct Autoscaler {
     pub cfg: AutoscaleConfig,
     cooldown_until: f64,
+    /// Calibrated per-device service rate (req/s at full busy), learned
+    /// online from busy windows. Only the proactive path
+    /// ([`Autoscaler::decide_proactive`]) reads or writes it; the reactive
+    /// [`Autoscaler::decide`] never touches it, so forecast-off runs stay
+    /// bit-identical.
+    rate_per_device: Option<f64>,
 }
 
 impl Autoscaler {
@@ -1102,6 +1115,7 @@ impl Autoscaler {
         Autoscaler {
             cfg,
             cooldown_until: 0.0,
+            rate_per_device: None,
         }
     }
 
@@ -1193,23 +1207,198 @@ impl Autoscaler {
             // (with mixed specs the 80G should go before a 40G), ties
             // broken by load exactly as before — so a homogeneous fleet
             // drains its least-loaded device, bit-identically to PR 2
-            let victim = active
-                .iter()
-                .filter(|l| l.drainable)
-                .min_by(|a, b| {
-                    b.cost
-                        .total_cmp(&a.cost)
-                        .then(a.busy.total_cmp(&b.busy))
-                        .then(a.resident.cmp(&b.resident))
-                        .then(a.idx.cmp(&b.idx))
-                })
-                .map(|l| l.idx);
-            if let Some(victim) = victim {
+            if let Some(victim) = drain_victim(active) {
                 self.cooldown_until = now + self.cfg.cooldown;
                 return ScaleDecision::In { victim };
             }
         }
         ScaleDecision::Hold
+    }
+
+    /// The forecast-driven decision (`--forecast-mode proactive`). With no
+    /// signal (forecaster still warming up, or the engine runs forecast-off)
+    /// this delegates to [`Autoscaler::decide`] verbatim — same state, same
+    /// cooldown, bit-identical decisions.
+    ///
+    /// With a signal, the decision order is:
+    ///
+    /// 1. **Calibrate**: whenever the fleet is measurably busy, fold the
+    ///    observed `arrival rate / (busy × n)` into a per-device service
+    ///    rate estimate (what one device absorbs at full utilization).
+    /// 2. **Proactive scale-out**: the predicted peak rate over the
+    ///    spin-up horizon exceeds `capacity × headroom` of the CURRENT
+    ///    fleet — add a device before the spike lands, not after the P99
+    ///    burns.
+    /// 3. **Proactive scale-in**: even the predicted peak fits `n − 1`
+    ///    devices inside the headroom with margin to spare (×0.7
+    ///    hysteresis so out/in thresholds never chase each other) and
+    ///    nothing is queued — shrink into the trough.
+    /// 4. **Reactive backstop**: a live P99 breach or queue edge still
+    ///    scales out through the reactive path (the forecaster can be
+    ///    wrong); reactive DRAIN is suppressed once calibrated, so the
+    ///    fleet never shrinks into a spike the forecaster already sees.
+    ///
+    /// All paths respect the same `[min, max]` bounds and the shared
+    /// cooldown (pinned over arbitrary trajectories by
+    /// `tests/prop_fleet.rs`).
+    pub fn decide_proactive(
+        &mut self,
+        now: f64,
+        active: &[FleetLoad],
+        global_backlog: usize,
+        slo: SloView,
+        forecast: Option<ForecastSignal>,
+    ) -> ScaleDecision {
+        let Some(f) = forecast else {
+            return self.decide(now, active, global_backlog, slo);
+        };
+        if !self.cfg.enabled || active.is_empty() || now < self.cooldown_until {
+            return ScaleDecision::Hold;
+        }
+        let n = active.len();
+        let mean_busy = active.iter().map(|l| l.busy).sum::<f64>() / n as f64;
+        let queued: usize =
+            active.iter().map(|l| l.queued).sum::<usize>() + global_backlog;
+        if mean_busy > 0.2 && f.current_rate > 0.0 {
+            let per = f.current_rate / (mean_busy * n as f64);
+            self.rate_per_device = Some(match self.rate_per_device {
+                Some(r) => 0.7 * r + 0.3 * per,
+                None => per,
+            });
+        }
+        if let Some(per) = self.rate_per_device {
+            let head = f.headroom.clamp(1e-3, 1.0);
+            if n < self.cfg.max_devices && f.predicted_rate > per * n as f64 * head {
+                self.cooldown_until = now + self.cfg.cooldown;
+                return ScaleDecision::Out;
+            }
+            if n > self.cfg.min_devices
+                && n > 1
+                && queued == 0
+                && f.predicted_rate < per * (n - 1) as f64 * head * 0.7
+            {
+                if let Some(victim) = drain_victim(active) {
+                    self.cooldown_until = now + self.cfg.cooldown;
+                    return ScaleDecision::In { victim };
+                }
+            }
+            // calibrated: the forecast owns scale-in; keep the reactive
+            // breach/queue triggers as a scale-out backstop only (and give
+            // the cooldown back when suppressing its drain — a decision
+            // that didn't happen must not gate the next one)
+            let saved = self.cooldown_until;
+            return match self.decide(now, active, global_backlog, slo) {
+                ScaleDecision::In { .. } => {
+                    self.cooldown_until = saved;
+                    ScaleDecision::Hold
+                }
+                d => d,
+            };
+        }
+        // not yet calibrated: full reactive behavior
+        self.decide(now, active, global_backlog, slo)
+    }
+}
+
+/// Cost-greedy drain-victim choice shared by the reactive and proactive
+/// paths: most expensive drainable device first, ties broken by (busy,
+/// resident, idx) — so a homogeneous fleet drains its least-loaded device.
+fn drain_victim(active: &[FleetLoad]) -> Option<usize> {
+    active
+        .iter()
+        .filter(|l| l.drainable)
+        .min_by(|a, b| {
+            b.cost
+                .total_cmp(&a.cost)
+                .then(a.busy.total_cmp(&b.busy))
+                .then(a.resident.cmp(&b.resident))
+                .then(a.idx.cmp(&b.idx))
+        })
+        .map(|l| l.idx)
+}
+
+// ---------------------------------------------------------------------------
+// Joint P/D pool sizing
+// ---------------------------------------------------------------------------
+
+/// Windowed prefill/decode demand accounting → joint pool-sizing hints for
+/// the PD-disaggregated engines (coordinated autoscaling; see the
+/// autoscaling-semantics notes in [`crate::engines`]).
+///
+/// Per-pool triggers thrash because prefill and decode demand move
+/// together but at different ratios; instead the planner measures the
+/// token mix (tokens of prefill work vs tokens of decode work per
+/// decision window), smooths it, and answers ONE question for both pools:
+/// given the target prefill share, which role should the next scale-out
+/// join, and which pool should give up the next drain victim. Engines
+/// consult it only in proactive forecast mode, so reactive runs keep
+/// their historical role choices bit-identically.
+#[derive(Debug, Default)]
+pub struct PdPlanner {
+    win_prefill: f64,
+    win_decode: f64,
+    share: Option<f64>,
+}
+
+impl PdPlanner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account `tokens` of prefill work (prompt tokens computed).
+    pub fn record_prefill(&mut self, tokens: u64) {
+        self.win_prefill += tokens as f64;
+    }
+
+    /// Account `tokens` of decode work (generation steps taken).
+    pub fn record_decode(&mut self, tokens: u64) {
+        self.win_decode += tokens as f64;
+    }
+
+    /// Close the demand window: fold the observed token mix into the
+    /// smoothed prefill share (EWMA ½). An empty window keeps the prior
+    /// estimate.
+    pub fn roll(&mut self) {
+        let total = self.win_prefill + self.win_decode;
+        if total > 0.0 {
+            let s = self.win_prefill / total;
+            self.share = Some(match self.share {
+                Some(prev) => 0.5 * prev + 0.5 * s,
+                None => s,
+            });
+        }
+        self.win_prefill = 0.0;
+        self.win_decode = 0.0;
+    }
+
+    /// Smoothed prefill share of total demand, once any window closed with
+    /// work in it.
+    pub fn prefill_share(&self) -> Option<f64> {
+        self.share
+    }
+
+    /// Target prefill-pool size for a fleet of `total` devices; both pools
+    /// always keep at least one device. None below 2 devices or before any
+    /// demand was measured.
+    pub fn target_prefill(&self, total: usize) -> Option<usize> {
+        if total < 2 {
+            return None;
+        }
+        let s = self.share?;
+        Some(((total as f64 * s).round() as usize).clamp(1, total - 1))
+    }
+
+    /// Should the next scale-out join the prefill pool? (Sizes the grown
+    /// fleet jointly instead of firing per-pool triggers.)
+    pub fn scale_out_to_prefill(&self, n_prefill: usize, n_decode: usize) -> Option<bool> {
+        self.target_prefill(n_prefill + n_decode + 1)
+            .map(|t| t > n_prefill)
+    }
+
+    /// Should the next drain victim come from the prefill pool?
+    pub fn drain_from_prefill(&self, n_prefill: usize, n_decode: usize) -> Option<bool> {
+        self.target_prefill(n_prefill + n_decode - 1)
+            .map(|t| n_prefill > t)
     }
 }
 
@@ -1752,6 +1941,136 @@ mod tests {
         let mut c = Autoscaler::new(tcfg);
         let slow_tpot = SloView { p99_ttft: None, p99_tpot: Some(0.08) };
         assert_eq!(c.decide(0.0, &calm, 0, slow_tpot), ScaleDecision::Out);
+    }
+
+    fn sig(cur: f64, pred: f64) -> Option<ForecastSignal> {
+        Some(ForecastSignal {
+            current_rate: cur,
+            predicted_rate: pred,
+            headroom: 0.75,
+        })
+    }
+
+    #[test]
+    fn proactive_autoscaler_scales_ahead_of_predicted_spike() {
+        let mut cfg = AutoscaleConfig::default();
+        cfg.enabled = true;
+        cfg.min_devices = 1;
+        cfg.max_devices = 4;
+        let mut a = Autoscaler::new(cfg);
+        let calm = [fl(0, 0.5, 0, true), fl(1, 0.5, 0, true)];
+        // calibrates per-device rate = 10 / (0.5 * 2) = 10 req/s in the
+        // same call; predicted 18 > 10 * 2 * 0.75 = 15 -> scale out BEFORE
+        // any reactive trigger (busy is moderate, queues empty)
+        assert_eq!(
+            a.decide_proactive(0.0, &calm, 0, SloView::NONE, sig(10.0, 18.0)),
+            ScaleDecision::Out
+        );
+        // the shared cooldown gates proactive decisions too
+        assert_eq!(
+            a.decide_proactive(1.0, &calm, 0, SloView::NONE, sig(10.0, 30.0)),
+            ScaleDecision::Hold
+        );
+        // predicted demand fits the headroom'd capacity: hold
+        assert_eq!(
+            a.decide_proactive(10.0, &calm, 0, SloView::NONE, sig(10.0, 12.0)),
+            ScaleDecision::Hold
+        );
+        // deep trough predicted: proactive scale-in picks the usual
+        // cost-greedy victim (least busy at uniform cost)
+        let idle = [fl(0, 0.05, 0, true), fl(1, 0.02, 0, true)];
+        assert_eq!(
+            a.decide_proactive(20.0, &idle, 0, SloView::NONE, sig(0.5, 0.6)),
+            ScaleDecision::In { victim: 1 }
+        );
+    }
+
+    #[test]
+    fn proactive_suppresses_reactive_drain_and_keeps_the_backstop() {
+        let mut cfg = AutoscaleConfig::default();
+        cfg.enabled = true;
+        cfg.min_devices = 1;
+        cfg.max_devices = 4;
+        let mut a = Autoscaler::new(cfg);
+        let busy = [fl(0, 0.6, 0, true), fl(1, 0.6, 0, true)];
+        // calibrate (per-device ~= 10) without triggering anything
+        assert_eq!(
+            a.decide_proactive(0.0, &busy, 0, SloView::NONE, sig(12.0, 12.0)),
+            ScaleDecision::Hold
+        );
+        // fleet idle enough for a REACTIVE drain (mean busy < scale_in_util,
+        // queues empty) but the forecast still predicts near-threshold
+        // demand: the drain is suppressed — don't shrink into a spike
+        let idle = [fl(0, 0.1, 0, true), fl(1, 0.1, 0, true)];
+        assert_eq!(
+            a.decide_proactive(10.0, &idle, 0, SloView::NONE, sig(2.0, 6.0)),
+            ScaleDecision::Hold
+        );
+        // ...while a live queue edge still scales out through the backstop
+        // even when the forecast sees nothing
+        let pressed = [fl(0, 0.3, 9, true), fl(1, 0.3, 4, true)];
+        assert_eq!(
+            a.decide_proactive(20.0, &pressed, 0, SloView::NONE, sig(2.0, 2.0)),
+            ScaleDecision::Out
+        );
+    }
+
+    #[test]
+    fn proactive_without_signal_matches_reactive_bit_for_bit() {
+        let mut cfg = AutoscaleConfig::default();
+        cfg.enabled = true;
+        cfg.min_devices = 1;
+        cfg.max_devices = 4;
+        let trajectories: [(&[FleetLoad], usize); 4] = [
+            (&[fl(0, 0.95, 0, true), fl(1, 0.9, 0, true)], 0),
+            (&[fl(0, 0.2, 9, true), fl(1, 0.1, 4, true)], 0),
+            (&[fl(0, 0.05, 0, true), fl(1, 0.1, 0, true)], 0),
+            (&[fl(0, 0.5, 0, true)], 7),
+        ];
+        let mut a = Autoscaler::new(cfg);
+        let mut b = Autoscaler::new(cfg);
+        for (i, (loads, backlog)) in trajectories.iter().enumerate() {
+            let now = 10.0 * i as f64;
+            assert_eq!(
+                a.decide_proactive(now, loads, *backlog, SloView::NONE, None),
+                b.decide(now, loads, *backlog, SloView::NONE),
+                "step {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn pd_planner_sizes_both_pools_from_the_token_mix() {
+        let mut p = PdPlanner::new();
+        assert_eq!(p.prefill_share(), None, "no demand measured yet");
+        assert_eq!(p.scale_out_to_prefill(2, 2), None);
+        assert_eq!(p.drain_from_prefill(2, 2), None);
+        p.record_prefill(3000);
+        p.record_decode(1000);
+        p.roll();
+        assert!((p.prefill_share().unwrap() - 0.75).abs() < 1e-12);
+        assert_eq!(p.target_prefill(5), Some(4));
+        // growing 2P/2D: the 5-device target wants 4 prefill -> join prefill
+        assert_eq!(p.scale_out_to_prefill(2, 2), Some(true));
+        // shrinking 3P/1D: the 3-device target wants 2 prefill -> prefill gives
+        assert_eq!(p.drain_from_prefill(3, 1), Some(true));
+        // a decode-heavy window folds in at EWMA 1/2 and flips the choice
+        p.record_decode(4000);
+        p.roll();
+        assert!((p.prefill_share().unwrap() - 0.375).abs() < 1e-12);
+        assert_eq!(p.scale_out_to_prefill(2, 2), Some(false));
+        // an empty window keeps the prior estimate
+        p.roll();
+        assert!((p.prefill_share().unwrap() - 0.375).abs() < 1e-12);
+        // both pools always keep at least one device
+        let mut q = PdPlanner::new();
+        q.record_prefill(100);
+        q.roll();
+        assert_eq!(q.prefill_share(), Some(1.0));
+        assert_eq!(q.target_prefill(4), Some(3), "clamped below total");
+        assert_eq!(q.drain_from_prefill(1, 3), Some(false));
+        assert_eq!(q.target_prefill(1), None, "degenerate fleet: no hint");
+        assert_eq!(q.drain_from_prefill(1, 1), None);
     }
 
     #[test]

@@ -80,6 +80,15 @@ pub struct HftEngine {
     linkh: Vec<LinkHealth>,
     /// In-flight spin-up transactions (empty while the plane is off).
     txs: TxTable<xfer::SpinUp>,
+    /// Forecast subsystem; `None` with `--forecast-mode off` — the
+    /// reactive path then never sees a signal and stays bit-identical.
+    forecaster: Option<crate::forecast::RateForecaster>,
+    /// When each device joined via scale-out (None = initial fleet);
+    /// drives the post-scale-out TTFT watch window.
+    joined_at: Vec<Option<f64>>,
+    /// (Σ TTFT, n) over requests finishing on a scaled-out device inside
+    /// its watch window ([`fleet::SCALEOUT_WATCH_SECS`]).
+    post_scaleout_ttft: (f64, u64),
 }
 
 impl HftEngine {
@@ -137,6 +146,16 @@ impl HftEngine {
             )),
             linkh: vec![LinkHealth::default(); cfg.n_devices],
             txs: TxTable::default(),
+            forecaster: if crate::forecast::enabled(&cfg.forecast) {
+                Some(crate::forecast::RateForecaster::new(
+                    &cfg.forecast,
+                    crate::forecast::resolve_period(&cfg.forecast, &cfg.workload.arrivals),
+                ))
+            } else {
+                None
+            },
+            joined_at: vec![None; cfg.n_devices],
+            post_scaleout_ttft: (0.0, 0),
         }
     }
 
@@ -187,9 +206,16 @@ impl HftEngine {
     fn finish_seq(&mut self, sid: u64, now: f64) {
         let seq = self.seqs.seq_mut(sid);
         seq.phase = SeqPhase::Finished;
+        let inst = seq.instance;
         let rec = seq.record(now);
         if self.autoscaler.enabled() {
             self.slo.record(now, rec.ttft(), rec.tpot());
+        }
+        if let Some(j) = self.joined_at[self.insts[inst].device] {
+            if now <= j + fleet::SCALEOUT_WATCH_SECS {
+                self.post_scaleout_ttft.0 += rec.ttft();
+                self.post_scaleout_ttft.1 += 1;
+            }
         }
         self.col.finish(rec);
         self.inflight -= 1;
@@ -506,6 +532,11 @@ impl HftEngine {
         }
         let tx = self.txs.remove(id).expect("live tx");
         let now = q.now();
+        // transfer-plane mode: the true join time is only known now
+        let dev = self.insts[tx.inst].device;
+        if self.joined_at[dev].is_none() {
+            self.joined_at[dev] = Some(now);
+        }
         self.insts[tx.inst].frozen_until = now;
         self.maybe_start(tx.inst, q);
     }
@@ -543,6 +574,10 @@ impl HftEngine {
         } else {
             // last active instance: keep it (treat the late arrival of the
             // weights as done) rather than strand queued work forever
+            let dev = self.insts[tx.inst].device;
+            if self.joined_at[dev].is_none() {
+                self.joined_at[dev] = Some(now);
+            }
             self.maybe_start(tx.inst, q);
         }
     }
@@ -665,7 +700,8 @@ impl HftEngine {
             p99_ttft: self.slo.p99_ttft(now),
             p99_tpot: self.slo.p99_tpot(now),
         };
-        let decision = self.autoscaler.decide(now, &active, 0, view);
+        let signal = self.forecaster.as_mut().map(|f| f.signal(now));
+        let decision = self.autoscaler.decide_proactive(now, &active, 0, view, signal);
         self.fleet_loads_buf = active;
         match decision {
             fleet::ScaleDecision::Out => {
@@ -713,6 +749,8 @@ impl HftEngine {
         self.insts.push(inst);
         self.linkh.push(LinkHealth::default());
         self.batches.push(None);
+        // plane mode learns the real join time at spin-up resolution
+        self.joined_at.push(if plane { None } else { Some(now + t_up) });
         if plane {
             let tx = self.txs.insert(xfer::SpinUp::new(id, t_up));
             self.issue_spin_up(tx, 0.0, q);
@@ -781,6 +819,14 @@ impl super::EngineHarness for HftEngine {
     fn fill_extras(&self, extras: &mut super::EngineExtras) {
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
+        if self.post_scaleout_ttft.1 > 0 {
+            extras.ttft_after_scaleout_s =
+                self.post_scaleout_ttft.0 / self.post_scaleout_ttft.1 as f64;
+        }
+        if let Some(f) = &self.forecaster {
+            extras.forecast_series = f.forecast_series().to_vec();
+            extras.actual_rate_series = f.actual_series().to_vec();
+        }
         self.faults.stats.fill_extras(extras);
     }
 
@@ -799,8 +845,12 @@ impl super::EngineHarness for HftEngine {
 
 impl Engine for HftEngine {
     fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+        // every offered arrival counts toward the rate estimate, including
+        // ones admission drops — demand is demand
+        if let Some(f) = self.forecaster.as_mut() {
+            f.observe(q.now());
+        }
         if !fleet::admit_or_drop(self.spec, &self.devices[0].spec, &req, &mut self.col) {
-            let _ = q;
             return;
         }
         // bootstrap the autoscale loop on (re-)arrival of work

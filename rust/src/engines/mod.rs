@@ -83,6 +83,59 @@
 //! `cache-skew`, ...) live in [`crate::scenario`] as declarative specs;
 //! their JSON output schemas are documented there.
 //!
+//! ## Autoscaling semantics: reactive, proactive, coordinated
+//!
+//! With `--forecast-mode proactive` each elastic engine additionally feeds
+//! every arrival into a [`crate::forecast::RateForecaster`] (windowed EWMA
+//! level + online raised-cosine seasonal fit; deterministic, pure function
+//! of the observation stream) and evaluates
+//! [`fleet::Autoscaler::decide_proactive`] instead of `decide`. The
+//! decision order, highest priority first:
+//!
+//! 1. **Cooldown** gates every path — proactive and reactive actions share
+//!    one rate limit, so the two can never thrash in alternation.
+//! 2. **Proactive scale-out**: the forecaster's predicted PEAK rate over
+//!    the spin-up horizon exceeds the fleet's calibrated capacity ×
+//!    `--forecast-headroom` — the device is ordered before the spike
+//!    lands, so its spin-up freeze overlaps the ramp instead of the burn.
+//! 3. **Proactive scale-in**: even the predicted peak fits `n − 1`
+//!    devices inside the headroom with ×0.7 hysteresis margin and
+//!    nothing is queued — the fleet shrinks into the trough it can see
+//!    coming.
+//! 4. **Reactive backstop**: a live P99 breach or queue edge still
+//!    scales out exactly as in reactive mode (forecasts can be wrong the
+//!    safe way too); reactive DRAIN is suppressed once the capacity
+//!    estimate is calibrated, so the fleet never shrinks into a spike the
+//!    forecaster already predicts.
+//!
+//! With no usable signal yet (forecaster warming up) the proactive call
+//! degrades to the reactive decision verbatim; with `--forecast-mode off`
+//! (the default) no forecaster is ever constructed and the reactive path
+//! is bit-identical to before the forecast subsystem existed (pinned by
+//! the golden snapshot gate and the inert-knobs test).
+//!
+//! **Coordinated P/D sizing** (PD-disaggregated engines, proactive mode
+//! only): a [`fleet::PdPlanner`] accounts tokens-of-prefill vs
+//! tokens-of-decode per decision window; ONE smoothed prefill-share then
+//! sizes both pools jointly — it chooses which role a scale-out joins
+//! (DistServe; BanaServe's hybrid devices instead start with their
+//! prefill share set from the measured mix rather than the fixed ½ split)
+//! and which pool surrenders a drain victim, replacing the independent
+//! per-pool triggers that thrash when prefill and decode demand move
+//! together at a shifted ratio.
+//!
+//! **Warm-start accounting** (BanaServe, `--warm-start`): a scale-out
+//! prefetches the hottest Global-KV-Store prefixes (radix hot-chain stamp
+//! order, MRU first) into the new device during its spin-up
+//! weight-transfer freeze, budgeted by the device's post-weight KV
+//! capacity and priced over the store link through the same
+//! layer-overlap maths as a demand fetch; the device joins only when both
+//! the weights and the prefetch have landed. `warm_prefetch_tokens`
+//! counts what was shipped; `ttft_after_scaleout_s` reports the mean TTFT
+//! of requests finishing on a scaled-out device within its first 30 s of
+//! service — the cold-start penalty the prefetch exists to cut (reported
+//! for BanaServe and DistServe, warm or cold).
+//!
 //! # Failure semantics (fault injection)
 //!
 //! With `fault.enabled` (`--fault-enabled`) the experiment seed derives a
@@ -269,6 +322,20 @@ pub struct EngineExtras {
     /// Tiered store: hit tokens served from the cold SSD tier (demoted
     /// prefixes that were still cheaper to fetch than to recompute).
     pub store_cold_tokens: u64,
+    /// Mean TTFT (s) of requests finishing on a scaled-out device within
+    /// its first [`fleet::SCALEOUT_WATCH_SECS`] of service — the
+    /// cold-start penalty warm-start prefetch exists to cut (0 when no
+    /// scale-out served requests in its watch window).
+    pub ttft_after_scaleout_s: f64,
+    /// Warm-start: Global-KV-Store prefix tokens prefetched into devices
+    /// during their spin-up freeze.
+    pub warm_prefetch_tokens: u64,
+    /// Forecast subsystem: (target time, predicted req/s) per closed
+    /// observation window (empty with `--forecast-mode off`).
+    pub forecast_series: Vec<(f64, f64)>,
+    /// Forecast subsystem: (window mid-time, measured req/s) — the series
+    /// the forecast is judged against.
+    pub actual_rate_series: Vec<(f64, f64)>,
 }
 
 /// Total device-cost of a run: the recorded cost-rate step series

@@ -112,6 +112,15 @@ pub struct VllmEngine {
     linkh: Vec<LinkHealth>,
     /// In-flight spin-up transactions (empty while the plane is off).
     txs: TxTable<xfer::SpinUp>,
+    /// Forecast subsystem; `None` with `--forecast-mode off` — the
+    /// reactive path then never sees a signal and stays bit-identical.
+    forecaster: Option<crate::forecast::RateForecaster>,
+    /// When each device joined via scale-out (None = initial fleet);
+    /// drives the post-scale-out TTFT watch window.
+    joined_at: Vec<Option<f64>>,
+    /// (Σ TTFT, n) over requests finishing on a scaled-out device inside
+    /// its watch window ([`fleet::SCALEOUT_WATCH_SECS`]).
+    post_scaleout_ttft: (f64, u64),
 }
 
 impl VllmEngine {
@@ -206,6 +215,16 @@ impl VllmEngine {
             )),
             linkh: vec![LinkHealth::default(); cfg.n_devices],
             txs: TxTable::default(),
+            forecaster: if crate::forecast::enabled(&cfg.forecast) {
+                Some(crate::forecast::RateForecaster::new(
+                    &cfg.forecast,
+                    crate::forecast::resolve_period(&cfg.forecast, &cfg.workload.arrivals),
+                ))
+            } else {
+                None
+            },
+            joined_at: vec![None; cfg.n_devices],
+            post_scaleout_ttft: (0.0, 0),
         }
     }
 
@@ -471,6 +490,12 @@ impl VllmEngine {
         if self.autoscaler.enabled() {
             self.slo.record(now, rec.ttft(), rec.tpot());
         }
+        if let Some(j) = self.joined_at[dev_idx] {
+            if now <= j + fleet::SCALEOUT_WATCH_SECS {
+                self.post_scaleout_ttft.0 += rec.ttft();
+                self.post_scaleout_ttft.1 += 1;
+            }
+        }
         self.col.finish(rec);
         self.inflight -= 1;
         self.seqs.remove(sid); // drop payload
@@ -672,6 +697,11 @@ impl VllmEngine {
         }
         let tx = self.txs.remove(id).expect("live tx");
         let now = q.now();
+        // transfer-plane mode: the true join time is only known now
+        let dev = self.insts[tx.inst].device;
+        if self.joined_at[dev].is_none() {
+            self.joined_at[dev] = Some(now);
+        }
         self.insts[tx.inst].frozen_until = now;
         self.maybe_start(tx.inst, q);
     }
@@ -709,6 +739,10 @@ impl VllmEngine {
         } else {
             // last active instance: keep it (treat the late arrival of the
             // weights as done) rather than strand queued work forever
+            let dev = self.insts[tx.inst].device;
+            if self.joined_at[dev].is_none() {
+                self.joined_at[dev] = Some(now);
+            }
             self.maybe_start(tx.inst, q);
         }
     }
@@ -845,7 +879,8 @@ impl VllmEngine {
             p99_ttft: self.slo.p99_ttft(now),
             p99_tpot: self.slo.p99_tpot(now),
         };
-        let decision = self.autoscaler.decide(now, &active, 0, view);
+        let signal = self.forecaster.as_mut().map(|f| f.signal(now));
+        let decision = self.autoscaler.decide_proactive(now, &active, 0, view, signal);
         self.fleet_loads_buf = active;
         match decision {
             fleet::ScaleDecision::Out => {
@@ -898,6 +933,8 @@ impl VllmEngine {
         self.linkh.push(LinkHealth::default());
         self.caches.push(RadixTree::new());
         self.cache_budgets.push(budget);
+        // plane mode learns the real join time at spin-up resolution
+        self.joined_at.push(if plane { None } else { Some(now + t_up) });
         if plane {
             let tx = self.txs.insert(xfer::SpinUp::new(id, t_up));
             self.issue_spin_up(tx, 0.0, q);
@@ -996,6 +1033,14 @@ impl super::EngineHarness for VllmEngine {
         extras.routed_counts = self.routed_counts.clone();
         extras.scale_outs = self.scale_outs;
         extras.drains = self.drains;
+        if self.post_scaleout_ttft.1 > 0 {
+            extras.ttft_after_scaleout_s =
+                self.post_scaleout_ttft.0 / self.post_scaleout_ttft.1 as f64;
+        }
+        if let Some(f) = &self.forecaster {
+            extras.forecast_series = f.forecast_series().to_vec();
+            extras.actual_rate_series = f.actual_series().to_vec();
+        }
         self.faults.stats.fill_extras(extras);
     }
 
@@ -1014,8 +1059,12 @@ impl super::EngineHarness for VllmEngine {
 
 impl Engine for VllmEngine {
     fn on_arrival(&mut self, req: Request, q: &mut EventQueue) {
+        // every offered arrival counts toward the rate estimate, including
+        // ones admission drops — demand is demand
+        if let Some(f) = self.forecaster.as_mut() {
+            f.observe(q.now());
+        }
         if !fleet::admit_or_drop(self.spec, &self.devices[0].spec, &req, &mut self.col) {
-            let _ = q;
             return;
         }
         // bootstrap the autoscale loop on (re-)arrival of work

@@ -1,0 +1,470 @@
+//! Deterministic traffic forecasting for proactive autoscaling.
+//!
+//! The reactive autoscaler (PR 4) scales only after a windowed P99 breach
+//! has already burned the SLO, and the scaled-out device joins cold. This
+//! module supplies the missing half: a [`RateForecaster`] that turns the
+//! engine's observed arrival stream into a smoothed current rate plus a
+//! predicted peak rate over the spin-up horizon, which
+//! `engines::fleet::Autoscaler::decide_proactive` compares against the
+//! fleet's calibrated capacity (`predicted > capacity × headroom` → scale
+//! out ahead of the spike).
+//!
+//! Two estimators compose:
+//!
+//! * **Windowed EWMA** — arrivals are counted into fixed `window`-second
+//!   buckets; each closed bucket's rate folds into an EWMA with factor
+//!   `alpha`. This tracks the current level and needs no assumptions.
+//! * **Seasonal raised-cosine fit** — when a seasonal `period` T is known
+//!   (set explicitly, or resolved from a diurnal trace's day length), the
+//!   closed-bucket rates additionally feed an online least-squares fit of
+//!   `rate(t) ≈ a + b·cos(2πt/T) + c·sin(2πt/T)` via its 3×3 normal
+//!   equations. Once a full period has been observed the fit predicts the
+//!   *shape* of the day, and the forecast becomes
+//!   `ewma + s(t_future) − s(t_now)`: the seasonal DELTA rides on the
+//!   measured level, so a biased amplitude estimate cannot double-count
+//!   the current rate.
+//!
+//! Everything here is a pure function of the observation stream — no RNG,
+//! no clocks, no iteration-order dependence — so fixed-seed runs replay
+//! byte-identically (pinned by the purity test below). With
+//! `--forecast-mode off` (the default) the engines never construct a
+//! forecaster at all and the reactive path is bit-identical to before.
+
+use crate::config::{ForecastConfig, ForecastMode};
+use crate::workload::ArrivalProcess;
+
+/// What the forecaster tells the autoscaler at one decision point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ForecastSignal {
+    /// Smoothed current arrival rate (req/s).
+    pub current_rate: f64,
+    /// Predicted PEAK arrival rate over the look-ahead horizon (req/s);
+    /// equals `current_rate` until the seasonal fit is ready.
+    pub predicted_rate: f64,
+    /// Capacity-headroom fraction the proactive decision scales against
+    /// (carried here so `fleet` needs no forecast-config plumbing).
+    pub headroom: f64,
+}
+
+/// Online least-squares fit of `a + b·cos(ωt) + c·sin(ωt)` through the
+/// normal equations (3×3, accumulated incrementally; solved by Gaussian
+/// elimination with partial pivoting at each window close).
+#[derive(Debug, Clone)]
+struct SeasonalFit {
+    omega: f64,
+    period: f64,
+    n: u64,
+    t_first: f64,
+    t_last: f64,
+    ata: [[f64; 3]; 3],
+    aty: [f64; 3],
+    coef: Option<[f64; 3]>,
+}
+
+impl SeasonalFit {
+    fn new(period: f64) -> Self {
+        SeasonalFit {
+            omega: 2.0 * std::f64::consts::PI / period,
+            period,
+            n: 0,
+            t_first: 0.0,
+            t_last: 0.0,
+            ata: [[0.0; 3]; 3],
+            aty: [0.0; 3],
+            coef: None,
+        }
+    }
+
+    fn push(&mut self, t: f64, y: f64) {
+        let basis = [1.0, (self.omega * t).cos(), (self.omega * t).sin()];
+        for i in 0..3 {
+            for j in 0..3 {
+                self.ata[i][j] += basis[i] * basis[j];
+            }
+            self.aty[i] += basis[i] * y;
+        }
+        if self.n == 0 {
+            self.t_first = t;
+        }
+        self.t_last = t;
+        self.n += 1;
+        self.coef = self.solve();
+    }
+
+    /// Solve the normal equations; None until a full period of samples has
+    /// accumulated (8+ points spanning ≥ one period) or when the system is
+    /// numerically singular (e.g. every sample at the same phase).
+    fn solve(&self) -> Option<[f64; 3]> {
+        if self.n < 8 || self.t_last - self.t_first < self.period {
+            return None;
+        }
+        let mut m = [[0.0f64; 4]; 3];
+        for i in 0..3 {
+            m[i][..3].copy_from_slice(&self.ata[i]);
+            m[i][3] = self.aty[i];
+        }
+        for col in 0..3 {
+            let piv = (col..3)
+                .max_by(|&a, &b| m[a][col].abs().total_cmp(&m[b][col].abs()))
+                .unwrap();
+            if m[piv][col].abs() < 1e-9 {
+                return None;
+            }
+            m.swap(col, piv);
+            for row in 0..3 {
+                if row != col {
+                    let f = m[row][col] / m[col][col];
+                    for k in col..4 {
+                        m[row][k] -= f * m[col][k];
+                    }
+                }
+            }
+        }
+        Some([m[0][3] / m[0][0], m[1][3] / m[1][1], m[2][3] / m[2][2]])
+    }
+
+    fn eval(&self, t: f64) -> Option<f64> {
+        self.coef
+            .map(|c| c[0] + c[1] * (self.omega * t).cos() + c[2] * (self.omega * t).sin())
+    }
+}
+
+/// Deterministic arrival-rate forecaster: windowed EWMA level + optional
+/// seasonal raised-cosine shape. See the module docs for the model.
+#[derive(Debug)]
+pub struct RateForecaster {
+    window: f64,
+    alpha: f64,
+    horizon: f64,
+    headroom: f64,
+    window_start: f64,
+    window_count: u64,
+    ewma: Option<f64>,
+    seasonal: Option<SeasonalFit>,
+    /// (t, predicted rate for t) — each point is the prediction the
+    /// forecaster made one horizon AHEAD of its window close, so plotting
+    /// it against `actual` shows the true tracking error.
+    forecast_series: Vec<(f64, f64)>,
+    /// (t, observed windowed rate) at each window midpoint.
+    actual_series: Vec<(f64, f64)>,
+}
+
+impl RateForecaster {
+    /// Build from config; `period` is the resolved seasonal period
+    /// ([`resolve_period`]), 0 = EWMA only.
+    pub fn new(cfg: &ForecastConfig, period: f64) -> Self {
+        RateForecaster {
+            window: cfg.window.max(1e-6),
+            alpha: cfg.alpha.clamp(1e-6, 1.0),
+            horizon: cfg.horizon.max(0.0),
+            headroom: cfg.headroom,
+            window_start: 0.0,
+            window_count: 0,
+            ewma: None,
+            seasonal: (period > 0.0).then(|| SeasonalFit::new(period)),
+            forecast_series: Vec::new(),
+            actual_series: Vec::new(),
+        }
+    }
+
+    /// Record one arrival at time `now` (monotone non-decreasing).
+    pub fn observe(&mut self, now: f64) {
+        self.roll_to(now);
+        self.window_count += 1;
+    }
+
+    /// Close every window that ended at or before `now` (empty windows
+    /// close at rate 0 — a quiet night must pull the level down).
+    fn roll_to(&mut self, now: f64) {
+        while now >= self.window_start + self.window {
+            let t_mid = self.window_start + 0.5 * self.window;
+            let rate = self.window_count as f64 / self.window;
+            self.ewma = Some(match self.ewma {
+                Some(e) => (1.0 - self.alpha) * e + self.alpha * rate,
+                None => rate,
+            });
+            self.actual_series.push((t_mid, rate));
+            if let Some(fit) = self.seasonal.as_mut() {
+                fit.push(t_mid, rate);
+            }
+            let t_ahead = t_mid + self.horizon;
+            let ahead = self.predict_at(t_mid, t_ahead);
+            self.forecast_series.push((t_ahead, ahead));
+            self.window_start += self.window;
+            self.window_count = 0;
+        }
+    }
+
+    /// Smoothed current rate: the EWMA once any window closed, else the
+    /// partial current window's rate (zero-history degradation).
+    fn current_rate(&self, now: f64) -> f64 {
+        match self.ewma {
+            Some(e) => e,
+            None => {
+                let elapsed = now - self.window_start;
+                if elapsed > 1e-9 {
+                    self.window_count as f64 / elapsed
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Predicted rate at `t_future`, standing at `t_now`: the current level
+    /// plus the seasonal delta (never negative). Falls back to the level
+    /// alone until the fit is ready.
+    fn predict_at(&self, t_now: f64, t_future: f64) -> f64 {
+        let base = self.current_rate(t_now);
+        match self.seasonal.as_ref() {
+            Some(fit) => match (fit.eval(t_future), fit.eval(t_now)) {
+                (Some(f), Some(c)) => (base + f - c).max(0.0),
+                _ => base,
+            },
+            None => base,
+        }
+    }
+
+    /// Predicted PEAK rate over `[now, now + horizon]`, sampled at 16
+    /// intermediate points (a spike mid-horizon must not slip between the
+    /// endpoints).
+    fn predict_peak(&self, now: f64) -> f64 {
+        let mut peak = self.predict_at(now, now);
+        if self.horizon > 0.0 {
+            for k in 1..=16 {
+                let t = now + self.horizon * k as f64 / 16.0;
+                peak = peak.max(self.predict_at(now, t));
+            }
+        }
+        peak
+    }
+
+    /// The decision-time signal: rolls pending windows forward to `now`
+    /// (so a quiet stretch decays the level before it is read) and reports
+    /// the smoothed current rate plus the predicted peak over the horizon.
+    pub fn signal(&mut self, now: f64) -> ForecastSignal {
+        self.roll_to(now);
+        ForecastSignal {
+            current_rate: self.current_rate(now),
+            predicted_rate: self.predict_peak(now),
+            headroom: self.headroom,
+        }
+    }
+
+    /// Is the seasonal fit serving predictions yet?
+    pub fn seasonal_ready(&self) -> bool {
+        self.seasonal.as_ref().is_some_and(|f| f.coef.is_some())
+    }
+
+    /// The forecast tracking series: (t, rate predicted FOR t, one horizon
+    /// ahead of the window that produced it).
+    pub fn forecast_series(&self) -> &[(f64, f64)] {
+        &self.forecast_series
+    }
+
+    /// The observed windowed-rate series: (window midpoint, rate).
+    pub fn actual_series(&self) -> &[(f64, f64)] {
+        &self.actual_series
+    }
+}
+
+/// Resolve the seasonal period for a workload: an explicit
+/// `--forecast-period` wins; otherwise a diurnal trace contributes its day
+/// length; otherwise 0 (EWMA only — a stationary trace has no season).
+pub fn resolve_period(cfg: &ForecastConfig, arrivals: &ArrivalProcess) -> f64 {
+    if cfg.period > 0.0 {
+        return cfg.period;
+    }
+    match *arrivals {
+        ArrivalProcess::Diurnal { day_secs, .. } => day_secs,
+        _ => 0.0,
+    }
+}
+
+/// Should the engine run the forecaster at all?
+pub fn enabled(cfg: &ForecastConfig) -> bool {
+    cfg.mode != ForecastMode::Off
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn cfg(window: f64, alpha: f64, horizon: f64) -> ForecastConfig {
+        ForecastConfig {
+            mode: ForecastMode::Proactive,
+            window,
+            alpha,
+            horizon,
+            headroom: 0.75,
+            period: 0.0,
+            warm_start: false,
+        }
+    }
+
+    #[test]
+    fn zero_history_degrades_to_the_current_window_rate() {
+        let mut f = RateForecaster::new(&cfg(10.0, 0.4, 5.0), 0.0);
+        let s0 = f.signal(0.0);
+        assert_eq!(s0.current_rate, 0.0);
+        assert_eq!(s0.predicted_rate, 0.0);
+        // 4 arrivals in the first 2 s of a still-open window: rate = 2/s
+        for t in [0.5, 1.0, 1.5, 2.0] {
+            f.observe(t);
+        }
+        let s = f.signal(2.0);
+        assert!((s.current_rate - 2.0).abs() < 1e-9);
+        assert_eq!(s.predicted_rate, s.current_rate, "no season: flat forecast");
+        assert!((s.headroom - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_tracks_level_and_quiet_windows_decay_it() {
+        let mut f = RateForecaster::new(&cfg(1.0, 0.5, 0.0), 0.0);
+        // 5 arrivals/s for 4 closed windows
+        for w in 0..4 {
+            for k in 0..5 {
+                f.observe(w as f64 + 0.1 + k as f64 * 0.15);
+            }
+        }
+        let busy = f.signal(4.0).current_rate;
+        assert!(busy > 4.0, "EWMA(0.5) over four 5/s windows, got {busy}");
+        // six silent windows halve it each close
+        let quiet = f.signal(10.0).current_rate;
+        assert!(quiet < 0.2, "silence must decay the level, got {quiet}");
+        assert_eq!(f.actual_series().len(), 10);
+        assert_eq!(f.forecast_series().len(), 10);
+    }
+
+    #[test]
+    fn forecaster_is_a_pure_function_of_its_observation_stream() {
+        // identical arrival streams (including irregular gaps) must produce
+        // bit-identical state, signals, and series
+        let mut rng = Rng::new(0xF0CA57).substream("arrivals");
+        let mut ts = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..500 {
+            t += (rng.below(1000) as f64 + 1.0) / 250.0;
+            ts.push(t);
+        }
+        let mut a = RateForecaster::new(&cfg(2.0, 0.3, 6.0), 60.0);
+        let mut b = RateForecaster::new(&cfg(2.0, 0.3, 6.0), 60.0);
+        for &t in &ts {
+            a.observe(t);
+            b.observe(t);
+        }
+        let (sa, sb) = (a.signal(t + 3.0), b.signal(t + 3.0));
+        assert_eq!(sa.current_rate.to_bits(), sb.current_rate.to_bits());
+        assert_eq!(sa.predicted_rate.to_bits(), sb.predicted_rate.to_bits());
+        assert_eq!(a.forecast_series().len(), b.forecast_series().len());
+        for (x, y) in a.forecast_series().iter().zip(b.forecast_series()) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits());
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+        for (x, y) in a.actual_series().iter().zip(b.actual_series()) {
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn seasonal_fit_recovers_a_synthetic_raised_cosine() {
+        // rate(t) = 5 + 3·cos(2πt/T − 1.0), sampled noiselessly through the
+        // fit: amplitude, mean and phase must come back within tolerance
+        let period = 40.0;
+        let omega = 2.0 * std::f64::consts::PI / period;
+        let mut fit = SeasonalFit::new(period);
+        let mut t = 0.3;
+        while t < 3.0 * period {
+            fit.push(t, 5.0 + 3.0 * (omega * t - 1.0).cos());
+            t += 1.7;
+        }
+        let c = fit.coef.expect("3 periods of samples: fit must be ready");
+        assert!((c[0] - 5.0).abs() < 1e-6, "mean, got {}", c[0]);
+        let amp = (c[1] * c[1] + c[2] * c[2]).sqrt();
+        assert!((amp - 3.0).abs() < 1e-6, "amplitude, got {amp}");
+        let phase = c[2].atan2(c[1]);
+        assert!((phase - 1.0).abs() < 1e-6, "phase, got {phase}");
+        // and eval reproduces the signal
+        for probe in [0.0, 13.0, 27.5] {
+            let want = 5.0 + 3.0 * (omega * probe - 1.0).cos();
+            assert!((fit.eval(probe).unwrap() - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn seasonal_fit_stays_unready_on_short_or_degenerate_data() {
+        let mut fit = SeasonalFit::new(100.0);
+        for k in 0..20 {
+            fit.push(k as f64, 5.0); // 20 samples but only 1/5 of a period
+        }
+        assert!(fit.coef.is_none(), "must span a full period first");
+        // samples all at the SAME phase (t ≡ 0 mod T): singular system
+        let mut s = SeasonalFit::new(10.0);
+        for k in 0..12 {
+            s.push(k as f64 * 10.0, 4.0);
+        }
+        assert!(s.coef.is_none(), "rank-deficient phases must not fit");
+    }
+
+    #[test]
+    fn predicted_peak_rises_ahead_of_the_seasonal_upswing() {
+        // observe a full diurnal cycle of windowed rates, stand in the
+        // morning trough, and ask about the horizon that crosses the ramp
+        let period = 100.0;
+        let omega = 2.0 * std::f64::consts::PI / period;
+        let rate = |t: f64| 6.0 + 4.0 * 0.5 * (1.0 - (omega * t).cos());
+        let mut f = RateForecaster::new(&cfg(1.0, 0.9, 30.0), period);
+        // deterministic arrival synthesis: n(t) ≈ rate(t) arrivals per 1 s
+        // window, spread uniformly inside the window
+        for w in 0..260 {
+            let t0 = w as f64;
+            let n = rate(t0 + 0.5).round() as usize;
+            for k in 0..n {
+                f.observe(t0 + (k as f64 + 0.5) / n as f64);
+            }
+        }
+        assert!(f.seasonal_ready());
+        // t = 260 ≡ 60 mod 100: past-peak downslope toward the trough at
+        // t = 300. A 30 s horizon from t = 260 stays on the downslope →
+        // peak ≈ current. From the trough at t = 300 the same horizon
+        // crosses the morning ramp → peak must exceed current by a clear
+        // margin even though the current level is at its minimum.
+        let s = f.signal(260.0);
+        assert!(
+            s.predicted_rate <= s.current_rate + 0.5,
+            "downslope: peak {} vs current {}",
+            s.predicted_rate,
+            s.current_rate
+        );
+        let mut g = f;
+        for w in 260..300 {
+            let t0 = w as f64;
+            let n = rate(t0 + 0.5).round() as usize;
+            for k in 0..n {
+                g.observe(t0 + (k as f64 + 0.5) / n as f64);
+            }
+        }
+        let s2 = g.signal(300.0);
+        assert!(
+            s2.predicted_rate > s2.current_rate + 1.0,
+            "pre-ramp: peak {} must anticipate the upswing over current {}",
+            s2.predicted_rate,
+            s2.current_rate
+        );
+    }
+
+    #[test]
+    fn resolve_period_prefers_explicit_then_diurnal_day() {
+        let mut c = cfg(2.0, 0.3, 10.0);
+        let diurnal = ArrivalProcess::diurnal(8.0, 4.0, 120.0);
+        let poisson = ArrivalProcess::Poisson { rps: 5.0 };
+        assert_eq!(resolve_period(&c, &diurnal), 120.0);
+        assert_eq!(resolve_period(&c, &poisson), 0.0);
+        c.period = 30.0;
+        assert_eq!(resolve_period(&c, &diurnal), 30.0, "explicit wins");
+        assert!(enabled(&c));
+        c.mode = ForecastMode::Off;
+        assert!(!enabled(&c));
+    }
+}

@@ -278,6 +278,25 @@ impl GlobalKvStore {
         self.index.peek_prefix(tokens)
     }
 
+    /// Hottest DRAM-resident prefixes in recency order, covering at most
+    /// `budget` distinct tokens — the warm-start prefetch set for a
+    /// scaled-out device (see [`RadixTree::hottest_prefixes`]). Read-only.
+    pub fn hottest_prefixes(&self, budget: u64) -> Vec<(Vec<u32>, u64)> {
+        self.index.hottest_prefixes(budget)
+    }
+
+    /// Transfer time of a warm-start prefetch of `tokens` hot cached
+    /// tokens over the store's CPU link, across all layers. Unlike a
+    /// demand fetch there is no prefill forward pass to overlap behind —
+    /// the prefetch streams during the new device's spin-up freeze — so
+    /// this is the raw un-overlapped pipeline transfer.
+    pub fn prefetch_time(&self, tokens: u64, spec: &ModelSpec) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        spec.n_layers as f64 * self.t_fetch_layer(tokens, 0, spec)
+    }
+
     /// Peek the per-tier hit breakdown without stat or residency effects
     /// (replica selection).
     pub fn peek_tiered(&self, tokens: &[u32]) -> TieredMatch {
@@ -434,6 +453,42 @@ impl ShardedKvStore {
             }
         }
         added
+    }
+
+    /// Hottest DRAM-resident prefixes across live shards, covering at most
+    /// `budget` distinct tokens. Each live shard enumerates its own hot
+    /// chain over an even share of the budget (shard order — per-shard LRU
+    /// clocks are not comparable across shards), and replicated copies are
+    /// deduplicated keeping the first (hottest-on-its-shard) occurrence.
+    /// Deterministic and read-only.
+    pub fn hottest_prefixes(&self, budget: u64) -> Vec<(Vec<u32>, u64)> {
+        let live: Vec<usize> = (0..self.nodes.len()).filter(|&i| self.up[i]).collect();
+        if live.is_empty() || budget == 0 {
+            return Vec::new();
+        }
+        if live.len() == 1 {
+            return self.nodes[live[0]].hottest_prefixes(budget);
+        }
+        let share = budget / live.len() as u64;
+        let extra = budget % live.len() as u64;
+        let mut seen: std::collections::HashSet<Vec<u32>> = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for (k, &i) in live.iter().enumerate() {
+            let b = share + u64::from((k as u64) < extra);
+            for (toks, fresh) in self.nodes[i].hottest_prefixes(b) {
+                if seen.insert(toks.clone()) {
+                    out.push((toks, fresh));
+                }
+            }
+        }
+        out
+    }
+
+    /// Warm-start prefetch transfer time over the store link (all shards
+    /// share one link/bandwidth config; see
+    /// [`GlobalKvStore::prefetch_time`]).
+    pub fn prefetch_time(&self, tokens: u64, spec: &ModelSpec) -> f64 {
+        self.nodes[0].prefetch_time(tokens, spec)
     }
 
     /// Peek the best hit length over live replicas, without stat effects.
@@ -831,6 +886,58 @@ mod tests {
             );
         }
         assert!(s.token_count() <= 600 + 1800);
+    }
+
+    #[test]
+    fn hottest_prefixes_cover_the_store_and_prefetch_prices_the_link() {
+        let mut s = store();
+        let a: Vec<u32> = (0..300).collect();
+        let b: Vec<u32> = (1000..1200).collect();
+        s.insert(&a);
+        s.insert(&b);
+        let _ = s.lookup(&a, &LLAMA31_8B, 4.22e-3); // a is now MRU
+        let hot = s.hottest_prefixes(u64::MAX);
+        assert_eq!(hot[0].0, a, "MRU prefix must lead the prefetch order");
+        assert_eq!(hot.iter().map(|(_, n)| n).sum::<u64>(), 500);
+        // budget clips the set
+        assert_eq!(s.hottest_prefixes(100).len(), 1);
+        // prefetch is the raw all-layer transfer: linear in tokens, zero
+        // for an empty set
+        assert_eq!(s.prefetch_time(0, &LLAMA31_8B), 0.0);
+        let t1 = s.prefetch_time(100, &LLAMA31_8B);
+        let t2 = s.prefetch_time(200, &LLAMA31_8B);
+        assert!(t1 > 0.0 && t2 > 1.5 * t1);
+    }
+
+    #[test]
+    fn sharded_hottest_prefixes_split_budget_and_dedupe_replicas() {
+        let mut s = sharded(3, 2);
+        let seqs: Vec<Vec<u32>> = (0..9u32)
+            .map(|i| (i * 400..i * 400 + 100).collect())
+            .collect();
+        s.insert_batch(seqs.iter().map(|v| &v[..]));
+        let hot = s.hottest_prefixes(u64::MAX);
+        // replication 2 writes every prefix to two shards; the union must
+        // contain each exactly once
+        let uniq: std::collections::HashSet<&Vec<u32>> =
+            hot.iter().map(|(p, _)| p).collect();
+        assert_eq!(uniq.len(), hot.len(), "replica copies must dedupe");
+        assert_eq!(uniq.len(), 9, "every stored prefix enumerated once");
+        // a down shard contributes nothing but the rest still answer
+        let mut s2 = sharded(2, 1);
+        s2.insert_batch(seqs.iter().map(|v| &v[..]));
+        s2.set_node_up(0, false);
+        let survivors: std::collections::HashSet<Vec<u32>> = s2
+            .hottest_prefixes(u64::MAX)
+            .into_iter()
+            .map(|(p, _)| p)
+            .collect();
+        let expect: std::collections::HashSet<Vec<u32>> = seqs
+            .iter()
+            .filter(|p| super::shard_of(p, 2) == 1)
+            .cloned()
+            .collect();
+        assert_eq!(survivors, expect, "exactly the live shard's prefixes serve");
     }
 
     #[test]

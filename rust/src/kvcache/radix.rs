@@ -757,6 +757,46 @@ impl RadixTree {
         evicted
     }
 
+    /// Hottest cached prefixes in recency order — the warm-start prefetch
+    /// order. Walks the hot LRU chain from the MRU tail toward the head,
+    /// rebuilding each leaf's full root→leaf token path (every ancestor of
+    /// a hot leaf is hot by the tier invariant, so each emitted path is
+    /// wholly DRAM-resident). Shared path segments are counted once — the
+    /// first (hottest) emitter pays them — and enumeration stops once
+    /// `budget` distinct tokens are covered. Returns `(path tokens, new
+    /// tokens this entry adds)` pairs; read-only: stats, LRU order and
+    /// residency are untouched.
+    pub fn hottest_prefixes(&self, budget: u64) -> Vec<(Vec<u32>, u64)> {
+        use std::collections::HashSet;
+        let mut out = Vec::new();
+        let mut counted: HashSet<usize> = HashSet::new();
+        let mut covered = 0u64;
+        let mut leaf = self.lru_tail[Tier::Cpu.idx()];
+        while leaf != NIL && covered < budget {
+            let mut path = Vec::new();
+            let mut cur = leaf;
+            while cur != ROOT {
+                path.push(cur);
+                cur = self.nodes[cur].parent;
+            }
+            path.reverse();
+            let mut toks = Vec::new();
+            let mut fresh = 0u64;
+            for &n in &path {
+                toks.extend_from_slice(&self.nodes[n].segment);
+                if counted.insert(n) {
+                    fresh += self.nodes[n].segment.len() as u64;
+                }
+            }
+            if fresh > 0 {
+                covered += fresh;
+                out.push((toks, fresh));
+            }
+            leaf = self.nodes[leaf].lru_prev;
+        }
+        out
+    }
+
     /// Number of live (non-empty or root) nodes, for diagnostics.
     pub fn node_count(&self) -> usize {
         self.nodes
@@ -1157,6 +1197,48 @@ mod tests {
         let m = t.peek_prefix_tiered(&[1, 2, 3, 4, 5]);
         assert_eq!((m.hot, m.cold), (5, 0));
         t.validate().unwrap();
+    }
+
+    #[test]
+    fn hottest_prefixes_walk_mru_first_and_share_counted_once() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4]); // clock 1
+        t.insert(&[1, 2, 9]); // clock 2: splits, shares [1,2]
+        t.insert(&[7, 7, 7]); // clock 3
+        t.match_prefix(&[1, 2, 3, 4]); // clock 4: [3,4] leaf is now MRU
+        let before = (t.hit_rate(), t.token_count());
+        let hot = t.hottest_prefixes(u64::MAX);
+        // MRU order: [1,2,3,4] first (pays shared [1,2]), then [7,7,7],
+        // then [1,2,9] adding only its own tail token
+        assert_eq!(
+            hot,
+            vec![
+                (vec![1, 2, 3, 4], 4),
+                (vec![7, 7, 7], 3),
+                (vec![1, 2, 9], 1),
+            ]
+        );
+        assert_eq!(hot.iter().map(|(_, n)| n).sum::<u64>(), t.token_count());
+        // read-only: no stat, residency, or LRU effects
+        assert_eq!((t.hit_rate(), t.token_count()), before);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn hottest_prefixes_respect_the_budget_and_skip_cold_leaves() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 1, 1]); // clock 1: goes cold below
+        t.insert(&[2, 2, 2]); // clock 2
+        t.insert(&[3, 3, 3]); // clock 3
+        t.demote_to(6); // [1,1,1] demoted
+        // budget 4: MRU leaf [3,3,3] covers 3, next entry may overflow the
+        // budget (enumeration stops once covered >= budget)
+        let hot = t.hottest_prefixes(4);
+        assert_eq!(hot, vec![(vec![3, 3, 3], 3), (vec![2, 2, 2], 3)]);
+        // unlimited budget still never emits the cold leaf
+        let all = t.hottest_prefixes(u64::MAX);
+        assert!(all.iter().all(|(p, _)| p != &vec![1, 1, 1]));
+        assert_eq!(t.hottest_prefixes(0), Vec::new());
     }
 
     #[test]

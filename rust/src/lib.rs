@@ -33,6 +33,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engines;
 pub mod fault;
+pub mod forecast;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

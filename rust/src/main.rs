@@ -14,7 +14,7 @@
 //!                     lines below are printed from the registry itself:
 //!                       bursty-autoscale, hetero-slo, cache-skew,
 //!                       fault-recovery, degraded-service, megafleet,
-//!                       tiered-store
+//!                       tiered-store, predictive-autoscale
 //!   sweep             RPS sweep for one engine/profile
 //!   figure <id>       regenerate a paper figure (1|2a|2b|6|7|8|9|10|11)
 //!   migrate-demo      show Alg 1 decisions on a synthetic imbalance
@@ -48,7 +48,13 @@
 //! --route-scan-threshold; diurnal multi-tenant traces: --diurnal-ratio
 //! --diurnal-day-secs --tenants --tenant-zipf-s (JSON keys: route_mode,
 //! route_sample_k, route_scan_threshold, diurnal_ratio, tenants,
-//! tenant_zipf_s); sweep and every scenario add
+//! tenant_zipf_s); predictive autoscaling (off by default; `off` keeps
+//! the reactive path bit-identical): --forecast-mode off|proactive
+//! --forecast-window --forecast-alpha --forecast-horizon
+//! --forecast-headroom --forecast-period --warm-start (JSON keys:
+//! forecast_mode, forecast_window, forecast_alpha, forecast_horizon,
+//! forecast_headroom, forecast_period, warm_start); sweep and every
+//! scenario add
 //! --seeds N (N deterministic seeds derived from --seed; 5 = the paper's
 //! CI methodology) and --threads (parallel cells, default: all cores);
 //! scenarios also take --out-dir plus their own flags (e.g.
@@ -58,7 +64,9 @@
 //! degraded-service --crash-mtbf --link-mtbf --link-partition-prob
 //! --link-secs --store-mtbf --store-nodes --share-prob,
 //! megafleet --rps --duration --tenants --diurnal-ratio,
-//! tiered-store --devices --share-prob --templates).
+//! tiered-store --devices --share-prob --templates,
+//! predictive-autoscale --base-devices --peak-devices --rps
+//! --diurnal-ratio --day-secs --ttft-slo-ms --forecast-horizon).
 //! Unknown flags are rejected: a typo'd flag aborts the command instead
 //! of silently running with the default value.
 

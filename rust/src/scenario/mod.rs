@@ -65,10 +65,11 @@ pub mod degraded_service;
 pub mod fault_recovery;
 pub mod hetero_slo;
 pub mod megafleet;
+pub mod predictive_autoscale;
 pub mod tiered_store;
 
 /// All registered scenarios, in `--list-scenarios` order.
-pub static REGISTRY: [ScenarioSpec; 7] = [
+pub static REGISTRY: [ScenarioSpec; 8] = [
     bursty_autoscale::SPEC,
     hetero_slo::SPEC,
     cache_skew::SPEC,
@@ -76,6 +77,7 @@ pub static REGISTRY: [ScenarioSpec; 7] = [
     degraded_service::SPEC,
     megafleet::SPEC,
     tiered_store::SPEC,
+    predictive_autoscale::SPEC,
 ];
 
 pub fn by_name(name: &str) -> Option<&'static ScenarioSpec> {
@@ -520,6 +522,7 @@ mod tests {
         assert!(names.contains(&"degraded-service"));
         assert!(names.contains(&"megafleet"));
         assert!(names.contains(&"tiered-store"));
+        assert!(names.contains(&"predictive-autoscale"));
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();

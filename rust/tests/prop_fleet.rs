@@ -314,6 +314,112 @@ fn slo_mode_with_no_targets_degrades_to_util_mode_bit_identically() {
 }
 
 // ---------------------------------------------------------------------------
+// PR 10: proactive (forecast-driven) decisions
+// ---------------------------------------------------------------------------
+
+fn random_signal(g: &mut Gen) -> banaserve::forecast::ForecastSignal {
+    banaserve::forecast::ForecastSignal {
+        current_rate: g.f64_in(0.0, 50.0),
+        predicted_rate: g.f64_in(0.0, 100.0),
+        headroom: g.f64_in(0.0, 1.5),
+    }
+}
+
+#[test]
+fn proactive_decisions_respect_cooldown_and_fleet_bounds() {
+    // the proactive path shares the reactive cooldown and the [min, max]
+    // fleet bounds: over arbitrary load/SLO/forecast trajectories no two
+    // non-Hold decisions land closer than `cooldown`, and replaying the
+    // decisions against a synthetic fleet never escapes the bounds
+    check("proactive cooldown+bounds", 40, |g| {
+        let cfg = random_cfg(g, g.bool());
+        let mut a = Autoscaler::new(cfg);
+        let mut n = g.usize_in(cfg.min_devices.max(1), cfg.max_devices);
+        let mut now = 0.0;
+        let mut last_action: Option<f64> = None;
+        for _ in 0..150 {
+            let loads = random_loads(g, n);
+            let view = random_view(g);
+            // None interleaved with Some: an uncalibrated or disabled
+            // forecaster must not unlock extra decisions either
+            let sig = if g.bool() { Some(random_signal(g)) } else { None };
+            let d = a.decide_proactive(now, &loads, g.usize_in(0, 8), view, sig);
+            if d != ScaleDecision::Hold {
+                if let Some(t) = last_action {
+                    prop_assert!(
+                        now >= t + cfg.cooldown - 1e-9,
+                        "proactive decision at {now} only {}s after the one \
+                         at {t} (cooldown {})",
+                        now - t,
+                        cfg.cooldown
+                    );
+                }
+                last_action = Some(now);
+            }
+            match d {
+                ScaleDecision::Out => {
+                    prop_assert!(
+                        n < cfg.max_devices,
+                        "proactive scale-out at max fleet size {n} (max {})",
+                        cfg.max_devices
+                    );
+                    n += 1;
+                }
+                ScaleDecision::In { victim } => {
+                    prop_assert!(
+                        n > cfg.min_devices && n > 1,
+                        "proactive drain at fleet size {n} (min {})",
+                        cfg.min_devices
+                    );
+                    let l = loads.iter().find(|l| l.idx == victim);
+                    prop_assert!(
+                        l.map(|l| l.drainable).unwrap_or(false),
+                        "proactive victim {victim} is not drainable"
+                    );
+                    n -= 1;
+                }
+                ScaleDecision::Hold => {}
+            }
+            prop_assert!(
+                n >= cfg.min_devices.max(1) && n <= cfg.max_devices,
+                "fleet size {n} escaped [{}, {}] under proactive decisions",
+                cfg.min_devices,
+                cfg.max_devices
+            );
+            now += g.f64_in(0.0, 1.5 * cfg.cooldown);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn proactive_with_no_signal_matches_reactive_bit_identically() {
+    // decide_proactive(None) IS decide(): two autoscalers fed the same
+    // trajectory, one through each entry point, never diverge
+    check("proactive None delegation", 40, |g| {
+        let cfg = random_cfg(g, g.bool());
+        let mut a = Autoscaler::new(cfg);
+        let mut b = Autoscaler::new(cfg);
+        let mut now = 0.0;
+        for _ in 0..120 {
+            let n = g.usize_in(1, cfg.max_devices + 1);
+            let loads = random_loads(g, n);
+            let backlog = g.usize_in(0, 10);
+            let view = random_view(g);
+            let got = a.decide_proactive(now, &loads, backlog, view, None);
+            let want = b.decide(now, &loads, backlog, view);
+            prop_assert!(
+                got == want,
+                "decide_proactive(None) diverged from decide() at t={now}: \
+                 {got:?} vs {want:?}"
+            );
+            now += g.f64_in(0.0, 2.0 * cfg.cooldown);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // PR 6: fault-aware routing + deterministic fault plans
 // ---------------------------------------------------------------------------
 

@@ -144,6 +144,40 @@ fn tiered_store_grid_isolates_the_store_shape() {
 }
 
 #[test]
+fn predictive_autoscale_grid_isolates_the_forecast_knobs() {
+    // three elastic variants over the SAME diurnal workload; only the
+    // forecast knobs differ — reactive-cold must carry the bit-identical
+    // default (mode off, no warm-start), and warm-start is exclusive to
+    // the proactive-warm arm
+    use banaserve::config::ForecastMode;
+    let spec = scenario::by_name("predictive-autoscale").unwrap();
+    let plan = (spec.build)(&tiny_args("unused")).unwrap();
+    let engines: Vec<&str> = plan.engines.iter().map(|e| e.name()).collect();
+    assert_eq!(engines, vec!["banaserve", "distserve"]);
+    let labels: Vec<&str> = plan.variants.iter().map(|v| v.label).collect();
+    assert_eq!(labels, vec!["reactive-cold", "proactive-cold", "proactive-warm"]);
+    let cfg_of = |i: usize| (plan.make_cfg)(plan.engines[0], &plan.variants[i], 17);
+    let (re, pc, pw) = (cfg_of(0), cfg_of(1), cfg_of(2));
+    assert_eq!(re.forecast.mode, ForecastMode::Off);
+    assert!(!re.forecast.warm_start);
+    assert_eq!(pc.forecast.mode, ForecastMode::Proactive);
+    assert!(!pc.forecast.warm_start);
+    assert_eq!(pw.forecast.mode, ForecastMode::Proactive);
+    assert!(pw.forecast.warm_start);
+    for c in [&re, &pc, &pw] {
+        assert!(c.autoscale.enabled, "every arm is elastic");
+        assert_eq!(c.workload.seed, 17);
+        assert!(
+            matches!(
+                c.workload.arrivals,
+                banaserve::workload::ArrivalProcess::Diurnal { .. }
+            ),
+            "the forecaster's seasonal fit needs the diurnal trace"
+        );
+    }
+}
+
+#[test]
 fn cache_skew_grid_covers_both_routers() {
     // the new scenario's grid is (vllm, banaserve) × one static variant —
     // the registry must expose that shape so the CI tiny run exercises
